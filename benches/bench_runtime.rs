@@ -1,0 +1,92 @@
+//! Runtime micro-benchmarks (in-repo harness; criterion is unavailable
+//! offline): per-method train-step latency, eval latency, data pipeline,
+//! and the host-side energy-model cost.  These are the L3 perf numbers
+//! recorded in EXPERIMENTS.md §Perf.
+
+use std::path::PathBuf;
+
+use e2train::data::{synthetic, AugmentCfg, Sampler};
+use e2train::energy::EnergyModel;
+use e2train::runtime::{Engine, ModelState, StepHyper, TrainProgram};
+use e2train::util::bench::bench;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() {
+    if !artifacts().join("index.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    println!("== train-step latency per method (resnet8-c10-tiny, batch 32) ==");
+    for method in ["sgd32", "fixed8", "signsgd", "psg", "slu", "sd", "e2train"] {
+        let prog = TrainProgram::load(
+            &engine,
+            &artifacts().join(format!("resnet8-c10-tiny/{method}.json")),
+        )
+        .unwrap();
+        let mut state = ModelState::init(&prog.manifest, 0);
+        let data = synthetic::generate(10, 256, prog.manifest.arch.image_size, 0);
+        let mut sampler =
+            Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 0);
+        let (x, y) = sampler.next_batch(&data);
+        let mask: Option<Vec<f32>> = (prog.manifest.method.gating == "mask")
+            .then(|| vec![1.0; prog.manifest.num_gated()]);
+        bench(&format!("train_step/{method}"), 3, 20, || {
+            prog.step(&mut state, &x, &y, StepHyper::lr(0.05), mask.as_deref())
+                .unwrap();
+        });
+    }
+
+    println!("\n== eval-batch latency ==");
+    for family in ["resnet8-c10-tiny", "resnet20-c10"] {
+        let prog = TrainProgram::load(
+            &engine,
+            &artifacts().join(format!("{family}/sgd32.json")),
+        )
+        .unwrap();
+        let state = ModelState::init(&prog.manifest, 0);
+        let hw = prog.manifest.arch.image_size;
+        let eb = prog.eval_batch();
+        let data = synthetic::generate(10, eb, hw, 0);
+        let x = e2train::runtime::HostTensor::f32(
+            vec![eb, hw, hw, 3],
+            data.images.clone(),
+        );
+        let y = e2train::runtime::HostTensor::i32(vec![eb], data.labels.clone());
+        bench(&format!("eval_batch/{family} (b={eb})"), 2, 10, || {
+            prog.eval_batch_run(&state, &x, &y).unwrap();
+        });
+    }
+
+    println!("\n== host-side pipeline (no device) ==");
+    let data = synthetic::generate(10, 2048, 16, 0);
+    let mut sampler = Sampler::new(data.n, 32, AugmentCfg::default(), 0);
+    bench("sampler/next_batch (b=32, 16px, augmented)", 10, 200, || {
+        let _ = sampler.next_batch(&data);
+    });
+    bench("synthetic/generate (256 samples, 16px)", 1, 10, || {
+        let _ = synthetic::generate(10, 256, 16, 1);
+    });
+
+    let prog = TrainProgram::load(&engine, &artifacts().join("resnet20-c10/e2train.json"))
+        .unwrap();
+    let em = EnergyModel::from_manifest(&prog.manifest);
+    let fracs = vec![0.7; prog.manifest.num_gated()];
+    bench("energy_model/train_step charge", 100, 5000, || {
+        let _ = em.train_step(&prog.manifest.method, &fracs, Some(0.6));
+    });
+
+    println!("\n== artifact compile time (cold cache) ==");
+    let t0 = std::time::Instant::now();
+    let fresh = Engine::cpu().unwrap();
+    let _ = fresh
+        .load(&artifacts().join("resnet20-c10/e2train.train.hlo.txt"))
+        .unwrap();
+    println!(
+        "compile resnet20-c10/e2train.train: {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,37 @@
+//! Table/figure regeneration benches — one end-to-end entry per paper
+//! artifact (Sec. 4), timed with the in-repo harness.  Each entry runs a
+//! reduced-budget version of the corresponding `e2train exp <id>`
+//! pipeline so `cargo bench` both times the harness and re-prints the
+//! paper's rows.  `E2T_BENCH_ITERS` scales the per-run budget.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("index.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let iters: u64 = std::env::var("E2T_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let out = PathBuf::from("results");
+
+    // every table and figure of the paper's evaluation section
+    for id in [
+        "tab2", "tab3", "fig4", "fig3a", "fig3b", "tab1", "fig5", "tab4", "finetune",
+    ] {
+        println!("\n######## bench: {id} (per-run budget {iters} iters) ########");
+        let t0 = Instant::now();
+        if let Err(e) = e2train::experiments::run_experiment(id, iters, &artifacts, &out)
+        {
+            eprintln!("{id} failed: {e:#}");
+        }
+        println!(
+            "== {id} regenerated in {:.1}s ==",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! Analytic energy-model report: per-method J/step and savings against
+//! the paper's anchor numbers, without training anything.
+//!
+//!     cargo run --release --example energy_report [family]
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let family = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "resnet20-c10".to_string());
+    e2train::experiments::energy_report(&family, std::path::Path::new("artifacts"))
+}

@@ -1,0 +1,79 @@
+//! End-to-end driver (the DESIGN.md validation workload): train the
+//! resnet20-class model for several hundred steps on the synthetic
+//! CIFAR-like corpus with the full E²-Train stack AND the fp32 baseline,
+//! logging both loss curves and the accuracy-per-joule comparison.
+//!
+//!     cargo run --release --example train_e2e [iters] [family]
+//!
+//! This is the run recorded in EXPERIMENTS.md §End-to-end.
+
+use anyhow::Result;
+
+use e2train::config::{DataCfg, RunCfg};
+use e2train::coordinator::Trainer;
+use e2train::runtime::Engine;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let iters: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+    let family = args
+        .get(2)
+        .cloned()
+        .unwrap_or_else(|| "resnet20-c10".to_string());
+
+    let engine = Engine::cpu()?;
+    let data = DataCfg::Synthetic { classes: 10, n_train: 2048, n_test: 512, seed: 0 };
+
+    let mut results = Vec::new();
+    for method in ["sgd32", "e2train"] {
+        let mut cfg = RunCfg::quick(&family, method, iters);
+        cfg.data = data.clone();
+        cfg.eval_every = (iters / 8).max(1);
+        let mut trainer = Trainer::new(&engine, cfg)?;
+        println!(
+            "\n=== {family}/{method}: {iters} iters, {} params ===",
+            trainer.program.manifest.param_count
+        );
+        let out = trainer.run(None)?;
+        println!("{:>6} {:>9} {:>9} {:>10} {:>9}", "iter", "loss", "train", "joules", "test");
+        for p in &out.metrics.trace {
+            if p.iter % (iters / 10).max(1) == 0 || p.test_acc.is_some() {
+                println!(
+                    "{:>6} {:>9.4} {:>8.1}% {:>10.3} {:>9}",
+                    p.iter,
+                    p.loss,
+                    p.train_acc * 100.0,
+                    p.joules,
+                    p.test_acc
+                        .map(|a| format!("{:.1}%", a * 100.0))
+                        .unwrap_or_else(|| "-".into())
+                );
+            }
+        }
+        println!(
+            "final: acc {:.2}% | {:.3} J | {} steps ({} SMD-dropped) | {:.1}s wall",
+            out.metrics.final_test_acc * 100.0,
+            out.metrics.total_joules,
+            out.metrics.steps_run,
+            out.metrics.steps_skipped,
+            out.metrics.wall_seconds,
+        );
+        results.push((method, out.metrics));
+    }
+
+    let (bm, base) = &results[0];
+    let (em, e2) = &results[1];
+    println!("\n=== energy comparison ===");
+    println!(
+        "{bm}: {:.2}% @ {:.3} J   {em}: {:.2}% @ {:.3} J",
+        base.final_test_acc * 100.0,
+        base.total_joules,
+        e2.final_test_acc * 100.0,
+        e2.total_joules
+    );
+    println!(
+        "E2-Train energy saving: {:.1}%  (paper claims >80% at small accuracy cost)",
+        (1.0 - e2.total_joules / base.total_joules) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,177 @@
+"""AOT driver: lower every (arch, method) train/eval step to HLO text +
+a JSON manifest the rust coordinator consumes.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version under the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Layout:
+
+    artifacts/
+      index.json                      # everything that was built
+      <family>/<method>.train.hlo.txt
+      <family>/<method>.eval.hlo.txt
+      <family>/<method>.json          # manifest: io specs + cost tables
+
+The manifest is the *entire* contract with rust: buffer order, shapes,
+dtypes, initializer kinds, per-block FLOPs/gateability (energy ledger),
+and the static gate-FLOPs overhead.
+
+Usage:  python -m compile.aot [--preset default|tiny|paper]
+                              [--families a,b] [--methods m1,m2] [--out DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs as C
+from . import gates as G
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _abstract(spec: M.IoSpec):
+    dt = jnp.int32 if spec.dtype == "i32" else jnp.float32
+    return jax.ShapeDtypeStruct(tuple(spec.shape), dt)
+
+
+def _spec_dicts(specs):
+    return [
+        {
+            "name": s.name,
+            "role": s.role,
+            "shape": list(s.shape),
+            "dtype": s.dtype,
+            "init": s.init,
+        }
+        for s in specs
+    ]
+
+
+def build_manifest(cfg: C.ArchCfg, method: M.MethodSpec, arch, tins, touts, eins, eouts):
+    gated = arch.gated_blocks()
+    return {
+        "family": cfg.name,
+        "method": dataclasses.asdict(method),
+        "arch": {
+            "name": arch.name,
+            "kind": cfg.arch,
+            "num_classes": arch.num_classes,
+            "image_size": arch.image_size,
+            "batch": cfg.batch,
+            "eval_batch": cfg.eval_batch,
+            "width": cfg.width,
+            "feat_ch": arch.feat_ch,
+        },
+        "train_inputs": _spec_dicts(tins),
+        "train_outputs": _spec_dicts(touts),
+        "eval_inputs": _spec_dicts(eins),
+        "eval_outputs": _spec_dicts(eouts),
+        "blocks": [
+            {
+                "name": b.name,
+                "flops": b.flops,
+                "gateable": b.gateable,
+                "in_ch": b.in_ch,
+                "out_ch": b.out_ch,
+                "in_hw": b.in_hw,
+                "params": sorted(b.specs.keys()),
+            }
+            for b in arch.blocks
+        ],
+        "head_flops": arch.head_flops,
+        "total_flops": arch.total_flops(),
+        "gated_flop_fracs": arch.gated_flop_fracs(),
+        "gate_flops": G.gate_flops([b.in_ch for b in gated]) if gated else 0,
+        "param_count": sum(
+            int(jnp.prod(jnp.array(s.shape))) if s.shape else 1
+            for s in tins
+            if s.role == "param"
+        ),
+    }
+
+
+def lower_one(cfg: C.ArchCfg, mname: str, outdir: Path, verbose: bool = True):
+    method = M.METHODS[mname]
+    arch = cfg.build(qbits=method.qbits_act)
+
+    t0 = time.time()
+    step, tins, touts = M.build_train_step(arch, method, cfg.batch)
+    train_lowered = jax.jit(step).lower(*[_abstract(s) for s in tins])
+    train_txt = to_hlo_text(train_lowered)
+
+    estep, eins, eouts = M.build_eval_step(arch, method, cfg.eval_batch)
+    eval_lowered = jax.jit(estep).lower(*[_abstract(s) for s in eins])
+    eval_txt = to_hlo_text(eval_lowered)
+
+    fam = outdir / cfg.name
+    fam.mkdir(parents=True, exist_ok=True)
+    (fam / f"{mname}.train.hlo.txt").write_text(train_txt)
+    (fam / f"{mname}.eval.hlo.txt").write_text(eval_txt)
+    manifest = build_manifest(cfg, method, arch, tins, touts, eins, eouts)
+    (fam / f"{mname}.json").write_text(json.dumps(manifest, indent=1))
+    if verbose:
+        print(
+            f"  {cfg.name}/{mname}: train={len(train_txt)//1024}KiB "
+            f"eval={len(eval_txt)//1024}KiB "
+            f"params={manifest['param_count']} ({time.time()-t0:.1f}s)",
+            flush=True,
+        )
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="default", choices=sorted(C.PRESETS))
+    ap.add_argument("--families", default="", help="comma list; overrides preset")
+    ap.add_argument("--methods", default=",".join(C.DEFAULT_METHODS))
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[2] / "artifacts"))
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    families = (
+        [f for f in args.families.split(",") if f]
+        or C.PRESETS[args.preset]
+    )
+    methods = [m for m in args.methods.split(",") if m]
+
+    index = {"families": {}, "methods": methods}
+    t0 = time.time()
+    for fname in families:
+        cfg = C.ARCH_CFGS[fname]
+        print(f"[aot] {fname} (batch={cfg.batch})", flush=True)
+        index["families"][fname] = {
+            "methods": methods,
+            "batch": cfg.batch,
+            "eval_batch": cfg.eval_batch,
+        }
+        for mname in methods:
+            lower_one(cfg, mname, outdir)
+    (outdir / "index.json").write_text(json.dumps(index, indent=1))
+    print(f"[aot] done: {len(families)} families x {len(methods)} methods "
+          f"in {time.time()-t0:.1f}s -> {outdir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

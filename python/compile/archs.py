@@ -1,0 +1,431 @@
+"""Layer-2 architectures as explicit block lists.
+
+The paper evaluates CIFAR ResNets (ResNet-38/74/110 — the 6n+2 family) and
+MobileNetV2.  Both are expressed here as a list of :class:`BlockDef`s — a
+uniform trunk abstraction that the train-step builder (model.py) walks
+forward and *backward by hand*, which is what lets SLU skip blocks in both
+passes and lets PSG intercept each block's weight gradients (Sec. 3.2/3.3).
+
+A BlockDef's ``apply(params, x, gate)`` is a pure function suitable for
+``jax.vjp(..., has_aux=True)``; ``aux`` carries the batch-norm batch
+statistics so the EMA update happens outside the VJP.
+
+FLOPs here are MACs — the unit the paper's C(W, G) regularizer and the
+rust energy ledger both consume; the manifest exports them per block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .kernels import gated_residual, quantize
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass
+class BlockDef:
+    """One trunk block: parameters, pure apply fns, and cost metadata."""
+
+    name: str
+    specs: Dict[str, L.Spec]
+    bn_prefixes: List[str]
+    gateable: bool
+    flops: int
+    in_ch: int
+    out_ch: int
+    in_hw: int
+    # train apply: (params, x, gate(N,)) -> (out, bn_stats dict)
+    apply_train: Callable = None
+    # eval apply: (params, bn_state, x, gate(N,)) -> out
+    apply_eval: Callable = None
+
+    def bn_state_specs(self) -> Dict[str, L.Spec]:
+        out = {}
+        for p in self.bn_prefixes:
+            c = self.specs[f"{p}.scale"][0]
+            out[f"{p}.rmean"] = (c, "zeros")
+            out[f"{p}.rvar"] = (c, "ones")
+        return out
+
+
+@dataclasses.dataclass
+class Arch:
+    """A full trunk + head: what one AOT artifact family is built from."""
+
+    name: str
+    blocks: List[BlockDef]  # blocks[0] is the stem
+    head_specs: Dict[str, L.Spec]
+    head_flops: int
+    num_classes: int
+    image_size: int
+    feat_ch: int
+
+    # -- aggregate views used by model.py / aot.py ------------------------
+    def param_specs(self) -> Dict[str, L.Spec]:
+        out: Dict[str, L.Spec] = {}
+        for b in self.blocks:
+            out.update(b.specs)
+        out.update(self.head_specs)
+        return out
+
+    def bn_state_specs(self) -> Dict[str, L.Spec]:
+        out: Dict[str, L.Spec] = {}
+        for b in self.blocks:
+            out.update(b.bn_state_specs())
+        return out
+
+    def gated_blocks(self) -> List[BlockDef]:
+        return [b for b in self.blocks if b.gateable]
+
+    def total_flops(self) -> int:
+        return sum(b.flops for b in self.blocks) + self.head_flops
+
+    def gated_flop_fracs(self) -> List[float]:
+        tot = float(self.total_flops())
+        return [b.flops / tot for b in self.gated_blocks()]
+
+    def head_apply(self, params: Params, feat: jnp.ndarray) -> jnp.ndarray:
+        pooled = L.global_avg_pool(feat)
+        return L.dense(pooled, params["head.w"], params["head.b"])
+
+
+def _maybe_q(v: jnp.ndarray, bits: Optional[int]) -> jnp.ndarray:
+    return v if bits is None else quantize(v, bits)
+
+
+# ==========================================================================
+# ResNet (CIFAR 6n+2 family: resnet8 n=1 ... resnet110 n=18)
+# ==========================================================================
+
+def _basic_block(
+    name: str,
+    in_ch: int,
+    out_ch: int,
+    stride: int,
+    in_hw: int,
+    qbits: Optional[int],
+) -> BlockDef:
+    """Post-activation basic residual block; gate multiplies the branch.
+
+    gate == 0 collapses the block to identity for that sample: the
+    shortcut is the (already non-negative) input, so the trailing ReLU is
+    a no-op — SLU's skipped block in both passes (the gate factor also
+    zeroes the branch weight gradient per sample).
+    """
+    down = stride != 1 or in_ch != out_ch
+    specs: Dict[str, L.Spec] = {
+        f"{name}.conv1": ((3, 3, in_ch, out_ch), "he"),
+        f"{name}.bn1.scale": ((out_ch,), "ones"),
+        f"{name}.bn1.bias": ((out_ch,), "zeros"),
+        f"{name}.conv2": ((3, 3, out_ch, out_ch), "he"),
+        f"{name}.bn2.scale": ((out_ch,), "ones"),
+        f"{name}.bn2.bias": ((out_ch,), "zeros"),
+    }
+    bn_prefixes = [f"{name}.bn1", f"{name}.bn2"]
+    if down:
+        specs[f"{name}.down"] = ((1, 1, in_ch, out_ch), "he")
+        specs[f"{name}.down_bn.scale"] = ((out_ch,), "ones")
+        specs[f"{name}.down_bn.bias"] = ((out_ch,), "zeros")
+        bn_prefixes.append(f"{name}.down_bn")
+
+    def branch_train(p: Params, x: jnp.ndarray):
+        stats = {}
+        h = L.conv2d(_maybe_q(x, qbits), _maybe_q(p[f"{name}.conv1"], qbits), stride)
+        h, m, v = L.bn_train(h, p[f"{name}.bn1.scale"], p[f"{name}.bn1.bias"])
+        stats[f"{name}.bn1"] = (m, v)
+        h = L.relu(h)
+        h = L.conv2d(_maybe_q(h, qbits), _maybe_q(p[f"{name}.conv2"], qbits), 1)
+        h, m, v = L.bn_train(h, p[f"{name}.bn2.scale"], p[f"{name}.bn2.bias"])
+        stats[f"{name}.bn2"] = (m, v)
+        return h, stats
+
+    def apply_train(p: Params, x: jnp.ndarray, gate: jnp.ndarray):
+        h, stats = branch_train(p, x)
+        if down:
+            sc = L.conv2d(_maybe_q(x, qbits), _maybe_q(p[f"{name}.down"], qbits), stride)
+            sc, m, v = L.bn_train(
+                sc, p[f"{name}.down_bn.scale"], p[f"{name}.down_bn.bias"]
+            )
+            stats[f"{name}.down_bn"] = (m, v)
+            out = L.relu(sc + h)  # downsample blocks are never gated
+        else:
+            out = L.relu(gated_residual(x, h, gate))
+        return out, stats
+
+    def apply_eval(p: Params, bn: Params, x: jnp.ndarray, gate: jnp.ndarray):
+        def ebn(prefix, t):
+            return L.bn_eval(
+                t,
+                p[f"{prefix}.scale"],
+                p[f"{prefix}.bias"],
+                bn[f"{prefix}.rmean"],
+                bn[f"{prefix}.rvar"],
+            )
+
+        h = L.conv2d(_maybe_q(x, qbits), _maybe_q(p[f"{name}.conv1"], qbits), stride)
+        h = L.relu(ebn(f"{name}.bn1", h))
+        h = L.conv2d(_maybe_q(h, qbits), _maybe_q(p[f"{name}.conv2"], qbits), 1)
+        h = ebn(f"{name}.bn2", h)
+        if down:
+            sc = L.conv2d(_maybe_q(x, qbits), _maybe_q(p[f"{name}.down"], qbits), stride)
+            sc = ebn(f"{name}.down_bn", sc)
+            return L.relu(sc + h)
+        return L.relu(gated_residual(x, h, gate))
+
+    flops = L.conv_flops(in_hw, in_hw, 3, 3, in_ch, out_ch, stride)
+    flops += L.conv_flops(
+        -(-in_hw // stride), -(-in_hw // stride), 3, 3, out_ch, out_ch, 1
+    )
+    if down:
+        flops += L.conv_flops(in_hw, in_hw, 1, 1, in_ch, out_ch, stride)
+
+    return BlockDef(
+        name=name,
+        specs=specs,
+        bn_prefixes=bn_prefixes,
+        gateable=not down,
+        flops=flops,
+        in_ch=in_ch,
+        out_ch=out_ch,
+        in_hw=in_hw,
+        apply_train=apply_train,
+        apply_eval=apply_eval,
+    )
+
+
+def _stem_block(
+    name: str, out_ch: int, hw: int, qbits: Optional[int]
+) -> BlockDef:
+    specs = {
+        f"{name}.conv": ((3, 3, 3, out_ch), "he"),
+        f"{name}.bn.scale": ((out_ch,), "ones"),
+        f"{name}.bn.bias": ((out_ch,), "zeros"),
+    }
+
+    def apply_train(p: Params, x: jnp.ndarray, gate: jnp.ndarray):
+        h = L.conv2d(_maybe_q(x, qbits), _maybe_q(p[f"{name}.conv"], qbits), 1)
+        h, m, v = L.bn_train(h, p[f"{name}.bn.scale"], p[f"{name}.bn.bias"])
+        return L.relu(h), {f"{name}.bn": (m, v)}
+
+    def apply_eval(p: Params, bn: Params, x: jnp.ndarray, gate: jnp.ndarray):
+        h = L.conv2d(_maybe_q(x, qbits), _maybe_q(p[f"{name}.conv"], qbits), 1)
+        h = L.bn_eval(
+            h,
+            p[f"{name}.bn.scale"],
+            p[f"{name}.bn.bias"],
+            bn[f"{name}.bn.rmean"],
+            bn[f"{name}.bn.rvar"],
+        )
+        return L.relu(h)
+
+    return BlockDef(
+        name=name,
+        specs=specs,
+        bn_prefixes=[f"{name}.bn"],
+        gateable=False,
+        flops=L.conv_flops(hw, hw, 3, 3, 3, out_ch, 1),
+        in_ch=3,
+        out_ch=out_ch,
+        in_hw=hw,
+        apply_train=apply_train,
+        apply_eval=apply_eval,
+    )
+
+
+def resnet(
+    n: int,
+    num_classes: int,
+    image_size: int = 32,
+    width: float = 1.0,
+    qbits: Optional[int] = None,
+) -> Arch:
+    """CIFAR ResNet-(6n+2): resnet8 n=1, resnet20 n=3, resnet38 n=6,
+    resnet74 n=12, resnet110 n=18."""
+    chans = [max(4, int(round(c * width))) for c in (16, 32, 64)]
+    blocks: List[BlockDef] = [_stem_block("stem", chans[0], image_size, qbits)]
+    in_ch, hw = chans[0], image_size
+    for s, ch in enumerate(chans):
+        for b in range(n):
+            stride = 2 if (s > 0 and b == 0) else 1
+            blk = _basic_block(
+                f"s{s}b{b}", in_ch, ch, stride, hw, qbits
+            )
+            blocks.append(blk)
+            in_ch = ch
+            hw = -(-hw // stride)
+    head_specs = {
+        "head.w": ((in_ch, num_classes), "he"),
+        "head.b": ((num_classes,), "zeros"),
+    }
+    return Arch(
+        name=f"resnet{6*n+2}",
+        blocks=blocks,
+        head_specs=head_specs,
+        head_flops=in_ch * num_classes,
+        num_classes=num_classes,
+        image_size=image_size,
+        feat_ch=in_ch,
+    )
+
+
+# ==========================================================================
+# MobileNetV2 (CIFAR variant)
+# ==========================================================================
+
+def _dwconv(x: jnp.ndarray, w: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """Depthwise 3x3; w is HWIO with I=1, O=C (feature_group_count=C)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        feature_group_count=x.shape[-1],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _inverted_residual(
+    name: str,
+    in_ch: int,
+    out_ch: int,
+    stride: int,
+    expand: int,
+    in_hw: int,
+    qbits: Optional[int],
+) -> BlockDef:
+    """MobileNetV2 inverted residual with linear bottleneck; gated only
+    when the identity skip exists (stride 1, in_ch == out_ch)."""
+    mid = in_ch * expand
+    skip = stride == 1 and in_ch == out_ch
+    specs: Dict[str, L.Spec] = {}
+    bn_prefixes: List[str] = []
+    if expand != 1:
+        specs[f"{name}.expand"] = ((1, 1, in_ch, mid), "he")
+        specs[f"{name}.bn_e.scale"] = ((mid,), "ones")
+        specs[f"{name}.bn_e.bias"] = ((mid,), "zeros")
+        bn_prefixes.append(f"{name}.bn_e")
+    specs[f"{name}.dw"] = ((3, 3, 1, mid), "he")
+    specs[f"{name}.bn_d.scale"] = ((mid,), "ones")
+    specs[f"{name}.bn_d.bias"] = ((mid,), "zeros")
+    specs[f"{name}.project"] = ((1, 1, mid, out_ch), "he")
+    specs[f"{name}.bn_p.scale"] = ((out_ch,), "ones")
+    specs[f"{name}.bn_p.bias"] = ((out_ch,), "zeros")
+    bn_prefixes += [f"{name}.bn_d", f"{name}.bn_p"]
+
+    def branch_train(p: Params, x: jnp.ndarray):
+        stats = {}
+        h = x
+        if expand != 1:
+            h = L.conv2d(_maybe_q(h, qbits), _maybe_q(p[f"{name}.expand"], qbits), 1)
+            h, m, v = L.bn_train(h, p[f"{name}.bn_e.scale"], p[f"{name}.bn_e.bias"])
+            stats[f"{name}.bn_e"] = (m, v)
+            h = L.relu6(h)
+        h = _dwconv(_maybe_q(h, qbits), _maybe_q(p[f"{name}.dw"], qbits), stride)
+        h, m, v = L.bn_train(h, p[f"{name}.bn_d.scale"], p[f"{name}.bn_d.bias"])
+        stats[f"{name}.bn_d"] = (m, v)
+        h = L.relu6(h)
+        h = L.conv2d(_maybe_q(h, qbits), _maybe_q(p[f"{name}.project"], qbits), 1)
+        h, m, v = L.bn_train(h, p[f"{name}.bn_p.scale"], p[f"{name}.bn_p.bias"])
+        stats[f"{name}.bn_p"] = (m, v)
+        return h, stats
+
+    def apply_train(p: Params, x: jnp.ndarray, gate: jnp.ndarray):
+        h, stats = branch_train(p, x)
+        out = gated_residual(x, h, gate) if skip else h
+        return out, stats
+
+    def apply_eval(p: Params, bn: Params, x: jnp.ndarray, gate: jnp.ndarray):
+        def ebn(prefix, t):
+            return L.bn_eval(
+                t,
+                p[f"{prefix}.scale"],
+                p[f"{prefix}.bias"],
+                bn[f"{prefix}.rmean"],
+                bn[f"{prefix}.rvar"],
+            )
+
+        h = x
+        if expand != 1:
+            h = L.conv2d(_maybe_q(h, qbits), _maybe_q(p[f"{name}.expand"], qbits), 1)
+            h = L.relu6(ebn(f"{name}.bn_e", h))
+        h = _dwconv(_maybe_q(h, qbits), _maybe_q(p[f"{name}.dw"], qbits), stride)
+        h = L.relu6(ebn(f"{name}.bn_d", h))
+        h = L.conv2d(_maybe_q(h, qbits), _maybe_q(p[f"{name}.project"], qbits), 1)
+        h = ebn(f"{name}.bn_p", h)
+        return gated_residual(x, h, gate) if skip else h
+
+    out_hw = -(-in_hw // stride)
+    flops = 0
+    if expand != 1:
+        flops += L.conv_flops(in_hw, in_hw, 1, 1, in_ch, mid, 1)
+    flops += out_hw * out_hw * 9 * mid  # depthwise
+    flops += L.conv_flops(out_hw, out_hw, 1, 1, mid, out_ch, 1)
+
+    return BlockDef(
+        name=name,
+        specs=specs,
+        bn_prefixes=bn_prefixes,
+        gateable=skip,
+        flops=flops,
+        in_ch=in_ch,
+        out_ch=out_ch,
+        in_hw=in_hw,
+        apply_train=apply_train,
+        apply_eval=apply_eval,
+    )
+
+
+# (t, c, n, s) for CIFAR (strides thinned vs. ImageNet: 32x32 input)
+_MBV2_CFG = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 1),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+
+
+def mobilenet_v2(
+    num_classes: int,
+    image_size: int = 32,
+    width: float = 1.0,
+    qbits: Optional[int] = None,
+    cfg: Optional[List[Tuple[int, int, int, int]]] = None,
+) -> Arch:
+    cfg = cfg if cfg is not None else _MBV2_CFG
+    stem_ch = max(8, int(round(32 * width)))
+    blocks: List[BlockDef] = [_stem_block("stem", stem_ch, image_size, qbits)]
+    in_ch, hw = stem_ch, image_size
+    idx = 0
+    for t, c, n, s in cfg:
+        ch = max(4, int(round(c * width)))
+        for b in range(n):
+            stride = s if b == 0 else 1
+            blk = _inverted_residual(
+                f"ir{idx}", in_ch, ch, stride, t, hw, qbits
+            )
+            blocks.append(blk)
+            in_ch = ch
+            hw = -(-hw // stride)
+            idx += 1
+    head_specs = {
+        "head.w": ((in_ch, num_classes), "he"),
+        "head.b": ((num_classes,), "zeros"),
+    }
+    return Arch(
+        name="mobilenetv2",
+        blocks=blocks,
+        head_specs=head_specs,
+        head_flops=in_ch * num_classes,
+        num_classes=num_classes,
+        image_size=image_size,
+        feat_ch=in_ch,
+    )

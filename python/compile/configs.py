@@ -1,0 +1,101 @@
+"""Artifact configurations: which (arch, method, batch) tuples get lowered.
+
+The default set is sized for the single-core CPU testbed (DESIGN.md
+§Substitutions): the *structure* of every model in the paper is available
+(resnet8..resnet110, mobilenetv2), while the default artifact bundle is
+built at reduced width/resolution so `make artifacts` and the end-to-end
+experiments complete in CI-scale time.  `aot.py --preset paper` lowers
+full-size models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from . import archs as A
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchCfg:
+    """One lowering target: model family + scale + data shape."""
+
+    name: str  # artifact family name, e.g. "resnet8-c10-tiny"
+    arch: str  # resnet | mobilenetv2
+    depth_n: int  # resnet: blocks per stage (6n+2); mbv2: ignored
+    num_classes: int
+    image_size: int
+    width: float
+    batch: int
+    eval_batch: int
+    mbv2_cfg: Optional[Tuple[Tuple[int, int, int, int], ...]] = None
+
+    def build(self, qbits: Optional[int] = None) -> A.Arch:
+        if self.arch == "resnet":
+            return A.resnet(
+                self.depth_n,
+                self.num_classes,
+                image_size=self.image_size,
+                width=self.width,
+                qbits=qbits,
+            )
+        if self.arch == "mobilenetv2":
+            cfg = list(self.mbv2_cfg) if self.mbv2_cfg else None
+            return A.mobilenet_v2(
+                self.num_classes,
+                image_size=self.image_size,
+                width=self.width,
+                qbits=qbits,
+                cfg=cfg,
+            )
+        raise ValueError(self.arch)
+
+
+# Reduced MobileNetV2 stack for the CPU testbed (stride plan preserved).
+_MBV2_TINY = ((1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 2, 2), (6, 64, 2, 1))
+
+ARCH_CFGS: Dict[str, ArchCfg] = {
+    # Default experiment workhorse: every coordinator feature exercised
+    # in minutes on one core.  ResNet-8 structure (1 block/stage).
+    "resnet8-c10-tiny": ArchCfg(
+        "resnet8-c10-tiny", "resnet", 1, 10, 16, 0.5, 32, 128
+    ),
+    # The ablation model: ResNet-20-class (3 blocks/stage) at 16px —
+    # stands in for the paper's ResNet-74 ablations (same 6n+2 family,
+    # 9 gateable blocks).
+    "resnet20-c10": ArchCfg("resnet20-c10", "resnet", 3, 10, 16, 0.5, 32, 128),
+    # CIFAR-100-class variant (Table 1 / Table 4 rows).
+    "resnet20-c100": ArchCfg("resnet20-c100", "resnet", 3, 100, 16, 0.5, 32, 128),
+    # MobileNetV2 rows of Table 4.
+    "mbv2-c10-tiny": ArchCfg(
+        "mbv2-c10-tiny", "mobilenetv2", 0, 10, 16, 0.35, 32, 128, _MBV2_TINY
+    ),
+    # Paper-scale structures (lowered only with --preset paper; the
+    # coordinator and energy ledger accept them like any other family).
+    "resnet74-c10": ArchCfg("resnet74-c10", "resnet", 12, 10, 32, 1.0, 128, 256),
+    "resnet110-c10": ArchCfg("resnet110-c10", "resnet", 18, 10, 32, 1.0, 128, 256),
+    "resnet110-c100": ArchCfg("resnet110-c100", "resnet", 18, 100, 32, 1.0, 128, 256),
+    "mbv2-c10": ArchCfg("mbv2-c10", "mobilenetv2", 0, 10, 32, 1.0, 128, 256),
+}
+
+# Methods lowered per arch family by default.
+DEFAULT_METHODS: List[str] = [
+    "sgd32",
+    "fixed8",
+    "signsgd",
+    "psg",
+    "slu",
+    "sd",
+    "e2train",
+    "headft",
+]
+
+PRESETS: Dict[str, List[str]] = {
+    # `make artifacts` default: everything the test-suite and the
+    # experiment harness need.
+    "default": ["resnet8-c10-tiny", "resnet20-c10", "resnet20-c100", "mbv2-c10-tiny"],
+    # Minimal bundle for fast iteration.
+    "tiny": ["resnet8-c10-tiny"],
+    # Full-size structures (hours of lowering; not built by default).
+    "paper": ["resnet74-c10", "resnet110-c10", "resnet110-c100", "mbv2-c10"],
+}

@@ -1,0 +1,101 @@
+"""RNNGates for input-dependent selective layer update (SLU, Sec. 3.2 +
+appendix C).
+
+Per gated block: global-average-pool the block input, project to a
+10-dim vector (one projection per distinct channel width, since pooled
+dims differ across stages), run one step of a *shared* single-layer
+LSTM(10) whose hidden state is carried across blocks, and map the hidden
+state to a scalar probability.  Hard decisions use a straight-through
+estimator so the gates are learned jointly with the trunk from scratch —
+no RL post-processing, which is the paper's point vs. SkipNet [19].
+
+The FLOPs regularizer C(W, G) of Eq. (1) is applied by the train-step
+builder using the static per-block FLOP fractions from the Arch.
+
+Gate gradients: the trunk backward produces dL/d(mask_b) for each gated
+block; the trajectory below is re-run under jax.vjp with those cotangents
+(plus the regularizer term) to get gate-parameter gradients.  Pooled block
+inputs are treated as constants (stop-gradient) on the gate path — the
+gate's learning signal flows through its *decision*, not back into the
+trunk activations, matching the negligible-overhead claim (<0.04% FLOPs).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+Params = Dict[str, jnp.ndarray]
+
+
+def gate_specs(channel_dims: Sequence[int]) -> Dict[str, L.Spec]:
+    """Parameter specs: per-width projection + shared LSTM + output head."""
+    specs: Dict[str, L.Spec] = {}
+    for c in sorted(set(channel_dims)):
+        specs[f"gate.proj{c}.w"] = ((c, L.GATE_DIM), "uniform")
+        specs[f"gate.proj{c}.b"] = ((L.GATE_DIM,), "zeros")
+    specs.update(L.lstm_specs("gate.lstm"))
+    specs["gate.out.w"] = ((L.GATE_DIM, 1), "uniform")
+    # Positive bias: gates start OPEN (prob > 0.5), so early training uses
+    # the full model and the FLOPs regularizer prunes from there.  A zero
+    # bias starts every block skipped (prob == 0.5 fails the hard > 0.5
+    # test) and the gates never receive a usefulness signal.
+    specs["gate.out.b"] = ((1,), "ones")
+    return specs
+
+
+def gate_step(
+    gp: Params,
+    pooled: jnp.ndarray,
+    h: jnp.ndarray,
+    c: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One gate decision. pooled: (N, C). Returns (prob (N,), h', c')."""
+    cdim = pooled.shape[-1]
+    z = pooled @ gp[f"gate.proj{cdim}.w"] + gp[f"gate.proj{cdim}.b"]
+    h, c = L.lstm_cell(z, h, c, gp["gate.lstm.wi"], gp["gate.lstm.wh"], gp["gate.lstm.b"])
+    logit = (h @ gp["gate.out.w"] + gp["gate.out.b"])[:, 0]
+    return jax.nn.sigmoid(logit), h, c
+
+
+def straight_through(prob: jnp.ndarray) -> jnp.ndarray:
+    """Hard {0,1} decision in the forward pass, identity gradient."""
+    hard = (prob > 0.5).astype(prob.dtype)
+    return hard + prob - jax.lax.stop_gradient(prob)
+
+
+def trajectory(
+    gp: Params, pooled_list: List[jnp.ndarray]
+) -> List[jnp.ndarray]:
+    """Gate probabilities for each gated block, LSTM state carried.
+
+    ``pooled_list`` entries are already stop-gradded by the caller; this
+    function is pure in ``gp`` so it can be re-run under jax.vjp in the
+    gate-backward phase with the trunk's dL/d(mask) cotangents.
+    """
+    if not pooled_list:
+        return []
+    n = pooled_list[0].shape[0]
+    h = jnp.zeros((n, L.GATE_DIM), jnp.float32)
+    c = jnp.zeros((n, L.GATE_DIM), jnp.float32)
+    probs = []
+    for pooled in pooled_list:
+        p, h, c = gate_step(gp, pooled, h, c)
+        probs.append(p)
+    return probs
+
+
+def gate_flops(channel_dims: Sequence[int]) -> int:
+    """MACs of the gate path per sample (projection + LSTM + head) —
+    exported to the manifest so the energy ledger can charge the (tiny)
+    gate overhead, substantiating the paper's <0.04% claim."""
+    total = 0
+    for c in channel_dims:
+        total += c * L.GATE_DIM  # projection
+        total += 2 * L.GATE_DIM * 4 * L.GATE_DIM  # lstm matmuls
+        total += L.GATE_DIM  # head
+    return total

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels + their pure-jnp oracles.
+
+Import surface used by the L2 model and the test-suite:
+
+    from compile.kernels import quantize, psg_select, psg_matmul, \
+        matmul, gated_residual, ref
+
+Every kernel runs under ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); numerics are identical to the ``ref`` oracles,
+which pytest enforces.
+"""
+
+from . import ref  # noqa: F401
+from .gated_block import gated_residual  # noqa: F401
+from .matmul import matmul, vmem_bytes  # noqa: F401
+from .psg import prediction_error_bound, psg_matmul, psg_select  # noqa: F401
+from .quant import quantize  # noqa: F401

@@ -1,0 +1,87 @@
+"""Pallas gated residual merge kernel (Layer 1) — SLU's skip primitive.
+
+``out[n] = x[n] + gate[n] * f(x)[n]`` with a per-sample gate in [0, 1].
+
+This is the datapath half of input-dependent selective layer update
+(Sec. 3.2): a gate of 0 turns the block into an identity for that sample
+in the forward pass, and — because the gate multiplies the branch output —
+zeroes the branch's weight gradient for that sample in the backward pass.
+The *scheduling* half (not launching skipped blocks at all) lives in the
+rust coordinator's block-chained mode; this kernel covers the per-sample
+masked execution inside one fused train-step artifact.
+
+Grid: (N, F/block) over samples x flattened features; the gate value for
+the sample is a resident (1,1) block per grid row.
+
+Correctness oracle: ref.gated_residual_ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+_BLOCK_F = 512
+
+
+def _gated_kernel(gate_ref, x_ref, fx_ref, o_ref):
+    g = gate_ref[0, 0]
+    o_ref[...] = x_ref[...] + g * fx_ref[...]
+
+
+@jax.custom_vjp
+def gated_residual(
+    x: jnp.ndarray, fx: jnp.ndarray, gate: jnp.ndarray
+) -> jnp.ndarray:
+    """Per-sample gated residual over (N, ...) tensors; gate is (N,).
+
+    Differentiation: analytic custom VJP (Pallas calls carry no autodiff
+    rule) — d/dx = g, d/dfx = gate * g, d/dgate[n] = <g[n], fx[n]>.  The
+    gate factor in d/dfx is exactly the paper's "skipped blocks receive
+    no weight update" (Sec. 3.2): a zero gate kills the branch cotangent
+    for that sample before it reaches the branch weights.
+    """
+    assert x.shape == fx.shape and gate.shape == (x.shape[0],)
+    n = x.shape[0]
+    feat = 1
+    for d in x.shape[1:]:
+        feat *= d
+    xf = x.reshape(n, feat)
+    ff = fx.reshape(n, feat)
+    pad = (-feat) % _BLOCK_F
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad)))
+        ff = jnp.pad(ff, ((0, 0), (0, pad)))
+    gcol = gate.reshape(n, 1).astype(x.dtype)
+
+    grid = (n, xf.shape[1] // _BLOCK_F)
+    out = pl.pallas_call(
+        _gated_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, _BLOCK_F), lambda i, j: (i, j)),
+            pl.BlockSpec((1, _BLOCK_F), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, _BLOCK_F), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=INTERPRET,
+    )(gcol, xf, ff)
+    return out[:, :feat].reshape(x.shape)
+
+
+def _gated_fwd(x, fx, gate):
+    return gated_residual(x, fx, gate), (fx, gate)
+
+
+def _gated_bwd(res, g):
+    fx, gate = res
+    gb = gate.reshape((gate.shape[0],) + (1,) * (g.ndim - 1))
+    dgate = jnp.sum(g * fx, axis=tuple(range(1, g.ndim)))
+    return g, gb * g, dgate
+
+
+gated_residual.defvjp(_gated_fwd, _gated_bwd)

@@ -1,0 +1,91 @@
+"""Pallas tiled matmul kernel (Layer 1) — the conv/dense hot-spot.
+
+CIFAR ResNet convolutions reach the MXU as im2col matmuls; this kernel is
+the TPU rendition of the paper's FPGA conv engine (DESIGN.md
+§Hardware-Adaptation): the (bm, bk) x (bk, bn) VMEM tiles play the role of
+the FPGA's on-chip line buffers, and the K-grid axis is the double-buffered
+HBM->VMEM streaming loop.
+
+Grid = (M/bm, N/bn, K/bk); the K axis accumulates into the output tile,
+which stays resident in VMEM across the K loop (revisiting output blocks,
+the standard Pallas accumulation idiom).
+
+Correctness oracle: :func:`ref.matmul_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+# MXU-native tiles: 128x128 output block, 128-deep K slices.
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (BM, BK) x (BK, BN) partial product, accumulated over grid k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pad2(v: jnp.ndarray, r: int, c: int) -> jnp.ndarray:
+    pr = (-v.shape[0]) % r
+    pc = (-v.shape[1]) % c
+    if pr or pc:
+        v = jnp.pad(v, ((0, pr), (0, pc)))
+    return v
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    bm: int = BM,
+    bn: int = BN,
+    bk: int = BK,
+) -> jnp.ndarray:
+    """Tiled ``a @ b`` for 2-D f32 operands (shapes padded to tiles)."""
+    assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[0]
+    m, k = a.shape
+    n = b.shape[1]
+    # Clamp tiles to the (padded) problem so tiny shapes stay one tile.
+    bm = min(bm, -(-m // 8) * 8)
+    bn = min(bn, -(-n // 8) * 8)
+    bk = min(bk, -(-k // 8) * 8)
+    ap = _pad2(a, bm, bk)
+    bp = _pad2(b, bk, bn)
+
+    grid = (ap.shape[0] // bm, bp.shape[1] // bn, ap.shape[1] // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), a.dtype),
+        interpret=INTERPRET,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK, dtype_bytes: int = 4) -> int:
+    """VMEM working-set estimate for one grid step (perf model, DESIGN.md).
+
+    a-tile + b-tile + resident output tile, times 2 for double buffering of
+    the streamed operands.
+    """
+    return dtype_bytes * (2 * (bm * bk + bk * bn) + bm * bn)

@@ -1,0 +1,102 @@
+"""Pallas fixed-point fake-quantization kernel (Layer 1).
+
+Implements the MSB extraction of Sec. 3.3: symmetric uniform quantization
+to ``bits`` bits with a per-tensor dynamic scale.  The scale (a cheap
+global max-abs reduction) is computed outside the kernel and broadcast in
+as a (1, 1) scalar block; the kernel itself is a tiled elementwise
+round/clip/rescale — on TPU this is a pure VPU op streaming one VMEM tile
+at a time, no MXU involvement.
+
+Correctness oracle: :func:`ref.quantize_ref` (pytest + hypothesis sweep).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+# custom-calls, so kernels lower to plain HLO (see DESIGN.md).
+INTERPRET = True
+
+# VPU-friendly tile: 8 sublanes x 128 lanes is the f32 native tile; we use
+# a (256, 128) block so each grid step moves 128KiB through VMEM.
+_BLOCK_ROWS = 256
+_BLOCK_COLS = 128
+
+
+def _quant_kernel(scale_ref, levels_ref, v_ref, o_ref):
+    """One (block_rows, block_cols) tile: q = clip(round(v/s), ±L) * s."""
+    s = scale_ref[0, 0]
+    levels = levels_ref[0, 0]
+    v = v_ref[...]
+    q = jnp.clip(jnp.round(v / s), -levels, levels)
+    o_ref[...] = q * s
+
+
+def _pad_to(v: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    pr = (-v.shape[0]) % rows
+    pc = (-v.shape[1]) % cols
+    if pr or pc:
+        v = jnp.pad(v, ((0, pr), (0, pc)))
+    return v
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def quantize(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Fake-quantize ``v`` to ``bits`` bits (Pallas tiled elementwise).
+
+    Accepts any-rank input; internally flattened to 2-D tiles.  Matches
+    :func:`ref.quantize_ref` exactly (same rounding, same zero-tensor
+    guard).
+
+    Differentiation: straight-through estimator (identity gradient), the
+    standard rule for fake-quant in low-precision training [13, 15] — the
+    Pallas call itself has no autodiff rule, and round() would have a
+    zero gradient anyway.
+    """
+    orig_shape = v.shape
+    flat = v.reshape(-1)
+    # Lay the flat vector out as a (rows, _BLOCK_COLS) matrix.
+    n = flat.shape[0]
+    rows = -(-n // _BLOCK_COLS)
+    m = _pad_to(
+        jnp.pad(flat, (0, rows * _BLOCK_COLS - n)).reshape(rows, _BLOCK_COLS),
+        _BLOCK_ROWS,
+        _BLOCK_COLS,
+    )
+
+    levels = float(2 ** (bits - 1) - 1)
+    maxabs = jnp.max(jnp.abs(v))
+    scale = jnp.where(maxabs > 0, maxabs / levels, 1.0).reshape(1, 1)
+    levels_arr = jnp.full((1, 1), levels, dtype=v.dtype)
+
+    grid = (m.shape[0] // _BLOCK_ROWS, m.shape[1] // _BLOCK_COLS)
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # scale, resident
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # levels, resident
+            pl.BlockSpec((_BLOCK_ROWS, _BLOCK_COLS), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK_ROWS, _BLOCK_COLS), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(m.shape, v.dtype),
+        interpret=INTERPRET,
+    )(scale.astype(v.dtype), levels_arr, m)
+
+    return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+def _quantize_fwd(v, bits):
+    return quantize(v, bits), None
+
+
+def _quantize_bwd(bits, _res, g):
+    return (g,)  # straight-through
+
+
+quantize.defvjp(_quantize_fwd, _quantize_bwd)

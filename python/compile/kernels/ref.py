@@ -1,0 +1,95 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth for the pytest/hypothesis correctness suite
+(``python/tests/test_kernels.py``): each Pallas kernel must be allclose to
+its ``*_ref`` twin over randomized shapes/dtypes/bit-widths.  The L2 model
+(``model.py``) calls these semantics through :mod:`kernels` — the jnp path
+and the Pallas path are interchangeable by construction.
+
+Notation follows the paper (Sec. 3.3): ``x`` is a layer input, ``g_y`` the
+gradient of the layer output, ``g_w = x^T g_y`` the weight gradient,
+``*_msb`` the most-significant-bits (low precision) rendition.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric uniform fake-quantization to ``bits`` bits.
+
+    Matches the paper's fixed-point MSB extraction: keep the top ``bits``
+    bits of a symmetric fixed-point encoding whose dynamic range is the
+    tensor's max-abs.  Returned values are dequantized back to f32 so the
+    surrounding graph stays in one dtype (the energy ledger, not the
+    numerics, accounts for the narrower datapath).
+
+    ``bits`` counts the sign bit, i.e. levels = 2**(bits-1) - 1 per side,
+    mirroring Sec. 3.3 where Delta = 2^-(B_msb - 1).
+    """
+    levels = float(2 ** (bits - 1) - 1)
+    maxabs = jnp.max(jnp.abs(v))
+    # Guard all-zero tensors: scale 1.0 quantizes zeros to zeros.
+    scale = jnp.where(maxabs > 0, maxabs / levels, 1.0)
+    q = jnp.clip(jnp.round(v / scale), -levels, levels)
+    return q * scale
+
+
+def psg_select_ref(
+    g_full: jnp.ndarray, g_msb: jnp.ndarray, beta: float
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Predictive sign selection, Eq. (2) with the adaptive threshold.
+
+    tau = beta * max_i |g_msb[i]| (per tensor).  Where the low-cost
+    predictor is confident (|g_msb| >= tau) use its sign; otherwise fall
+    back to the sign of the full-precision gradient.
+
+    Returns ``(sign_selected, predicted_mask)`` where ``predicted_mask``
+    is 1.0 where the MSB predictor was used (the paper reports this
+    fraction staying >= 60% with beta = 0.05).
+    """
+    tau = beta * jnp.max(jnp.abs(g_msb))
+    confident = jnp.abs(g_msb) >= tau
+    sel = jnp.where(confident, jnp.sign(g_msb), jnp.sign(g_full))
+    return sel, confident.astype(jnp.float32)
+
+
+def psg_matmul_ref(
+    x: jnp.ndarray,
+    g_y: jnp.ndarray,
+    beta: float,
+    bits_x: int = 4,
+    bits_gy: int = 10,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused PSG weight-gradient predictor for a linear layer.
+
+    g_w       = x^T g_y                 (full precision, (K, N))
+    g_w^msb   = Q(x)^T Q(g_y)           (MSB operands, Sec. 3.3)
+    output    = Eq. (2) sign selection with tau = beta * max|g_w^msb|.
+
+    Returns ``(sign_selected, predicted_mask)``.  This is the semantic the
+    Pallas kernel ``psg.py::psg_matmul`` implements with MXU tiling.
+    """
+    g_w = x.T @ g_y
+    g_w_msb = quantize_ref(x, bits_x).T @ quantize_ref(g_y, bits_gy)
+    return psg_select_ref(g_w, g_w_msb, beta)
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul oracle for the tiled Pallas matmul kernel."""
+    return a @ b
+
+
+def gated_residual_ref(
+    x: jnp.ndarray, fx: jnp.ndarray, gate: jnp.ndarray
+) -> jnp.ndarray:
+    """Per-sample gated residual merge: ``out[n] = x[n] + gate[n]*fx[n]``.
+
+    ``gate`` has shape (N,) in [0, 1]; broadcast over the remaining dims.
+    A gate of exactly 0 reproduces SLU's skipped block (identity), and the
+    multiplicative form makes the block's weight gradient vanish for
+    skipped samples — the backward half of the skip for free.
+    """
+    g = gate.reshape((gate.shape[0],) + (1,) * (x.ndim - 1))
+    return x + g * fx

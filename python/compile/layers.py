@@ -1,0 +1,168 @@
+"""Layer-2 building blocks: conv / batchnorm / linear / LSTM cell.
+
+Everything is expressed over plain dicts of jnp arrays so the AOT boundary
+(rust feeds a flat, manifest-ordered list of buffers) stays trivial.  All
+shapes are NHWC / HWIO.
+
+Initializers return *specs* — ``(shape, init_kind)`` tuples — rather than
+materialized arrays: the rust coordinator owns parameter state and performs
+He/zeros/ones initialization itself (rust/src/optim/init.rs) from the
+manifest emitted by aot.py.  Python only materializes params for its own
+tests.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Spec = Tuple[Tuple[int, ...], str]  # (shape, init kind: he|zeros|ones|lstm)
+
+BN_MOMENTUM = 0.1
+BN_EPS = 1e-5
+
+
+# --------------------------------------------------------------------------
+# Parameter materialization (python-side tests + aot example args only)
+# --------------------------------------------------------------------------
+
+def materialize(specs: Dict[str, Spec], seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """He/zeros/ones init matching rust/src/optim/init.rs bit-for-bit in
+    distribution (not in RNG stream — each side owns its own seed)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, (shape, kind) in specs.items():
+        if kind == "he":
+            fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+            std = math.sqrt(2.0 / max(fan_in, 1))
+            out[name] = jnp.asarray(
+                rng.normal(0.0, std, size=shape).astype(np.float32)
+            )
+        elif kind == "zeros":
+            out[name] = jnp.zeros(shape, jnp.float32)
+        elif kind == "ones":
+            out[name] = jnp.ones(shape, jnp.float32)
+        elif kind == "uniform":
+            bound = 1.0 / math.sqrt(max(shape[0], 1))
+            out[name] = jnp.asarray(
+                rng.uniform(-bound, bound, size=shape).astype(np.float32)
+            )
+        else:
+            raise ValueError(f"unknown init kind {kind}")
+    return out
+
+
+# --------------------------------------------------------------------------
+# Ops
+# --------------------------------------------------------------------------
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """SAME conv, NHWC x HWIO -> NHWC."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv_flops(
+    h: int, w: int, kh: int, kw: int, cin: int, cout: int, stride: int
+) -> int:
+    """MACs of one SAME conv at the given input spatial size."""
+    oh, ow = -(-h // stride), -(-w // stride)
+    return oh * ow * kh * kw * cin * cout
+
+
+def bn_train(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    bias: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """BatchNorm with batch statistics; returns (out, mean, var) so the
+    caller can fold the stats into the running EMA outside the VJP."""
+    mean = jnp.mean(x, axis=(0, 1, 2))
+    var = jnp.var(x, axis=(0, 1, 2))
+    inv = jax.lax.rsqrt(var + BN_EPS)
+    out = (x - mean) * inv * scale + bias
+    return out, mean, var
+
+
+def bn_eval(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    bias: jnp.ndarray,
+    rmean: jnp.ndarray,
+    rvar: jnp.ndarray,
+) -> jnp.ndarray:
+    inv = jax.lax.rsqrt(rvar + BN_EPS)
+    return (x - rmean) * inv * scale + bias
+
+
+def ema(running: jnp.ndarray, batch: jnp.ndarray) -> jnp.ndarray:
+    return (1.0 - BN_MOMENTUM) * running + BN_MOMENTUM * batch
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(x, axis=(1, 2))
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return x @ w + b
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0.0)
+
+
+def relu6(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def softmax_xent(
+    logits: jnp.ndarray, labels: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean cross-entropy + per-batch correct count (f32 scalar)."""
+    logp = jax.nn.log_softmax(logits)
+    n = logits.shape[0]
+    nll = -logp[jnp.arange(n), labels]
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    )
+    return jnp.mean(nll), correct
+
+
+# --------------------------------------------------------------------------
+# LSTM cell for the RNNGates (appendix C: single layer, dim 10, shared)
+# --------------------------------------------------------------------------
+
+GATE_DIM = 10
+
+
+def lstm_cell(
+    x: jnp.ndarray,
+    h: jnp.ndarray,
+    c: jnp.ndarray,
+    wi: jnp.ndarray,
+    wh: jnp.ndarray,
+    b: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One LSTM step; gates packed as [i, f, g, o] along the last axis."""
+    z = x @ wi + h @ wh + b
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_specs(prefix: str) -> Dict[str, Spec]:
+    return {
+        f"{prefix}.wi": ((GATE_DIM, 4 * GATE_DIM), "uniform"),
+        f"{prefix}.wh": ((GATE_DIM, 4 * GATE_DIM), "uniform"),
+        f"{prefix}.b": ((4 * GATE_DIM,), "zeros"),
+    }

@@ -1,0 +1,441 @@
+"""Layer-2: E²-Train train/eval steps with a hand-rolled block-level
+backward pass.
+
+Why manual backprop?  The paper's two model/algorithm-level techniques
+both live *inside* the backward pass:
+
+* SLU (Sec. 3.2) skips blocks in **both** the forward and backward pass —
+  the per-sample gate multiplies the residual branch, so a skipped
+  sample's branch contributes neither activations forward nor weight
+  gradients backward; block-level VJPs make that structure explicit and
+  let the rust coordinator's block-chained mode drop whole executables.
+* PSG (Sec. 3.3) replaces each layer's weight gradient with a predicted
+  sign computed from MSB-quantized operands.  We intercept each block's
+  VJP, re-run it with 4-bit activations and a 10-bit output-gradient to
+  obtain g_w^msb, and select per Eq. (2) via the Pallas psg_select kernel.
+
+The step builders return *flat-list* functions: rust feeds a
+manifest-ordered list of buffers and receives one back.  See aot.py for
+the manifest format.
+
+One train-step artifact per (arch, method); methods are declared as
+:class:`MethodSpec` values in :data:`METHODS`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import archs as A
+from . import gates as G
+from . import layers as L
+from .kernels import psg_select, quantize
+
+Params = Dict[str, jnp.ndarray]
+
+# Parameter names receiving sign-style updates under sign/psg rules
+# (conv + fc weights).  BN scale/bias, biases and gate parameters always
+# take plain SGD(+momentum) — sign updates on normalization parameters
+# destabilize training and the paper's PSG targets *weight* gradients.
+_WEIGHT_SUFFIXES = (".conv", ".conv1", ".conv2", ".down", ".expand", ".dw", ".project")
+
+
+def is_weight(name: str) -> bool:
+    return (
+        name == "head.w"
+        or any(name.endswith(s) for s in _WEIGHT_SUFFIXES)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """Declarative description of one training method variant."""
+
+    name: str
+    qbits_act: Optional[int] = None  # fake-quant of activations/weights fwd
+    qbits_grad: Optional[int] = None  # fake-quant of the streamed gradient
+    update: str = "sgd"  # sgd | sign | psg
+    gating: str = "none"  # none | learned | mask
+    alpha: float = 0.0  # Eq. (1) FLOPs-regularizer weight
+    beta: float = 0.05  # PSG adaptive-threshold ratio
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    psg_bits_x: int = 4
+    psg_bits_gy: int = 10
+    # Fine-tuning baseline (Sec. 4.5 option 1): only the FC head is
+    # trained; the trunk is frozen and no trunk backward runs.
+    head_only: bool = False
+
+
+# The method zoo: the paper's baselines (Tables 2-4) + E2-Train variants.
+METHODS: Dict[str, MethodSpec] = {
+    # 32-bit floating point SGD — the paper's accuracy/energy anchor.
+    "sgd32": MethodSpec("sgd32"),
+    # 8-bit fixed-point training of Banner et al. [15]: 8-bit fwd, but
+    # 32-bit gradients — the paper attributes [15]'s limited (~39%)
+    # energy saving exactly to those full-precision gradients (Sec. 4.4).
+    "fixed8": MethodSpec("fixed8", qbits_act=8, qbits_grad=None),
+    # SignSGD [20]: full-precision gradient, sign-only update.
+    "signsgd": MethodSpec(
+        "signsgd", update="sign", momentum=0.0, weight_decay=5e-4
+    ),
+    # PSG (Sec. 3.3): 8/16-bit datapath + predictive sign from 4/10-bit
+    # MSB operands with adaptive threshold.
+    "psg": MethodSpec(
+        "psg",
+        qbits_act=8,
+        qbits_grad=16,
+        update="psg",
+        momentum=0.0,
+        weight_decay=5e-4,
+    ),
+    # SLU (Sec. 3.2): learned RNN gates + FLOPs regularizer, SGD update.
+    "slu": MethodSpec("slu", gating="learned", alpha=1.0),
+    # Stochastic depth [66] baseline: per-batch random block masks fed by
+    # the coordinator (which owns the survival schedule p_L).
+    "sd": MethodSpec("sd", gating="mask"),
+    # The full E2-Train stack: SLU + PSG (+ SMD at the coordinator level).
+    "e2train": MethodSpec(
+        "e2train",
+        qbits_act=8,
+        qbits_grad=16,
+        update="psg",
+        gating="learned",
+        alpha=1.0,
+        momentum=0.0,
+        weight_decay=5e-4,
+    ),
+    # Last-FC-layer fine-tuning baseline of the Sec. 4.5 experiment.
+    "headft": MethodSpec("headft", head_only=True),
+}
+
+
+# ==========================================================================
+# Spec plumbing — the flat AOT interface
+# ==========================================================================
+
+@dataclasses.dataclass
+class IoSpec:
+    name: str
+    role: str  # param | mom | state | data | scalar | mask | out_*
+    shape: Tuple[int, ...]
+    dtype: str
+    init: str = ""
+
+
+def build_io(
+    arch: A.Arch, method: MethodSpec, batch: int
+) -> Tuple[List[IoSpec], List[IoSpec], Dict[str, L.Spec]]:
+    """Ordered input/output specs for a train-step artifact."""
+    pspecs = dict(arch.param_specs())
+    if method.gating == "learned":
+        pspecs.update(G.gate_specs([b.in_ch for b in arch.gated_blocks()]))
+    sspecs = arch.bn_state_specs()
+
+    ins: List[IoSpec] = []
+    for n, (shape, init) in pspecs.items():
+        ins.append(IoSpec(n, "param", shape, "f32", init))
+    for n, (shape, init) in pspecs.items():
+        ins.append(IoSpec(f"mom.{n}", "mom", shape, "f32", "zeros"))
+    for n, (shape, init) in sspecs.items():
+        ins.append(IoSpec(n, "state", shape, "f32", init))
+    ins.append(IoSpec("x", "data", (batch, arch.image_size, arch.image_size, 3), "f32"))
+    ins.append(IoSpec("y", "data", (batch,), "i32"))
+    ins.append(IoSpec("lr", "scalar", (), "f32"))
+    # Runtime-tunable hyper-parameters: the Fig. 4 / Table 3 sweeps vary
+    # the FLOPs-regularizer weight and the PSG threshold without
+    # re-lowering artifacts.
+    if method.gating == "learned":
+        ins.append(IoSpec("alpha", "scalar", (), "f32"))
+    if method.update == "psg":
+        ins.append(IoSpec("beta", "scalar", (), "f32"))
+    if method.gating == "mask":
+        ins.append(IoSpec("mask", "mask", (len(arch.gated_blocks()),), "f32"))
+
+    outs: List[IoSpec] = []
+    for n, (shape, _) in pspecs.items():
+        outs.append(IoSpec(n, "out_param", shape, "f32"))
+    for n, (shape, _) in pspecs.items():
+        outs.append(IoSpec(f"mom.{n}", "out_mom", shape, "f32"))
+    for n, (shape, _) in sspecs.items():
+        outs.append(IoSpec(n, "out_state", shape, "f32"))
+    outs.append(IoSpec("loss", "out_metric", (), "f32"))
+    outs.append(IoSpec("correct", "out_metric", (), "f32"))
+    if method.gating != "none":
+        outs.append(
+            IoSpec("gate_fracs", "out_metric", (len(arch.gated_blocks()),), "f32")
+        )
+    if method.update == "psg":
+        outs.append(IoSpec("psg_frac", "out_metric", (), "f32"))
+    return ins, outs, pspecs
+
+
+def _fix_dtype(spec: IoSpec) -> str:
+    return spec.dtype if spec.dtype in ("f32", "i32") else "f32"
+
+
+# ==========================================================================
+# Train step
+# ==========================================================================
+
+def build_train_step(
+    arch: A.Arch, method: MethodSpec, batch: int
+) -> Tuple[Callable, List[IoSpec], List[IoSpec]]:
+    """Returns ``(step_fn, input_specs, output_specs)``.
+
+    ``step_fn(*flat_inputs) -> tuple(flat_outputs)`` in manifest order.
+    """
+    ins, outs, pspecs = build_io(arch, method, batch)
+    sspecs = arch.bn_state_specs()
+    pnames = list(pspecs.keys())
+    snames = list(sspecs.keys())
+    gated = arch.gated_blocks()
+    gated_names = {b.name for b in gated}
+    flop_fracs = arch.gated_flop_fracs()
+
+    def step(*flat):
+        it = iter(flat)
+        params = {n: next(it) for n in pnames}
+        mom = {n: next(it) for n in pnames}
+        bn_state = {n: next(it) for n in snames}
+        x = next(it)
+        y = next(it)
+        lr = next(it)
+        alpha = next(it) if method.gating == "learned" else method.alpha
+        beta = next(it) if method.update == "psg" else method.beta
+        sd_mask = next(it) if method.gating == "mask" else None
+        n = x.shape[0]
+        ones = jnp.ones((n,), jnp.float32)
+
+        # ---------------- Phase A: forward, gates interleaved ------------
+        vjps = []  # per block: (vjp_fn, block, gate used)
+        bn_batch: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+        pooled_sg: List[jnp.ndarray] = []  # gate inputs (stop-grad)
+        masks: List[jnp.ndarray] = []  # straight-through masks, per gated
+        block_inputs: List[jnp.ndarray] = []
+        gi = 0
+        h = jnp.zeros((n, L.GATE_DIM), jnp.float32)
+        c = jnp.zeros((n, L.GATE_DIM), jnp.float32)
+        a = x
+        for blk in arch.blocks:
+            bp = {k: params[k] for k in blk.specs}
+            gate = ones
+            if blk.gateable and method.gating == "learned":
+                pooled = jax.lax.stop_gradient(L.global_avg_pool(a))
+                prob, h, c = G.gate_step(params, pooled, h, c)
+                # Forward uses the hard decision; the straight-through
+                # correction is attached in the gate-backward phase.
+                gate = (prob > 0.5).astype(jnp.float32)
+                pooled_sg.append(pooled)
+                masks.append(gate)
+                gi += 1
+            elif blk.gateable and method.gating == "mask":
+                gate = sd_mask[gi] * ones
+                masks.append(gate)
+                gi += 1
+            block_inputs.append(a)
+            (out, stats), vjp_fn = _vjp_block(blk, bp, a, gate)
+            bn_batch.update(stats)
+            vjps.append((vjp_fn, blk, gate))
+            a = out
+
+        # ---------------- Phase B: head + loss ---------------------------
+        hp = {k: params[k] for k in ("head.w", "head.b")}
+
+        def head_loss(hp_, feat_):
+            logits = arch.head_apply(hp_, feat_)
+            loss_, correct_ = L.softmax_xent(logits, y)
+            return loss_, correct_
+
+        (loss, head_vjp_fn, correct) = jax.vjp(head_loss, hp, a, has_aux=True)
+        ghp, gfeat = head_vjp_fn(jnp.float32(1.0))
+
+        grads: Dict[str, jnp.ndarray] = dict(ghp)
+        msb_grads: Dict[str, jnp.ndarray] = {}
+        if method.update == "psg":
+            # MSB predictor for the FC head: g_w = pooled^T dlogits, so the
+            # predictor is Q(pooled, 4)^T Q(dlogits, 10) — exactly the
+            # psg_matmul pipeline (Sec. 3.3) on the head's operands.
+            pooled = L.global_avg_pool(a)
+            logits = arch.head_apply(hp, a)
+            dlogits = (jax.nn.softmax(logits) - jax.nn.one_hot(y, logits.shape[-1])) / n
+            msb_grads["head.w"] = (
+                quantize(pooled, method.psg_bits_x).T
+                @ quantize(dlogits, method.psg_bits_gy)
+            )
+        gate_cots: List[jnp.ndarray] = [None] * len(masks)
+
+        # ---------------- Phase C: block backward (reversed) -------------
+        # head-only fine-tuning: the trunk is frozen, no trunk backward.
+        blocks_bwd = [] if method.head_only else list(
+            zip(reversed(vjps), reversed(block_inputs))
+        )
+        g = gfeat
+        gi = len(masks)
+        for (vjp_fn, blk, gate), a_in in blocks_bwd:
+            if method.qbits_grad is not None:
+                g = quantize(g, method.qbits_grad)
+            gp_b, ga, ggate = vjp_fn(g)
+            if blk.gateable and method.gating != "none":
+                gi -= 1
+                gate_cots[gi] = ggate
+            if method.update == "psg":
+                # MSB predictor: re-run the block VJP with 4-bit input
+                # activations and a 10-bit output gradient (Sec. 3.3).
+                bp = {k: params[k] for k in blk.specs}
+                a_q = quantize(a_in, method.psg_bits_x)
+                (_, _), vjp_q = _vjp_block(blk, bp, a_q, gate)
+                gq_b, _, _ = vjp_q(quantize(g, method.psg_bits_gy))
+                for k, v in gq_b.items():
+                    if is_weight(k):
+                        msb_grads[k] = v
+            grads.update(gp_b)
+            g = ga
+
+        # ---------------- Phase D: gate backward -------------------------
+        if method.gating == "learned" and masks:
+            def traj_loss(gp_):
+                probs = G.trajectory(gp_, pooled_sg)
+                total = jnp.float32(0.0)
+                for j, p in enumerate(probs):
+                    cot = jax.lax.stop_gradient(gate_cots[j])
+                    # Straight-through: dL/dprob = dL/dmask; plus Eq. (1)
+                    # FLOPs regularizer alpha * sum_b frac_b * mean(prob_b).
+                    total = total + jnp.vdot(cot, p)
+                    total = total + alpha * flop_fracs[j] * jnp.mean(p)
+                return total
+
+            gnames = [k for k in pnames if k.startswith("gate.")]
+            gp = {k: params[k] for k in gnames}
+            _, gate_vjp = jax.vjp(traj_loss, gp)
+            (ggate_params,) = gate_vjp(jnp.float32(1.0))
+            grads.update(ggate_params)
+
+        # ---------------- Phase E: parameter update ----------------------
+        new_params: Dict[str, jnp.ndarray] = {}
+        new_mom: Dict[str, jnp.ndarray] = {}
+        psg_fracs: List[jnp.ndarray] = []
+        for k in pnames:
+            w = params[k]
+            gk = grads.get(k)
+            if gk is None:  # parameter untouched this step
+                new_params[k] = w
+                new_mom[k] = mom[k]
+                continue
+            if method.update in ("sign", "psg") and is_weight(k):
+                gk = gk + method.weight_decay * w
+                if method.update == "psg":
+                    sel, pmask = psg_select(gk, msb_grads[k], beta)
+                    psg_fracs.append(jnp.mean(pmask))
+                    upd = sel
+                else:
+                    upd = jnp.sign(gk)
+                new_params[k] = w - lr * upd
+                new_mom[k] = mom[k]
+            else:
+                gk = gk + method.weight_decay * w
+                v = method.momentum * mom[k] + gk
+                new_params[k] = w - lr * v
+                new_mom[k] = v
+
+        # ---------------- BN running-stat EMA ----------------------------
+        new_state: Dict[str, jnp.ndarray] = {}
+        for prefix, (m_, v_) in bn_batch.items():
+            new_state[f"{prefix}.rmean"] = L.ema(bn_state[f"{prefix}.rmean"], m_)
+            new_state[f"{prefix}.rvar"] = L.ema(bn_state[f"{prefix}.rvar"], v_)
+        for sname in snames:
+            new_state.setdefault(sname, bn_state[sname])
+
+        out_flat: List[jnp.ndarray] = []
+        out_flat += [new_params[k] for k in pnames]
+        out_flat += [new_mom[k] for k in pnames]
+        out_flat += [new_state[k] for k in snames]
+        out_flat += [loss, correct]
+        if method.gating != "none":
+            out_flat.append(jnp.stack([jnp.mean(m) for m in masks]))
+        if method.update == "psg":
+            out_flat.append(jnp.mean(jnp.stack(psg_fracs)))
+        return tuple(out_flat)
+
+    return step, ins, outs
+
+
+def _vjp_block(blk: A.BlockDef, bp: Params, a: jnp.ndarray, gate: jnp.ndarray):
+    """jax.vjp over a block's train apply, splitting out the BN-stats aux."""
+    primal, vjp_fn, stats = jax.vjp(blk.apply_train, bp, a, gate, has_aux=True)
+    return (primal, stats), vjp_fn
+
+
+# ==========================================================================
+# Eval step
+# ==========================================================================
+
+def build_eval_step(
+    arch: A.Arch, method: MethodSpec, batch: int
+) -> Tuple[Callable, List[IoSpec], List[IoSpec]]:
+    """Inference-mode step: running BN stats, hard gates (no ST)."""
+    pspecs = dict(arch.param_specs())
+    if method.gating == "learned":
+        pspecs.update(G.gate_specs([b.in_ch for b in arch.gated_blocks()]))
+    sspecs = arch.bn_state_specs()
+    pnames = list(pspecs.keys())
+    snames = list(sspecs.keys())
+
+    ins: List[IoSpec] = []
+    for n_, (shape, init) in pspecs.items():
+        ins.append(IoSpec(n_, "param", shape, "f32", init))
+    for n_, (shape, init) in sspecs.items():
+        ins.append(IoSpec(n_, "state", shape, "f32", init))
+    ins.append(IoSpec("x", "data", (batch, arch.image_size, arch.image_size, 3), "f32"))
+    ins.append(IoSpec("y", "data", (batch,), "i32"))
+
+    outs = [
+        IoSpec("loss", "out_metric", (), "f32"),
+        IoSpec("correct", "out_metric", (), "f32"),
+        IoSpec("correct5", "out_metric", (), "f32"),
+    ]
+    if method.gating == "learned":
+        outs.append(
+            IoSpec("gate_fracs", "out_metric", (len(arch.gated_blocks()),), "f32")
+        )
+
+    def step(*flat):
+        it = iter(flat)
+        params = {n_: next(it) for n_ in pnames}
+        bn_state = {n_: next(it) for n_ in snames}
+        x = next(it)
+        y = next(it)
+        n = x.shape[0]
+        ones = jnp.ones((n,), jnp.float32)
+        h = jnp.zeros((n, L.GATE_DIM), jnp.float32)
+        c = jnp.zeros((n, L.GATE_DIM), jnp.float32)
+        fracs = []
+        a = x
+        for blk in arch.blocks:
+            bp = {k: params[k] for k in blk.specs}
+            bs = {k: bn_state[k] for k in blk.bn_state_specs()}
+            gate = ones
+            if blk.gateable and method.gating == "learned":
+                prob, h, c = G.gate_step(params, L.global_avg_pool(a), h, c)
+                gate = (prob > 0.5).astype(jnp.float32)
+                fracs.append(jnp.mean(gate))
+            a = blk.apply_eval(bp, bs, a, gate)
+        logits = arch.head_apply(params, a)
+        loss, correct = L.softmax_xent(logits, y)
+        # top-5 via ranks (lax.top_k lowers to an HLO `topk` attribute the
+        # xla_extension 0.5.1 text parser rejects): the label is in the
+        # top-k iff fewer than k logits strictly exceed it.
+        k = min(5, logits.shape[-1])
+        ly = logits[jnp.arange(logits.shape[0]), y]
+        rank = jnp.sum((logits > ly[:, None]).astype(jnp.int32), axis=1)
+        correct5 = jnp.sum((rank < k).astype(jnp.float32))
+        out = [loss, correct, correct5]
+        if method.gating == "learned":
+            out.append(jnp.stack(fracs))
+        return tuple(out)
+
+    return step, ins, outs

@@ -1,0 +1,118 @@
+"""AOT interface invariants: manifest structure, buffer ordering, and the
+HLO-text lowering contract the rust runtime depends on."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, archs, configs, model
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def tiny_cfg():
+    return configs.ArchCfg("t", "resnet", 1, 10, 8, 0.25, 4, 8)
+
+
+# --------------------------------------------------------------------------
+# Manifest / IoSpec ordering invariants (the rust contract)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mname", list(model.METHODS.keys()))
+def test_io_ordering_params_then_mom_then_state(mname):
+    m = model.METHODS[mname]
+    arch = tiny_cfg().build(qbits=m.qbits_act)
+    _, ins, outs = model.build_train_step(arch, m, 4)
+    roles = [s.role for s in ins]
+    order = {"param": 0, "mom": 1, "state": 2, "data": 3, "scalar": 4, "mask": 5}
+    ranks = [order[r] for r in roles]
+    assert ranks == sorted(ranks), f"{mname}: role order broken: {roles}"
+    # outputs mirror the state prefix then metrics
+    oroles = [s.role for s in outs]
+    oorder = {"out_param": 0, "out_mom": 1, "out_state": 2, "out_metric": 3}
+    oranks = [oorder[r] for r in oroles]
+    assert oranks == sorted(oranks)
+    # state prefix counts match exactly (the rust write-back contract)
+    n_in = sum(1 for r in roles if r in ("param", "mom", "state"))
+    n_out = sum(1 for r in oroles if r != "out_metric")
+    assert n_in == n_out
+
+
+@pytest.mark.parametrize("mname", ["sgd32", "slu", "e2train", "sd"])
+def test_output_names_match_input_state_names(mname):
+    m = model.METHODS[mname]
+    arch = tiny_cfg().build(qbits=m.qbits_act)
+    _, ins, outs = model.build_train_step(arch, m, 4)
+    in_state = [s.name for s in ins if s.role in ("param", "mom", "state")]
+    out_state = [s.name for s in outs if s.role != "out_metric"]
+    assert in_state == out_state
+
+
+def test_manifest_build_contains_cost_tables():
+    cfg = tiny_cfg()
+    m = model.METHODS["e2train"]
+    arch = cfg.build(qbits=m.qbits_act)
+    step, tins, touts = model.build_train_step(arch, m, cfg.batch)
+    estep, eins, eouts = model.build_eval_step(arch, m, cfg.eval_batch)
+    man = aot.build_manifest(cfg, m, arch, tins, touts, eins, eouts)
+    assert man["total_flops"] == arch.total_flops()
+    assert len(man["blocks"]) == len(arch.blocks)
+    assert len(man["gated_flop_fracs"]) == len(arch.gated_blocks())
+    assert man["gate_flops"] > 0
+    assert man["param_count"] > 0
+    # JSON-serializable end to end
+    json.loads(json.dumps(man))
+
+
+# --------------------------------------------------------------------------
+# HLO text lowering
+# --------------------------------------------------------------------------
+
+def test_hlo_text_lowering_tiny():
+    """The lowering path produces parseable HLO text with ids the old
+    xla_extension accepts (the whole reason we ship text, not protos)."""
+    cfg = tiny_cfg()
+    m = model.METHODS["sgd32"]
+    arch = cfg.build()
+    step, tins, _ = model.build_train_step(arch, m, cfg.batch)
+    lowered = jax.jit(step).lower(*[aot._abstract(s) for s in tins])
+    txt = aot.to_hlo_text(lowered)
+    assert txt.startswith("HloModule")
+    assert "ENTRY" in txt
+    # tuple return (rust unwraps with to_tuple)
+    assert "tuple(" in txt or "(f32[" in txt
+
+
+def test_built_artifacts_match_manifests():
+    """Every shipped manifest's input count equals what the model builder
+    reproduces today (guards against silent drift between aot runs)."""
+    if not (ARTIFACTS / "index.json").exists():
+        pytest.skip("artifacts not built")
+    fam = "resnet8-c10-tiny"
+    for mname in ("sgd32", "e2train"):
+        man = json.loads((ARTIFACTS / fam / f"{mname}.json").read_text())
+        cfg = configs.ARCH_CFGS[fam]
+        m = model.METHODS[mname]
+        arch = cfg.build(qbits=m.qbits_act)
+        _, ins, outs = model.build_train_step(arch, m, cfg.batch)
+        assert len(man["train_inputs"]) == len(ins), mname
+        assert len(man["train_outputs"]) == len(outs), mname
+        assert man["total_flops"] == arch.total_flops()
+
+
+def test_presets_reference_known_families():
+    for preset, fams in configs.PRESETS.items():
+        for f in fams:
+            assert f in configs.ARCH_CFGS, (preset, f)
+
+
+def test_arch_cfg_build_both_kinds():
+    r = configs.ARCH_CFGS["resnet8-c10-tiny"].build()
+    assert r.name == "resnet8"
+    mb = configs.ARCH_CFGS["mbv2-c10-tiny"].build()
+    assert mb.name == "mobilenetv2"
+    with pytest.raises(ValueError):
+        configs.ArchCfg("x", "vgg", 1, 10, 8, 1.0, 4, 8).build()

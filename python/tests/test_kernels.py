@@ -1,0 +1,249 @@
+"""L1 correctness: every Pallas kernel vs. its pure-jnp oracle.
+
+Hypothesis sweeps shapes/bit-widths; assert_allclose against ref.py is the
+core correctness signal for the kernels that end up inlined in the AOT
+artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(0.0, scale, size=shape).astype(np.float32))
+
+
+# --------------------------------------------------------------------------
+# quantize
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 70),
+    cols=st.integers(1, 40),
+    bits=st.sampled_from([2, 3, 4, 8, 10, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref(rows, cols, bits, seed):
+    rng = np.random.default_rng(seed)
+    v = _arr(rng, (rows, cols), scale=3.0)
+    np.testing.assert_allclose(
+        K.quantize(v, bits), ref.quantize_ref(v, bits), rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quantize_zero_tensor(bits):
+    v = jnp.zeros((7, 5), jnp.float32)
+    np.testing.assert_array_equal(K.quantize(v, bits), v)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+def test_quantize_level_count(bits):
+    """Quantized values live on at most 2^bits - 1 distinct levels."""
+    rng = np.random.default_rng(0)
+    v = _arr(rng, (64, 64))
+    q = np.asarray(K.quantize(v, bits))
+    assert len(np.unique(q)) <= 2**bits - 1
+
+
+def test_quantize_preserves_extremes():
+    """max-abs element is exactly representable (scale anchor)."""
+    rng = np.random.default_rng(1)
+    v = _arr(rng, (33, 9))
+    q = np.asarray(K.quantize(v, 8))
+    i = np.unravel_index(np.argmax(np.abs(np.asarray(v))), v.shape)
+    np.testing.assert_allclose(q[i], np.asarray(v)[i], rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(5,), (3, 4, 5), (2, 3, 4, 5)])
+def test_quantize_any_rank(shape):
+    rng = np.random.default_rng(2)
+    v = _arr(rng, shape)
+    np.testing.assert_allclose(
+        K.quantize(v, 6), ref.quantize_ref(v, 6), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_quantize_error_shrinks_with_bits():
+    rng = np.random.default_rng(3)
+    v = _arr(rng, (128, 32))
+    errs = [float(jnp.max(jnp.abs(K.quantize(v, b) - v))) for b in (2, 4, 8, 12)]
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < errs[0] / 50
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 90),
+    k=st.integers(1, 90),
+    n=st.integers(1, 90),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _arr(rng, (m, k)), _arr(rng, (k, n))
+    np.testing.assert_allclose(
+        K.matmul(a, b), ref.matmul_ref(a, b), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_matmul_multi_tile():
+    """Shapes crossing several (128,128,128) tiles exercise accumulation."""
+    rng = np.random.default_rng(7)
+    a, b = _arr(rng, (300, 260)), _arr(rng, (260, 150))
+    np.testing.assert_allclose(
+        K.matmul(a, b), ref.matmul_ref(a, b), rtol=3e-5, atol=3e-4
+    )
+
+
+def test_matmul_custom_tiles():
+    rng = np.random.default_rng(8)
+    a, b = _arr(rng, (65, 70)), _arr(rng, (70, 33))
+    out = K.matmul(a, b, bm=32, bn=16, bk=8)
+    np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=2e-5, atol=2e-5)
+
+
+def test_vmem_budget():
+    """Default tiling fits comfortably in a 16MiB VMEM (DESIGN.md §Perf)."""
+    assert K.vmem_bytes() <= 16 * 1024 * 1024 // 4
+
+
+# --------------------------------------------------------------------------
+# psg_select / psg_matmul — Eq. (2)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 60),
+    cols=st.integers(1, 60),
+    beta=st.sampled_from([0.01, 0.05, 0.1, 0.5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_psg_select_matches_ref(rows, cols, beta, seed):
+    rng = np.random.default_rng(seed)
+    gf, gm = _arr(rng, (rows, cols)), _arr(rng, (rows, cols))
+    sel, mask = K.psg_select(gf, gm, beta)
+    sel_r, mask_r = ref.psg_select_ref(gf, gm, beta)
+    np.testing.assert_array_equal(sel, sel_r)
+    np.testing.assert_array_equal(mask, mask_r)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 50),
+    k=st.integers(2, 50),
+    n=st.integers(2, 50),
+    bits_x=st.sampled_from([3, 4, 6]),
+    bits_gy=st.sampled_from([8, 10, 12]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_psg_matmul_matches_ref(m, k, n, bits_x, bits_gy, seed):
+    rng = np.random.default_rng(seed)
+    x, gy = _arr(rng, (m, k)), _arr(rng, (m, n), scale=0.1)
+    sel, mask = K.psg_matmul(x, gy, 0.05, bits_x, bits_gy)
+    sel_r, mask_r = ref.psg_matmul_ref(x, gy, 0.05, bits_x, bits_gy)
+    # The full-precision products may differ at float ulp level between the
+    # tiled kernel and jnp matmul; only entries *below* threshold consult
+    # the full product's sign, and only near-zero entries could flip.
+    assert float(jnp.mean(sel == sel_r)) > 0.99
+    np.testing.assert_array_equal(mask, mask_r)
+
+
+def test_psg_select_all_confident_when_beta_zero():
+    rng = np.random.default_rng(9)
+    gf, gm = _arr(rng, (16, 16)), _arr(rng, (16, 16))
+    _, mask = K.psg_select(gf, gm, 0.0)
+    assert float(jnp.mean(mask)) == 1.0
+
+
+def test_psg_select_fallback_dominates_at_beta_one():
+    """beta=1: only the max-|g_msb| entry is confident."""
+    rng = np.random.default_rng(10)
+    gf, gm = _arr(rng, (32, 32)), _arr(rng, (32, 32))
+    _, mask = K.psg_select(gf, gm, 1.0)
+    assert 0 < float(jnp.sum(mask)) <= 32 * 32 * 0.05
+
+
+def test_psg_predicted_fraction_realistic():
+    """Paper (Sec. 4.4): predictor used >= 60% of entries at beta=0.05."""
+    rng = np.random.default_rng(11)
+    x, gy = _arr(rng, (256, 64)), _arr(rng, (256, 32), scale=0.01)
+    _, mask = K.psg_matmul(x, gy, 0.05)
+    assert float(jnp.mean(mask)) >= 0.6
+
+
+def test_psg_signs_mostly_correct():
+    """Predicted signs agree with the true full-precision signs for the
+    overwhelming majority of confidently-predicted entries (Eq. 3)."""
+    rng = np.random.default_rng(12)
+    x, gy = _arr(rng, (512, 48)), _arr(rng, (512, 24))
+    sel, mask = K.psg_matmul(x, gy, 0.05)
+    true_sign = jnp.sign(x.T @ gy)
+    agree = jnp.where(mask > 0, (sel == true_sign).astype(jnp.float32), 1.0)
+    assert float(jnp.mean(agree)) > 0.95
+
+
+def test_psg_error_bound_direction():
+    """Eq. (3): the bound shrinks exponentially as predictor bits grow."""
+    rng = np.random.default_rng(13)
+    x, gy = _arr(rng, (128, 32)), _arr(rng, (128, 16))
+    b_lo = K.prediction_error_bound(x, gy, 0.05, bits_x=2, bits_gy=6)
+    b_mid = K.prediction_error_bound(x, gy, 0.05, bits_x=4, bits_gy=10)
+    b_hi = K.prediction_error_bound(x, gy, 0.05, bits_x=8, bits_gy=14)
+    assert b_lo > b_mid > b_hi
+
+
+# --------------------------------------------------------------------------
+# gated_residual
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 16),
+    c=st.integers(1, 24),
+    hw=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gated_residual_matches_ref(n, c, hw, seed):
+    rng = np.random.default_rng(seed)
+    x, fx = _arr(rng, (n, hw, hw, c)), _arr(rng, (n, hw, hw, c))
+    g = jnp.asarray(rng.uniform(size=(n,)).astype(np.float32))
+    np.testing.assert_allclose(
+        K.gated_residual(x, fx, g),
+        ref.gated_residual_ref(x, fx, g),
+        rtol=1e-6,
+        atol=1e-6,
+    )
+
+
+def test_gated_residual_zero_gate_is_identity():
+    rng = np.random.default_rng(14)
+    x, fx = _arr(rng, (4, 6, 6, 8)), _arr(rng, (4, 6, 6, 8))
+    out = K.gated_residual(x, fx, jnp.zeros((4,), jnp.float32))
+    np.testing.assert_array_equal(out, x)
+
+
+def test_gated_residual_grads():
+    """Custom VJP: zero gate kills the branch gradient (SLU backward skip)."""
+    import jax
+
+    rng = np.random.default_rng(15)
+    x, fx = _arr(rng, (3, 4, 4, 2)), _arr(rng, (3, 4, 4, 2))
+    g = jnp.asarray([0.0, 1.0, 0.5], jnp.float32)
+
+    def f(fx_):
+        return jnp.sum(K.gated_residual(x, fx_, g) ** 2)
+
+    dfx = jax.grad(f)(fx)
+    assert float(jnp.max(jnp.abs(dfx[0]))) == 0.0  # gate 0: no branch grad
+    assert float(jnp.max(jnp.abs(dfx[1]))) > 0.0

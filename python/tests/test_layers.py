@@ -1,0 +1,176 @@
+"""Unit tests for the L2 building blocks (layers.py) and gate helpers."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers as L
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(0, scale, size=shape).astype(np.float32))
+
+
+# --------------------------------------------------------------------------
+# conv + flops
+# --------------------------------------------------------------------------
+
+def test_conv2d_same_shape_and_stride():
+    rng = np.random.default_rng(0)
+    x = _arr(rng, (2, 8, 8, 3))
+    w = _arr(rng, (3, 3, 3, 5))
+    assert L.conv2d(x, w, 1).shape == (2, 8, 8, 5)
+    assert L.conv2d(x, w, 2).shape == (2, 4, 4, 5)
+
+
+def test_conv2d_matches_manual_1x1():
+    """1x1 conv is a per-pixel matmul — verify against einsum."""
+    rng = np.random.default_rng(1)
+    x = _arr(rng, (2, 4, 4, 3))
+    w = _arr(rng, (1, 1, 3, 6))
+    out = L.conv2d(x, w, 1)
+    ref = jnp.einsum("nhwc,co->nhwo", x, w[0, 0])
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    h=st.integers(1, 33),
+    k=st.sampled_from([1, 3, 5]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+)
+def test_conv_flops_formula(h, k, cin, cout, stride):
+    f = L.conv_flops(h, h, k, k, cin, cout, stride)
+    oh = -(-h // stride)
+    assert f == oh * oh * k * k * cin * cout
+    assert f > 0
+
+
+# --------------------------------------------------------------------------
+# batchnorm
+# --------------------------------------------------------------------------
+
+def test_bn_train_normalizes():
+    rng = np.random.default_rng(2)
+    x = _arr(rng, (16, 4, 4, 8), scale=5.0) + 3.0
+    out, mean, var = L.bn_train(x, jnp.ones(8), jnp.zeros(8))
+    np.testing.assert_allclose(jnp.mean(out, axis=(0, 1, 2)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(jnp.var(out, axis=(0, 1, 2)), 1.0, atol=1e-2)
+    np.testing.assert_allclose(mean, jnp.mean(x, axis=(0, 1, 2)), rtol=1e-5)
+
+
+def test_bn_eval_uses_running_stats():
+    rng = np.random.default_rng(3)
+    x = _arr(rng, (4, 2, 2, 3))
+    rmean = jnp.asarray([1.0, 2.0, 3.0])
+    rvar = jnp.asarray([4.0, 4.0, 4.0])
+    out = L.bn_eval(x, jnp.ones(3), jnp.zeros(3), rmean, rvar)
+    ref = (x - rmean) / jnp.sqrt(rvar + L.BN_EPS)
+    np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+def test_bn_scale_bias_affine():
+    rng = np.random.default_rng(4)
+    x = _arr(rng, (8, 2, 2, 2))
+    scale = jnp.asarray([2.0, 0.5])
+    bias = jnp.asarray([1.0, -1.0])
+    out, _, _ = L.bn_train(x, scale, bias)
+    base, _, _ = L.bn_train(x, jnp.ones(2), jnp.zeros(2))
+    np.testing.assert_allclose(out, base * scale + bias, rtol=1e-5, atol=1e-5)
+
+
+def test_ema_moves_toward_batch():
+    r = jnp.zeros(3)
+    b = jnp.ones(3)
+    out = L.ema(r, b)
+    np.testing.assert_allclose(out, jnp.full(3, L.BN_MOMENTUM), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# loss + metrics
+# --------------------------------------------------------------------------
+
+def test_softmax_xent_uniform_logits():
+    logits = jnp.zeros((4, 10))
+    y = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    loss, _ = L.softmax_xent(logits, y)
+    np.testing.assert_allclose(loss, np.log(10.0), rtol=1e-5)
+
+
+def test_softmax_xent_correct_count():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0], [10.0, 0.0]])
+    y = jnp.asarray([0, 1, 1], jnp.int32)
+    _, correct = L.softmax_xent(logits, y)
+    assert float(correct) == 2.0
+
+
+def test_softmax_xent_grad_is_prob_minus_onehot():
+    rng = np.random.default_rng(5)
+    logits = _arr(rng, (3, 5))
+    y = jnp.asarray([1, 0, 4], jnp.int32)
+    g = jax.grad(lambda l: L.softmax_xent(l, y)[0])(logits)
+    p = jax.nn.softmax(logits)
+    onehot = jax.nn.one_hot(y, 5)
+    np.testing.assert_allclose(g, (p - onehot) / 3.0, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# LSTM cell
+# --------------------------------------------------------------------------
+
+def test_lstm_cell_shapes_and_bounds():
+    rng = np.random.default_rng(6)
+    specs = L.lstm_specs("g")
+    from compile.layers import materialize
+
+    p = materialize(specs, seed=0)
+    x = _arr(rng, (4, L.GATE_DIM))
+    h = jnp.zeros((4, L.GATE_DIM))
+    c = jnp.zeros((4, L.GATE_DIM))
+    h2, c2 = L.lstm_cell(x, h, c, p["g.wi"], p["g.wh"], p["g.b"])
+    assert h2.shape == (4, L.GATE_DIM)
+    assert float(jnp.max(jnp.abs(h2))) <= 1.0  # tanh-bounded
+
+
+def test_lstm_state_carries_information():
+    rng = np.random.default_rng(7)
+    from compile.layers import materialize
+
+    p = materialize(L.lstm_specs("g"), seed=1)
+    x1 = _arr(rng, (2, L.GATE_DIM))
+    x2 = _arr(rng, (2, L.GATE_DIM))
+    h0 = jnp.zeros((2, L.GATE_DIM))
+    c0 = jnp.zeros((2, L.GATE_DIM))
+    h1, c1 = L.lstm_cell(x1, h0, c0, p["g.wi"], p["g.wh"], p["g.b"])
+    out_seq, _ = L.lstm_cell(x2, h1, c1, p["g.wi"], p["g.wh"], p["g.b"])
+    out_fresh, _ = L.lstm_cell(x2, h0, c0, p["g.wi"], p["g.wh"], p["g.b"])
+    assert not np.allclose(out_seq, out_fresh)  # history matters
+
+
+# --------------------------------------------------------------------------
+# materialize
+# --------------------------------------------------------------------------
+
+def test_materialize_he_statistics():
+    from compile.layers import materialize
+
+    p = materialize({"w": ((3, 3, 16, 64), "he")}, seed=0)["w"]
+    std = float(jnp.std(p))
+    expect = np.sqrt(2.0 / (3 * 3 * 16))
+    assert abs(std - expect) / expect < 0.1
+
+
+def test_materialize_kinds():
+    from compile.layers import materialize
+
+    p = materialize(
+        {"a": ((4,), "zeros"), "b": ((4,), "ones"), "c": ((8, 2), "uniform")},
+        seed=0,
+    )
+    assert float(jnp.sum(jnp.abs(p["a"]))) == 0.0
+    assert float(jnp.sum(p["b"])) == 4.0
+    assert float(jnp.max(jnp.abs(p["c"]))) <= 1.0 / np.sqrt(8)

@@ -1,0 +1,301 @@
+//! Run configuration: everything a training run needs, loadable from
+//! JSON launcher files (`configs/*.json`) or built programmatically by
+//! the experiment harness.  Serialization uses the in-repo JSON
+//! substrate (`util::json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::optim::LrSchedule;
+use crate::util::json::{parse, Json};
+
+/// Which dataset backs the run.
+#[derive(Debug, Clone)]
+pub enum DataCfg {
+    /// Procedural CIFAR-like generator (default on the offline testbed).
+    Synthetic { classes: usize, n_train: usize, n_test: usize, seed: u64 },
+    /// Real CIFAR-10 binaries, if present on disk.
+    CifarBin { dir: PathBuf },
+}
+
+impl Default for DataCfg {
+    fn default() -> Self {
+        DataCfg::Synthetic { classes: 10, n_train: 2048, n_test: 512, seed: 0 }
+    }
+}
+
+/// SMD (Sec. 3.1): drop each mini-batch with probability `p`.
+#[derive(Debug, Clone, Copy)]
+pub struct SmdCfg {
+    pub enabled: bool,
+    pub p: f64,
+}
+
+impl Default for SmdCfg {
+    fn default() -> Self {
+        Self { enabled: false, p: 0.5 }
+    }
+}
+
+/// Stochastic-depth baseline schedule [66]: linear-decay survival from 1
+/// at the first block to `p_l` at the last.
+#[derive(Debug, Clone, Copy)]
+pub struct SdCfg {
+    pub p_l: f64,
+}
+
+impl Default for SdCfg {
+    fn default() -> Self {
+        Self { p_l: 0.5 }
+    }
+}
+
+/// One training run.
+#[derive(Debug, Clone)]
+pub struct RunCfg {
+    /// Artifact family (e.g. "resnet8-c10-tiny") under `artifacts/`.
+    pub family: String,
+    /// Method artifact: sgd32 | fixed8 | signsgd | psg | slu | sd |
+    /// e2train | headft.
+    pub method: String,
+    pub iters: u64,
+    pub seed: u64,
+    pub lr: LrSchedule,
+    pub data: DataCfg,
+    pub smd: SmdCfg,
+    pub sd: SdCfg,
+    /// Evaluate every `eval_every` iterations (0 = only at the end).
+    pub eval_every: u64,
+    /// Enable SWA (used by PSG runs per Sec. 4.1).
+    pub swa: bool,
+    /// SLU FLOPs-regularizer weight (Eq. 1); runtime scalar input.
+    pub alpha: f64,
+    /// PSG adaptive-threshold ratio (Sec. 3.3); runtime scalar input.
+    pub beta: f64,
+    pub artifacts_dir: PathBuf,
+}
+
+impl RunCfg {
+    /// Sensible defaults for a quick run of (family, method).
+    pub fn quick(family: &str, method: &str, iters: u64) -> Self {
+        let lr0 = match method {
+            // SignSGD-family methods want small lr (Sec. 4.1 / appendix B).
+            "signsgd" | "psg" | "e2train" => 0.03,
+            _ => 0.1,
+        };
+        RunCfg {
+            family: family.to_string(),
+            method: method.to_string(),
+            iters,
+            seed: 0,
+            lr: LrSchedule::paper_default(lr0, iters),
+            data: DataCfg::default(),
+            smd: SmdCfg { enabled: matches!(method, "e2train"), p: 0.5 },
+            sd: SdCfg::default(),
+            eval_every: 0,
+            swa: matches!(method, "psg" | "e2train"),
+            alpha: 1.0,
+            beta: 0.05,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.artifacts_dir
+            .join(&self.family)
+            .join(format!("{}.json", self.method))
+    }
+
+    // ---------------- JSON (de)serialization ----------------
+
+    pub fn to_json(&self) -> Json {
+        let lr = match &self.lr {
+            LrSchedule::Constant { lr0 } => Json::obj(vec![
+                ("kind", Json::str("constant")),
+                ("lr0", Json::num(*lr0)),
+            ]),
+            LrSchedule::Step { lr0, decay, boundaries } => Json::obj(vec![
+                ("kind", Json::str("step")),
+                ("lr0", Json::num(*lr0)),
+                ("decay", Json::num(*decay)),
+                (
+                    "boundaries",
+                    Json::arr(boundaries.iter().map(|&b| Json::num(b as f64))),
+                ),
+            ]),
+        };
+        let data = match &self.data {
+            DataCfg::Synthetic { classes, n_train, n_test, seed } => Json::obj(vec![
+                ("kind", Json::str("synthetic")),
+                ("classes", Json::num(*classes as f64)),
+                ("n_train", Json::num(*n_train as f64)),
+                ("n_test", Json::num(*n_test as f64)),
+                ("seed", Json::num(*seed as f64)),
+            ]),
+            DataCfg::CifarBin { dir } => Json::obj(vec![
+                ("kind", Json::str("cifar_bin")),
+                ("dir", Json::str(dir.to_string_lossy())),
+            ]),
+        };
+        Json::obj(vec![
+            ("family", Json::str(&self.family)),
+            ("method", Json::str(&self.method)),
+            ("iters", Json::num(self.iters as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("lr", lr),
+            ("data", data),
+            (
+                "smd",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.smd.enabled)),
+                    ("p", Json::num(self.smd.p)),
+                ]),
+            ),
+            ("sd", Json::obj(vec![("p_l", Json::num(self.sd.p_l))])),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("swa", Json::Bool(self.swa)),
+            ("alpha", Json::num(self.alpha)),
+            ("beta", Json::num(self.beta)),
+            (
+                "artifacts_dir",
+                Json::str(self.artifacts_dir.to_string_lossy()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let family = v.req_str("family")?.to_string();
+        let method = v.req_str("method")?.to_string();
+        let iters = v.req_f64("iters")? as u64;
+        let mut cfg = RunCfg::quick(&family, &method, iters);
+        cfg.seed = v.get("seed").and_then(Json::as_u64).unwrap_or(0);
+        if let Some(lr) = v.get("lr") {
+            cfg.lr = match lr.req_str("kind")? {
+                "constant" => LrSchedule::Constant { lr0: lr.req_f64("lr0")? },
+                "step" => LrSchedule::Step {
+                    lr0: lr.req_f64("lr0")?,
+                    decay: lr.req_f64("decay")?,
+                    boundaries: lr
+                        .req_arr("boundaries")?
+                        .iter()
+                        .filter_map(Json::as_u64)
+                        .collect(),
+                },
+                other => return Err(anyhow!("unknown lr kind {other}")),
+            };
+        }
+        if let Some(d) = v.get("data") {
+            cfg.data = match d.req_str("kind")? {
+                "synthetic" => DataCfg::Synthetic {
+                    classes: d.req_f64("classes")? as usize,
+                    n_train: d.req_f64("n_train")? as usize,
+                    n_test: d.req_f64("n_test")? as usize,
+                    seed: d.get("seed").and_then(Json::as_u64).unwrap_or(0),
+                },
+                "cifar_bin" => DataCfg::CifarBin {
+                    dir: PathBuf::from(d.req_str("dir")?),
+                },
+                other => return Err(anyhow!("unknown data kind {other}")),
+            };
+        }
+        if let Some(s) = v.get("smd") {
+            cfg.smd = SmdCfg {
+                enabled: s.get("enabled").and_then(Json::as_bool).unwrap_or(false),
+                p: s.get("p").and_then(Json::as_f64).unwrap_or(0.5),
+            };
+        }
+        if let Some(s) = v.get("sd") {
+            cfg.sd = SdCfg { p_l: s.get("p_l").and_then(Json::as_f64).unwrap_or(0.5) };
+        }
+        cfg.eval_every = v.get("eval_every").and_then(Json::as_u64).unwrap_or(0);
+        cfg.swa = v.get("swa").and_then(Json::as_bool).unwrap_or(cfg.swa);
+        cfg.alpha = v.get("alpha").and_then(Json::as_f64).unwrap_or(1.0);
+        cfg.beta = v.get("beta").and_then(Json::as_f64).unwrap_or(0.05);
+        if let Some(d) = v.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = PathBuf::from(d);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json(&parse(&text)?)
+            .with_context(|| format!("parsing run config {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = RunCfg::quick("resnet8-c10-tiny", "e2train", 100);
+        cfg.alpha = 2.5;
+        cfg.eval_every = 10;
+        let dir = TempDir::new().unwrap();
+        let p = dir.path().join("run.json");
+        cfg.save(&p).unwrap();
+        let back = RunCfg::load(&p).unwrap();
+        assert_eq!(back.family, cfg.family);
+        assert_eq!(back.method, "e2train");
+        assert!(back.smd.enabled);
+        assert!(back.swa);
+        assert_eq!(back.alpha, 2.5);
+        assert_eq!(back.eval_every, 10);
+        assert_eq!(back.lr, cfg.lr);
+    }
+
+    #[test]
+    fn quick_lr_defaults() {
+        assert_eq!(RunCfg::quick("f", "sgd32", 10).lr.at(0), 0.1);
+        assert_eq!(RunCfg::quick("f", "psg", 10).lr.at(0), 0.03);
+    }
+
+    #[test]
+    fn manifest_path_layout() {
+        let cfg = RunCfg::quick("fam", "slu", 1);
+        assert_eq!(cfg.manifest_path(), PathBuf::from("artifacts/fam/slu.json"));
+    }
+
+    #[test]
+    fn cifar_data_roundtrip() {
+        let mut cfg = RunCfg::quick("f", "sgd32", 5);
+        cfg.data = DataCfg::CifarBin { dir: PathBuf::from("/data/cifar") };
+        let v = cfg.to_json();
+        let back = RunCfg::from_json(&v).unwrap();
+        match back.data {
+            DataCfg::CifarBin { dir } => assert_eq!(dir, PathBuf::from("/data/cifar")),
+            _ => panic!("wrong data kind"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod launcher_tests {
+    use super::*;
+
+    /// Every shipped launcher file in configs/ must parse.
+    #[test]
+    fn shipped_launchers_parse() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+        let mut seen = 0;
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let p = entry.unwrap().path();
+            if p.extension().map(|e| e == "json").unwrap_or(false) {
+                let cfg = RunCfg::load(&p).unwrap();
+                assert!(cfg.iters > 0, "{}", p.display());
+                seen += 1;
+            }
+        }
+        assert!(seen >= 3, "expected shipped launcher configs, found {seen}");
+    }
+}

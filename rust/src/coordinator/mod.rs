@@ -1,0 +1,20 @@
+//! Layer-3 coordinator — the paper's training *system*.
+//!
+//! * [`smd`] — stochastic mini-batch dropping (data level, Sec. 3.1)
+//! * [`sd`] — stochastic-depth baseline scheduler [66] (Sec. 4.3)
+//! * [`trainer`] — the orchestrated step loop: sampling, SMD, SD masks,
+//!   AOT step execution, SWA, energy charging, eval, metrics.
+//!
+//! SLU and PSG live inside the AOT artifacts (the gates and the
+//! psg_select kernel are part of the lowered train step); the coordinator
+//! consumes their per-step telemetry (`gate_fracs`, `psg_frac`) to charge
+//! the energy ledger — mirroring how the paper's FPGA measurements
+//! attribute savings.
+
+pub mod sd;
+pub mod smd;
+pub mod trainer;
+
+pub use sd::SdScheduler;
+pub use smd::SmdScheduler;
+pub use trainer::{RunOutcome, Trainer};

@@ -1,0 +1,95 @@
+//! Stochastic depth baseline [66] — the "random version of SLU" the
+//! paper compares against (Sec. 4.3).
+//!
+//! Per mini-batch, each gateable block survives with a probability that
+//! decays linearly with depth from 1.0 to `p_l`; a dropped block is
+//! skipped in both passes (the coordinator feeds the sampled mask into
+//! the `sd` artifact's `mask` input).  `calibrated(target)` solves for
+//! the p_l giving a requested mean drop ratio, which is how the paper
+//! matches SD's dropping ratio to SLU's for a fair comparison.
+
+use crate::util::Rng;
+
+pub struct SdScheduler {
+    rng: Rng,
+    survival: Vec<f64>,
+}
+
+impl SdScheduler {
+    /// Linear-decay survival over `num_blocks` gateable blocks.
+    pub fn new(num_blocks: usize, p_l: f64, seed: u64) -> Self {
+        let survival = (0..num_blocks)
+            .map(|i| {
+                let frac = (i + 1) as f64 / num_blocks.max(1) as f64;
+                1.0 - frac * (1.0 - p_l)
+            })
+            .collect();
+        Self { rng: Rng::seed_from_u64(seed), survival }
+    }
+
+    /// p_l such that the *mean* survival equals `mean_active` — matches
+    /// SD's drop ratio to a measured SLU skipping ratio.
+    pub fn calibrated(num_blocks: usize, mean_active: f64, seed: u64) -> Self {
+        // mean survival of linear decay = 1 - (1-p_l)*(n+1)/(2n)
+        let n = num_blocks.max(1) as f64;
+        let p_l = 1.0 - (1.0 - mean_active) * 2.0 * n / (n + 1.0);
+        Self::new(num_blocks, p_l.clamp(0.0, 1.0), seed)
+    }
+
+    /// Sample a per-block {0,1} mask for one mini-batch.
+    pub fn sample(&mut self) -> Vec<f32> {
+        self.survival
+            .iter()
+            .map(|&p| if self.rng.bool(p) { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    pub fn mean_survival(&self) -> f64 {
+        self.survival.iter().sum::<f64>() / self.survival.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_decay_shape() {
+        let s = SdScheduler::new(4, 0.5, 0);
+        assert!((s.survival[0] - 0.875).abs() < 1e-12);
+        assert!((s.survival[3] - 0.5).abs() < 1e-12);
+        assert!(s.survival.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn sample_respects_probabilities() {
+        let mut s = SdScheduler::new(3, 0.2, 11);
+        let mut counts = [0f64; 3];
+        let trials = 20_000;
+        for _ in 0..trials {
+            for (c, v) in counts.iter_mut().zip(s.sample()) {
+                *c += v as f64;
+            }
+        }
+        for (i, c) in counts.iter().enumerate() {
+            let emp = c / trials as f64;
+            assert!((emp - s.survival[i]).abs() < 0.02, "block {i}: {emp}");
+        }
+    }
+
+    #[test]
+    fn calibration_hits_target() {
+        // Feasible targets: mean survival of a clamped linear decay is at
+        // least (n-1)/(2n), so targets must sit above that floor.
+        for target in [0.5, 0.6, 0.8, 0.95] {
+            let s = SdScheduler::calibrated(9, target, 0);
+            assert!((s.mean_survival() - target).abs() < 1e-9, "{target}");
+        }
+    }
+
+    #[test]
+    fn calibration_clamps() {
+        let s = SdScheduler::calibrated(3, 0.05, 0);
+        assert!(s.survival.iter().all(|p| (0.0..=1.0).contains(p)));
+    }
+}

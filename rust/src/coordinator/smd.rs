@@ -1,0 +1,95 @@
+//! Stochastic mini-batch dropping (Sec. 3.1) — the data-level knob.
+//!
+//! At each iteration the scheduler decides, with probability `p`
+//! (default 0.5), to skip the mini-batch entirely: no forward, no
+//! backward, no energy.  All other protocol (LR schedule indexed by the
+//! *iteration counter*, not by executed steps) is unchanged, exactly as
+//! the paper specifies.
+
+use crate::util::Rng;
+
+pub struct SmdScheduler {
+    rng: Rng,
+    pub p: f64,
+    pub enabled: bool,
+    skipped: u64,
+    seen: u64,
+}
+
+impl SmdScheduler {
+    pub fn new(enabled: bool, p: f64, seed: u64) -> Self {
+        Self { rng: Rng::seed_from_u64(seed), p, enabled, skipped: 0, seen: 0 }
+    }
+
+    /// Should this iteration's mini-batch be dropped?
+    pub fn skip(&mut self) -> bool {
+        self.seen += 1;
+        if !self.enabled {
+            return false;
+        }
+        let s = self.rng.bool(self.p);
+        if s {
+            self.skipped += 1;
+        }
+        s
+    }
+
+    /// Fraction of iterations dropped so far.
+    pub fn observed_drop_rate(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.skipped as f64 / self.seen as f64
+        }
+    }
+
+    /// Expected energy ratio vs. running every iteration: SMD with drop
+    /// probability p for T iters consumes (1-p)·T steps of energy.
+    pub fn expected_energy_ratio(&self) -> f64 {
+        if self.enabled {
+            1.0 - self.p
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_never_skips() {
+        let mut s = SmdScheduler::new(false, 0.5, 0);
+        assert!((0..100).all(|_| !s.skip()));
+        assert_eq!(s.observed_drop_rate(), 0.0);
+    }
+
+    #[test]
+    fn drop_rate_approaches_p() {
+        let mut s = SmdScheduler::new(true, 0.5, 42);
+        for _ in 0..10_000 {
+            s.skip();
+        }
+        assert!((s.observed_drop_rate() - 0.5).abs() < 0.02);
+        assert_eq!(s.expected_energy_ratio(), 0.5);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = SmdScheduler::new(true, 0.5, 7);
+        let mut b = SmdScheduler::new(true, 0.5, 7);
+        let va: Vec<bool> = (0..64).map(|_| a.skip()).collect();
+        let vb: Vec<bool> = (0..64).map(|_| b.skip()).collect();
+        assert_eq!(va, vb);
+    }
+
+    #[test]
+    fn arbitrary_p() {
+        let mut s = SmdScheduler::new(true, 0.25, 3);
+        for _ in 0..20_000 {
+            s.skip();
+        }
+        assert!((s.observed_drop_rate() - 0.25).abs() < 0.02);
+    }
+}

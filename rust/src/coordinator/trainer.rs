@@ -1,0 +1,245 @@
+//! The training orchestrator: one `Trainer` owns a run end-to-end —
+//! artifact loading, state init, data pipeline, the step loop with
+//! SMD/SD/SWA hooks, per-step energy charging, eval, and metrics.
+//!
+//! Everything here is rust; the only compute delegated outwards is the
+//! AOT train/eval executable (PJRT CPU).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{DataCfg, RunCfg};
+use crate::data::{cifar, synthetic, AugmentCfg, Dataset, Sampler};
+use crate::energy::{EnergyLedger, EnergyModel};
+use crate::metrics::{Mean, RunMetrics};
+use crate::optim::SwaState;
+use crate::runtime::{Engine, HostTensor, ModelState, StepHyper, TrainProgram};
+
+use super::sd::SdScheduler;
+use super::smd::SmdScheduler;
+
+/// Outcome of a full run (metrics + the final state for reuse, e.g. the
+/// fine-tuning experiment).
+pub struct RunOutcome {
+    pub metrics: RunMetrics,
+    pub state: ModelState,
+    pub ledger: EnergyLedger,
+}
+
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    pub cfg: RunCfg,
+    pub program: TrainProgram,
+    pub energy: EnergyModel,
+    train_set: Dataset,
+    test_set: Dataset,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: RunCfg) -> Result<Self> {
+        let program = TrainProgram::load(engine, &cfg.manifest_path())?;
+        let energy = EnergyModel::from_manifest(&program.manifest);
+        let (train_set, test_set) = Self::load_data(&cfg, &program)?;
+        Ok(Self { engine, cfg, program, energy, train_set, test_set })
+    }
+
+    fn load_data(cfg: &RunCfg, program: &TrainProgram) -> Result<(Dataset, Dataset)> {
+        let hw = program.manifest.arch.image_size;
+        let classes = program.manifest.arch.num_classes;
+        match &cfg.data {
+            DataCfg::Synthetic { classes: c, n_train, n_test, seed } => {
+                if *c != classes {
+                    return Err(anyhow!(
+                        "config classes {} != artifact classes {}",
+                        c,
+                        classes
+                    ));
+                }
+                Ok(synthetic::generate_split(
+                    classes, *n_train, *n_test, hw, *seed,
+                ))
+            }
+            DataCfg::CifarBin { dir } => {
+                if hw != 32 || classes != 10 {
+                    return Err(anyhow!("CIFAR binaries need a 32px/10-class artifact"));
+                }
+                Ok((cifar::load(dir, true)?, cifar::load(dir, false)?))
+            }
+        }
+    }
+
+    /// Replace the datasets (fine-tuning experiment, Sec. 4.5).
+    pub fn set_data(&mut self, train: Dataset, test: Dataset) {
+        self.train_set = train;
+        self.test_set = test;
+    }
+
+    /// Run the configured number of iterations starting from a fresh
+    /// init (or from `from_state` when resuming / fine-tuning).
+    pub fn run(&mut self, from_state: Option<ModelState>) -> Result<RunOutcome> {
+        let t0 = Instant::now();
+        let m = &self.program.manifest;
+        let mut state = match from_state {
+            // Name-based migration handles method changes (e.g. resuming
+            // a sgd32-pretrained trunk under e2train, which adds gates).
+            Some(s) => ModelState::init_from(m, self.cfg.seed, &s),
+            None => ModelState::init(m, self.cfg.seed),
+        };
+        let mut sampler = Sampler::new(
+            self.train_set.n,
+            self.program.batch(),
+            AugmentCfg::default(),
+            self.cfg.seed ^ 0xda7a,
+        );
+        let mut smd =
+            SmdScheduler::new(self.cfg.smd.enabled, self.cfg.smd.p, self.cfg.seed ^ 0x50d);
+        let num_gated = m.num_gated();
+        let mut sd = SdScheduler::new(num_gated, self.cfg.sd.p_l, self.cfg.seed ^ 0x5d);
+        let needs_mask = m.method.gating == "mask";
+
+        let mut swa = SwaState::new(self.cfg.iters / 2, (self.cfg.iters / 20).max(1));
+        let mut swa_model: Option<ModelState> = None;
+
+        let mut ledger = EnergyLedger::default();
+        let mut metrics = RunMetrics::default();
+        let mut gate_means: Vec<Mean> = vec![Mean::default(); num_gated];
+        let mut psg_mean = Mean::default();
+        let record_every = (self.cfg.iters / 50).max(1);
+
+        for iter in 0..self.cfg.iters {
+            let lr = self.cfg.lr.at(iter) as f32;
+            if smd.skip() {
+                // SMD: the batch is consumed (sampling with limited
+                // replacement, Sec. 3.1) but never executed or charged.
+                let _ = sampler.next_batch(&self.train_set);
+                ledger.skip();
+                continue;
+            }
+            let (x, y) = sampler.next_batch(&self.train_set);
+            let mask = if needs_mask { Some(sd.sample()) } else { None };
+            let hp = StepHyper {
+                lr,
+                alpha: self.cfg.alpha as f32,
+                beta: self.cfg.beta as f32,
+            };
+            let sm = self.program.step(&mut state, &x, &y, hp, mask.as_deref())?;
+
+            // Energy: SD masks are per-batch gate fractions too.
+            let fracs: Vec<f64> = if !sm.gate_fracs.is_empty() {
+                sm.gate_fracs.clone()
+            } else if let Some(mk) = &mask {
+                mk.iter().map(|&v| v as f64).collect()
+            } else {
+                vec![]
+            };
+            let e = self.energy.train_step(&m.method, &fracs, sm.psg_frac);
+            ledger.charge(iter, &e, self.energy.step_macs(&fracs));
+
+            for (g, f) in gate_means.iter_mut().zip(fracs.iter()) {
+                g.push(*f);
+            }
+            if let Some(p) = sm.psg_frac {
+                psg_mean.push(p);
+            }
+
+            // SWA (enabled for PSG-family runs, Sec. 4.1).
+            if self.cfg.swa && swa.should_average(iter) {
+                let w = swa.observe();
+                match &mut swa_model {
+                    None => swa_model = Some(state.clone()),
+                    Some(sw) => {
+                        sw.average_params_from(&state, w, self.program.num_params)
+                    }
+                }
+            }
+
+            if iter % record_every == 0 || iter + 1 == self.cfg.iters {
+                let train_acc = sm.correct / self.program.batch() as f64;
+                let test_acc = if self.cfg.eval_every > 0
+                    && iter % self.cfg.eval_every == 0
+                {
+                    Some(self.evaluate(&state)?.0)
+                } else {
+                    None
+                };
+                metrics.record(iter, sm.loss, train_acc, ledger.total_joules(), test_acc);
+            }
+        }
+
+        // Final evaluation — SWA weights if averaging ran.
+        let final_state = swa_model.unwrap_or_else(|| state.clone());
+        let (acc, acc5, loss) = self.evaluate_full(&final_state)?;
+        metrics.final_test_acc = acc;
+        metrics.final_test_acc_top5 = acc5;
+        metrics.final_loss = loss;
+        metrics.total_joules = ledger.total_joules();
+        metrics.executed_macs = ledger.macs;
+        metrics.steps_run = ledger.steps_charged;
+        metrics.steps_skipped = ledger.steps_skipped;
+        metrics.wall_seconds = t0.elapsed().as_secs_f64();
+        metrics.mean_gate_fracs = gate_means.iter().map(|g| g.get()).collect();
+        metrics.mean_psg_frac =
+            if psg_mean.count() > 0 { Some(psg_mean.get()) } else { None };
+
+        eprintln!(
+            "[run] {}/{}: acc {:.4}, {:.2} J, {} steps ({} skipped), {:.1}s",
+            self.cfg.family,
+            self.cfg.method,
+            acc,
+            metrics.total_joules,
+            metrics.steps_run,
+            metrics.steps_skipped,
+            metrics.wall_seconds
+        );
+        Ok(RunOutcome { metrics, state: final_state, ledger })
+    }
+
+    fn evaluate(&self, state: &ModelState) -> Result<(f64, f64)> {
+        let (acc, acc5, _) = self.evaluate_full(state)?;
+        Ok((acc, acc5))
+    }
+
+    /// Accuracy over the full test set in eval_batch chunks.
+    pub fn evaluate_full(&self, state: &ModelState) -> Result<(f64, f64, f64)> {
+        let eb = self.program.eval_batch();
+        let hw = self.test_set.hw;
+        let stride = hw * hw * 3;
+        let mut correct = 0.0;
+        let mut correct5 = 0.0;
+        let mut loss = 0.0;
+        let mut total = 0usize;
+        let nb = self.test_set.n / eb;
+        for b in 0..nb.max(1).min(self.test_set.n / eb.min(self.test_set.n).max(1)) {
+            let lo = b * eb;
+            if lo + eb > self.test_set.n {
+                break;
+            }
+            let x = HostTensor::f32(
+                vec![eb, hw, hw, 3],
+                self.test_set.images[lo * stride..(lo + eb) * stride].to_vec(),
+            );
+            let y = HostTensor::i32(
+                vec![eb],
+                self.test_set.labels[lo..lo + eb].to_vec(),
+            );
+            let em = self.program.eval_batch_run(state, &x, &y)?;
+            correct += em.correct;
+            correct5 += em.correct5;
+            loss += em.loss * eb as f64;
+            total += eb;
+        }
+        if total == 0 {
+            return Err(anyhow!("test set smaller than eval batch"));
+        }
+        Ok((
+            correct / total as f64,
+            correct5 / total as f64,
+            loss / total as f64,
+        ))
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+}

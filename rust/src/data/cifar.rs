@@ -1,0 +1,97 @@
+//! Loader for the real CIFAR-10 binary format (`data_batch_*.bin`).
+//!
+//! Used automatically when `data/cifar-10-batches-bin` exists next to the
+//! workspace (the testbed is offline, so the synthetic generator is the
+//! default); each record is 1 label byte + 3072 CHW bytes.  Pixels are
+//! normalized with the CIFAR channel statistics as in [60].
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::Dataset;
+
+const REC: usize = 1 + 3072;
+const MEAN: [f32; 3] = [0.4914, 0.4822, 0.4465];
+const STD: [f32; 3] = [0.2470, 0.2435, 0.2616];
+
+/// Load all `data_batch_*.bin` (train) or `test_batch.bin` (test) records.
+pub fn load(dir: &Path, train: bool) -> Result<Dataset> {
+    let files: Vec<std::path::PathBuf> = if train {
+        (1..=5).map(|i| dir.join(format!("data_batch_{i}.bin"))).collect()
+    } else {
+        vec![dir.join("test_batch.bin")]
+    };
+    let mut images = Vec::new();
+    let mut labels = Vec::new();
+    for f in files {
+        if !f.exists() {
+            bail!("missing CIFAR file {}", f.display());
+        }
+        let bytes = std::fs::read(&f)?;
+        if bytes.len() % REC != 0 {
+            bail!("{}: size {} not a multiple of {}", f.display(), bytes.len(), REC);
+        }
+        for rec in bytes.chunks_exact(REC) {
+            labels.push(rec[0] as i32);
+            // CHW bytes -> normalized HWC f32
+            for y in 0..32 {
+                for x in 0..32 {
+                    for c in 0..3 {
+                        let v = rec[1 + c * 1024 + y * 32 + x] as f32 / 255.0;
+                        images.push((v - MEAN[c]) / STD[c]);
+                    }
+                }
+            }
+        }
+    }
+    let n = labels.len();
+    Ok(Dataset { images, labels, n, hw: 32, classes: 10 })
+}
+
+/// True when a usable CIFAR-10 binary directory is present.
+pub fn available(dir: &Path) -> bool {
+    dir.join("data_batch_1.bin").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+    use std::io::Write;
+
+    #[test]
+    fn parses_synthetic_records() {
+        let dir = TempDir::new().unwrap();
+        let mut bytes = Vec::new();
+        for i in 0..4u8 {
+            bytes.push(i % 10);
+            bytes.extend(std::iter::repeat(128u8).take(3072));
+        }
+        let mut f =
+            std::fs::File::create(dir.path().join("test_batch.bin")).unwrap();
+        f.write_all(&bytes).unwrap();
+        let d = load(dir.path(), false).unwrap();
+        assert_eq!(d.n, 4);
+        assert_eq!(d.hw, 32);
+        assert_eq!(d.labels, vec![0, 1, 2, 3]);
+        // 128/255 normalized with channel-0 stats
+        let expect = (128.0 / 255.0 - MEAN[0]) / STD[0];
+        assert!((d.images[0] - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_size() {
+        let dir = TempDir::new().unwrap();
+        std::fs::write(dir.path().join("test_batch.bin"), [0u8; 100]).unwrap();
+        assert!(load(dir.path(), false).is_err());
+    }
+
+    #[test]
+    fn availability_probe() {
+        let dir = TempDir::new().unwrap();
+        assert!(!available(dir.path()));
+        std::fs::write(dir.path().join("data_batch_1.bin"), [0u8; REC]).unwrap();
+        assert!(available(dir.path()));
+    }
+}

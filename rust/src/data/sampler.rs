@@ -1,0 +1,188 @@
+//! Mini-batch sampling: per-epoch permutations (the standard
+//! without-replacement protocol the paper's SMD analysis contrasts with)
+//! plus standard CIFAR augmentation (4-px pad + random crop, horizontal
+//! flip) applied on the fly in rust — never in the HLO.
+
+use crate::runtime::HostTensor;
+use crate::util::Rng;
+
+use super::Dataset;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AugmentCfg {
+    pub pad: usize,
+    pub flip: bool,
+    pub enabled: bool,
+}
+
+impl Default for AugmentCfg {
+    fn default() -> Self {
+        Self { pad: 4, flip: true, enabled: true }
+    }
+}
+
+/// Deterministic batch sampler over a dataset.
+pub struct Sampler {
+    rng: Rng,
+    perm: Vec<usize>,
+    cursor: usize,
+    pub epoch: u64,
+    batch: usize,
+    augment: AugmentCfg,
+}
+
+impl Sampler {
+    pub fn new(dataset_len: usize, batch: usize, augment: AugmentCfg, seed: u64) -> Self {
+        let mut s = Self {
+            rng: Rng::seed_from_u64(seed),
+            perm: (0..dataset_len).collect(),
+            cursor: 0,
+            epoch: 0,
+            batch,
+            augment,
+        };
+        s.shuffle();
+        s
+    }
+
+    fn shuffle(&mut self) {
+        let mut rng = self.rng.clone();
+        rng.shuffle(&mut self.perm);
+        self.rng = rng;
+        self.cursor = 0;
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.perm.len() / self.batch
+    }
+
+    /// Next batch of (x, y) host tensors; reshuffles between epochs.
+    pub fn next_batch(&mut self, data: &Dataset) -> (HostTensor, HostTensor) {
+        if self.cursor + self.batch > self.perm.len() {
+            self.epoch += 1;
+            self.shuffle();
+        }
+        let hw = data.hw;
+        let stride = hw * hw * 3;
+        let mut x = vec![0f32; self.batch * stride];
+        let mut y = vec![0i32; self.batch];
+        for b in 0..self.batch {
+            let idx = self.perm[self.cursor + b];
+            y[b] = data.labels[idx];
+            let src = &data.images[idx * stride..(idx + 1) * stride];
+            let dst = &mut x[b * stride..(b + 1) * stride];
+            if self.augment.enabled {
+                let pad = self.augment.pad as isize;
+                let dy = self.rng.offset(pad);
+                let dx = self.rng.offset(pad);
+                let flip = self.augment.flip && self.rng.bool(0.5);
+                crop_flip(src, dst, hw, dy, dx, flip);
+            } else {
+                dst.copy_from_slice(src);
+            }
+        }
+        self.cursor += self.batch;
+        (
+            HostTensor::f32(vec![self.batch, hw, hw, 3], x),
+            HostTensor::i32(vec![self.batch], y),
+        )
+    }
+}
+
+/// Shift-crop with zero padding + optional horizontal flip (HWC layout).
+fn crop_flip(src: &[f32], dst: &mut [f32], hw: usize, dy: isize, dx: isize, flip: bool) {
+    for yy in 0..hw {
+        for xx in 0..hw {
+            let sy = yy as isize + dy;
+            let sx_raw = xx as isize + dx;
+            let sx = if flip { hw as isize - 1 - sx_raw } else { sx_raw };
+            let d = (yy * hw + xx) * 3;
+            if sy >= 0 && sy < hw as isize && sx >= 0 && sx < hw as isize {
+                let s = (sy as usize * hw + sx as usize) * 3;
+                dst[d..d + 3].copy_from_slice(&src[s..s + 3]);
+            } else {
+                dst[d..d + 3].fill(0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn batches_cover_epoch_without_replacement() {
+        let d = synthetic::generate(10, 64, 8, 0);
+        let mut s = Sampler::new(
+            d.n,
+            16,
+            AugmentCfg { enabled: false, ..Default::default() },
+            1,
+        );
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4 {
+            let (_, y) = s.next_batch(&d);
+            for v in y_as_vec(&y) {
+                seen.insert(v);
+            }
+        }
+        // 64 samples / 10 classes: all classes seen in one epoch.
+        assert_eq!(seen.len(), 10);
+        assert_eq!(s.epoch, 0);
+        let _ = s.next_batch(&d);
+        assert_eq!(s.epoch, 1);
+    }
+
+    fn y_as_vec(t: &HostTensor) -> Vec<i32> {
+        match &t.data {
+            crate::runtime::TensorData::I32(v) => v.clone(),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn augmentation_changes_pixels_not_labels() {
+        let d = synthetic::generate(10, 32, 8, 0);
+        let mut s1 = Sampler::new(d.n, 32, AugmentCfg::default(), 3);
+        let mut s2 = Sampler::new(
+            d.n,
+            32,
+            AugmentCfg { enabled: false, ..Default::default() },
+            3,
+        );
+        let (x1, y1) = s1.next_batch(&d);
+        let (x2, y2) = s2.next_batch(&d);
+        assert_eq!(y_as_vec(&y1), y_as_vec(&y2));
+        assert_ne!(x1.as_f32().unwrap(), x2.as_f32().unwrap());
+    }
+
+    #[test]
+    fn crop_zero_shift_is_identity() {
+        let src: Vec<f32> = (0..4 * 4 * 3).map(|i| i as f32).collect();
+        let mut dst = vec![0f32; src.len()];
+        crop_flip(&src, &mut dst, 4, 0, 0, false);
+        assert_eq!(src, dst);
+    }
+
+    #[test]
+    fn flip_reverses_rows() {
+        let src: Vec<f32> = (0..2 * 2 * 3).map(|i| i as f32).collect();
+        let mut dst = vec![0f32; src.len()];
+        crop_flip(&src, &mut dst, 2, 0, 0, true);
+        // pixel (0,0) <- (0,1)
+        assert_eq!(dst[0..3], src[3..6]);
+        assert_eq!(dst[3..6], src[0..3]);
+    }
+
+    #[test]
+    fn determinism_by_seed() {
+        let d = synthetic::generate(10, 64, 8, 0);
+        let mut a = Sampler::new(d.n, 8, AugmentCfg::default(), 9);
+        let mut b = Sampler::new(d.n, 8, AugmentCfg::default(), 9);
+        let (xa, _) = a.next_batch(&d);
+        let (xb, _) = b.next_batch(&d);
+        assert_eq!(xa.as_f32().unwrap(), xb.as_f32().unwrap());
+    }
+}

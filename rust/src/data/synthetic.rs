@@ -1,0 +1,257 @@
+//! Procedural CIFAR-like dataset (DESIGN.md §Substitutions).
+//!
+//! The testbed has no network access, so CIFAR-10/100 is replaced by a
+//! class-conditional texture generator: every class owns a small set of
+//! oriented sinusoidal gratings (frequency, orientation, phase), a color
+//! tint, and a blob layout; samples draw per-instance jitter + pixel
+//! noise.  The task is learnable but non-trivial (a linear probe gets it
+//! badly wrong; a small CNN separates classes well) — exactly what's
+//! needed to preserve the *ordering* between training methods that the
+//! paper's tables report.
+
+use crate::util::Rng;
+
+use super::Dataset;
+
+/// Per-class texture recipe, derived deterministically from (seed, class).
+struct ClassProto {
+    freqs: [f32; 2],
+    thetas: [f32; 2],
+    tint: [f32; 3],
+    blob_xy: (f32, f32),
+    blob_sigma: f32,
+}
+
+impl ClassProto {
+    fn new(seed: u64, class: usize) -> Self {
+        let mut rng = Rng::seed_from_u64(
+            seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(class as u64 + 1),
+        );
+        Self {
+            freqs: [rng.range_f32(1.5, 5.0), rng.range_f32(2.0, 7.0)],
+            thetas: [
+                rng.range_f32(0.0, std::f32::consts::PI),
+                rng.range_f32(0.0, std::f32::consts::PI),
+            ],
+            tint: [
+                rng.range_f32(-0.6, 0.6),
+                rng.range_f32(-0.6, 0.6),
+                rng.range_f32(-0.6, 0.6),
+            ],
+            blob_xy: (rng.range_f32(0.2, 0.8), rng.range_f32(0.2, 0.8)),
+            blob_sigma: rng.range_f32(0.12, 0.3),
+        }
+    }
+}
+
+/// Generate `n` samples of `classes` classes at `hw` x `hw` x 3, balanced
+/// across classes, shuffled, values roughly zero-mean unit-ish variance
+/// (the normalization the paper applies to CIFAR [60] is baked in).
+///
+/// `seed` fixes the *class prototypes* (the task); use [`generate_split`]
+/// to draw disjoint train/test sample streams from the same task.
+pub fn generate(classes: usize, n: usize, hw: usize, seed: u64) -> Dataset {
+    generate_stream(classes, n, hw, seed, 0)
+}
+
+/// Same task (prototypes from `seed`), different per-sample noise stream.
+/// Train and test sets MUST share `seed` and differ in `stream` — the
+/// class definitions live in the prototypes.
+pub fn generate_stream(
+    classes: usize,
+    n: usize,
+    hw: usize,
+    seed: u64,
+    stream: u64,
+) -> Dataset {
+    let mut rng = Rng::seed_from_u64(seed ^ stream.wrapping_mul(0xA24B_AED4_963E_E407));
+    let protos: Vec<ClassProto> =
+        (0..classes).map(|c| ClassProto::new(seed, c)).collect();
+
+    let mut images = vec![0f32; n * hw * hw * 3];
+    let mut labels = vec![0i32; n];
+    for i in 0..n {
+        let c = i % classes;
+        labels[i] = c as i32;
+        let p = &protos[c];
+        // per-sample jitter
+        let phase: [f32; 2] = [rng.range_f32(0.0, 6.283), rng.range_f32(0.0, 6.283)];
+        let freq_j: f32 = rng.range_f32(0.9, 1.1);
+        let theta_j: f32 = rng.range_f32(-0.12, 0.12);
+        let bx = p.blob_xy.0 + rng.range_f32(-0.08, 0.08);
+        let by = p.blob_xy.1 + rng.range_f32(-0.08, 0.08);
+        let amp: f32 = rng.range_f32(0.7, 1.3);
+
+        let base = i * hw * hw * 3;
+        for yy in 0..hw {
+            for xx in 0..hw {
+                let u = xx as f32 / hw as f32;
+                let v = yy as f32 / hw as f32;
+                let mut g = 0.0f32;
+                for k in 0..2 {
+                    let th = p.thetas[k] + theta_j;
+                    let f = p.freqs[k] * freq_j;
+                    let proj = u * th.cos() + v * th.sin();
+                    g += (proj * f * std::f32::consts::TAU + phase[k]).sin();
+                }
+                let d2 = (u - bx).powi(2) + (v - by).powi(2);
+                let blob = (-d2 / (2.0 * p.blob_sigma * p.blob_sigma)).exp();
+                let tex = amp * (0.5 * g + blob);
+                let px = base + (yy * hw + xx) * 3;
+                for ch in 0..3 {
+                    // Heavy pixel noise + weak class signal keep the task
+                    // non-saturating at the testbed's training budgets, so
+                    // method orderings (SMD vs SMB etc.) stay measurable.
+                    let noise: f32 = rng.range_f32(-1.0, 1.0);
+                    images[px + ch] =
+                        0.28 * tex * (1.0 + p.tint[ch]) + p.tint[ch] * 0.12 + 0.75 * noise;
+                }
+            }
+        }
+    }
+
+    // Shuffle (Fisher-Yates) so class order carries no information.
+    let img_stride = hw * hw * 3;
+    for i in (1..n).rev() {
+        let j = rng.below(i + 1);
+        labels.swap(i, j);
+        if i != j {
+            let (a, b) = (i * img_stride, j * img_stride);
+            for k in 0..img_stride {
+                images.swap(a + k, b + k);
+            }
+        }
+    }
+
+    Dataset { images, labels, n, hw, classes }
+}
+
+/// (train, test) drawn from the same class prototypes, disjoint noise.
+pub fn generate_split(
+    classes: usize,
+    n_train: usize,
+    n_test: usize,
+    hw: usize,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    (
+        generate_stream(classes, n_train, hw, seed, 1),
+        generate_stream(classes, n_test, hw, seed, 2),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_and_deterministic() {
+        let d1 = generate(10, 200, 8, 42);
+        let d2 = generate(10, 200, 8, 42);
+        assert_eq!(d1.images, d2.images);
+        assert_eq!(d1.labels, d2.labels);
+        for c in 0..10 {
+            assert_eq!(d1.labels.iter().filter(|&&l| l == c).count(), 20);
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let d1 = generate(10, 50, 8, 1);
+        let d2 = generate(10, 50, 8, 2);
+        assert_ne!(d1.images, d2.images);
+    }
+
+    #[test]
+    fn split_shares_task_but_not_samples() {
+        let (tr, te) = generate_split(4, 200, 100, 8, 9);
+        assert_ne!(tr.images[..100], te.images[..100]);
+        // cross-set nearest-class-mean works: train means classify test.
+        let stride = 8 * 8 * 3;
+        let mut means = vec![vec![0f32; stride]; 4];
+        let mut counts = [0usize; 4];
+        for i in 0..tr.n {
+            let c = tr.labels[i] as usize;
+            counts[c] += 1;
+            for k in 0..stride {
+                means[c][k] += tr.images[i * stride + k];
+            }
+        }
+        for c in 0..4 {
+            for k in 0..stride {
+                means[c][k] /= counts[c].max(1) as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..te.n {
+            let mut best = (f32::MAX, 0usize);
+            for c in 0..4 {
+                let d: f32 = (0..stride)
+                    .map(|k| (te.images[i * stride + k] - means[c][k]).powi(2))
+                    .sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 == te.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f32 / te.n as f32;
+        assert!(acc > 0.5, "cross-set acc {acc} (chance 0.25)");
+    }
+
+    #[test]
+    fn pixel_statistics_reasonable() {
+        let d = generate(10, 100, 16, 3);
+        let mean: f32 = d.images.iter().sum::<f32>() / d.images.len() as f32;
+        let var: f32 = d
+            .images
+            .iter()
+            .map(|v| (v - mean).powi(2))
+            .sum::<f32>()
+            / d.images.len() as f32;
+        assert!(mean.abs() < 0.5, "mean {mean}");
+        assert!(var > 0.05 && var < 4.0, "var {var}");
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Nearest-class-mean in pixel space beats chance by a wide margin
+        // on held-out samples — the generator carries class signal.
+        let d = generate(4, 400, 8, 7);
+        let stride = 8 * 8 * 3;
+        let (train_n, test_n) = (300, 100);
+        let mut means = vec![vec![0f32; stride]; 4];
+        let mut counts = [0usize; 4];
+        for i in 0..train_n {
+            let c = d.labels[i] as usize;
+            counts[c] += 1;
+            for k in 0..stride {
+                means[c][k] += d.images[i * stride + k];
+            }
+        }
+        for c in 0..4 {
+            for k in 0..stride {
+                means[c][k] /= counts[c].max(1) as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in train_n..train_n + test_n {
+            let mut best = (f32::MAX, 0usize);
+            for c in 0..4 {
+                let dist: f32 = (0..stride)
+                    .map(|k| (d.images[i * stride + k] - means[c][k]).powi(2))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == d.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f32 / test_n as f32;
+        assert!(acc > 0.5, "nearest-mean acc {acc} (chance 0.25)");
+    }
+}

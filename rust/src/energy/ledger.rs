@@ -1,0 +1,80 @@
+//! Energy ledger: the per-run accumulator standing in for the paper's
+//! power meter.  The coordinator charges every executed step (SMD-dropped
+//! steps are never charged — that *is* the data-level saving) and the
+//! harness reads totals/savings at the end.
+
+use super::model::EnergyBreakdown;
+
+#[derive(Debug, Clone, Default)]
+pub struct EnergyLedger {
+    pub steps_charged: u64,
+    pub steps_skipped: u64,
+    pub breakdown: EnergyBreakdown,
+    /// MACs actually executed (for "Computational Savings" columns).
+    pub macs: f64,
+    /// Energy trace: cumulative joules at each recorded point (used by
+    /// the Fig. 5 convergence-vs-energy curves).
+    pub trace: Vec<(u64, f64)>,
+}
+
+impl EnergyLedger {
+    pub fn charge(&mut self, step: u64, e: &EnergyBreakdown, macs: f64) {
+        self.steps_charged += 1;
+        self.breakdown.add(e);
+        self.macs += macs;
+        self.trace.push((step, self.total_joules()));
+    }
+
+    pub fn skip(&mut self) {
+        self.steps_skipped += 1;
+    }
+
+    pub fn total_joules(&self) -> f64 {
+        self.breakdown.total() * 1e-12 // table is in picojoules
+    }
+
+    /// Energy saving vs. a reference ledger (e.g. the fp32 SMB baseline).
+    pub fn saving_vs(&self, baseline: &EnergyLedger) -> f64 {
+        1.0 - self.total_joules() / baseline.total_joules()
+    }
+
+    pub fn computational_saving_vs(&self, baseline: &EnergyLedger) -> f64 {
+        1.0 - self.macs / baseline.macs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one() -> EnergyBreakdown {
+        EnergyBreakdown { fwd_mac: 1e9, bwd_mac: 2e9, sram: 5e8, dram: 5e8, update: 1e8 }
+    }
+
+    #[test]
+    fn accumulates() {
+        let mut l = EnergyLedger::default();
+        l.charge(0, &one(), 100.0);
+        l.charge(1, &one(), 100.0);
+        l.skip();
+        assert_eq!(l.steps_charged, 2);
+        assert_eq!(l.steps_skipped, 1);
+        assert!((l.total_joules() - 2.0 * one().total() * 1e-12).abs() < 1e-15);
+        assert_eq!(l.macs, 200.0);
+        assert_eq!(l.trace.len(), 2);
+    }
+
+    #[test]
+    fn savings() {
+        let mut a = EnergyLedger::default();
+        let mut b = EnergyLedger::default();
+        for i in 0..10 {
+            b.charge(i, &one(), 10.0);
+        }
+        for i in 0..4 {
+            a.charge(i, &one(), 10.0);
+        }
+        assert!((a.saving_vs(&b) - 0.6).abs() < 1e-12);
+        assert!((a.computational_saving_vs(&b) - 0.6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Energy accounting — the substitute for the paper's FPGA + power-meter
+//! setup (Fig. 2).  See DESIGN.md §Substitutions for why savings *ratios*
+//! transfer: SMD/SLU/PSG savings are counting effects (fewer steps, fewer
+//! blocks, narrower datapaths), charged here with the Horowitz 45nm cost
+//! table the paper itself cites.
+
+pub mod ledger;
+pub mod model;
+pub mod table;
+
+pub use ledger::EnergyLedger;
+pub use model::{Bits, EnergyBreakdown, EnergyModel};
+pub use table::OpEnergies;

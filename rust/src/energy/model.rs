@@ -1,0 +1,402 @@
+//! The training-energy model — the substitute for the paper's FPGA +
+//! power-meter measurements (DESIGN.md §Substitutions).
+//!
+//! Energy of one training step = sum over blocks of
+//!
+//!   FWD:    macs * mac(Ba, Bw)     + SRAM traffic + DRAM traffic
+//!   BWD-x:  macs * mac(Bg, Bw)     (activation-gradient pass)
+//!   BWD-w:  macs * mac(Bg, Ba)     (weight-gradient pass), where PSG
+//!           replaces the confident fraction p with the 4x10-bit MSB
+//!           predictor MAC and the gradient word shrinks to 1 bit on the
+//!           update path,
+//!   UPD:    weight movement + elementwise update
+//!
+//! with SLU charging each gateable block by its measured per-batch active
+//! fraction (+ the tiny RNN-gate overhead), and SMD simply not charging
+//! skipped steps (the coordinator never runs them).
+//!
+//! All three of the paper's savings are *counting* effects (fewer steps,
+//! fewer blocks, narrower words), so savings ratios transfer even though
+//! absolute joules are a 45nm ASIC model rather than a Zynq-7000.
+
+use crate::runtime::{Manifest, MethodInfo};
+
+use super::table::OpEnergies;
+
+/// Static per-block cost sheet derived from a manifest.
+#[derive(Debug, Clone)]
+pub struct BlockCost {
+    pub name: String,
+    pub gateable: bool,
+    /// MACs per sample (manifest `flops`).
+    pub macs: f64,
+    /// Input activation elements per sample.
+    pub act_elems: f64,
+    /// Weight elements.
+    pub weight_elems: f64,
+}
+
+/// Joule breakdown of a charge (all values in joules).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBreakdown {
+    pub fwd_mac: f64,
+    pub bwd_mac: f64,
+    pub sram: f64,
+    pub dram: f64,
+    pub update: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.fwd_mac + self.bwd_mac + self.sram + self.dram + self.update
+    }
+
+    pub fn add(&mut self, o: &EnergyBreakdown) {
+        self.fwd_mac += o.fwd_mac;
+        self.bwd_mac += o.bwd_mac;
+        self.sram += o.sram;
+        self.dram += o.dram;
+        self.update += o.update;
+    }
+}
+
+/// Datapath widths of one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct Bits {
+    pub act: u32,
+    pub weight: u32,
+    pub grad: u32,
+}
+
+impl Bits {
+    pub fn fp32() -> Self {
+        Self { act: 32, weight: 32, grad: 32 }
+    }
+
+    pub fn from_method(m: &MethodInfo) -> Self {
+        // qbits_act covers activations and weights (Sec. 4.4: "8-bit
+        // precision for the activations/weights and 16-bit for the
+        // gradients").
+        Self {
+            act: m.qbits_act.unwrap_or(32),
+            weight: m.qbits_act.unwrap_or(32),
+            grad: m.qbits_grad.unwrap_or(32),
+        }
+    }
+}
+
+/// SRAM accesses per MAC in a blocked/systolic schedule: one operand
+/// fetch amortized by reuse + partial-sum traffic.  The constant is the
+/// Eyeriss-class row-stationary estimate (~1 word per MAC).
+const SRAM_WORDS_PER_MAC: f64 = 1.0;
+
+/// DRAM reuse multiplier: each unique tensor word crosses DRAM ~twice
+/// per pass (read + spill of intermediates) on a small-buffer device.
+const DRAM_TRAFFIC_FACTOR: f64 = 2.0;
+
+pub struct EnergyModel {
+    pub ops: OpEnergies,
+    pub blocks: Vec<BlockCost>,
+    pub head_macs: f64,
+    pub head_weight_elems: f64,
+    pub gate_macs: f64,
+    pub batch: f64,
+}
+
+impl EnergyModel {
+    /// Build the cost sheet from a manifest (parameter shapes give weight
+    /// element counts; block `flops` are per sample).
+    pub fn from_manifest(m: &Manifest) -> Self {
+        let shape_of = |pname: &str| -> f64 {
+            m.train_inputs
+                .iter()
+                .find(|s| s.name == pname)
+                .map(|s| s.elem_count() as f64)
+                .unwrap_or(0.0)
+        };
+        let blocks = m
+            .blocks
+            .iter()
+            .map(|b| BlockCost {
+                name: b.name.clone(),
+                gateable: b.gateable,
+                macs: b.flops as f64,
+                act_elems: (b.in_hw * b.in_hw * b.in_ch) as f64,
+                weight_elems: b.params.iter().map(|p| shape_of(p)).sum(),
+            })
+            .collect();
+        let head_weight_elems = shape_of("head.w") + shape_of("head.b");
+        EnergyModel {
+            ops: OpEnergies::default(),
+            blocks,
+            head_macs: m.head_flops as f64,
+            head_weight_elems,
+            gate_macs: m.gate_flops as f64,
+            batch: m.arch.batch as f64,
+        }
+    }
+
+    /// Energy of one block's training passes at `active` fraction
+    /// (0..=1, the mean gate activation across the batch).
+    fn block_step(
+        &self,
+        b: &BlockCost,
+        bits: Bits,
+        active: f64,
+        psg: Option<(u32, u32, f64)>, // (bits_x, bits_gy, predicted frac)
+        sign_update: bool,            // sign/psg: 1-bit gradient on the bus
+        fwd_only: bool,               // frozen trunk (head-only fine-tuning)
+    ) -> EnergyBreakdown {
+        let macs = b.macs * self.batch * active;
+        let mut e = EnergyBreakdown::default();
+
+        // --- MAC energy ---------------------------------------------------
+        e.fwd_mac = macs * self.ops.mac(bits.act, bits.weight);
+        let bwd_x = macs * self.ops.mac(bits.grad, bits.weight);
+        let bwd_w = match psg {
+            None => macs * self.ops.mac(bits.grad, bits.act),
+            Some((bx, bgy, p)) => {
+                // Confident fraction runs only the narrow predictor; the
+                // fallback fraction still needs the full-width contraction
+                // (the predictor is embedded in it, Sec. 3.3).
+                macs * (p * self.ops.mac(bx, bgy)
+                    + (1.0 - p) * self.ops.mac(bits.grad, bits.act))
+            }
+        };
+        e.bwd_mac = bwd_x + bwd_w;
+
+        // --- SRAM traffic (per-MAC, width-scaled) --------------------------
+        let fwd_width = bits.act.max(bits.weight);
+        let bwd_width = bits.grad;
+        e.sram = self.ops.sram(macs * SRAM_WORDS_PER_MAC, fwd_width)
+            + self.ops.sram(2.0 * macs * SRAM_WORDS_PER_MAC, bwd_width);
+
+        // --- DRAM traffic ---------------------------------------------------
+        // activations cross per sample and per pass (fwd, bwd-x, bwd-w);
+        // weights cross once per step per pass.
+        let act_words = b.act_elems * self.batch * active * DRAM_TRAFFIC_FACTOR;
+        let w_words = b.weight_elems * DRAM_TRAFFIC_FACTOR;
+        e.dram = self.ops.dram(act_words, bits.act)
+            + self.ops.dram(2.0 * act_words, bits.grad)
+            + self.ops.dram(3.0 * w_words, bits.weight);
+
+        // --- update: read w, read g, write w -------------------------------
+        // sign/PSG updates put one bit per weight on the bus (Sec. 3.3).
+        let gbits = if sign_update { 1 } else { bits.grad };
+        e.update = self.ops.dram(b.weight_elems, gbits)
+            + self.ops.dram(2.0 * b.weight_elems, 32)
+            + self.ops.mac(32, 32) * b.weight_elems / 8.0;
+        if fwd_only {
+            // Frozen trunk: forward inference only — no gradient passes,
+            // no gradient traffic, no update.
+            e.bwd_mac = 0.0;
+            e.update = 0.0;
+            e.sram = self.ops.sram(macs * SRAM_WORDS_PER_MAC, fwd_width);
+            e.dram = self.ops.dram(act_words, bits.act)
+                + self.ops.dram(w_words, bits.weight);
+        }
+        e
+    }
+
+    /// Full train-step energy for a method.
+    ///
+    /// `gate_fracs`: measured per-gated-block active fractions for this
+    /// step (empty = all blocks fully active).  `psg_frac`: measured
+    /// fraction of weight-gradient entries resolved by the MSB predictor.
+    pub fn train_step(
+        &self,
+        method: &MethodInfo,
+        gate_fracs: &[f64],
+        psg_frac: Option<f64>,
+    ) -> EnergyBreakdown {
+        let bits = Bits::from_method(method);
+        let psg = if method.update == "psg" {
+            Some((
+                method.psg_bits_x,
+                method.psg_bits_gy,
+                psg_frac.unwrap_or(0.6),
+            ))
+        } else {
+            None
+        };
+        let mut total = EnergyBreakdown::default();
+        let mut gi = 0;
+        for b in &self.blocks {
+            let active = if b.gateable && !gate_fracs.is_empty() {
+                let a = gate_fracs.get(gi).copied().unwrap_or(1.0);
+                gi += 1;
+                a
+            } else {
+                1.0
+            };
+            total.add(&self.block_step(
+                b,
+                bits,
+                active,
+                psg,
+                method.update != "sgd",
+                method.head_only,
+            ));
+        }
+        // Head (dense) — never gated.
+        total.add(&self.block_step(
+            &BlockCost {
+                name: "head".into(),
+                gateable: false,
+                macs: self.head_macs,
+                act_elems: 0.0,
+                weight_elems: self.head_weight_elems,
+            },
+            bits,
+            1.0,
+            psg,
+            method.update != "sgd",
+            false, // the head always trains (head-only FT trains *only* it)
+        ));
+        // RNN gate overhead (fp32, tiny — substantiates the 0.04% claim).
+        if !gate_fracs.is_empty() {
+            let gate_macs = self.gate_macs * self.batch;
+            total.fwd_mac += gate_macs * self.ops.mac(32, 32);
+            total.bwd_mac += 2.0 * gate_macs * self.ops.mac(32, 32);
+        }
+        total
+    }
+
+    /// Computational (MAC-count) cost of a step relative to a full dense
+    /// fp32 step — the "Computational Savings" columns of Tables 3/4
+    /// count MACs, not joules.
+    pub fn step_macs(&self, gate_fracs: &[f64]) -> f64 {
+        let mut total = 0.0;
+        let mut gi = 0;
+        for b in &self.blocks {
+            let active = if b.gateable && !gate_fracs.is_empty() {
+                let a = gate_fracs.get(gi).copied().unwrap_or(1.0);
+                gi += 1;
+                a
+            } else {
+                1.0
+            };
+            total += 3.0 * b.macs * self.batch * active;
+        }
+        total + 3.0 * self.head_macs * self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model() -> EnergyModel {
+        EnergyModel {
+            ops: OpEnergies::default(),
+            blocks: vec![
+                BlockCost {
+                    name: "stem".into(),
+                    gateable: false,
+                    macs: 1.0e6,
+                    act_elems: 3072.0,
+                    weight_elems: 432.0,
+                },
+                BlockCost {
+                    name: "b1".into(),
+                    gateable: true,
+                    macs: 4.0e6,
+                    act_elems: 4096.0,
+                    weight_elems: 4608.0,
+                },
+                BlockCost {
+                    name: "b2".into(),
+                    gateable: true,
+                    macs: 4.0e6,
+                    act_elems: 4096.0,
+                    weight_elems: 4608.0,
+                },
+            ],
+            head_macs: 640.0,
+            head_weight_elems: 650.0,
+            gate_macs: 1000.0,
+            batch: 32.0,
+        }
+    }
+
+    fn m(update: &str, qa: Option<u32>, qg: Option<u32>, gating: &str) -> MethodInfo {
+        MethodInfo {
+            name: "t".into(),
+            qbits_act: qa,
+            qbits_grad: qg,
+            update: update.into(),
+            gating: gating.into(),
+            alpha: 0.0,
+            beta: 0.05,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            psg_bits_x: 4,
+            psg_bits_gy: 10,
+            head_only: false,
+        }
+    }
+
+    #[test]
+    fn quantization_saves_energy() {
+        let em = toy_model();
+        let e32 = em.train_step(&m("sgd", None, None, "none"), &[], None).total();
+        let e8 = em
+            .train_step(&m("sgd", Some(8), Some(16), "none"), &[], None)
+            .total();
+        let saving = 1.0 - e8 / e32;
+        assert!(saving > 0.3 && saving < 0.9, "saving {saving}");
+    }
+
+    #[test]
+    fn psg_beats_plain_quantized() {
+        let em = toy_model();
+        let eq = em
+            .train_step(&m("sgd", Some(8), Some(16), "none"), &[], None)
+            .total();
+        let ep = em
+            .train_step(&m("psg", Some(8), Some(16), "none"), &[], Some(0.6))
+            .total();
+        assert!(ep < eq);
+    }
+
+    #[test]
+    fn psg_energy_monotone_in_predicted_fraction() {
+        let em = toy_model();
+        let meth = m("psg", Some(8), Some(16), "none");
+        let e_lo = em.train_step(&meth, &[], Some(0.2)).total();
+        let e_hi = em.train_step(&meth, &[], Some(0.9)).total();
+        assert!(e_hi < e_lo);
+    }
+
+    #[test]
+    fn gating_scales_block_energy() {
+        let em = toy_model();
+        let meth = m("sgd", None, None, "learned");
+        let full = em.train_step(&meth, &[1.0, 1.0], None).total();
+        let half = em.train_step(&meth, &[0.5, 0.5], None).total();
+        let none = em.train_step(&meth, &[0.0, 0.0], None).total();
+        assert!(none < half && half < full);
+        // stem + head + update are not gated, so energy doesn't hit zero.
+        assert!(none > 0.05 * full);
+    }
+
+    #[test]
+    fn gate_overhead_is_negligible() {
+        let em = toy_model();
+        let meth_g = m("sgd", None, None, "learned");
+        let meth_n = m("sgd", None, None, "none");
+        let with_gate = em.train_step(&meth_g, &[1.0, 1.0], None).total();
+        let without = em.train_step(&meth_n, &[], None).total();
+        assert!((with_gate - without) / without < 0.01);
+    }
+
+    #[test]
+    fn computational_savings_counting() {
+        let em = toy_model();
+        let dense = em.step_macs(&[]);
+        let skipped = em.step_macs(&[0.5, 0.5]);
+        // 8/9 of MACs are gateable here; half-active -> 4/9 saved.
+        let ratio = skipped / dense;
+        assert!((ratio - (1.0 - 4.0 / 9.0)).abs() < 0.01, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,84 @@
+//! Per-operation energy table (45nm CMOS, Horowitz ISSCC'14 — the
+//! paper's own cost basis, ref [59]).
+//!
+//! Scaling rules follow Sec. 3.3: arithmetic energy is ~quadratic in
+//! operand width (a b1 x b2 multiplier array scales with b1*b2), data
+//! movement is linear in word width.  The paper quotes the resulting
+//! anchor points — 8-bit mult saves 95%, 8-bit add 97%, 8-bit movement
+//! 75% vs. 32-bit float — which the table reproduces.
+
+/// Energies in picojoules for 32-bit baseline operations.
+#[derive(Debug, Clone, Copy)]
+pub struct OpEnergies {
+    /// 32-bit float multiply.
+    pub mult32: f64,
+    /// 32-bit float add.
+    pub add32: f64,
+    /// SRAM access per 32-bit word (on-chip buffer, ~32KB class).
+    pub sram32: f64,
+    /// DRAM access per 32-bit word (off-chip).
+    pub dram32: f64,
+}
+
+impl Default for OpEnergies {
+    fn default() -> Self {
+        // Horowitz ISSCC'14 45nm: FP32 mult 3.7pJ, FP32 add 0.9pJ,
+        // 32KB SRAM 5pJ/word, DRAM 640pJ/word.
+        Self { mult32: 3.7, add32: 0.9, sram32: 5.0, dram32: 640.0 }
+    }
+}
+
+impl OpEnergies {
+    /// One multiply-accumulate with operand widths (b1, b2) bits.
+    /// Multiplier array area/energy ~ b1*b2; adder ~ max width.
+    pub fn mac(&self, b1: u32, b2: u32) -> f64 {
+        let m = self.mult32 * (b1 as f64 * b2 as f64) / (32.0 * 32.0);
+        let a = self.add32 * (b1.max(b2) as f64) / 32.0;
+        m + a
+    }
+
+    /// SRAM energy for moving `words` values of `bits` width.
+    pub fn sram(&self, words: f64, bits: u32) -> f64 {
+        self.sram32 * words * bits as f64 / 32.0
+    }
+
+    /// DRAM energy for moving `words` values of `bits` width.
+    pub fn dram(&self, words: f64, bits: u32) -> f64 {
+        self.dram32 * words * bits as f64 / 32.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchor_points() {
+        let e = OpEnergies::default();
+        // "8-bit multiplication saves ~95% vs 32-bit float" (Sec. 3.3)
+        let mult_saving = 1.0 - (e.mult32 * 64.0 / 1024.0) / e.mult32;
+        assert!((mult_saving - 0.9375).abs() < 1e-9);
+        // movement is linear: 8-bit moves save 75%
+        let move_saving = 1.0 - e.dram(1.0, 8) / e.dram(1.0, 32);
+        assert!((move_saving - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mac_monotone_in_bits() {
+        let e = OpEnergies::default();
+        let mut prev = 0.0;
+        for b in [1u32, 4, 8, 16, 32] {
+            let cur = e.mac(b, b);
+            assert!(cur > prev);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn asymmetric_mac() {
+        let e = OpEnergies::default();
+        // 4x10 predictor MAC is far cheaper than the 8x16 full MAC
+        // (multiplier 40/128 of the area; adder 10/16 of the width).
+        assert!(e.mac(4, 10) < 0.5 * e.mac(8, 16));
+    }
+}

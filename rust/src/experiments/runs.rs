@@ -1,0 +1,167 @@
+//! Shared run helpers for the experiment harness.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::{DataCfg, RunCfg};
+use crate::coordinator::Trainer;
+use crate::runtime::Engine;
+use crate::util::Json;
+
+/// Condensed outcome of one training run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub acc: f64,
+    pub acc5: f64,
+    pub joules: f64,
+    pub macs: f64,
+    /// Mean gate activity across gated blocks (1.0 when ungated).
+    pub mean_gate: f64,
+    pub psg_frac: Option<f64>,
+    pub steps_run: u64,
+    pub steps_skipped: u64,
+    pub wall_seconds: f64,
+    /// (cumulative joules, Some(test acc)) trace for curve experiments.
+    pub curve: Vec<(f64, Option<f64>)>,
+}
+
+/// Experiment context: engine + paths + the iteration budget.
+pub struct ExpCtx<'e> {
+    engine: &'e Engine,
+    artifacts: PathBuf,
+    out: PathBuf,
+    pub iters: u64,
+    /// Synthetic dataset sizing (kept modest for the 1-core testbed).
+    pub n_train: usize,
+    pub n_test: usize,
+    pub seed: u64,
+}
+
+impl<'e> ExpCtx<'e> {
+    pub fn new(engine: &'e Engine, artifacts: &Path, out: &Path, iters: u64) -> Self {
+        Self {
+            engine,
+            artifacts: artifacts.to_path_buf(),
+            out: out.to_path_buf(),
+            iters,
+            n_train: 2048,
+            n_test: 512,
+            seed: 0,
+        }
+    }
+
+    pub fn base_cfg(&self, family: &str, method: &str, iters: u64) -> RunCfg {
+        let mut cfg = RunCfg::quick(family, method, iters);
+        cfg.artifacts_dir = self.artifacts.clone();
+        cfg.seed = self.seed;
+        cfg.smd.enabled = false; // experiments opt in explicitly
+        cfg
+    }
+
+    /// Run (family, method) for `iters`, after applying `tweak` to the
+    /// config.  The dataset's class count is read from the manifest.
+    pub fn run(
+        &self,
+        family: &str,
+        method: &str,
+        iters: u64,
+        tweak: impl FnOnce(&mut RunCfg),
+    ) -> Result<RunRecord> {
+        let mut cfg = self.base_cfg(family, method, iters);
+        tweak(&mut cfg);
+        // classes must match the artifact; peek at the manifest.
+        let manifest = crate::runtime::Manifest::load(&cfg.manifest_path())?;
+        cfg.data = DataCfg::Synthetic {
+            classes: manifest.arch.num_classes,
+            n_train: self.n_train,
+            n_test: self.n_test,
+            seed: self.seed,
+        };
+        let mut trainer = Trainer::new(self.engine, cfg)?;
+        let outcome = trainer.run(None)?;
+        let m = outcome.metrics;
+        let mean_gate = if m.mean_gate_fracs.is_empty() {
+            1.0
+        } else {
+            m.mean_gate_fracs.iter().sum::<f64>() / m.mean_gate_fracs.len() as f64
+        };
+        Ok(RunRecord {
+            acc: m.final_test_acc,
+            acc5: m.final_test_acc_top5,
+            joules: m.total_joules,
+            macs: m.executed_macs,
+            mean_gate,
+            psg_frac: m.mean_psg_frac,
+            steps_run: m.steps_run,
+            steps_skipped: m.steps_skipped,
+            wall_seconds: m.wall_seconds,
+            curve: m.trace.iter().map(|p| (p.joules, p.test_acc)).collect(),
+        })
+    }
+
+    /// The Sec. 4.5 protocol: pre-train on half the data, then fine-tune
+    /// the other half two ways (head-only standard vs. full E2-Train).
+    pub fn finetune(&self, family: &str, iters: u64) -> Result<Json> {
+        let cfg = self.base_cfg(family, "sgd32", iters);
+        let manifest = crate::runtime::Manifest::load(&cfg.manifest_path())?;
+        let classes = manifest.arch.num_classes;
+        let hw = manifest.arch.image_size;
+        let (full, test) = crate::data::synthetic::generate_split(
+            classes, self.n_train, self.n_test, hw, self.seed,
+        );
+        let (half_a, half_b) = full.split(0.5);
+
+        // Pre-train on half A.
+        let mut pre_cfg = self.base_cfg(family, "sgd32", iters);
+        pre_cfg.data = DataCfg::Synthetic {
+            classes,
+            n_train: 1,
+            n_test: 1,
+            seed: 0,
+        };
+        let mut pre = Trainer::new(self.engine, pre_cfg)?;
+        pre.set_data(half_a.clone(), test.clone());
+        let pre_out = pre.run(None)?;
+        let pre_acc = pre_out.metrics.final_test_acc;
+
+        // Option 1: fine-tune only the FC head (standard training).
+        let ft_iters = iters / 2;
+        let mut head_cfg = self.base_cfg(family, "headft", ft_iters);
+        head_cfg.data = pre.cfg.data.clone();
+        let mut head = Trainer::new(self.engine, head_cfg)?;
+        head.set_data(half_b.clone(), test.clone());
+        let head_out = head.run(Some(pre_out.state.clone()))?;
+
+        // Option 2: fine-tune all layers with E2-Train.
+        let mut e2_cfg = self.base_cfg(family, "e2train", ft_iters);
+        e2_cfg.smd.enabled = true;
+        e2_cfg.data = pre.cfg.data.clone();
+        let mut e2 = Trainer::new(self.engine, e2_cfg)?;
+        e2.set_data(half_b, test);
+        let e2_out = e2.run(Some(pre_out.state))?;
+
+        let hj = head_out.metrics.total_joules;
+        let ej = e2_out.metrics.total_joules;
+        Ok(Json::obj(vec![
+            ("pretrain_acc", Json::num(pre_acc)),
+            ("headft_acc", Json::num(head_out.metrics.final_test_acc)),
+            (
+                "headft_delta",
+                Json::num(head_out.metrics.final_test_acc - pre_acc),
+            ),
+            ("headft_joules", Json::num(hj)),
+            ("e2t_acc", Json::num(e2_out.metrics.final_test_acc)),
+            ("e2t_delta", Json::num(e2_out.metrics.final_test_acc - pre_acc)),
+            ("e2t_joules", Json::num(ej)),
+            ("saving_vs_headft", Json::num(1.0 - ej / hj)),
+        ]))
+    }
+
+    pub fn save_json(&self, name: &str, v: &Json) -> Result<()> {
+        let path = self.out.join(format!("{name}.json"));
+        std::fs::write(&path, v.to_string())?;
+        println!("\nresults -> {}", path.display());
+        Ok(())
+    }
+}

@@ -1,0 +1,26 @@
+//! # E²-Train — energy-efficient CNN training (NeurIPS 2019 reproduction)
+//!
+//! A three-layer system: this rust crate is the Layer-3 coordinator that
+//! owns the training loop, data pipeline, energy accounting and all
+//! experiment harnesses; Layer-2 (JAX model fwd/bwd) and Layer-1 (Pallas
+//! kernels) are compiled ahead-of-time by `python/compile/` into HLO-text
+//! artifacts that the [`runtime`] executes via PJRT.  Python never runs
+//! on the training path.
+//!
+//! The paper's three techniques map to:
+//! * **SMD** (stochastic mini-batch dropping) — [`coordinator::smd`]
+//! * **SLU** (selective layer update) — learned gates inside the AOT
+//!   train step + per-block accounting in [`energy`]
+//! * **PSG** (predictive sign gradient) — the Pallas `psg_select` kernel
+//!   baked into the `psg`/`e2train` artifacts + datapath-width modelling
+//!   in [`energy::model`]
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod experiments;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod util;

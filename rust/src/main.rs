@@ -1,0 +1,141 @@
+//! `e2train` — the leader binary: train/eval runs, experiment harness
+//! (one subcommand per paper table/figure), and energy-model reports.
+//!
+//! ```text
+//! e2train list
+//! e2train train --family resnet8-c10-tiny --method e2train --iters 300
+//! e2train exp tab2 --iters 400 --out results
+//! e2train energy-report --family resnet20-c10
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use e2train::config::{DataCfg, RunCfg};
+use e2train::coordinator::Trainer;
+use e2train::experiments;
+use e2train::runtime::{ArtifactIndex, Engine};
+use e2train::util::cli::Args;
+
+const USAGE: &str = "\
+e2train — E2-Train (NeurIPS 2019) energy-efficient CNN training
+
+USAGE:
+  e2train <COMMAND> [OPTIONS]
+
+COMMANDS:
+  list                          list available (family, method) artifacts
+  train                         train one configuration
+    --family <fam>              artifact family   [resnet8-c10-tiny]
+    --method <m>                sgd32|fixed8|signsgd|psg|slu|sd|e2train|headft [e2train]
+    --iters <n>                 iterations        [300]
+    --seed <n>                  rng seed          [0]
+    --smd                       enable stochastic mini-batch dropping
+    --alpha <f>                 SLU FLOPs-regularizer weight [1.0]
+    --beta <f>                  PSG adaptive threshold       [0.05]
+    --n-train <n>               synthetic train size [2048]
+    --n-test <n>                synthetic test size  [512]
+    --eval-every <n>            periodic eval every n iters  [0]
+    --config <path>             load a JSON run config instead
+    --out <path>                write run-metrics JSON
+  exp <id>                      reproduce a paper table/figure
+                                fig3a|fig3b|tab1|fig4|tab2|tab3|fig5|tab4|finetune|all
+    --iters <n>                 per-run iteration budget [400]
+    --out <dir>                 results directory [results]
+  energy-report                 analytic energy model vs paper anchors
+    --family <fam>              [resnet20-c10]
+
+GLOBAL:
+  --artifacts <dir>             artifacts directory [artifacts]
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+
+    match cmd {
+        "list" => {
+            let idx = ArtifactIndex::load(&artifacts)?;
+            println!("{:<22} {:>7} {:>10}  methods", "family", "batch", "eval_batch");
+            for (fam, e) in &idx.families {
+                println!(
+                    "{:<22} {:>7} {:>10}  {}",
+                    fam,
+                    e.batch,
+                    e.eval_batch,
+                    e.methods.join(",")
+                );
+            }
+        }
+        "train" => {
+            let mut cfg = match args.get("config") {
+                Some(p) => RunCfg::load(std::path::Path::new(p))?,
+                None => {
+                    let family = args.str_or("family", "resnet8-c10-tiny");
+                    let method = args.str_or("method", "e2train");
+                    let iters = args.u64_or("iters", 300)?;
+                    let seed = args.u64_or("seed", 0)?;
+                    let mut c = RunCfg::quick(&family, &method, iters);
+                    c.seed = seed;
+                    c.smd.enabled = args.bool("smd") || c.smd.enabled;
+                    c.alpha = args.f64_or("alpha", c.alpha)?;
+                    c.beta = args.f64_or("beta", c.beta)?;
+                    c.eval_every = args.u64_or("eval-every", 0)?;
+                    c.data = DataCfg::Synthetic {
+                        classes: 10, // fixed up by Trainer vs manifest
+                        n_train: args.usize_or("n-train", 2048)?,
+                        n_test: args.usize_or("n-test", 512)?,
+                        seed,
+                    };
+                    c
+                }
+            };
+            cfg.artifacts_dir = artifacts;
+            // Align the synthetic class count with the artifact.
+            let manifest = e2train::runtime::Manifest::load(&cfg.manifest_path())?;
+            if let DataCfg::Synthetic { classes, .. } = &mut cfg.data {
+                *classes = manifest.arch.num_classes;
+            }
+            let engine = Engine::cpu()?;
+            let mut trainer = Trainer::new(&engine, cfg)?;
+            let outcome = trainer.run(None)?;
+            println!(
+                "final: acc={:.4} top5={:.4} loss={:.4} J={:.3} steps={} skipped={}",
+                outcome.metrics.final_test_acc,
+                outcome.metrics.final_test_acc_top5,
+                outcome.metrics.final_loss,
+                outcome.metrics.total_joules,
+                outcome.metrics.steps_run,
+                outcome.metrics.steps_skipped,
+            );
+            if let Some(p) = args.get("out") {
+                std::fs::write(p, outcome.metrics.to_json())?;
+                println!("metrics -> {p}");
+            }
+        }
+        "exp" => {
+            let id = args
+                .positional
+                .get(1)
+                .map(String::as_str)
+                .unwrap_or("all");
+            let iters = args.u64_or("iters", 400)?;
+            let out = PathBuf::from(args.str_or("out", "results"));
+            experiments::run_experiment(id, iters, &artifacts, &out)?;
+        }
+        "energy-report" => {
+            let family = args.str_or("family", "resnet20-c10");
+            experiments::energy_report(&family, &artifacts)?;
+        }
+        "" | "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+        }
+        other => {
+            eprint!("{USAGE}");
+            bail!("unknown command {other:?}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! Run metrics: loss/accuracy traces, convergence curves keyed by energy
+//! (the x-axis of Fig. 5), and JSON export for the experiment harness.
+
+use crate::util::Json;
+
+/// One recorded point of a training run.
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    pub iter: u64,
+    pub loss: f64,
+    pub train_acc: f64,
+    /// Cumulative simulated energy (J) when recorded.
+    pub joules: f64,
+    /// Test accuracy if an eval ran at this point.
+    pub test_acc: Option<f64>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub trace: Vec<TracePoint>,
+    pub final_test_acc: f64,
+    pub final_test_acc_top5: f64,
+    pub final_loss: f64,
+    pub total_joules: f64,
+    pub executed_macs: f64,
+    pub steps_run: u64,
+    pub steps_skipped: u64,
+    pub wall_seconds: f64,
+    /// Mean gate activity per gated block over the run (SLU diagnostics).
+    pub mean_gate_fracs: Vec<f64>,
+    /// Mean PSG predictor usage over the run.
+    pub mean_psg_frac: Option<f64>,
+}
+
+impl RunMetrics {
+    pub fn record(
+        &mut self,
+        iter: u64,
+        loss: f64,
+        train_acc: f64,
+        joules: f64,
+        test_acc: Option<f64>,
+    ) {
+        self.trace.push(TracePoint { iter, loss, train_acc, joules, test_acc });
+    }
+
+    /// Smoothed loss over the last `k` recorded points.
+    pub fn recent_loss(&self, k: usize) -> f64 {
+        if self.trace.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &self.trace[self.trace.len().saturating_sub(k)..];
+        tail.iter().map(|p| p.loss).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn json_value(&self) -> Json {
+        Json::obj(vec![
+            (
+                "trace",
+                Json::arr(self.trace.iter().map(|p| {
+                    Json::obj(vec![
+                        ("iter", Json::num(p.iter as f64)),
+                        ("loss", Json::num(p.loss)),
+                        ("train_acc", Json::num(p.train_acc)),
+                        ("joules", Json::num(p.joules)),
+                        (
+                            "test_acc",
+                            p.test_acc.map(Json::num).unwrap_or(Json::Null),
+                        ),
+                    ])
+                })),
+            ),
+            ("final_test_acc", Json::num(self.final_test_acc)),
+            ("final_test_acc_top5", Json::num(self.final_test_acc_top5)),
+            ("final_loss", Json::num(self.final_loss)),
+            ("total_joules", Json::num(self.total_joules)),
+            ("executed_macs", Json::num(self.executed_macs)),
+            ("steps_run", Json::num(self.steps_run as f64)),
+            ("steps_skipped", Json::num(self.steps_skipped as f64)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            (
+                "mean_gate_fracs",
+                Json::arr(self.mean_gate_fracs.iter().map(|&g| Json::num(g))),
+            ),
+            (
+                "mean_psg_frac",
+                self.mean_psg_frac.map(Json::num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn to_json(&self) -> String {
+        self.json_value().to_string()
+    }
+}
+
+/// Streaming mean helper.
+#[derive(Debug, Clone, Default)]
+pub struct Mean {
+    sum: f64,
+    n: u64,
+}
+
+impl Mean {
+    pub fn push(&mut self, v: f64) {
+        self.sum += v;
+        self.n += 1;
+    }
+
+    pub fn get(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_and_recent_loss() {
+        let mut m = RunMetrics::default();
+        for i in 0..10 {
+            m.record(i, 10.0 - i as f64, 0.5, i as f64, None);
+        }
+        assert_eq!(m.trace.len(), 10);
+        assert!((m.recent_loss(2) - 1.5).abs() < 1e-12);
+        assert!(m.recent_loss(100) > m.recent_loss(2));
+    }
+
+    #[test]
+    fn mean_stream() {
+        let mut s = Mean::default();
+        assert!(s.get().is_nan());
+        s.push(1.0);
+        s.push(3.0);
+        assert_eq!(s.get(), 2.0);
+        assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    fn json_export() {
+        let mut m = RunMetrics::default();
+        m.record(0, 2.3, 0.1, 0.0, Some(0.1));
+        let j = m.to_json();
+        assert!(j.contains("\"iter\":0"));
+        assert!(j.contains("test_acc"));
+        // parses back with our own parser
+        crate::util::json::parse(&j).unwrap();
+    }
+}

@@ -1,0 +1,93 @@
+//! Parameter initialization — rust owns all model state; the manifest's
+//! `init` kinds mirror python `layers.materialize` in distribution
+//! (He-normal for conv/fc weights [63], zeros/ones for BN and biases,
+//! fan-in uniform for the gate LSTM).
+
+use crate::runtime::HostTensor;
+use crate::util::Rng;
+
+pub struct Initializer {
+    rng: Rng,
+}
+
+impl Initializer {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::seed_from_u64(seed) }
+    }
+
+    fn normal(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    pub fn materialize(&mut self, shape: &[usize], kind: &str) -> HostTensor {
+        let n = shape.iter().product::<usize>().max(1);
+        let data: Vec<f32> = match kind {
+            "he" => {
+                // fan_in = prod(shape[..-1]) matching python materialize.
+                let fan_in = if shape.len() > 1 {
+                    shape[..shape.len() - 1].iter().product::<usize>()
+                } else {
+                    shape.first().copied().unwrap_or(1)
+                }
+                .max(1);
+                let std = (2.0 / fan_in as f32).sqrt();
+                (0..n).map(|_| self.normal() * std).collect()
+            }
+            "ones" => vec![1.0; n],
+            "uniform" => {
+                let bound = 1.0 / (shape.first().copied().unwrap_or(1).max(1) as f32).sqrt();
+                (0..n).map(|_| self.rng.range_f32(-bound, bound)).collect()
+            }
+            // zeros (momenta, biases) and anything unknown default to 0.
+            _ => vec![0.0; n],
+        };
+        HostTensor::f32(shape.to_vec(), data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn he_statistics() {
+        let mut init = Initializer::new(7);
+        let t = init.materialize(&[3, 3, 16, 32], "he");
+        let v = t.as_f32().unwrap();
+        let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+        let var: f32 =
+            v.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / v.len() as f32;
+        let expect = 2.0 / (3.0 * 3.0 * 16.0);
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - expect).abs() / expect < 0.15, "var {var} vs {expect}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = Initializer::new(5).materialize(&[64], "he");
+        let b = Initializer::new(5).materialize(&[64], "he");
+        let c = Initializer::new(6).materialize(&[64], "he");
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        assert_ne!(a.as_f32().unwrap(), c.as_f32().unwrap());
+    }
+
+    #[test]
+    fn kinds() {
+        let mut init = Initializer::new(0);
+        assert!(init
+            .materialize(&[4], "ones")
+            .as_f32()
+            .unwrap()
+            .iter()
+            .all(|&v| v == 1.0));
+        assert!(init
+            .materialize(&[4], "zeros")
+            .as_f32()
+            .unwrap()
+            .iter()
+            .all(|&v| v == 0.0));
+        let u = init.materialize(&[16, 40], "uniform");
+        let bound = 1.0 / 4.0;
+        assert!(u.as_f32().unwrap().iter().all(|&v| v.abs() <= bound));
+    }
+}

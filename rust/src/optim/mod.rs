@@ -1,0 +1,10 @@
+//! Host-side optimizer bookkeeping: parameter initialization, learning
+//! rate schedules, and stochastic weight averaging.  The update rules
+//! themselves (SGD-momentum / SignSGD / PSG, Sec. 3.3) are baked into the
+//! AOT train-step artifacts; rust owns everything *around* them.
+
+pub mod init;
+pub mod schedule;
+
+pub use init::Initializer;
+pub use schedule::{LrSchedule, SwaState};

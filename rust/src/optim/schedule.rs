@@ -1,0 +1,126 @@
+//! Learning-rate schedules (Sec. 4.1).
+//!
+//! The paper trains 64k iterations, lr 0.1 decayed 10x at 32k and 48k;
+//! PSG/SignSGD variants start at 0.03.  When an SMB baseline is run with a
+//! reduced iteration budget (Fig. 3a), the decay boundaries scale
+//! proportionally — `scaled_to` implements exactly that protocol.
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    /// Piecewise-constant: lr0 multiplied by `decay` at each boundary.
+    Step {
+        lr0: f64,
+        decay: f64,
+        /// Iteration indices where the decay is applied.
+        boundaries: Vec<u64>,
+    },
+    /// Constant (grid-search comparisons of Fig. 3b).
+    Constant { lr0: f64 },
+}
+
+impl LrSchedule {
+    /// The paper's default protocol scaled to `total_iters`: boundaries at
+    /// 1/2 and 3/4 of the run (32k/48k out of 64k).
+    pub fn paper_default(lr0: f64, total_iters: u64) -> Self {
+        LrSchedule::Step {
+            lr0,
+            decay: 0.1,
+            boundaries: vec![total_iters / 2, total_iters * 3 / 4],
+        }
+    }
+
+    pub fn at(&self, iter: u64) -> f64 {
+        match self {
+            LrSchedule::Constant { lr0 } => *lr0,
+            LrSchedule::Step { lr0, decay, boundaries } => {
+                let k = boundaries.iter().filter(|&&b| iter >= b).count();
+                lr0 * decay.powi(k as i32)
+            }
+        }
+    }
+
+    /// Rescale boundaries proportionally to a new total-iteration budget
+    /// (the Fig. 3a SMB-with-fewer-iterations protocol).
+    pub fn scaled_to(&self, old_total: u64, new_total: u64) -> Self {
+        match self {
+            LrSchedule::Constant { .. } => self.clone(),
+            LrSchedule::Step { lr0, decay, boundaries } => LrSchedule::Step {
+                lr0: *lr0,
+                decay: *decay,
+                boundaries: boundaries
+                    .iter()
+                    .map(|&b| (b as u128 * new_total as u128 / old_total.max(1) as u128) as u64)
+                    .collect(),
+            },
+        }
+    }
+}
+
+/// Stochastic weight averaging bookkeeping (SWALP-style [64]): the paper
+/// enables SWA when PSG is in play to stabilize sign-based updates.
+/// The coordinator calls `observe()` at each averaging point; `weight()`
+/// is the running-average weight for the incoming model.
+#[derive(Debug, Clone, Default)]
+pub struct SwaState {
+    pub n_models: u64,
+    /// Start averaging only after this iteration (post first decay).
+    pub start_iter: u64,
+    /// Average every `period` iterations.
+    pub period: u64,
+}
+
+impl SwaState {
+    pub fn new(start_iter: u64, period: u64) -> Self {
+        Self { n_models: 0, start_iter, period: period.max(1) }
+    }
+
+    pub fn should_average(&self, iter: u64) -> bool {
+        iter >= self.start_iter && (iter - self.start_iter) % self.period == 0
+    }
+
+    /// Weight the incoming model gets in the running average.
+    pub fn observe(&mut self) -> f32 {
+        self.n_models += 1;
+        1.0 / self.n_models as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_schedule_boundaries() {
+        let s = LrSchedule::paper_default(0.1, 64_000);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(31_999), 0.1);
+        assert!((s.at(32_000) - 0.01).abs() < 1e-12);
+        assert!((s.at(48_000) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaling_preserves_fractions() {
+        let s = LrSchedule::paper_default(0.1, 64_000).scaled_to(64_000, 1_000);
+        assert_eq!(s.at(499), 0.1);
+        assert!((s.at(500) - 0.01).abs() < 1e-12);
+        assert!((s.at(750) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant { lr0: 0.14 };
+        assert_eq!(s.at(0), s.at(1_000_000));
+    }
+
+    #[test]
+    fn swa_weights_form_running_mean() {
+        let mut swa = SwaState::new(100, 10);
+        assert!(!swa.should_average(99));
+        assert!(swa.should_average(100));
+        assert!(swa.should_average(110));
+        assert!(!swa.should_average(111));
+        assert_eq!(swa.observe(), 1.0);
+        assert_eq!(swa.observe(), 0.5);
+        assert!((swa.observe() - 1.0 / 3.0).abs() < 1e-7);
+    }
+}

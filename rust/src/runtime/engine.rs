@@ -1,0 +1,114 @@
+//! PJRT engine: one CPU client + a cache of compiled executables.
+//!
+//! HLO **text** artifacts (see aot.py) are parsed with
+//! `HloModuleProto::from_text_file`, compiled once per path, and shared
+//! via `Arc` across the coordinator's programs.  Compilation is the
+//! expensive part (seconds for the bigger train steps), so the cache key
+//! is the canonical artifact path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::tensor::HostTensor;
+
+/// A compiled PJRT executable plus light metadata.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+    pub compile_time_s: f64,
+}
+
+impl Program {
+    /// Execute with host inputs; outputs are the decomposed result tuple
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute pre-built literals (hot path: avoids cloning host buffers
+    /// into an intermediate Vec<HostTensor> — EXPERIMENTS.md §Perf).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<HostTensor>> {
+        let result = self.exe.execute::<xla::Literal>(literals)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// The shared PJRT CPU client + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Program>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: &Path) -> Result<Arc<Program>> {
+        let key = path.canonicalize().unwrap_or_else(|_| path.to_path_buf());
+        if let Some(p) = self.cache.lock().unwrap().get(&key) {
+            return Ok(p.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let program = Arc::new(Program {
+            exe,
+            path: key.clone(),
+            compile_time_s: t0.elapsed().as_secs_f64(),
+        });
+        self.cache.lock().unwrap().insert(key, program.clone());
+        Ok(program)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn compile_and_cache() {
+        let path = artifacts().join("resnet8-c10-tiny/sgd32.eval.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::cpu().unwrap();
+        let p1 = engine.load(&path).unwrap();
+        let p2 = engine.load(&path).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(engine.cached_count(), 1);
+        assert!(p1.compile_time_s > 0.0);
+    }
+}

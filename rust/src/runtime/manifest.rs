@@ -1,0 +1,343 @@
+//! Artifact manifests — the contract between `python/compile/aot.py`
+//! and the coordinator.
+//!
+//! A manifest describes one `(family, method)` artifact pair: the ordered
+//! input/output buffer specs of the train and eval HLO programs, the block
+//! table (FLOPs, gateability) the energy ledger charges from, and the
+//! method hyper-parameters baked into the HLO at lowering time.
+//!
+//! Parsed with the in-repo JSON substrate (`util::json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// One input or output buffer of an AOT program, in execution order.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    /// `param | mom | state | data | scalar | mask | out_param | out_mom
+    /// | out_state | out_metric`
+    pub role: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub init: String,
+}
+
+impl IoSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.req_str("name")?.to_string(),
+            role: v.req_str("role")?.to_string(),
+            shape: v
+                .req_arr("shape")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            dtype: v.req_str("dtype")?.to_string(),
+            init: v.get("init").and_then(Json::as_str).unwrap_or("").to_string(),
+        })
+    }
+}
+
+/// Hyper-parameters of the lowered method (mirror of python MethodSpec).
+#[derive(Debug, Clone)]
+pub struct MethodInfo {
+    pub name: String,
+    pub qbits_act: Option<u32>,
+    pub qbits_grad: Option<u32>,
+    pub update: String,
+    pub gating: String,
+    pub alpha: f64,
+    pub beta: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub psg_bits_x: u32,
+    pub psg_bits_gy: u32,
+    pub head_only: bool,
+}
+
+impl MethodInfo {
+    fn from_json(v: &Json) -> Result<Self> {
+        let opt_u32 = |key: &str| v.get(key).and_then(Json::as_f64).map(|x| x as u32);
+        Ok(Self {
+            name: v.req_str("name")?.to_string(),
+            qbits_act: opt_u32("qbits_act"),
+            qbits_grad: opt_u32("qbits_grad"),
+            update: v.req_str("update")?.to_string(),
+            gating: v.req_str("gating")?.to_string(),
+            alpha: v.req_f64("alpha")?,
+            beta: v.req_f64("beta")?,
+            momentum: v.req_f64("momentum")?,
+            weight_decay: v.req_f64("weight_decay")?,
+            psg_bits_x: v.req_f64("psg_bits_x")? as u32,
+            psg_bits_gy: v.req_f64("psg_bits_gy")? as u32,
+            head_only: v.get("head_only").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArchInfo {
+    pub name: String,
+    pub kind: String,
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub width: f64,
+    pub feat_ch: usize,
+}
+
+impl ArchInfo {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.req_str("name")?.to_string(),
+            kind: v.req_str("kind")?.to_string(),
+            num_classes: v.req_f64("num_classes")? as usize,
+            image_size: v.req_f64("image_size")? as usize,
+            batch: v.req_f64("batch")? as usize,
+            eval_batch: v.req_f64("eval_batch")? as usize,
+            width: v.req_f64("width")?,
+            feat_ch: v.req_f64("feat_ch")? as usize,
+        })
+    }
+}
+
+/// One trunk block: cost + gating metadata for the energy ledger.
+#[derive(Debug, Clone)]
+pub struct BlockInfo {
+    pub name: String,
+    pub flops: u64,
+    pub gateable: bool,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub in_hw: usize,
+    pub params: Vec<String>,
+}
+
+impl BlockInfo {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.req_str("name")?.to_string(),
+            flops: v.req_f64("flops")? as u64,
+            gateable: v.get("gateable").and_then(Json::as_bool).unwrap_or(false),
+            in_ch: v.req_f64("in_ch")? as usize,
+            out_ch: v.req_f64("out_ch")? as usize,
+            in_hw: v.req_f64("in_hw")? as usize,
+            params: v
+                .req_arr("params")?
+                .iter()
+                .filter_map(|p| p.as_str().map(String::from))
+                .collect(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub family: String,
+    pub method: MethodInfo,
+    pub arch: ArchInfo,
+    pub train_inputs: Vec<IoSpec>,
+    pub train_outputs: Vec<IoSpec>,
+    pub eval_inputs: Vec<IoSpec>,
+    pub eval_outputs: Vec<IoSpec>,
+    pub blocks: Vec<BlockInfo>,
+    pub head_flops: u64,
+    pub total_flops: u64,
+    pub gated_flop_fracs: Vec<f64>,
+    pub gate_flops: u64,
+    pub param_count: u64,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::from_text(&text)
+            .with_context(|| format!("parsing manifest {}", path.display()))
+    }
+
+    pub fn from_text(text: &str) -> Result<Self> {
+        let v = parse(text)?;
+        let specs = |key: &str| -> Result<Vec<IoSpec>> {
+            v.req_arr(key)?.iter().map(IoSpec::from_json).collect()
+        };
+        Ok(Self {
+            family: v.req_str("family")?.to_string(),
+            method: MethodInfo::from_json(
+                v.get("method").context("missing method")?,
+            )?,
+            arch: ArchInfo::from_json(v.get("arch").context("missing arch")?)?,
+            train_inputs: specs("train_inputs")?,
+            train_outputs: specs("train_outputs")?,
+            eval_inputs: specs("eval_inputs")?,
+            eval_outputs: specs("eval_outputs")?,
+            blocks: v
+                .req_arr("blocks")?
+                .iter()
+                .map(BlockInfo::from_json)
+                .collect::<Result<_>>()?,
+            head_flops: v.req_f64("head_flops")? as u64,
+            total_flops: v.req_f64("total_flops")? as u64,
+            gated_flop_fracs: v
+                .req_arr("gated_flop_fracs")?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect(),
+            gate_flops: v.req_f64("gate_flops")? as u64,
+            param_count: v.req_f64("param_count")? as u64,
+        })
+    }
+
+    /// Path of the train/eval HLO next to a manifest path.
+    pub fn hlo_paths(manifest_path: &Path) -> (PathBuf, PathBuf) {
+        let stem = manifest_path
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_default();
+        let dir = manifest_path.parent().unwrap_or_else(|| Path::new("."));
+        (
+            dir.join(format!("{stem}.train.hlo.txt")),
+            dir.join(format!("{stem}.eval.hlo.txt")),
+        )
+    }
+
+    /// Count of gateable blocks (length of `gate_fracs` outputs).
+    pub fn num_gated(&self) -> usize {
+        self.blocks.iter().filter(|b| b.gateable).count()
+    }
+
+    /// Index of a named output in `train_outputs`.
+    pub fn train_output_index(&self, name: &str) -> Option<usize> {
+        self.train_outputs.iter().position(|o| o.name == name)
+    }
+
+    pub fn eval_output_index(&self, name: &str) -> Option<usize> {
+        self.eval_outputs.iter().position(|o| o.name == name)
+    }
+}
+
+/// Top-level `artifacts/index.json` written by aot.py.
+#[derive(Debug, Clone)]
+pub struct ArtifactIndex {
+    pub families: Vec<(String, FamilyEntry)>,
+    pub methods: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct FamilyEntry {
+    pub methods: Vec<String>,
+    pub batch: usize,
+    pub eval_batch: usize,
+}
+
+impl ArtifactIndex {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("index.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading artifact index {}", path.display()))?;
+        let v = parse(&text)?;
+        let mut families = Vec::new();
+        if let Some(fams) = v.get("families").and_then(Json::as_obj) {
+            for (name, fv) in fams {
+                families.push((
+                    name.clone(),
+                    FamilyEntry {
+                        methods: fv
+                            .req_arr("methods")?
+                            .iter()
+                            .filter_map(|m| m.as_str().map(String::from))
+                            .collect(),
+                        batch: fv.req_f64("batch")? as usize,
+                        eval_batch: fv.req_f64("eval_batch")? as usize,
+                    },
+                ));
+            }
+        }
+        let methods = v
+            .req_arr("methods")?
+            .iter()
+            .filter_map(|m| m.as_str().map(String::from))
+            .collect();
+        Ok(Self { families, methods })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn load_index_and_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("index.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let idx = ArtifactIndex::load(&dir).unwrap();
+        assert!(!idx.families.is_empty());
+        let (fam, entry) = &idx.families[0];
+        let m = Manifest::load(&dir.join(fam).join(format!("{}.json", entry.methods[0])))
+            .unwrap();
+        assert_eq!(&m.family, fam);
+        assert!(m.total_flops > 0);
+        assert!(!m.train_inputs.is_empty());
+        // params come before momenta before state before data
+        let roles: Vec<&str> = m.train_inputs.iter().map(|s| s.role.as_str()).collect();
+        let first_data = roles.iter().position(|r| *r == "data").unwrap();
+        assert!(roles[..first_data].iter().all(|r| *r != "data"));
+    }
+
+    #[test]
+    fn all_manifests_parse_and_are_consistent() {
+        let dir = artifacts_dir();
+        if !dir.join("index.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let idx = ArtifactIndex::load(&dir).unwrap();
+        for (fam, entry) in &idx.families {
+            for method in &entry.methods {
+                let p = dir.join(fam).join(format!("{method}.json"));
+                let m = Manifest::load(&p).unwrap();
+                assert_eq!(&m.method.name, method);
+                // train outputs mirror the state prefix of the inputs
+                let n_state = m
+                    .train_inputs
+                    .iter()
+                    .filter(|s| matches!(s.role.as_str(), "param" | "mom" | "state"))
+                    .count();
+                let n_out_state = m
+                    .train_outputs
+                    .iter()
+                    .filter(|s| s.role.starts_with("out_") && s.role != "out_metric")
+                    .count();
+                assert_eq!(n_state, n_out_state, "{fam}/{method}");
+                // gated fracs line up with gateable blocks
+                assert_eq!(m.gated_flop_fracs.len(), m.num_gated(), "{fam}/{method}");
+                // both HLO files exist
+                let (t, e) = Manifest::hlo_paths(&p);
+                assert!(t.exists() && e.exists(), "{fam}/{method}");
+            }
+        }
+    }
+
+    #[test]
+    fn hlo_paths_derivation() {
+        let (t, e) = Manifest::hlo_paths(Path::new("/a/b/psg.json"));
+        assert_eq!(t, Path::new("/a/b/psg.train.hlo.txt"));
+        assert_eq!(e, Path::new("/a/b/psg.eval.hlo.txt"));
+    }
+}

@@ -1,0 +1,17 @@
+//! Layer-3 runtime: load AOT artifacts (HLO text) and execute them on the
+//! PJRT CPU client — the `xla` crate path proven by /opt/xla-example.
+//!
+//! * [`engine`] — PJRT client + compiled-executable cache.
+//! * [`manifest`] — the JSON contract emitted by `python/compile/aot.py`.
+//! * [`tensor`] — host tensors and Literal conversion.
+//! * [`program`] — (train, eval) executable pairs + model-state plumbing.
+
+pub mod engine;
+pub mod manifest;
+pub mod program;
+pub mod tensor;
+
+pub use engine::{Engine, Program};
+pub use manifest::{ArtifactIndex, BlockInfo, IoSpec, Manifest, MethodInfo};
+pub use program::{EvalMetrics, ModelState, StepHyper, StepMetrics, TrainProgram};
+pub use tensor::{HostTensor, TensorData};

@@ -1,0 +1,305 @@
+//! TrainProgram: a (manifest, train exe, eval exe) triple plus the state
+//! plumbing that moves model parameters through a step.
+//!
+//! The coordinator owns a [`ModelState`] (params + momenta + BN state in
+//! manifest order); `step()` assembles the exact input list the HLO
+//! expects, executes, writes the updated state back in place, and returns
+//! the step metrics.  No Python anywhere on this path.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::engine::{Engine, Program};
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+use crate::optim::init::Initializer;
+
+/// Trainable + persistent state in train-manifest input order
+/// (params..., momenta..., bn state...).
+#[derive(Clone)]
+pub struct ModelState {
+    /// Tensor per train input with role `param | mom | state`.
+    pub values: Vec<HostTensor>,
+    /// Names aligned with `values` (manifest names; momenta are `mom.*`).
+    pub names: Vec<String>,
+}
+
+impl ModelState {
+    /// Initialize from the manifest's init kinds (He/zeros/ones/uniform),
+    /// matching python `layers.materialize` in distribution.
+    pub fn init(manifest: &Manifest, seed: u64) -> Self {
+        let mut init = Initializer::new(seed);
+        let mut values = Vec::new();
+        let mut names = Vec::new();
+        for spec in &manifest.train_inputs {
+            match spec.role.as_str() {
+                "param" | "mom" | "state" => {
+                    values.push(init.materialize(&spec.shape, &spec.init));
+                    names.push(spec.name.clone());
+                }
+                _ => {}
+            }
+        }
+        Self { values, names }
+    }
+
+    /// Fresh init for `manifest`, then copy every tensor whose name and
+    /// shape match from `source` — method migration for fine-tuning
+    /// (Sec. 4.5: a sgd32-pretrained trunk resumes under e2train, whose
+    /// state adds gate parameters/momenta that start fresh).
+    pub fn init_from(manifest: &Manifest, seed: u64, source: &ModelState) -> Self {
+        let mut fresh = Self::init(manifest, seed);
+        let names = fresh.names.clone();
+        for (i, name) in names.iter().enumerate() {
+            if let Some(src) = source.by_name(name) {
+                if src.shape == fresh.values[i].shape {
+                    fresh.values[i] = src.clone();
+                }
+            }
+        }
+        fresh
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.values.iter().map(|t| t.elem_count()).sum()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&HostTensor> {
+        self.names.iter().position(|n| n == name).map(|i| &self.values[i])
+    }
+
+    /// Weighted in-place average: `self = self*(1-w) + other*w`.
+    /// Used by SWA (stochastic weight averaging, Sec. 4.1) — applied to
+    /// params only; momenta/BN state are copied from `other`.
+    pub fn average_params_from(&mut self, other: &ModelState, w: f32, param_count: usize) {
+        for i in 0..self.values.len() {
+            let ov = other.values[i].as_f32().unwrap().to_vec();
+            let sv = self.values[i].as_f32_mut().unwrap();
+            if i < param_count {
+                for (s, o) in sv.iter_mut().zip(ov.iter()) {
+                    *s = *s * (1.0 - w) + *o * w;
+                }
+            } else {
+                sv.copy_from_slice(&ov);
+            }
+        }
+    }
+}
+
+/// Runtime-tunable hyper-parameters fed to the train step as scalars.
+#[derive(Debug, Clone, Copy)]
+pub struct StepHyper {
+    pub lr: f32,
+    /// Eq. (1) FLOPs-regularizer weight (learned gating only).
+    pub alpha: f32,
+    /// PSG adaptive-threshold ratio (psg update only).
+    pub beta: f32,
+}
+
+impl StepHyper {
+    pub fn lr(lr: f32) -> Self {
+        Self { lr, alpha: 1.0, beta: 0.05 }
+    }
+}
+
+/// Per-step metrics decoded from the train program's metric outputs.
+#[derive(Debug, Clone, Default)]
+pub struct StepMetrics {
+    pub loss: f64,
+    /// Correct predictions within the training batch.
+    pub correct: f64,
+    /// Mean hard-gate activation per gateable block (empty if ungated).
+    pub gate_fracs: Vec<f64>,
+    /// Fraction of weight-gradient entries resolved by the MSB predictor
+    /// (PSG methods only).
+    pub psg_frac: Option<f64>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalMetrics {
+    pub loss: f64,
+    pub correct: f64,
+    /// Top-5 correct (== correct when num_classes <= 5).
+    pub correct5: f64,
+    pub total: usize,
+    pub gate_fracs: Vec<f64>,
+}
+
+/// A fully-loaded (family, method) artifact ready to train and evaluate.
+pub struct TrainProgram {
+    pub manifest: Manifest,
+    train: Arc<Program>,
+    eval: Arc<Program>,
+    /// #tensors with role param (prefix of ModelState).
+    pub num_params: usize,
+    /// index in ModelState for each eval input (params + bn state).
+    eval_state_idx: Vec<usize>,
+    metric_offset: usize,
+}
+
+impl TrainProgram {
+    /// Load from a manifest path (`artifacts/<family>/<method>.json`).
+    pub fn load(engine: &Engine, manifest_path: &Path) -> Result<Self> {
+        let manifest = Manifest::load(manifest_path)?;
+        let (train_hlo, eval_hlo) = Manifest::hlo_paths(manifest_path);
+        let train = engine.load(&train_hlo)?;
+        let eval = engine.load(&eval_hlo)?;
+
+        let num_params = manifest
+            .train_inputs
+            .iter()
+            .filter(|s| s.role == "param")
+            .count();
+        let state_names: Vec<&str> = manifest
+            .train_inputs
+            .iter()
+            .filter(|s| matches!(s.role.as_str(), "param" | "mom" | "state"))
+            .map(|s| s.name.as_str())
+            .collect();
+        let mut eval_state_idx = Vec::new();
+        for spec in &manifest.eval_inputs {
+            if matches!(spec.role.as_str(), "param" | "state") {
+                match state_names.iter().position(|n| *n == spec.name) {
+                    Some(i) => eval_state_idx.push(i),
+                    None => bail!("eval input {} missing from train state", spec.name),
+                }
+            }
+        }
+        let metric_offset = manifest
+            .train_outputs
+            .iter()
+            .position(|o| o.role == "out_metric")
+            .unwrap_or(manifest.train_outputs.len());
+        Ok(Self { manifest, train, eval, num_params, eval_state_idx, metric_offset })
+    }
+
+    pub fn family(&self) -> &str {
+        &self.manifest.family
+    }
+
+    pub fn method(&self) -> &str {
+        &self.manifest.method.name
+    }
+
+    pub fn batch(&self) -> usize {
+        self.manifest.arch.batch
+    }
+
+    pub fn eval_batch(&self) -> usize {
+        self.manifest.arch.eval_batch
+    }
+
+    /// One optimizer step.  `mask` must be Some(per-gated-block mask) for
+    /// `gating == "mask"` (stochastic depth) artifacts, None otherwise.
+    /// `hp` carries the runtime-tunable knobs (lr always; alpha for
+    /// learned gating; beta for PSG methods).
+    pub fn step(
+        &self,
+        state: &mut ModelState,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+        mask: Option<&[f32]>,
+    ) -> Result<StepMetrics> {
+        let needs_mask = self.manifest.method.gating == "mask";
+        if needs_mask != mask.is_some() {
+            bail!(
+                "method {} gating={} but mask.is_some()={}",
+                self.method(),
+                self.manifest.method.gating,
+                mask.is_some()
+            );
+        }
+        // Hot path: convert straight to literals — no HostTensor clones.
+        let mut literals: Vec<xla::Literal> =
+            Vec::with_capacity(state.values.len() + 6);
+        for v in &state.values {
+            literals.push(v.to_literal()?);
+        }
+        literals.push(x.to_literal()?);
+        literals.push(y.to_literal()?);
+        literals.push(HostTensor::scalar_f32(hp.lr).to_literal()?);
+        if self.manifest.method.gating == "learned" {
+            literals.push(HostTensor::scalar_f32(hp.alpha).to_literal()?);
+        }
+        if self.manifest.method.update == "psg" {
+            literals.push(HostTensor::scalar_f32(hp.beta).to_literal()?);
+        }
+        if let Some(m) = mask {
+            literals.push(HostTensor::f32(vec![m.len()], m.to_vec()).to_literal()?);
+        }
+
+        let outputs = self.train.run_literals(&literals)?;
+        if outputs.len() != self.manifest.train_outputs.len() {
+            bail!(
+                "train outputs: got {}, manifest says {}",
+                outputs.len(),
+                self.manifest.train_outputs.len()
+            );
+        }
+
+        // Write back state (outputs are ordered params, momenta, bn state,
+        // then metrics — mirroring the state prefix of the inputs).
+        let mut out_iter = outputs.into_iter();
+        for v in state.values.iter_mut() {
+            *v = out_iter.next().unwrap();
+        }
+        let metrics: Vec<HostTensor> = out_iter.collect();
+
+        let mut sm = StepMetrics::default();
+        for (spec, tensor) in self.manifest.train_outputs[self.metric_offset..]
+            .iter()
+            .zip(metrics.iter())
+        {
+            match spec.name.as_str() {
+                "loss" => sm.loss = tensor.scalar()?,
+                "correct" => sm.correct = tensor.scalar()?,
+                "gate_fracs" => {
+                    sm.gate_fracs =
+                        tensor.as_f32()?.iter().map(|&v| v as f64).collect()
+                }
+                "psg_frac" => sm.psg_frac = Some(tensor.scalar()?),
+                other => bail!("unknown metric output {other}"),
+            }
+        }
+        Ok(sm)
+    }
+
+    /// Evaluate one batch with running BN stats + hard gates.
+    pub fn eval_batch_run(
+        &self,
+        state: &ModelState,
+        x: &HostTensor,
+        y: &HostTensor,
+    ) -> Result<EvalMetrics> {
+        let mut literals: Vec<xla::Literal> =
+            Vec::with_capacity(self.eval_state_idx.len() + 2);
+        for &i in &self.eval_state_idx {
+            literals.push(state.values[i].to_literal()?);
+        }
+        literals.push(x.to_literal()?);
+        literals.push(y.to_literal()?);
+        let outputs = self.eval.run_literals(&literals)?;
+
+        let mut em = EvalMetrics { total: y.elem_count(), ..Default::default() };
+        for (spec, tensor) in self.manifest.eval_outputs.iter().zip(outputs.iter()) {
+            match spec.name.as_str() {
+                "loss" => em.loss = tensor.scalar()?,
+                "correct" => em.correct = tensor.scalar()?,
+                "correct5" => em.correct5 = tensor.scalar()?,
+                "gate_fracs" => {
+                    em.gate_fracs =
+                        tensor.as_f32()?.iter().map(|&v| v as f64).collect()
+                }
+                other => bail!("unknown eval output {other}"),
+            }
+        }
+        Ok(em)
+    }
+}

@@ -1,0 +1,139 @@
+//! Host-side tensors crossing the PJRT boundary.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+/// A host tensor: shape + typed storage.  Only the two dtypes the AOT
+/// interface uses (f32 data / i32 labels) are represented.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        Self { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        Self { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product::<usize>().max(1);
+        Self::f32(shape.to_vec(), vec![0.0; n])
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// First element as f64 (metric scalars).
+    pub fn scalar(&self) -> Result<f64> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v[0] as f64),
+            TensorData::I32(v) => Ok(v[0] as f64),
+        }
+    }
+
+    /// Convert to an xla Literal of the right shape/dtype.
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => {
+                if self.shape.is_empty() {
+                    Literal::scalar(v[0])
+                } else {
+                    Literal::vec1(v).reshape(&dims)?
+                }
+            }
+            TensorData::I32(v) => {
+                if self.shape.is_empty() {
+                    Literal::scalar(v[0])
+                } else {
+                    Literal::vec1(v).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read a Literal back into a HostTensor (f32 or i32).
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Self::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Self::i32(dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape, vec![2, 3]);
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn roundtrip_scalar() {
+        let t = HostTensor::scalar_f32(3.5);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert!(back.shape.is_empty());
+        assert_eq!(back.scalar().unwrap(), 3.5);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let t = HostTensor::i32(vec![4], vec![1, 2, 3, 4]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        match back.data {
+            TensorData::I32(v) => assert_eq!(v, vec![1, 2, 3, 4]),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn zeros_and_counts() {
+        let t = HostTensor::zeros(&[3, 4]);
+        assert_eq!(t.elem_count(), 12);
+        assert!(t.as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,91 @@
+//! Micro-bench harness (no `criterion` on the offline testbed): warmup +
+//! timed iterations, reporting mean/p50/p95 with simple outlier-robust
+//! statistics.  Used by `benches/*.rs` (harness = false).
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "{:<40} {:>6} iters  mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}",
+            self.name,
+            self.iters,
+            fmt_t(self.mean_s),
+            fmt_t(self.p50_s),
+            fmt_t(self.p95_s),
+            fmt_t(self.min_s)
+        );
+    }
+}
+
+pub fn fmt_t(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Run `f` with `warmup` unmeasured + `iters` measured repetitions.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50_s: samples[samples.len() / 2],
+        p95_s: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        min_s: samples[0],
+    };
+    stats.report();
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut acc = 0u64;
+        let s = bench("busy", 1, 5, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.mean_s >= 0.0 && s.min_s <= s.p95_s);
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn formats() {
+        assert!(fmt_t(2e-9).ends_with("ns"));
+        assert!(fmt_t(2e-6).ends_with("µs"));
+        assert!(fmt_t(2e-3).ends_with("ms"));
+        assert!(fmt_t(2.0).ends_with('s'));
+    }
+}

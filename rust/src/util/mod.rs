@@ -1,0 +1,19 @@
+//! In-repo substrates for the offline testbed (no crates.io access
+//! beyond `xla`/`anyhow`):
+//!
+//! * [`json`] — JSON parser/writer (replaces serde_json)
+//! * [`rng`] — xoshiro256** PRNG (replaces rand)
+//! * [`cli`] — argv parsing (replaces clap)
+//! * [`bench`] — micro-bench harness (replaces criterion)
+//! * [`prop`] — seeded property testing (replaces proptest)
+//! * [`tmp`] — scratch dirs for tests (replaces tempfile)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tmp;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,87 @@
+//! Energy-model calibration pinned to the paper's anchor numbers
+//! (Sec. 4.4 / Table 3) — these are the claims the reproduction rests on,
+//! so they are tested, not just reported.
+
+use std::path::PathBuf;
+
+use e2train::energy::EnergyModel;
+use e2train::runtime::Manifest;
+
+fn manifest(method: &str) -> Option<Manifest> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join(format!("artifacts/resnet20-c10/{method}.json"));
+    p.exists().then(|| Manifest::load(&p).unwrap())
+}
+
+fn saving(method: &str, fracs: &[f64], psg: Option<f64>) -> Option<f64> {
+    let base_m = manifest("sgd32")?;
+    let m = manifest(method)?;
+    let e0 = EnergyModel::from_manifest(&base_m)
+        .train_step(&base_m.method, &[], None)
+        .total();
+    let e = EnergyModel::from_manifest(&m)
+        .train_step(&m.method, fracs, psg)
+        .total();
+    Some(1.0 - e / e0)
+}
+
+#[test]
+fn fixed8_saving_matches_paper_anchor() {
+    // Paper: 38.62% (8-bit fwd, 32-bit gradients).
+    if let Some(s) = saving("fixed8", &[], None) {
+        assert!((0.33..=0.45).contains(&s), "fixed8 saving {s}");
+    }
+}
+
+#[test]
+fn psg_saving_matches_paper_anchor() {
+    // Paper: 63.28% at >=60% predictor usage.
+    if let Some(s) = saving("psg", &[], Some(0.6)) {
+        assert!((0.55..=0.72).contains(&s), "psg saving {s}");
+    }
+}
+
+#[test]
+fn e2train_sweep_matches_table3() {
+    // Paper Table 3 (+SMD): skip 20/40/60% -> 84.6/88.7/92.8% savings.
+    let Some(m) = manifest("e2train") else { return };
+    let ng = m.num_gated();
+    let expected = [(0.2, 0.846), (0.4, 0.887), (0.6, 0.928)];
+    for (skip, paper) in expected {
+        let s = saving("e2train", &vec![1.0 - skip; ng], Some(0.6)).unwrap();
+        // +SMD halves the charged steps.
+        let with_smd = 1.0 - 0.5 * (1.0 - s);
+        assert!(
+            (with_smd - paper).abs() < 0.05,
+            "skip {skip}: measured {with_smd:.3} vs paper {paper}"
+        );
+    }
+}
+
+#[test]
+fn savings_monotone_in_skip_ratio() {
+    let Some(m) = manifest("e2train") else { return };
+    let ng = m.num_gated();
+    let mut prev = -1.0;
+    for skip in [0.0, 0.2, 0.4, 0.6, 0.8] {
+        let s = saving("e2train", &vec![1.0 - skip; ng], Some(0.6)).unwrap();
+        assert!(s > prev, "saving not monotone at skip {skip}");
+        prev = s;
+    }
+}
+
+#[test]
+fn signsgd_saves_little() {
+    // Paper leaves SignSGD's saving blank: it computes full gradients.
+    if let Some(s) = saving("signsgd", &[], None) {
+        assert!(s < 0.05, "signsgd saving {s} should be negligible");
+    }
+}
+
+#[test]
+fn gate_overhead_below_paper_bound() {
+    // Appendix C: RNNGates cost ~0.04% of the trunk FLOPs.
+    let Some(m) = manifest("e2train") else { return };
+    let frac = m.gate_flops as f64 / m.total_flops as f64;
+    assert!(frac < 0.005, "gate overhead {frac}");
+}

@@ -1,0 +1,241 @@
+//! End-to-end integration tests over the real AOT artifacts: PJRT load,
+//! train-step execution, state round-trips, the full Trainer loop, and
+//! the fine-tuning protocol.  All tests skip gracefully when artifacts
+//! haven't been built (`make artifacts`).
+
+use std::path::PathBuf;
+
+use e2train::config::{DataCfg, RunCfg};
+use e2train::coordinator::Trainer;
+use e2train::data::synthetic;
+use e2train::energy::EnergyModel;
+use e2train::runtime::{Engine, Manifest, ModelState, StepHyper, TrainProgram};
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("index.json").exists()
+}
+
+/// One engine per test: the PJRT client holds raw pointers (not Sync),
+/// so it cannot live in a shared static.  With the single-core test
+/// harness tests run serially and the per-test compile cost is bounded.
+fn engine() -> Engine {
+    Engine::cpu().expect("PJRT CPU client")
+}
+
+fn quick_cfg(method: &str, iters: u64) -> RunCfg {
+    let mut cfg = RunCfg::quick("resnet8-c10-tiny", method, iters);
+    cfg.artifacts_dir = artifacts();
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 256, n_test: 128, seed: 0 };
+    cfg
+}
+
+#[test]
+fn train_step_roundtrip_all_methods() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    for method in ["sgd32", "fixed8", "signsgd", "psg", "slu", "sd", "e2train", "headft"]
+    {
+        let eng = engine();
+        let path = artifacts().join("resnet8-c10-tiny").join(format!("{method}.json"));
+        let prog = TrainProgram::load(&eng, &path).unwrap();
+        let mut state = ModelState::init(&prog.manifest, 7);
+        let n0 = state.total_elems();
+        let data = synthetic::generate(10, 64, prog.manifest.arch.image_size, 0);
+        let mut sampler = e2train::data::Sampler::new(
+            data.n,
+            prog.batch(),
+            e2train::data::AugmentCfg::default(),
+            1,
+        );
+        let (x, y) = sampler.next_batch(&data);
+        let mask: Option<Vec<f32>> = (prog.manifest.method.gating == "mask")
+            .then(|| vec![1.0; prog.manifest.num_gated()]);
+        let sm = prog
+            .step(&mut state, &x, &y, StepHyper::lr(0.05), mask.as_deref())
+            .unwrap();
+        assert!(sm.loss.is_finite() && sm.loss > 0.0, "{method}: loss {}", sm.loss);
+        assert!(sm.correct >= 0.0 && sm.correct <= prog.batch() as f64);
+        assert_eq!(state.total_elems(), n0, "{method}: state shape drift");
+        if prog.manifest.method.gating != "none" {
+            assert_eq!(sm.gate_fracs.len(), prog.manifest.num_gated(), "{method}");
+        }
+        if prog.manifest.method.update == "psg" {
+            let f = sm.psg_frac.unwrap();
+            assert!((0.0..=1.0).contains(&f), "{method}: psg_frac {f}");
+        }
+        // eval path works on the same state (eval batch differs from
+        // the train batch — build one of the right size).
+        let eb = prog.eval_batch();
+        let hw = prog.manifest.arch.image_size;
+        let ed = synthetic::generate(10, eb, hw, 3);
+        let ex = e2train::runtime::HostTensor::f32(
+            vec![eb, hw, hw, 3],
+            ed.images.clone(),
+        );
+        let ey = e2train::runtime::HostTensor::i32(vec![eb], ed.labels.clone());
+        let em = prog.eval_batch_run(&state, &ex, &ey).unwrap();
+        assert!(em.loss.is_finite());
+        assert!(em.correct <= em.correct5 + 1e-9);
+    }
+}
+
+#[test]
+fn loss_decreases_on_fixed_batch() {
+    if !have_artifacts() {
+        return;
+    }
+    let eng = engine();
+    let path = artifacts().join("resnet8-c10-tiny/sgd32.json");
+    let prog = TrainProgram::load(&eng, &path).unwrap();
+    let mut state = ModelState::init(&prog.manifest, 3);
+    let data = synthetic::generate(10, 32, prog.manifest.arch.image_size, 5);
+    let mut sampler = e2train::data::Sampler::new(
+        data.n,
+        prog.batch(),
+        e2train::data::AugmentCfg { enabled: false, ..Default::default() },
+        2,
+    );
+    let (x, y) = sampler.next_batch(&data);
+    let mut losses = Vec::new();
+    for _ in 0..10 {
+        let sm = prog.step(&mut state, &x, &y, StepHyper::lr(0.05), None).unwrap();
+        losses.push(sm.loss);
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn trainer_end_to_end_with_smd() {
+    if !have_artifacts() {
+        return;
+    }
+    let eng = engine();
+    let mut cfg = quick_cfg("sgd32", 30);
+    cfg.smd.enabled = true;
+    cfg.smd.p = 0.5;
+    let mut trainer = Trainer::new(&eng, cfg).unwrap();
+    let out = trainer.run(None).unwrap();
+    let m = &out.metrics;
+    assert_eq!(m.steps_run + m.steps_skipped, 30);
+    assert!(m.steps_skipped > 5, "SMD skipped only {}", m.steps_skipped);
+    assert!(m.final_test_acc >= 0.0 && m.final_test_acc <= 1.0);
+    assert!(m.total_joules > 0.0);
+    // energy trace is monotone
+    let js: Vec<f64> = m.trace.iter().map(|p| p.joules).collect();
+    assert!(js.windows(2).all(|w| w[0] <= w[1]));
+}
+
+#[test]
+fn smd_halves_energy_vs_smb() {
+    if !have_artifacts() {
+        return;
+    }
+    let eng = engine();
+    let base = Trainer::new(&eng, quick_cfg("sgd32", 24))
+        .unwrap()
+        .run(None)
+        .unwrap();
+    let mut cfg = quick_cfg("sgd32", 24);
+    cfg.smd.enabled = true;
+    let smd = Trainer::new(&eng, cfg).unwrap().run(None).unwrap();
+    let ratio = smd.metrics.total_joules / base.metrics.total_joules;
+    assert!(ratio < 0.85, "SMD energy ratio {ratio} not < 0.85");
+}
+
+#[test]
+fn e2train_saves_energy_vs_sgd32() {
+    if !have_artifacts() {
+        return;
+    }
+    let eng = engine();
+    let base = Trainer::new(&eng, quick_cfg("sgd32", 20))
+        .unwrap()
+        .run(None)
+        .unwrap();
+    let e2 = Trainer::new(&eng, quick_cfg("e2train", 20))
+        .unwrap()
+        .run(None)
+        .unwrap();
+    let saving = 1.0 - e2.metrics.total_joules / base.metrics.total_joules;
+    // SMD (x0.5) + PSG precision + SLU skipping: must save well over half.
+    assert!(saving > 0.5, "e2train saving only {saving}");
+    assert!(e2.metrics.mean_psg_frac.is_some());
+}
+
+#[test]
+fn sd_method_runs_with_masks() {
+    if !have_artifacts() {
+        return;
+    }
+    let eng = engine();
+    let mut cfg = quick_cfg("sd", 10);
+    cfg.sd.p_l = 0.3;
+    let out = Trainer::new(&eng, cfg).unwrap().run(None).unwrap();
+    // mean gate activity should reflect the aggressive drop schedule
+    let mean: f64 = out.metrics.mean_gate_fracs.iter().sum::<f64>()
+        / out.metrics.mean_gate_fracs.len().max(1) as f64;
+    assert!(mean < 0.95, "sd mean gate {mean}");
+}
+
+#[test]
+fn seeds_reproduce_exactly() {
+    if !have_artifacts() {
+        return;
+    }
+    let eng = engine();
+    let a = Trainer::new(&eng, quick_cfg("sgd32", 8))
+        .unwrap()
+        .run(None)
+        .unwrap();
+    let b = Trainer::new(&eng, quick_cfg("sgd32", 8))
+        .unwrap()
+        .run(None)
+        .unwrap();
+    assert_eq!(a.metrics.final_test_acc, b.metrics.final_test_acc);
+    assert_eq!(a.metrics.total_joules, b.metrics.total_joules);
+    let la: Vec<f64> = a.metrics.trace.iter().map(|p| p.loss).collect();
+    let lb: Vec<f64> = b.metrics.trace.iter().map(|p| p.loss).collect();
+    assert_eq!(la, lb);
+}
+
+#[test]
+fn finetune_state_carries_over() {
+    if !have_artifacts() {
+        return;
+    }
+    // Pre-train, then verify resuming from the returned state beats a
+    // fresh init on the same eval set (the Sec. 4.5 mechanism).
+    let eng = engine();
+    let mut pre = Trainer::new(&eng, quick_cfg("sgd32", 40)).unwrap();
+    let out = pre.run(None).unwrap();
+    let (acc_resume, _, _) = pre.evaluate_full(&out.state).unwrap();
+    let fresh = ModelState::init(&pre.program.manifest, 99);
+    let (acc_fresh, _, _) = pre.evaluate_full(&fresh).unwrap();
+    assert!(
+        acc_resume > acc_fresh,
+        "trained {acc_resume} <= fresh {acc_fresh}"
+    );
+}
+
+#[test]
+fn energy_model_matches_manifest_blocks() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load(&artifacts().join("resnet8-c10-tiny/e2train.json")).unwrap();
+    let em = EnergyModel::from_manifest(&m);
+    assert_eq!(em.blocks.len(), m.blocks.len());
+    // full-active step charges more than half-active
+    let full = em.train_step(&m.method, &vec![1.0; m.num_gated()], Some(0.6));
+    let half = em.train_step(&m.method, &vec![0.5; m.num_gated()], Some(0.6));
+    assert!(half.total() < full.total());
+}

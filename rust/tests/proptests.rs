@@ -1,0 +1,191 @@
+//! Property-based tests over coordinator invariants, using the in-repo
+//! seeded property harness (`util::prop`).  Each property runs across a
+//! few hundred randomized cases; failures report the replayable seed.
+
+use e2train::coordinator::{SdScheduler, SmdScheduler};
+use e2train::data::{synthetic, AugmentCfg, Sampler};
+use e2train::energy::{EnergyBreakdown, EnergyLedger, OpEnergies};
+use e2train::optim::LrSchedule;
+use e2train::util::json::{parse, Json};
+use e2train::util::prop;
+
+#[test]
+fn prop_lr_schedule_monotone_nonincreasing() {
+    prop::check(200, |rng| {
+        let total = rng.range_usize(10, 100_000) as u64;
+        let lr0 = rng.range_f64(1e-4, 1.0);
+        let s = LrSchedule::paper_default(lr0, total);
+        let mut prev = f64::INFINITY;
+        for i in 0..8 {
+            let at = total * i / 8;
+            let lr = s.at(at);
+            assert!(lr <= prev + 1e-15, "lr increased at {at}");
+            assert!(lr > 0.0);
+            prev = lr;
+        }
+    });
+}
+
+#[test]
+fn prop_lr_scaling_preserves_relative_boundaries() {
+    prop::check(200, |rng| {
+        let old = rng.range_usize(100, 1_000_000) as u64;
+        let new = rng.range_usize(100, 1_000_000) as u64;
+        let s = LrSchedule::paper_default(0.1, old).scaled_to(old, new);
+        // decays happen at ~1/2 and ~3/4 of the new budget
+        assert_eq!(s.at(0), 0.1);
+        assert!(s.at(new) < 0.011);
+    });
+}
+
+#[test]
+fn prop_smd_drop_rate_concentrates() {
+    prop::check(30, |rng| {
+        let p = rng.range_f64(0.05, 0.95);
+        let mut smd = SmdScheduler::new(true, p, rng.next_u64());
+        let n = 20_000;
+        let mut dropped = 0;
+        for _ in 0..n {
+            if smd.skip() {
+                dropped += 1;
+            }
+        }
+        let emp = dropped as f64 / n as f64;
+        assert!((emp - p).abs() < 0.03, "p={p} emp={emp}");
+    });
+}
+
+#[test]
+fn prop_sd_survival_monotone_in_depth() {
+    prop::check(200, |rng| {
+        let n = rng.range_usize(1, 40);
+        let p_l = rng.range_f64(0.0, 1.0);
+        let mut sd = SdScheduler::new(n, p_l, rng.next_u64());
+        let mask = sd.sample();
+        assert_eq!(mask.len(), n);
+        assert!(mask.iter().all(|&v| v == 0.0 || v == 1.0));
+        assert!(sd.mean_survival() >= p_l - 1e-12);
+        assert!(sd.mean_survival() <= 1.0 + 1e-12);
+    });
+}
+
+#[test]
+fn prop_sampler_epoch_is_permutation() {
+    prop::check(40, |rng| {
+        let n = rng.range_usize(2, 40) * 4;
+        let batch = 4;
+        let data = synthetic::generate(4, n, 4, rng.next_u64());
+        let mut s = Sampler::new(
+            n,
+            batch,
+            AugmentCfg { enabled: false, ..Default::default() },
+            rng.next_u64(),
+        );
+        let mut labels = Vec::new();
+        for _ in 0..n / batch {
+            let (_, y) = s.next_batch(&data);
+            match &y.data {
+                e2train::runtime::TensorData::I32(v) => labels.extend(v.iter().copied()),
+                _ => unreachable!(),
+            }
+        }
+        // one epoch sees exactly the dataset's label multiset
+        let mut seen = labels.clone();
+        let mut expect = data.labels.clone();
+        seen.sort_unstable();
+        expect.sort_unstable();
+        assert_eq!(seen, expect);
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_bits_and_activity() {
+    prop::check(200, |rng| {
+        let e = OpEnergies::default();
+        let b1 = rng.range_usize(1, 32) as u32;
+        let b2 = rng.range_usize(1, 32) as u32;
+        // MAC monotone in each operand width
+        if b1 < 32 {
+            assert!(e.mac(b1, b2) < e.mac(b1 + 1, b2) + 1e-12);
+        }
+        // movement linear in width
+        let w = rng.range_f64(1.0, 1e6);
+        assert!((e.dram(w, 16) - 0.5 * e.dram(w, 32)).abs() < 1e-6);
+        assert!((e.sram(w, 8) - 0.25 * e.sram(w, 32)).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_ledger_total_equals_sum_of_charges() {
+    prop::check(100, |rng| {
+        let mut ledger = EnergyLedger::default();
+        let steps = rng.range_usize(1, 50);
+        let mut expect = 0.0;
+        for i in 0..steps {
+            let e = EnergyBreakdown {
+                fwd_mac: rng.range_f64(0.0, 1e9),
+                bwd_mac: rng.range_f64(0.0, 1e9),
+                sram: rng.range_f64(0.0, 1e9),
+                dram: rng.range_f64(0.0, 1e9),
+                update: rng.range_f64(0.0, 1e9),
+            };
+            expect += e.total();
+            ledger.charge(i as u64, &e, 1.0);
+        }
+        assert!((ledger.total_joules() - expect * 1e-12).abs() < expect * 1e-20 + 1e-18);
+        assert_eq!(ledger.steps_charged, steps as u64);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    prop::check(300, |rng| {
+        // Build a random JSON value, print, reparse, compare.
+        fn build(rng: &mut e2train::util::Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bool(0.5)),
+                2 => Json::num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+                3 => {
+                    let n = rng.below(8);
+                    Json::str(
+                        (0..n)
+                            .map(|_| {
+                                let c = rng.below(96) as u8 + 32;
+                                c as char
+                            })
+                            .collect::<String>(),
+                    )
+                }
+                4 => Json::arr((0..rng.below(4)).map(|_| build(rng, depth - 1))),
+                _ => Json::obj(
+                    (0..rng.below(4))
+                        .map(|i| {
+                            let key = format!("k{i}");
+                            (key, build(rng, depth - 1))
+                        })
+                        .collect::<Vec<_>>()
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), v.clone()))
+                        .collect(),
+                ),
+            }
+        }
+        let v = build(rng, 3);
+        let text = v.to_string();
+        let back = parse(&text).unwrap();
+        assert_eq!(back, v, "roundtrip failed for {text}");
+    });
+}
+
+#[test]
+fn prop_rng_range_bounds() {
+    prop::check(300, |rng| {
+        let lo = rng.range_f64(-100.0, 100.0);
+        let hi = lo + rng.range_f64(0.001, 100.0);
+        let v = rng.range_f64(lo, hi);
+        assert!(v >= lo && v < hi);
+        let n = rng.range_usize(1, 1000);
+        assert!(rng.below(n) < n);
+    });
+}

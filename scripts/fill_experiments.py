@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Render results/*.json (from `e2train exp all`) into the EXPERIMENTS.md
+results section, paper reference values inline."""
+import json, sys, pathlib
+
+R = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "results")
+
+def load(name):
+    p = R / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+out = []
+def w(s=""): out.append(s)
+
+f = load("fig3a")
+if f:
+    w("### Fig. 3a — SMD vs SMB across energy ratios")
+    w()
+    w("Paper: SMD beats SMB by **+0.39%..+0.86%** at every matched ratio.")
+    w()
+    w("| energy ratio | SMB acc | SMD acc | Δ |")
+    w("|---|---|---|---|")
+    wins = 0
+    for r in f["rows"]:
+        d = (r["smd_acc"] - r["smb_acc"]) * 100
+        wins += d > 0
+        w(f"| {r['ratio']:.3f} | {r['smb_acc']*100:.2f}% | {r['smd_acc']*100:.2f}% | {d:+.2f}% |")
+    w()
+    w(f"Measured: SMD wins at {wins}/{len(f['rows'])} ratios.")
+    w()
+
+f = load("fig3b")
+if f:
+    w("### Fig. 3b — SMD vs SMB + tuned LR (equal 2/3 budget)")
+    w()
+    w("Paper: SMD keeps ≥ **+0.22%** over the best SMB learning rate.")
+    w()
+    smbs = [r for r in f["rows"] if r["method"] == "smb"]
+    smd = [r for r in f["rows"] if r["method"] == "smd"][0]
+    best = max(smbs, key=lambda r: r["acc"])
+    w("| method | acc |")
+    w("|---|---|")
+    for r in smbs:
+        w(f"| SMB lr0={r['lr0']:.2f} | {r['acc']*100:.2f}% |")
+    w(f"| **SMD p=1/3** | **{smd['acc']*100:.2f}%** |")
+    w()
+    w(f"Measured Δ vs best SMB (lr0={best['lr0']:.2f}): {(smd['acc']-best['acc'])*100:+.2f}%.")
+    w()
+
+f = load("tab1")
+if f:
+    w("### Table 1 — SMD on other datasets/backbones (energy ratio 0.67)")
+    w()
+    w("Paper: C10/ResNet-110 92.75→93.05 (+0.30), C100/ResNet-74 71.11→71.37 (+0.26).")
+    w()
+    w("| workload | SMB | SMD | Δ |")
+    w("|---|---|---|---|")
+    for r in f["rows"]:
+        d = (r["smd_acc"] - r["smb_acc"]) * 100
+        w(f"| {r['workload']} | {r['smb_acc']*100:.2f}% | {r['smd_acc']*100:.2f}% | {d:+.2f}% |")
+    w()
+
+f = load("fig4")
+if f:
+    w("### Fig. 4 — SLU vs SD vs SLU+SMD")
+    w()
+    w(f"Paper: SLU above SD at every matched energy; SLU+SMD better still. Baseline (SMB) acc here: {f['baseline_acc']*100:.2f}%.")
+    w()
+    w("| α | skip | SLU acc (E/E₀) | SD acc (E/E₀) | SLU+SMD acc (E/E₀) |")
+    w("|---|---|---|---|---|")
+    for r in f["rows"]:
+        w(f"| {r['alpha']} | {r['skip']*100:.0f}% | "
+          f"{r['slu']['acc']*100:.2f}% ({r['slu']['ratio']:.2f}) | "
+          f"{r['sd']['acc']*100:.2f}% ({r['sd']['ratio']:.2f}) | "
+          f"{r['slu_smd']['acc']*100:.2f}% ({r['slu_smd']['ratio']:.2f}) |")
+    w()
+
+f = load("tab2")
+if f:
+    w("### Table 2 — precision ablation (SGD-32 / 8-bit / SignSGD / PSG)")
+    w()
+    w("Paper: 32b 93.52 | 8bit 93.24 (38.6% save) | SignSGD 92.54 | PSG 92.59 (63.3% save).")
+    w()
+    w("| method | acc | energy saving |")
+    w("|---|---|---|")
+    for r in f["rows"]:
+        w(f"| {r['method']} | {r['acc']*100:.2f}% | {r['saving']*100:.1f}% |")
+    w()
+
+f = load("tab3")
+if f:
+    w("### Table 3 — E²-Train skipping/threshold sweep")
+    w()
+    w("Paper (β=.05): skip 20/40/60% → acc 92.12/91.84/91.36, energy save 84.6/88.7/92.8%.")
+    w()
+    w("| β | α | skip | acc | comp. saving | energy saving |")
+    w("|---|---|---|---|---|---|")
+    for r in f["rows"]:
+        w(f"| {r['beta']} | {r['alpha']} | {r['skip']*100:.0f}% | {r['acc']*100:.2f}% "
+          f"| {r['comp_saving']*100:.1f}% | {r['energy_saving']*100:.1f}% |")
+    w()
+
+f = load("fig5")
+if f:
+    w("### Fig. 5 — convergence: test accuracy vs cumulative energy")
+    w()
+    w("Paper: E²-Train converges at least as fast per joule.")
+    w()
+    for c in f["curves"]:
+        pts = "  ".join(f"{j:.2f}J→{a*100:.0f}%" for j, a in c["points"])
+        w(f"- **{c['label']}** (final {c['final_acc']*100:.2f}%): {pts}")
+    w()
+
+f = load("tab4")
+if f:
+    w("### Table 4 — other backbones/datasets")
+    w()
+    w("Paper: e.g. C10/ResNet-110 E²-Train 83.4% saving at −0.56% acc; MobileNetV2 88.7% saving at −0.41%.")
+    w()
+    w("| workload | method | top-1 | top-5 | comp. save | energy save |")
+    w("|---|---|---|---|---|---|")
+    for r in f["rows"]:
+        t5 = f"{r['acc5']*100:.2f}%" if "acc5" in r else "-"
+        cs = f"{r['comp_saving']*100:.1f}%" if "comp_saving" in r else "-"
+        es = f"{r['energy_saving']*100:.1f}%" if "energy_saving" in r else "-"
+        w(f"| {r['workload']} | {r['method']} | {r['acc']*100:.2f}% | {t5} | {cs} | {es} |")
+    w()
+
+f = load("finetune")
+if f:
+    w("### Sec. 4.5 — adapting a pre-trained model")
+    w()
+    w("Paper: head-only FT +0.30% vs E²-Train FT +1.37%, E²-Train 61.6% cheaper.")
+    w()
+    w(f"- pre-trained acc: {f['pretrain_acc']*100:.2f}%")
+    w(f"- head-only FT: {f['headft_delta']*100:+.2f}% @ {f['headft_joules']:.3f} J")
+    w(f"- E²-Train FT: {f['e2t_delta']*100:+.2f}% @ {f['e2t_joules']:.3f} J")
+    w(f"- E²-Train energy saving vs head-only: {f['saving_vs_headft']*100:.1f}%")
+    w()
+
+text = "\n".join(out)
+md = pathlib.Path("EXPERIMENTS.md").read_text()
+md = md.replace("<!-- RESULTS -->", text)
+pathlib.Path("EXPERIMENTS.md").write_text(md)
+print(f"filled EXPERIMENTS.md with {len(out)} lines")
