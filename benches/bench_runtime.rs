@@ -1,26 +1,79 @@
 //! Runtime micro-benchmarks (in-repo harness; criterion is unavailable
-//! offline): per-method train-step latency, eval latency, data pipeline,
-//! and the host-side energy-model cost.  These are the L3 perf numbers
-//! recorded in EXPERIMENTS.md §Perf.
+//! offline): host-path vs resident-path train-step latency, trainer
+//! throughput with/without prefetch, per-method step latency over real
+//! AOT artifacts when present, data pipeline and energy-model cost.
+//!
+//! The host-vs-resident comparison runs on the generated reference
+//! family, so it works on every machine; its results land in
+//! `BENCH_runtime.json` at the repo root (schema bench_runtime/v1),
+//! which tracks the perf trajectory across PRs — see PERF.md.
 
 use std::path::PathBuf;
 
 use e2train::data::{synthetic, AugmentCfg, Sampler};
 use e2train::energy::EnergyModel;
-use e2train::runtime::{Engine, ModelState, StepHyper, TrainProgram};
+use e2train::runtime::{
+    write_reference_family, Engine, ModelState, RefFamilySpec, StepHyper, TrainProgram,
+};
 use e2train::util::bench::bench;
+use e2train::util::perf;
+use e2train::util::tmp::TempDir;
 
 fn artifacts() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+/// Always-on section: the resident-state + prefetch story, measured on
+/// the reference backend at bench scale.
+fn bench_reference_paths() {
+    let tmp = TempDir::new().expect("temp dir");
+    let spec = RefFamilySpec::bench();
+    write_reference_family(tmp.path(), &spec).expect("reference family");
+    let engine = Engine::cpu().expect("engine");
+
+    println!("== host path vs resident path ({}, reference backend) ==", spec.family);
+    let mut steps = Vec::new();
+    for method in ["sgd32", "e2train"] {
+        let cmp = perf::compare_step_paths(&engine, tmp.path(), &spec.family, method, 5, 40)
+            .expect("step comparison");
+        println!(
+            "  {method:<8} resident is {:.2}x the host path per step",
+            cmp.speedup()
+        );
+        steps.push(cmp);
+    }
+
+    println!("\n== trainer throughput, prefetch on vs off (resident path) ==");
+    let prefetch = perf::compare_prefetch(&engine, tmp.path(), &spec.family, "sgd32", 120)
+        .expect("prefetch comparison");
+    println!(
+        "  steps/s: {:.1} with prefetch, {:.1} without",
+        prefetch.steps_per_sec_on, prefetch.steps_per_sec_off
+    );
+
+    let report = perf::bench_report(
+        "bench_runtime (release profile)",
+        &spec.family,
+        &steps,
+        &prefetch,
+    );
+    perf::write_bench_report(&repo_root().join("BENCH_runtime.json"), &report)
+        .expect("writing BENCH_runtime.json");
+}
+
 fn main() {
+    bench_reference_paths();
+
     if !artifacts().join("index.json").exists() {
-        eprintln!("artifacts not built — run `make artifacts` first");
+        eprintln!("\nAOT artifacts not built (`make artifacts`) — skipping PJRT sections");
         return;
     }
     let engine = Engine::cpu().expect("PJRT CPU client");
-    println!("== train-step latency per method (resnet8-c10-tiny, batch 32) ==");
+    println!("\n== train-step latency per method (resnet8-c10-tiny, batch 32) ==");
     for method in ["sgd32", "fixed8", "signsgd", "psg", "slu", "sd", "e2train"] {
         let prog = TrainProgram::load(
             &engine,

@@ -127,10 +127,18 @@ def relu6(x: jnp.ndarray) -> jnp.ndarray:
 def softmax_xent(
     logits: jnp.ndarray, labels: jnp.ndarray
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Mean cross-entropy + per-batch correct count (f32 scalar)."""
+    """Mean cross-entropy + per-batch correct count (f32 scalar).
+
+    Rows with a negative label are padding (the coordinator pads eval
+    tail batches with label -1) and contribute exactly zero to both
+    metrics; without the mask, negative indices would wrap to the last
+    class and charge loss for padded rows.
+    """
     logp = jax.nn.log_softmax(logits)
     n = logits.shape[0]
-    nll = -logp[jnp.arange(n), labels]
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    nll = -logp[jnp.arange(n), safe] * valid.astype(logp.dtype)
     correct = jnp.sum(
         (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
     )

@@ -428,11 +428,14 @@ def build_eval_step(
         loss, correct = L.softmax_xent(logits, y)
         # top-5 via ranks (lax.top_k lowers to an HLO `topk` attribute the
         # xla_extension 0.5.1 text parser rejects): the label is in the
-        # top-k iff fewer than k logits strictly exceed it.
+        # top-k iff fewer than k logits strictly exceed it.  Negative
+        # labels are eval-tail padding: masked out, never a top-k hit.
         k = min(5, logits.shape[-1])
-        ly = logits[jnp.arange(logits.shape[0]), y]
+        valid = y >= 0
+        safe_y = jnp.where(valid, y, 0)
+        ly = logits[jnp.arange(logits.shape[0]), safe_y]
         rank = jnp.sum((logits > ly[:, None]).astype(jnp.int32), axis=1)
-        correct5 = jnp.sum((rank < k).astype(jnp.float32))
+        correct5 = jnp.sum(((rank < k) & valid).astype(jnp.float32))
         out = [loss, correct, correct5]
         if method.gating == "learned":
             out.append(jnp.stack(fracs))

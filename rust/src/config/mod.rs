@@ -73,6 +73,14 @@ pub struct RunCfg {
     pub alpha: f64,
     /// PSG adaptive-threshold ratio (Sec. 3.3); runtime scalar input.
     pub beta: f64,
+    /// Keep model state in device-resident buffers across steps (the
+    /// default).  `false` forces the legacy host path — every step
+    /// round-trips the full state through host tensors; kept for the
+    /// equivalence tests and perf baselines.
+    pub resident: bool,
+    /// Assemble/augment batches on a background thread (double-buffered).
+    /// `false` samples synchronously inside the step loop.
+    pub prefetch: bool,
     pub artifacts_dir: PathBuf,
 }
 
@@ -97,6 +105,8 @@ impl RunCfg {
             swa: matches!(method, "psg" | "e2train"),
             alpha: 1.0,
             beta: 0.05,
+            resident: true,
+            prefetch: true,
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -157,6 +167,8 @@ impl RunCfg {
             ("swa", Json::Bool(self.swa)),
             ("alpha", Json::num(self.alpha)),
             ("beta", Json::num(self.beta)),
+            ("resident", Json::Bool(self.resident)),
+            ("prefetch", Json::Bool(self.prefetch)),
             (
                 "artifacts_dir",
                 Json::str(self.artifacts_dir.to_string_lossy()),
@@ -212,6 +224,8 @@ impl RunCfg {
         cfg.swa = v.get("swa").and_then(Json::as_bool).unwrap_or(cfg.swa);
         cfg.alpha = v.get("alpha").and_then(Json::as_f64).unwrap_or(1.0);
         cfg.beta = v.get("beta").and_then(Json::as_f64).unwrap_or(0.05);
+        cfg.resident = v.get("resident").and_then(Json::as_bool).unwrap_or(true);
+        cfg.prefetch = v.get("prefetch").and_then(Json::as_bool).unwrap_or(true);
         if let Some(d) = v.get("artifacts_dir").and_then(Json::as_str) {
             cfg.artifacts_dir = PathBuf::from(d);
         }
@@ -241,6 +255,8 @@ mod tests {
         let mut cfg = RunCfg::quick("resnet8-c10-tiny", "e2train", 100);
         cfg.alpha = 2.5;
         cfg.eval_every = 10;
+        cfg.resident = false;
+        cfg.prefetch = false;
         let dir = TempDir::new().unwrap();
         let p = dir.path().join("run.json");
         cfg.save(&p).unwrap();
@@ -252,6 +268,7 @@ mod tests {
         assert_eq!(back.alpha, 2.5);
         assert_eq!(back.eval_every, 10);
         assert_eq!(back.lr, cfg.lr);
+        assert!(!back.resident && !back.prefetch);
     }
 
     #[test]

@@ -2,19 +2,33 @@
 //! artifact loading, state init, data pipeline, the step loop with
 //! SMD/SD/SWA hooks, per-step energy charging, eval, and metrics.
 //!
-//! Everything here is rust; the only compute delegated outwards is the
-//! AOT train/eval executable (PJRT CPU).
+//! The step loop is buffer-resident and overlapped by default:
+//!
+//! * model state lives in a [`DeviceState`] across steps (only metric
+//!   outputs sync to host each iteration; `sync_to_host` runs only for
+//!   SWA snapshots / fine-tune handoff / end-of-run);
+//! * batch assembly + augmentation run on a background prefetch thread
+//!   with a bounded double-buffered channel, so data prep overlaps
+//!   executable dispatch — an SMD skip consumes a staged batch without
+//!   stalling.
+//!
+//! `cfg.resident = false` / `cfg.prefetch = false` select the legacy
+//! synchronous host path; for fixed seeds both paths produce
+//! bitwise-identical metrics (tests/resident_equivalence.rs).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{DataCfg, RunCfg};
-use crate::data::{cifar, synthetic, AugmentCfg, Dataset, Sampler};
+use crate::data::{cifar, prefetch, synthetic, AugmentCfg, Dataset, Prefetcher, Sampler};
 use crate::energy::{EnergyLedger, EnergyModel};
 use crate::metrics::{Mean, RunMetrics};
 use crate::optim::SwaState;
-use crate::runtime::{Engine, HostTensor, ModelState, StepHyper, TrainProgram};
+use crate::runtime::{
+    DeviceState, Engine, EvalMetrics, HostTensor, ModelState, StepHyper, TrainProgram,
+};
 
 use super::sd::SdScheduler;
 use super::smd::SmdScheduler;
@@ -27,12 +41,54 @@ pub struct RunOutcome {
     pub ledger: EnergyLedger,
 }
 
+/// Where the model state lives during the step loop.
+enum LoopState {
+    /// Legacy host path: full state converts in/out every step.
+    Host(ModelState),
+    /// Resident path: state stays in backend-native buffers.
+    Device(DeviceState),
+}
+
+impl LoopState {
+    /// Materialize a host copy (SWA snapshots).
+    fn snapshot(&self) -> Result<ModelState> {
+        match self {
+            LoopState::Host(s) => Ok(s.clone()),
+            LoopState::Device(d) => d.sync_to_host(),
+        }
+    }
+
+    /// Consume into a host state (end of run).
+    fn into_model_state(self) -> Result<ModelState> {
+        match self {
+            LoopState::Host(s) => Ok(s),
+            LoopState::Device(d) => d.into_host(),
+        }
+    }
+}
+
+/// The training batch stream: synchronous sampling or the prefetch
+/// worker.  Both produce the identical deterministic stream for a seed.
+enum BatchSource {
+    Sync(Sampler),
+    Prefetch(Prefetcher),
+}
+
+impl BatchSource {
+    fn next_batch(&mut self, data: &Dataset) -> (HostTensor, HostTensor) {
+        match self {
+            BatchSource::Sync(s) => s.next_batch(data),
+            BatchSource::Prefetch(p) => p.next_batch(),
+        }
+    }
+}
+
 pub struct Trainer<'e> {
     engine: &'e Engine,
     pub cfg: RunCfg,
     pub program: TrainProgram,
     pub energy: EnergyModel,
-    train_set: Dataset,
+    train_set: Arc<Dataset>,
     test_set: Dataset,
 }
 
@@ -41,7 +97,14 @@ impl<'e> Trainer<'e> {
         let program = TrainProgram::load(engine, &cfg.manifest_path())?;
         let energy = EnergyModel::from_manifest(&program.manifest);
         let (train_set, test_set) = Self::load_data(&cfg, &program)?;
-        Ok(Self { engine, cfg, program, energy, train_set, test_set })
+        Ok(Self {
+            engine,
+            cfg,
+            program,
+            energy,
+            train_set: Arc::new(train_set),
+            test_set,
+        })
     }
 
     fn load_data(cfg: &RunCfg, program: &TrainProgram) -> Result<(Dataset, Dataset)> {
@@ -71,7 +134,7 @@ impl<'e> Trainer<'e> {
 
     /// Replace the datasets (fine-tuning experiment, Sec. 4.5).
     pub fn set_data(&mut self, train: Dataset, test: Dataset) {
-        self.train_set = train;
+        self.train_set = Arc::new(train);
         self.test_set = test;
     }
 
@@ -80,18 +143,34 @@ impl<'e> Trainer<'e> {
     pub fn run(&mut self, from_state: Option<ModelState>) -> Result<RunOutcome> {
         let t0 = Instant::now();
         let m = &self.program.manifest;
-        let mut state = match from_state {
+        let init_state = match from_state {
             // Name-based migration handles method changes (e.g. resuming
             // a sgd32-pretrained trunk under e2train, which adds gates).
             Some(s) => ModelState::init_from(m, self.cfg.seed, &s),
             None => ModelState::init(m, self.cfg.seed),
         };
-        let mut sampler = Sampler::new(
-            self.train_set.n,
-            self.program.batch(),
-            AugmentCfg::default(),
-            self.cfg.seed ^ 0xda7a,
-        );
+        let mut loop_state = if self.cfg.resident {
+            LoopState::Device(self.program.upload_state(init_state)?)
+        } else {
+            LoopState::Host(init_state)
+        };
+        let sampler_seed = self.cfg.seed ^ 0xda7a;
+        let mut source = if self.cfg.prefetch {
+            BatchSource::Prefetch(Prefetcher::spawn(
+                self.train_set.clone(),
+                self.program.batch(),
+                AugmentCfg::default(),
+                sampler_seed,
+                prefetch::DEFAULT_DEPTH,
+            ))
+        } else {
+            BatchSource::Sync(Sampler::new(
+                self.train_set.n,
+                self.program.batch(),
+                AugmentCfg::default(),
+                sampler_seed,
+            ))
+        };
         let mut smd =
             SmdScheduler::new(self.cfg.smd.enabled, self.cfg.smd.p, self.cfg.seed ^ 0x50d);
         let num_gated = m.num_gated();
@@ -112,18 +191,27 @@ impl<'e> Trainer<'e> {
             if smd.skip() {
                 // SMD: the batch is consumed (sampling with limited
                 // replacement, Sec. 3.1) but never executed or charged.
-                let _ = sampler.next_batch(&self.train_set);
+                // With prefetch on, the staged batch is simply dropped —
+                // no stall.
+                let _ = source.next_batch(&self.train_set);
                 ledger.skip();
                 continue;
             }
-            let (x, y) = sampler.next_batch(&self.train_set);
+            let (x, y) = source.next_batch(&self.train_set);
             let mask = if needs_mask { Some(sd.sample()) } else { None };
             let hp = StepHyper {
                 lr,
                 alpha: self.cfg.alpha as f32,
                 beta: self.cfg.beta as f32,
             };
-            let sm = self.program.step(&mut state, &x, &y, hp, mask.as_deref())?;
+            let sm = match &mut loop_state {
+                LoopState::Host(st) => {
+                    self.program.step(st, &x, &y, hp, mask.as_deref())?
+                }
+                LoopState::Device(ds) => {
+                    self.program.step_device(ds, &x, &y, hp, mask.as_deref())?
+                }
+            };
 
             // Energy: SD masks are per-batch gate fractions too.
             let fracs: Vec<f64> = if !sm.gate_fracs.is_empty() {
@@ -143,13 +231,15 @@ impl<'e> Trainer<'e> {
                 psg_mean.push(p);
             }
 
-            // SWA (enabled for PSG-family runs, Sec. 4.1).
+            // SWA (enabled for PSG-family runs, Sec. 4.1).  This is one
+            // of the few places resident state syncs to host.
             if self.cfg.swa && swa.should_average(iter) {
                 let w = swa.observe();
+                let snap = loop_state.snapshot()?;
                 match &mut swa_model {
-                    None => swa_model = Some(state.clone()),
+                    None => swa_model = Some(snap),
                     Some(sw) => {
-                        sw.average_params_from(&state, w, self.program.num_params)
+                        sw.average_params_from(&snap, w, self.program.num_params)
                     }
                 }
             }
@@ -159,7 +249,7 @@ impl<'e> Trainer<'e> {
                 let test_acc = if self.cfg.eval_every > 0
                     && iter % self.cfg.eval_every == 0
                 {
-                    Some(self.evaluate(&state)?.0)
+                    Some(self.evaluate_loop_state(&loop_state)?.0)
                 } else {
                     None
                 };
@@ -168,7 +258,10 @@ impl<'e> Trainer<'e> {
         }
 
         // Final evaluation — SWA weights if averaging ran.
-        let final_state = swa_model.unwrap_or_else(|| state.clone());
+        let final_state = match swa_model {
+            Some(sw) => sw,
+            None => loop_state.into_model_state()?,
+        };
         let (acc, acc5, loss) = self.evaluate_full(&final_state)?;
         metrics.final_test_acc = acc;
         metrics.final_test_acc_top5 = acc5;
@@ -195,26 +288,50 @@ impl<'e> Trainer<'e> {
         Ok(RunOutcome { metrics, state: final_state, ledger })
     }
 
-    fn evaluate(&self, state: &ModelState) -> Result<(f64, f64)> {
-        let (acc, acc5, _) = self.evaluate_full(state)?;
-        Ok((acc, acc5))
+    fn evaluate_loop_state(&self, ls: &LoopState) -> Result<(f64, f64, f64)> {
+        match ls {
+            LoopState::Host(s) => self.evaluate_full(s),
+            LoopState::Device(d) => self.evaluate_full_device(d),
+        }
     }
 
-    /// Accuracy over the full test set in eval_batch chunks.
+    /// (accuracy, top5, loss) over the full test set in `eval_batch`
+    /// chunks, host-path state.
     pub fn evaluate_full(&self, state: &ModelState) -> Result<(f64, f64, f64)> {
+        self.eval_batches(|x, y| self.program.eval_batch_run(state, x, y))
+    }
+
+    /// Same, straight from resident state — the model never syncs to
+    /// host, only metric scalars come back per batch.
+    pub fn evaluate_full_device(&self, state: &DeviceState) -> Result<(f64, f64, f64)> {
+        self.eval_batches(|x, y| self.program.eval_batch_device(state, x, y))
+    }
+
+    /// Drive `run_batch` over the whole test set, including the tail
+    /// remainder when `eval_batch` does not divide it: the last chunk is
+    /// padded with zero images and label `-1`.  Padded rows contribute
+    /// nothing to any metric (`one_hot(-1) == 0` zeroes their loss and
+    /// `-1` never matches a prediction), so totals are normalized by the
+    /// true sample count.  The seed runtime silently dropped up to
+    /// `eval_batch - 1` trailing samples — and errored on test sets
+    /// smaller than one eval batch, which now just work.
+    fn eval_batches(
+        &self,
+        mut run_batch: impl FnMut(&HostTensor, &HostTensor) -> Result<EvalMetrics>,
+    ) -> Result<(f64, f64, f64)> {
         let eb = self.program.eval_batch();
         let hw = self.test_set.hw;
         let stride = hw * hw * 3;
+        let n = self.test_set.n;
+        if n == 0 {
+            return Err(anyhow!("empty test set"));
+        }
         let mut correct = 0.0;
         let mut correct5 = 0.0;
-        let mut loss = 0.0;
-        let mut total = 0usize;
-        let nb = self.test_set.n / eb;
-        for b in 0..nb.max(1).min(self.test_set.n / eb.min(self.test_set.n).max(1)) {
+        let mut loss_sum = 0.0;
+        let nb = n / eb;
+        for b in 0..nb {
             let lo = b * eb;
-            if lo + eb > self.test_set.n {
-                break;
-            }
             let x = HostTensor::f32(
                 vec![eb, hw, hw, 3],
                 self.test_set.images[lo * stride..(lo + eb) * stride].to_vec(),
@@ -223,19 +340,31 @@ impl<'e> Trainer<'e> {
                 vec![eb],
                 self.test_set.labels[lo..lo + eb].to_vec(),
             );
-            let em = self.program.eval_batch_run(state, &x, &y)?;
+            let em = run_batch(&x, &y)?;
             correct += em.correct;
             correct5 += em.correct5;
-            loss += em.loss * eb as f64;
-            total += eb;
+            loss_sum += em.loss * eb as f64;
         }
-        if total == 0 {
-            return Err(anyhow!("test set smaller than eval batch"));
+        let rem = n % eb;
+        if rem > 0 {
+            let lo = nb * eb;
+            let mut px = vec![0f32; eb * stride];
+            px[..rem * stride]
+                .copy_from_slice(&self.test_set.images[lo * stride..(lo + rem) * stride]);
+            let mut py = vec![-1i32; eb];
+            py[..rem].copy_from_slice(&self.test_set.labels[lo..lo + rem]);
+            let em = run_batch(
+                &HostTensor::f32(vec![eb, hw, hw, 3], px),
+                &HostTensor::i32(vec![eb], py),
+            )?;
+            correct += em.correct;
+            correct5 += em.correct5;
+            loss_sum += em.loss * eb as f64;
         }
         Ok((
-            correct / total as f64,
-            correct5 / total as f64,
-            loss / total as f64,
+            correct / n as f64,
+            correct5 / n as f64,
+            loss_sum / n as f64,
         ))
     }
 

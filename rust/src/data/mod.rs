@@ -3,9 +3,11 @@
 //! real CIFAR-10 binary loader, and the augmenting mini-batch sampler.
 
 pub mod cifar;
+pub mod prefetch;
 pub mod sampler;
 pub mod synthetic;
 
+pub use prefetch::Prefetcher;
 pub use sampler::{AugmentCfg, Sampler};
 
 /// An in-memory image-classification dataset, NHWC f32 + i32 labels.

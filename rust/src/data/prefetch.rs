@@ -1,0 +1,110 @@
+//! Background batch prefetching: augmentation (crop/flip) and batch
+//! assembly run on a worker thread, double-buffered through a bounded
+//! channel, so data preparation overlaps executable dispatch.  An
+//! SMD-dropped iteration (Sec. 3.1) consumes its prefetched batch
+//! without stalling the step loop — the worker has the next one staged.
+//!
+//! Determinism: the worker owns a [`Sampler`] seeded exactly like the
+//! synchronous path, so the batch *stream* is identical batch-for-batch
+//! to `Sampler::next_batch` with the same seed (tested in
+//! tests/resident_equivalence.rs).  The worker runs at most
+//! `depth` batches ahead; it never reorders.
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::runtime::HostTensor;
+
+use super::sampler::{AugmentCfg, Sampler};
+use super::Dataset;
+
+/// Default channel depth: one batch in flight + one staged.
+pub const DEFAULT_DEPTH: usize = 2;
+
+/// A background sampler producing an endless, deterministic batch
+/// stream (reshuffling between epochs like [`Sampler`]).
+pub struct Prefetcher {
+    rx: Option<Receiver<(HostTensor, HostTensor)>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    pub fn spawn(
+        data: Arc<Dataset>,
+        batch: usize,
+        augment: AugmentCfg,
+        seed: u64,
+        depth: usize,
+    ) -> Self {
+        let (tx, rx) = sync_channel(depth.max(1));
+        let worker = std::thread::Builder::new()
+            .name("e2train-prefetch".into())
+            .spawn(move || {
+                let mut sampler = Sampler::new(data.n, batch, augment, seed);
+                loop {
+                    let b = sampler.next_batch(&data);
+                    // The receiver hung up: the run is over.
+                    if tx.send(b).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawning prefetch thread");
+        Self { rx: Some(rx), worker: Some(worker) }
+    }
+
+    /// Blocking pull of the next staged batch (usually already buffered).
+    pub fn next_batch(&mut self) -> (HostTensor, HostTensor) {
+        self.rx
+            .as_ref()
+            .expect("prefetcher already shut down")
+            .recv()
+            .expect("prefetch worker died")
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Hang up first so a worker blocked in send() unblocks, then
+        // reap the thread.
+        drop(self.rx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn stream_matches_synchronous_sampler() {
+        let data = Arc::new(synthetic::generate(10, 64, 8, 0));
+        let mut sync = Sampler::new(data.n, 16, AugmentCfg::default(), 42);
+        let mut pre = Prefetcher::spawn(data.clone(), 16, AugmentCfg::default(), 42, 2);
+        for _ in 0..12 {
+            // crosses an epoch boundary (reshuffle) at batch 4
+            let (xa, ya) = sync.next_batch(&data);
+            let (xb, yb) = pre.next_batch();
+            assert_eq!(xa.as_f32().unwrap(), xb.as_f32().unwrap());
+            match (&ya.data, &yb.data) {
+                (
+                    crate::runtime::TensorData::I32(a),
+                    crate::runtime::TensorData::I32(b),
+                ) => assert_eq!(a, b),
+                _ => panic!("labels must be i32"),
+            }
+        }
+    }
+
+    #[test]
+    fn drop_mid_stream_terminates_worker() {
+        let data = Arc::new(synthetic::generate(4, 32, 4, 1));
+        let mut pre = Prefetcher::spawn(data, 8, AugmentCfg::default(), 0, 2);
+        let _ = pre.next_batch();
+        drop(pre); // must not hang
+    }
+}

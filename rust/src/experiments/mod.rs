@@ -22,7 +22,7 @@
 
 mod runs;
 
-pub use runs::{ExpCtx, RunRecord};
+pub use runs::{ExpCtx, RunRecord, RunSpec};
 
 use std::path::Path;
 
@@ -82,17 +82,25 @@ fn fig3a(ctx: &ExpCtx) -> Result<()> {
     println!("paper: SMD beats SMB by 0.39%..0.86% at every matched energy ratio\n");
     let t = ctx.iters;
     let ratios = [0.5, 7.0 / 12.0, 2.0 / 3.0, 0.75, 5.0 / 6.0, 11.0 / 12.0, 1.0];
-    let mut rows = Vec::new();
-    let base = ctx.run(FAM, "sgd32", t, |_| {})?; // SMB @ ratio 1 anchor
+    // All 15 runs are independent: anchor + one (SMB, SMD) pair per
+    // ratio, fanned out across threads.
+    let mut specs = vec![RunSpec::new(FAM, "sgd32", t, |_| {})]; // SMB @ ratio 1 anchor
     for &r in &ratios {
         // SMB: fewer iterations, LR schedule scaled proportionally.
         let smb_iters = (t as f64 * r) as u64;
-        let smb = ctx.run(FAM, "sgd32", smb_iters, |_| {})?;
+        specs.push(RunSpec::new(FAM, "sgd32", smb_iters, |_| {}));
         // SMD: same *expected executed steps* via drop prob 1-r over T.
-        let smd = ctx.run(FAM, "sgd32", t, |c| {
+        specs.push(RunSpec::new(FAM, "sgd32", t, move |c| {
             c.smd.enabled = true;
             c.smd.p = 1.0 - r;
-        })?;
+        }));
+    }
+    let recs = ctx.run_many(specs)?;
+    let base = &recs[0];
+    let mut rows = Vec::new();
+    for (i, &r) in ratios.iter().enumerate() {
+        let smb = &recs[1 + 2 * i];
+        let smd = &recs[2 + 2 * i];
         println!(
             "ratio {:>5.3}  SMB acc {:>6.2}%  (J {:>8.2})   SMD acc {:>6.2}%  (J {:>8.2})  Δ {:+.2}%",
             r,
@@ -127,13 +135,24 @@ fn fig3b(ctx: &ExpCtx) -> Result<()> {
     println!("paper: SMD keeps >= 0.22% advantage over the best SMB LR\n");
     let t = ctx.iters;
     let smb_iters = t * 2 / 3;
+    // The LR grid and the SMD run are mutually independent: fan out.
+    let lr0s: Vec<f64> = (10..=20).step_by(2).map(|lr100| lr100 as f64 / 100.0).collect();
+    let mut specs: Vec<RunSpec> = lr0s
+        .iter()
+        .map(|&lr0| {
+            RunSpec::new(FAM, "sgd32", smb_iters, move |c| {
+                c.lr = crate::optim::LrSchedule::paper_default(lr0, smb_iters);
+            })
+        })
+        .collect();
+    specs.push(RunSpec::new(FAM, "sgd32", t, |c| {
+        c.smd.enabled = true;
+        c.smd.p = 1.0 / 3.0;
+    }));
+    let recs = ctx.run_many(specs)?;
     let mut rows = Vec::new();
     let mut best_smb = (0.0f64, 0.0f64);
-    for lr100 in (10..=20).step_by(2) {
-        let lr0 = lr100 as f64 / 100.0;
-        let r = ctx.run(FAM, "sgd32", smb_iters, |c| {
-            c.lr = crate::optim::LrSchedule::paper_default(lr0, smb_iters);
-        })?;
+    for (&lr0, r) in lr0s.iter().zip(recs.iter()) {
         println!("SMB lr0={lr0:.2}: acc {:>6.2}%  (J {:.2})", r.acc * 100.0, r.joules);
         if r.acc > best_smb.1 {
             best_smb = (lr0, r.acc);
@@ -144,10 +163,7 @@ fn fig3b(ctx: &ExpCtx) -> Result<()> {
             ("acc", Json::num(r.acc)),
         ]));
     }
-    let smd = ctx.run(FAM, "sgd32", t, |c| {
-        c.smd.enabled = true;
-        c.smd.p = 1.0 / 3.0;
-    })?;
+    let smd = recs.last().unwrap();
     println!(
         "SMD p=1/3:  acc {:>6.2}%  (J {:.2})   best SMB (lr0={:.2}) {:.2}%  Δ {:+.2}%",
         smd.acc * 100.0,
@@ -170,13 +186,22 @@ fn fig3b(ctx: &ExpCtx) -> Result<()> {
 fn tab1(ctx: &ExpCtx) -> Result<()> {
     println!("Table 1: SMD vs SMB at energy ratio 0.67");
     println!("paper: C10/ResNet-110 92.75->93.05, C100/ResNet-74 71.11->71.37\n");
-    let mut rows = Vec::new();
-    for (fam, label) in [(FAM_MID, "CIFAR10-syn/resnet20"), (FAM_C100, "CIFAR100-syn/resnet20")] {
-        let smb = ctx.run(fam, "sgd32", ctx.iters * 2 / 3, |_| {})?;
-        let smd = ctx.run(fam, "sgd32", ctx.iters, |c| {
+    let workloads =
+        [(FAM_MID, "CIFAR10-syn/resnet20"), (FAM_C100, "CIFAR100-syn/resnet20")];
+    // One (SMB, SMD) pair per workload, all independent: fan out.
+    let mut specs = Vec::new();
+    for (fam, _) in workloads {
+        specs.push(RunSpec::new(fam, "sgd32", ctx.iters * 2 / 3, |_| {}));
+        specs.push(RunSpec::new(fam, "sgd32", ctx.iters, |c| {
             c.smd.enabled = true;
             c.smd.p = 1.0 / 3.0;
-        })?;
+        }));
+    }
+    let recs = ctx.run_many(specs)?;
+    let mut rows = Vec::new();
+    for (i, (_, label)) in workloads.iter().enumerate() {
+        let smb = &recs[2 * i];
+        let smd = &recs[2 * i + 1];
         println!(
             "{label:<24} SMB {:>6.2}%   SMD {:>6.2}%   Δ {:+.2}%",
             smb.acc * 100.0,
@@ -184,7 +209,7 @@ fn tab1(ctx: &ExpCtx) -> Result<()> {
             (smd.acc - smb.acc) * 100.0
         );
         rows.push(row(vec![
-            ("workload", Json::str(label)),
+            ("workload", Json::str(*label)),
             ("smb_acc", Json::num(smb.acc)),
             ("smd_acc", Json::num(smd.acc)),
         ]));
@@ -196,6 +221,8 @@ fn tab1(ctx: &ExpCtx) -> Result<()> {
 // Fig. 4 — SLU vs SD (and SLU+SMD) accuracy vs energy ratio
 // ==========================================================================
 
+// Stays serial: each SD run is calibrated to the gate activity its SLU
+// counterpart *measured*, so the pairs have a data dependency.
 fn fig4(ctx: &ExpCtx) -> Result<()> {
     println!("Fig 4: SLU vs SD vs SLU+SMD, accuracy vs energy ratio");
     println!("paper: SLU above SD at every matched energy; SLU+SMD pushes further\n");
@@ -263,14 +290,17 @@ fn tab2(ctx: &ExpCtx) -> Result<()> {
     println!("Table 2: precision ablation ({FAM})");
     println!("paper: 32b 93.52 | 8bit 93.24 (38.6% save) | SignSGD 92.54 | PSG 92.59 (63.3% save)\n");
     let t = ctx.iters;
-    let base = ctx.run(FAM, "sgd32", t, |_| {})?;
+    let methods = ["fixed8", "signsgd", "psg"];
+    let mut specs = vec![RunSpec::new(FAM, "sgd32", t, |_| {})];
+    specs.extend(methods.iter().map(|m| RunSpec::new(FAM, m, t, |_| {})));
+    let recs = ctx.run_many(specs)?;
+    let base = &recs[0];
     let mut rows = vec![row(vec![
         ("method", Json::str("sgd32")),
         ("acc", Json::num(base.acc)),
         ("saving", Json::num(0.0)),
     ])];
-    for m in ["fixed8", "signsgd", "psg"] {
-        let r = ctx.run(FAM, m, t, |_| {})?;
+    for (m, r) in methods.iter().zip(recs[1..].iter()) {
         let saving = 1.0 - r.joules / base.joules;
         println!(
             "{m:<8} acc {:>6.2}%  energy saving {:>6.2}%  (psg predictor usage {})",
@@ -281,7 +311,7 @@ fn tab2(ctx: &ExpCtx) -> Result<()> {
                 .unwrap_or_else(|| "-".into())
         );
         rows.push(row(vec![
-            ("method", Json::str(m)),
+            ("method", Json::str(*m)),
             ("acc", Json::num(r.acc)),
             ("saving", Json::num(saving)),
         ]));
@@ -298,15 +328,24 @@ fn tab3(ctx: &ExpCtx) -> Result<()> {
     println!("Table 3: E2-Train (SMD+SLU+PSG) skipping/threshold sweep ({FAM})");
     println!("paper: skip 20/40/60% -> energy savings 84.6/88.7/92.8%, acc 92.1/91.8/91.4 (b=.05)\n");
     let t = ctx.iters;
-    let base = ctx.run(FAM, "sgd32", t, |_| {})?;
+    // Baseline + the 6 sweep points all fan out together.
+    let combos: Vec<(f64, f64)> = [0.05, 0.1]
+        .iter()
+        .flat_map(|&beta| [0.5, 2.0, 8.0].iter().map(move |&alpha| (beta, alpha)))
+        .collect();
+    let mut specs = vec![RunSpec::new(FAM, "sgd32", t, |_| {})];
+    specs.extend(combos.iter().map(|&(beta, alpha)| {
+        RunSpec::new(FAM, "e2train", t, move |c| {
+            c.alpha = alpha;
+            c.beta = beta;
+            c.smd.enabled = true;
+        })
+    }));
+    let recs = ctx.run_many(specs)?;
+    let base = &recs[0];
     let mut rows = Vec::new();
-    for beta in [0.05, 0.1] {
-        for alpha in [0.5, 2.0, 8.0] {
-            let r = ctx.run(FAM, "e2train", t, |c| {
-                c.alpha = alpha;
-                c.beta = beta;
-                c.smd.enabled = true;
-            })?;
+    {
+        for (&(beta, alpha), r) in combos.iter().zip(recs[1..].iter()) {
             let skip = 1.0 - r.mean_gate;
             let esave = 1.0 - r.joules / base.joules;
             let csave = 1.0 - r.macs / base.macs;
@@ -339,18 +378,26 @@ fn fig5(ctx: &ExpCtx) -> Result<()> {
     println!("paper: E2-Train converges at least as fast per joule\n");
     let t = ctx.iters;
     let eval_every = (t / 8).max(1);
-    let mut curves = Vec::new();
-    for (label, method, smd) in [
+    let variants = [
         ("SMB", "sgd32", false),
         ("SD", "sd", false),
         ("SLU", "slu", false),
         ("SLU+SMD", "slu", true),
         ("E2-Train", "e2train", true),
-    ] {
-        let r = ctx.run(FAM, method, t, |c| {
-            c.smd.enabled = smd;
-            c.eval_every = eval_every;
-        })?;
+    ];
+    // Five independent curves, one thread each.
+    let specs = variants
+        .iter()
+        .map(|&(_, method, smd)| {
+            RunSpec::new(FAM, method, t, move |c| {
+                c.smd.enabled = smd;
+                c.eval_every = eval_every;
+            })
+        })
+        .collect();
+    let recs = ctx.run_many(specs)?;
+    let mut curves = Vec::new();
+    for (&(label, _, _), r) in variants.iter().zip(recs.iter()) {
         let pts: Vec<(f64, f64)> = r
             .curve
             .iter()
@@ -383,14 +430,30 @@ fn tab4(ctx: &ExpCtx) -> Result<()> {
     println!("Table 4: ResNet-110-class + MobileNetV2 on C10/C100 (scaled)");
     println!("paper: e.g. C10/ResNet-110 E2-Train saves 83.4% with -0.56% acc\n");
     let t = ctx.iters;
-    let mut rows = Vec::new();
-    for (fam, label) in [
+    let workloads = [
         (FAM_MID, "C10-syn resnet20"),
         (FAM_C100, "C100-syn resnet20"),
         (FAM_MBV2, "C10-syn mbv2"),
-    ] {
-        let base = ctx.run(fam, "sgd32", t, |_| {})?;
-        let sd = ctx.run(fam, "sd", t, |c| c.sd.p_l = 0.5)?;
+    ];
+    let alphas = [1.0, 4.0];
+    // 4 runs per workload (base, SD, E2T at two alphas), all independent.
+    let mut specs = Vec::new();
+    for (fam, _) in workloads {
+        specs.push(RunSpec::new(fam, "sgd32", t, |_| {}));
+        specs.push(RunSpec::new(fam, "sd", t, |c| c.sd.p_l = 0.5));
+        for &alpha in &alphas {
+            specs.push(RunSpec::new(fam, "e2train", t, move |c| {
+                c.alpha = alpha;
+                c.smd.enabled = true;
+            }));
+        }
+    }
+    let recs = ctx.run_many(specs)?;
+    let per_fam = 2 + alphas.len();
+    let mut rows = Vec::new();
+    for (wi, (_, label)) in workloads.iter().enumerate() {
+        let base = &recs[wi * per_fam];
+        let sd = &recs[wi * per_fam + 1];
         println!(
             "{label:<18} SMB acc {:>6.2}%/{:>6.2}%  (J {:>8.2})",
             base.acc * 100.0,
@@ -403,22 +466,19 @@ fn tab4(ctx: &ExpCtx) -> Result<()> {
             (1.0 - sd.joules / base.joules) * 100.0
         );
         rows.push(row(vec![
-            ("workload", Json::str(label)),
+            ("workload", Json::str(*label)),
             ("method", Json::str("smb")),
             ("acc", Json::num(base.acc)),
             ("acc5", Json::num(base.acc5)),
         ]));
         rows.push(row(vec![
-            ("workload", Json::str(label)),
+            ("workload", Json::str(*label)),
             ("method", Json::str("sd")),
             ("acc", Json::num(sd.acc)),
             ("energy_saving", Json::num(1.0 - sd.joules / base.joules)),
         ]));
-        for alpha in [1.0, 4.0] {
-            let r = ctx.run(fam, "e2train", t, |c| {
-                c.alpha = alpha;
-                c.smd.enabled = true;
-            })?;
+        for (ai, &alpha) in alphas.iter().enumerate() {
+            let r = &recs[wi * per_fam + 2 + ai];
             let esave = 1.0 - r.joules / base.joules;
             let csave = 1.0 - r.macs / base.macs;
             println!(
@@ -429,7 +489,7 @@ fn tab4(ctx: &ExpCtx) -> Result<()> {
                 esave * 100.0
             );
             rows.push(row(vec![
-                ("workload", Json::str(label)),
+                ("workload", Json::str(*label)),
                 ("method", Json::str(format!("e2train-a{alpha}"))),
                 ("acc", Json::num(r.acc)),
                 ("acc5", Json::num(r.acc5)),

@@ -1,8 +1,22 @@
-//! Shared run helpers for the experiment harness.
+//! Shared run helpers for the experiment harness, including the
+//! parallel fan-out: independent method runs within one experiment
+//! execute on worker threads that share the `Engine`'s compiled-program
+//! cache (`Arc<Mutex<HashMap<..>>>`), so each artifact compiles once no
+//! matter how many runs use it.
+//!
+//! Determinism: every run's config carries its own seed (set before the
+//! tweak closure runs), and all stochastic components derive from that
+//! seed alone — `run_many` returns records in spec order and produces
+//! bitwise the same results as running the specs serially.
+//!
+//! Note: thread fan-out requires `Engine: Sync`.  That holds for the
+//! reference backend and the in-repo xla stub; the real PJRT CPU client
+//! holds raw pointers and is not Sync — when linking the real `xla`
+//! crate, point `run_many` at per-thread engines instead.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::{DataCfg, RunCfg};
 use crate::coordinator::Trainer;
@@ -24,6 +38,31 @@ pub struct RunRecord {
     pub wall_seconds: f64,
     /// (cumulative joules, Some(test acc)) trace for curve experiments.
     pub curve: Vec<(f64, Option<f64>)>,
+}
+
+/// One planned run for [`ExpCtx::run_many`]: (family, method, budget) +
+/// a config tweak applied before launch.
+pub struct RunSpec {
+    pub family: String,
+    pub method: String,
+    pub iters: u64,
+    tweak: Box<dyn Fn(&mut RunCfg) + Send + Sync>,
+}
+
+impl RunSpec {
+    pub fn new(
+        family: &str,
+        method: &str,
+        iters: u64,
+        tweak: impl Fn(&mut RunCfg) + Send + Sync + 'static,
+    ) -> Self {
+        Self {
+            family: family.to_string(),
+            method: method.to_string(),
+            iters,
+            tweak: Box::new(tweak),
+        }
+    }
 }
 
 /// Experiment context: engine + paths + the iteration budget.
@@ -59,18 +98,9 @@ impl<'e> ExpCtx<'e> {
         cfg
     }
 
-    /// Run (family, method) for `iters`, after applying `tweak` to the
-    /// config.  The dataset's class count is read from the manifest.
-    pub fn run(
-        &self,
-        family: &str,
-        method: &str,
-        iters: u64,
-        tweak: impl FnOnce(&mut RunCfg),
-    ) -> Result<RunRecord> {
-        let mut cfg = self.base_cfg(family, method, iters);
-        tweak(&mut cfg);
-        // classes must match the artifact; peek at the manifest.
+    /// Finalize a tweaked config (the dataset's class count is read from
+    /// the manifest) and execute it.
+    fn run_cfg(&self, mut cfg: RunCfg) -> Result<RunRecord> {
         let manifest = crate::runtime::Manifest::load(&cfg.manifest_path())?;
         cfg.data = DataCfg::Synthetic {
             classes: manifest.arch.num_classes,
@@ -100,8 +130,74 @@ impl<'e> ExpCtx<'e> {
         })
     }
 
+    /// Run (family, method) for `iters`, after applying `tweak` to the
+    /// config.
+    pub fn run(
+        &self,
+        family: &str,
+        method: &str,
+        iters: u64,
+        tweak: impl FnOnce(&mut RunCfg),
+    ) -> Result<RunRecord> {
+        let mut cfg = self.base_cfg(family, method, iters);
+        tweak(&mut cfg);
+        self.run_cfg(cfg)
+    }
+
+    fn run_spec(&self, spec: &RunSpec) -> Result<RunRecord> {
+        let mut cfg = self.base_cfg(&spec.family, &spec.method, spec.iters);
+        (spec.tweak)(&mut cfg);
+        self.run_cfg(cfg)
+    }
+
+    /// Execute independent runs in parallel across worker threads,
+    /// bounded by the machine's parallelism, sharing this context's
+    /// engine (and therefore its compile cache).  A shared work queue
+    /// (no inter-batch barrier) keeps every core busy until the queue
+    /// drains, even when iteration budgets differ wildly (fig3a spans
+    /// 0.5T..T).  Results come back in spec order and match a serial
+    /// execution exactly.
+    pub fn run_many(&self, specs: Vec<RunSpec>) -> Result<Vec<RunRecord>> {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        if specs.len() <= 1 {
+            return specs.iter().map(|s| self.run_spec(s)).collect();
+        }
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(specs.len());
+        let next = AtomicUsize::new(0);
+        let slots: Vec<std::sync::Mutex<Option<Result<RunRecord>>>> =
+            specs.iter().map(|_| std::sync::Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= specs.len() {
+                        break;
+                    }
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || self.run_spec(&specs[i]),
+                    ))
+                    .unwrap_or_else(|_| Err(anyhow!("experiment worker panicked")));
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .unwrap()
+                    .unwrap_or_else(|| Err(anyhow!("experiment run never executed")))
+            })
+            .collect()
+    }
+
     /// The Sec. 4.5 protocol: pre-train on half the data, then fine-tune
     /// the other half two ways (head-only standard vs. full E2-Train).
+    /// Inherently sequential — each stage consumes the previous state.
     pub fn finetune(&self, family: &str, iters: u64) -> Result<Json> {
         let cfg = self.base_cfg(family, "sgd32", iters);
         let manifest = crate::runtime::Manifest::load(&cfg.manifest_path())?;

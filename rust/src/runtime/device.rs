@@ -1,0 +1,158 @@
+//! Device-resident training state.
+//!
+//! The seed runtime re-uploaded the entire `ModelState` (params +
+//! momenta + BN state) to the device every `step()` and downloaded it
+//! all back afterwards, even though the state only matters *on device*
+//! between steps.  [`DeviceState`] keeps the state in the executing
+//! backend's native representation across steps; per iteration only the
+//! small per-step inputs (batch, labels, scalars, SD mask) cross the
+//! host boundary in, and only the metric outputs cross back out.
+//! [`DeviceState::sync_to_host`] materializes a full `ModelState`
+//! exactly when something host-side needs one: SWA averaging, eval on
+//! the host path, fine-tune handoff, checkpointing.
+//!
+//! Backend representations:
+//! * reference backend — the buffer *is* host memory, so residency means
+//!   zero conversions (the host path pays literal conversions both ways);
+//! * PJRT backend — the buffer is a staged `xla::Literal`, so residency
+//!   halves the per-step conversions (outputs feed the next step
+//!   directly instead of bouncing through `HostTensor`).
+
+use anyhow::Result;
+
+use super::engine::BackendKind;
+use super::program::ModelState;
+use super::tensor::HostTensor;
+
+/// One tensor in backend-native form.
+#[derive(Debug, Clone)]
+pub enum DeviceValue {
+    /// Reference backend: plain host memory, moved not copied.
+    Host(HostTensor),
+    /// PJRT backend: a staged literal (device buffer in a real build).
+    Literal(xla::Literal),
+}
+
+impl DeviceValue {
+    pub fn from_host(backend: BackendKind, t: HostTensor) -> Result<Self> {
+        Ok(match backend {
+            BackendKind::Reference => DeviceValue::Host(t),
+            BackendKind::Pjrt => DeviceValue::Literal(t.to_literal()?),
+        })
+    }
+
+    /// Copy out to host memory.
+    pub fn to_host(&self) -> Result<HostTensor> {
+        match self {
+            DeviceValue::Host(t) => Ok(t.clone()),
+            DeviceValue::Literal(l) => HostTensor::from_literal(l),
+        }
+    }
+
+    /// Move out to host memory (free for the reference backend).
+    pub fn into_host(self) -> Result<HostTensor> {
+        match self {
+            DeviceValue::Host(t) => Ok(t),
+            DeviceValue::Literal(l) => HostTensor::from_literal(&l),
+        }
+    }
+}
+
+/// Borrowed executable input: either an already-resident value or a
+/// host tensor staged for this call only (batch data, scalars, masks).
+#[derive(Clone, Copy)]
+pub enum ValueRef<'a> {
+    Dev(&'a DeviceValue),
+    Host(&'a HostTensor),
+}
+
+/// Model state living in backend-native buffers across steps.
+pub struct DeviceState {
+    pub values: Vec<DeviceValue>,
+    pub names: Vec<String>,
+    backend: BackendKind,
+}
+
+impl DeviceState {
+    /// Move a host `ModelState` into backend-native form (one-time cost
+    /// at run start / fine-tune handoff).
+    pub fn upload(backend: BackendKind, state: ModelState) -> Result<Self> {
+        let (values, names) = state.into_parts();
+        let values = values
+            .into_iter()
+            .map(|t| DeviceValue::from_host(backend, t))
+            .collect::<Result<_>>()?;
+        Ok(Self { values, names, backend })
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Materialize a host `ModelState` — the only place state crosses
+    /// device->host.  Called on demand (SWA snapshot, eval handoff,
+    /// checkpoint, end of run), never per step.
+    pub fn sync_to_host(&self) -> Result<ModelState> {
+        let values = self
+            .values
+            .iter()
+            .map(DeviceValue::to_host)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelState::new(values, self.names.clone()))
+    }
+
+    /// Move out to a host `ModelState`, consuming the device buffers
+    /// (end-of-run path; avoids the final copy on the reference backend).
+    pub fn into_host(self) -> Result<ModelState> {
+        let values = self
+            .values
+            .into_iter()
+            .map(DeviceValue::into_host)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelState::new(values, self.names))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_state() -> ModelState {
+        ModelState::new(
+            vec![
+                HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+                HostTensor::f32(vec![3], vec![-1.0, 0.5, 9.0]),
+            ],
+            vec!["w".into(), "b".into()],
+        )
+    }
+
+    #[test]
+    fn reference_roundtrip_is_bitwise() {
+        let host = toy_state();
+        let dev = DeviceState::upload(BackendKind::Reference, host.clone()).unwrap();
+        let back = dev.sync_to_host().unwrap();
+        assert_eq!(back.names, host.names);
+        for (a, b) in back.values.iter().zip(host.values.iter()) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+        // by-name lookup survives the round trip
+        assert_eq!(back.by_name("b").unwrap().as_f32().unwrap(), &[-1.0, 0.5, 9.0]);
+    }
+
+    #[test]
+    fn pjrt_staging_roundtrip_is_bitwise() {
+        let host = toy_state();
+        let dev = DeviceState::upload(BackendKind::Pjrt, host.clone()).unwrap();
+        assert!(matches!(dev.values[0], DeviceValue::Literal(_)));
+        let back = dev.into_host().unwrap();
+        for (a, b) in back.values.iter().zip(host.values.iter()) {
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+    }
+}

@@ -1,10 +1,19 @@
-//! PJRT engine: one CPU client + a cache of compiled executables.
+//! Engine: one process-wide client + a cache of compiled executables,
+//! now multi-backend.
 //!
-//! HLO **text** artifacts (see aot.py) are parsed with
-//! `HloModuleProto::from_text_file`, compiled once per path, and shared
-//! via `Arc` across the coordinator's programs.  Compilation is the
-//! expensive part (seconds for the bigger train steps), so the cache key
-//! is the canonical artifact path.
+//! Two program kinds live behind one `Program` type:
+//!
+//! * **PJRT** — HLO **text** artifacts (see aot.py) parsed with
+//!   `HloModuleProto::from_text_file` and compiled through the `xla`
+//!   crate.  Compilation is the expensive part (seconds for the bigger
+//!   train steps), so the cache key is the canonical artifact path.
+//! * **Reference** — `*.ref.json` programs interpreted by the pure-rust
+//!   [`super::reference`] backend; always executable, used by tests,
+//!   benches and any machine without a PJRT runtime.
+//!
+//! The cache is `Mutex<HashMap<..., Arc<Program>>>` and `Engine` is
+//! `Sync` in this build, which lets the experiment harness fan runs out
+//! across threads while sharing compiled programs (experiments::runs).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -13,37 +22,135 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::device::{DeviceValue, ValueRef};
+use super::reference::RefProgram;
 use super::tensor::HostTensor;
 
-/// A compiled PJRT executable plus light metadata.
+/// Which executor owns a program's buffers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Pjrt,
+    Reference,
+}
+
+enum ProgramImpl {
+    Pjrt(xla::PjRtLoadedExecutable),
+    Reference(RefProgram),
+}
+
+/// A compiled/loaded executable plus light metadata.
 pub struct Program {
-    exe: xla::PjRtLoadedExecutable,
+    imp: ProgramImpl,
     pub path: PathBuf,
     pub compile_time_s: f64,
 }
 
 impl Program {
+    pub fn backend(&self) -> BackendKind {
+        match self.imp {
+            ProgramImpl::Pjrt(_) => BackendKind::Pjrt,
+            ProgramImpl::Reference(_) => BackendKind::Reference,
+        }
+    }
+
     /// Execute with host inputs; outputs are the decomposed result tuple
     /// (aot.py lowers with `return_tuple=True`).
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        self.run_literals(&literals)
+        match &self.imp {
+            ProgramImpl::Reference(p) => {
+                let refs: Vec<&HostTensor> = inputs.iter().collect();
+                p.run(&refs)
+            }
+            ProgramImpl::Pjrt(_) => {
+                let literals: Vec<xla::Literal> = inputs
+                    .iter()
+                    .map(|t| t.to_literal())
+                    .collect::<Result<_>>()?;
+                self.run_literals(&literals)
+            }
+        }
     }
 
-    /// Execute pre-built literals (hot path: avoids cloning host buffers
-    /// into an intermediate Vec<HostTensor> — EXPERIMENTS.md §Perf).
+    /// Host-path execution from pre-built literals.  This is the legacy
+    /// per-step route: every state tensor crosses the boundary twice per
+    /// call (literal in, host tensor out) — the cost the resident path
+    /// exists to remove.  Kept as the baseline for the equivalence tests
+    /// and the bench comparison.
     pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<HostTensor>> {
-        let result = self.exe.execute::<xla::Literal>(literals)?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        parts.iter().map(HostTensor::from_literal).collect()
+        match &self.imp {
+            ProgramImpl::Pjrt(exe) => {
+                let result = exe.execute::<xla::Literal>(literals)?[0][0]
+                    .to_literal_sync()?;
+                let parts = result.to_tuple()?;
+                parts.iter().map(HostTensor::from_literal).collect()
+            }
+            ProgramImpl::Reference(p) => {
+                // Faithful host-path cost model: literals decode to host
+                // tensors before interpretation, mirroring the transfer a
+                // PJRT execute performs.
+                let host: Vec<HostTensor> = literals
+                    .iter()
+                    .map(HostTensor::from_literal)
+                    .collect::<Result<_>>()?;
+                let refs: Vec<&HostTensor> = host.iter().collect();
+                p.run(&refs)
+            }
+        }
+    }
+
+    /// Resident-path execution: inputs stay in backend-native form, and
+    /// outputs are returned in backend-native form so state never
+    /// bounces through the host between steps.
+    pub fn execute_refs(&self, inputs: &[ValueRef<'_>]) -> Result<Vec<DeviceValue>> {
+        match &self.imp {
+            ProgramImpl::Reference(p) => {
+                // Resolve every input to a borrowed host tensor without
+                // copying; only foreign (literal) inputs materialize.
+                enum Slot<'a> {
+                    Direct(&'a HostTensor),
+                    Temp(usize),
+                }
+                let mut temps: Vec<HostTensor> = Vec::new();
+                let mut slots: Vec<Slot> = Vec::with_capacity(inputs.len());
+                for r in inputs.iter().copied() {
+                    match r {
+                        ValueRef::Host(t) => slots.push(Slot::Direct(t)),
+                        ValueRef::Dev(DeviceValue::Host(t)) => slots.push(Slot::Direct(t)),
+                        ValueRef::Dev(DeviceValue::Literal(l)) => {
+                            temps.push(HostTensor::from_literal(l)?);
+                            slots.push(Slot::Temp(temps.len() - 1));
+                        }
+                    }
+                }
+                let resolved: Vec<&HostTensor> = slots
+                    .iter()
+                    .map(|s| match s {
+                        Slot::Direct(t) => *t,
+                        Slot::Temp(i) => &temps[*i],
+                    })
+                    .collect();
+                let outs = p.run(&resolved)?;
+                Ok(outs.into_iter().map(DeviceValue::Host).collect())
+            }
+            ProgramImpl::Pjrt(exe) => {
+                let literals: Vec<xla::Literal> = inputs
+                    .iter()
+                    .map(|r| match r {
+                        ValueRef::Host(t) => t.to_literal(),
+                        ValueRef::Dev(DeviceValue::Literal(l)) => Ok((*l).clone()),
+                        ValueRef::Dev(DeviceValue::Host(t)) => t.to_literal(),
+                    })
+                    .collect::<Result<_>>()?;
+                let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+                    .to_literal_sync()?;
+                let parts = result.to_tuple()?;
+                Ok(parts.into_iter().map(DeviceValue::Literal).collect())
+            }
+        }
     }
 }
 
-/// The shared PJRT CPU client + executable cache.
+/// The shared client + executable cache.
 pub struct Engine {
     client: xla::PjRtClient,
     cache: Mutex<HashMap<PathBuf, Arc<Program>>>,
@@ -59,24 +166,34 @@ impl Engine {
         self.client.platform_name()
     }
 
-    /// Load + compile an HLO-text artifact (cached).
+    /// Load + compile an artifact (cached): `*.ref.json` programs go to
+    /// the reference backend, everything else is HLO text for PJRT.
     pub fn load(&self, path: &Path) -> Result<Arc<Program>> {
         let key = path.canonicalize().unwrap_or_else(|_| path.to_path_buf());
         if let Some(p) = self.cache.lock().unwrap().get(&key) {
             return Ok(p.clone());
         }
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
+        let is_ref = path
+            .file_name()
+            .map(|n| n.to_string_lossy().ends_with(".ref.json"))
+            .unwrap_or(false);
+        let imp = if is_ref {
+            ProgramImpl::Reference(RefProgram::load(path)?)
+        } else {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            ProgramImpl::Pjrt(
+                self.client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", path.display()))?,
+            )
+        };
         let program = Arc::new(Program {
-            exe,
+            imp,
             path: key.clone(),
             compile_time_s: t0.elapsed().as_secs_f64(),
         });
@@ -92,6 +209,8 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::reference::{write_reference_family, RefFamilySpec};
+    use crate::util::tmp::TempDir;
 
     fn artifacts() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -110,5 +229,31 @@ mod tests {
         assert!(Arc::ptr_eq(&p1, &p2));
         assert_eq!(engine.cached_count(), 1);
         assert!(p1.compile_time_s > 0.0);
+    }
+
+    #[test]
+    fn reference_programs_load_and_cache() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let p1 = engine.load(&fam.join("sgd32.train.ref.json")).unwrap();
+        let p2 = engine.load(&fam.join("sgd32.train.ref.json")).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(p1.backend(), BackendKind::Reference);
+        assert_eq!(engine.cached_count(), 1);
+    }
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Engine>();
+        check::<Program>();
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let engine = Engine::cpu().unwrap();
+        assert!(engine.load(Path::new("/nonexistent/x.train.hlo.txt")).is_err());
+        assert!(engine.load(Path::new("/nonexistent/x.train.ref.json")).is_err());
     }
 }

@@ -210,6 +210,30 @@ impl Manifest {
         )
     }
 
+    /// Executable program paths next to a manifest: prefer compiled HLO
+    /// text when present, fall back to reference-backend programs
+    /// (`*.ref.json`, see `runtime::reference`).
+    pub fn program_paths(manifest_path: &Path) -> (PathBuf, PathBuf) {
+        let (train_hlo, eval_hlo) = Self::hlo_paths(manifest_path);
+        if train_hlo.exists() && eval_hlo.exists() {
+            return (train_hlo, eval_hlo);
+        }
+        let stem = manifest_path
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_default();
+        let dir = manifest_path.parent().unwrap_or_else(|| Path::new("."));
+        let train_ref = dir.join(format!("{stem}.train.ref.json"));
+        let eval_ref = dir.join(format!("{stem}.eval.ref.json"));
+        if train_ref.exists() && eval_ref.exists() {
+            (train_ref, eval_ref)
+        } else {
+            // Neither exists: report the HLO pair so the load error
+            // names the canonical artifact.
+            (train_hlo, eval_hlo)
+        }
+    }
+
     /// Count of gateable blocks (length of `gate_fracs` outputs).
     pub fn num_gated(&self) -> usize {
         self.blocks.iter().filter(|b| b.gateable).count()

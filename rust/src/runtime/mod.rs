@@ -1,17 +1,27 @@
-//! Layer-3 runtime: load AOT artifacts (HLO text) and execute them on the
-//! PJRT CPU client — the `xla` crate path proven by /opt/xla-example.
+//! Layer-3 runtime: load AOT artifacts and execute them — multi-backend.
 //!
-//! * [`engine`] — PJRT client + compiled-executable cache.
+//! * [`engine`] — client + compiled-executable cache (PJRT HLO text or
+//!   pure-rust reference programs behind one `Program` type).
 //! * [`manifest`] — the JSON contract emitted by `python/compile/aot.py`.
 //! * [`tensor`] — host tensors and Literal conversion.
-//! * [`program`] — (train, eval) executable pairs + model-state plumbing.
+//! * [`device`] — device-resident training state ([`DeviceState`]): the
+//!   model stays in backend-native buffers across steps and syncs to
+//!   host only when SWA/eval/checkpointing needs it.
+//! * [`program`] — (train, eval) executable pairs + state plumbing, with
+//!   a host step path and a resident step path.
+//! * [`reference`] — the pure-rust reference backend + fixture
+//!   generator; keeps the whole stack executable without a PJRT runtime.
 
+pub mod device;
 pub mod engine;
 pub mod manifest;
 pub mod program;
+pub mod reference;
 pub mod tensor;
 
-pub use engine::{Engine, Program};
+pub use device::{DeviceState, DeviceValue, ValueRef};
+pub use engine::{BackendKind, Engine, Program};
 pub use manifest::{ArtifactIndex, BlockInfo, IoSpec, Manifest, MethodInfo};
 pub use program::{EvalMetrics, ModelState, StepHyper, StepMetrics, TrainProgram};
+pub use reference::{write_reference_family, RefFamilySpec};
 pub use tensor::{HostTensor, TensorData};

@@ -1,17 +1,27 @@
 //! TrainProgram: a (manifest, train exe, eval exe) triple plus the state
 //! plumbing that moves model parameters through a step.
 //!
-//! The coordinator owns a [`ModelState`] (params + momenta + BN state in
-//! manifest order); `step()` assembles the exact input list the HLO
-//! expects, executes, writes the updated state back in place, and returns
-//! the step metrics.  No Python anywhere on this path.
+//! Two step routes exist:
+//!
+//! * the **host path** ([`TrainProgram::step`]) — the coordinator owns a
+//!   [`ModelState`] of host tensors and every step converts the whole
+//!   state in and out of the executing backend.  Kept as the equivalence
+//!   baseline and for one-off host-side work;
+//! * the **resident path** ([`TrainProgram::step_device`]) — state lives
+//!   in a [`DeviceState`] across steps; only the small per-step inputs
+//!   (x, y, scalars, SD mask) go in and only metric outputs come out.
+//!
+//! Both routes execute the same program, so for fixed seeds they produce
+//! bitwise-identical metrics (tests/resident_equivalence.rs).
 
+use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::engine::{Engine, Program};
+use super::device::{DeviceState, ValueRef};
+use super::engine::{BackendKind, Engine, Program};
 use super::manifest::Manifest;
 use super::tensor::HostTensor;
 use crate::optim::init::Initializer;
@@ -24,9 +34,21 @@ pub struct ModelState {
     pub values: Vec<HostTensor>,
     /// Names aligned with `values` (manifest names; momenta are `mom.*`).
     pub names: Vec<String>,
+    /// name -> index, precomputed once so `by_name` (and the name-based
+    /// migration in `init_from`) is O(1) instead of a linear scan.
+    index: HashMap<String, usize>,
 }
 
 impl ModelState {
+    pub fn new(values: Vec<HostTensor>, names: Vec<String>) -> Self {
+        let index = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect();
+        Self { values, names, index }
+    }
+
     /// Initialize from the manifest's init kinds (He/zeros/ones/uniform),
     /// matching python `layers.materialize` in distribution.
     pub fn init(manifest: &Manifest, seed: u64) -> Self {
@@ -42,7 +64,7 @@ impl ModelState {
                 _ => {}
             }
         }
-        Self { values, names }
+        Self::new(values, names)
     }
 
     /// Fresh init for `manifest`, then copy every tensor whose name and
@@ -51,15 +73,20 @@ impl ModelState {
     /// state adds gate parameters/momenta that start fresh).
     pub fn init_from(manifest: &Manifest, seed: u64, source: &ModelState) -> Self {
         let mut fresh = Self::init(manifest, seed);
-        let names = fresh.names.clone();
-        for (i, name) in names.iter().enumerate() {
+        for (name, value) in fresh.names.iter().zip(fresh.values.iter_mut()) {
             if let Some(src) = source.by_name(name) {
-                if src.shape == fresh.values[i].shape {
-                    fresh.values[i] = src.clone();
+                if src.shape == value.shape {
+                    *value = src.clone();
                 }
             }
         }
         fresh
+    }
+
+    /// Decompose into (values, names) — used when moving the state into
+    /// device-resident form without copying.
+    pub fn into_parts(self) -> (Vec<HostTensor>, Vec<String>) {
+        (self.values, self.names)
     }
 
     pub fn num_tensors(&self) -> usize {
@@ -71,22 +98,28 @@ impl ModelState {
     }
 
     pub fn by_name(&self, name: &str) -> Option<&HostTensor> {
-        self.names.iter().position(|n| n == name).map(|i| &self.values[i])
+        self.index.get(name).map(|&i| &self.values[i])
     }
 
     /// Weighted in-place average: `self = self*(1-w) + other*w`.
     /// Used by SWA (stochastic weight averaging, Sec. 4.1) — applied to
     /// params only; momenta/BN state are copied from `other`.
+    /// Allocation-free: walks both states' slices directly.
     pub fn average_params_from(&mut self, other: &ModelState, w: f32, param_count: usize) {
-        for i in 0..self.values.len() {
-            let ov = other.values[i].as_f32().unwrap().to_vec();
-            let sv = self.values[i].as_f32_mut().unwrap();
+        for (i, (sv, ov)) in self
+            .values
+            .iter_mut()
+            .zip(other.values.iter())
+            .enumerate()
+        {
+            let ov = ov.as_f32().expect("SWA state is f32");
+            let sv = sv.as_f32_mut().expect("SWA state is f32");
             if i < param_count {
                 for (s, o) in sv.iter_mut().zip(ov.iter()) {
                     *s = *s * (1.0 - w) + *o * w;
                 }
             } else {
-                sv.copy_from_slice(&ov);
+                sv.copy_from_slice(ov);
             }
         }
     }
@@ -145,11 +178,14 @@ pub struct TrainProgram {
 
 impl TrainProgram {
     /// Load from a manifest path (`artifacts/<family>/<method>.json`).
+    /// Program files resolve to `<method>.{train,eval}.hlo.txt` when the
+    /// HLO text exists, else `<method>.{train,eval}.ref.json` (reference
+    /// backend).
     pub fn load(engine: &Engine, manifest_path: &Path) -> Result<Self> {
         let manifest = Manifest::load(manifest_path)?;
-        let (train_hlo, eval_hlo) = Manifest::hlo_paths(manifest_path);
-        let train = engine.load(&train_hlo)?;
-        let eval = engine.load(&eval_hlo)?;
+        let (train_path, eval_path) = Manifest::program_paths(manifest_path);
+        let train = engine.load(&train_path)?;
+        let eval = engine.load(&eval_path)?;
 
         let num_params = manifest
             .train_inputs
@@ -195,18 +231,17 @@ impl TrainProgram {
         self.manifest.arch.eval_batch
     }
 
-    /// One optimizer step.  `mask` must be Some(per-gated-block mask) for
-    /// `gating == "mask"` (stochastic depth) artifacts, None otherwise.
-    /// `hp` carries the runtime-tunable knobs (lr always; alpha for
-    /// learned gating; beta for PSG methods).
-    pub fn step(
-        &self,
-        state: &mut ModelState,
-        x: &HostTensor,
-        y: &HostTensor,
-        hp: StepHyper,
-        mask: Option<&[f32]>,
-    ) -> Result<StepMetrics> {
+    /// Backend the train/eval executables run on.
+    pub fn backend(&self) -> BackendKind {
+        self.train.backend()
+    }
+
+    /// Move a host state into resident form for this program's backend.
+    pub fn upload_state(&self, state: ModelState) -> Result<DeviceState> {
+        DeviceState::upload(self.backend(), state)
+    }
+
+    fn check_mask(&self, mask: Option<&[f32]>) -> Result<()> {
         let needs_mask = self.manifest.method.gating == "mask";
         if needs_mask != mask.is_some() {
             bail!(
@@ -216,42 +251,27 @@ impl TrainProgram {
                 mask.is_some()
             );
         }
-        // Hot path: convert straight to literals — no HostTensor clones.
-        let mut literals: Vec<xla::Literal> =
-            Vec::with_capacity(state.values.len() + 6);
-        for v in &state.values {
-            literals.push(v.to_literal()?);
-        }
-        literals.push(x.to_literal()?);
-        literals.push(y.to_literal()?);
-        literals.push(HostTensor::scalar_f32(hp.lr).to_literal()?);
+        Ok(())
+    }
+
+    /// The small per-step tensors after (x, y): lr scalar, then alpha /
+    /// beta scalars and the SD mask when the method wants them.
+    fn step_extras(&self, hp: StepHyper, mask: Option<&[f32]>) -> Vec<HostTensor> {
+        let mut extras = Vec::with_capacity(4);
+        extras.push(HostTensor::scalar_f32(hp.lr));
         if self.manifest.method.gating == "learned" {
-            literals.push(HostTensor::scalar_f32(hp.alpha).to_literal()?);
+            extras.push(HostTensor::scalar_f32(hp.alpha));
         }
         if self.manifest.method.update == "psg" {
-            literals.push(HostTensor::scalar_f32(hp.beta).to_literal()?);
+            extras.push(HostTensor::scalar_f32(hp.beta));
         }
         if let Some(m) = mask {
-            literals.push(HostTensor::f32(vec![m.len()], m.to_vec()).to_literal()?);
+            extras.push(HostTensor::f32(vec![m.len()], m.to_vec()));
         }
+        extras
+    }
 
-        let outputs = self.train.run_literals(&literals)?;
-        if outputs.len() != self.manifest.train_outputs.len() {
-            bail!(
-                "train outputs: got {}, manifest says {}",
-                outputs.len(),
-                self.manifest.train_outputs.len()
-            );
-        }
-
-        // Write back state (outputs are ordered params, momenta, bn state,
-        // then metrics — mirroring the state prefix of the inputs).
-        let mut out_iter = outputs.into_iter();
-        for v in state.values.iter_mut() {
-            *v = out_iter.next().unwrap();
-        }
-        let metrics: Vec<HostTensor> = out_iter.collect();
-
+    fn decode_step_metrics(&self, metrics: &[HostTensor]) -> Result<StepMetrics> {
         let mut sm = StepMetrics::default();
         for (spec, tensor) in self.manifest.train_outputs[self.metric_offset..]
             .iter()
@@ -271,7 +291,118 @@ impl TrainProgram {
         Ok(sm)
     }
 
-    /// Evaluate one batch with running BN stats + hard gates.
+    fn decode_eval_metrics(
+        &self,
+        outputs: &[HostTensor],
+        total: usize,
+    ) -> Result<EvalMetrics> {
+        let mut em = EvalMetrics { total, ..Default::default() };
+        for (spec, tensor) in self.manifest.eval_outputs.iter().zip(outputs.iter()) {
+            match spec.name.as_str() {
+                "loss" => em.loss = tensor.scalar()?,
+                "correct" => em.correct = tensor.scalar()?,
+                "correct5" => em.correct5 = tensor.scalar()?,
+                "gate_fracs" => {
+                    em.gate_fracs =
+                        tensor.as_f32()?.iter().map(|&v| v as f64).collect()
+                }
+                other => bail!("unknown eval output {other}"),
+            }
+        }
+        Ok(em)
+    }
+
+    /// One optimizer step on the host path.  `mask` must be
+    /// Some(per-gated-block mask) for `gating == "mask"` (stochastic
+    /// depth) artifacts, None otherwise.  `hp` carries the
+    /// runtime-tunable knobs (lr always; alpha for learned gating; beta
+    /// for PSG methods).
+    pub fn step(
+        &self,
+        state: &mut ModelState,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+        mask: Option<&[f32]>,
+    ) -> Result<StepMetrics> {
+        self.check_mask(mask)?;
+        // Convert straight to literals — no HostTensor clones.  (Still
+        // one full state conversion each way per step; that churn is
+        // what step_device removes.)
+        let extras = self.step_extras(hp, mask);
+        let mut literals: Vec<xla::Literal> =
+            Vec::with_capacity(state.values.len() + 2 + extras.len());
+        for v in &state.values {
+            literals.push(v.to_literal()?);
+        }
+        literals.push(x.to_literal()?);
+        literals.push(y.to_literal()?);
+        for e in &extras {
+            literals.push(e.to_literal()?);
+        }
+
+        let outputs = self.train.run_literals(&literals)?;
+        if outputs.len() != self.manifest.train_outputs.len() {
+            bail!(
+                "train outputs: got {}, manifest says {}",
+                outputs.len(),
+                self.manifest.train_outputs.len()
+            );
+        }
+
+        // Write back state (outputs are ordered params, momenta, bn state,
+        // then metrics — mirroring the state prefix of the inputs).
+        let mut out_iter = outputs.into_iter();
+        for v in state.values.iter_mut() {
+            *v = out_iter.next().unwrap();
+        }
+        let metrics: Vec<HostTensor> = out_iter.collect();
+        self.decode_step_metrics(&metrics)
+    }
+
+    /// One optimizer step on the resident path: state buffers stay in
+    /// backend-native form, only (x, y, scalars, mask) go in and only
+    /// the metric outputs are synced back to host.
+    pub fn step_device(
+        &self,
+        state: &mut DeviceState,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+        mask: Option<&[f32]>,
+    ) -> Result<StepMetrics> {
+        self.check_mask(mask)?;
+        let extras = self.step_extras(hp, mask);
+        let mut inputs: Vec<ValueRef> =
+            Vec::with_capacity(state.values.len() + 2 + extras.len());
+        for v in &state.values {
+            inputs.push(ValueRef::Dev(v));
+        }
+        inputs.push(ValueRef::Host(x));
+        inputs.push(ValueRef::Host(y));
+        for e in &extras {
+            inputs.push(ValueRef::Host(e));
+        }
+
+        let outputs = self.train.execute_refs(&inputs)?;
+        if outputs.len() != self.manifest.train_outputs.len() {
+            bail!(
+                "train outputs: got {}, manifest says {}",
+                outputs.len(),
+                self.manifest.train_outputs.len()
+            );
+        }
+        let mut out_iter = outputs.into_iter();
+        for v in state.values.iter_mut() {
+            *v = out_iter.next().unwrap();
+        }
+        let metrics: Vec<HostTensor> = out_iter
+            .map(|dv| dv.into_host())
+            .collect::<Result<_>>()?;
+        self.decode_step_metrics(&metrics)
+    }
+
+    /// Evaluate one batch with running BN stats + hard gates (host path).
     pub fn eval_batch_run(
         &self,
         state: &ModelState,
@@ -286,20 +417,77 @@ impl TrainProgram {
         literals.push(x.to_literal()?);
         literals.push(y.to_literal()?);
         let outputs = self.eval.run_literals(&literals)?;
+        self.decode_eval_metrics(&outputs, y.elem_count())
+    }
 
-        let mut em = EvalMetrics { total: y.elem_count(), ..Default::default() };
-        for (spec, tensor) in self.manifest.eval_outputs.iter().zip(outputs.iter()) {
-            match spec.name.as_str() {
-                "loss" => em.loss = tensor.scalar()?,
-                "correct" => em.correct = tensor.scalar()?,
-                "correct5" => em.correct5 = tensor.scalar()?,
-                "gate_fracs" => {
-                    em.gate_fracs =
-                        tensor.as_f32()?.iter().map(|&v| v as f64).collect()
-                }
-                other => bail!("unknown eval output {other}"),
-            }
+    /// Evaluate one batch straight from resident state — no host sync of
+    /// the model, only the metric scalars come back.
+    pub fn eval_batch_device(
+        &self,
+        state: &DeviceState,
+        x: &HostTensor,
+        y: &HostTensor,
+    ) -> Result<EvalMetrics> {
+        let mut inputs: Vec<ValueRef> =
+            Vec::with_capacity(self.eval_state_idx.len() + 2);
+        for &i in &self.eval_state_idx {
+            inputs.push(ValueRef::Dev(&state.values[i]));
         }
-        Ok(em)
+        inputs.push(ValueRef::Host(x));
+        inputs.push(ValueRef::Host(y));
+        let outputs = self
+            .eval
+            .execute_refs(&inputs)?
+            .into_iter()
+            .map(|dv| dv.into_host())
+            .collect::<Result<Vec<_>>>()?;
+        self.decode_eval_metrics(&outputs, y.elem_count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state_with(names: &[&str]) -> ModelState {
+        ModelState::new(
+            names
+                .iter()
+                .enumerate()
+                .map(|(i, _)| HostTensor::f32(vec![2], vec![i as f32, i as f32 + 0.5]))
+                .collect(),
+            names.iter().map(|n| n.to_string()).collect(),
+        )
+    }
+
+    #[test]
+    fn by_name_uses_index() {
+        let s = state_with(&["w", "b", "mom.w"]);
+        assert_eq!(s.by_name("b").unwrap().as_f32().unwrap(), &[1.0, 1.5]);
+        assert!(s.by_name("nope").is_none());
+        // clone keeps the index coherent
+        let c = s.clone();
+        assert_eq!(c.by_name("mom.w").unwrap().as_f32().unwrap(), &[2.0, 2.5]);
+    }
+
+    #[test]
+    fn average_params_from_blends_params_and_copies_rest() {
+        let mut a = ModelState::new(
+            vec![
+                HostTensor::f32(vec![2], vec![0.0, 2.0]),
+                HostTensor::f32(vec![2], vec![1.0, 1.0]),
+            ],
+            vec!["w".into(), "mom.w".into()],
+        );
+        let b = ModelState::new(
+            vec![
+                HostTensor::f32(vec![2], vec![4.0, 6.0]),
+                HostTensor::f32(vec![2], vec![9.0, 9.0]),
+            ],
+            vec!["w".into(), "mom.w".into()],
+        );
+        a.average_params_from(&b, 0.5, 1);
+        assert_eq!(a.values[0].as_f32().unwrap(), &[2.0, 4.0]); // blended
+        assert_eq!(a.values[1].as_f32().unwrap(), &[9.0, 9.0]); // copied
     }
 }

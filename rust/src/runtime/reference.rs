@@ -1,0 +1,873 @@
+//! Reference backend: a pure-rust train/eval program that speaks the
+//! exact artifact contract (manifest-ordered inputs -> state outputs +
+//! metrics) without needing a PJRT runtime.
+//!
+//! Motivation: the coordinator, the resident-state path, the prefetch
+//! pipeline and the experiment fan-out are all *orchestration* — none of
+//! them care what the executable computes, only that it is deterministic
+//! and honors the I/O contract.  The reference program (a two-layer MLP
+//! with momentum SGD, optional learned gates and PSG telemetry) makes
+//! every orchestration path executable and benchmarkable on machines
+//! where the real `xla` crate / AOT artifacts are unavailable, and it is
+//! the ground truth for the host-path vs resident-path equivalence tests.
+//!
+//! A reference artifact family is a directory of `<method>.json`
+//! manifests (the same schema aot.py emits) whose programs are
+//! `<method>.train.ref.json` / `<method>.eval.ref.json` files instead of
+//! HLO text; [`write_reference_family`] generates one.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+use super::tensor::{HostTensor, TensorData};
+
+/// One input/output slot of a reference program (manifest IoSpec shape).
+#[derive(Debug, Clone)]
+pub struct RefIo {
+    pub name: String,
+    pub role: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefKind {
+    Train,
+    Eval,
+}
+
+/// A loaded reference program: interpretable train or eval step.
+#[derive(Debug, Clone)]
+pub struct RefProgram {
+    pub kind: RefKind,
+    pub inputs: Vec<RefIo>,
+    pub outputs: Vec<RefIo>,
+    gating: String,
+    update: String,
+    momentum: f32,
+    weight_decay: f32,
+}
+
+impl RefProgram {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading reference program {}", path.display()))?;
+        Self::from_text(&text)
+            .with_context(|| format!("parsing reference program {}", path.display()))
+    }
+
+    pub fn from_text(text: &str) -> Result<Self> {
+        let v = parse(text)?;
+        let kind = match v.req_str("kind")? {
+            "train" => RefKind::Train,
+            "eval" => RefKind::Eval,
+            other => bail!("unknown reference program kind {other}"),
+        };
+        let ios = |key: &str| -> Result<Vec<RefIo>> {
+            v.req_arr(key)?
+                .iter()
+                .map(|io| {
+                    Ok(RefIo {
+                        name: io.req_str("name")?.to_string(),
+                        role: io.req_str("role")?.to_string(),
+                        shape: io
+                            .req_arr("shape")?
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                        dtype: io.req_str("dtype")?.to_string(),
+                    })
+                })
+                .collect()
+        };
+        Ok(Self {
+            kind,
+            inputs: ios("inputs")?,
+            outputs: ios("outputs")?,
+            gating: v.req_str("gating")?.to_string(),
+            update: v.req_str("update")?.to_string(),
+            momentum: v.req_f64("momentum")? as f32,
+            weight_decay: v.req_f64("weight_decay")? as f32,
+        })
+    }
+
+    fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|io| io.name == name)
+            .ok_or_else(|| anyhow!("reference program has no input '{name}'"))
+    }
+
+    /// Interpret the program on positional inputs (manifest order).
+    /// Pure, deterministic, fixed summation order — identical inputs give
+    /// bitwise-identical outputs, which the host/resident equivalence
+    /// tests rely on.
+    pub fn run(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "reference program expects {} inputs, got {}",
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        match self.kind {
+            RefKind::Train => self.run_train(inputs),
+            RefKind::Eval => self.run_eval(inputs),
+        }
+    }
+
+    fn f32_in<'a>(&self, inputs: &[&'a HostTensor], name: &str) -> Result<&'a HostTensor> {
+        Ok(inputs[self.input_index(name)?])
+    }
+
+    fn scalar_in(&self, inputs: &[&HostTensor], name: &str) -> Result<f32> {
+        let t = self.f32_in(inputs, name)?;
+        Ok(t.as_f32()?[0])
+    }
+
+    fn run_train(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let w1t = self.f32_in(inputs, "w1")?;
+        let b1t = self.f32_in(inputs, "b1")?;
+        let w2t = self.f32_in(inputs, "w2")?;
+        let b2t = self.f32_in(inputs, "b2")?;
+        let (d, h) = (w1t.shape[0], w1t.shape[1]);
+        let c = w2t.shape[1];
+        let (w1, b1, w2, b2) =
+            (w1t.as_f32()?, b1t.as_f32()?, w2t.as_f32()?, b2t.as_f32()?);
+
+        let xt = self.f32_in(inputs, "x")?;
+        let bsz = xt.shape[0];
+        let xv = xt.as_f32()?;
+        if xv.len() != bsz * d {
+            bail!("x has {} elems, expected {}x{}", xv.len(), bsz, d);
+        }
+        let yt = inputs[self.input_index("y")?];
+        let yv = match &yt.data {
+            TensorData::I32(v) => v,
+            _ => bail!("y must be i32"),
+        };
+        let lr = self.scalar_in(inputs, "lr")?;
+        let mu = self.momentum;
+        let wd = self.weight_decay;
+
+        let fwd = forward(xv, w1, b1, w2, b2, bsz, d, h, c);
+
+        // ---- loss + train metrics ------------------------------------
+        let (loss_sum, correct, _correct5) = softmax_metrics(&fwd.z, yv, bsz, c);
+        let loss = loss_sum / bsz as f32;
+
+        // ---- backward -------------------------------------------------
+        let mut dz = vec![0f32; bsz * c];
+        for bi in 0..bsz {
+            let zr = &fwd.z[bi * c..(bi + 1) * c];
+            let m = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0f32;
+            for &v in zr {
+                denom += (v - m).exp();
+            }
+            let dr = &mut dz[bi * c..(bi + 1) * c];
+            for ci in 0..c {
+                dr[ci] = (zr[ci] - m).exp() / denom;
+            }
+            let y = yv[bi];
+            if y >= 0 && (y as usize) < c {
+                dr[y as usize] -= 1.0;
+            }
+            for v in dr.iter_mut() {
+                *v /= bsz as f32;
+            }
+        }
+
+        let mut dw2 = vec![0f32; h * c];
+        let mut db2 = vec![0f32; c];
+        for bi in 0..bsz {
+            let hr = &fwd.hact[bi * h..(bi + 1) * h];
+            let dr = &dz[bi * c..(bi + 1) * c];
+            for ci in 0..c {
+                db2[ci] += dr[ci];
+            }
+            for j in 0..h {
+                let hv = hr[j];
+                if hv == 0.0 {
+                    continue;
+                }
+                let row = &mut dw2[j * c..(j + 1) * c];
+                for ci in 0..c {
+                    row[ci] += hv * dr[ci];
+                }
+            }
+        }
+        for (g, w) in dw2.iter_mut().zip(w2.iter()) {
+            *g += wd * *w;
+        }
+
+        let mut dh = vec![0f32; bsz * h];
+        for bi in 0..bsz {
+            let dr = &dz[bi * c..(bi + 1) * c];
+            let pr = &fwd.h_pre[bi * h..(bi + 1) * h];
+            let dhr = &mut dh[bi * h..(bi + 1) * h];
+            for j in 0..h {
+                if pr[j] <= 0.0 {
+                    continue;
+                }
+                let row = &w2[j * c..(j + 1) * c];
+                let mut s = 0f32;
+                for ci in 0..c {
+                    s += dr[ci] * row[ci];
+                }
+                dhr[j] = s;
+            }
+        }
+
+        let mut dw1 = vec![0f32; d * h];
+        let mut db1 = vec![0f32; h];
+        for bi in 0..bsz {
+            let xr = &xv[bi * d..(bi + 1) * d];
+            let dhr = &dh[bi * h..(bi + 1) * h];
+            for j in 0..h {
+                db1[j] += dhr[j];
+            }
+            for di in 0..d {
+                let x = xr[di];
+                if x == 0.0 {
+                    continue;
+                }
+                let row = &mut dw1[di * h..(di + 1) * h];
+                for j in 0..h {
+                    row[j] += x * dhr[j];
+                }
+            }
+        }
+        for (g, w) in dw1.iter_mut().zip(w1.iter()) {
+            *g += wd * *w;
+        }
+
+        // ---- PSG telemetry (update == "psg") -------------------------
+        // Fraction of weight-gradient entries the MSB predictor would
+        // resolve: entries small relative to the per-step max.
+        let psg_frac = if self.update == "psg" {
+            let beta = self.scalar_in(inputs, "beta")?;
+            let grads = [&dw1[..], &db1[..], &dw2[..], &db2[..]];
+            let gmax = grads
+                .iter()
+                .flat_map(|g| g.iter())
+                .fold(0f32, |m, &v| m.max(v.abs()));
+            if gmax > 0.0 {
+                let total: usize = grads.iter().map(|g| g.len()).sum();
+                let confident = grads
+                    .iter()
+                    .flat_map(|g| g.iter())
+                    .filter(|v| v.abs() <= beta * gmax)
+                    .count();
+                Some(confident as f32 / total as f32)
+            } else {
+                Some(0.0)
+            }
+        } else {
+            None
+        };
+
+        // ---- momentum SGD updates ------------------------------------
+        let step = |w: &[f32], m: &[f32], g: &[f32]| -> (Vec<f32>, Vec<f32>) {
+            let mut nm = Vec::with_capacity(m.len());
+            let mut nw = Vec::with_capacity(w.len());
+            for i in 0..w.len() {
+                let mi = mu * m[i] + g[i];
+                nm.push(mi);
+                nw.push(w[i] - lr * mi);
+            }
+            (nw, nm)
+        };
+        let (nw1, nm1) = step(w1, self.f32_in(inputs, "mom.w1")?.as_f32()?, &dw1);
+        let (nb1, nmb1) = step(b1, self.f32_in(inputs, "mom.b1")?.as_f32()?, &db1);
+        let (nw2, nm2) = step(w2, self.f32_in(inputs, "mom.w2")?.as_f32()?, &dw2);
+        let (nb2, nmb2) = step(b2, self.f32_in(inputs, "mom.b2")?.as_f32()?, &db2);
+
+        // ---- learned gates (gating == "learned") ---------------------
+        // The FLOPs regularizer (Eq. 1 analog): alpha pushes the gate
+        // logits down; the reported fraction is the pre-update activity.
+        let mut gate_results: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
+        if self.gating == "learned" {
+            let alpha = self.scalar_in(inputs, "alpha")?;
+            let gw = self.f32_in(inputs, "gate.w")?.as_f32()?;
+            let gm = self.f32_in(inputs, "mom.gate.w")?.as_f32()?;
+            let g = gw.len().max(1) as f32;
+            let mut fracs = Vec::with_capacity(gw.len());
+            let mut ngw = Vec::with_capacity(gw.len());
+            let mut ngm = Vec::with_capacity(gw.len());
+            for i in 0..gw.len() {
+                let sig = 1.0 / (1.0 + (-gw[i]).exp());
+                fracs.push(sig);
+                let grad = alpha * sig * (1.0 - sig) / g;
+                let mi = mu * gm[i] + grad;
+                ngm.push(mi);
+                ngw.push(gw[i] - lr * mi);
+            }
+            gate_results = Some((ngw, ngm, fracs));
+        }
+
+        // ---- persistent state: running mean of hidden activations ----
+        let run_mean = self.f32_in(inputs, "run_mean")?.as_f32()?;
+        let mut new_mean = Vec::with_capacity(h);
+        for j in 0..h {
+            let mut s = 0f32;
+            for bi in 0..bsz {
+                s += fwd.hact[bi * h + j];
+            }
+            new_mean.push(0.9 * run_mean[j] + 0.1 * s / bsz as f32);
+        }
+
+        // ---- assemble outputs in spec order --------------------------
+        let mut computed: HashMap<&str, HostTensor> = HashMap::new();
+        computed.insert("w1", HostTensor::f32(vec![d, h], nw1));
+        computed.insert("b1", HostTensor::f32(vec![h], nb1));
+        computed.insert("w2", HostTensor::f32(vec![h, c], nw2));
+        computed.insert("b2", HostTensor::f32(vec![c], nb2));
+        computed.insert("mom.w1", HostTensor::f32(vec![d, h], nm1));
+        computed.insert("mom.b1", HostTensor::f32(vec![h], nmb1));
+        computed.insert("mom.w2", HostTensor::f32(vec![h, c], nm2));
+        computed.insert("mom.b2", HostTensor::f32(vec![c], nmb2));
+        computed.insert("run_mean", HostTensor::f32(vec![h], new_mean));
+        computed.insert("loss", HostTensor::scalar_f32(loss));
+        computed.insert("correct", HostTensor::scalar_f32(correct));
+        if let Some((ngw, ngm, fracs)) = gate_results {
+            let g = fracs.len();
+            computed.insert("gate.w", HostTensor::f32(vec![g], ngw));
+            computed.insert("mom.gate.w", HostTensor::f32(vec![g], ngm));
+            computed.insert("gate_fracs", HostTensor::f32(vec![g], fracs));
+        }
+        if let Some(p) = psg_frac {
+            computed.insert("psg_frac", HostTensor::scalar_f32(p));
+        }
+
+        self.outputs
+            .iter()
+            .map(|io| {
+                computed
+                    .remove(io.name.as_str())
+                    .ok_or_else(|| anyhow!("reference train step cannot produce '{}'", io.name))
+            })
+            .collect()
+    }
+
+    fn run_eval(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let w1t = self.f32_in(inputs, "w1")?;
+        let w2t = self.f32_in(inputs, "w2")?;
+        let (d, h) = (w1t.shape[0], w1t.shape[1]);
+        let c = w2t.shape[1];
+        let (w1, w2) = (w1t.as_f32()?, w2t.as_f32()?);
+        let b1 = self.f32_in(inputs, "b1")?.as_f32()?;
+        let b2 = self.f32_in(inputs, "b2")?.as_f32()?;
+        let xt = self.f32_in(inputs, "x")?;
+        let bsz = xt.shape[0];
+        let xv = xt.as_f32()?;
+        let yt = inputs[self.input_index("y")?];
+        let yv = match &yt.data {
+            TensorData::I32(v) => v,
+            _ => bail!("y must be i32"),
+        };
+
+        let fwd = forward(xv, w1, b1, w2, b2, bsz, d, h, c);
+        let (loss_sum, correct, correct5) = softmax_metrics(&fwd.z, yv, bsz, c);
+
+        // Batch-mean loss: rows with label < 0 (eval-tail padding)
+        // contribute exactly zero, so `mean * batch` recovers the sum
+        // over real samples — the contract evaluate_full relies on.
+        let mut computed: HashMap<&str, HostTensor> = HashMap::new();
+        computed.insert("loss", HostTensor::scalar_f32(loss_sum / bsz as f32));
+        computed.insert("correct", HostTensor::scalar_f32(correct));
+        computed.insert("correct5", HostTensor::scalar_f32(correct5));
+        self.outputs
+            .iter()
+            .map(|io| {
+                computed
+                    .remove(io.name.as_str())
+                    .ok_or_else(|| anyhow!("reference eval cannot produce '{}'", io.name))
+            })
+            .collect()
+    }
+}
+
+struct Forward {
+    h_pre: Vec<f32>,
+    hact: Vec<f32>,
+    z: Vec<f32>,
+}
+
+fn forward(
+    xv: &[f32],
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    bsz: usize,
+    d: usize,
+    h: usize,
+    c: usize,
+) -> Forward {
+    let mut h_pre = vec![0f32; bsz * h];
+    for bi in 0..bsz {
+        let xr = &xv[bi * d..(bi + 1) * d];
+        let hr = &mut h_pre[bi * h..(bi + 1) * h];
+        hr.copy_from_slice(b1);
+        for di in 0..d {
+            let x = xr[di];
+            if x == 0.0 {
+                continue;
+            }
+            let row = &w1[di * h..(di + 1) * h];
+            for j in 0..h {
+                hr[j] += x * row[j];
+            }
+        }
+    }
+    let hact: Vec<f32> = h_pre.iter().map(|&v| v.max(0.0)).collect();
+    let mut z = vec![0f32; bsz * c];
+    for bi in 0..bsz {
+        let hr = &hact[bi * h..(bi + 1) * h];
+        let zr = &mut z[bi * c..(bi + 1) * c];
+        zr.copy_from_slice(b2);
+        for j in 0..h {
+            let hv = hr[j];
+            if hv == 0.0 {
+                continue;
+            }
+            let row = &w2[j * c..(j + 1) * c];
+            for ci in 0..c {
+                zr[ci] += hv * row[ci];
+            }
+        }
+    }
+    Forward { h_pre, hact, z }
+}
+
+/// (loss_sum, correct, correct5) over a logits batch.  Rows with a
+/// negative label are padding: they contribute nothing to any metric
+/// (mirroring `one_hot(-1) == 0` in the lowered artifacts).
+fn softmax_metrics(z: &[f32], yv: &[i32], bsz: usize, c: usize) -> (f32, f32, f32) {
+    let mut loss_sum = 0f32;
+    let mut correct = 0f32;
+    let mut correct5 = 0f32;
+    for bi in 0..bsz {
+        let y = yv[bi];
+        if y < 0 || y as usize >= c {
+            continue;
+        }
+        let y = y as usize;
+        let zr = &z[bi * c..(bi + 1) * c];
+        let m = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0f32;
+        for &v in zr {
+            denom += (v - m).exp();
+        }
+        loss_sum += denom.ln() + m - zr[y];
+        // rank of the true class (strict wins; ties broken by index).
+        let zy = zr[y];
+        let rank = zr
+            .iter()
+            .enumerate()
+            .filter(|&(ci, &v)| v > zy || (v == zy && ci < y))
+            .count();
+        if rank == 0 {
+            correct += 1.0;
+        }
+        if rank < 5 {
+            correct5 += 1.0;
+        }
+    }
+    (loss_sum, correct, correct5)
+}
+
+// ==========================================================================
+// Fixture generation
+// ==========================================================================
+
+/// Sizing of a generated reference family.
+#[derive(Debug, Clone)]
+pub struct RefFamilySpec {
+    pub family: String,
+    pub hw: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub gated_blocks: usize,
+}
+
+impl RefFamilySpec {
+    /// Small enough for debug-mode tests.
+    pub fn tiny() -> Self {
+        Self {
+            family: "refmlp-tiny".into(),
+            hw: 8,
+            hidden: 32,
+            classes: 10,
+            batch: 8,
+            eval_batch: 16,
+            gated_blocks: 4,
+        }
+    }
+
+    /// Large enough that state-transfer overhead is measurable against
+    /// compute (bench_runtime's host-vs-resident comparison).
+    pub fn bench() -> Self {
+        Self {
+            family: "refmlp-bench".into(),
+            hw: 16,
+            hidden: 192,
+            classes: 10,
+            batch: 16,
+            eval_batch: 32,
+            gated_blocks: 4,
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.hw * self.hw * 3
+    }
+}
+
+fn io(name: &str, role: &str, shape: &[usize], dtype: &str, init: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("role", Json::str(role)),
+        (
+            "shape",
+            Json::arr(shape.iter().map(|&s| Json::num(s as f64))),
+        ),
+        ("dtype", Json::str(dtype)),
+        ("init", Json::str(init)),
+    ])
+}
+
+/// Write a reference artifact family (methods `sgd32` and `e2train`)
+/// under `dir/<family>/`: per-method manifest + train/eval reference
+/// programs.  The layout matches aot.py's exactly, so `TrainProgram`,
+/// `Trainer` and the experiment harness load it like any other family.
+pub fn write_reference_family(dir: &Path, spec: &RefFamilySpec) -> Result<std::path::PathBuf> {
+    let d = spec.dim();
+    let h = spec.hidden;
+    let c = spec.classes;
+    let g = spec.gated_blocks;
+    let fam_dir = dir.join(&spec.family);
+    std::fs::create_dir_all(&fam_dir)?;
+
+    for method in ["sgd32", "e2train"] {
+        let gated = method == "e2train";
+        let (update, gating) = if gated { ("psg", "learned") } else { ("sgd", "none") };
+
+        // ---- ordered state inputs (params, momenta, bn-state) --------
+        let mut params = vec![
+            io("w1", "param", &[d, h], "f32", "he"),
+            io("b1", "param", &[h], "f32", "zeros"),
+            io("w2", "param", &[h, c], "f32", "he"),
+            io("b2", "param", &[c], "f32", "zeros"),
+        ];
+        if gated {
+            params.push(io("gate.w", "param", &[g], "f32", "zeros"));
+        }
+        let mut moms = vec![
+            io("mom.w1", "mom", &[d, h], "f32", "zeros"),
+            io("mom.b1", "mom", &[h], "f32", "zeros"),
+            io("mom.w2", "mom", &[h, c], "f32", "zeros"),
+            io("mom.b2", "mom", &[c], "f32", "zeros"),
+        ];
+        if gated {
+            moms.push(io("mom.gate.w", "mom", &[g], "f32", "zeros"));
+        }
+        let state = vec![io("run_mean", "state", &[h], "f32", "zeros")];
+
+        let mut train_inputs: Vec<Json> = Vec::new();
+        train_inputs.extend(params.iter().cloned());
+        train_inputs.extend(moms.iter().cloned());
+        train_inputs.extend(state.iter().cloned());
+        train_inputs.push(io("x", "data", &[spec.batch, spec.hw, spec.hw, 3], "f32", ""));
+        train_inputs.push(io("y", "data", &[spec.batch], "i32", ""));
+        train_inputs.push(io("lr", "scalar", &[], "f32", ""));
+        if gated {
+            train_inputs.push(io("alpha", "scalar", &[], "f32", ""));
+            train_inputs.push(io("beta", "scalar", &[], "f32", ""));
+        }
+
+        let out_role = |spec_io: &Json, role: &str| -> Json {
+            let mut m = spec_io.as_obj().unwrap().clone();
+            m.insert("role".into(), Json::str(role));
+            Json::Obj(m)
+        };
+        let mut train_outputs: Vec<Json> = Vec::new();
+        train_outputs.extend(params.iter().map(|p| out_role(p, "out_param")));
+        train_outputs.extend(moms.iter().map(|p| out_role(p, "out_mom")));
+        train_outputs.extend(state.iter().map(|p| out_role(p, "out_state")));
+        train_outputs.push(io("loss", "out_metric", &[], "f32", ""));
+        train_outputs.push(io("correct", "out_metric", &[], "f32", ""));
+        if gated {
+            train_outputs.push(io("gate_fracs", "out_metric", &[g], "f32", ""));
+            train_outputs.push(io("psg_frac", "out_metric", &[], "f32", ""));
+        }
+
+        let mut eval_inputs: Vec<Json> = params.iter().cloned().collect();
+        eval_inputs.extend(state.iter().cloned());
+        eval_inputs.push(io(
+            "x",
+            "data",
+            &[spec.eval_batch, spec.hw, spec.hw, 3],
+            "f32",
+            "",
+        ));
+        eval_inputs.push(io("y", "data", &[spec.eval_batch], "i32", ""));
+        let eval_outputs = vec![
+            io("loss", "out_metric", &[], "f32", ""),
+            io("correct", "out_metric", &[], "f32", ""),
+            io("correct5", "out_metric", &[], "f32", ""),
+        ];
+
+        // ---- block table for the energy model ------------------------
+        let mut blocks = vec![Json::obj(vec![
+            ("name", Json::str("fc1")),
+            ("flops", Json::num((d * h) as f64)),
+            ("gateable", Json::Bool(false)),
+            ("in_ch", Json::num(3.0)),
+            ("out_ch", Json::num(h as f64)),
+            ("in_hw", Json::num(spec.hw as f64)),
+            (
+                "params",
+                Json::arr([Json::str("w1"), Json::str("b1")].into_iter()),
+            ),
+        ])];
+        let mut gated_fracs: Vec<Json> = Vec::new();
+        if gated {
+            for k in 0..g {
+                blocks.push(Json::obj(vec![
+                    ("name", Json::str(format!("gated{k}"))),
+                    ("flops", Json::num((h * h) as f64)),
+                    ("gateable", Json::Bool(true)),
+                    ("in_ch", Json::num(h as f64)),
+                    ("out_ch", Json::num(h as f64)),
+                    ("in_hw", Json::num(1.0)),
+                    ("params", Json::arr(std::iter::empty())),
+                ]));
+                gated_fracs.push(Json::num(1.0 / g as f64));
+            }
+        }
+        let block_flops = d * h + if gated { g * h * h } else { 0 };
+        let head_flops = h * c;
+        let gate_flops = if gated { g * h } else { 0 };
+        let param_count = d * h + h + h * c + c + if gated { g } else { 0 };
+
+        let manifest = Json::obj(vec![
+            ("family", Json::str(&spec.family)),
+            (
+                "method",
+                Json::obj(vec![
+                    ("name", Json::str(method)),
+                    ("update", Json::str(update)),
+                    ("gating", Json::str(gating)),
+                    ("alpha", Json::num(1.0)),
+                    ("beta", Json::num(0.05)),
+                    ("momentum", Json::num(0.9)),
+                    ("weight_decay", Json::num(1e-4)),
+                    ("psg_bits_x", Json::num(4.0)),
+                    ("psg_bits_gy", Json::num(10.0)),
+                ]),
+            ),
+            (
+                "arch",
+                Json::obj(vec![
+                    ("name", Json::str("refmlp")),
+                    ("kind", Json::str("mlp")),
+                    ("num_classes", Json::num(c as f64)),
+                    ("image_size", Json::num(spec.hw as f64)),
+                    ("batch", Json::num(spec.batch as f64)),
+                    ("eval_batch", Json::num(spec.eval_batch as f64)),
+                    ("width", Json::num(1.0)),
+                    ("feat_ch", Json::num(h as f64)),
+                ]),
+            ),
+            ("train_inputs", Json::Arr(train_inputs.clone())),
+            ("train_outputs", Json::Arr(train_outputs.clone())),
+            ("eval_inputs", Json::Arr(eval_inputs.clone())),
+            ("eval_outputs", Json::Arr(eval_outputs.clone())),
+            ("blocks", Json::Arr(blocks)),
+            ("head_flops", Json::num(head_flops as f64)),
+            ("total_flops", Json::num((block_flops + head_flops) as f64)),
+            ("gated_flop_fracs", Json::Arr(gated_fracs)),
+            ("gate_flops", Json::num(gate_flops as f64)),
+            ("param_count", Json::num(param_count as f64)),
+        ]);
+        std::fs::write(
+            fam_dir.join(format!("{method}.json")),
+            manifest.to_string(),
+        )?;
+
+        let prog = |kind: &str, inputs: &[Json], outputs: &[Json]| {
+            Json::obj(vec![
+                ("kind", Json::str(kind)),
+                ("gating", Json::str(gating)),
+                ("update", Json::str(update)),
+                ("momentum", Json::num(0.9)),
+                ("weight_decay", Json::num(1e-4)),
+                ("inputs", Json::Arr(inputs.to_vec())),
+                ("outputs", Json::Arr(outputs.to_vec())),
+            ])
+        };
+        std::fs::write(
+            fam_dir.join(format!("{method}.train.ref.json")),
+            prog("train", &train_inputs, &train_outputs).to_string(),
+        )?;
+        std::fs::write(
+            fam_dir.join(format!("{method}.eval.ref.json")),
+            prog("eval", &eval_inputs, &eval_outputs).to_string(),
+        )?;
+    }
+    Ok(fam_dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn family_writes_and_programs_parse() {
+        let tmp = TempDir::new().unwrap();
+        let spec = RefFamilySpec::tiny();
+        let fam = write_reference_family(tmp.path(), &spec).unwrap();
+        for method in ["sgd32", "e2train"] {
+            let m = crate::runtime::Manifest::load(&fam.join(format!("{method}.json")))
+                .unwrap();
+            assert_eq!(m.method.name, method);
+            let train =
+                RefProgram::load(&fam.join(format!("{method}.train.ref.json"))).unwrap();
+            assert_eq!(train.kind, RefKind::Train);
+            assert_eq!(train.inputs.len(), m.train_inputs.len());
+            assert_eq!(train.outputs.len(), m.train_outputs.len());
+            let eval =
+                RefProgram::load(&fam.join(format!("{method}.eval.ref.json"))).unwrap();
+            assert_eq!(eval.inputs.len(), m.eval_inputs.len());
+            // state outputs mirror the state prefix of the inputs
+            let n_state = m
+                .train_inputs
+                .iter()
+                .filter(|s| matches!(s.role.as_str(), "param" | "mom" | "state"))
+                .count();
+            let n_out = m
+                .train_outputs
+                .iter()
+                .filter(|s| s.role.starts_with("out_") && s.role != "out_metric")
+                .count();
+            assert_eq!(n_state, n_out);
+            assert_eq!(m.gated_flop_fracs.len(), m.num_gated());
+        }
+    }
+
+    #[test]
+    fn train_step_is_deterministic_and_learns() {
+        use crate::runtime::{ModelState, StepHyper, TrainProgram};
+
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = crate::runtime::Engine::cpu().unwrap();
+        let prog = TrainProgram::load(&engine, &fam.join("sgd32.json")).unwrap();
+        let data = crate::data::synthetic::generate(10, 64, 8, 0);
+        let mut sampler = crate::data::Sampler::new(
+            data.n,
+            prog.batch(),
+            crate::data::AugmentCfg { enabled: false, ..Default::default() },
+            1,
+        );
+        let (x, y) = sampler.next_batch(&data);
+
+        let mut s1 = ModelState::init(&prog.manifest, 7);
+        let mut s2 = ModelState::init(&prog.manifest, 7);
+        let mut losses = Vec::new();
+        for _ in 0..15 {
+            let a = prog.step(&mut s1, &x, &y, StepHyper::lr(0.02), None).unwrap();
+            let b = prog.step(&mut s2, &x, &y, StepHyper::lr(0.02), None).unwrap();
+            assert_eq!(a.loss, b.loss);
+            losses.push(a.loss);
+        }
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "loss did not decrease on a fixed batch: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn e2train_method_emits_gate_and_psg_telemetry() {
+        use crate::runtime::{ModelState, StepHyper, TrainProgram};
+
+        let tmp = TempDir::new().unwrap();
+        let spec = RefFamilySpec::tiny();
+        let fam = write_reference_family(tmp.path(), &spec).unwrap();
+        let engine = crate::runtime::Engine::cpu().unwrap();
+        let prog = TrainProgram::load(&engine, &fam.join("e2train.json")).unwrap();
+        let mut state = ModelState::init(&prog.manifest, 3);
+        let data = crate::data::synthetic::generate(10, 32, 8, 0);
+        let mut sampler = crate::data::Sampler::new(
+            data.n,
+            prog.batch(),
+            crate::data::AugmentCfg::default(),
+            2,
+        );
+        let (x, y) = sampler.next_batch(&data);
+        let sm = prog.step(&mut state, &x, &y, StepHyper::lr(0.03), None).unwrap();
+        assert_eq!(sm.gate_fracs.len(), spec.gated_blocks);
+        assert!(sm.gate_fracs.iter().all(|&f| (0.0..=1.0).contains(&f)));
+        let p = sm.psg_frac.expect("psg telemetry");
+        assert!((0.0..=1.0).contains(&p));
+        assert!(sm.loss.is_finite() && sm.loss > 0.0);
+    }
+
+    #[test]
+    fn eval_ignores_padded_rows() {
+        let tmp = TempDir::new().unwrap();
+        let spec = RefFamilySpec::tiny();
+        let fam = write_reference_family(tmp.path(), &spec).unwrap();
+        let prog = RefProgram::load(&fam.join("sgd32.eval.ref.json")).unwrap();
+        let eb = spec.eval_batch;
+        let d = spec.dim();
+        let h = spec.hidden;
+        let c = spec.classes;
+        let w1 = HostTensor::f32(vec![d, h], vec![0.01; d * h]);
+        let b1 = HostTensor::f32(vec![h], vec![0.0; h]);
+        let w2 = HostTensor::f32(vec![h, c], vec![0.02; h * c]);
+        let b2 = HostTensor::f32(vec![c], vec![0.0; c]);
+        let run_mean = HostTensor::f32(vec![h], vec![0.0; h]);
+        let x = HostTensor::f32(vec![eb, spec.hw, spec.hw, 3], vec![0.5; eb * d]);
+        let mut labels = vec![0i32; eb];
+        for l in labels.iter_mut().skip(eb / 2) {
+            *l = -1; // padding
+        }
+        let y_pad = HostTensor::i32(vec![eb], labels);
+        let y_full = HostTensor::i32(vec![eb], vec![0i32; eb]);
+        let ins = |y: &HostTensor| -> Vec<HostTensor> {
+            vec![
+                w1.clone(),
+                b1.clone(),
+                w2.clone(),
+                b2.clone(),
+                run_mean.clone(),
+                x.clone(),
+                y.clone(),
+            ]
+        };
+        let run = |tensors: &[HostTensor]| {
+            let refs: Vec<&HostTensor> = tensors.iter().collect();
+            prog.run(&refs).unwrap()
+        };
+        let padded = run(&ins(&y_pad));
+        let full = run(&ins(&y_full));
+        // half the rows are padding: exactly half the correct count and
+        // half the loss mass.
+        let c_pad = padded[1].scalar().unwrap();
+        let c_full = full[1].scalar().unwrap();
+        assert_eq!(c_pad * 2.0, c_full);
+        let l_pad = padded[0].scalar().unwrap();
+        let l_full = full[0].scalar().unwrap();
+        assert!((l_pad * 2.0 - l_full).abs() < 1e-5);
+    }
+}

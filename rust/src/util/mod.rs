@@ -5,12 +5,14 @@
 //! * [`rng`] — xoshiro256** PRNG (replaces rand)
 //! * [`cli`] — argv parsing (replaces clap)
 //! * [`bench`] — micro-bench harness (replaces criterion)
+//! * [`perf`] — host-vs-resident step-path comparisons (BENCH_runtime.json)
 //! * [`prop`] — seeded property testing (replaces proptest)
 //! * [`tmp`] — scratch dirs for tests (replaces tempfile)
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod perf;
 pub mod prop;
 pub mod rng;
 pub mod tmp;

@@ -1,0 +1,194 @@
+//! Host-path vs resident-path perf comparison harness, shared by
+//! `benches/bench_runtime.rs` (release numbers, the canonical record)
+//! and the tier-1 smoke test (debug numbers, so `BENCH_runtime.json`
+//! materializes on every verified checkout).  See PERF.md for how to
+//! read the output.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::{DataCfg, RunCfg};
+use crate::coordinator::Trainer;
+use crate::data::{synthetic, AugmentCfg, Sampler};
+use crate::runtime::{Engine, ModelState, StepHyper, TrainProgram};
+use crate::util::bench::bench;
+use crate::util::Json;
+
+/// Per-method step-latency comparison: the same program driven through
+/// the legacy host path and the resident path.
+#[derive(Debug, Clone)]
+pub struct StepComparison {
+    pub method: String,
+    pub host_mean_s: f64,
+    pub resident_mean_s: f64,
+}
+
+impl StepComparison {
+    /// host/resident — > 1.0 means the resident path is faster.
+    pub fn speedup(&self) -> f64 {
+        self.host_mean_s / self.resident_mean_s
+    }
+}
+
+/// Trainer throughput with and without the prefetch pipeline (both on
+/// the resident path).
+#[derive(Debug, Clone)]
+pub struct PrefetchComparison {
+    pub steps_per_sec_on: f64,
+    pub steps_per_sec_off: f64,
+}
+
+/// Measure train-step latency through both state paths for one
+/// (family, method) artifact.  Both paths execute the identical program
+/// on identical inputs; only the state plumbing differs.
+pub fn compare_step_paths(
+    engine: &Engine,
+    artifacts: &Path,
+    family: &str,
+    method: &str,
+    warmup: usize,
+    iters: usize,
+) -> Result<StepComparison> {
+    let prog = TrainProgram::load(
+        engine,
+        &artifacts.join(family).join(format!("{method}.json")),
+    )?;
+    let classes = prog.manifest.arch.num_classes;
+    let hw = prog.manifest.arch.image_size;
+    let data = synthetic::generate(classes, 256, hw, 0);
+    let mut sampler = Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 0);
+    let (x, y) = sampler.next_batch(&data);
+    let mask: Option<Vec<f32>> = (prog.manifest.method.gating == "mask")
+        .then(|| vec![1.0; prog.manifest.num_gated()]);
+    let hp = StepHyper::lr(0.05);
+
+    let mut host_state = ModelState::init(&prog.manifest, 0);
+    let host = bench(&format!("step/host/{family}/{method}"), warmup, iters, || {
+        prog.step(&mut host_state, &x, &y, hp, mask.as_deref()).unwrap();
+    });
+
+    let mut dev_state = prog.upload_state(ModelState::init(&prog.manifest, 0))?;
+    let resident = bench(
+        &format!("step/resident/{family}/{method}"),
+        warmup,
+        iters,
+        || {
+            prog.step_device(&mut dev_state, &x, &y, hp, mask.as_deref())
+                .unwrap();
+        },
+    );
+
+    Ok(StepComparison {
+        method: method.to_string(),
+        host_mean_s: host.mean_s,
+        resident_mean_s: resident.mean_s,
+    })
+}
+
+/// Measure end-to-end trainer throughput (steps/s) with the prefetch
+/// worker on vs off, resident path both times.
+pub fn compare_prefetch(
+    engine: &Engine,
+    artifacts: &Path,
+    family: &str,
+    method: &str,
+    iters: u64,
+) -> Result<PrefetchComparison> {
+    let run = |prefetch: bool| -> Result<f64> {
+        let mut cfg = RunCfg::quick(family, method, iters);
+        cfg.artifacts_dir = artifacts.to_path_buf();
+        cfg.prefetch = prefetch;
+        cfg.smd.enabled = false;
+        let manifest = crate::runtime::Manifest::load(&cfg.manifest_path())?;
+        cfg.data = DataCfg::Synthetic {
+            classes: manifest.arch.num_classes,
+            n_train: 512,
+            n_test: manifest.arch.eval_batch,
+            seed: 0,
+        };
+        let mut trainer = Trainer::new(engine, cfg)?;
+        let out = trainer.run(None)?;
+        Ok(out.metrics.steps_run as f64 / out.metrics.wall_seconds.max(1e-9))
+    };
+    Ok(PrefetchComparison {
+        steps_per_sec_on: run(true)?,
+        steps_per_sec_off: run(false)?,
+    })
+}
+
+/// Serialize a bench report.  `source` names the producer + build
+/// profile so release bench numbers are distinguishable from the debug
+/// smoke run.
+pub fn bench_report(
+    source: &str,
+    family: &str,
+    steps: &[StepComparison],
+    prefetch: &PrefetchComparison,
+) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str("bench_runtime/v1")),
+        ("source", Json::str(source)),
+        ("family", Json::str(family)),
+        ("backend", Json::str("reference")),
+        (
+            "step_latency",
+            Json::Obj(
+                steps
+                    .iter()
+                    .map(|s| {
+                        (
+                            s.method.clone(),
+                            Json::obj(vec![
+                                ("host_mean_s", Json::num(s.host_mean_s)),
+                                ("resident_mean_s", Json::num(s.resident_mean_s)),
+                                ("speedup", Json::num(s.speedup())),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "steps_per_sec",
+            Json::obj(vec![
+                ("prefetch_on", Json::num(prefetch.steps_per_sec_on)),
+                ("prefetch_off", Json::num(prefetch.steps_per_sec_off)),
+            ]),
+        ),
+    ])
+}
+
+/// Write the report where the perf trajectory is tracked across PRs.
+pub fn write_bench_report(path: &Path, report: &Json) -> Result<()> {
+    std::fs::write(path, report.to_string())?;
+    eprintln!("bench report -> {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{write_reference_family, RefFamilySpec};
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn comparison_runs_and_serializes() {
+        let tmp = TempDir::new().unwrap();
+        write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let cmp =
+            compare_step_paths(&engine, tmp.path(), "refmlp-tiny", "sgd32", 1, 3).unwrap();
+        assert!(cmp.host_mean_s > 0.0 && cmp.resident_mean_s > 0.0);
+        let pf = compare_prefetch(&engine, tmp.path(), "refmlp-tiny", "sgd32", 6).unwrap();
+        assert!(pf.steps_per_sec_on > 0.0 && pf.steps_per_sec_off > 0.0);
+        let report = bench_report("unit-test", "refmlp-tiny", &[cmp], &pf);
+        let text = report.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.at(&["schema"]).as_str(), Some("bench_runtime/v1"));
+        assert!(back
+            .at(&["step_latency", "sgd32", "speedup"])
+            .as_f64()
+            .is_some());
+    }
+}

@@ -1,0 +1,60 @@
+//! Tier-1 bench smoke: runs the host-vs-resident and prefetch
+//! comparisons at reduced scale and records `BENCH_runtime.json` at the
+//! repo root, so every verified checkout carries a perf snapshot even
+//! when `cargo bench` never runs.  `benches/bench_runtime.rs` overwrites
+//! the file with release-profile numbers — those are the canonical
+//! record (debug timings here are only a smoke signal).
+
+use std::path::PathBuf;
+
+use e2train::runtime::{write_reference_family, Engine, RefFamilySpec};
+use e2train::util::perf;
+use e2train::util::tmp::TempDir;
+
+#[test]
+fn bench_smoke_records_bench_runtime_json() {
+    let tmp = TempDir::new().unwrap();
+    let spec = RefFamilySpec::tiny();
+    write_reference_family(tmp.path(), &spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    let mut steps = Vec::new();
+    for method in ["sgd32", "e2train"] {
+        let cmp =
+            perf::compare_step_paths(&engine, tmp.path(), &spec.family, method, 3, 15)
+                .unwrap();
+        assert!(cmp.host_mean_s > 0.0 && cmp.resident_mean_s > 0.0);
+        eprintln!(
+            "[smoke] {method}: host/resident speedup {:.2}x",
+            cmp.speedup()
+        );
+        steps.push(cmp);
+    }
+    let prefetch =
+        perf::compare_prefetch(&engine, tmp.path(), &spec.family, "sgd32", 30).unwrap();
+    assert!(prefetch.steps_per_sec_on > 0.0 && prefetch.steps_per_sec_off > 0.0);
+
+    let report = perf::bench_report(
+        "cargo-test smoke (debug profile)",
+        &spec.family,
+        &steps,
+        &prefetch,
+    );
+    // repo root = <crate>/..
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_runtime.json");
+    // Never clobber canonical release numbers (cargo bench) with debug
+    // timings — only write when the file is absent or smoke-sourced.
+    let has_release_numbers = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| e2train::util::json::parse(&t).ok())
+        .and_then(|v| v.at(&["source"]).as_str().map(|s| s.contains("release")))
+        .unwrap_or(false);
+    if has_release_numbers {
+        eprintln!("[smoke] BENCH_runtime.json holds release numbers; leaving it alone");
+    } else {
+        perf::write_bench_report(&path, &report).unwrap();
+        assert!(path.exists());
+    }
+}

@@ -1,0 +1,217 @@
+//! Equivalence and determinism guarantees of the resident-state step
+//! loop, the prefetch pipeline, and the parallel experiment fan-out —
+//! all running on the reference backend, so these execute everywhere
+//! (no PJRT runtime or AOT artifacts required).
+//!
+//! The contract under test: for fixed seeds, the resident+prefetch loop
+//! is *bitwise indistinguishable* from the legacy synchronous host path
+//! in every reported metric and in the final model state.
+
+use std::path::Path;
+
+use e2train::config::{DataCfg, RunCfg};
+use e2train::coordinator::Trainer;
+use e2train::data::synthetic;
+use e2train::experiments::{ExpCtx, RunSpec};
+use e2train::runtime::{
+    write_reference_family, BackendKind, Engine, HostTensor, ModelState, RefFamilySpec,
+    TrainProgram,
+};
+use e2train::util::tmp::TempDir;
+
+const FAM: &str = "refmlp-tiny";
+
+fn ref_cfg(artifacts: &Path, method: &str, iters: u64) -> RunCfg {
+    let mut cfg = RunCfg::quick(FAM, method, iters);
+    cfg.artifacts_dir = artifacts.to_path_buf();
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 128, n_test: 40, seed: 0 };
+    cfg
+}
+
+fn assert_states_bitwise(a: &ModelState, b: &ModelState) {
+    assert_eq!(a.names, b.names);
+    for ((n, x), y) in a.names.iter().zip(a.values.iter()).zip(b.values.iter()) {
+        assert_eq!(x.shape, y.shape, "{n}: shape drift");
+        assert_eq!(x.as_f32().unwrap(), y.as_f32().unwrap(), "{n}: value drift");
+    }
+}
+
+/// Resident + prefetch (the default) vs legacy host + synchronous
+/// sampling: identical trace losses, identical periodic and final eval
+/// metrics, identical energy, bitwise-identical final state.  `e2train`
+/// additionally exercises SWA snapshots (sync_to_host) and SMD skips
+/// consuming prefetched batches.
+#[test]
+fn resident_prefetch_matches_host_sync_path() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    for method in ["sgd32", "e2train"] {
+        let engine = Engine::cpu().unwrap();
+        let mut host_cfg = ref_cfg(tmp.path(), method, 24);
+        host_cfg.resident = false;
+        host_cfg.prefetch = false;
+        host_cfg.eval_every = 8;
+        let mut res_cfg = ref_cfg(tmp.path(), method, 24);
+        assert!(res_cfg.resident && res_cfg.prefetch, "defaults changed");
+        res_cfg.eval_every = 8;
+
+        let a = Trainer::new(&engine, host_cfg).unwrap().run(None).unwrap();
+        let b = Trainer::new(&engine, res_cfg).unwrap().run(None).unwrap();
+
+        assert_eq!(a.metrics.final_test_acc, b.metrics.final_test_acc, "{method}");
+        assert_eq!(a.metrics.final_test_acc_top5, b.metrics.final_test_acc_top5);
+        assert_eq!(a.metrics.final_loss, b.metrics.final_loss, "{method}");
+        assert_eq!(a.metrics.total_joules, b.metrics.total_joules, "{method}");
+        assert_eq!(a.metrics.steps_run, b.metrics.steps_run);
+        assert_eq!(a.metrics.steps_skipped, b.metrics.steps_skipped);
+        let la: Vec<f64> = a.metrics.trace.iter().map(|p| p.loss).collect();
+        let lb: Vec<f64> = b.metrics.trace.iter().map(|p| p.loss).collect();
+        assert_eq!(la, lb, "{method}: per-step losses diverged");
+        let ea: Vec<Option<f64>> = a.metrics.trace.iter().map(|p| p.test_acc).collect();
+        let eb: Vec<Option<f64>> = b.metrics.trace.iter().map(|p| p.test_acc).collect();
+        assert_eq!(ea, eb, "{method}: periodic evals diverged");
+        assert_states_bitwise(&a.state, &b.state);
+    }
+}
+
+#[test]
+fn device_state_roundtrip_via_program() {
+    let tmp = TempDir::new().unwrap();
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let prog = TrainProgram::load(&engine, &fam.join("e2train.json")).unwrap();
+    assert_eq!(prog.backend(), BackendKind::Reference);
+    let state = ModelState::init(&prog.manifest, 11);
+    let dev = prog.upload_state(state.clone()).unwrap();
+    assert_eq!(dev.num_tensors(), state.num_tensors());
+    let back = dev.sync_to_host().unwrap();
+    assert_states_bitwise(&state, &back);
+}
+
+/// The fan-out must be invisible: identical records run-to-run, and
+/// identical to serial execution, with compiled programs shared through
+/// the engine cache.
+#[test]
+fn parallel_experiment_fanout_is_deterministic() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let out = TempDir::new().unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut ctx = ExpCtx::new(&engine, tmp.path(), out.path(), 10);
+    ctx.n_train = 96;
+    ctx.n_test = 32;
+
+    let specs = || {
+        vec![
+            RunSpec::new(FAM, "sgd32", 10, |_| {}),
+            RunSpec::new(FAM, "sgd32", 10, |c| {
+                c.smd.enabled = true;
+                c.smd.p = 0.5;
+            }),
+            RunSpec::new(FAM, "e2train", 10, |_| {}),
+            RunSpec::new(FAM, "e2train", 10, |c| c.alpha = 4.0),
+        ]
+    };
+    let r1 = ctx.run_many(specs()).unwrap();
+    let r2 = ctx.run_many(specs()).unwrap();
+    assert_eq!(r1.len(), 4);
+    for (a, b) in r1.iter().zip(r2.iter()) {
+        assert_eq!(a.acc, b.acc);
+        assert_eq!(a.joules, b.joules);
+        assert_eq!(a.steps_run, b.steps_run);
+        assert_eq!(a.steps_skipped, b.steps_skipped);
+    }
+    // parallel == serial, record by record
+    let s0 = ctx.run(FAM, "sgd32", 10, |_| {}).unwrap();
+    assert_eq!(s0.acc, r1[0].acc);
+    assert_eq!(s0.joules, r1[0].joules);
+    let s1 = ctx
+        .run(FAM, "sgd32", 10, |c| {
+            c.smd.enabled = true;
+            c.smd.p = 0.5;
+        })
+        .unwrap();
+    assert_eq!(s1.acc, r1[1].acc);
+    assert_eq!(s1.steps_skipped, r1[1].steps_skipped);
+    // two methods x (train, eval): every worker shared the same cache
+    assert_eq!(engine.cached_count(), 4);
+}
+
+/// evaluate_full must cover the tail remainder of the test set (the
+/// seed silently dropped up to eval_batch-1 samples) and must work for
+/// test sets smaller than one eval batch (the seed errored).
+#[test]
+fn evaluate_full_covers_tail_remainder() {
+    let tmp = TempDir::new().unwrap();
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut cfg = ref_cfg(tmp.path(), "sgd32", 6);
+    // 40 = 2 full eval batches of 16 + a tail of 8
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 64, n_test: 40, seed: 3 };
+    let mut trainer = Trainer::new(&engine, cfg).unwrap();
+    let out = trainer.run(None).unwrap();
+    let state = out.state;
+
+    // Manual ground truth: full batches + a hand-padded tail batch.
+    let prog = TrainProgram::load(&engine, &fam.join("sgd32.json")).unwrap();
+    let (_, test) = synthetic::generate_split(10, 64, 40, 8, 3);
+    let eb = prog.eval_batch();
+    assert_eq!(eb, 16);
+    let stride = 8 * 8 * 3;
+    let mut correct = 0.0;
+    let mut loss_sum = 0.0;
+    for b in 0..2 {
+        let lo = b * eb;
+        let x = HostTensor::f32(
+            vec![eb, 8, 8, 3],
+            test.images[lo * stride..(lo + eb) * stride].to_vec(),
+        );
+        let y = HostTensor::i32(vec![eb], test.labels[lo..lo + eb].to_vec());
+        let em = prog.eval_batch_run(&state, &x, &y).unwrap();
+        correct += em.correct;
+        loss_sum += em.loss * eb as f64;
+    }
+    let lo = 2 * eb;
+    let rem = 8;
+    let mut px = vec![0f32; eb * stride];
+    px[..rem * stride].copy_from_slice(&test.images[lo * stride..(lo + rem) * stride]);
+    let mut py = vec![-1i32; eb];
+    py[..rem].copy_from_slice(&test.labels[lo..lo + rem]);
+    let em = prog
+        .eval_batch_run(&state, &HostTensor::f32(vec![eb, 8, 8, 3], px), &HostTensor::i32(vec![eb], py))
+        .unwrap();
+    correct += em.correct;
+    loss_sum += em.loss * eb as f64;
+
+    let (acc, _, loss) = trainer.evaluate_full(&state).unwrap();
+    assert_eq!(acc, correct / 40.0, "tail samples are not being evaluated");
+    assert!((loss - loss_sum / 40.0).abs() < 1e-12);
+
+    // Smaller than one eval batch: works instead of erroring.
+    let (train_small, test_small) = synthetic::generate_split(10, 64, 5, 8, 3);
+    trainer.set_data(train_small, test_small);
+    let (acc_small, acc5_small, loss_small) = trainer.evaluate_full(&state).unwrap();
+    assert!((0.0..=1.0).contains(&acc_small));
+    assert!(acc_small <= acc5_small + 1e-12);
+    assert!(loss_small.is_finite() && loss_small > 0.0);
+}
+
+/// Fine-tune handoff across methods on the resident path: state trained
+/// under sgd32 migrates by name into an e2train run (gate slots start
+/// fresh) and training continues without error.
+#[test]
+fn finetune_handoff_migrates_resident_state() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let pre = Trainer::new(&engine, ref_cfg(tmp.path(), "sgd32", 12))
+        .unwrap()
+        .run(None)
+        .unwrap();
+    let mut ft = Trainer::new(&engine, ref_cfg(tmp.path(), "e2train", 8)).unwrap();
+    let out = ft.run(Some(pre.state.clone())).unwrap();
+    assert!(out.metrics.final_test_acc >= 0.0);
+    // the migrated trunk matches by name; gates exist only in the new state
+    assert!(pre.state.by_name("gate.w").is_none());
+    assert!(out.state.by_name("gate.w").is_some());
+}

@@ -1,0 +1,327 @@
+//! In-repo API stub for the `xla` crate (the offline testbed has no
+//! crates.io registry and no PJRT shared library).
+//!
+//! The *data* surface — `Literal`, shapes, element types — is fully
+//! functional and bit-exact, so everything that moves tensors across the
+//! host boundary works.  The *execution* surface (`PjRtClient::compile` +
+//! `PjRtLoadedExecutable::execute`) parses and accepts HLO text but
+//! returns a clear error at execute time: there is no XLA runtime in this
+//! build.  The e2train runtime treats that exactly like missing
+//! artifacts and runs its pure-rust reference backend instead
+//! (`e2train::runtime::reference`).  Swapping this path dependency for
+//! the real `xla` crate restores PJRT execution without code changes.
+
+use std::fmt;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+// ---------------------------------------------------------------------------
+// Element types and shapes
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    F16,
+    F32,
+    F64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn new(dims: Vec<i64>, ty: ElementType) -> Self {
+        Self { dims, ty }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literals
+// ---------------------------------------------------------------------------
+
+/// Native types a literal can hold in this stub.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn wrap(data: Vec<Self>) -> Payload;
+    fn unwrap(payload: &Payload) -> Option<&[Self]>;
+}
+
+#[derive(Debug, Clone)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(data: Vec<Self>) -> Payload {
+        Payload::F32(data)
+    }
+    fn unwrap(payload: &Payload) -> Option<&[Self]> {
+        match payload {
+            Payload::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(data: Vec<Self>) -> Payload {
+        Payload::I32(data)
+    }
+    fn unwrap(payload: &Payload) -> Option<&[Self]> {
+        match payload {
+            Payload::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A host literal: shape + typed storage (or a tuple of literals).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    shape: Vec<i64>,
+    payload: Payload,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Self {
+        Self { shape: vec![], payload: T::wrap(vec![v]) }
+    }
+
+    pub fn vec1<T: NativeType>(data: &[T]) -> Self {
+        Self { shape: vec![data.len() as i64], payload: T::wrap(data.to_vec()) }
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Self {
+        Self { shape: vec![], payload: Payload::Tuple(parts) }
+    }
+
+    fn stored_len(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(v) => v.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if matches!(self.payload, Payload::Tuple(_)) {
+            return err("cannot reshape a tuple literal");
+        }
+        if n.max(1) as usize != self.stored_len() {
+            return err(format!(
+                "reshape to {:?} ({} elems) from {} elems",
+                dims,
+                n,
+                self.stored_len()
+            ));
+        }
+        Ok(Literal { shape: dims.to_vec(), payload: self.payload.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.payload {
+            Payload::F32(_) => ElementType::F32,
+            Payload::I32(_) => ElementType::S32,
+            Payload::Tuple(_) => return err("tuple literal has no array shape"),
+        };
+        Ok(ArrayShape::new(self.shape.clone(), ty))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match T::unwrap(&self.payload) {
+            Some(v) => Ok(v.to_vec()),
+            None => err(format!(
+                "literal holds {:?}, asked for {:?}",
+                self.array_shape().map(|s| s.ty()),
+                T::TY
+            )),
+        }
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(parts) => Ok(parts),
+            // PJRT decomposes single-output programs transparently.
+            _ => Ok(vec![self]),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO artifacts
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module (text is retained verbatim; the stub performs only
+/// surface validation).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        if text.trim().is_empty() {
+            return err(format!("empty HLO text file {path}"));
+        }
+        Ok(Self { text })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        Self { proto: proto.clone() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT client / executable (stubbed execution)
+// ---------------------------------------------------------------------------
+
+/// Device buffer handle.  In the stub it wraps a literal; the real crate
+/// holds an opaque device allocation.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn from_literal(lit: Literal) -> Self {
+        Self { lit }
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    /// Retained for diagnostics; the stub cannot interpret it.
+    hlo_bytes: usize,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(format!(
+            "this build has no PJRT runtime (stub xla crate; hlo {} bytes). \
+             Use reference artifacts (*.ref.json) or link the real xla crate.",
+            self.hlo_bytes
+        ))
+    }
+}
+
+/// PJRT client handle.  The stub is plain data and therefore Send+Sync,
+/// which the parallel experiment fan-out relies on; the real crate's CPU
+/// client is not Sync — see experiments::runs for the gating note.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { hlo_bytes: comp.proto.text.len() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let t = Literal::tuple(vec![Literal::scalar(1.5f32), Literal::scalar(2i32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![1.5]);
+        // non-tuple decomposes to itself
+        let one = Literal::scalar(3i32).to_tuple().unwrap();
+        assert_eq!(one.len(), 1);
+    }
+
+    #[test]
+    fn reshape_validates() {
+        let l = Literal::vec1(&[0f32; 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn execute_is_stubbed() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto {
+            text: "HloModule m".into(),
+        });
+        let exe = client.compile(&comp).unwrap();
+        let args = [Literal::scalar(1.0f32)];
+        assert!(exe.execute::<Literal>(&args).is_err());
+    }
+}
