@@ -8,14 +8,16 @@
 //!   outputs sync to host each iteration; `sync_to_host` runs only for
 //!   SWA snapshots / fine-tune handoff / end-of-run);
 //! * batch assembly + augmentation run on a background prefetch thread
-//!   with a bounded double-buffered channel, so data prep overlaps
-//!   executable dispatch — an SMD skip consumes a staged batch without
-//!   stalling.
+//!   behind a bounded channel whose depth is auto-tuned to the measured
+//!   augment/step time ratio (`data::prefetch::auto_depth`), so data
+//!   prep overlaps executable dispatch — an SMD skip consumes a staged
+//!   batch without stalling.
 //!
 //! `cfg.resident = false` / `cfg.prefetch = false` select the legacy
 //! synchronous host path; for fixed seeds both paths produce
 //! bitwise-identical metrics (tests/resident_equivalence.rs).
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -27,7 +29,8 @@ use crate::energy::{EnergyLedger, EnergyModel};
 use crate::metrics::{Mean, RunMetrics};
 use crate::optim::SwaState;
 use crate::runtime::{
-    DeviceState, Engine, EvalMetrics, HostTensor, ModelState, StepHyper, TrainProgram,
+    DeviceState, Engine, EvalMetrics, HostTensor, ModelState, SnapshotCell,
+    StateSnapshot, StepHyper, TrainProgram,
 };
 
 use super::sd::SdScheduler;
@@ -71,14 +74,23 @@ impl LoopState {
 /// worker.  Both produce the identical deterministic stream for a seed.
 enum BatchSource {
     Sync(Sampler),
-    Prefetch(Prefetcher),
+    Prefetch {
+        /// The probe batches the depth auto-tuner assembled (and timed)
+        /// synchronously — the head of the stream, replayed before the
+        /// worker's output so the stream stays batch-for-batch
+        /// identical to the synchronous path.
+        staged: VecDeque<(HostTensor, HostTensor)>,
+        pre: Prefetcher,
+    },
 }
 
 impl BatchSource {
     fn next_batch(&mut self, data: &Dataset) -> (HostTensor, HostTensor) {
         match self {
             BatchSource::Sync(s) => s.next_batch(data),
-            BatchSource::Prefetch(p) => p.next_batch(),
+            BatchSource::Prefetch { staged, pre } => {
+                staged.pop_front().unwrap_or_else(|| pre.next_batch())
+            }
         }
     }
 }
@@ -90,6 +102,10 @@ pub struct Trainer<'e> {
     pub energy: EnergyModel,
     train_set: Arc<Dataset>,
     test_set: Dataset,
+    /// Checkpoint publish point for an attached serve pool: when set,
+    /// the run publishes each refreshed SWA average and the final state
+    /// into the cell (mid-flight — the serve queue never drains).
+    publish: Option<Arc<SnapshotCell>>,
 }
 
 impl<'e> Trainer<'e> {
@@ -104,7 +120,14 @@ impl<'e> Trainer<'e> {
             energy,
             train_set: Arc::new(train_set),
             test_set,
+            publish: None,
         })
+    }
+
+    /// Attach a serve-side snapshot cell; subsequent runs publish
+    /// checkpoints into it (SWA refreshes + the final state).
+    pub fn set_publisher(&mut self, cell: Arc<SnapshotCell>) {
+        self.publish = Some(cell);
     }
 
     fn load_data(cfg: &RunCfg, program: &TrainProgram) -> Result<(Dataset, Dataset)> {
@@ -141,7 +164,6 @@ impl<'e> Trainer<'e> {
     /// Run the configured number of iterations starting from a fresh
     /// init (or from `from_state` when resuming / fine-tuning).
     pub fn run(&mut self, from_state: Option<ModelState>) -> Result<RunOutcome> {
-        let t0 = Instant::now();
         let m = &self.program.manifest;
         let init_state = match from_state {
             // Name-based migration handles method changes (e.g. resuming
@@ -154,15 +176,47 @@ impl<'e> Trainer<'e> {
         } else {
             LoopState::Host(init_state)
         };
+        let num_gated = m.num_gated();
+        let needs_mask = m.method.gating == "mask";
         let sampler_seed = self.cfg.seed ^ 0xda7a;
+        let mut prefetch_depth: Option<usize> = None;
+        // Assembly time of the probe batches: they are the stream's
+        // real first batches (replayed to the loop), so their cost
+        // belongs on the wall clock even though they were built before
+        // it starts — keeps the prefetch-on/off comparison fair.
+        let mut wall_offset_s = 0.0;
         let mut source = if self.cfg.prefetch {
-            BatchSource::Prefetch(Prefetcher::spawn(
-                self.train_set.clone(),
+            // Depth auto-tuning: assemble (and time) the first batches
+            // of the real stream synchronously, time one throwaway step
+            // on a cloned state, and size the channel to the measured
+            // augment/step ratio.  The probe batches are replayed to
+            // the loop and the sampler hands over mid-stream, so the
+            // batch stream is bit-identical to the synchronous path.
+            const PROBE_BATCHES: usize = 2;
+            let mut sampler = Sampler::new(
+                self.train_set.n,
                 self.program.batch(),
                 AugmentCfg::default(),
                 sampler_seed,
-                prefetch::DEFAULT_DEPTH,
-            ))
+            );
+            let t0 = Instant::now();
+            let staged: VecDeque<(HostTensor, HostTensor)> = (0..PROBE_BATCHES)
+                .map(|_| sampler.next_batch(&self.train_set))
+                .collect();
+            wall_offset_s = t0.elapsed().as_secs_f64();
+            let augment_mean = wall_offset_s / PROBE_BATCHES as f64;
+            let step_mean = self.probe_step_time(
+                &loop_state,
+                staged.front().expect("probe batches"),
+                needs_mask,
+                num_gated,
+            )?;
+            let depth = prefetch::auto_depth(augment_mean, step_mean);
+            prefetch_depth = Some(depth);
+            BatchSource::Prefetch {
+                staged,
+                pre: Prefetcher::spawn_from(sampler, self.train_set.clone(), depth),
+            }
         } else {
             BatchSource::Sync(Sampler::new(
                 self.train_set.n,
@@ -173,9 +227,7 @@ impl<'e> Trainer<'e> {
         };
         let mut smd =
             SmdScheduler::new(self.cfg.smd.enabled, self.cfg.smd.p, self.cfg.seed ^ 0x50d);
-        let num_gated = m.num_gated();
         let mut sd = SdScheduler::new(num_gated, self.cfg.sd.p_l, self.cfg.seed ^ 0x5d);
-        let needs_mask = m.method.gating == "mask";
 
         let mut swa = SwaState::new(self.cfg.iters / 2, (self.cfg.iters / 20).max(1));
         let mut swa_model: Option<ModelState> = None;
@@ -186,6 +238,12 @@ impl<'e> Trainer<'e> {
         let mut psg_mean = Mean::default();
         let record_every = (self.cfg.iters / 50).max(1);
 
+        // Clock the loop itself, after pipeline setup.  The auto-tune
+        // probe's extra throwaway step (prefetch-on only) stays off the
+        // clock, but its batch assemblies were added via wall_offset_s
+        // above — so the prefetch-on vs prefetch-off steps/s comparison
+        // in BENCH_runtime.json measures the same work on both paths.
+        let t0 = Instant::now();
         for iter in 0..self.cfg.iters {
             let lr = self.cfg.lr.at(iter) as f32;
             if smd.skip() {
@@ -242,6 +300,14 @@ impl<'e> Trainer<'e> {
                         sw.average_params_from(&snap, w, self.program.num_params)
                     }
                 }
+                // Publish the refreshed SWA checkpoint to an attached
+                // serve pool — mid-flight, the serve queue never drains.
+                if let (Some(cell), Some(sw)) = (&self.publish, &swa_model) {
+                    cell.publish(StateSnapshot::from_model_state(
+                        self.program.backend(),
+                        sw,
+                    )?);
+                }
             }
 
             if iter % record_every == 0 || iter + 1 == self.cfg.iters {
@@ -262,6 +328,13 @@ impl<'e> Trainer<'e> {
             Some(sw) => sw,
             None => loop_state.into_model_state()?,
         };
+        // Publish the final checkpoint (SWA weights when averaging ran).
+        if let Some(cell) = &self.publish {
+            cell.publish(StateSnapshot::from_model_state(
+                self.program.backend(),
+                &final_state,
+            )?);
+        }
         let (acc, acc5, loss) = self.evaluate_full(&final_state)?;
         metrics.final_test_acc = acc;
         metrics.final_test_acc_top5 = acc5;
@@ -270,10 +343,11 @@ impl<'e> Trainer<'e> {
         metrics.executed_macs = ledger.macs;
         metrics.steps_run = ledger.steps_charged;
         metrics.steps_skipped = ledger.steps_skipped;
-        metrics.wall_seconds = t0.elapsed().as_secs_f64();
+        metrics.wall_seconds = t0.elapsed().as_secs_f64() + wall_offset_s;
         metrics.mean_gate_fracs = gate_means.iter().map(|g| g.get()).collect();
         metrics.mean_psg_frac =
             if psg_mean.count() > 0 { Some(psg_mean.get()) } else { None };
+        metrics.prefetch_depth = prefetch_depth;
 
         eprintln!(
             "[run] {}/{}: acc {:.4}, {:.2} J, {} steps ({} skipped), {:.1}s",
@@ -286,6 +360,45 @@ impl<'e> Trainer<'e> {
             metrics.wall_seconds
         );
         Ok(RunOutcome { metrics, state: final_state, ledger })
+    }
+
+    /// Time one train step on a **cloned** state — the depth auto-tuner's
+    /// denominator.  The clone guarantees the probe is invisible: the
+    /// real state, RNG streams and metrics are untouched, so prefetch
+    /// on/off stay bitwise equivalent.
+    fn probe_step_time(
+        &self,
+        ls: &LoopState,
+        batch: &(HostTensor, HostTensor),
+        needs_mask: bool,
+        num_gated: usize,
+    ) -> Result<f64> {
+        let mask: Option<Vec<f32>> = if needs_mask {
+            Some(vec![1.0; num_gated])
+        } else {
+            None
+        };
+        let hp = StepHyper {
+            lr: self.cfg.lr.at(0) as f32,
+            alpha: self.cfg.alpha as f32,
+            beta: self.cfg.beta as f32,
+        };
+        let (x, y) = batch;
+        Ok(match ls {
+            LoopState::Host(s) => {
+                let mut probe = s.clone();
+                let t0 = Instant::now();
+                self.program.step(&mut probe, x, y, hp, mask.as_deref())?;
+                t0.elapsed().as_secs_f64()
+            }
+            LoopState::Device(d) => {
+                let mut probe = d.clone();
+                let t0 = Instant::now();
+                self.program
+                    .step_device(&mut probe, x, y, hp, mask.as_deref())?;
+                t0.elapsed().as_secs_f64()
+            }
+        })
     }
 
     fn evaluate_loop_state(&self, ls: &LoopState) -> Result<(f64, f64, f64)> {

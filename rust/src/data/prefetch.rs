@@ -22,6 +22,26 @@ use super::Dataset;
 /// Default channel depth: one batch in flight + one staged.
 pub const DEFAULT_DEPTH: usize = 2;
 
+/// Deepest channel the auto-tuner will pick: beyond this the staged
+/// batches only cost memory — the worker can't get further ahead than
+/// the channel bound anyway.
+pub const MAX_DEPTH: usize = 8;
+
+/// Channel depth for a measured augment-time / step-time ratio.
+///
+/// The worker needs roughly `ceil(augment/step)` batches of slack to
+/// never stall the step loop, plus one in flight.  A fast augmenter
+/// (ratio <= 1, the common case) lands on the classic double buffer;
+/// a slow one gets more runway, capped at [`MAX_DEPTH`].  Degenerate
+/// measurements (zero/NaN step time) fall back to [`DEFAULT_DEPTH`].
+pub fn auto_depth(augment_mean_s: f64, step_mean_s: f64) -> usize {
+    if !(step_mean_s > 0.0) || !augment_mean_s.is_finite() || augment_mean_s < 0.0 {
+        return DEFAULT_DEPTH;
+    }
+    let ratio = augment_mean_s / step_mean_s;
+    ((ratio.ceil() as usize) + 1).clamp(DEFAULT_DEPTH, MAX_DEPTH)
+}
+
 /// A background sampler producing an endless, deterministic batch
 /// stream (reshuffling between epochs like [`Sampler`]).
 pub struct Prefetcher {
@@ -37,17 +57,23 @@ impl Prefetcher {
         seed: u64,
         depth: usize,
     ) -> Self {
+        Self::spawn_from(Sampler::new(data.n, batch, augment, seed), data, depth)
+    }
+
+    /// Spawn from an already-built (possibly partially-consumed)
+    /// sampler.  This is the auto-tuning handoff: the trainer times a
+    /// couple of probe batches synchronously on the real sampler,
+    /// picks a depth ([`auto_depth`]), and hands the sampler over —
+    /// the worker continues the exact same deterministic stream.
+    pub fn spawn_from(mut sampler: Sampler, data: Arc<Dataset>, depth: usize) -> Self {
         let (tx, rx) = sync_channel(depth.max(1));
         let worker = std::thread::Builder::new()
             .name("e2train-prefetch".into())
-            .spawn(move || {
-                let mut sampler = Sampler::new(data.n, batch, augment, seed);
-                loop {
-                    let b = sampler.next_batch(&data);
-                    // The receiver hung up: the run is over.
-                    if tx.send(b).is_err() {
-                        return;
-                    }
+            .spawn(move || loop {
+                let b = sampler.next_batch(&data);
+                // The receiver hung up: the run is over.
+                if tx.send(b).is_err() {
+                    return;
                 }
             })
             .expect("spawning prefetch thread");
@@ -98,6 +124,40 @@ mod tests {
                 _ => panic!("labels must be i32"),
             }
         }
+    }
+
+    #[test]
+    fn spawn_from_continues_a_consumed_sampler() {
+        let data = Arc::new(synthetic::generate(10, 64, 8, 0));
+        let mut sync = Sampler::new(data.n, 16, AugmentCfg::default(), 7);
+        let mut handoff = Sampler::new(data.n, 16, AugmentCfg::default(), 7);
+        // Probe phase consumes two batches synchronously...
+        let _ = handoff.next_batch(&data);
+        let _ = handoff.next_batch(&data);
+        let mut pre = Prefetcher::spawn_from(handoff, data.clone(), 3);
+        // ...and the worker must continue at batch 2 of the same stream.
+        let _ = sync.next_batch(&data);
+        let _ = sync.next_batch(&data);
+        for _ in 0..6 {
+            let (xa, _) = sync.next_batch(&data);
+            let (xb, _) = pre.next_batch();
+            assert_eq!(xa.as_f32().unwrap(), xb.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn auto_depth_tracks_the_ratio() {
+        // fast augmenter -> double buffer
+        assert_eq!(auto_depth(0.1e-3, 1.0e-3), DEFAULT_DEPTH);
+        assert_eq!(auto_depth(1.0e-3, 1.0e-3), DEFAULT_DEPTH);
+        // augmentation ~3x the step -> 4 staged batches
+        assert_eq!(auto_depth(3.0e-3, 1.0e-3), 4);
+        // pathological ratios clamp
+        assert_eq!(auto_depth(1.0, 1.0e-6), MAX_DEPTH);
+        // degenerate measurements fall back
+        assert_eq!(auto_depth(1.0e-3, 0.0), DEFAULT_DEPTH);
+        assert_eq!(auto_depth(f64::NAN, 1.0e-3), DEFAULT_DEPTH);
+        assert_eq!(auto_depth(1.0e-3, f64::NAN), DEFAULT_DEPTH);
     }
 
     #[test]

@@ -21,8 +21,10 @@
 //! reproduction target.  EXPERIMENTS.md records paper-vs-measured.
 
 mod runs;
+pub mod serve_bench;
 
 pub use runs::{ExpCtx, RunRecord, RunSpec};
+pub use serve_bench::{resolve_bench_family, run_serve_bench, ServeBenchCfg};
 
 use std::path::Path;
 

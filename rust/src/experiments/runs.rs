@@ -1,18 +1,16 @@
 //! Shared run helpers for the experiment harness, including the
 //! parallel fan-out: independent method runs within one experiment
-//! execute on worker threads that share the `Engine`'s compiled-program
-//! cache (`Arc<Mutex<HashMap<..>>>`), so each artifact compiles once no
-//! matter how many runs use it.
+//! execute on worker threads, **one engine per worker**
+//! ([`crate::runtime::EnginePool`]) sharing the base engine's
+//! compiled-program cache, so each artifact compiles once no matter how
+//! many runs use it.  Per-worker engines remove the old `Engine: Sync`
+//! assumption that the real PJRT CPU client (raw client pointers) does
+//! not satisfy — the same pool structure backs the serve worker pool.
 //!
 //! Determinism: every run's config carries its own seed (set before the
 //! tweak closure runs), and all stochastic components derive from that
 //! seed alone — `run_many` returns records in spec order and produces
 //! bitwise the same results as running the specs serially.
-//!
-//! Note: thread fan-out requires `Engine: Sync`.  That holds for the
-//! reference backend and the in-repo xla stub; the real PJRT CPU client
-//! holds raw pointers and is not Sync — when linking the real `xla`
-//! crate, point `run_many` at per-thread engines instead.
 
 use std::path::{Path, PathBuf};
 
@@ -20,7 +18,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{DataCfg, RunCfg};
 use crate::coordinator::Trainer;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, EnginePool};
 use crate::util::Json;
 
 /// Condensed outcome of one training run.
@@ -77,6 +75,65 @@ pub struct ExpCtx<'e> {
     pub seed: u64,
 }
 
+/// The plain-data slice of an [`ExpCtx`] a fan-out worker needs.
+/// Workers receive this + an **owned** engine instead of `&ExpCtx`
+/// (which holds `&Engine`), so the fan-out requires only
+/// `Engine: Send`, never `Engine: Sync` — the property the real PJRT
+/// CPU client lacks.
+#[derive(Clone)]
+struct RunParams {
+    artifacts: PathBuf,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+}
+
+fn base_cfg_from(p: &RunParams, family: &str, method: &str, iters: u64) -> RunCfg {
+    let mut cfg = RunCfg::quick(family, method, iters);
+    cfg.artifacts_dir = p.artifacts.clone();
+    cfg.seed = p.seed;
+    cfg.smd.enabled = false; // experiments opt in explicitly
+    cfg
+}
+
+/// Finalize a tweaked config (the dataset's class count is read from
+/// the manifest) and execute it on `engine`.
+fn exec_cfg(p: &RunParams, mut cfg: RunCfg, engine: &Engine) -> Result<RunRecord> {
+    let manifest = crate::runtime::Manifest::load(&cfg.manifest_path())?;
+    cfg.data = DataCfg::Synthetic {
+        classes: manifest.arch.num_classes,
+        n_train: p.n_train,
+        n_test: p.n_test,
+        seed: p.seed,
+    };
+    let mut trainer = Trainer::new(engine, cfg)?;
+    let outcome = trainer.run(None)?;
+    let m = outcome.metrics;
+    let mean_gate = if m.mean_gate_fracs.is_empty() {
+        1.0
+    } else {
+        m.mean_gate_fracs.iter().sum::<f64>() / m.mean_gate_fracs.len() as f64
+    };
+    Ok(RunRecord {
+        acc: m.final_test_acc,
+        acc5: m.final_test_acc_top5,
+        joules: m.total_joules,
+        macs: m.executed_macs,
+        mean_gate,
+        psg_frac: m.mean_psg_frac,
+        steps_run: m.steps_run,
+        steps_skipped: m.steps_skipped,
+        wall_seconds: m.wall_seconds,
+        curve: m.trace.iter().map(|p| (p.joules, p.test_acc)).collect(),
+    })
+}
+
+fn exec_spec(p: &RunParams, spec: &RunSpec, engine: &Engine) -> Result<RunRecord> {
+    let mut cfg = base_cfg_from(p, &spec.family, &spec.method, spec.iters);
+    (spec.tweak)(&mut cfg);
+    exec_cfg(p, cfg, engine)
+}
+
 impl<'e> ExpCtx<'e> {
     pub fn new(engine: &'e Engine, artifacts: &Path, out: &Path, iters: u64) -> Self {
         Self {
@@ -90,44 +147,17 @@ impl<'e> ExpCtx<'e> {
         }
     }
 
-    pub fn base_cfg(&self, family: &str, method: &str, iters: u64) -> RunCfg {
-        let mut cfg = RunCfg::quick(family, method, iters);
-        cfg.artifacts_dir = self.artifacts.clone();
-        cfg.seed = self.seed;
-        cfg.smd.enabled = false; // experiments opt in explicitly
-        cfg
-    }
-
-    /// Finalize a tweaked config (the dataset's class count is read from
-    /// the manifest) and execute it.
-    fn run_cfg(&self, mut cfg: RunCfg) -> Result<RunRecord> {
-        let manifest = crate::runtime::Manifest::load(&cfg.manifest_path())?;
-        cfg.data = DataCfg::Synthetic {
-            classes: manifest.arch.num_classes,
+    fn params(&self) -> RunParams {
+        RunParams {
+            artifacts: self.artifacts.clone(),
             n_train: self.n_train,
             n_test: self.n_test,
             seed: self.seed,
-        };
-        let mut trainer = Trainer::new(self.engine, cfg)?;
-        let outcome = trainer.run(None)?;
-        let m = outcome.metrics;
-        let mean_gate = if m.mean_gate_fracs.is_empty() {
-            1.0
-        } else {
-            m.mean_gate_fracs.iter().sum::<f64>() / m.mean_gate_fracs.len() as f64
-        };
-        Ok(RunRecord {
-            acc: m.final_test_acc,
-            acc5: m.final_test_acc_top5,
-            joules: m.total_joules,
-            macs: m.executed_macs,
-            mean_gate,
-            psg_frac: m.mean_psg_frac,
-            steps_run: m.steps_run,
-            steps_skipped: m.steps_skipped,
-            wall_seconds: m.wall_seconds,
-            curve: m.trace.iter().map(|p| (p.joules, p.test_acc)).collect(),
-        })
+        }
+    }
+
+    pub fn base_cfg(&self, family: &str, method: &str, iters: u64) -> RunCfg {
+        base_cfg_from(&self.params(), family, method, iters)
     }
 
     /// Run (family, method) for `iters`, after applying `tweak` to the
@@ -141,44 +171,65 @@ impl<'e> ExpCtx<'e> {
     ) -> Result<RunRecord> {
         let mut cfg = self.base_cfg(family, method, iters);
         tweak(&mut cfg);
-        self.run_cfg(cfg)
-    }
-
-    fn run_spec(&self, spec: &RunSpec) -> Result<RunRecord> {
-        let mut cfg = self.base_cfg(&spec.family, &spec.method, spec.iters);
-        (spec.tweak)(&mut cfg);
-        self.run_cfg(cfg)
+        exec_cfg(&self.params(), cfg, self.engine)
     }
 
     /// Execute independent runs in parallel across worker threads,
-    /// bounded by the machine's parallelism, sharing this context's
-    /// engine (and therefore its compile cache).  A shared work queue
-    /// (no inter-batch barrier) keeps every core busy until the queue
+    /// bounded by the machine's parallelism, each worker on its own
+    /// engine forked from this context's (sharing its compile cache, so
+    /// every artifact still compiles once).  A shared work queue (no
+    /// inter-batch barrier) keeps every core busy until the queue
     /// drains, even when iteration budgets differ wildly (fig3a spans
     /// 0.5T..T).  Results come back in spec order and match a serial
     /// execution exactly.
     pub fn run_many(&self, specs: Vec<RunSpec>) -> Result<Vec<RunRecord>> {
         use std::sync::atomic::{AtomicUsize, Ordering};
 
+        let params = self.params();
         if specs.len() <= 1 {
-            return specs.iter().map(|s| self.run_spec(s)).collect();
+            return specs
+                .iter()
+                .map(|s| exec_spec(&params, s, self.engine))
+                .collect();
         }
         let workers = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
             .min(specs.len());
+        // Reference programs are backend-portable, so workers share the
+        // base engine's compiled-program cache (racing cold compiles
+        // are deduped by the engine's compile lock).  Compiled HLO is
+        // bound to the client that compiled it under real PJRT — give
+        // each worker an isolated engine there.  Resolved from the
+        // first spec's artifact paths without compiling anything
+        // (experiments don't mix backends within one fan-out).
+        let probe_cfg = self.base_cfg(&specs[0].family, &specs[0].method, 1);
+        let pool = match crate::runtime::Manifest::resolved_backend(
+            &probe_cfg.manifest_path(),
+        ) {
+            crate::runtime::BackendKind::Reference => {
+                EnginePool::from_base(self.engine, workers)?
+            }
+            crate::runtime::BackendKind::Pjrt => EnginePool::new_isolated(workers)?,
+        };
         let next = AtomicUsize::new(0);
         let slots: Vec<std::sync::Mutex<Option<Result<RunRecord>>>> =
             specs.iter().map(|_| std::sync::Mutex::new(None)).collect();
+        // Workers get an **owned** engine and the plain-data params —
+        // nothing crossing the thread boundary needs `Engine: Sync`.
         std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
+            let next = &next;
+            let slots = &slots;
+            let specs = &specs;
+            let params = &params;
+            for engine in pool.into_engines() {
+                scope.spawn(move || loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= specs.len() {
                         break;
                     }
                     let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || self.run_spec(&specs[i]),
+                        || exec_spec(params, &specs[i], &engine),
                     ))
                     .unwrap_or_else(|_| Err(anyhow!("experiment worker panicked")));
                     *slots[i].lock().unwrap() = Some(r);

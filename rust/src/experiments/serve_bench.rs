@@ -1,0 +1,206 @@
+//! The `serve` bench scenario: N closed-loop synthetic clients hammer
+//! the micro-batching inference service and we record throughput,
+//! latency percentiles and micro-batch occupancy per concurrency level
+//! into `BENCH_serve.json` (schema `bench_serve/v1`, see PERF.md).
+//!
+//! The point of measuring ≥2 concurrency levels is the occupancy curve:
+//! a single client rarely fills a micro-batch before the deadline, so
+//! the fixed per-launch cost is unamortized; as concurrency grows the
+//! batcher coalesces more samples per launch and throughput rises
+//! faster than latency — the serving analogue of the training-side
+//! energy savings this repo reproduces.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::synthetic;
+use crate::runtime::{
+    write_reference_family, BackendKind, Engine, ModelState, RefFamilySpec,
+    SnapshotCell, StateSnapshot, TrainProgram,
+};
+use crate::serve::{ServeCfg, ServeService};
+use crate::util::tmp::TempDir;
+use crate::util::Json;
+
+/// Bench workload shape.
+#[derive(Debug, Clone)]
+pub struct ServeBenchCfg {
+    /// Client concurrency levels to sweep (≥2 for the occupancy curve).
+    pub levels: Vec<usize>,
+    pub requests_per_client: usize,
+    /// Samples per request (1 = pure single-sample traffic).
+    pub samples_per_request: usize,
+    /// Serve worker threads.
+    pub workers: usize,
+    /// Batcher flush deadline.
+    pub max_delay: Duration,
+    pub seed: u64,
+    /// Provenance string recorded in the report (producer + profile).
+    pub source: String,
+}
+
+impl Default for ServeBenchCfg {
+    fn default() -> Self {
+        Self {
+            levels: vec![2, 8],
+            requests_per_client: 32,
+            samples_per_request: 2,
+            workers: 2,
+            max_delay: Duration::from_millis(2),
+            seed: 0,
+            source: "serve_bench".into(),
+        }
+    }
+}
+
+/// Resolve the manifest the bench serves: an explicitly requested
+/// family must exist (a typo'd `--family` silently benching the tiny
+/// fixture would mislabel `BENCH_serve.json`); with no family given,
+/// fall back to a generated reference fixture.  The returned `TempDir`
+/// guard (fixture case) must outlive the bench run.
+pub fn resolve_bench_family(
+    artifacts: &Path,
+    family: Option<&str>,
+    fixture: &RefFamilySpec,
+) -> Result<(PathBuf, Option<TempDir>)> {
+    if let Some(f) = family {
+        let p = artifacts.join(f).join("sgd32.json");
+        if !p.exists() {
+            bail!(
+                "family {f} has no sgd32 artifact under {} (omit --family to bench \
+                 the generated reference fixture)",
+                artifacts.display()
+            );
+        }
+        return Ok((p, None));
+    }
+    let tmp = TempDir::new()?;
+    let fam = write_reference_family(tmp.path(), fixture)?;
+    Ok((fam.join("sgd32.json"), Some(tmp)))
+}
+
+/// Run the sweep and return the `bench_serve/v1` report.
+pub fn run_serve_bench(
+    engine: &Engine,
+    manifest_path: &Path,
+    cfg: &ServeBenchCfg,
+) -> Result<Json> {
+    let probe = TrainProgram::load(engine, manifest_path)?;
+    let hw = probe.manifest.arch.image_size;
+    let classes = probe.manifest.arch.num_classes;
+    let stride = hw * hw * 3;
+    let micro_batch = probe.eval_batch();
+
+    // Shared resident state: one freshly-initialized checkpoint
+    // published for the whole sweep (the serve integration with a live
+    // trainer is exercised by tests/serve_equivalence.rs).
+    let cell = Arc::new(SnapshotCell::new());
+    let state = ModelState::init(&probe.manifest, cfg.seed);
+    cell.publish(StateSnapshot::from_model_state(probe.backend(), &state)?);
+
+    let data = synthetic::generate(classes, 256, hw, cfg.seed);
+    let req_size = cfg.samples_per_request.max(1);
+
+    let mut rows = Vec::new();
+    for &clients in &cfg.levels {
+        let clients = clients.max(1);
+        let service = ServeService::start(
+            engine,
+            manifest_path,
+            cell.clone(),
+            ServeCfg {
+                workers: cfg.workers,
+                queue_cap: (clients * 2).max(16),
+                max_delay: cfg.max_delay,
+                micro_batch: None,
+            },
+        )?;
+        let t0 = Instant::now();
+        let samples_done = std::thread::scope(|scope| -> Result<usize> {
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let client = service.client();
+                let data = &data;
+                handles.push(scope.spawn(move || -> Result<usize> {
+                    let mut done = 0usize;
+                    for r in 0..cfg.requests_per_client {
+                        // Deterministic per-(client, request) sample walk.
+                        let base = (c * cfg.requests_per_client + r) * req_size;
+                        let mut px = Vec::with_capacity(req_size * stride);
+                        let mut py = Vec::with_capacity(req_size);
+                        for j in 0..req_size {
+                            let idx = (base + j) % data.n;
+                            px.extend_from_slice(
+                                &data.images[idx * stride..(idx + 1) * stride],
+                            );
+                            py.push(data.labels[idx]);
+                        }
+                        done += client.submit(&px, &py)?.wait()?.len();
+                    }
+                    Ok(done)
+                }));
+            }
+            let mut total = 0;
+            for h in handles {
+                total += h.join().map_err(|_| anyhow!("serve client panicked"))??;
+            }
+            Ok(total)
+        })?;
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = service.shutdown();
+        println!(
+            "serve: {clients:>3} clients  {:>8.1} samp/s  p50 {:>7.3}ms  p99 {:>7.3}ms  occupancy {:>5.2}/{micro_batch} ({} batches)",
+            samples_done as f64 / wall.max(1e-9),
+            stats.latency_p50_s * 1e3,
+            stats.latency_p99_s * 1e3,
+            stats.occupancy_mean,
+            stats.batches,
+        );
+        rows.push(Json::obj(vec![
+            ("clients", Json::num(clients as f64)),
+            (
+                "requests",
+                Json::num((clients * cfg.requests_per_client) as f64),
+            ),
+            ("samples", Json::num(samples_done as f64)),
+            (
+                "throughput_sps",
+                Json::num(samples_done as f64 / wall.max(1e-9)),
+            ),
+            ("latency_p50_ms", Json::num(stats.latency_p50_s * 1e3)),
+            ("latency_p99_ms", Json::num(stats.latency_p99_s * 1e3)),
+            ("latency_mean_ms", Json::num(stats.latency_mean_s * 1e3)),
+            ("mean_occupancy", Json::num(stats.occupancy_mean)),
+            ("batches", Json::num(stats.batches as f64)),
+            ("wall_s", Json::num(wall)),
+        ]));
+    }
+
+    Ok(Json::obj(vec![
+        ("schema", Json::str("bench_serve/v1")),
+        ("source", Json::str(&cfg.source)),
+        ("family", Json::str(probe.family())),
+        ("method", Json::str(probe.method())),
+        (
+            "backend",
+            Json::str(match probe.backend() {
+                BackendKind::Reference => "reference",
+                BackendKind::Pjrt => "pjrt",
+            }),
+        ),
+        ("micro_batch", Json::num(micro_batch as f64)),
+        ("workers", Json::num(cfg.workers as f64)),
+        (
+            "max_delay_ms",
+            Json::num(cfg.max_delay.as_secs_f64() * 1e3),
+        ),
+        (
+            "samples_per_request",
+            Json::num(req_size as f64),
+        ),
+        ("levels", Json::Arr(rows)),
+    ]))
+}

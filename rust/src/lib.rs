@@ -23,4 +23,5 @@ pub mod experiments;
 pub mod metrics;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -5,6 +5,7 @@
 //! e2train list
 //! e2train train --family resnet8-c10-tiny --method e2train --iters 300
 //! e2train exp tab2 --iters 400 --out results
+//! e2train serve --clients 2,8 --requests 32 --out BENCH_serve.json
 //! e2train energy-report --family resnet20-c10
 //! ```
 
@@ -43,6 +44,15 @@ COMMANDS:
                                 fig3a|fig3b|tab1|fig4|tab2|tab3|fig5|tab4|finetune|all
     --iters <n>                 per-run iteration budget [400]
     --out <dir>                 results directory [results]
+  serve                         micro-batching inference service bench
+    --family <fam>              artifact family (reference fixture if absent)
+    --clients <a,b,..>          client concurrency levels [2,8]
+    --requests <n>              requests per client       [32]
+    --req-size <n>              samples per request       [2]
+    --workers <n>               eval worker threads       [2]
+    --delay-ms <n>              batcher flush deadline    [2]
+    --seed <n>                  rng seed                  [0]
+    --out <path>                report path [BENCH_serve.json]
   energy-report                 analytic energy model vs paper anchors
     --family <fam>              [resnet20-c10]
 
@@ -124,6 +134,35 @@ fn main() -> Result<()> {
             let iters = args.u64_or("iters", 400)?;
             let out = PathBuf::from(args.str_or("out", "results"));
             experiments::run_experiment(id, iters, &artifacts, &out)?;
+        }
+        "serve" => {
+            let cfg = experiments::ServeBenchCfg {
+                levels: args.usize_list_or("clients", &[2, 8])?,
+                requests_per_client: args.usize_or("requests", 32)?,
+                samples_per_request: args.usize_or("req-size", 2)?,
+                workers: args.usize_or("workers", 2)?,
+                max_delay: std::time::Duration::from_millis(args.u64_or("delay-ms", 2)?),
+                seed: args.u64_or("seed", 0)?,
+                source: if cfg!(debug_assertions) {
+                    "e2train serve (debug profile)"
+                } else {
+                    "e2train serve (release profile)"
+                }
+                .into(),
+            };
+            let fixture = e2train::runtime::RefFamilySpec::bench();
+            // Real artifacts when built, the reference fixture otherwise
+            // (the guard keeps the generated family alive for the run).
+            let (manifest, _fixture_guard) = experiments::resolve_bench_family(
+                &artifacts,
+                args.get("family"),
+                &fixture,
+            )?;
+            let engine = Engine::cpu()?;
+            let report = experiments::run_serve_bench(&engine, &manifest, &cfg)?;
+            let out = args.str_or("out", "BENCH_serve.json");
+            std::fs::write(&out, report.to_string())?;
+            println!("serve bench -> {out}");
         }
         "energy-report" => {
             let family = args.str_or("family", "resnet20-c10");

@@ -30,6 +30,9 @@ pub struct RunMetrics {
     pub mean_gate_fracs: Vec<f64>,
     /// Mean PSG predictor usage over the run.
     pub mean_psg_frac: Option<f64>,
+    /// Prefetch channel depth the auto-tuner picked (None when the run
+    /// sampled synchronously).
+    pub prefetch_depth: Option<usize>,
 }
 
 impl RunMetrics {
@@ -85,6 +88,12 @@ impl RunMetrics {
             (
                 "mean_psg_frac",
                 self.mean_psg_frac.map(Json::num).unwrap_or(Json::Null),
+            ),
+            (
+                "prefetch_depth",
+                self.prefetch_depth
+                    .map(|d| Json::num(d as f64))
+                    .unwrap_or(Json::Null),
             ),
         ])
     }

@@ -18,6 +18,8 @@
 //!   halves the per-step conversions (outputs feed the next step
 //!   directly instead of bouncing through `HostTensor`).
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::Result;
 
 use super::engine::BackendKind;
@@ -67,6 +69,7 @@ pub enum ValueRef<'a> {
 }
 
 /// Model state living in backend-native buffers across steps.
+#[derive(Clone)]
 pub struct DeviceState {
     pub values: Vec<DeviceValue>,
     pub names: Vec<String>,
@@ -115,6 +118,85 @@ impl DeviceState {
             .collect::<Result<Vec<_>>>()?;
         Ok(ModelState::new(values, self.names))
     }
+
+    /// Publishable read-only copy of this state (full train-state order).
+    /// The copy is cheap relative to its cadence: publishing happens at
+    /// checkpoint moments (SWA snapshots, end of run), never per step.
+    pub fn snapshot(&self) -> StateSnapshot {
+        StateSnapshot {
+            values: Arc::new(self.values.clone()),
+            names: Arc::new(self.names.clone()),
+            backend: self.backend,
+            version: 0,
+        }
+    }
+}
+
+/// An immutable, shareable copy of a model state in backend-native form,
+/// ordered like `DeviceState::values` (params, momenta, bn state).  The
+/// serve worker pool evaluates straight against one of these; `version`
+/// identifies which published checkpoint served a request.
+#[derive(Clone)]
+pub struct StateSnapshot {
+    pub values: Arc<Vec<DeviceValue>>,
+    pub names: Arc<Vec<String>>,
+    pub backend: BackendKind,
+    /// Assigned by [`SnapshotCell::publish`]; 0 before publication.
+    pub version: u64,
+}
+
+impl StateSnapshot {
+    /// Build a snapshot from a host state (e.g. the SWA running average,
+    /// which lives host-side).
+    pub fn from_model_state(backend: BackendKind, state: &ModelState) -> Result<Self> {
+        let values = state
+            .values
+            .iter()
+            .map(|t| DeviceValue::from_host(backend, t.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            values: Arc::new(values),
+            names: Arc::new(state.names.clone()),
+            backend,
+            version: 0,
+        })
+    }
+}
+
+/// The publish/subscribe handle between a training loop and readers
+/// (the serve worker pool): the trainer publishes checkpoints, readers
+/// `load()` the current one per micro-batch.  Swapping is atomic with
+/// respect to readers — in-flight batches finish on the snapshot they
+/// loaded, new batches see the new one; the queue never drains.
+#[derive(Default)]
+pub struct SnapshotCell {
+    slot: Mutex<(u64, Option<Arc<StateSnapshot>>)>,
+}
+
+impl SnapshotCell {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish a snapshot, stamping it with the next version.  Returns
+    /// the version assigned.
+    pub fn publish(&self, mut snap: StateSnapshot) -> u64 {
+        let mut slot = self.slot.lock().unwrap();
+        slot.0 += 1;
+        snap.version = slot.0;
+        slot.1 = Some(Arc::new(snap));
+        slot.0
+    }
+
+    /// The currently-published snapshot, if any.
+    pub fn load(&self) -> Option<Arc<StateSnapshot>> {
+        self.slot.lock().unwrap().1.clone()
+    }
+
+    /// Version of the latest published snapshot (0 = nothing published).
+    pub fn version(&self) -> u64 {
+        self.slot.lock().unwrap().0
+    }
 }
 
 #[cfg(test)]
@@ -153,6 +235,42 @@ mod tests {
         let back = dev.into_host().unwrap();
         for (a, b) in back.values.iter().zip(host.values.iter()) {
             assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn snapshot_cell_publishes_and_versions() {
+        let cell = SnapshotCell::new();
+        assert!(cell.load().is_none());
+        assert_eq!(cell.version(), 0);
+
+        let host = toy_state();
+        let dev = DeviceState::upload(BackendKind::Reference, host.clone()).unwrap();
+        let v1 = cell.publish(dev.snapshot());
+        assert_eq!(v1, 1);
+        let snap = cell.load().unwrap();
+        assert_eq!(snap.version, 1);
+        assert_eq!(snap.names.as_slice(), host.names.as_slice());
+
+        // Readers holding the old Arc keep it across a swap.
+        let v2 = cell.publish(StateSnapshot::from_model_state(
+            BackendKind::Reference,
+            &host,
+        )
+        .unwrap());
+        assert_eq!(v2, 2);
+        assert_eq!(snap.version, 1, "held snapshot must be immutable");
+        assert_eq!(cell.load().unwrap().version, 2);
+    }
+
+    #[test]
+    fn snapshot_matches_state_values() {
+        let host = toy_state();
+        let dev = DeviceState::upload(BackendKind::Reference, host.clone()).unwrap();
+        let snap = dev.snapshot();
+        assert_eq!(snap.values.len(), host.num_tensors());
+        for (dv, hv) in snap.values.iter().zip(host.values.iter()) {
+            assert_eq!(dv.to_host().unwrap().as_f32().unwrap(), hv.as_f32().unwrap());
         }
     }
 }

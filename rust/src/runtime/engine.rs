@@ -11,11 +11,18 @@
 //!   [`super::reference`] backend; always executable, used by tests,
 //!   benches and any machine without a PJRT runtime.
 //!
-//! The cache is `Mutex<HashMap<..., Arc<Program>>>` and `Engine` is
+//! The cache is a [`SharedProgramCache`] keyed by the **content hash**
+//! of the artifact file (not its path), so the same program reached
+//! through different paths — or loaded by different engines of an
+//! [`super::pool::EnginePool`] — compiles exactly once.  `Engine` is
 //! `Sync` in this build, which lets the experiment harness fan runs out
-//! across threads while sharing compiled programs (experiments::runs).
+//! across threads while sharing compiled programs (experiments::runs);
+//! [`Engine::fork`] creates additional engines (one per worker) that
+//! share the cache, for clients that are not `Sync` themselves.
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::hash::Hasher;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -150,37 +157,114 @@ impl Program {
     }
 }
 
+/// Compiled-program cache shared across engines: artifact content hash
+/// -> loaded program.  Content keying makes the cache portable between
+/// engines of a pool (caveat for real PJRT in `runtime::pool`).
+pub type SharedProgramCache = Arc<Mutex<HashMap<u64, Arc<Program>>>>;
+
+fn content_key(bytes: &[u8]) -> u64 {
+    let mut h = DefaultHasher::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// The single source of truth for "which backend loads this program
+/// file": `*.ref.json` is a reference-interpreter program, everything
+/// else is HLO text for PJRT.  Shared by `Engine::load` and
+/// `Manifest::resolved_backend` so pool-mode selection can never drift
+/// from what the loader actually does.
+pub(crate) fn is_reference_program(path: &Path) -> bool {
+    path.file_name()
+        .map(|n| n.to_string_lossy().ends_with(".ref.json"))
+        .unwrap_or(false)
+}
+
 /// The shared client + executable cache.
 pub struct Engine {
     client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, Arc<Program>>>,
+    cache: SharedProgramCache,
+    /// Path -> loaded program memo, so repeat loads of the same path do
+    /// no file I/O at all (the content read+hash runs once per path per
+    /// engine).  Same staleness contract as the seed's path-keyed
+    /// cache: a file edited after first load keeps serving the old
+    /// program for this engine's lifetime.
+    by_path: Mutex<HashMap<PathBuf, Arc<Program>>>,
+    /// Serializes **cold** compiles across engines sharing `cache`, so
+    /// a fan-out racing on one uncached artifact compiles it exactly
+    /// once (double-checked inside the guard).  Cache hits never touch
+    /// this lock; distinct programs briefly queue behind each other,
+    /// which is the cheap side of the trade — compiles are rare.
+    compiling: Arc<Mutex<()>>,
 }
 
 impl Engine {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+        Ok(Self {
+            client,
+            cache: Arc::new(Mutex::new(HashMap::new())),
+            by_path: Mutex::new(HashMap::new()),
+            compiling: Arc::new(Mutex::new(())),
+        })
+    }
+
+    /// A new engine (fresh client) sharing this engine's program cache —
+    /// the building block of [`super::pool::EnginePool`]: worker threads
+    /// each own an engine, programs still compile once.
+    pub fn fork(&self) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: self.cache.clone(),
+            by_path: Mutex::new(HashMap::new()),
+            compiling: self.compiling.clone(),
+        })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
-    /// Load + compile an artifact (cached): `*.ref.json` programs go to
-    /// the reference backend, everything else is HLO text for PJRT.
+    /// Load + compile an artifact (cached by content hash, memoized by
+    /// path): `*.ref.json` programs go to the reference backend,
+    /// everything else is HLO text for PJRT.
     pub fn load(&self, path: &Path) -> Result<Arc<Program>> {
-        let key = path.canonicalize().unwrap_or_else(|_| path.to_path_buf());
-        if let Some(p) = self.cache.lock().unwrap().get(&key) {
+        let path_key = path.canonicalize().unwrap_or_else(|_| path.to_path_buf());
+        if let Some(p) = self.by_path.lock().unwrap().get(&path_key) {
             return Ok(p.clone());
         }
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading artifact {}", path.display()))?;
+        let key = content_key(&bytes);
+        let cached = self.cache.lock().unwrap().get(&key).cloned();
+        if let Some(p) = cached {
+            self.by_path.lock().unwrap().insert(path_key, p.clone());
+            return Ok(p);
+        }
+        // Cold: take the compile lock and re-check — a racing engine
+        // may have compiled this artifact while we waited.
+        let _compiling = self.compiling.lock().unwrap();
+        let cached = self.cache.lock().unwrap().get(&key).cloned();
+        if let Some(p) = cached {
+            self.by_path.lock().unwrap().insert(path_key, p.clone());
+            return Ok(p);
+        }
         let t0 = Instant::now();
-        let is_ref = path
-            .file_name()
-            .map(|n| n.to_string_lossy().ends_with(".ref.json"))
-            .unwrap_or(false);
-        let imp = if is_ref {
-            ProgramImpl::Reference(RefProgram::load(path)?)
+        let imp = if is_reference_program(path) {
+            // Parse from the bytes the cache key was hashed over — no
+            // second read, so the key always matches the compiled
+            // content even if the file is rewritten concurrently.
+            let text = std::str::from_utf8(&bytes)
+                .with_context(|| format!("reference program {} is not utf-8", path.display()))?;
+            ProgramImpl::Reference(
+                RefProgram::from_text(text)
+                    .with_context(|| format!("parsing reference program {}", path.display()))?,
+            )
         } else {
+            // HLO goes through the xla crate's file-based API (the only
+            // one the real crate exposes); a concurrent rewrite between
+            // hash and parse can mis-key — acceptable, artifacts are
+            // not regenerated while engines are live.
             let proto = xla::HloModuleProto::from_text_file(
                 path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
             )
@@ -194,10 +278,11 @@ impl Engine {
         };
         let program = Arc::new(Program {
             imp,
-            path: key.clone(),
+            path: path.to_path_buf(),
             compile_time_s: t0.elapsed().as_secs_f64(),
         });
         self.cache.lock().unwrap().insert(key, program.clone());
+        self.by_path.lock().unwrap().insert(path_key, program.clone());
         Ok(program)
     }
 
@@ -241,6 +326,19 @@ mod tests {
         assert!(Arc::ptr_eq(&p1, &p2));
         assert_eq!(p1.backend(), BackendKind::Reference);
         assert_eq!(engine.cached_count(), 1);
+    }
+
+    #[test]
+    fn forked_engines_share_the_program_cache() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let fork = engine.fork().unwrap();
+        let p1 = engine.load(&fam.join("sgd32.eval.ref.json")).unwrap();
+        let p2 = fork.load(&fam.join("sgd32.eval.ref.json")).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "fork must reuse the compiled program");
+        assert_eq!(engine.cached_count(), 1);
+        assert_eq!(fork.cached_count(), 1);
     }
 
     #[test]

@@ -234,6 +234,18 @@ impl Manifest {
         }
     }
 
+    /// Backend the resolved program files for `manifest_path` will load
+    /// on — decidable from path resolution alone, without compiling
+    /// anything (pool-mode selection uses this; see `runtime::pool`).
+    pub fn resolved_backend(manifest_path: &Path) -> super::engine::BackendKind {
+        let (train, _) = Self::program_paths(manifest_path);
+        if super::engine::is_reference_program(&train) {
+            super::engine::BackendKind::Reference
+        } else {
+            super::engine::BackendKind::Pjrt
+        }
+    }
+
     /// Count of gateable blocks (length of `gate_fracs` outputs).
     pub fn num_gated(&self) -> usize {
         self.blocks.iter().filter(|b| b.gateable).count()
@@ -363,5 +375,24 @@ mod tests {
         let (t, e) = Manifest::hlo_paths(Path::new("/a/b/psg.json"));
         assert_eq!(t, Path::new("/a/b/psg.train.hlo.txt"));
         assert_eq!(e, Path::new("/a/b/psg.eval.hlo.txt"));
+    }
+
+    #[test]
+    fn resolved_backend_matches_program_resolution() {
+        use crate::runtime::reference::{write_reference_family, RefFamilySpec};
+        use crate::runtime::BackendKind;
+
+        let tmp = crate::util::tmp::TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        assert_eq!(
+            Manifest::resolved_backend(&fam.join("sgd32.json")),
+            BackendKind::Reference
+        );
+        // No program files at all: resolution reports the canonical HLO
+        // pair, i.e. the PJRT backend (load will then error usefully).
+        assert_eq!(
+            Manifest::resolved_backend(Path::new("/nonexistent/x.json")),
+            BackendKind::Pjrt
+        );
     }
 }

@@ -7,21 +7,30 @@
 //! * [`device`] — device-resident training state ([`DeviceState`]): the
 //!   model stays in backend-native buffers across steps and syncs to
 //!   host only when SWA/eval/checkpointing needs it.
+//! * [`pool`] — per-worker engine pool sharing one program cache (the
+//!   fan-out structure that stays sound when `Engine` loses `Sync`).
 //! * [`program`] — (train, eval) executable pairs + state plumbing, with
-//!   a host step path and a resident step path.
+//!   a host step path, a resident step path, and a snapshot eval path
+//!   for the serving workload.
 //! * [`reference`] — the pure-rust reference backend + fixture
 //!   generator; keeps the whole stack executable without a PJRT runtime.
 
 pub mod device;
 pub mod engine;
 pub mod manifest;
+pub mod pool;
 pub mod program;
 pub mod reference;
 pub mod tensor;
 
-pub use device::{DeviceState, DeviceValue, ValueRef};
-pub use engine::{BackendKind, Engine, Program};
+pub use device::{DeviceState, DeviceValue, SnapshotCell, StateSnapshot, ValueRef};
+pub use engine::{BackendKind, Engine, Program, SharedProgramCache};
 pub use manifest::{ArtifactIndex, BlockInfo, IoSpec, Manifest, MethodInfo};
-pub use program::{EvalMetrics, ModelState, StepHyper, StepMetrics, TrainProgram};
-pub use reference::{write_reference_family, RefFamilySpec};
+pub use pool::EnginePool;
+pub use program::{
+    EvalMetrics, EvalOutput, ModelState, StepHyper, StepMetrics, TrainProgram,
+};
+pub use reference::{
+    row_argmax, row_rank, row_softmax_loss, write_reference_family, RefFamilySpec,
+};
 pub use tensor::{HostTensor, TensorData};

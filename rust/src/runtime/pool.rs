@@ -1,0 +1,113 @@
+//! Per-worker engine pool.
+//!
+//! `ExpCtx::run_many` and the serve worker pool used to hand one shared
+//! `&Engine` to every worker thread, which silently assumes
+//! `Engine: Sync`.  That holds for the reference backend and the in-repo
+//! xla stub, but the real PJRT CPU client holds raw pointers and is not
+//! `Sync` — fanning out over it is unsound the day the real crate links.
+//!
+//! [`EnginePool`] removes the assumption: it owns **one engine per
+//! worker** (each with its own client), all sharing one
+//! [`super::engine::SharedProgramCache`] keyed by artifact content hash,
+//! so each program still compiles exactly once no matter how many
+//! workers load it.
+//!
+//! Real-PJRT caveat: compiled executables are bound to the client that
+//! compiled them, so the *cache* sharing here is only sound for
+//! backend-portable programs (the reference backend, and the stub's
+//! stand-in executables).  When linking the real `xla` crate, construct
+//! the pool with [`EnginePool::new_isolated`] so each worker compiles
+//! its own copy — the per-worker-client structure is already right.
+
+use anyhow::Result;
+
+use super::engine::Engine;
+
+/// A set of engines, one per worker, sharing (or not) a program cache.
+pub struct EnginePool {
+    engines: Vec<Engine>,
+}
+
+impl EnginePool {
+    /// `n` engines forked from `base`, all sharing `base`'s program
+    /// cache (programs already compiled by `base` are reused).
+    pub fn from_base(base: &Engine, n: usize) -> Result<Self> {
+        let mut engines = Vec::with_capacity(n.max(1));
+        for _ in 0..n.max(1) {
+            engines.push(base.fork()?);
+        }
+        Ok(Self { engines })
+    }
+
+    /// `n` fully isolated engines — one private cache each.  The safe
+    /// construction for real PJRT, where executables are client-bound.
+    pub fn new_isolated(n: usize) -> Result<Self> {
+        let mut engines = Vec::with_capacity(n.max(1));
+        for _ in 0..n.max(1) {
+            engines.push(Engine::cpu()?);
+        }
+        Ok(Self { engines })
+    }
+
+    pub fn len(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.engines.is_empty()
+    }
+
+    /// Worker `i`'s engine (wraps around, so any index is valid).
+    pub fn engine(&self, i: usize) -> &Engine {
+        &self.engines[i % self.engines.len()]
+    }
+
+    /// Consume the pool into owned engines — used when worker threads
+    /// need to own their engine (`'static` spawn, e.g. the serve pool).
+    pub fn into_engines(self) -> Vec<Engine> {
+        self.engines
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::reference::{write_reference_family, RefFamilySpec};
+    use crate::util::tmp::TempDir;
+    use std::sync::Arc;
+
+    #[test]
+    fn pool_shares_cache_from_base() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let base = Engine::cpu().unwrap();
+        let p0 = base.load(&fam.join("sgd32.train.ref.json")).unwrap();
+        let pool = EnginePool::from_base(&base, 3).unwrap();
+        assert_eq!(pool.len(), 3);
+        for i in 0..pool.len() {
+            let p = pool.engine(i).load(&fam.join("sgd32.train.ref.json")).unwrap();
+            assert!(Arc::ptr_eq(&p0, &p), "worker {i} recompiled");
+        }
+        assert_eq!(base.cached_count(), 1);
+    }
+
+    #[test]
+    fn isolated_pool_compiles_per_worker() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let pool = EnginePool::new_isolated(2).unwrap();
+        let a = pool.engine(0).load(&fam.join("sgd32.train.ref.json")).unwrap();
+        let b = pool.engine(1).load(&fam.join("sgd32.train.ref.json")).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(pool.engine(0).cached_count(), 1);
+        assert_eq!(pool.engine(1).cached_count(), 1);
+    }
+
+    #[test]
+    fn index_wraps() {
+        let base = Engine::cpu().unwrap();
+        let pool = EnginePool::from_base(&base, 2).unwrap();
+        let _ = pool.engine(7); // must not panic
+        assert_eq!(pool.into_engines().len(), 2);
+    }
+}

@@ -18,9 +18,9 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use super::device::{DeviceState, ValueRef};
+use super::device::{DeviceState, StateSnapshot, ValueRef};
 use super::engine::{BackendKind, Engine, Program};
 use super::manifest::Manifest;
 use super::tensor::HostTensor;
@@ -164,6 +164,18 @@ pub struct EvalMetrics {
     pub gate_fracs: Vec<f64>,
 }
 
+/// Full eval result: aggregate metrics plus any per-sample auxiliary
+/// outputs the artifact emits (role `out_aux`).
+#[derive(Debug, Clone, Default)]
+pub struct EvalOutput {
+    pub metrics: EvalMetrics,
+    /// Per-sample logits, shape `[batch, classes]`, when the eval
+    /// program declares a `logits` output (reference eval programs do).
+    /// The serving path slices rows out of this to answer individual
+    /// requests coalesced into one micro-batch.
+    pub logits: Option<HostTensor>,
+}
+
 /// A fully-loaded (family, method) artifact ready to train and evaluate.
 pub struct TrainProgram {
     pub manifest: Manifest,
@@ -291,25 +303,43 @@ impl TrainProgram {
         Ok(sm)
     }
 
-    fn decode_eval_metrics(
+    fn decode_eval_outputs(
         &self,
-        outputs: &[HostTensor],
+        outputs: Vec<HostTensor>,
         total: usize,
-    ) -> Result<EvalMetrics> {
+    ) -> Result<EvalOutput> {
+        if outputs.len() != self.manifest.eval_outputs.len() {
+            bail!(
+                "eval outputs: got {}, manifest says {}",
+                outputs.len(),
+                self.manifest.eval_outputs.len()
+            );
+        }
         let mut em = EvalMetrics { total, ..Default::default() };
-        for (spec, tensor) in self.manifest.eval_outputs.iter().zip(outputs.iter()) {
-            match spec.name.as_str() {
-                "loss" => em.loss = tensor.scalar()?,
-                "correct" => em.correct = tensor.scalar()?,
-                "correct5" => em.correct5 = tensor.scalar()?,
-                "gate_fracs" => {
-                    em.gate_fracs =
-                        tensor.as_f32()?.iter().map(|&v| v as f64).collect()
+        let mut logits = None;
+        for (spec, tensor) in self.manifest.eval_outputs.iter().zip(outputs) {
+            match spec.role.as_str() {
+                "out_metric" => match spec.name.as_str() {
+                    "loss" => em.loss = tensor.scalar()?,
+                    "correct" => em.correct = tensor.scalar()?,
+                    "correct5" => em.correct5 = tensor.scalar()?,
+                    "gate_fracs" => {
+                        em.gate_fracs =
+                            tensor.as_f32()?.iter().map(|&v| v as f64).collect()
+                    }
+                    other => bail!("unknown eval metric output {other}"),
+                },
+                // Auxiliary per-sample outputs: only logits is known;
+                // others pass through unread (forward compatibility).
+                "out_aux" => {
+                    if spec.name == "logits" {
+                        logits = Some(tensor);
+                    }
                 }
-                other => bail!("unknown eval output {other}"),
+                other => bail!("unknown eval output role {other}"),
             }
         }
-        Ok(em)
+        Ok(EvalOutput { metrics: em, logits })
     }
 
     /// One optimizer step on the host path.  `mask` must be
@@ -417,7 +447,7 @@ impl TrainProgram {
         literals.push(x.to_literal()?);
         literals.push(y.to_literal()?);
         let outputs = self.eval.run_literals(&literals)?;
-        self.decode_eval_metrics(&outputs, y.elem_count())
+        Ok(self.decode_eval_outputs(outputs, y.elem_count())?.metrics)
     }
 
     /// Evaluate one batch straight from resident state — no host sync of
@@ -428,10 +458,46 @@ impl TrainProgram {
         x: &HostTensor,
         y: &HostTensor,
     ) -> Result<EvalMetrics> {
-        let mut inputs: Vec<ValueRef> =
-            Vec::with_capacity(self.eval_state_idx.len() + 2);
-        for &i in &self.eval_state_idx {
-            inputs.push(ValueRef::Dev(&state.values[i]));
+        let refs: Vec<&super::device::DeviceValue> =
+            self.eval_state_idx.iter().map(|&i| &state.values[i]).collect();
+        Ok(self.eval_batch_refs(&refs, x, y)?.metrics)
+    }
+
+    /// Evaluate one pre-assembled (and, for partial tails, pre-padded
+    /// with `-1` labels) batch against a published [`StateSnapshot`] —
+    /// the serving path.  Read-only: many workers may evaluate against
+    /// the same snapshot concurrently, and the publisher may swap the
+    /// cell mid-flight without draining anyone.
+    pub fn eval_batch_snapshot(
+        &self,
+        snap: &StateSnapshot,
+        x: &HostTensor,
+        y: &HostTensor,
+    ) -> Result<EvalOutput> {
+        let refs = self
+            .eval_state_idx
+            .iter()
+            .map(|&i| {
+                snap.values.get(i).ok_or_else(|| {
+                    anyhow!(
+                        "snapshot holds {} tensors but eval needs state index {i}",
+                        snap.values.len()
+                    )
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.eval_batch_refs(&refs, x, y)
+    }
+
+    fn eval_batch_refs(
+        &self,
+        state_refs: &[&super::device::DeviceValue],
+        x: &HostTensor,
+        y: &HostTensor,
+    ) -> Result<EvalOutput> {
+        let mut inputs: Vec<ValueRef> = Vec::with_capacity(state_refs.len() + 2);
+        for v in state_refs.iter().copied() {
+            inputs.push(ValueRef::Dev(v));
         }
         inputs.push(ValueRef::Host(x));
         inputs.push(ValueRef::Host(y));
@@ -441,7 +507,7 @@ impl TrainProgram {
             .into_iter()
             .map(|dv| dv.into_host())
             .collect::<Result<Vec<_>>>()?;
-        self.decode_eval_metrics(&outputs, y.elem_count())
+        self.decode_eval_outputs(outputs, y.elem_count())
     }
 }
 

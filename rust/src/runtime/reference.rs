@@ -381,6 +381,13 @@ impl RefProgram {
         computed.insert("loss", HostTensor::scalar_f32(loss_sum / bsz as f32));
         computed.insert("correct", HostTensor::scalar_f32(correct));
         computed.insert("correct5", HostTensor::scalar_f32(correct5));
+        // Per-sample logits (role out_aux) when the program declares
+        // them — the serving path routes individual rows back to their
+        // requesters.  Rows are computed independently, so a sample's
+        // logits don't depend on which batch it was coalesced into.
+        if self.outputs.iter().any(|o| o.name == "logits") {
+            computed.insert("logits", HostTensor::f32(vec![bsz, c], fwd.z));
+        }
         self.outputs
             .iter()
             .map(|io| {
@@ -445,6 +452,42 @@ fn forward(
     Forward { h_pre, hact, z }
 }
 
+/// Softmax cross-entropy of one logits row against true class `y`.
+/// Fixed evaluation order (max, then exp-sum in index order) — callers
+/// relying on bitwise determinism (the serve equivalence tests) get the
+/// exact float the batched metrics accumulate.
+pub fn row_softmax_loss(zr: &[f32], y: usize) -> f32 {
+    let m = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut denom = 0f32;
+    for &v in zr {
+        denom += (v - m).exp();
+    }
+    denom.ln() + m - zr[y]
+}
+
+/// Rank of the true class within a logits row (strict wins; ties broken
+/// by index).  0 means top-1 hit.
+pub fn row_rank(zr: &[f32], y: usize) -> usize {
+    let zy = zr[y];
+    zr.iter()
+        .enumerate()
+        .filter(|&(ci, &v)| v > zy || (v == zy && ci < y))
+        .count()
+}
+
+/// Predicted class of a logits row: argmax with ties going to the lowest
+/// index — the inverse of [`row_rank`]'s tie rule, so
+/// `row_argmax(zr) == y  <=>  row_rank(zr, y) == 0`.
+pub fn row_argmax(zr: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in zr.iter().enumerate().skip(1) {
+        if v > zr[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 /// (loss_sum, correct, correct5) over a logits batch.  Rows with a
 /// negative label are padding: they contribute nothing to any metric
 /// (mirroring `one_hot(-1) == 0` in the lowered artifacts).
@@ -459,19 +502,8 @@ fn softmax_metrics(z: &[f32], yv: &[i32], bsz: usize, c: usize) -> (f32, f32, f3
         }
         let y = y as usize;
         let zr = &z[bi * c..(bi + 1) * c];
-        let m = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut denom = 0f32;
-        for &v in zr {
-            denom += (v - m).exp();
-        }
-        loss_sum += denom.ln() + m - zr[y];
-        // rank of the true class (strict wins; ties broken by index).
-        let zy = zr[y];
-        let rank = zr
-            .iter()
-            .enumerate()
-            .filter(|&(ci, &v)| v > zy || (v == zy && ci < y))
-            .count();
+        loss_sum += row_softmax_loss(zr, y);
+        let rank = row_rank(zr, y);
         if rank == 0 {
             correct += 1.0;
         }
@@ -623,6 +655,9 @@ pub fn write_reference_family(dir: &Path, spec: &RefFamilySpec) -> Result<std::p
             io("loss", "out_metric", &[], "f32", ""),
             io("correct", "out_metric", &[], "f32", ""),
             io("correct5", "out_metric", &[], "f32", ""),
+            // Per-sample logits for the serving path; metric decoding
+            // skips non-out_metric roles, so train/eval loops ignore it.
+            io("logits", "out_aux", &[spec.eval_batch, c], "f32", ""),
         ];
 
         // ---- block table for the energy model ------------------------
@@ -820,6 +855,63 @@ mod tests {
         let p = sm.psg_frac.expect("psg telemetry");
         assert!((0.0..=1.0).contains(&p));
         assert!(sm.loss.is_finite() && sm.loss > 0.0);
+    }
+
+    #[test]
+    fn row_helpers_are_consistent() {
+        let zr = [0.5f32, 2.0, 2.0, -1.0];
+        // argmax ties to the lowest index
+        assert_eq!(row_argmax(&zr), 1);
+        assert_eq!(row_rank(&zr, 1), 0);
+        assert_eq!(row_rank(&zr, 2), 1, "tie broken toward the lower index");
+        assert_eq!(row_rank(&zr, 0), 2);
+        assert_eq!(row_rank(&zr, 3), 3);
+        // rank == 0 exactly when argmax lands on the true class
+        for y in 0..zr.len() {
+            assert_eq!(row_rank(&zr, y) == 0, row_argmax(&zr) == y);
+        }
+        assert!(row_softmax_loss(&zr, 1) < row_softmax_loss(&zr, 3));
+    }
+
+    #[test]
+    fn eval_emits_slot_independent_logits() {
+        let tmp = TempDir::new().unwrap();
+        let spec = RefFamilySpec::tiny();
+        let fam = write_reference_family(tmp.path(), &spec).unwrap();
+        let prog = RefProgram::load(&fam.join("sgd32.eval.ref.json")).unwrap();
+        assert!(prog.outputs.iter().any(|o| o.name == "logits" && o.role == "out_aux"));
+        let eb = spec.eval_batch;
+        let d = spec.dim();
+        let h = spec.hidden;
+        let c = spec.classes;
+        let state = [
+            HostTensor::f32(vec![d, h], (0..d * h).map(|i| (i % 7) as f32 * 0.01).collect()),
+            HostTensor::f32(vec![h], vec![0.1; h]),
+            HostTensor::f32(vec![h, c], (0..h * c).map(|i| (i % 5) as f32 * 0.02).collect()),
+            HostTensor::f32(vec![c], vec![0.0; c]),
+            HostTensor::f32(vec![h], vec![0.0; h]),
+        ];
+        let sample: Vec<f32> = (0..d).map(|i| (i % 11) as f32 * 0.1).collect();
+        let run_with_slot = |slot: usize| -> Vec<f32> {
+            let mut px = vec![0f32; eb * d];
+            px[slot * d..(slot + 1) * d].copy_from_slice(&sample);
+            let mut py = vec![-1i32; eb];
+            py[slot] = 3;
+            let x = HostTensor::f32(vec![eb, spec.hw, spec.hw, 3], px);
+            let y = HostTensor::i32(vec![eb], py);
+            let mut ins: Vec<&HostTensor> = state.iter().collect();
+            ins.push(&x);
+            ins.push(&y);
+            let outs = prog.run(&ins).unwrap();
+            let logits = outs.last().unwrap().as_f32().unwrap().to_vec();
+            logits[slot * c..(slot + 1) * c].to_vec()
+        };
+        // The same sample lands in different slots of different batches:
+        // its logits row must be bit-identical — the property the serve
+        // micro-batcher relies on.
+        let a = run_with_slot(0);
+        let b = run_with_slot(eb - 1);
+        assert_eq!(a, b, "logits depend on batch slot");
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! The coalescing stage: requests -> padded micro-batches.
+//!
+//! Flush policy is **size-or-deadline**: a batch ships the moment it is
+//! full (`micro_batch` samples), or when the oldest staged sample has
+//! waited `max_delay` with the queue idle.  Partial flushes reuse the
+//! eval-tail padding contract — zero rows with label `-1` contribute
+//! nothing to any output (`one_hot(-1) == 0`), so padded batches are
+//! safe to run through the unmodified eval program.
+//!
+//! Requests stage atomically (all samples of a request enter the
+//! staging buffer before any flush decision) and only split across
+//! batches at full-batch boundaries — the leading side always ships
+//! full; the trailing fragment starts the next batch and may itself
+//! deadline-flush partial if the queue goes idle.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::runtime::HostTensor;
+
+use super::queue::{Bounded, PopResult};
+use super::{Collector, Request};
+
+/// One executable unit: a padded `[micro_batch, hw, hw, 3]` batch plus
+/// the routing table mapping its first `routes.len()` rows back to the
+/// requests that contributed them.
+pub(crate) struct MicroBatch {
+    pub x: HostTensor,
+    pub y: HostTensor,
+    pub routes: Vec<Route>,
+}
+
+/// Row -> (request completion, request-local slot) routing.
+pub(crate) struct Route {
+    pub collector: Arc<Collector>,
+    pub slot: usize,
+    pub t_submit: Instant,
+}
+
+struct Staging {
+    x: Vec<f32>,
+    y: Vec<i32>,
+    routes: Vec<Route>,
+    micro_batch: usize,
+    stride: usize,
+    hw: usize,
+}
+
+impl Staging {
+    fn flush(&mut self, batch_q: &Bounded<MicroBatch>) {
+        if self.routes.is_empty() {
+            return;
+        }
+        // Swap in pre-sized replacements (a plain `take` would leave
+        // zero-capacity vecs that regrow through reallocation on every
+        // subsequent batch of the hot path).
+        let mut px = std::mem::replace(
+            &mut self.x,
+            Vec::with_capacity(self.micro_batch * self.stride),
+        );
+        let mut py =
+            std::mem::replace(&mut self.y, Vec::with_capacity(self.micro_batch));
+        px.resize(self.micro_batch * self.stride, 0.0);
+        py.resize(self.micro_batch, -1);
+        let mb = MicroBatch {
+            x: HostTensor::f32(vec![self.micro_batch, self.hw, self.hw, 3], px),
+            y: HostTensor::i32(vec![self.micro_batch], py),
+            routes: std::mem::replace(
+                &mut self.routes,
+                Vec::with_capacity(self.micro_batch),
+            ),
+        };
+        // Occupancy is recorded by the worker on successful execution
+        // (serve/worker.rs), so failed or rejected batches never skew
+        // the coalescing stats.
+        if let Err(mb) = batch_q.push(mb) {
+            // Shutdown race: the batch queue closed under us — fail the
+            // affected requests instead of hanging their tickets.
+            for r in &mb.routes {
+                r.collector.fail("serve batch queue closed");
+            }
+        }
+    }
+}
+
+/// The batcher thread body.  Exits when the request queue is closed and
+/// fully drained, flushing whatever is staged on the way out.
+pub(crate) fn run(
+    queue: &Bounded<Request>,
+    batch_q: &Bounded<MicroBatch>,
+    micro_batch: usize,
+    hw: usize,
+    max_delay: Duration,
+) {
+    let stride = hw * hw * 3;
+    let mut staging = Staging {
+        x: Vec::with_capacity(micro_batch * stride),
+        y: Vec::with_capacity(micro_batch),
+        routes: Vec::with_capacity(micro_batch),
+        micro_batch,
+        stride,
+        hw,
+    };
+    // Deadline of the oldest staged sample; meaningful only while the
+    // staging buffer is non-empty.
+    let mut deadline = Instant::now();
+
+    loop {
+        let req = if staging.routes.is_empty() {
+            // Nothing staged: park until work or shutdown arrives.
+            match queue.pop() {
+                Some(r) => r,
+                None => break,
+            }
+        } else {
+            match queue.pop_deadline(deadline) {
+                PopResult::Item(r) => r,
+                PopResult::TimedOut => {
+                    staging.flush(batch_q);
+                    continue;
+                }
+                PopResult::Closed => break,
+            }
+        };
+
+        // Stage the whole request; ship full batches as they fill.
+        for (k, &label) in req.y.iter().enumerate() {
+            if staging.routes.is_empty() {
+                deadline = Instant::now() + max_delay;
+            }
+            staging
+                .x
+                .extend_from_slice(&req.x[k * stride..(k + 1) * stride]);
+            staging.y.push(label);
+            staging.routes.push(Route {
+                collector: req.collector.clone(),
+                slot: k,
+                t_submit: req.t_submit,
+            });
+            if staging.routes.len() == micro_batch {
+                staging.flush(batch_q);
+            }
+        }
+    }
+    // Closed: flush the tail so no ticket is left pending.
+    staging.flush(batch_q);
+}

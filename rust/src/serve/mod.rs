@@ -1,0 +1,405 @@
+//! `serve` — a queued micro-batching inference service over shared
+//! device-resident state.
+//!
+//! Training squeezes wasted computation out of the step loop (SMD / SLU
+//! / PSG); the serving-side analogue is amortizing the fixed per-launch
+//! cost of an eval dispatch by coalescing concurrent classification
+//! requests into full `eval_batch`-sized micro-batches against state
+//! that is already resident.  The pipeline:
+//!
+//! ```text
+//!  clients ──submit──▶ bounded request queue (MPSC, backpressure)
+//!                           │ batcher thread
+//!                           ▼ coalesce: flush on size OR deadline,
+//!                           │ pad the tail with zero rows + label -1
+//!                           ▼
+//!                      micro-batch queue ──▶ worker pool (one engine
+//!                           │                per worker, shared program
+//!                           │                cache: runtime::pool)
+//!                           ▼ eval against the published StateSnapshot
+//!                      per-sample results routed back through
+//!                      oneshot completions (Ticket::wait)
+//! ```
+//!
+//! The model state is a read-only [`StateSnapshot`] behind a
+//! [`SnapshotCell`]: a training loop publishes SWA / fine-tuned
+//! checkpoints mid-flight ([`crate::coordinator::Trainer::set_publisher`])
+//! and the queue never drains — in-flight batches finish on the
+//! snapshot they loaded, later batches see the new version (reported
+//! per sample in [`SampleResult::snapshot_version`]).
+//!
+//! Correctness contract: the eval program computes logits row-by-row,
+//! so a sample's result is bitwise independent of which micro-batch it
+//! was coalesced into — N concurrent clients receive exactly the
+//! per-sample logits a serial `evaluate_full` pass computes
+//! (tests/serve_equivalence.rs), padding included (`one_hot(-1) == 0`).
+
+pub mod batcher;
+pub mod queue;
+pub mod stats;
+pub mod worker;
+
+pub use stats::{ServeStats, StatsCollector};
+
+use std::path::Path;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{BackendKind, Engine, EnginePool, SnapshotCell, TrainProgram};
+
+use batcher::MicroBatch;
+use queue::Bounded;
+
+/// Service tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Eval worker threads (one engine each).
+    pub workers: usize,
+    /// Bound of the client-facing request queue (backpressure).
+    pub queue_cap: usize,
+    /// Longest a staged request waits before a partial flush.  The
+    /// deadline-vs-size trade-off knob: small values favor latency,
+    /// large values favor occupancy (see PERF.md).
+    pub max_delay: Duration,
+    /// Micro-batch size; `None` uses the artifact's `eval_batch`.
+    pub micro_batch: Option<usize>,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_cap: 64,
+            max_delay: Duration::from_millis(2),
+            micro_batch: None,
+        }
+    }
+}
+
+/// Per-sample classification answer.
+#[derive(Debug, Clone)]
+pub struct SampleResult {
+    /// The sample's logits row (num_classes values).
+    pub logits: Vec<f32>,
+    /// Label the client submitted (-1 = unlabeled).
+    pub label: i32,
+    /// Predicted class (argmax, ties to the lowest index).
+    pub pred: i32,
+    /// `pred == label` under the artifact's ranking rule; false when
+    /// unlabeled.
+    pub correct: bool,
+    /// Softmax cross-entropy against `label`; 0.0 when unlabeled.
+    pub loss: f32,
+    /// Version of the published checkpoint that served this sample.
+    pub snapshot_version: u64,
+}
+
+struct CollectorInner {
+    results: Vec<Option<SampleResult>>,
+    remaining: usize,
+    error: Option<String>,
+}
+
+/// Oneshot completion shared by all samples of one request: workers
+/// fill slots (possibly from different micro-batches), the client's
+/// [`Ticket::wait`] unblocks when the last slot lands.
+pub(crate) struct Collector {
+    m: Mutex<CollectorInner>,
+    cv: Condvar,
+}
+
+impl Collector {
+    fn new(n: usize) -> Arc<Self> {
+        Arc::new(Self {
+            m: Mutex::new(CollectorInner {
+                results: (0..n).map(|_| None).collect(),
+                remaining: n,
+                error: None,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub(crate) fn fill(&self, slot: usize, r: SampleResult) {
+        let mut g = self.m.lock().unwrap();
+        if slot < g.results.len() && g.results[slot].is_none() {
+            g.results[slot] = Some(r);
+            g.remaining -= 1;
+        }
+        if g.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    pub(crate) fn fail(&self, msg: &str) {
+        let mut g = self.m.lock().unwrap();
+        if g.error.is_none() {
+            g.error = Some(msg.to_string());
+        }
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Result<Vec<SampleResult>> {
+        let mut g = self.m.lock().unwrap();
+        loop {
+            if let Some(e) = &g.error {
+                return Err(anyhow!("serve request failed: {e}"));
+            }
+            if g.remaining == 0 {
+                return Ok(g.results.drain(..).map(|r| r.unwrap()).collect());
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Handle to one submitted request.
+pub struct Ticket {
+    collector: Arc<Collector>,
+}
+
+impl Ticket {
+    /// Block until every sample of the request completed; results come
+    /// back in submission order.
+    pub fn wait(self) -> Result<Vec<SampleResult>> {
+        self.collector.wait()
+    }
+}
+
+/// One queued request: `n` samples travelling together (they may still
+/// be split across micro-batches at full-batch boundaries).
+pub(crate) struct Request {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub collector: Arc<Collector>,
+    pub t_submit: Instant,
+}
+
+/// Cloneable client handle: submit single samples or small batches.
+#[derive(Clone)]
+pub struct ServeClient {
+    queue: Arc<Bounded<Request>>,
+    hw: usize,
+    classes: usize,
+}
+
+impl ServeClient {
+    /// Submit `labels.len()` samples; `pixels` is the concatenated
+    /// `hw*hw*3` rows.  Unlabeled samples pass label `-1` (they get
+    /// logits + prediction, no loss/correctness).  Blocks while the
+    /// request queue is full (backpressure), errors once the service
+    /// shut down.
+    pub fn submit(&self, pixels: &[f32], labels: &[i32]) -> Result<Ticket> {
+        let stride = self.sample_stride();
+        if labels.is_empty() {
+            bail!("empty request");
+        }
+        if pixels.len() != labels.len() * stride {
+            bail!(
+                "request shape mismatch: {} pixels for {} samples of stride {stride}",
+                pixels.len(),
+                labels.len()
+            );
+        }
+        if labels.iter().any(|&l| l >= self.classes as i32) {
+            bail!("label out of range for {}-class artifact", self.classes);
+        }
+        let collector = Collector::new(labels.len());
+        let req = Request {
+            x: pixels.to_vec(),
+            y: labels.to_vec(),
+            collector: collector.clone(),
+            t_submit: Instant::now(),
+        };
+        self.queue
+            .push(req)
+            .map_err(|_| anyhow!("serve queue closed"))?;
+        Ok(Ticket { collector })
+    }
+
+    /// Floats per sample (`hw * hw * 3`).
+    pub fn sample_stride(&self) -> usize {
+        self.hw * self.hw * 3
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.classes
+    }
+}
+
+/// The running service: batcher thread + worker pool over one artifact.
+pub struct ServeService {
+    queue: Arc<Bounded<Request>>,
+    batch_q: Arc<Bounded<MicroBatch>>,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<StatsCollector>,
+    hw: usize,
+    classes: usize,
+    micro_batch: usize,
+}
+
+impl ServeService {
+    /// Boot the service for one `(family, method)` artifact.  `cell` is
+    /// the checkpoint publish point — typically shared with a `Trainer`
+    /// via [`crate::coordinator::Trainer::set_publisher`]; at least one
+    /// snapshot must be published before requests can be answered.
+    pub fn start(
+        engine: &Engine,
+        manifest_path: &Path,
+        cell: Arc<SnapshotCell>,
+        cfg: ServeCfg,
+    ) -> Result<Self> {
+        // Probe-load up front: resolves artifact errors synchronously.
+        // On the reference backend this also warms the shared program
+        // cache for the (from_base) worker pool; isolated PJRT workers
+        // each compile their own copy at thread start — executables are
+        // client-bound there, so that cost is irreducible.
+        let probe = TrainProgram::load(engine, manifest_path)
+            .with_context(|| format!("loading serve artifact {}", manifest_path.display()))?;
+        let hw = probe.manifest.arch.image_size;
+        let classes = probe.manifest.arch.num_classes;
+        let micro_batch = cfg.micro_batch.unwrap_or_else(|| probe.eval_batch()).max(1);
+        // Compiled HLO has its eval batch baked into the input shapes —
+        // an override that disagrees would fail on every single batch
+        // at execute time; reject it once, here.  (The reference
+        // interpreter shapes off the actual input, so any size works.)
+        if probe.backend() == BackendKind::Pjrt && micro_batch != probe.eval_batch() {
+            bail!(
+                "micro_batch {} != compiled eval batch {} for {}",
+                micro_batch,
+                probe.eval_batch(),
+                manifest_path.display()
+            );
+        }
+        // Serving needs per-sample logits; an artifact that only emits
+        // aggregate metrics (the python lowering today) must fail here
+        // with a clear message, not per-request at runtime.
+        if !probe
+            .manifest
+            .eval_outputs
+            .iter()
+            .any(|o| o.name == "logits")
+        {
+            bail!(
+                "{} emits no per-sample `logits` eval output — the serve path \
+                 cannot route results back to requesters (re-lower the artifact \
+                 with a logits out_aux output, or serve a reference family)",
+                manifest_path.display()
+            );
+        }
+        let n_workers = cfg.workers.max(1);
+
+        // Everything fallible that needs no threads happens first, so a
+        // failed start leaks nothing.  Reference programs are
+        // backend-portable: workers share the base engine's
+        // compiled-program cache.  Real-PJRT executables are bound to
+        // the client that compiled them — isolate.
+        let pool = match probe.backend() {
+            BackendKind::Reference => EnginePool::from_base(engine, n_workers)?,
+            BackendKind::Pjrt => EnginePool::new_isolated(n_workers)?,
+        };
+
+        let queue = Arc::new(Bounded::<Request>::new(cfg.queue_cap));
+        let batch_q = Arc::new(Bounded::<MicroBatch>::new(n_workers * 2));
+        let stats = Arc::new(StatsCollector::new());
+
+        let batcher = {
+            let queue = queue.clone();
+            let batch_q = batch_q.clone();
+            let max_delay = cfg.max_delay;
+            std::thread::Builder::new()
+                .name("e2train-serve-batcher".into())
+                .spawn(move || {
+                    batcher::run(&queue, &batch_q, micro_batch, hw, max_delay)
+                })
+                .context("spawning serve batcher")?
+        };
+
+        let mut workers = Vec::with_capacity(n_workers);
+        let live = Arc::new(std::sync::atomic::AtomicUsize::new(n_workers));
+        for (i, worker_engine) in pool.into_engines().into_iter().enumerate() {
+            let bq = batch_q.clone();
+            let st = stats.clone();
+            let cl = cell.clone();
+            let lv = live.clone();
+            let manifest = manifest_path.to_path_buf();
+            let spawned = std::thread::Builder::new()
+                .name(format!("e2train-serve-worker{i}"))
+                .spawn(move || worker::run(worker_engine, &manifest, &cl, &bq, &st, &lv));
+            match spawned {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    // Unwind the threads already running — a parked
+                    // batcher holding an open queue would leak forever.
+                    queue.close();
+                    let _ = batcher.join();
+                    batch_q.close();
+                    for w in workers.drain(..) {
+                        let _ = w.join();
+                    }
+                    return Err(e).context("spawning serve worker");
+                }
+            }
+        }
+
+        Ok(Self {
+            queue,
+            batch_q,
+            batcher: Some(batcher),
+            workers,
+            stats,
+            hw,
+            classes,
+            micro_batch,
+        })
+    }
+
+    /// A new client handle (cheap, cloneable, sendable across threads).
+    pub fn client(&self) -> ServeClient {
+        ServeClient {
+            queue: self.queue.clone(),
+            hw: self.hw,
+            classes: self.classes,
+        }
+    }
+
+    pub fn micro_batch(&self) -> usize {
+        self.micro_batch
+    }
+
+    /// Telemetry so far, without stopping the service.
+    pub fn stats(&self) -> ServeStats {
+        self.stats.snapshot()
+    }
+
+    /// Graceful shutdown: stop accepting, flush everything staged,
+    /// drain the worker pool, and return the lifetime stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.stop();
+        self.stats.snapshot()
+    }
+
+    fn stop(&mut self) {
+        // Order matters: close the request queue first so the batcher
+        // drains + flushes its tail, join it, then close the batch
+        // queue so workers drain the flushed batches before exiting.
+        self.queue.close();
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        self.batch_q.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServeService {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}

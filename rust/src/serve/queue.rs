@@ -1,0 +1,207 @@
+//! Bounded blocking queues for the serve pipeline.
+//!
+//! `std::sync::mpsc` channels are single-consumer, but the serve
+//! pipeline needs one multi-producer stage (clients -> batcher) and one
+//! multi-consumer stage (batcher -> worker pool), both bounded so a
+//! burst of clients applies backpressure instead of growing memory.
+//! [`Bounded`] covers both with a `Mutex<VecDeque>` + two condvars —
+//! the classic bounded-buffer, with an explicit closed state so
+//! shutdown drains cleanly: producers get their item back, consumers
+//! drain the remaining items and then observe the close.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Result of a deadline-bounded pop.
+pub enum PopResult<T> {
+    Item(T),
+    /// Deadline passed with the queue still empty.
+    TimedOut,
+    /// Queue closed and fully drained.
+    Closed,
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer blocking queue.
+pub struct Bounded<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> Bounded<T> {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                q: VecDeque::new(),
+                cap: cap.max(1),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Blocking push; returns the item back if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.q.len() < g.cap {
+                g.q.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop; `None` once the queue is closed **and** drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop with a deadline: an item if one arrives in time, `TimedOut`
+    /// at the deadline, `Closed` when closed and drained.  Drives the
+    /// batcher's flush-on-deadline behavior.
+    pub fn pop_deadline(&self, deadline: Instant) -> PopResult<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                self.not_full.notify_one();
+                return PopResult::Item(item);
+            }
+            if g.closed {
+                return PopResult::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopResult::TimedOut;
+            }
+            let (ng, timeout) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .unwrap();
+            g = ng;
+            if timeout.timed_out() && g.q.is_empty() && !g.closed {
+                return PopResult::TimedOut;
+            }
+        }
+    }
+
+    /// Close the queue: producers fail fast, consumers drain then stop.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_and_backpressure() {
+        let q = Arc::new(Bounded::new(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        // Full: a producer blocks until a consumer pops.
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(3).is_ok());
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(1));
+        assert!(t.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let q: Bounded<u32> = Bounded::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert!(q.push(8).is_err(), "push after close must fail");
+        assert_eq!(q.pop(), Some(7), "closed queues still drain");
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn deadline_pop_times_out_then_delivers() {
+        let q: Arc<Bounded<u32>> = Arc::new(Bounded::new(4));
+        let d = Instant::now() + Duration::from_millis(10);
+        match q.pop_deadline(d) {
+            PopResult::TimedOut => {}
+            _ => panic!("expected timeout"),
+        }
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            q2.push(9).unwrap();
+        });
+        match q.pop_deadline(Instant::now() + Duration::from_secs(5)) {
+            PopResult::Item(v) => assert_eq!(v, 9),
+            _ => panic!("expected item"),
+        }
+        t.join().unwrap();
+        q.close();
+        match q.pop_deadline(Instant::now() + Duration::from_millis(1)) {
+            PopResult::Closed => {}
+            _ => panic!("expected closed"),
+        }
+    }
+
+    #[test]
+    fn many_producers_one_consumer() {
+        let q: Arc<Bounded<usize>> = Arc::new(Bounded::new(3));
+        let mut handles = Vec::new();
+        for p in 0..4 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10 {
+                    q.push(p * 100 + i).unwrap();
+                }
+            }));
+        }
+        let mut got = Vec::new();
+        for _ in 0..40 {
+            got.push(q.pop().unwrap());
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 40, "all items delivered exactly once");
+    }
+}

@@ -1,0 +1,198 @@
+//! Serving-side telemetry: per-sample latency percentiles, micro-batch
+//! occupancy, and throughput over the observed completion window.
+//!
+//! The worker records one occupancy point per **executed** micro-batch
+//! (real samples / capacity matters for amortization: occupancy 1 means
+//! the fixed per-launch cost is unamortized, occupancy == micro_batch
+//! means it is fully amortized) and one latency point per completed
+//! sample (submit -> result fill).
+//!
+//! Bounded by design: occupancy keeps running sums, and latencies live
+//! in a fixed-size ring ([`LATENCY_WINDOW`] most recent samples), so a
+//! long-lived service neither grows memory without bound nor stalls
+//! the worker pool while a `stats()` snapshot clones history.
+//! Percentiles therefore describe the recent window; counts and means
+//! are lifetime.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Latency samples retained for percentile estimation (most recent).
+pub const LATENCY_WINDOW: usize = 1 << 16;
+
+#[derive(Default)]
+struct StatsInner {
+    /// Ring of the most recent completion latencies (seconds).
+    latencies: Vec<f64>,
+    /// Ring cursor (next slot to overwrite once the ring is full).
+    cursor: usize,
+    /// Lifetime completed-sample count.
+    samples: usize,
+    /// Lifetime latency sum (for the lifetime mean).
+    latency_sum_s: f64,
+    /// Lifetime executed-batch count.
+    batches: usize,
+    /// Lifetime sum of real samples over executed batches.
+    occupancy_sum: usize,
+    /// Completion-window bounds for throughput.
+    first_done: Option<Instant>,
+    last_done: Option<Instant>,
+}
+
+/// Shared collector: every worker holds an `Arc` to one.
+#[derive(Default)]
+pub struct StatsCollector {
+    inner: Mutex<StatsInner>,
+}
+
+impl StatsCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One executed micro-batch with `n_real` real samples.
+    pub fn record_batch(&self, n_real: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.occupancy_sum += n_real;
+    }
+
+    /// One completed sample submitted at `t_submit`.
+    pub fn record_sample(&self, t_submit: Instant) {
+        let now = Instant::now();
+        let lat = now.duration_since(t_submit).as_secs_f64();
+        let mut g = self.inner.lock().unwrap();
+        if g.latencies.len() < LATENCY_WINDOW {
+            g.latencies.push(lat);
+        } else {
+            let i = g.cursor;
+            g.latencies[i] = lat;
+        }
+        g.cursor = (g.cursor + 1) % LATENCY_WINDOW;
+        g.samples += 1;
+        g.latency_sum_s += lat;
+        if g.first_done.is_none() {
+            g.first_done = Some(now);
+        }
+        g.last_done = Some(now);
+    }
+
+    /// Aggregate everything recorded so far.  The latency history is
+    /// cloned under the lock but sorted outside it, so workers are
+    /// never blocked behind the sort.
+    pub fn snapshot(&self) -> ServeStats {
+        let (mut lat, samples, latency_sum_s, batches, occupancy_sum, wall_s) = {
+            let g = self.inner.lock().unwrap();
+            (
+                g.latencies.clone(),
+                g.samples,
+                g.latency_sum_s,
+                g.batches,
+                g.occupancy_sum,
+                match (g.first_done, g.last_done) {
+                    (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+                    _ => 0.0,
+                },
+            )
+        };
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ServeStats {
+            samples,
+            batches,
+            occupancy_mean: if batches == 0 {
+                0.0
+            } else {
+                occupancy_sum as f64 / batches as f64
+            },
+            latency_p50_s: percentile(&lat, 0.50),
+            latency_p99_s: percentile(&lat, 0.99),
+            latency_mean_s: if samples == 0 {
+                0.0
+            } else {
+                latency_sum_s / samples as f64
+            },
+            // Completion-window throughput; the bench harness also
+            // reports end-to-end wall throughput around the client run.
+            throughput_sps: if wall_s > 0.0 {
+                samples as f64 / wall_s
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+/// `p` in [0, 1] over an ascending-sorted slice (nearest-rank).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * p).ceil() as usize)
+        .saturating_sub(1)
+        .min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// Aggregated serving statistics for one service lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub samples: usize,
+    pub batches: usize,
+    /// Mean real samples per executed micro-batch (> 1 means requests
+    /// actually coalesced).
+    pub occupancy_mean: f64,
+    /// Percentiles over the most recent [`LATENCY_WINDOW`] samples.
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+    /// Lifetime mean completion latency.
+    pub latency_mean_s: f64,
+    /// Samples per second over the completion window.
+    pub throughput_sps: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[3.0], 0.99), 3.0);
+    }
+
+    #[test]
+    fn collector_aggregates() {
+        let c = StatsCollector::new();
+        c.record_batch(4);
+        c.record_batch(2);
+        let t0 = Instant::now() - Duration::from_millis(10);
+        c.record_sample(t0);
+        c.record_sample(t0);
+        let s = c.snapshot();
+        assert_eq!(s.samples, 2);
+        assert_eq!(s.batches, 2);
+        assert!((s.occupancy_mean - 3.0).abs() < 1e-12);
+        assert!(s.latency_p50_s >= 0.010);
+        assert!(s.latency_p99_s >= s.latency_p50_s);
+        assert!(s.latency_mean_s >= 0.010);
+    }
+
+    #[test]
+    fn latency_ring_is_bounded() {
+        let c = StatsCollector::new();
+        let t0 = Instant::now();
+        for _ in 0..(LATENCY_WINDOW + 10) {
+            c.record_sample(t0);
+        }
+        let g = c.inner.lock().unwrap();
+        assert_eq!(g.latencies.len(), LATENCY_WINDOW, "ring must not grow");
+        assert_eq!(g.samples, LATENCY_WINDOW + 10, "lifetime count keeps going");
+        assert_eq!(g.cursor, 10);
+    }
+}

@@ -1,0 +1,161 @@
+//! The execution stage: micro-batches -> per-sample results.
+//!
+//! Each worker owns an engine from the service's
+//! [`crate::runtime::EnginePool`] (per-worker clients stay sound when
+//! `Engine` loses `Sync` under real PJRT; the program cache is shared
+//! so the artifact compiles once).  Per batch, the worker loads the
+//! *current* published
+//! [`crate::runtime::StateSnapshot`] — a mid-flight publish swaps state
+//! between batches without draining the queue — executes the eval
+//! program, slices logits rows, and completes each sample's collector.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::runtime::{
+    row_argmax, row_rank, row_softmax_loss, Engine, SnapshotCell, TensorData,
+    TrainProgram,
+};
+
+use super::batcher::MicroBatch;
+use super::stats::StatsCollector;
+use super::queue::Bounded;
+use super::SampleResult;
+
+fn fail_batch(mb: &MicroBatch, msg: &str) {
+    for r in &mb.routes {
+        r.collector.fail(msg);
+    }
+}
+
+/// Worker thread body: drains the batch queue until it closes.
+///
+/// `live` counts workers still consuming the batch queue.  A worker
+/// that stops early (artifact load failure, or a panic that escaped
+/// the per-batch isolation) simply exits while healthy workers remain
+/// — they keep serving.  Only the **last** consumer out falls back to
+/// a drain-and-fail loop: with nobody popping, the batcher could block
+/// forever in `push` and every pending `Ticket::wait` would hang.
+pub(crate) fn run(
+    engine: Engine,
+    manifest_path: &Path,
+    cell: &SnapshotCell,
+    batch_q: &Bounded<MicroBatch>,
+    stats: &StatsCollector,
+    live: &AtomicUsize,
+) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        serve_loop(&engine, manifest_path, cell, batch_q, stats)
+    }));
+    if live.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // Last consumer out: on a normal shutdown the queue is closed
+        // and drained so this is a no-op; on an abnormal exit it keeps
+        // the pipeline failing fast instead of deadlocking.
+        while let Some(mb) = batch_q.pop() {
+            fail_batch(&mb, "all serve workers stopped");
+        }
+    }
+    let _ = result;
+}
+
+fn serve_loop(
+    engine: &Engine,
+    manifest_path: &Path,
+    cell: &SnapshotCell,
+    batch_q: &Bounded<MicroBatch>,
+    stats: &StatsCollector,
+) {
+    let prog = match TrainProgram::load(engine, manifest_path) {
+        Ok(p) => p,
+        Err(e) => {
+            // Can't serve anything: exit and let the remaining workers
+            // (or the last-consumer drain in `run`) handle the queue.
+            eprintln!("[serve] worker could not load artifact: {e:#}");
+            return;
+        }
+    };
+
+    while let Some(mb) = batch_q.pop() {
+        // Per-batch panic isolation: the batch is only borrowed by the
+        // closure, so if execution panics (e.g. a published snapshot
+        // with mismatched shapes) we still own it and can fail its
+        // collectors — no client may ever hang in Ticket::wait.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            process_batch(&prog, &mb, cell, stats)
+        }));
+        if r.is_err() {
+            fail_batch(&mb, "serve worker panicked executing the batch");
+        }
+    }
+}
+
+fn process_batch(
+    prog: &TrainProgram,
+    mb: &MicroBatch,
+    cell: &SnapshotCell,
+    stats: &StatsCollector,
+) {
+    let classes = prog.manifest.arch.num_classes;
+    let snap = match cell.load() {
+        Some(s) => s,
+        None => {
+            fail_batch(mb, "no state snapshot published yet");
+            return;
+        }
+    };
+    let out = match prog.eval_batch_snapshot(&snap, &mb.x, &mb.y) {
+        Ok(o) => o,
+        Err(e) => {
+            fail_batch(mb, &format!("serve eval failed: {e:#}"));
+            return;
+        }
+    };
+    let logits = match out.logits.as_ref().map(|t| t.as_f32()) {
+        Some(Ok(v)) => v,
+        Some(Err(_)) => {
+            fail_batch(mb, "eval logits are not f32");
+            return;
+        }
+        None => {
+            fail_batch(mb, "eval program emits no per-sample logits");
+            return;
+        }
+    };
+    let labels = match &mb.y.data {
+        TensorData::I32(v) => v,
+        _ => {
+            fail_batch(mb, "labels are not i32");
+            return;
+        }
+    };
+    if logits.len() < mb.routes.len() * classes || labels.len() < mb.routes.len() {
+        fail_batch(mb, "eval outputs shorter than the batch");
+        return;
+    }
+
+    // The batch actually executed: this is where occupancy counts
+    // (failed batches above never reach the coalescing stats).
+    stats.record_batch(mb.routes.len());
+    for (i, route) in mb.routes.iter().enumerate() {
+        let zr = &logits[i * classes..(i + 1) * classes];
+        let label = labels[i];
+        let (correct, loss) = if label >= 0 && (label as usize) < classes {
+            let y = label as usize;
+            (row_rank(zr, y) == 0, row_softmax_loss(zr, y))
+        } else {
+            (false, 0.0)
+        };
+        route.collector.fill(
+            route.slot,
+            SampleResult {
+                logits: zr.to_vec(),
+                label,
+                pred: row_argmax(zr) as i32,
+                correct,
+                loss,
+                snapshot_version: snap.version,
+            },
+        );
+        stats.record_sample(route.t_submit);
+    }
+}

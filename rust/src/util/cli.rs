@@ -57,6 +57,30 @@ impl Args {
         Ok(self.u64_or(name, default as u64)? as usize)
     }
 
+    /// Comma-separated integer list, e.g. `--clients 2,8,32`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => {
+                let parsed: Vec<usize> = v
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(|s| {
+                        s.parse::<usize>().map_err(|_| {
+                            anyhow!("--{name} expects a comma-separated integer list")
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                if parsed.is_empty() {
+                    // `--clients ,` must not silently mean "no levels".
+                    return Err(anyhow!("--{name} got an empty list"));
+                }
+                Ok(parsed)
+            }
+        }
+    }
+
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -99,5 +123,19 @@ mod tests {
         let a = parse("x --n abc");
         assert_eq!(a.f64_or("missing", 1.5).unwrap(), 1.5);
         assert!(a.u64_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("serve --clients 2,8,32 --bad 1,x");
+        assert_eq!(a.usize_list_or("clients", &[1]).unwrap(), vec![2, 8, 32]);
+        assert_eq!(a.usize_list_or("missing", &[4, 16]).unwrap(), vec![4, 16]);
+        assert!(a.usize_list_or("bad", &[1]).is_err());
+        // trailing commas / spaces are tolerated
+        let b = parse("serve --clients=2,");
+        assert_eq!(b.usize_list_or("clients", &[1]).unwrap(), vec![2]);
+        // an all-empty list is an error, not a silent no-op
+        let c = parse("serve --clients=,");
+        assert!(c.usize_list_or("clients", &[1]).is_err());
     }
 }

@@ -37,6 +37,10 @@ impl StepComparison {
 pub struct PrefetchComparison {
     pub steps_per_sec_on: f64,
     pub steps_per_sec_off: f64,
+    /// Channel depth the auto-tuner chose for the prefetch-on run
+    /// (`data::prefetch::auto_depth`, from the measured augment/step
+    /// time ratio).
+    pub chosen_depth: usize,
 }
 
 /// Measure train-step latency through both state paths for one
@@ -95,7 +99,7 @@ pub fn compare_prefetch(
     method: &str,
     iters: u64,
 ) -> Result<PrefetchComparison> {
-    let run = |prefetch: bool| -> Result<f64> {
+    let run = |prefetch: bool| -> Result<(f64, Option<usize>)> {
         let mut cfg = RunCfg::quick(family, method, iters);
         cfg.artifacts_dir = artifacts.to_path_buf();
         cfg.prefetch = prefetch;
@@ -109,11 +113,17 @@ pub fn compare_prefetch(
         };
         let mut trainer = Trainer::new(engine, cfg)?;
         let out = trainer.run(None)?;
-        Ok(out.metrics.steps_run as f64 / out.metrics.wall_seconds.max(1e-9))
+        Ok((
+            out.metrics.steps_run as f64 / out.metrics.wall_seconds.max(1e-9),
+            out.metrics.prefetch_depth,
+        ))
     };
+    let (on, depth) = run(true)?;
+    let (off, _) = run(false)?;
     Ok(PrefetchComparison {
-        steps_per_sec_on: run(true)?,
-        steps_per_sec_off: run(false)?,
+        steps_per_sec_on: on,
+        steps_per_sec_off: off,
+        chosen_depth: depth.unwrap_or(crate::data::prefetch::DEFAULT_DEPTH),
     })
 }
 
@@ -156,6 +166,10 @@ pub fn bench_report(
                 ("prefetch_off", Json::num(prefetch.steps_per_sec_off)),
             ]),
         ),
+        (
+            "prefetch_depth",
+            Json::num(prefetch.chosen_depth as f64),
+        ),
     ])
 }
 
@@ -182,6 +196,10 @@ mod tests {
         assert!(cmp.host_mean_s > 0.0 && cmp.resident_mean_s > 0.0);
         let pf = compare_prefetch(&engine, tmp.path(), "refmlp-tiny", "sgd32", 6).unwrap();
         assert!(pf.steps_per_sec_on > 0.0 && pf.steps_per_sec_off > 0.0);
+        assert!(
+            (crate::data::prefetch::DEFAULT_DEPTH..=crate::data::prefetch::MAX_DEPTH)
+                .contains(&pf.chosen_depth)
+        );
         let report = bench_report("unit-test", "refmlp-tiny", &[cmp], &pf);
         let text = report.to_string();
         let back = crate::util::json::parse(&text).unwrap();
@@ -190,5 +208,6 @@ mod tests {
             .at(&["step_latency", "sgd32", "speedup"])
             .as_f64()
             .is_some());
+        assert!(back.at(&["prefetch_depth"]).as_f64().is_some());
     }
 }

@@ -1,0 +1,338 @@
+//! Serve determinism and tail correctness (reference backend, runs
+//! everywhere).
+//!
+//! The contract under test: N concurrent clients submitting a fixed
+//! sample set through the micro-batching service receive **bitwise**
+//! the per-sample logits/losses a serial `evaluate_full`-style pass
+//! computes over the same published state — regardless of how the
+//! batcher happened to coalesce requests (including a final partial
+//! micro-batch padded with label -1), how many workers raced, or
+//! whether a new checkpoint was published mid-flight.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use e2train::config::{DataCfg, RunCfg};
+use e2train::coordinator::Trainer;
+use e2train::data::{synthetic, Dataset};
+use e2train::runtime::{
+    write_reference_family, Engine, HostTensor, ModelState, RefFamilySpec,
+    SnapshotCell, StateSnapshot, TrainProgram,
+};
+use e2train::serve::{SampleResult, ServeCfg, ServeService};
+use e2train::util::tmp::TempDir;
+
+const FAM: &str = "refmlp-tiny";
+
+/// Per-sample (logits, loss) ground truth, computed serially in dataset
+/// order through the same padded batching `evaluate_full` uses.
+fn serial_rows(
+    prog: &TrainProgram,
+    snap: &StateSnapshot,
+    data: &Dataset,
+) -> Vec<Vec<f32>> {
+    let eb = prog.eval_batch();
+    let hw = data.hw;
+    let stride = hw * hw * 3;
+    let classes = prog.manifest.arch.num_classes;
+    let mut rows = Vec::with_capacity(data.n);
+    let nb = (data.n + eb - 1) / eb;
+    for b in 0..nb {
+        let lo = b * eb;
+        let take = eb.min(data.n - lo);
+        let mut px = vec![0f32; eb * stride];
+        px[..take * stride]
+            .copy_from_slice(&data.images[lo * stride..(lo + take) * stride]);
+        let mut py = vec![-1i32; eb];
+        py[..take].copy_from_slice(&data.labels[lo..lo + take]);
+        let out = prog
+            .eval_batch_snapshot(
+                snap,
+                &HostTensor::f32(vec![eb, hw, hw, 3], px),
+                &HostTensor::i32(vec![eb], py),
+            )
+            .unwrap();
+        let logits = out.logits.expect("reference eval emits logits");
+        let lv = logits.as_f32().unwrap();
+        for i in 0..take {
+            rows.push(lv[i * classes..(i + 1) * classes].to_vec());
+        }
+    }
+    rows
+}
+
+/// Drive `clients` concurrent client threads over a disjoint partition
+/// of `data` (mixed request sizes 1..=3) and return results keyed by
+/// global sample index.
+fn concurrent_serve(
+    service: &ServeService,
+    data: &Dataset,
+    clients: usize,
+) -> Vec<(usize, SampleResult)> {
+    let stride = data.hw * data.hw * 3;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let client = service.client();
+            handles.push(scope.spawn(move || {
+                let mine: Vec<usize> =
+                    (0..data.n).filter(|i| i % clients == c).collect();
+                let mut got: Vec<(usize, SampleResult)> = Vec::new();
+                let mut cursor = 0usize;
+                let mut req_no = 0usize;
+                while cursor < mine.len() {
+                    let k = (1 + (c + req_no) % 3).min(mine.len() - cursor);
+                    let idxs = &mine[cursor..cursor + k];
+                    let mut px = Vec::with_capacity(k * stride);
+                    let mut py = Vec::with_capacity(k);
+                    for &idx in idxs {
+                        px.extend_from_slice(
+                            &data.images[idx * stride..(idx + 1) * stride],
+                        );
+                        py.push(data.labels[idx]);
+                    }
+                    let results = client.submit(&px, &py).unwrap().wait().unwrap();
+                    assert_eq!(results.len(), k);
+                    for (j, r) in results.into_iter().enumerate() {
+                        got.push((idxs[j], r));
+                    }
+                    cursor += k;
+                    req_no += 1;
+                }
+                got
+            }));
+        }
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        all
+    })
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn concurrent_clients_match_serial_evaluate_full() {
+    let tmp = TempDir::new().unwrap();
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let manifest = fam.join("sgd32.json");
+    let prog = TrainProgram::load(&engine, &manifest).unwrap();
+    let eb = prog.eval_batch();
+    // 2 full micro-batches + a 7-sample tail.
+    let n = 2 * eb + 7;
+    let data = synthetic::generate(10, n, prog.manifest.arch.image_size, 3);
+
+    let state = ModelState::init(&prog.manifest, 5);
+    let cell = Arc::new(SnapshotCell::new());
+    cell.publish(
+        StateSnapshot::from_model_state(prog.backend(), &state).unwrap(),
+    );
+    let snap = cell.load().unwrap();
+    let serial = serial_rows(&prog, &snap, &data);
+
+    let service = ServeService::start(
+        &engine,
+        &manifest,
+        cell.clone(),
+        ServeCfg {
+            workers: 3,
+            queue_cap: 16,
+            max_delay: Duration::from_millis(1),
+            micro_batch: None,
+        },
+    )
+    .unwrap();
+    let results = concurrent_serve(&service, &data, 4);
+    let stats = service.shutdown();
+
+    assert_eq!(results.len(), n, "every sample answered exactly once");
+    assert_eq!(stats.samples, n);
+    assert!(stats.batches > 0);
+
+    let classes = prog.manifest.arch.num_classes;
+    let mut serve_correct = 0u64;
+    for (idx, r) in &results {
+        let expect = &serial[*idx];
+        assert_eq!(
+            bits(&r.logits),
+            bits(expect),
+            "sample {idx}: logits differ from the serial pass"
+        );
+        assert_eq!(r.label, data.labels[*idx]);
+        assert_eq!(r.snapshot_version, 1);
+        // pred/correct/loss must be the row-rule values of those logits.
+        let y = r.label as usize;
+        assert!(y < classes);
+        assert_eq!(
+            r.pred as usize,
+            e2train::runtime::row_argmax(expect),
+            "sample {idx}"
+        );
+        assert_eq!(r.correct, e2train::runtime::row_rank(expect, y) == 0);
+        assert_eq!(
+            r.loss.to_bits(),
+            e2train::runtime::row_softmax_loss(expect, y).to_bits(),
+            "sample {idx}: loss differs bitwise"
+        );
+        if r.correct {
+            serve_correct += 1;
+        }
+    }
+
+    // Aggregate accuracy must equal a serial evaluate_full exactly
+    // (both are integer correct-counts over the same n).
+    let mut cfg = RunCfg::quick(FAM, "sgd32", 4);
+    cfg.artifacts_dir = tmp.path().to_path_buf();
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 64, n_test: 16, seed: 0 };
+    let mut trainer = Trainer::new(&engine, cfg).unwrap();
+    trainer.set_data(synthetic::generate(10, 64, 8, 0), data.clone());
+    let (acc, _, loss) = trainer.evaluate_full(&state).unwrap();
+    assert_eq!(serve_correct as f64 / n as f64, acc, "accuracy drifted");
+    // Loss sums in different (batch-composition) orders: equal to float
+    // tolerance, not bitwise.
+    let serve_loss: f64 =
+        results.iter().map(|(_, r)| r.loss as f64).sum::<f64>() / n as f64;
+    assert!(
+        (serve_loss - loss).abs() < 1e-4,
+        "serve mean loss {serve_loss} vs serial {loss}"
+    );
+}
+
+#[test]
+fn midflight_snapshot_swap_serves_new_checkpoint_without_draining() {
+    let tmp = TempDir::new().unwrap();
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let manifest = fam.join("sgd32.json");
+    let prog = TrainProgram::load(&engine, &manifest).unwrap();
+    let data = synthetic::generate(10, prog.eval_batch() + 3, 8, 9);
+
+    let state_a = ModelState::init(&prog.manifest, 1);
+    let state_b = ModelState::init(&prog.manifest, 2);
+    let cell = Arc::new(SnapshotCell::new());
+    cell.publish(
+        StateSnapshot::from_model_state(prog.backend(), &state_a).unwrap(),
+    );
+    let serial_a = serial_rows(&prog, &cell.load().unwrap(), &data);
+
+    let service = ServeService::start(
+        &engine,
+        &manifest,
+        cell.clone(),
+        ServeCfg { workers: 2, ..Default::default() },
+    )
+    .unwrap();
+
+    let got_a = concurrent_serve(&service, &data, 2);
+    for (idx, r) in &got_a {
+        assert_eq!(r.snapshot_version, 1);
+        assert_eq!(bits(&r.logits), bits(&serial_a[*idx]));
+    }
+
+    // Publish checkpoint B mid-flight: no drain, next requests see v2.
+    cell.publish(
+        StateSnapshot::from_model_state(prog.backend(), &state_b).unwrap(),
+    );
+    let serial_b = serial_rows(&prog, &cell.load().unwrap(), &data);
+    let got_b = concurrent_serve(&service, &data, 2);
+    for (idx, r) in &got_b {
+        assert_eq!(r.snapshot_version, 2);
+        assert_eq!(
+            bits(&r.logits),
+            bits(&serial_b[*idx]),
+            "sample {idx} not served from the swapped checkpoint"
+        );
+    }
+    service.shutdown();
+}
+
+/// The coordinator-side hookup: a training run attached via
+/// `set_publisher` publishes checkpoints the service answers from, and
+/// the final published state is exactly the run's outcome state.
+#[test]
+fn trainer_publishes_checkpoints_into_the_service() {
+    let tmp = TempDir::new().unwrap();
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let manifest = fam.join("e2train.json");
+
+    let cell = Arc::new(SnapshotCell::new());
+    let mut cfg = RunCfg::quick(FAM, "e2train", 20);
+    cfg.artifacts_dir = tmp.path().to_path_buf();
+    cfg.smd.enabled = false; // every SWA window executes -> publishes
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 96, n_test: 32, seed: 0 };
+    let mut trainer = Trainer::new(&engine, cfg).unwrap();
+    trainer.set_publisher(cell.clone());
+    let outcome = trainer.run(None).unwrap();
+
+    // e2train runs SWA: at least one mid-run publish + the final one.
+    assert!(cell.version() >= 2, "expected SWA + final publishes");
+
+    let prog = TrainProgram::load(&engine, &manifest).unwrap();
+    let data = synthetic::generate(10, prog.eval_batch() + 5, 8, 4);
+    let serial =
+        serial_rows(&prog, &cell.load().unwrap(), &data);
+    // The final published snapshot is the outcome state, bit for bit.
+    let from_outcome = serial_rows(
+        &prog,
+        &StateSnapshot::from_model_state(prog.backend(), &outcome.state).unwrap(),
+        &data,
+    );
+    for (a, b) in serial.iter().zip(from_outcome.iter()) {
+        assert_eq!(bits(a), bits(b), "published state != outcome state");
+    }
+
+    let service = ServeService::start(
+        &engine,
+        &manifest,
+        cell.clone(),
+        ServeCfg::default(),
+    )
+    .unwrap();
+    let got = concurrent_serve(&service, &data, 3);
+    let latest = cell.version();
+    for (idx, r) in &got {
+        assert_eq!(r.snapshot_version, latest);
+        assert_eq!(bits(&r.logits), bits(&serial[*idx]));
+    }
+    service.shutdown();
+}
+
+/// Misuse is an error, not a hang: serving before any publish fails the
+/// ticket, and submitting after shutdown fails the submit.
+#[test]
+fn unpublished_state_and_closed_service_fail_fast() {
+    let tmp = TempDir::new().unwrap();
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let manifest = fam.join("sgd32.json");
+    let cell = Arc::new(SnapshotCell::new()); // nothing published
+    let service = ServeService::start(
+        &engine,
+        &manifest,
+        cell,
+        ServeCfg::default(),
+    )
+    .unwrap();
+    let client = service.client();
+    let stride = client.sample_stride();
+    let ticket = client.submit(&vec![0.0; stride], &[1]).unwrap();
+    assert!(
+        ticket.wait().is_err(),
+        "no snapshot published: the ticket must fail, not hang"
+    );
+    // Shape validation happens at submit time.
+    assert!(client.submit(&vec![0.0; stride - 1], &[1]).is_err());
+    assert!(client.submit(&[], &[]).is_err());
+    assert!(client.submit(&vec![0.0; stride], &[10]).is_err());
+
+    service.shutdown();
+    assert!(
+        client.submit(&vec![0.0; stride], &[1]).is_err(),
+        "submits after shutdown must fail"
+    );
+}

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Launch the micro-batching inference service bench and record
+# BENCH_serve.json (schema bench_serve/v1) at the repo root.
+#
+# Usage: scripts/serve_bench.sh [extra e2train serve flags...]
+# e.g.:  scripts/serve_bench.sh --clients 2,8,32 --workers 4
+#
+# Release profile — serve latency percentiles are meaningless in debug.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+exec cargo run --release --bin e2train -- serve \
+  --clients 2,8 \
+  --requests 64 \
+  --req-size 2 \
+  --workers 2 \
+  --delay-ms 2 \
+  --out BENCH_serve.json \
+  "$@"
