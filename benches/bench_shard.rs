@@ -1,0 +1,37 @@
+//! Sharded-training scaling bench (in-repo harness; criterion is
+//! unavailable offline): steps/sec through the data-parallel sharded
+//! path at shard counts {1, 2, 4} on the bench-scale reference family,
+//! plus the single-device resident baseline.  Writes `BENCH_shard.json`
+//! at the repo root (schema `bench_shard/v1`, see PERF.md) — the
+//! canonical release-profile record; the tier-1 smoke test writes debug
+//! numbers and never overwrites a release-sourced file.
+
+use std::path::PathBuf;
+
+use e2train::experiments::{run_shard_bench, ShardBenchCfg};
+use e2train::runtime::{write_reference_family, Engine, RefFamilySpec};
+use e2train::util::perf::write_bench_report;
+use e2train::util::tmp::TempDir;
+
+fn main() {
+    let tmp = TempDir::new().expect("temp dir");
+    let spec = RefFamilySpec::bench();
+    let fam = write_reference_family(tmp.path(), &spec).expect("reference family");
+    let engine = Engine::cpu().expect("engine");
+
+    let cfg = ShardBenchCfg {
+        shard_counts: vec![1, 2, 4],
+        warmup_steps: 5,
+        steps: 60,
+        seed: 0,
+        source: "bench_shard (release profile)".into(),
+    };
+    println!("== sharded training scaling ({}, reference backend) ==", spec.family);
+    let report =
+        run_shard_bench(&engine, &fam.join("sgd32.json"), &cfg).expect("shard bench");
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_shard.json");
+    write_bench_report(&path, &report).expect("writing BENCH_shard.json");
+}

@@ -81,6 +81,13 @@ pub struct RunCfg {
     /// Assemble/augment batches on a background thread (double-buffered).
     /// `false` samples synchronously inside the step loop.
     pub prefetch: bool,
+    /// Data-parallel shard count.  `0` (the default) runs the
+    /// single-executor resident/host path; `N >= 1` splits every batch
+    /// across N engines with a deterministic host-side all-reduce
+    /// (`runtime::shard` — reference-backend families only; `N = 1`
+    /// exercises the sharded machinery on one engine).  When set, it
+    /// supersedes `resident` for the step loop.
+    pub shards: usize,
     pub artifacts_dir: PathBuf,
 }
 
@@ -107,6 +114,7 @@ impl RunCfg {
             beta: 0.05,
             resident: true,
             prefetch: true,
+            shards: 0,
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -169,6 +177,7 @@ impl RunCfg {
             ("beta", Json::num(self.beta)),
             ("resident", Json::Bool(self.resident)),
             ("prefetch", Json::Bool(self.prefetch)),
+            ("shards", Json::num(self.shards as f64)),
             (
                 "artifacts_dir",
                 Json::str(self.artifacts_dir.to_string_lossy()),
@@ -226,6 +235,7 @@ impl RunCfg {
         cfg.beta = v.get("beta").and_then(Json::as_f64).unwrap_or(0.05);
         cfg.resident = v.get("resident").and_then(Json::as_bool).unwrap_or(true);
         cfg.prefetch = v.get("prefetch").and_then(Json::as_bool).unwrap_or(true);
+        cfg.shards = v.get("shards").and_then(Json::as_usize).unwrap_or(0);
         if let Some(d) = v.get("artifacts_dir").and_then(Json::as_str) {
             cfg.artifacts_dir = PathBuf::from(d);
         }
@@ -257,6 +267,7 @@ mod tests {
         cfg.eval_every = 10;
         cfg.resident = false;
         cfg.prefetch = false;
+        cfg.shards = 2;
         let dir = TempDir::new().unwrap();
         let p = dir.path().join("run.json");
         cfg.save(&p).unwrap();
@@ -269,6 +280,7 @@ mod tests {
         assert_eq!(back.eval_every, 10);
         assert_eq!(back.lr, cfg.lr);
         assert!(!back.resident && !back.prefetch);
+        assert_eq!(back.shards, 2);
     }
 
     #[test]

@@ -16,6 +16,15 @@
 //! `cfg.resident = false` / `cfg.prefetch = false` select the legacy
 //! synchronous host path; for fixed seeds both paths produce
 //! bitwise-identical metrics (tests/resident_equivalence.rs).
+//!
+//! `cfg.shards >= 1` switches the step loop to the data-parallel
+//! sharded path (`runtime::shard::ShardedTrainer`): every batch splits
+//! across N engines and recombines through a deterministic host-side
+//! all-reduce, bitwise identical to the single-device resident path for
+//! the same seed (tests/shard_equivalence.rs).  SMD-dropped iterations
+//! consume the whole batch — all shard slices — exactly like the
+//! single-device loop; SWA snapshots and serve publishing read the
+//! sharded master state without any device round-trip.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -29,8 +38,8 @@ use crate::energy::{EnergyLedger, EnergyModel};
 use crate::metrics::{Mean, RunMetrics};
 use crate::optim::SwaState;
 use crate::runtime::{
-    DeviceState, Engine, EvalMetrics, HostTensor, ModelState, SnapshotCell,
-    StateSnapshot, StepHyper, TrainProgram,
+    DeviceState, Engine, EvalMetrics, HostTensor, ModelState, ShardedTrainer,
+    SnapshotCell, StateSnapshot, StepHyper, TrainProgram,
 };
 
 use super::sd::SdScheduler;
@@ -50,6 +59,9 @@ enum LoopState {
     Host(ModelState),
     /// Resident path: state stays in backend-native buffers.
     Device(DeviceState),
+    /// Data-parallel sharded path: per-shard engines + resident
+    /// replicas, host-side master state (`runtime::shard`).
+    Sharded(Box<ShardedTrainer>),
 }
 
 impl LoopState {
@@ -58,6 +70,7 @@ impl LoopState {
         match self {
             LoopState::Host(s) => Ok(s.clone()),
             LoopState::Device(d) => d.sync_to_host(),
+            LoopState::Sharded(st) => Ok(st.state().clone()),
         }
     }
 
@@ -66,6 +79,7 @@ impl LoopState {
         match self {
             LoopState::Host(s) => Ok(s),
             LoopState::Device(d) => d.into_host(),
+            LoopState::Sharded(st) => Ok(st.into_state()),
         }
     }
 }
@@ -73,7 +87,10 @@ impl LoopState {
 /// The training batch stream: synchronous sampling or the prefetch
 /// worker.  Both produce the identical deterministic stream for a seed.
 enum BatchSource {
-    Sync(Sampler),
+    Sync {
+        sampler: Sampler,
+        data: Arc<Dataset>,
+    },
     Prefetch {
         /// The probe batches the depth auto-tuner assembled (and timed)
         /// synchronously — the head of the stream, replayed before the
@@ -85,14 +102,29 @@ enum BatchSource {
 }
 
 impl BatchSource {
-    fn next_batch(&mut self, data: &Dataset) -> (HostTensor, HostTensor) {
+    fn next_batch(&mut self) -> Result<(HostTensor, HostTensor)> {
         match self {
-            BatchSource::Sync(s) => s.next_batch(data),
-            BatchSource::Prefetch { staged, pre } => {
-                staged.pop_front().unwrap_or_else(|| pre.next_batch())
-            }
+            BatchSource::Sync { sampler, data } => Ok(sampler.next_batch(data)),
+            BatchSource::Prefetch { staged, pre } => match staged.pop_front() {
+                Some(b) => Ok(b),
+                // Surfaces a deferred CIFAR decode failure as a clean
+                // run error instead of a worker-died panic.
+                None => pre.next_batch(),
+            },
         }
     }
+}
+
+/// Where the training set lives before the step loop starts.
+enum TrainData {
+    /// Fully decoded, in memory (synthetic data, an eager CIFAR load,
+    /// or a `set_data` override).
+    Ready(Arc<Dataset>),
+    /// CIFAR binaries validated but not decoded: the prefetch worker
+    /// streams + decodes them itself, so the main thread never
+    /// materializes the training set (ROADMAP: CIFAR-bin ingestion on
+    /// the prefetch worker).
+    DeferredCifar(cifar::CifarFiles),
 }
 
 pub struct Trainer<'e> {
@@ -100,7 +132,7 @@ pub struct Trainer<'e> {
     pub cfg: RunCfg,
     pub program: TrainProgram,
     pub energy: EnergyModel,
-    train_set: Arc<Dataset>,
+    train_data: TrainData,
     test_set: Dataset,
     /// Checkpoint publish point for an attached serve pool: when set,
     /// the run publishes each refreshed SWA average and the final state
@@ -112,13 +144,13 @@ impl<'e> Trainer<'e> {
     pub fn new(engine: &'e Engine, cfg: RunCfg) -> Result<Self> {
         let program = TrainProgram::load(engine, &cfg.manifest_path())?;
         let energy = EnergyModel::from_manifest(&program.manifest);
-        let (train_set, test_set) = Self::load_data(&cfg, &program)?;
+        let (train_data, test_set) = Self::load_data(&cfg, &program)?;
         Ok(Self {
             engine,
             cfg,
             program,
             energy,
-            train_set: Arc::new(train_set),
+            train_data,
             test_set,
             publish: None,
         })
@@ -130,7 +162,7 @@ impl<'e> Trainer<'e> {
         self.publish = Some(cell);
     }
 
-    fn load_data(cfg: &RunCfg, program: &TrainProgram) -> Result<(Dataset, Dataset)> {
+    fn load_data(cfg: &RunCfg, program: &TrainProgram) -> Result<(TrainData, Dataset)> {
         let hw = program.manifest.arch.image_size;
         let classes = program.manifest.arch.num_classes;
         match &cfg.data {
@@ -142,28 +174,60 @@ impl<'e> Trainer<'e> {
                         classes
                     ));
                 }
-                Ok(synthetic::generate_split(
-                    classes, *n_train, *n_test, hw, *seed,
-                ))
+                let (train, test) =
+                    synthetic::generate_split(classes, *n_train, *n_test, hw, *seed);
+                Ok((TrainData::Ready(Arc::new(train)), test))
             }
             DataCfg::CifarBin { dir } => {
                 if hw != 32 || classes != 10 {
                     return Err(anyhow!("CIFAR binaries need a 32px/10-class artifact"));
                 }
-                Ok((cifar::load(dir, true)?, cifar::load(dir, false)?))
+                // The (small) test set loads eagerly — eval runs on this
+                // thread.  The train set is only *validated* here when
+                // prefetching: the worker streams + decodes it, so run
+                // start never blocks on the full decode.
+                let test = cifar::load(dir, false)?;
+                let train = if cfg.prefetch {
+                    TrainData::DeferredCifar(cifar::open(dir, true)?)
+                } else {
+                    TrainData::Ready(Arc::new(cifar::load(dir, true)?))
+                };
+                Ok((train, test))
             }
         }
     }
 
     /// Replace the datasets (fine-tuning experiment, Sec. 4.5).
     pub fn set_data(&mut self, train: Dataset, test: Dataset) {
-        self.train_set = Arc::new(train);
+        self.train_data = TrainData::Ready(Arc::new(train));
         self.test_set = test;
+    }
+
+    /// The decoded training set, materializing a deferred CIFAR source
+    /// on the calling thread (synchronous-sampling path only; with
+    /// prefetch on, the worker decodes instead).
+    fn train_set(&mut self) -> Result<Arc<Dataset>> {
+        if let TrainData::DeferredCifar(files) = &self.train_data {
+            let data = Arc::new(files.decode()?);
+            self.train_data = TrainData::Ready(data);
+        }
+        match &self.train_data {
+            TrainData::Ready(d) => Ok(d.clone()),
+            TrainData::DeferredCifar(_) => unreachable!("materialized above"),
+        }
     }
 
     /// Run the configured number of iterations starting from a fresh
     /// init (or from `from_state` when resuming / fine-tuning).
     pub fn run(&mut self, from_state: Option<ModelState>) -> Result<RunOutcome> {
+        // The synchronous-sampling path needs the decoded train set on
+        // this thread; materialize a deferred CIFAR source up front.
+        // (With prefetch on, the worker decodes it instead.)
+        let sync_data = if self.cfg.prefetch {
+            None
+        } else {
+            Some(self.train_set()?)
+        };
         let m = &self.program.manifest;
         let init_state = match from_state {
             // Name-based migration handles method changes (e.g. resuming
@@ -171,7 +235,14 @@ impl<'e> Trainer<'e> {
             Some(s) => ModelState::init_from(m, self.cfg.seed, &s),
             None => ModelState::init(m, self.cfg.seed),
         };
-        let mut loop_state = if self.cfg.resident {
+        let mut loop_state = if self.cfg.shards >= 1 {
+            LoopState::Sharded(Box::new(ShardedTrainer::new(
+                self.engine,
+                &self.cfg.manifest_path(),
+                self.cfg.shards,
+                init_state,
+            )?))
+        } else if self.cfg.resident {
             LoopState::Device(self.program.upload_state(init_state)?)
         } else {
             LoopState::Host(init_state)
@@ -185,45 +256,71 @@ impl<'e> Trainer<'e> {
         // belongs on the wall clock even though they were built before
         // it starts — keeps the prefetch-on/off comparison fair.
         let mut wall_offset_s = 0.0;
-        let mut source = if self.cfg.prefetch {
-            // Depth auto-tuning: assemble (and time) the first batches
-            // of the real stream synchronously, time one throwaway step
-            // on a cloned state, and size the channel to the measured
-            // augment/step ratio.  The probe batches are replayed to
-            // the loop and the sampler hands over mid-stream, so the
-            // batch stream is bit-identical to the synchronous path.
-            const PROBE_BATCHES: usize = 2;
-            let mut sampler = Sampler::new(
-                self.train_set.n,
-                self.program.batch(),
-                AugmentCfg::default(),
-                sampler_seed,
-            );
-            let t0 = Instant::now();
-            let staged: VecDeque<(HostTensor, HostTensor)> = (0..PROBE_BATCHES)
-                .map(|_| sampler.next_batch(&self.train_set))
-                .collect();
-            wall_offset_s = t0.elapsed().as_secs_f64();
-            let augment_mean = wall_offset_s / PROBE_BATCHES as f64;
-            let step_mean = self.probe_step_time(
-                &loop_state,
-                staged.front().expect("probe batches"),
-                needs_mask,
-                num_gated,
-            )?;
-            let depth = prefetch::auto_depth(augment_mean, step_mean);
-            prefetch_depth = Some(depth);
-            BatchSource::Prefetch {
-                staged,
-                pre: Prefetcher::spawn_from(sampler, self.train_set.clone(), depth),
+        let mut source = match (&self.train_data, self.cfg.prefetch) {
+            (TrainData::DeferredCifar(files), true) => {
+                // Stream + decode the CIFAR binaries on the worker.  The
+                // depth auto-tuner needs decoded probe batches, so
+                // deferred ingestion keeps the classic double buffer;
+                // the batch stream itself is bit-identical (the worker
+                // builds the same sampler seed over the same records).
+                let depth = prefetch::DEFAULT_DEPTH;
+                prefetch_depth = Some(depth);
+                let files = files.clone();
+                BatchSource::Prefetch {
+                    staged: VecDeque::new(),
+                    pre: Prefetcher::spawn_deferred(
+                        move || files.decode(),
+                        self.program.batch(),
+                        AugmentCfg::default(),
+                        sampler_seed,
+                        depth,
+                    ),
+                }
             }
-        } else {
-            BatchSource::Sync(Sampler::new(
-                self.train_set.n,
-                self.program.batch(),
-                AugmentCfg::default(),
-                sampler_seed,
-            ))
+            (TrainData::Ready(data), true) => {
+                // Depth auto-tuning: assemble (and time) the first batches
+                // of the real stream synchronously, time one throwaway step
+                // on a cloned state, and size the channel to the measured
+                // augment/step ratio.  The probe batches are replayed to
+                // the loop and the sampler hands over mid-stream, so the
+                // batch stream is bit-identical to the synchronous path.
+                const PROBE_BATCHES: usize = 2;
+                let data = data.clone();
+                let mut sampler = Sampler::new(
+                    data.n,
+                    self.program.batch(),
+                    AugmentCfg::default(),
+                    sampler_seed,
+                );
+                let t0 = Instant::now();
+                let staged: VecDeque<(HostTensor, HostTensor)> = (0..PROBE_BATCHES)
+                    .map(|_| sampler.next_batch(&data))
+                    .collect();
+                wall_offset_s = t0.elapsed().as_secs_f64();
+                let augment_mean = wall_offset_s / PROBE_BATCHES as f64;
+                let step_mean = self.probe_step_time(
+                    &mut loop_state,
+                    staged.front().expect("probe batches"),
+                    needs_mask,
+                    num_gated,
+                )?;
+                let depth = prefetch::auto_depth(augment_mean, step_mean);
+                prefetch_depth = Some(depth);
+                BatchSource::Prefetch {
+                    staged,
+                    pre: Prefetcher::spawn_from(sampler, data, depth),
+                }
+            }
+            (_, false) => {
+                let data = sync_data.expect("materialized above");
+                let sampler = Sampler::new(
+                    data.n,
+                    self.program.batch(),
+                    AugmentCfg::default(),
+                    sampler_seed,
+                );
+                BatchSource::Sync { sampler, data }
+            }
         };
         let mut smd =
             SmdScheduler::new(self.cfg.smd.enabled, self.cfg.smd.p, self.cfg.seed ^ 0x50d);
@@ -250,12 +347,14 @@ impl<'e> Trainer<'e> {
                 // SMD: the batch is consumed (sampling with limited
                 // replacement, Sec. 3.1) but never executed or charged.
                 // With prefetch on, the staged batch is simply dropped —
-                // no stall.
-                let _ = source.next_batch(&self.train_set);
+                // no stall.  A dropped iteration consumes the *whole*
+                // batch, all shard slices included — slicing happens
+                // inside the sharded step, downstream of this stream.
+                let _ = source.next_batch()?;
                 ledger.skip();
                 continue;
             }
-            let (x, y) = source.next_batch(&self.train_set);
+            let (x, y) = source.next_batch()?;
             let mask = if needs_mask { Some(sd.sample()) } else { None };
             let hp = StepHyper {
                 lr,
@@ -269,6 +368,7 @@ impl<'e> Trainer<'e> {
                 LoopState::Device(ds) => {
                     self.program.step_device(ds, &x, &y, hp, mask.as_deref())?
                 }
+                LoopState::Sharded(st) => st.step(&x, &y, hp)?,
             };
 
             // Energy: SD masks are per-batch gate fractions too.
@@ -362,13 +462,15 @@ impl<'e> Trainer<'e> {
         Ok(RunOutcome { metrics, state: final_state, ledger })
     }
 
-    /// Time one train step on a **cloned** state — the depth auto-tuner's
-    /// denominator.  The clone guarantees the probe is invisible: the
-    /// real state, RNG streams and metrics are untouched, so prefetch
-    /// on/off stay bitwise equivalent.
+    /// Time one train step without perturbing the run — the depth
+    /// auto-tuner's denominator.  Host/resident paths step a **cloned**
+    /// state; the sharded path steps for real and restores its master
+    /// state + replicas afterwards.  Either way the probe is invisible:
+    /// the real state, RNG streams and metrics are untouched, so
+    /// prefetch on/off stay bitwise equivalent.
     fn probe_step_time(
         &self,
-        ls: &LoopState,
+        ls: &mut LoopState,
         batch: &(HostTensor, HostTensor),
         needs_mask: bool,
         num_gated: usize,
@@ -398,6 +500,7 @@ impl<'e> Trainer<'e> {
                     .step_device(&mut probe, x, y, hp, mask.as_deref())?;
                 t0.elapsed().as_secs_f64()
             }
+            LoopState::Sharded(st) => st.probe_step(x, y, hp)?,
         })
     }
 
@@ -405,6 +508,8 @@ impl<'e> Trainer<'e> {
         match ls {
             LoopState::Host(s) => self.evaluate_full(s),
             LoopState::Device(d) => self.evaluate_full_device(d),
+            // Sharded master state lives host-side already.
+            LoopState::Sharded(st) => self.evaluate_full(st.state()),
         }
     }
 

@@ -4,10 +4,21 @@
 //! workspace (the testbed is offline, so the synthetic generator is the
 //! default); each record is 1 label byte + 3072 CHW bytes.  Pixels are
 //! normalized with the CIFAR channel statistics as in [60].
+//!
+//! Ingestion is **streaming**: [`open`] validates the files and counts
+//! records from metadata alone (cheap — no decode), and
+//! [`CifarFiles::decode`] reads record-at-a-time through a `BufReader`,
+//! so raw file bytes never sit fully in memory next to the decoded f32
+//! dataset.  The trainer defers `decode` to the prefetch worker when
+//! prefetching is on, so the main thread never materializes the training
+//! set (`coordinator::trainer`); the decoded floats are byte-for-byte
+//! what an eager whole-file load produced, keeping the batch stream
+//! bitwise identical.
 
-use std::path::Path;
+use std::io::Read;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::Dataset;
 
@@ -15,38 +26,87 @@ const REC: usize = 1 + 3072;
 const MEAN: [f32; 3] = [0.4914, 0.4822, 0.4465];
 const STD: [f32; 3] = [0.2470, 0.2435, 0.2616];
 
-/// Load all `data_batch_*.bin` (train) or `test_batch.bin` (test) records.
-pub fn load(dir: &Path, train: bool) -> Result<Dataset> {
-    let files: Vec<std::path::PathBuf> = if train {
+/// Validated handle to a set of CIFAR binaries: paths + total record
+/// count, decode deferred.  Cloneable so a trainer can hand one to the
+/// prefetch worker per run.
+#[derive(Debug, Clone)]
+pub struct CifarFiles {
+    files: Vec<PathBuf>,
+    /// Total records across all files (from file sizes).
+    pub n: usize,
+}
+
+/// Open the `data_batch_*.bin` (train) or `test_batch.bin` (test) set:
+/// existence + size validation and record counting only — no decode.
+pub fn open(dir: &Path, train: bool) -> Result<CifarFiles> {
+    let files: Vec<PathBuf> = if train {
         (1..=5).map(|i| dir.join(format!("data_batch_{i}.bin"))).collect()
     } else {
         vec![dir.join("test_batch.bin")]
     };
-    let mut images = Vec::new();
-    let mut labels = Vec::new();
-    for f in files {
-        if !f.exists() {
-            bail!("missing CIFAR file {}", f.display());
+    let mut n = 0;
+    for f in &files {
+        let meta = std::fs::metadata(f)
+            .with_context(|| format!("missing CIFAR file {}", f.display()))?;
+        let len = meta.len() as usize;
+        if len % REC != 0 {
+            bail!("{}: size {} not a multiple of {}", f.display(), len, REC);
         }
-        let bytes = std::fs::read(&f)?;
-        if bytes.len() % REC != 0 {
-            bail!("{}: size {} not a multiple of {}", f.display(), bytes.len(), REC);
+        n += len / REC;
+    }
+    Ok(CifarFiles { files, n })
+}
+
+impl CifarFiles {
+    /// Stream-decode every record into a [`Dataset`].  Reads through a
+    /// bounded `BufReader` one record at a time (the old loader slurped
+    /// each whole file first), producing bit-identical floats in the
+    /// identical order.
+    pub fn decode(&self) -> Result<Dataset> {
+        let mut images = Vec::with_capacity(self.n * 3072);
+        let mut labels = Vec::with_capacity(self.n);
+        let mut rec = [0u8; REC];
+        for f in &self.files {
+            let file = std::fs::File::open(f)
+                .with_context(|| format!("opening CIFAR file {}", f.display()))?;
+            // Re-check the size at decode time: open() may have run on a
+            // different thread (or much earlier) than this worker-side
+            // decode, and a short final read should name the file.
+            let len = file.metadata()?.len() as usize;
+            if len % REC != 0 {
+                bail!("{}: size {} not a multiple of {}", f.display(), len, REC);
+            }
+            let mut reader = std::io::BufReader::with_capacity(64 * REC, file);
+            for _ in 0..len / REC {
+                reader
+                    .read_exact(&mut rec)
+                    .with_context(|| format!("reading {}", f.display()))?;
+                labels.push(rec[0] as i32);
+                decode_record(&rec, &mut images);
+            }
         }
-        for rec in bytes.chunks_exact(REC) {
-            labels.push(rec[0] as i32);
-            // CHW bytes -> normalized HWC f32
-            for y in 0..32 {
-                for x in 0..32 {
-                    for c in 0..3 {
-                        let v = rec[1 + c * 1024 + y * 32 + x] as f32 / 255.0;
-                        images.push((v - MEAN[c]) / STD[c]);
-                    }
-                }
+        let n = labels.len();
+        Ok(Dataset { images, labels, n, hw: 32, classes: 10 })
+    }
+}
+
+/// CHW bytes -> normalized HWC f32 (the per-record decode both the old
+/// eager loader and the streaming path share).
+fn decode_record(rec: &[u8; REC], images: &mut Vec<f32>) {
+    for y in 0..32 {
+        for x in 0..32 {
+            for c in 0..3 {
+                let v = rec[1 + c * 1024 + y * 32 + x] as f32 / 255.0;
+                images.push((v - MEAN[c]) / STD[c]);
             }
         }
     }
-    let n = labels.len();
-    Ok(Dataset { images, labels, n, hw: 32, classes: 10 })
+}
+
+/// Load all `data_batch_*.bin` (train) or `test_batch.bin` (test)
+/// records eagerly — `open(..)?.decode()`.
+pub fn load(dir: &Path, train: bool) -> Result<Dataset> {
+    open(dir, train)?.decode()
 }
 
 /// True when a usable CIFAR-10 binary directory is present.
@@ -81,10 +141,30 @@ mod tests {
     }
 
     #[test]
+    fn open_counts_without_decoding() {
+        let dir = TempDir::new().unwrap();
+        std::fs::write(dir.path().join("test_batch.bin"), vec![0u8; 3 * REC])
+            .unwrap();
+        let files = open(dir.path(), false).unwrap();
+        assert_eq!(files.n, 3);
+        let d = files.decode().unwrap();
+        assert_eq!(d.n, 3);
+    }
+
+    #[test]
     fn rejects_bad_size() {
         let dir = TempDir::new().unwrap();
         std::fs::write(dir.path().join("test_batch.bin"), [0u8; 100]).unwrap();
         assert!(load(dir.path(), false).is_err());
+        assert!(open(dir.path(), false).is_err());
+    }
+
+    #[test]
+    fn missing_train_files_error() {
+        let dir = TempDir::new().unwrap();
+        std::fs::write(dir.path().join("data_batch_1.bin"), vec![0u8; REC]).unwrap();
+        // data_batch_2..5 missing
+        assert!(open(dir.path(), true).is_err());
     }
 
     #[test]

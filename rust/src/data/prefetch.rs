@@ -11,8 +11,10 @@
 //! `depth` batches ahead; it never reorders.
 
 use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
 
 use crate::runtime::HostTensor;
 
@@ -47,6 +49,10 @@ pub fn auto_depth(augment_mean_s: f64, step_mean_s: f64) -> usize {
 pub struct Prefetcher {
     rx: Option<Receiver<(HostTensor, HostTensor)>>,
     worker: Option<JoinHandle<()>>,
+    /// Set by the worker before exiting on a failed deferred dataset
+    /// load, so the consumer's [`Prefetcher::next_batch`] surfaces the
+    /// real cause instead of a generic worker-died error.
+    error: Arc<Mutex<Option<anyhow::Error>>>,
 }
 
 impl Prefetcher {
@@ -58,6 +64,49 @@ impl Prefetcher {
         depth: usize,
     ) -> Self {
         Self::spawn_from(Sampler::new(data.n, batch, augment, seed), data, depth)
+    }
+
+    /// Spawn with a **deferred dataset**: `load` runs on the worker
+    /// thread before the first batch, so decode (e.g. streaming the
+    /// CIFAR binaries, `data::cifar::CifarFiles::decode`) overlaps the
+    /// trainer's own setup and the main thread never materializes the
+    /// training set.  The worker builds the sampler from the decoded
+    /// dataset with the given seed, so the batch stream is bit-identical
+    /// to a synchronous `Sampler` over an eager load.  A failed load
+    /// ends the worker and the error comes back from the consumer's
+    /// next [`Prefetcher::next_batch`].
+    pub fn spawn_deferred<F>(
+        load: F,
+        batch: usize,
+        augment: AugmentCfg,
+        seed: u64,
+        depth: usize,
+    ) -> Self
+    where
+        F: FnOnce() -> Result<Dataset> + Send + 'static,
+    {
+        let (tx, rx) = sync_channel(depth.max(1));
+        let error = Arc::new(Mutex::new(None));
+        let err_slot = error.clone();
+        let worker = std::thread::Builder::new()
+            .name("e2train-prefetch".into())
+            .spawn(move || {
+                let data = match load() {
+                    Ok(d) => Arc::new(d),
+                    Err(e) => {
+                        *err_slot.lock().unwrap() = Some(e);
+                        return;
+                    }
+                };
+                let mut sampler = Sampler::new(data.n, batch, augment, seed);
+                loop {
+                    if tx.send(sampler.next_batch(&data)).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawning prefetch thread");
+        Self { rx: Some(rx), worker: Some(worker), error }
     }
 
     /// Spawn from an already-built (possibly partially-consumed)
@@ -77,16 +126,26 @@ impl Prefetcher {
                 }
             })
             .expect("spawning prefetch thread");
-        Self { rx: Some(rx), worker: Some(worker) }
+        Self { rx: Some(rx), worker: Some(worker), error: Arc::new(Mutex::new(None)) }
     }
 
-    /// Blocking pull of the next staged batch (usually already buffered).
-    pub fn next_batch(&mut self) -> (HostTensor, HostTensor) {
-        self.rx
+    /// Blocking pull of the next staged batch (usually already
+    /// buffered).  Errors when the worker stopped — with the deferred
+    /// load's failure cause when there is one.
+    pub fn next_batch(&mut self) -> Result<(HostTensor, HostTensor)> {
+        let rx = self
+            .rx
             .as_ref()
-            .expect("prefetcher already shut down")
-            .recv()
-            .expect("prefetch worker died")
+            .ok_or_else(|| anyhow!("prefetcher already shut down"))?;
+        match rx.recv() {
+            Ok(b) => Ok(b),
+            Err(_) => Err(self
+                .error
+                .lock()
+                .unwrap()
+                .take()
+                .unwrap_or_else(|| anyhow!("prefetch worker died"))),
+        }
     }
 }
 
@@ -114,7 +173,7 @@ mod tests {
         for _ in 0..12 {
             // crosses an epoch boundary (reshuffle) at batch 4
             let (xa, ya) = sync.next_batch(&data);
-            let (xb, yb) = pre.next_batch();
+            let (xb, yb) = pre.next_batch().unwrap();
             assert_eq!(xa.as_f32().unwrap(), xb.as_f32().unwrap());
             match (&ya.data, &yb.data) {
                 (
@@ -140,7 +199,7 @@ mod tests {
         let _ = sync.next_batch(&data);
         for _ in 0..6 {
             let (xa, _) = sync.next_batch(&data);
-            let (xb, _) = pre.next_batch();
+            let (xb, _) = pre.next_batch().unwrap();
             assert_eq!(xa.as_f32().unwrap(), xb.as_f32().unwrap());
         }
     }
@@ -161,10 +220,41 @@ mod tests {
     }
 
     #[test]
+    fn deferred_spawn_matches_synchronous_sampler() {
+        let sync_data = synthetic::generate(10, 64, 8, 3);
+        let mut sync = Sampler::new(sync_data.n, 16, AugmentCfg::default(), 11);
+        let mut pre = Prefetcher::spawn_deferred(
+            || Ok(synthetic::generate(10, 64, 8, 3)),
+            16,
+            AugmentCfg::default(),
+            11,
+            2,
+        );
+        for _ in 0..6 {
+            let (xa, _) = sync.next_batch(&sync_data);
+            let (xb, _) = pre.next_batch().unwrap();
+            assert_eq!(xa.as_f32().unwrap(), xb.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn deferred_load_failure_surfaces_the_error() {
+        let mut pre = Prefetcher::spawn_deferred(
+            || Err(anyhow!("boom: dataset went missing")),
+            8,
+            AugmentCfg::default(),
+            0,
+            2,
+        );
+        let err = pre.next_batch().unwrap_err();
+        assert!(format!("{err:#}").contains("boom"), "lost the load error");
+    }
+
+    #[test]
     fn drop_mid_stream_terminates_worker() {
         let data = Arc::new(synthetic::generate(4, 32, 4, 1));
         let mut pre = Prefetcher::spawn(data, 8, AugmentCfg::default(), 0, 2);
-        let _ = pre.next_batch();
+        let _ = pre.next_batch().unwrap();
         drop(pre); // must not hang
     }
 }

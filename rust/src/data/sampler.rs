@@ -3,7 +3,9 @@
 //! plus standard CIFAR augmentation (4-px pad + random crop, horizontal
 //! flip) applied on the fly in rust — never in the HLO.
 
-use crate::runtime::HostTensor;
+use anyhow::{bail, Result};
+
+use crate::runtime::{HostTensor, TensorData};
 use crate::util::Rng;
 
 use super::Dataset;
@@ -87,6 +89,62 @@ impl Sampler {
             HostTensor::i32(vec![self.batch], y),
         )
     }
+}
+
+/// Contiguous per-shard row ranges covering `0..n`: up to `shards`
+/// non-empty ranges whose sizes differ by at most one (the leading
+/// ranges absorb the remainder of a non-divisible split).  Concatenated
+/// in order they reproduce the original batch exactly, which is what
+/// keeps the sharded reduction's sample order — and therefore its
+/// floats — identical to the single-device pass (`runtime::shard`).
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let s = shards.max(1).min(n);
+    let base = n / s;
+    let rem = n % s;
+    let mut out = Vec::with_capacity(s);
+    let mut lo = 0;
+    for i in 0..s {
+        let len = base + usize::from(i < rem);
+        out.push(lo..lo + len);
+        lo += len;
+    }
+    out
+}
+
+/// Slice rows `range` out of an assembled `(x, y)` batch — the
+/// per-shard view of one training batch.  Row payloads are copied
+/// verbatim (augmentation already happened upstream in the sampler /
+/// prefetch worker), so shard slicing never perturbs the batch stream.
+pub fn slice_batch(
+    x: &HostTensor,
+    y: &HostTensor,
+    range: std::ops::Range<usize>,
+) -> Result<(HostTensor, HostTensor)> {
+    let b = x.shape.first().copied().unwrap_or(0);
+    if range.start >= range.end || range.end > b {
+        bail!("shard slice {range:?} out of range for batch of {b}");
+    }
+    let stride: usize = x.shape[1..].iter().product();
+    let xs = x.as_f32()?;
+    let ys = match &y.data {
+        TensorData::I32(v) => v,
+        _ => bail!("labels must be i32"),
+    };
+    if ys.len() != b {
+        bail!("labels hold {} rows, batch has {b}", ys.len());
+    }
+    let mut shape = x.shape.clone();
+    shape[0] = range.len();
+    Ok((
+        HostTensor::f32(
+            shape,
+            xs[range.start * stride..range.end * stride].to_vec(),
+        ),
+        HostTensor::i32(vec![range.len()], ys[range].to_vec()),
+    ))
 }
 
 /// Shift-crop with zero padding + optional horizontal flip (HWC layout).
@@ -174,6 +232,46 @@ mod tests {
         // pixel (0,0) <- (0,1)
         assert_eq!(dst[0..3], src[3..6]);
         assert_eq!(dst[3..6], src[0..3]);
+    }
+
+    #[test]
+    fn shard_ranges_cover_and_balance() {
+        assert_eq!(shard_ranges(8, 1), vec![0..8]);
+        assert_eq!(shard_ranges(8, 2), vec![0..4, 4..8]);
+        // non-divisible: leading shards take the remainder
+        assert_eq!(shard_ranges(8, 3), vec![0..3, 3..6, 6..8]);
+        // more shards than rows: only non-empty ranges come back
+        assert_eq!(shard_ranges(2, 5), vec![0..1, 1..2]);
+        assert!(shard_ranges(0, 4).is_empty());
+        // concatenation always reproduces 0..n
+        for (n, s) in [(7, 3), (16, 5), (9, 9), (10, 1)] {
+            let rs = shard_ranges(n, s);
+            let mut lo = 0;
+            for r in &rs {
+                assert_eq!(r.start, lo);
+                lo = r.end;
+            }
+            assert_eq!(lo, n);
+        }
+    }
+
+    #[test]
+    fn slice_batch_preserves_rows() {
+        let d = synthetic::generate(10, 64, 8, 0);
+        let mut s = Sampler::new(d.n, 8, AugmentCfg::default(), 2);
+        let (x, y) = s.next_batch(&d);
+        let stride = 8 * 8 * 3;
+        let (xs, ys) = slice_batch(&x, &y, 3..6).unwrap();
+        assert_eq!(xs.shape, vec![3, 8, 8, 3]);
+        assert_eq!(
+            xs.as_f32().unwrap(),
+            &x.as_f32().unwrap()[3 * stride..6 * stride]
+        );
+        let all_y = y_as_vec(&y);
+        assert_eq!(y_as_vec(&ys), &all_y[3..6]);
+        // out-of-range and empty slices are rejected
+        assert!(slice_batch(&x, &y, 6..9).is_err());
+        assert!(slice_batch(&x, &y, 4..4).is_err());
     }
 
     #[test]

@@ -22,9 +22,11 @@
 
 mod runs;
 pub mod serve_bench;
+pub mod shard_bench;
 
 pub use runs::{ExpCtx, RunRecord, RunSpec};
 pub use serve_bench::{resolve_bench_family, run_serve_bench, ServeBenchCfg};
+pub use shard_bench::{run_shard_bench, ShardBenchCfg};
 
 use std::path::Path;
 

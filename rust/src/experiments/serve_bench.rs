@@ -88,7 +88,9 @@ pub fn run_serve_bench(
     manifest_path: &Path,
     cfg: &ServeBenchCfg,
 ) -> Result<Json> {
-    let probe = TrainProgram::load(engine, manifest_path)?;
+    // Eval-only: the bench never trains, so the probe skips the
+    // train-program compile just like the serve workers do.
+    let probe = TrainProgram::load_eval_only(engine, manifest_path)?;
     let hw = probe.manifest.arch.image_size;
     let classes = probe.manifest.arch.num_classes;
     let stride = hw * hw * 3;

@@ -1,0 +1,131 @@
+//! The `shard` bench scenario: time raw training steps through the
+//! data-parallel sharded path at several shard counts and record
+//! steps/sec plus strong-scaling efficiency into `BENCH_shard.json`
+//! (schema `bench_shard/v1`, see PERF.md).
+//!
+//! The sweep holds the total batch fixed (strong scaling): each row runs
+//! the identical step on the identical fixed batch, splitting it across
+//! more engines.  `single_device_sps` records the plain resident
+//! `step_device` loop as the non-sharded baseline — the sharded path
+//! pays for its determinism contract (per-sample gradient emission +
+//! fixed-order host reduction), and that tax is only worth paying when
+//! the per-shard compute dominates it, which is exactly what the
+//! efficiency column makes visible.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::{synthetic, AugmentCfg, Sampler};
+use crate::runtime::{
+    BackendKind, Engine, ModelState, ShardedTrainer, StepHyper, TrainProgram,
+};
+use crate::util::Json;
+
+/// Bench workload shape.
+#[derive(Debug, Clone)]
+pub struct ShardBenchCfg {
+    /// Shard counts to sweep (1 first, so efficiency is relative to the
+    /// one-shard sharded path).
+    pub shard_counts: Vec<usize>,
+    pub warmup_steps: usize,
+    /// Timed steps per shard count.
+    pub steps: usize,
+    pub seed: u64,
+    /// Provenance string recorded in the report (producer + profile).
+    pub source: String,
+}
+
+impl Default for ShardBenchCfg {
+    fn default() -> Self {
+        Self {
+            shard_counts: vec![1, 2, 4],
+            warmup_steps: 3,
+            steps: 40,
+            seed: 0,
+            source: "shard_bench".into(),
+        }
+    }
+}
+
+/// Run the sweep and return the `bench_shard/v1` report.
+pub fn run_shard_bench(
+    engine: &Engine,
+    manifest_path: &Path,
+    cfg: &ShardBenchCfg,
+) -> Result<Json> {
+    let prog = TrainProgram::load(engine, manifest_path)?;
+    let classes = prog.manifest.arch.num_classes;
+    let hw = prog.manifest.arch.image_size;
+    let data = synthetic::generate(classes, 256, hw, cfg.seed);
+    let mut sampler = Sampler::new(data.n, prog.batch(), AugmentCfg::default(), cfg.seed);
+    let (x, y) = sampler.next_batch(&data);
+    let hp = StepHyper::lr(0.05);
+    let steps = cfg.steps.max(1);
+
+    // Non-sharded baseline: the resident step loop every row competes
+    // against.
+    let mut dev = prog.upload_state(ModelState::init(&prog.manifest, cfg.seed))?;
+    for _ in 0..cfg.warmup_steps {
+        prog.step_device(&mut dev, &x, &y, hp, None)?;
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        prog.step_device(&mut dev, &x, &y, hp, None)?;
+    }
+    let single_sps = steps as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    println!("shard_bench: single-device baseline  {single_sps:>8.1} steps/s");
+
+    let mut rows = Vec::new();
+    let mut first: Option<(usize, f64)> = None;
+    for &s in &cfg.shard_counts {
+        let s = s.max(1);
+        let mut st = ShardedTrainer::new(
+            engine,
+            manifest_path,
+            s,
+            ModelState::init(&prog.manifest, cfg.seed),
+        )?;
+        for _ in 0..cfg.warmup_steps {
+            st.step(&x, &y, hp)?;
+        }
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            st.step(&x, &y, hp)?;
+        }
+        let sps = steps as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        let (s0, sps0) = *first.get_or_insert((s, sps));
+        let speedup = sps / sps0;
+        // Strong-scaling efficiency vs the first row: speedup divided
+        // by the shard-count growth; 1.0 = perfect linear scaling.
+        let efficiency = speedup * s0 as f64 / s as f64;
+        println!(
+            "shard_bench: {s} shard(s)  {sps:>8.1} steps/s  speedup {speedup:.2}x  efficiency {efficiency:.2}"
+        );
+        rows.push(Json::obj(vec![
+            ("shards", Json::num(s as f64)),
+            ("steps_per_sec", Json::num(sps)),
+            ("speedup_vs_first", Json::num(speedup)),
+            ("efficiency", Json::num(efficiency)),
+        ]));
+    }
+
+    Ok(Json::obj(vec![
+        ("schema", Json::str("bench_shard/v1")),
+        ("source", Json::str(&cfg.source)),
+        ("family", Json::str(prog.family())),
+        ("method", Json::str(prog.method())),
+        (
+            "backend",
+            Json::str(match prog.backend() {
+                BackendKind::Reference => "reference",
+                BackendKind::Pjrt => "pjrt",
+            }),
+        ),
+        ("batch", Json::num(prog.batch() as f64)),
+        ("steps_timed", Json::num(steps as f64)),
+        ("single_device_sps", Json::num(single_sps)),
+        ("rows", Json::Arr(rows)),
+    ]))
+}

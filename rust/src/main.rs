@@ -6,6 +6,7 @@
 //! e2train train --family resnet8-c10-tiny --method e2train --iters 300
 //! e2train exp tab2 --iters 400 --out results
 //! e2train serve --clients 2,8 --requests 32 --out BENCH_serve.json
+//! e2train shard-bench --shards 1,2,4 --out BENCH_shard.json
 //! e2train energy-report --family resnet20-c10
 //! ```
 
@@ -27,6 +28,10 @@ USAGE:
 
 COMMANDS:
   list                          list available (family, method) artifacts
+  gen-ref                       write the reference-backend artifact
+                                families (refmlp-tiny, refmlp-bench) into
+                                the artifacts dir — train/serve/shard
+                                without the python AOT toolchain
   train                         train one configuration
     --family <fam>              artifact family   [resnet8-c10-tiny]
     --method <m>                sgd32|fixed8|signsgd|psg|slu|sd|e2train|headft [e2train]
@@ -44,6 +49,13 @@ COMMANDS:
                                 fig3a|fig3b|tab1|fig4|tab2|tab3|fig5|tab4|finetune|all
     --iters <n>                 per-run iteration budget [400]
     --out <dir>                 results directory [results]
+  shard-bench                   data-parallel sharded-training scaling bench
+    --family <fam>              artifact family (reference fixture if absent)
+    --shards <a,b,..>           shard counts to sweep  [1,2,4]
+    --steps <n>                 timed steps per count  [60]
+    --warmup <n>                warmup steps           [3]
+    --seed <n>                  rng seed               [0]
+    --out <path>                report path [BENCH_shard.json]
   serve                         micro-batching inference service bench
     --family <fam>              artifact family (reference fixture if absent)
     --clients <a,b,..>          client concurrency levels [2,8]
@@ -77,6 +89,19 @@ fn main() -> Result<()> {
                     e.eval_batch,
                     e.methods.join(",")
                 );
+            }
+        }
+        "gen-ref" => {
+            // Materialize the reference families (manifest + train/eval/
+            // grad programs) so CLI runs — including the sharded launcher
+            // configs — work end-to-end on machines without python/jax.
+            std::fs::create_dir_all(&artifacts)?;
+            for spec in [
+                e2train::runtime::RefFamilySpec::tiny(),
+                e2train::runtime::RefFamilySpec::bench(),
+            ] {
+                let fam = e2train::runtime::write_reference_family(&artifacts, &spec)?;
+                println!("reference family -> {}", fam.display());
             }
         }
         "train" => {
@@ -134,6 +159,34 @@ fn main() -> Result<()> {
             let iters = args.u64_or("iters", 400)?;
             let out = PathBuf::from(args.str_or("out", "results"));
             experiments::run_experiment(id, iters, &artifacts, &out)?;
+        }
+        "shard-bench" => {
+            let cfg = experiments::ShardBenchCfg {
+                shard_counts: args.usize_list_or("shards", &[1, 2, 4])?,
+                warmup_steps: args.usize_or("warmup", 3)?,
+                steps: args.usize_or("steps", 60)?,
+                seed: args.u64_or("seed", 0)?,
+                source: if cfg!(debug_assertions) {
+                    "e2train shard-bench (debug profile)"
+                } else {
+                    "e2train shard-bench (release profile)"
+                }
+                .into(),
+            };
+            let fixture = e2train::runtime::RefFamilySpec::bench();
+            // Sharded training needs a grad-emitting program, which only
+            // reference families provide today; an explicit --family
+            // without one fails with a message saying so.
+            let (manifest, _fixture_guard) = experiments::resolve_bench_family(
+                &artifacts,
+                args.get("family"),
+                &fixture,
+            )?;
+            let engine = Engine::cpu()?;
+            let report = experiments::run_shard_bench(&engine, &manifest, &cfg)?;
+            let out = args.str_or("out", "BENCH_shard.json");
+            std::fs::write(&out, report.to_string())?;
+            println!("shard bench -> {out}");
         }
         "serve" => {
             let cfg = experiments::ServeBenchCfg {

@@ -119,6 +119,22 @@ impl DeviceState {
         Ok(ModelState::new(values, self.names))
     }
 
+    /// Replace tensor `i` with a fresh host value — the sharded-training
+    /// rebroadcast: after the host-side all-reduce applies an update to
+    /// the master state, every shard's resident replica refreshes the
+    /// tensors that changed (params + persistent state; momenta never
+    /// leave the host on the sharded path).
+    pub fn refresh_from_host(&mut self, i: usize, t: HostTensor) -> Result<()> {
+        if i >= self.values.len() {
+            anyhow::bail!(
+                "refresh index {i} out of range ({} resident tensors)",
+                self.values.len()
+            );
+        }
+        self.values[i] = DeviceValue::from_host(self.backend, t)?;
+        Ok(())
+    }
+
     /// Publishable read-only copy of this state (full train-state order).
     /// The copy is cheap relative to its cadence: publishing happens at
     /// checkpoint moments (SWA snapshots, end of run), never per step.

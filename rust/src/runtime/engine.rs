@@ -181,7 +181,13 @@ pub(crate) fn is_reference_program(path: &Path) -> bool {
 
 /// The shared client + executable cache.
 pub struct Engine {
-    client: xla::PjRtClient,
+    /// PJRT client, constructed **lazily** on the first HLO compile.
+    /// Reference-backend engines never touch PJRT, so a pool fanned out
+    /// over reference programs (`EnginePool`) pays nothing per worker;
+    /// with the real `xla` crate a client allocates device state, so
+    /// wide fan-outs that only serve reference programs would otherwise
+    /// pay for clients they never use.
+    client: Mutex<Option<xla::PjRtClient>>,
     cache: SharedProgramCache,
     /// Path -> loaded program memo, so repeat loads of the same path do
     /// no file I/O at all (the content read+hash runs once per path per
@@ -199,30 +205,52 @@ pub struct Engine {
 
 impl Engine {
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self {
-            client,
+            client: Mutex::new(None),
             cache: Arc::new(Mutex::new(HashMap::new())),
             by_path: Mutex::new(HashMap::new()),
             compiling: Arc::new(Mutex::new(())),
         })
     }
 
-    /// A new engine (fresh client) sharing this engine's program cache —
-    /// the building block of [`super::pool::EnginePool`]: worker threads
-    /// each own an engine, programs still compile once.
+    /// A new engine sharing this engine's program cache — the building
+    /// block of [`super::pool::EnginePool`]: worker threads each own an
+    /// engine, programs still compile once.  The fork's client is lazy
+    /// like any other engine's: it is only created if the fork actually
+    /// compiles HLO.
     pub fn fork(&self) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self {
-            client,
+            client: Mutex::new(None),
             cache: self.cache.clone(),
             by_path: Mutex::new(HashMap::new()),
             compiling: self.compiling.clone(),
         })
     }
 
+    /// Run `f` against the PJRT client, constructing it on first use.
+    /// Client-creation failures surface here (at the first HLO compile)
+    /// instead of at `Engine::cpu()` time.
+    fn with_client<T>(
+        &self,
+        f: impl FnOnce(&xla::PjRtClient) -> Result<T>,
+    ) -> Result<T> {
+        let mut guard = self.client.lock().unwrap();
+        if guard.is_none() {
+            *guard =
+                Some(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+        }
+        f(guard.as_ref().unwrap())
+    }
+
+    /// Whether the lazy PJRT client has been constructed (diagnostics /
+    /// tests; reference-only engines should report `false` forever).
+    pub fn client_is_initialized(&self) -> bool {
+        self.client.lock().unwrap().is_some()
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.with_client(|c| Ok(c.platform_name()))
+            .unwrap_or_else(|e| format!("unavailable ({e:#})"))
     }
 
     /// Load + compile an artifact (cached by content hash, memoized by
@@ -270,11 +298,11 @@ impl Engine {
             )
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
             let comp = xla::XlaComputation::from_proto(&proto);
-            ProgramImpl::Pjrt(
-                self.client
+            ProgramImpl::Pjrt(self.with_client(|client| {
+                client
                     .compile(&comp)
-                    .with_context(|| format!("compiling {}", path.display()))?,
-            )
+                    .with_context(|| format!("compiling {}", path.display()))
+            })?)
         };
         let program = Arc::new(Program {
             imp,
@@ -346,6 +374,25 @@ mod tests {
         fn check<T: Send + Sync>() {}
         check::<Engine>();
         check::<Program>();
+    }
+
+    #[test]
+    fn client_is_lazy_for_reference_only_engines() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        assert!(!engine.client_is_initialized(), "cpu() must not build a client");
+        let fork = engine.fork().unwrap();
+        assert!(!fork.client_is_initialized(), "fork() must not build a client");
+        // Reference programs never need PJRT.
+        let _ = fork.load(&fam.join("sgd32.train.ref.json")).unwrap();
+        assert!(!fork.client_is_initialized());
+        // HLO compile constructs it on demand.
+        let hlo = artifacts().join("resnet8-c10-tiny/sgd32.eval.hlo.txt");
+        if hlo.exists() {
+            let _ = engine.load(&hlo).unwrap();
+            assert!(engine.client_is_initialized());
+        }
     }
 
     #[test]

@@ -234,6 +234,20 @@ impl Manifest {
         }
     }
 
+    /// Path of the grad-emitting reference program next to a manifest
+    /// (`<method>.grad.ref.json`) — the per-shard executable of the
+    /// sharded data-parallel path (`runtime::shard`).  Only reference
+    /// families provide one today; the real-PJRT path will use on-device
+    /// collectives instead (ROADMAP).
+    pub fn grad_program_path(manifest_path: &Path) -> PathBuf {
+        let stem = manifest_path
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_default();
+        let dir = manifest_path.parent().unwrap_or_else(|| Path::new("."));
+        dir.join(format!("{stem}.grad.ref.json"))
+    }
+
     /// Backend the resolved program files for `manifest_path` will load
     /// on — decidable from path resolution alone, without compiling
     /// anything (pool-mode selection uses this; see `runtime::pool`).
@@ -375,6 +389,10 @@ mod tests {
         let (t, e) = Manifest::hlo_paths(Path::new("/a/b/psg.json"));
         assert_eq!(t, Path::new("/a/b/psg.train.hlo.txt"));
         assert_eq!(e, Path::new("/a/b/psg.eval.hlo.txt"));
+        assert_eq!(
+            Manifest::grad_program_path(Path::new("/a/b/psg.json")),
+            Path::new("/a/b/psg.grad.ref.json")
+        );
     }
 
     #[test]

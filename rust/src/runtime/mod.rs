@@ -10,8 +10,11 @@
 //! * [`pool`] — per-worker engine pool sharing one program cache (the
 //!   fan-out structure that stays sound when `Engine` loses `Sync`).
 //! * [`program`] — (train, eval) executable pairs + state plumbing, with
-//!   a host step path, a resident step path, and a snapshot eval path
-//!   for the serving workload.
+//!   a host step path, a resident step path, an eval-only load for serve
+//!   workers, and a snapshot eval path for the serving workload.
+//! * [`shard`] — data-parallel sharded training over an engine pool with
+//!   a deterministic (fixed-order, bitwise-reproducible) host-side
+//!   all-reduce of per-sample gradient contributions.
 //! * [`reference`] — the pure-rust reference backend + fixture
 //!   generator; keeps the whole stack executable without a PJRT runtime.
 
@@ -21,6 +24,7 @@ pub mod manifest;
 pub mod pool;
 pub mod program;
 pub mod reference;
+pub mod shard;
 pub mod tensor;
 
 pub use device::{DeviceState, DeviceValue, SnapshotCell, StateSnapshot, ValueRef};
@@ -30,6 +34,7 @@ pub use pool::EnginePool;
 pub use program::{
     EvalMetrics, EvalOutput, ModelState, StepHyper, StepMetrics, TrainProgram,
 };
+pub use shard::ShardedTrainer;
 pub use reference::{
     row_argmax, row_rank, row_softmax_loss, write_reference_family, RefFamilySpec,
 };

@@ -101,6 +101,34 @@ impl ModelState {
         self.index.get(name).map(|&i| &self.values[i])
     }
 
+    /// Index of `name` in `values`/`names` (O(1)) — used by the sharded
+    /// trainer to map grad-program inputs/outputs onto the master state.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    /// Panic unless `other` is bitwise identical (names, shapes, f32
+    /// payloads), naming the first drifting tensor.  Shared assertion
+    /// behind the determinism contracts (the resident / sharded /
+    /// streaming-ingestion equivalence suites) — diagnostic tooling,
+    /// not a runtime comparison.
+    pub fn assert_bitwise_eq(&self, other: &ModelState) {
+        assert_eq!(self.names, other.names, "state tensor names drifted");
+        for ((n, a), b) in self
+            .names
+            .iter()
+            .zip(self.values.iter())
+            .zip(other.values.iter())
+        {
+            assert_eq!(a.shape, b.shape, "{n}: shape drift");
+            assert_eq!(
+                a.as_f32().expect("bitwise compare expects f32"),
+                b.as_f32().expect("bitwise compare expects f32"),
+                "{n}: value drift"
+            );
+        }
+    }
+
     /// Weighted in-place average: `self = self*(1-w) + other*w`.
     /// Used by SWA (stochastic weight averaging, Sec. 4.1) — applied to
     /// params only; momenta/BN state are copied from `other`.
@@ -177,9 +205,17 @@ pub struct EvalOutput {
 }
 
 /// A fully-loaded (family, method) artifact ready to train and evaluate.
+///
+/// [`TrainProgram::load_eval_only`] skips the train executable — the
+/// serve-worker path, which only ever evaluates, no longer pays the
+/// train-program compile (the expensive half under real PJRT, where
+/// isolated workers each compile their own copy).
 pub struct TrainProgram {
     pub manifest: Manifest,
-    train: Arc<Program>,
+    /// `None` when loaded eval-only; step paths error with a clear
+    /// message instead of compiling lazily (an eval worker silently
+    /// compiling a train program would defeat the point).
+    train: Option<Arc<Program>>,
     eval: Arc<Program>,
     /// #tensors with role param (prefix of ModelState).
     pub num_params: usize,
@@ -194,9 +230,24 @@ impl TrainProgram {
     /// HLO text exists, else `<method>.{train,eval}.ref.json` (reference
     /// backend).
     pub fn load(engine: &Engine, manifest_path: &Path) -> Result<Self> {
+        Self::load_with(engine, manifest_path, true)
+    }
+
+    /// Load only the manifest + eval executable.  For workloads that
+    /// never step (the serve worker pool), this skips the train-program
+    /// compile entirely.
+    pub fn load_eval_only(engine: &Engine, manifest_path: &Path) -> Result<Self> {
+        Self::load_with(engine, manifest_path, false)
+    }
+
+    fn load_with(engine: &Engine, manifest_path: &Path, with_train: bool) -> Result<Self> {
         let manifest = Manifest::load(manifest_path)?;
         let (train_path, eval_path) = Manifest::program_paths(manifest_path);
-        let train = engine.load(&train_path)?;
+        let train = if with_train {
+            Some(engine.load(&train_path)?)
+        } else {
+            None
+        };
         let eval = engine.load(&eval_path)?;
 
         let num_params = manifest
@@ -245,7 +296,22 @@ impl TrainProgram {
 
     /// Backend the train/eval executables run on.
     pub fn backend(&self) -> BackendKind {
-        self.train.backend()
+        self.train.as_ref().unwrap_or(&self.eval).backend()
+    }
+
+    /// Whether this program was loaded without its train executable.
+    pub fn is_eval_only(&self) -> bool {
+        self.train.is_none()
+    }
+
+    fn train_exe(&self) -> Result<&Program> {
+        self.train.as_deref().ok_or_else(|| {
+            anyhow!(
+                "{}/{} was loaded eval-only: the train executable is not available",
+                self.family(),
+                self.method()
+            )
+        })
     }
 
     /// Move a host state into resident form for this program's backend.
@@ -371,7 +437,7 @@ impl TrainProgram {
             literals.push(e.to_literal()?);
         }
 
-        let outputs = self.train.run_literals(&literals)?;
+        let outputs = self.train_exe()?.run_literals(&literals)?;
         if outputs.len() != self.manifest.train_outputs.len() {
             bail!(
                 "train outputs: got {}, manifest says {}",
@@ -414,7 +480,7 @@ impl TrainProgram {
             inputs.push(ValueRef::Host(e));
         }
 
-        let outputs = self.train.execute_refs(&inputs)?;
+        let outputs = self.train_exe()?.execute_refs(&inputs)?;
         if outputs.len() != self.manifest.train_outputs.len() {
             bail!(
                 "train outputs: got {}, manifest says {}",
@@ -534,6 +600,49 @@ mod tests {
         // clone keeps the index coherent
         let c = s.clone();
         assert_eq!(c.by_name("mom.w").unwrap().as_f32().unwrap(), &[2.0, 2.5]);
+    }
+
+    #[test]
+    fn index_of_matches_by_name() {
+        let s = state_with(&["w", "b", "mom.w"]);
+        assert_eq!(s.index_of("mom.w"), Some(2));
+        assert_eq!(s.index_of("nope"), None);
+    }
+
+    #[test]
+    fn eval_only_load_skips_train_and_rejects_stepping() {
+        use crate::runtime::reference::{write_reference_family, RefFamilySpec};
+        use crate::util::tmp::TempDir;
+
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let prog =
+            TrainProgram::load_eval_only(&engine, &fam.join("sgd32.json")).unwrap();
+        assert!(prog.is_eval_only());
+        // Only the eval program entered the cache — no train compile.
+        assert_eq!(engine.cached_count(), 1);
+
+        // Eval works from the manifest + eval program alone.
+        let state = ModelState::init(&prog.manifest, 0);
+        let eb = prog.eval_batch();
+        let hw = prog.manifest.arch.image_size;
+        let x = HostTensor::f32(vec![eb, hw, hw, 3], vec![0.1; eb * hw * hw * 3]);
+        let y = HostTensor::i32(vec![eb], vec![0; eb]);
+        let em = prog.eval_batch_run(&state, &x, &y).unwrap();
+        assert!(em.loss.is_finite());
+
+        // Stepping must fail with a clear message, not a panic.
+        let mut st = state.clone();
+        let (bx, by) = (
+            HostTensor::f32(
+                vec![prog.batch(), hw, hw, 3],
+                vec![0.1; prog.batch() * hw * hw * 3],
+            ),
+            HostTensor::i32(vec![prog.batch()], vec![0; prog.batch()]),
+        );
+        let err = prog.step(&mut st, &bx, &by, StepHyper::lr(0.1), None).unwrap_err();
+        assert!(format!("{err:#}").contains("eval-only"));
     }
 
     #[test]

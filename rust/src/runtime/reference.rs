@@ -38,6 +38,16 @@ pub struct RefIo {
 pub enum RefKind {
     Train,
     Eval,
+    /// Gradient-emitting variant of the train step for the sharded
+    /// data-parallel path (`runtime::shard`): computes **per-sample**
+    /// gradient / activation / metric contributions for a slice of the
+    /// batch, without applying any update.  Each per-sample row is
+    /// bitwise the term the full-batch train step accumulates for the
+    /// same sample (the softmax rows are normalized by the *global*
+    /// batch size, passed as the scalar input `n`), so a host-side
+    /// reduction in global sample order reproduces the single-device
+    /// step exactly.
+    Grad,
 }
 
 /// A loaded reference program: interpretable train or eval step.
@@ -65,6 +75,7 @@ impl RefProgram {
         let kind = match v.req_str("kind")? {
             "train" => RefKind::Train,
             "eval" => RefKind::Eval,
+            "grad" => RefKind::Grad,
             other => bail!("unknown reference program kind {other}"),
         };
         let ios = |key: &str| -> Result<Vec<RefIo>> {
@@ -117,6 +128,7 @@ impl RefProgram {
         match self.kind {
             RefKind::Train => self.run_train(inputs),
             RefKind::Eval => self.run_eval(inputs),
+            RefKind::Grad => self.run_grad(inputs),
         }
     }
 
@@ -350,6 +362,159 @@ impl RefProgram {
                 computed
                     .remove(io.name.as_str())
                     .ok_or_else(|| anyhow!("reference train step cannot produce '{}'", io.name))
+            })
+            .collect()
+    }
+
+    /// The sharded-training shard step: per-sample gradient products,
+    /// hidden activations and metric contributions for a batch slice.
+    ///
+    /// Every arithmetic expression here mirrors [`Self::run_train`]
+    /// term-for-term; entries the train step's accumulation skips
+    /// (`x == 0` / `hact == 0` fast paths) stay exactly `0.0`, and the
+    /// softmax rows divide by the global batch size `n`, so summing the
+    /// per-sample tensors in global sample order is bitwise identical
+    /// to the train step's own accumulation (see `runtime::shard` for
+    /// the reduction side and the sign-of-zero argument).
+    fn run_grad(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let w1t = self.f32_in(inputs, "w1")?;
+        let b1t = self.f32_in(inputs, "b1")?;
+        let w2t = self.f32_in(inputs, "w2")?;
+        let b2t = self.f32_in(inputs, "b2")?;
+        let (d, h) = (w1t.shape[0], w1t.shape[1]);
+        let c = w2t.shape[1];
+        let (w1, b1, w2, b2) =
+            (w1t.as_f32()?, b1t.as_f32()?, w2t.as_f32()?, b2t.as_f32()?);
+
+        let xt = self.f32_in(inputs, "x")?;
+        let bsz = xt.shape[0];
+        if bsz == 0 {
+            bail!("grad program got an empty batch slice");
+        }
+        let xv = xt.as_f32()?;
+        if xv.len() != bsz * d {
+            bail!("x has {} elems, expected {}x{}", xv.len(), bsz, d);
+        }
+        let yt = inputs[self.input_index("y")?];
+        let yv = match &yt.data {
+            TensorData::I32(v) => v,
+            _ => bail!("y must be i32"),
+        };
+        let n = self.scalar_in(inputs, "n")?;
+        if !(n >= 1.0) {
+            bail!("grad program needs the global batch size n >= 1, got {n}");
+        }
+
+        let fwd = forward(xv, w1, b1, w2, b2, bsz, d, h, c);
+
+        // Per-sample softmax gradient rows (run_train's dz, normalized
+        // by the GLOBAL batch size).
+        let mut dz = vec![0f32; bsz * c];
+        for bi in 0..bsz {
+            let zr = &fwd.z[bi * c..(bi + 1) * c];
+            let m = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0f32;
+            for &v in zr {
+                denom += (v - m).exp();
+            }
+            let dr = &mut dz[bi * c..(bi + 1) * c];
+            for ci in 0..c {
+                dr[ci] = (zr[ci] - m).exp() / denom;
+            }
+            let y = yv[bi];
+            if y >= 0 && (y as usize) < c {
+                dr[y as usize] -= 1.0;
+            }
+            for v in dr.iter_mut() {
+                *v /= n;
+            }
+        }
+
+        // Hidden-layer backprop, identical to run_train.
+        let mut dh = vec![0f32; bsz * h];
+        for bi in 0..bsz {
+            let dr = &dz[bi * c..(bi + 1) * c];
+            let pr = &fwd.h_pre[bi * h..(bi + 1) * h];
+            let dhr = &mut dh[bi * h..(bi + 1) * h];
+            for j in 0..h {
+                if pr[j] <= 0.0 {
+                    continue;
+                }
+                let row = &w2[j * c..(j + 1) * c];
+                let mut s = 0f32;
+                for ci in 0..c {
+                    s += dr[ci] * row[ci];
+                }
+                dhr[j] = s;
+            }
+        }
+
+        // Per-sample gradient products, laid out [b, param shape] —
+        // the exact terms run_train's `+=` loops accumulate.
+        let mut gw1 = vec![0f32; bsz * d * h];
+        let mut gb1 = vec![0f32; bsz * h];
+        let mut gw2 = vec![0f32; bsz * h * c];
+        let mut gb2 = vec![0f32; bsz * c];
+        for bi in 0..bsz {
+            let dr = &dz[bi * c..(bi + 1) * c];
+            gb2[bi * c..(bi + 1) * c].copy_from_slice(dr);
+            let hr = &fwd.hact[bi * h..(bi + 1) * h];
+            for j in 0..h {
+                let hv = hr[j];
+                if hv == 0.0 {
+                    continue;
+                }
+                let row = &mut gw2[(bi * h + j) * c..(bi * h + j + 1) * c];
+                for ci in 0..c {
+                    row[ci] = hv * dr[ci];
+                }
+            }
+            let dhr = &dh[bi * h..(bi + 1) * h];
+            gb1[bi * h..(bi + 1) * h].copy_from_slice(dhr);
+            let xr = &xv[bi * d..(bi + 1) * d];
+            for di in 0..d {
+                let x = xr[di];
+                if x == 0.0 {
+                    continue;
+                }
+                let row = &mut gw1[(bi * d + di) * h..(bi * d + di + 1) * h];
+                for j in 0..h {
+                    row[j] = x * dhr[j];
+                }
+            }
+        }
+
+        // Per-sample metric contributions (0 for padded/invalid labels,
+        // matching softmax_metrics' skip).
+        let mut loss = vec![0f32; bsz];
+        let mut correct = vec![0f32; bsz];
+        for bi in 0..bsz {
+            let y = yv[bi];
+            if y < 0 || y as usize >= c {
+                continue;
+            }
+            let y = y as usize;
+            let zr = &fwd.z[bi * c..(bi + 1) * c];
+            loss[bi] = row_softmax_loss(zr, y);
+            if row_rank(zr, y) == 0 {
+                correct[bi] = 1.0;
+            }
+        }
+
+        let mut computed: HashMap<&str, HostTensor> = HashMap::new();
+        computed.insert("g.w1", HostTensor::f32(vec![bsz, d, h], gw1));
+        computed.insert("g.b1", HostTensor::f32(vec![bsz, h], gb1));
+        computed.insert("g.w2", HostTensor::f32(vec![bsz, h, c], gw2));
+        computed.insert("g.b2", HostTensor::f32(vec![bsz, c], gb2));
+        computed.insert("hact", HostTensor::f32(vec![bsz, h], fwd.hact));
+        computed.insert("loss", HostTensor::f32(vec![bsz], loss));
+        computed.insert("correct", HostTensor::f32(vec![bsz], correct));
+        self.outputs
+            .iter()
+            .map(|io| {
+                computed
+                    .remove(io.name.as_str())
+                    .ok_or_else(|| anyhow!("reference grad step cannot produce '{}'", io.name))
             })
             .collect()
     }
@@ -757,6 +922,33 @@ pub fn write_reference_family(dir: &Path, spec: &RefFamilySpec) -> Result<std::p
             fam_dir.join(format!("{method}.eval.ref.json")),
             prog("eval", &eval_inputs, &eval_outputs).to_string(),
         )?;
+
+        // Grad-emitting program for the sharded data-parallel path
+        // (runtime::shard): same state inputs as eval (params +
+        // persistent state), a per-shard (x, y) slice, and the GLOBAL
+        // batch size n; outputs one per-sample gradient tensor per
+        // non-gate param (in param order), then per-sample hidden
+        // activations and metric contributions.  Gate gradients are
+        // batch-independent, so the host applies them analytically.
+        let b = spec.batch;
+        let mut grad_inputs: Vec<Json> = params.iter().cloned().collect();
+        grad_inputs.extend(state.iter().cloned());
+        grad_inputs.push(io("x", "data", &[b, spec.hw, spec.hw, 3], "f32", ""));
+        grad_inputs.push(io("y", "data", &[b], "i32", ""));
+        grad_inputs.push(io("n", "scalar", &[], "f32", ""));
+        let grad_outputs = vec![
+            io("g.w1", "out_grad", &[b, d, h], "f32", ""),
+            io("g.b1", "out_grad", &[b, h], "f32", ""),
+            io("g.w2", "out_grad", &[b, h, c], "f32", ""),
+            io("g.b2", "out_grad", &[b, c], "f32", ""),
+            io("hact", "out_aux", &[b, h], "f32", ""),
+            io("loss", "out_aux", &[b], "f32", ""),
+            io("correct", "out_aux", &[b], "f32", ""),
+        ];
+        std::fs::write(
+            fam_dir.join(format!("{method}.grad.ref.json")),
+            prog("grad", &grad_inputs, &grad_outputs).to_string(),
+        )?;
     }
     Ok(fam_dir)
 }
@@ -783,6 +975,23 @@ mod tests {
             let eval =
                 RefProgram::load(&fam.join(format!("{method}.eval.ref.json"))).unwrap();
             assert_eq!(eval.inputs.len(), m.eval_inputs.len());
+            // Grad program: state inputs (params + persistent state)
+            // plus x, y and the global batch size scalar.
+            let grad =
+                RefProgram::load(&fam.join(format!("{method}.grad.ref.json"))).unwrap();
+            assert_eq!(grad.kind, RefKind::Grad);
+            let n_grad_state = m
+                .train_inputs
+                .iter()
+                .filter(|s| matches!(s.role.as_str(), "param" | "state"))
+                .count();
+            assert_eq!(grad.inputs.len(), n_grad_state + 3);
+            let n_data_params = m
+                .train_inputs
+                .iter()
+                .filter(|s| s.role == "param" && !s.name.starts_with("gate."))
+                .count();
+            assert_eq!(grad.outputs.len(), n_data_params + 3);
             // state outputs mirror the state prefix of the inputs
             let n_state = m
                 .train_inputs
@@ -855,6 +1064,56 @@ mod tests {
         let p = sm.psg_frac.expect("psg telemetry");
         assert!((0.0..=1.0).contains(&p));
         assert!(sm.loss.is_finite() && sm.loss > 0.0);
+    }
+
+    #[test]
+    fn grad_rows_are_slice_independent() {
+        use crate::runtime::{ModelState, TrainProgram};
+
+        let tmp = TempDir::new().unwrap();
+        let spec = RefFamilySpec::tiny();
+        let fam = write_reference_family(tmp.path(), &spec).unwrap();
+        let engine = crate::runtime::Engine::cpu().unwrap();
+        let prog = TrainProgram::load(&engine, &fam.join("sgd32.json")).unwrap();
+        let grad = RefProgram::load(&fam.join("sgd32.grad.ref.json")).unwrap();
+        let state = ModelState::init(&prog.manifest, 4);
+        let data = crate::data::synthetic::generate(10, 32, 8, 0);
+        let mut sampler = crate::data::Sampler::new(
+            data.n,
+            spec.batch,
+            crate::data::AugmentCfg::default(),
+            6,
+        );
+        let (x, y) = sampler.next_batch(&data);
+        let n = HostTensor::scalar_f32(spec.batch as f32);
+
+        let run_slice = |lo: usize, hi: usize| -> Vec<HostTensor> {
+            let (xs, ys) =
+                crate::data::sampler::slice_batch(&x, &y, lo..hi).unwrap();
+            let mut ins: Vec<&HostTensor> = Vec::new();
+            for name in ["w1", "b1", "w2", "b2", "run_mean"] {
+                ins.push(state.by_name(name).unwrap());
+            }
+            ins.push(&xs);
+            ins.push(&ys);
+            ins.push(&n);
+            grad.run(&ins).unwrap()
+        };
+
+        // Full batch in one slice vs an uneven 5/3 split: every
+        // per-sample row must be bitwise identical — the property the
+        // sharded fixed-order all-reduce rests on.
+        let full = run_slice(0, spec.batch);
+        let lo = run_slice(0, 5);
+        let hi = run_slice(5, spec.batch);
+        for (oi, f) in full.iter().enumerate() {
+            let fv = f.as_f32().unwrap();
+            let stride = fv.len() / spec.batch;
+            let lv = lo[oi].as_f32().unwrap();
+            let hv = hi[oi].as_f32().unwrap();
+            assert_eq!(&fv[..5 * stride], lv, "output {oi}: leading slice drifted");
+            assert_eq!(&fv[5 * stride..], hv, "output {oi}: trailing slice drifted");
+        }
     }
 
     #[test]

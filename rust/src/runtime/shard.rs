@@ -1,0 +1,615 @@
+//! Data-parallel sharded training with a deterministic host-side
+//! all-reduce.
+//!
+//! [`ShardedTrainer`] splits every training batch into S contiguous
+//! row slices and runs a **grad-emitting program variant**
+//! (`<method>.grad.ref.json`, `runtime::reference::RefKind::Grad`) on S
+//! engines drawn from an [`super::pool::EnginePool`], each shard holding
+//! a resident replica of the grad-input state in a
+//! [`super::device::DeviceState`].  The shard outputs are *per-sample*
+//! gradient / activation / metric contributions; the host combines them
+//! with a **fixed-order all-reduce** (global sample order — shard slices
+//! are contiguous and ordered) and applies the optimizer update to a
+//! host-side master state, then rebroadcasts the changed tensors to
+//! every replica.
+//!
+//! ## Why per-sample contributions
+//!
+//! Floating-point addition is not associative, so per-shard *partial
+//! sums* can never bitwise-match the single-device step's sequential
+//! accumulation for every shard count and split.  Per-sample terms can:
+//! the train step accumulates `acc[e] += term(bi, e)` for `bi` ascending
+//! from an all-`+0.0` accumulator, and the host reduction performs the
+//! exact same additions in the exact same order.  Entries the train step
+//! *skips* (its `x == 0` / `hact == 0` fast paths) arrive here as
+//! explicit `0.0` adds — bitwise harmless, because an accumulator that
+//! starts at `+0.0` can never become `-0.0` under round-to-nearest
+//! (`x + y == -0.0` requires both operands `-0.0`), and `v + 0.0 == v`
+//! for every other value.
+//!
+//! The update itself (weight decay, PSG telemetry, momentum SGD, learned
+//! gates, the running-mean state) mirrors the reference train step
+//! expression-for-expression, so for a fixed seed the sharded loop is
+//! **bitwise identical** to the single-device resident path for any
+//! shard count — the same determinism contract
+//! `tests/resident_equivalence.rs` pins for resident-vs-host, extended
+//! by `tests/shard_equivalence.rs` to S ∈ {1, 2, 3}.
+//!
+//! Real-PJRT note: this path requires the reference backend's grad
+//! programs.  On real devices the same structure maps to on-device
+//! collectives (all-reduce of gradient buffers); that is the seeded
+//! follow-up in ROADMAP.md — the shard/replica/rebroadcast substrate
+//! here is what it will reuse.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::sampler::{shard_ranges, slice_batch};
+
+use super::device::{DeviceState, DeviceValue, ValueRef};
+use super::engine::{BackendKind, Engine, Program};
+use super::manifest::Manifest;
+use super::pool::EnginePool;
+use super::program::{ModelState, StepHyper, StepMetrics};
+use super::tensor::HostTensor;
+
+/// One non-gate trainable param: master-state indices of the param and
+/// its momentum, plus whether weight decay applies (the reference train
+/// step decays weight matrices, not biases — i.e. tensors of rank >= 2).
+struct DataParam {
+    idx: usize,
+    mom_idx: usize,
+    decay: bool,
+    elems: usize,
+}
+
+/// One shard: an engine, its loaded grad program, and a resident
+/// replica of the grad-program state inputs (params + persistent state,
+/// in manifest order).
+struct Shard {
+    #[allow(dead_code)]
+    engine: Engine,
+    grad: Arc<Program>,
+    replica: DeviceState,
+}
+
+/// Data-parallel sharded training step over an engine pool.
+pub struct ShardedTrainer {
+    shards: Vec<Shard>,
+    /// Host-side authoritative state (full train-state order); SWA /
+    /// publisher / checkpoint sync reads from here — "shard 0" of the
+    /// design, without a device round-trip.
+    master: ModelState,
+    /// Master-state index of each grad-program state input, in input
+    /// order (params then persistent state).
+    grad_state_idx: Vec<usize>,
+    data_params: Vec<DataParam>,
+    /// (gate.w, mom.gate.w) master indices when gating is learned.
+    gate: Option<(usize, usize)>,
+    run_mean_idx: Option<usize>,
+    momentum: f32,
+    weight_decay: f32,
+    update: String,
+    backend: BackendKind,
+}
+
+impl ShardedTrainer {
+    /// Build `shards` engines (forked from `base`, sharing its compiled
+    /// program cache) around `init`, loading the manifest's grad
+    /// program on each.
+    pub fn new(
+        base: &Engine,
+        manifest_path: &Path,
+        shards: usize,
+        init: ModelState,
+    ) -> Result<Self> {
+        let manifest = Manifest::load(manifest_path)?;
+        if manifest.method.gating == "mask" {
+            bail!(
+                "sharded training does not support mask-gated (stochastic \
+                 depth) methods"
+            );
+        }
+        let grad_path = Manifest::grad_program_path(manifest_path);
+        if !grad_path.exists() {
+            bail!(
+                "{} has no grad-emitting program ({}): sharded training \
+                 currently requires a reference family — the real-PJRT \
+                 collective all-reduce is the seeded follow-up in ROADMAP.md",
+                manifest_path.display(),
+                grad_path.display()
+            );
+        }
+
+        let mut grad_state_idx = Vec::new();
+        let mut data_params = Vec::new();
+        let mut gate = None;
+        let mut run_mean_idx = None;
+        for spec in &manifest.train_inputs {
+            if !matches!(spec.role.as_str(), "param" | "state") {
+                continue;
+            }
+            let idx = init
+                .index_of(&spec.name)
+                .ok_or_else(|| anyhow!("state tensor {} missing from init", spec.name))?;
+            grad_state_idx.push(idx);
+            if spec.role == "param" {
+                let mom_idx = init
+                    .index_of(&format!("mom.{}", spec.name))
+                    .ok_or_else(|| anyhow!("param {} has no momentum slot", spec.name))?;
+                if spec.name.starts_with("gate.") {
+                    gate = Some((idx, mom_idx));
+                } else {
+                    data_params.push(DataParam {
+                        idx,
+                        mom_idx,
+                        decay: init.values[idx].shape.len() >= 2,
+                        elems: init.values[idx].elem_count(),
+                    });
+                }
+            } else if spec.name == "run_mean" {
+                run_mean_idx = Some(idx);
+            } else {
+                bail!(
+                    "sharded training does not understand persistent state '{}'",
+                    spec.name
+                );
+            }
+        }
+        if manifest.method.gating == "learned" && gate.is_none() {
+            bail!("learned gating but no gate.* param in the state");
+        }
+        if manifest.method.gating != "learned" {
+            gate = None;
+        }
+
+        // Reference grad programs are backend-portable, so forked
+        // engines share the base cache and the artifact compiles once
+        // no matter how many shards load it.
+        let pool = EnginePool::from_base(base, shards.max(1))?;
+        let mut slots = Vec::new();
+        let mut backend = BackendKind::Reference;
+        for engine in pool.into_engines() {
+            let grad = engine.load(&grad_path)?;
+            backend = grad.backend();
+            let replica = Self::replica(&init, &grad_state_idx, backend)?;
+            slots.push(Shard { engine, grad, replica });
+        }
+
+        Ok(Self {
+            shards: slots,
+            master: init,
+            grad_state_idx,
+            data_params,
+            gate,
+            run_mean_idx,
+            momentum: manifest.method.momentum as f32,
+            weight_decay: manifest.method.weight_decay as f32,
+            update: manifest.method.update.clone(),
+            backend,
+        })
+    }
+
+    fn replica(
+        master: &ModelState,
+        idx: &[usize],
+        backend: BackendKind,
+    ) -> Result<DeviceState> {
+        let values: Vec<HostTensor> =
+            idx.iter().map(|&i| master.values[i].clone()).collect();
+        let names: Vec<String> =
+            idx.iter().map(|&i| master.names[i].clone()).collect();
+        DeviceState::upload(backend, ModelState::new(values, names))
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    /// The authoritative host-side state (SWA snapshots, publishing,
+    /// eval, checkpoints read from here).
+    pub fn state(&self) -> &ModelState {
+        &self.master
+    }
+
+    /// Consume into the final host state (end of run).
+    pub fn into_state(self) -> ModelState {
+        self.master
+    }
+
+    /// One data-parallel optimizer step: slice, fan out, reduce in
+    /// fixed order, apply, rebroadcast.
+    pub fn step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+    ) -> Result<StepMetrics> {
+        let b = x.shape.first().copied().unwrap_or(0);
+        if b == 0 {
+            bail!("empty batch");
+        }
+        let ranges = shard_ranges(b, self.shards.len());
+        let n_scalar = HostTensor::scalar_f32(b as f32);
+        let slices = ranges
+            .iter()
+            .map(|r| slice_batch(x, y, r.clone()))
+            .collect::<Result<Vec<_>>>()?;
+
+        let outs: Vec<Vec<HostTensor>> = if slices.len() == 1 {
+            vec![run_shard(&self.shards[0], &slices[0].0, &slices[0].1, &n_scalar)?]
+        } else {
+            let mut results: Vec<Option<Result<Vec<HostTensor>>>> =
+                slices.iter().map(|_| None).collect();
+            std::thread::scope(|scope| {
+                for ((shard, (xs, ys)), slot) in self
+                    .shards
+                    .iter()
+                    .zip(slices.iter())
+                    .zip(results.iter_mut())
+                {
+                    let n_ref = &n_scalar;
+                    scope.spawn(move || {
+                        *slot = Some(run_shard(shard, xs, ys, n_ref));
+                    });
+                }
+            });
+            results
+                .into_iter()
+                .map(|r| {
+                    r.unwrap_or_else(|| Err(anyhow!("shard worker never ran")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        self.reduce_and_apply(b, &outs, hp)
+    }
+
+    /// Time one sharded step without perturbing the run: the master
+    /// state is restored and replicas rebroadcast afterwards, so the
+    /// probe is invisible to metrics and determinism (the prefetch
+    /// depth auto-tuner's denominator).
+    pub fn probe_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+    ) -> Result<f64> {
+        let saved = self.master.clone();
+        let t0 = Instant::now();
+        self.step(x, y, hp)?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.master = saved;
+        self.rebroadcast()?;
+        Ok(dt)
+    }
+
+    /// Combine shard outputs (global sample order) and apply the
+    /// optimizer update to the master state — every expression mirrors
+    /// the reference train step bit-for-bit.
+    fn reduce_and_apply(
+        &mut self,
+        b: usize,
+        outs: &[Vec<HostTensor>],
+        hp: StepHyper,
+    ) -> Result<StepMetrics> {
+        let pp = self.data_params.len();
+        for out in outs {
+            if out.len() != pp + 3 {
+                bail!(
+                    "grad program returned {} outputs, expected {} (per-param \
+                     grads + hact + loss + correct)",
+                    out.len(),
+                    pp + 3
+                );
+            }
+        }
+
+        // ---- fixed-order all-reduce of gradient contributions --------
+        let mut grads: Vec<Vec<f32>> = self
+            .data_params
+            .iter()
+            .map(|p| vec![0f32; p.elems])
+            .collect();
+        for out in outs {
+            for (pi, acc) in grads.iter_mut().enumerate() {
+                let v = out[pi].as_f32()?;
+                let rows = out[pi].shape.first().copied().unwrap_or(0);
+                if v.len() != rows * acc.len() {
+                    bail!("shard grad output {pi} has the wrong size");
+                }
+                for row in v.chunks_exact(acc.len()) {
+                    for (a, g) in acc.iter_mut().zip(row) {
+                        *a += *g;
+                    }
+                }
+            }
+        }
+        // ---- metric reduction (same order; integer-valued `correct`
+        // sums are exact, `loss` keeps the sequential order) -----------
+        let mut loss_sum = 0f32;
+        let mut correct_sum = 0f32;
+        for out in outs {
+            for &v in out[pp + 1].as_f32()? {
+                loss_sum += v;
+            }
+            for &v in out[pp + 2].as_f32()? {
+                correct_sum += v;
+            }
+        }
+
+        // ---- weight decay on weight matrices (biases exempt) ---------
+        let wd = self.weight_decay;
+        for (p, g) in self.data_params.iter().zip(grads.iter_mut()) {
+            if !p.decay {
+                continue;
+            }
+            let w = self.master.values[p.idx].as_f32()?;
+            for (gv, wv) in g.iter_mut().zip(w) {
+                *gv += wd * *wv;
+            }
+        }
+
+        // ---- PSG predictor telemetry over the reduced grads ----------
+        let psg_frac = if self.update == "psg" {
+            let beta = hp.beta;
+            let gmax = grads
+                .iter()
+                .flat_map(|g| g.iter())
+                .fold(0f32, |m, &v| m.max(v.abs()));
+            if gmax > 0.0 {
+                let total: usize = grads.iter().map(|g| g.len()).sum();
+                let confident = grads
+                    .iter()
+                    .flat_map(|g| g.iter())
+                    .filter(|v| v.abs() <= beta * gmax)
+                    .count();
+                Some(confident as f32 / total as f32)
+            } else {
+                Some(0.0)
+            }
+        } else {
+            None
+        };
+
+        // ---- momentum SGD on the master state ------------------------
+        let mu = self.momentum;
+        let lr = hp.lr;
+        for (p, g) in self.data_params.iter().zip(grads.iter()) {
+            let (nw, nm) = {
+                let w = self.master.values[p.idx].as_f32()?;
+                let m = self.master.values[p.mom_idx].as_f32()?;
+                let mut nm = Vec::with_capacity(m.len());
+                let mut nw = Vec::with_capacity(w.len());
+                for i in 0..w.len() {
+                    let mi = mu * m[i] + g[i];
+                    nm.push(mi);
+                    nw.push(w[i] - lr * mi);
+                }
+                (nw, nm)
+            };
+            self.master.values[p.idx].as_f32_mut()?.copy_from_slice(&nw);
+            self.master.values[p.mom_idx]
+                .as_f32_mut()?
+                .copy_from_slice(&nm);
+        }
+
+        // ---- learned gates: batch-independent, applied analytically --
+        let mut gate_fracs: Vec<f64> = Vec::new();
+        if let Some((gi, gmi)) = self.gate {
+            let alpha = hp.alpha;
+            let (ngw, ngm, fracs) = {
+                let gw = self.master.values[gi].as_f32()?;
+                let gm = self.master.values[gmi].as_f32()?;
+                let g = gw.len().max(1) as f32;
+                let mut ngw = Vec::with_capacity(gw.len());
+                let mut ngm = Vec::with_capacity(gw.len());
+                let mut fracs = Vec::with_capacity(gw.len());
+                for i in 0..gw.len() {
+                    let sig = 1.0 / (1.0 + (-gw[i]).exp());
+                    fracs.push(sig);
+                    let grad = alpha * sig * (1.0 - sig) / g;
+                    let mi = mu * gm[i] + grad;
+                    ngm.push(mi);
+                    ngw.push(gw[i] - lr * mi);
+                }
+                (ngw, ngm, fracs)
+            };
+            self.master.values[gi].as_f32_mut()?.copy_from_slice(&ngw);
+            self.master.values[gmi].as_f32_mut()?.copy_from_slice(&ngm);
+            gate_fracs = fracs.iter().map(|&v| v as f64).collect();
+        }
+
+        // ---- running-mean state: column sums in global row order -----
+        if let Some(ri) = self.run_mean_idx {
+            let h = self.master.values[ri].elem_count();
+            let nbf = b as f32;
+            let new_mean = {
+                let rm = self.master.values[ri].as_f32()?;
+                let mut nm = Vec::with_capacity(h);
+                for j in 0..h {
+                    let mut s = 0f32;
+                    for out in outs {
+                        let ha = out[pp].as_f32()?;
+                        let rows = out[pp].shape.first().copied().unwrap_or(0);
+                        if ha.len() != rows * h {
+                            bail!("shard hact output has the wrong size");
+                        }
+                        for bi in 0..rows {
+                            s += ha[bi * h + j];
+                        }
+                    }
+                    nm.push(0.9 * rm[j] + 0.1 * s / nbf);
+                }
+                nm
+            };
+            self.master.values[ri]
+                .as_f32_mut()?
+                .copy_from_slice(&new_mean);
+        }
+
+        self.rebroadcast()?;
+
+        Ok(StepMetrics {
+            loss: (loss_sum / b as f32) as f64,
+            correct: correct_sum as f64,
+            gate_fracs,
+            psg_frac: psg_frac.map(|v| v as f64),
+        })
+    }
+
+    /// Refresh every replica's grad-input tensors from the master state
+    /// (params + persistent state; momenta never leave the host).
+    fn rebroadcast(&mut self) -> Result<()> {
+        for shard in &mut self.shards {
+            for (ri, &mi) in self.grad_state_idx.iter().enumerate() {
+                shard
+                    .replica
+                    .refresh_from_host(ri, self.master.values[mi].clone())?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Execute one shard's grad program: resident replica state + the
+/// shard's (x, y) slice + the global batch size scalar.
+fn run_shard(
+    shard: &Shard,
+    xs: &HostTensor,
+    ys: &HostTensor,
+    n: &HostTensor,
+) -> Result<Vec<HostTensor>> {
+    let mut inputs: Vec<ValueRef> =
+        Vec::with_capacity(shard.replica.values.len() + 3);
+    for v in &shard.replica.values {
+        inputs.push(ValueRef::Dev(v));
+    }
+    inputs.push(ValueRef::Host(xs));
+    inputs.push(ValueRef::Host(ys));
+    inputs.push(ValueRef::Host(n));
+    shard
+        .grad
+        .execute_refs(&inputs)?
+        .into_iter()
+        .map(DeviceValue::into_host)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, AugmentCfg, Sampler};
+    use crate::runtime::{write_reference_family, RefFamilySpec, TrainProgram};
+    use crate::util::tmp::TempDir;
+
+    /// The core bitwise contract at step granularity: S shards == the
+    /// single-device resident step, metrics and state, including a
+    /// non-divisible 8-row/3-shard split.
+    #[test]
+    fn sharded_step_is_bitwise_identical_to_step_device() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        for method in ["sgd32", "e2train"] {
+            let manifest = fam.join(format!("{method}.json"));
+            let prog = TrainProgram::load(&engine, &manifest).unwrap();
+            let data = synthetic::generate(10, 64, 8, 1);
+            let hp = StepHyper { lr: 0.03, alpha: 1.5, beta: 0.05 };
+            let init = ModelState::init(&prog.manifest, 9);
+            for shards in [1usize, 2, 3] {
+                let mut sampler =
+                    Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 5);
+                let mut dev = prog.upload_state(init.clone()).unwrap();
+                let mut sharded =
+                    ShardedTrainer::new(&engine, &manifest, shards, init.clone())
+                        .unwrap();
+                assert_eq!(sharded.num_shards(), shards);
+                for step in 0..5 {
+                    let (x, y) = sampler.next_batch(&data);
+                    let a = prog.step_device(&mut dev, &x, &y, hp, None).unwrap();
+                    let b = sharded.step(&x, &y, hp).unwrap();
+                    assert_eq!(a.loss, b.loss, "{method} S={shards} step {step}");
+                    assert_eq!(a.correct, b.correct, "{method} S={shards}");
+                    assert_eq!(a.gate_fracs, b.gate_fracs, "{method} S={shards}");
+                    assert_eq!(a.psg_frac, b.psg_frac, "{method} S={shards}");
+                }
+                let single = dev.into_host().unwrap();
+                single.assert_bitwise_eq(sharded.state());
+            }
+        }
+    }
+
+    /// A probe step must leave the trainer exactly where it was: the
+    /// next real step matches a run that never probed.
+    #[test]
+    fn probe_step_is_invisible() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let manifest = fam.join("sgd32.json");
+        let prog = TrainProgram::load(&engine, &manifest).unwrap();
+        let data = synthetic::generate(10, 32, 8, 2);
+        let mut sampler = Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 3);
+        let (x, y) = sampler.next_batch(&data);
+        let hp = StepHyper::lr(0.05);
+        let init = ModelState::init(&prog.manifest, 1);
+
+        let mut plain =
+            ShardedTrainer::new(&engine, &manifest, 2, init.clone()).unwrap();
+        let mut probed = ShardedTrainer::new(&engine, &manifest, 2, init).unwrap();
+        let dt = probed.probe_step(&x, &y, hp).unwrap();
+        assert!(dt > 0.0);
+        plain.state().assert_bitwise_eq(probed.state());
+
+        let a = plain.step(&x, &y, hp).unwrap();
+        let b = probed.step(&x, &y, hp).unwrap();
+        assert_eq!(a.loss, b.loss);
+        plain.state().assert_bitwise_eq(probed.state());
+    }
+
+    /// More shards than batch rows: only the non-empty slices execute,
+    /// and the result is still bitwise identical.
+    #[test]
+    fn more_shards_than_rows_still_bitwise() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let manifest = fam.join("sgd32.json");
+        let prog = TrainProgram::load(&engine, &manifest).unwrap();
+        let data = synthetic::generate(10, 32, 8, 0);
+        let mut sampler = Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 7);
+        let (x, y) = sampler.next_batch(&data);
+        let hp = StepHyper::lr(0.1);
+        let init = ModelState::init(&prog.manifest, 2);
+
+        let mut dev = prog.upload_state(init.clone()).unwrap();
+        let mut sharded =
+            ShardedTrainer::new(&engine, &manifest, 16, init).unwrap();
+        let a = prog.step_device(&mut dev, &x, &y, hp, None).unwrap();
+        let b = sharded.step(&x, &y, hp).unwrap();
+        assert_eq!(a.loss, b.loss);
+        dev.into_host().unwrap().assert_bitwise_eq(sharded.state());
+    }
+
+    /// A manifest without a grad program (every PJRT family today) must
+    /// fail fast with a message naming the missing piece.
+    #[test]
+    fn missing_grad_program_is_rejected() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        std::fs::remove_file(fam.join("sgd32.grad.ref.json")).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let prog = TrainProgram::load(&engine, &fam.join("sgd32.json")).unwrap();
+        let init = ModelState::init(&prog.manifest, 0);
+        let err = ShardedTrainer::new(&engine, &fam.join("sgd32.json"), 2, init)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("grad-emitting"));
+    }
+}

@@ -253,12 +253,14 @@ impl ServeService {
         cell: Arc<SnapshotCell>,
         cfg: ServeCfg,
     ) -> Result<Self> {
-        // Probe-load up front: resolves artifact errors synchronously.
-        // On the reference backend this also warms the shared program
-        // cache for the (from_base) worker pool; isolated PJRT workers
-        // each compile their own copy at thread start — executables are
+        // Probe-load up front (eval-only — the serve pipeline never
+        // steps, so neither the probe nor any worker compiles the train
+        // program): resolves artifact errors synchronously.  On the
+        // reference backend this also warms the shared program cache
+        // for the (from_base) worker pool; isolated PJRT workers each
+        // compile their own eval copy at thread start — executables are
         // client-bound there, so that cost is irreducible.
-        let probe = TrainProgram::load(engine, manifest_path)
+        let probe = TrainProgram::load_eval_only(engine, manifest_path)
             .with_context(|| format!("loading serve artifact {}", manifest_path.display()))?;
         let hw = probe.manifest.arch.image_size;
         let classes = probe.manifest.arch.num_classes;

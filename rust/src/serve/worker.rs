@@ -65,7 +65,10 @@ fn serve_loop(
     batch_q: &Bounded<MicroBatch>,
     stats: &StatsCollector,
 ) {
-    let prog = match TrainProgram::load(engine, manifest_path) {
+    // Eval-only load: serve workers never step, so they skip the
+    // train-program compile entirely — under real PJRT (isolated
+    // per-worker engines) that was a full wasted compile per worker.
+    let prog = match TrainProgram::load_eval_only(engine, manifest_path) {
         Ok(p) => p,
         Err(e) => {
             // Can't serve anything: exit and let the remaining workers

@@ -1,0 +1,130 @@
+//! CIFAR-bin streaming ingestion: `data::cifar::open` + the worker-side
+//! `CifarFiles::decode` must produce byte-for-byte the dataset the old
+//! eager whole-file loader produced, and a Trainer run whose prefetch
+//! worker streams + decodes the binaries must be bitwise identical to a
+//! run that eagerly loads them and samples synchronously.
+
+use std::path::Path;
+
+use e2train::config::{DataCfg, RunCfg};
+use e2train::coordinator::Trainer;
+use e2train::data::{cifar, prefetch};
+use e2train::runtime::{write_reference_family, Engine, RefFamilySpec};
+use e2train::util::tmp::TempDir;
+
+const REC: usize = 1 + 3072;
+const MEAN: [f32; 3] = [0.4914, 0.4822, 0.4465];
+const STD: [f32; 3] = [0.2470, 0.2435, 0.2616];
+
+/// Deterministic pseudo-CIFAR binaries: 5 train files + 1 test file.
+fn write_cifar_dir(dir: &Path, per_file: usize, test_records: usize) {
+    let mut state = 0x1234_5678u32;
+    let mut next = move || -> u8 {
+        state = state.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+        (state >> 24) as u8
+    };
+    let mut file = |n: usize| -> Vec<u8> {
+        let mut bytes = Vec::with_capacity(n * REC);
+        for _ in 0..n {
+            bytes.push(next() % 10);
+            for _ in 0..3072 {
+                bytes.push(next());
+            }
+        }
+        bytes
+    };
+    for i in 1..=5 {
+        std::fs::write(dir.join(format!("data_batch_{i}.bin")), file(per_file)).unwrap();
+    }
+    std::fs::write(dir.join("test_batch.bin"), file(test_records)).unwrap();
+}
+
+/// The original eager decode algorithm, kept inline as ground truth so
+/// the streaming loader is checked against an independent
+/// implementation, not against itself.
+fn eager_reference_decode(dir: &Path) -> (Vec<i32>, Vec<f32>) {
+    let mut labels = Vec::new();
+    let mut images = Vec::new();
+    for i in 1..=5 {
+        let bytes = std::fs::read(dir.join(format!("data_batch_{i}.bin"))).unwrap();
+        for rec in bytes.chunks_exact(REC) {
+            labels.push(rec[0] as i32);
+            for y in 0..32 {
+                for x in 0..32 {
+                    for c in 0..3 {
+                        let v = rec[1 + c * 1024 + y * 32 + x] as f32 / 255.0;
+                        images.push((v - MEAN[c]) / STD[c]);
+                    }
+                }
+            }
+        }
+    }
+    (labels, images)
+}
+
+#[test]
+fn streaming_decode_matches_eager_reference() {
+    let dir = TempDir::new().unwrap();
+    write_cifar_dir(dir.path(), 32, 24);
+
+    let files = cifar::open(dir.path(), true).unwrap();
+    assert_eq!(files.n, 160, "record count from metadata");
+    let streamed = files.decode().unwrap();
+    assert_eq!(streamed.n, 160);
+
+    let (want_labels, want_images) = eager_reference_decode(dir.path());
+    assert_eq!(streamed.labels, want_labels);
+    assert_eq!(streamed.images, want_images, "streamed floats drifted");
+
+    assert_eq!(cifar::open(dir.path(), false).unwrap().n, 24);
+}
+
+#[test]
+fn deferred_prefetch_run_matches_eager_sync_run() {
+    let data_dir = TempDir::new().unwrap();
+    write_cifar_dir(data_dir.path(), 32, 24);
+
+    // CIFAR needs a 32px/10-class artifact; generate a small 32px
+    // reference family for it.
+    let art = TempDir::new().unwrap();
+    let spec = RefFamilySpec {
+        family: "refmlp-c32".into(),
+        hw: 32,
+        hidden: 16,
+        classes: 10,
+        batch: 8,
+        eval_batch: 16,
+        gated_blocks: 4,
+    };
+    write_reference_family(art.path(), &spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    let run = |use_prefetch: bool| {
+        let mut cfg = RunCfg::quick("refmlp-c32", "sgd32", 10);
+        cfg.artifacts_dir = art.path().to_path_buf();
+        cfg.data = DataCfg::CifarBin { dir: data_dir.path().to_path_buf() };
+        cfg.prefetch = use_prefetch;
+        cfg.eval_every = 4;
+        Trainer::new(&engine, cfg).unwrap().run(None).unwrap()
+    };
+
+    let eager = run(false); // main-thread eager load + synchronous sampling
+    let deferred = run(true); // worker streams + decodes the binaries
+
+    // The deferred path skips the auto-tune probe (no decoded data on
+    // the main thread) and keeps the classic double buffer.
+    assert_eq!(deferred.metrics.prefetch_depth, Some(prefetch::DEFAULT_DEPTH));
+    assert_eq!(eager.metrics.prefetch_depth, None);
+
+    assert_eq!(eager.metrics.final_test_acc, deferred.metrics.final_test_acc);
+    assert_eq!(eager.metrics.final_loss, deferred.metrics.final_loss);
+    let la: Vec<f64> = eager.metrics.trace.iter().map(|p| p.loss).collect();
+    let lb: Vec<f64> = deferred.metrics.trace.iter().map(|p| p.loss).collect();
+    assert_eq!(la, lb, "per-step losses diverged between ingestion paths");
+    let ea: Vec<Option<f64>> = eager.metrics.trace.iter().map(|p| p.test_acc).collect();
+    let eb: Vec<Option<f64>> =
+        deferred.metrics.trace.iter().map(|p| p.test_acc).collect();
+    assert_eq!(ea, eb, "periodic evals diverged between ingestion paths");
+    eager.state.assert_bitwise_eq(&deferred.state);
+}
+

@@ -28,14 +28,6 @@ fn ref_cfg(artifacts: &Path, method: &str, iters: u64) -> RunCfg {
     cfg
 }
 
-fn assert_states_bitwise(a: &ModelState, b: &ModelState) {
-    assert_eq!(a.names, b.names);
-    for ((n, x), y) in a.names.iter().zip(a.values.iter()).zip(b.values.iter()) {
-        assert_eq!(x.shape, y.shape, "{n}: shape drift");
-        assert_eq!(x.as_f32().unwrap(), y.as_f32().unwrap(), "{n}: value drift");
-    }
-}
-
 /// Resident + prefetch (the default) vs legacy host + synchronous
 /// sampling: identical trace losses, identical periodic and final eval
 /// metrics, identical energy, bitwise-identical final state.  `e2train`
@@ -70,7 +62,7 @@ fn resident_prefetch_matches_host_sync_path() {
         let ea: Vec<Option<f64>> = a.metrics.trace.iter().map(|p| p.test_acc).collect();
         let eb: Vec<Option<f64>> = b.metrics.trace.iter().map(|p| p.test_acc).collect();
         assert_eq!(ea, eb, "{method}: periodic evals diverged");
-        assert_states_bitwise(&a.state, &b.state);
+        a.state.assert_bitwise_eq(&b.state);
     }
 }
 
@@ -85,7 +77,7 @@ fn device_state_roundtrip_via_program() {
     let dev = prog.upload_state(state.clone()).unwrap();
     assert_eq!(dev.num_tensors(), state.num_tensors());
     let back = dev.sync_to_host().unwrap();
-    assert_states_bitwise(&state, &back);
+    state.assert_bitwise_eq(&back);
 }
 
 /// The fan-out must be invisible: identical records run-to-run, and

@@ -1,0 +1,147 @@
+//! Determinism contract of the data-parallel sharded training path:
+//! for fixed seeds, S ∈ {1, 2, 3} shards produce **bitwise-identical**
+//! metrics and final model state to the single-device resident path —
+//! the same contract `resident_equivalence.rs` pins for
+//! resident-vs-host, extended to the sharded fixed-order host-side
+//! all-reduce (`runtime::shard`).
+//!
+//! Coverage baked into the workload:
+//! * batch 8 across 3 shards — a non-divisible (3/3/2) split;
+//! * the `e2train` method runs with SMD enabled (its `RunCfg::quick`
+//!   default), so dropped iterations consume whole batches on the
+//!   sharded loop too (asserted below);
+//! * prefetch stays on (the default), so the sharded probe step the
+//!   depth auto-tuner takes must be invisible;
+//! * `e2train` also exercises learned gates, PSG telemetry, SWA
+//!   snapshots and the running-mean state through the sharded apply.
+
+use std::path::Path;
+
+use e2train::config::{DataCfg, RunCfg};
+use e2train::coordinator::Trainer;
+use e2train::runtime::{write_reference_family, Engine, RefFamilySpec};
+use e2train::util::tmp::TempDir;
+
+const FAM: &str = "refmlp-tiny";
+
+fn ref_cfg(artifacts: &Path, method: &str, iters: u64) -> RunCfg {
+    let mut cfg = RunCfg::quick(FAM, method, iters);
+    cfg.artifacts_dir = artifacts.to_path_buf();
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 128, n_test: 40, seed: 0 };
+    cfg
+}
+
+#[test]
+fn sharded_runs_match_single_device_resident_path() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    for method in ["sgd32", "e2train"] {
+        let engine = Engine::cpu().unwrap();
+        let mut base_cfg = ref_cfg(tmp.path(), method, 24);
+        base_cfg.eval_every = 8;
+        assert_eq!(base_cfg.shards, 0, "default must stay single-executor");
+        let base = Trainer::new(&engine, base_cfg).unwrap().run(None).unwrap();
+        if method == "e2train" {
+            // SMD is on by default for e2train; without at least one
+            // dropped iteration the test loses its SMD coverage.
+            assert!(
+                base.metrics.steps_skipped > 0,
+                "SMD never dropped a batch in 24 iters"
+            );
+        }
+
+        for shards in [1usize, 2, 3] {
+            let mut cfg = ref_cfg(tmp.path(), method, 24);
+            cfg.eval_every = 8;
+            cfg.shards = shards;
+            let out = Trainer::new(&engine, cfg).unwrap().run(None).unwrap();
+            let tag = format!("{method} S={shards}");
+            assert_eq!(
+                out.metrics.final_test_acc, base.metrics.final_test_acc,
+                "{tag}: final acc"
+            );
+            assert_eq!(
+                out.metrics.final_test_acc_top5,
+                base.metrics.final_test_acc_top5,
+                "{tag}: final top5"
+            );
+            assert_eq!(out.metrics.final_loss, base.metrics.final_loss, "{tag}: loss");
+            assert_eq!(
+                out.metrics.total_joules, base.metrics.total_joules,
+                "{tag}: energy"
+            );
+            assert_eq!(out.metrics.steps_run, base.metrics.steps_run, "{tag}");
+            assert_eq!(out.metrics.steps_skipped, base.metrics.steps_skipped, "{tag}");
+            assert_eq!(
+                out.metrics.mean_gate_fracs, base.metrics.mean_gate_fracs,
+                "{tag}: gate telemetry"
+            );
+            assert_eq!(
+                out.metrics.mean_psg_frac, base.metrics.mean_psg_frac,
+                "{tag}: psg telemetry"
+            );
+            let la: Vec<f64> = base.metrics.trace.iter().map(|p| p.loss).collect();
+            let lb: Vec<f64> = out.metrics.trace.iter().map(|p| p.loss).collect();
+            assert_eq!(la, lb, "{tag}: per-step losses diverged");
+            let ea: Vec<Option<f64>> =
+                base.metrics.trace.iter().map(|p| p.test_acc).collect();
+            let eb: Vec<Option<f64>> =
+                out.metrics.trace.iter().map(|p| p.test_acc).collect();
+            assert_eq!(ea, eb, "{tag}: periodic evals diverged");
+            out.state.assert_bitwise_eq(&base.state);
+        }
+    }
+}
+
+/// The sharded loop composes with the legacy synchronous sampling path
+/// too: prefetch off must not change a single bit either.
+#[test]
+fn sharded_run_is_prefetch_invariant() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    let mut on_cfg = ref_cfg(tmp.path(), "sgd32", 16);
+    on_cfg.shards = 2;
+    let on = Trainer::new(&engine, on_cfg).unwrap().run(None).unwrap();
+
+    let mut off_cfg = ref_cfg(tmp.path(), "sgd32", 16);
+    off_cfg.shards = 2;
+    off_cfg.prefetch = false;
+    let off = Trainer::new(&engine, off_cfg).unwrap().run(None).unwrap();
+
+    assert_eq!(on.metrics.final_test_acc, off.metrics.final_test_acc);
+    assert_eq!(on.metrics.final_loss, off.metrics.final_loss);
+    let la: Vec<f64> = on.metrics.trace.iter().map(|p| p.loss).collect();
+    let lb: Vec<f64> = off.metrics.trace.iter().map(|p| p.loss).collect();
+    assert_eq!(la, lb, "prefetch on/off diverged on the sharded loop");
+    on.state.assert_bitwise_eq(&off.state);
+}
+
+/// Fine-tune handoff works through the sharded loop: a sgd32-pretrained
+/// state migrates by name into a sharded e2train run.
+#[test]
+fn sharded_finetune_handoff_matches_single_device() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let pre = Trainer::new(&engine, ref_cfg(tmp.path(), "sgd32", 12))
+        .unwrap()
+        .run(None)
+        .unwrap();
+
+    let single = Trainer::new(&engine, ref_cfg(tmp.path(), "e2train", 8))
+        .unwrap()
+        .run(Some(pre.state.clone()))
+        .unwrap();
+
+    let mut sharded_cfg = ref_cfg(tmp.path(), "e2train", 8);
+    sharded_cfg.shards = 2;
+    let sharded = Trainer::new(&engine, sharded_cfg)
+        .unwrap()
+        .run(Some(pre.state))
+        .unwrap();
+
+    assert_eq!(single.metrics.final_test_acc, sharded.metrics.final_test_acc);
+    single.state.assert_bitwise_eq(&sharded.state);
+}

@@ -1,0 +1,62 @@
+//! Tier-1 shard smoke: runs the sharded-training scaling sweep at
+//! reduced scale and records `BENCH_shard.json` at the repo root, so
+//! every verified checkout carries a sharding-perf snapshot even when
+//! `cargo bench --bench bench_shard` never runs.  Debug timings are
+//! only a smoke signal; the release bench (or
+//! `scripts/shard_bench.sh`) writes the canonical numbers, and this
+//! test never overwrites a release-sourced file — the same convention
+//! as `BENCH_runtime.json` / `BENCH_serve.json`.
+
+use std::path::PathBuf;
+
+use e2train::experiments::{run_shard_bench, ShardBenchCfg};
+use e2train::runtime::{write_reference_family, Engine, RefFamilySpec};
+use e2train::util::json::parse;
+use e2train::util::tmp::TempDir;
+
+#[test]
+fn shard_smoke_records_bench_shard_json() {
+    let tmp = TempDir::new().unwrap();
+    let spec = RefFamilySpec::tiny();
+    let fam = write_reference_family(tmp.path(), &spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    let cfg = ShardBenchCfg {
+        shard_counts: vec![1, 2],
+        warmup_steps: 1,
+        steps: 8,
+        seed: 0,
+        source: "cargo-test smoke (debug profile)".into(),
+    };
+    let report = run_shard_bench(&engine, &fam.join("sgd32.json"), &cfg).unwrap();
+
+    // Schema + per-row sanity: steps/sec for shards {1, 2} with scaling
+    // efficiency recorded.
+    assert_eq!(report.at(&["schema"]).as_str(), Some("bench_shard/v1"));
+    assert!(report.at(&["single_device_sps"]).as_f64().unwrap() > 0.0);
+    let rows = report.at(&["rows"]).as_arr().expect("rows array");
+    assert_eq!(rows.len(), 2);
+    assert_eq!(rows[0].at(&["shards"]).as_f64(), Some(1.0));
+    assert_eq!(rows[1].at(&["shards"]).as_f64(), Some(2.0));
+    for row in rows {
+        assert!(row.at(&["steps_per_sec"]).as_f64().unwrap() > 0.0);
+        let eff = row.at(&["efficiency"]).as_f64().unwrap();
+        assert!(eff.is_finite() && eff > 0.0);
+    }
+
+    // Record at the repo root unless a release run already did.
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_shard.json");
+    let has_release_numbers = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| parse(&t).ok())
+        .and_then(|v| v.at(&["source"]).as_str().map(|s| s.contains("release")))
+        .unwrap_or(false);
+    if has_release_numbers {
+        eprintln!("[smoke] BENCH_shard.json holds release numbers; leaving it alone");
+    } else {
+        std::fs::write(&path, report.to_string()).unwrap();
+        assert!(path.exists());
+    }
+}

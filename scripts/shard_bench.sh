@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Launch the data-parallel sharded-training scaling bench and record
+# BENCH_shard.json (schema bench_shard/v1) at the repo root.
+#
+# Usage: scripts/shard_bench.sh [extra e2train shard-bench flags...]
+# e.g.:  scripts/shard_bench.sh --shards 1,2,4,8 --steps 120
+#
+# Release profile — step-latency scaling is meaningless in debug.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+exec cargo run --release --bin e2train -- shard-bench \
+  --shards 1,2,4 \
+  --steps 80 \
+  --warmup 5 \
+  --out BENCH_shard.json \
+  "$@"
