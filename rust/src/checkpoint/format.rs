@@ -1,0 +1,769 @@
+//! `ckpt/v1` — the on-disk checkpoint container.
+//!
+//! One file captures *everything the step loop consumes*, so a resumed
+//! run is bitwise identical to one that never stopped
+//! (tests/resume_equivalence.rs):
+//!
+//! * the full [`ModelState`] (params + momenta + gates + running-mean
+//!   state) and the SWA running average when averaging has started;
+//! * every RNG stream at its exact position — the sampler's
+//!   cursor/permutation/generator, the SMD scheduler, the SD scheduler;
+//! * the accumulators final metrics are computed from — the energy
+//!   ledger, the metrics trace, the lifetime gate/PSG means;
+//! * the embedded [`RunCfg`] plus its determinism fingerprint, verified
+//!   on resume so a checkpoint can never silently continue a different
+//!   run.
+//!
+//! ## Layout
+//!
+//! ```text
+//! [0..8)      magic  b"E2CKPT1\n"
+//! [8..16)     u64 LE header length H
+//! [16..16+H)  header JSON (schema "ckpt/v1"): names/shapes/counts only
+//! [16+H..N-8) payload: little-endian sections, in header order
+//! [N-8..N)    u64 LE FNV-1a-64 over bytes [0..N-8)
+//! ```
+//!
+//! Exact values never transit JSON: f64 text would round-trip, but
+//! inf/NaN would not, and u64 RNG words exceed f64's integer range — so
+//! every RNG word, permutation entry, metric accumulator and tensor
+//! payload lives in the binary sections.  The header holds structure.
+//!
+//! Decoding is fully bounds-checked and hash-verified: a truncated or
+//! bit-flipped file is rejected with a clean error, never a panic.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::RunCfg;
+use crate::coordinator::{SdState, SmdState};
+use crate::data::SamplerState;
+use crate::energy::{EnergyBreakdown, EnergyLedger};
+use crate::metrics::{Mean, TracePoint};
+use crate::optim::SwaState;
+use crate::runtime::{HostTensor, ModelState, TensorData};
+use crate::util::hash::fnv1a64;
+use crate::util::json::{parse, Json};
+
+/// Schema tag written into (and required from) every header.
+pub const SCHEMA: &str = "ckpt/v1";
+
+const MAGIC: &[u8; 8] = b"E2CKPT1\n";
+
+/// Everything a checkpoint carries — the step loop's complete state at
+/// an iteration boundary.
+#[derive(Clone)]
+pub struct CheckpointData {
+    /// Next iteration the resumed loop executes (the checkpoint was
+    /// written after `iter - 1` completed).
+    pub iter: u64,
+    /// The run's full configuration, embedded so `e2train resume <dir>`
+    /// needs no launcher file.
+    pub cfg: RunCfg,
+    /// Host-side master state (params, momenta, gates, run_mean) in
+    /// train-manifest order.
+    pub model: ModelState,
+    /// SWA running average, once averaging has started.
+    pub swa_model: Option<ModelState>,
+    pub swa: SwaState,
+    pub sampler: SamplerState,
+    pub smd: SmdState,
+    pub sd: SdState,
+    pub ledger: EnergyLedger,
+    /// Metrics trace recorded so far (`RunMetrics::trace`).
+    pub trace: Vec<TracePoint>,
+    /// Lifetime per-gate activity means.
+    pub gate_means: Vec<Mean>,
+    /// Lifetime PSG predictor-usage mean.
+    pub psg_mean: Mean,
+}
+
+impl CheckpointData {
+    /// The state a serving snapshot should load: the SWA running
+    /// average when present (matching what the in-process publisher
+    /// pushes to a `SnapshotCell`), else the raw model.
+    pub fn serving_state(&self) -> &ModelState {
+        self.swa_model.as_ref().unwrap_or(&self.model)
+    }
+}
+
+// ==========================================================================
+// Encode
+// ==========================================================================
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_rng(buf: &mut Vec<u8>, s: &[u64; 4]) {
+    for &w in s {
+        put_u64(buf, w);
+    }
+}
+
+fn put_mean(buf: &mut Vec<u8>, m: &Mean) {
+    let (sum, n) = m.parts();
+    put_f64(buf, sum);
+    put_u64(buf, n);
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
+    match &t.data {
+        TensorData::F32(v) => {
+            for &x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        TensorData::I32(v) => {
+            for &x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn tensor_specs(state: &ModelState) -> Json {
+    Json::arr(state.names.iter().zip(state.values.iter()).map(|(n, t)| {
+        let (dtype, len) = match &t.data {
+            TensorData::F32(v) => ("f32", v.len()),
+            TensorData::I32(v) => ("i32", v.len()),
+        };
+        Json::obj(vec![
+            ("name", Json::str(n)),
+            ("dtype", Json::str(dtype)),
+            (
+                "shape",
+                Json::arr(t.shape.iter().map(|&d| Json::num(d as f64))),
+            ),
+            // Actual payload length.  Decode reads exactly this many
+            // elements, so section alignment never depends on deriving
+            // the count from the shape.
+            ("elems", Json::num(len as f64)),
+        ])
+    }))
+}
+
+/// Serialize to the `ckpt/v1` byte container.
+pub fn encode(data: &CheckpointData) -> Vec<u8> {
+    // ---- header ---------------------------------------------------
+    let header = Json::obj(vec![
+        ("schema", Json::str(SCHEMA)),
+        ("iter", Json::num(data.iter as f64)),
+        ("fingerprint", Json::str(data.cfg.fingerprint())),
+        ("cfg", data.cfg.to_json()),
+        (
+            "sampler",
+            Json::obj(vec![
+                ("cursor", Json::num(data.sampler.cursor as f64)),
+                ("epoch", Json::num(data.sampler.epoch as f64)),
+                ("perm_len", Json::num(data.sampler.perm.len() as f64)),
+            ]),
+        ),
+        (
+            "smd",
+            Json::obj(vec![
+                ("skipped", Json::num(data.smd.skipped as f64)),
+                ("seen", Json::num(data.smd.seen as f64)),
+            ]),
+        ),
+        (
+            "swa",
+            Json::obj(vec![
+                ("n_models", Json::num(data.swa.n_models as f64)),
+                ("start_iter", Json::num(data.swa.start_iter as f64)),
+                ("period", Json::num(data.swa.period as f64)),
+            ]),
+        ),
+        (
+            "ledger",
+            Json::obj(vec![
+                ("steps_charged", Json::num(data.ledger.steps_charged as f64)),
+                ("steps_skipped", Json::num(data.ledger.steps_skipped as f64)),
+                ("trace_len", Json::num(data.ledger.trace.len() as f64)),
+            ]),
+        ),
+        ("trace_len", Json::num(data.trace.len() as f64)),
+        ("gate_means", Json::num(data.gate_means.len() as f64)),
+        ("model", tensor_specs(&data.model)),
+        (
+            "swa_model",
+            match &data.swa_model {
+                Some(s) => tensor_specs(s),
+                None => Json::Null,
+            },
+        ),
+    ])
+    .to_string();
+
+    // ---- payload ---------------------------------------------------
+    let mut p = Vec::new();
+    // 1. RNG streams
+    put_rng(&mut p, &data.sampler.rng);
+    put_rng(&mut p, &data.smd.rng);
+    put_rng(&mut p, &data.sd.rng);
+    // 2. sampler permutation
+    for &x in &data.sampler.perm {
+        put_u32(&mut p, x);
+    }
+    // 3. energy ledger
+    let b = &data.ledger.breakdown;
+    for v in [b.fwd_mac, b.bwd_mac, b.sram, b.dram, b.update, data.ledger.macs] {
+        put_f64(&mut p, v);
+    }
+    for &(it, j) in &data.ledger.trace {
+        put_u64(&mut p, it);
+        put_f64(&mut p, j);
+    }
+    // 4. lifetime means
+    for m in &data.gate_means {
+        put_mean(&mut p, m);
+    }
+    put_mean(&mut p, &data.psg_mean);
+    // 5. metrics trace
+    for t in &data.trace {
+        put_u64(&mut p, t.iter);
+        put_f64(&mut p, t.loss);
+        put_f64(&mut p, t.train_acc);
+        put_f64(&mut p, t.joules);
+        p.push(u8::from(t.test_acc.is_some()));
+        put_f64(&mut p, t.test_acc.unwrap_or(0.0));
+    }
+    // 6./7. tensor payloads
+    for t in &data.model.values {
+        put_tensor(&mut p, t);
+    }
+    if let Some(s) = &data.swa_model {
+        for t in &s.values {
+            put_tensor(&mut p, t);
+        }
+    }
+
+    // ---- container --------------------------------------------------
+    let mut out = Vec::with_capacity(16 + header.len() + p.len() + 8);
+    out.extend_from_slice(MAGIC);
+    put_u64(&mut out, header.len() as u64);
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(&p);
+    let h = fnv1a64(&out);
+    put_u64(&mut out, h);
+    out
+}
+
+// ==========================================================================
+// Decode
+// ==========================================================================
+
+/// Bounds-checked little-endian reader over the payload.
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow!("checkpoint payload length overflow"))?;
+        if end > self.b.len() {
+            bail!(
+                "checkpoint payload truncated: need {n} bytes at offset {}, {} remain",
+                self.pos,
+                self.b.len() - self.pos
+            );
+        }
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn rng(&mut self) -> Result<[u64; 4]> {
+        Ok([self.u64()?, self.u64()?, self.u64()?, self.u64()?])
+    }
+
+    fn mean(&mut self) -> Result<Mean> {
+        let sum = self.f64()?;
+        let n = self.u64()?;
+        Ok(Mean::from_parts(sum, n))
+    }
+
+    fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        let bytes = self.take(checked_bytes(n, 4)?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(checked_bytes(n, 4)?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i32_vec(&mut self, n: usize) -> Result<Vec<i32>> {
+        let bytes = self.take(checked_bytes(n, 4)?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            bail!(
+                "checkpoint payload has {} unread trailing bytes",
+                self.b.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+fn checked_bytes(n: usize, width: usize) -> Result<usize> {
+    n.checked_mul(width)
+        .ok_or_else(|| anyhow!("checkpoint section size overflow ({n} x {width})"))
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("checkpoint header missing '{key}'"))
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    Ok(req_u64(v, key)? as usize)
+}
+
+/// Parse one tensor-spec list and read its payload section.
+fn read_tensors(specs: &[Json], r: &mut Reader) -> Result<ModelState> {
+    let mut names = Vec::with_capacity(specs.len());
+    let mut values = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let name = spec.req_str("name")?.to_string();
+        let dtype = spec.req_str("dtype")?;
+        let mut shape = Vec::new();
+        let mut expect: usize = 1;
+        for d in spec.req_arr("shape")? {
+            let d = d
+                .as_usize()
+                .ok_or_else(|| anyhow!("tensor {name}: bad shape entry"))?;
+            expect = expect
+                .checked_mul(d)
+                .ok_or_else(|| anyhow!("tensor {name}: shape overflow"))?;
+            shape.push(d);
+        }
+        // Read exactly what encode wrote (the recorded payload length),
+        // then validate it against the shape *under `HostTensor`'s own
+        // invariant* (`elem_count` = product-or-1: rank-0 scalars and
+        // zero-sized dims both carry one element).  Anything else —
+        // including a crafted header whose `elems` disagrees — is a
+        // clean error before any tensor is constructed, so decode can
+        // neither misalign the payload nor trip `HostTensor`'s
+        // debug assertions.
+        let elems = spec
+            .get("elems")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("tensor {name}: missing 'elems'"))?;
+        if elems != expect.max(1) {
+            bail!(
+                "tensor {name}: payload holds {elems} elements but shape \
+                 {shape:?} implies {}",
+                expect.max(1)
+            );
+        }
+        let t = match dtype {
+            "f32" => HostTensor::f32(shape, r.f32_vec(elems)?),
+            "i32" => HostTensor::i32(shape, r.i32_vec(elems)?),
+            other => bail!("tensor {name}: unknown dtype '{other}'"),
+        };
+        names.push(name);
+        values.push(t);
+    }
+    Ok(ModelState::new(values, names))
+}
+
+/// Deserialize a `ckpt/v1` byte container, verifying magic, hash,
+/// schema and internal consistency.  Every failure is a clean error.
+pub fn decode(bytes: &[u8]) -> Result<CheckpointData> {
+    if bytes.len() < MAGIC.len() + 8 + 8 {
+        bail!("checkpoint file too short ({} bytes)", bytes.len());
+    }
+    if &bytes[..8] != MAGIC {
+        bail!("not a checkpoint file (bad magic)");
+    }
+    let body_end = bytes.len() - 8;
+    let stored = u64::from_le_bytes(bytes[body_end..].try_into().unwrap());
+    let computed = fnv1a64(&bytes[..body_end]);
+    if stored != computed {
+        bail!(
+            "checkpoint content hash mismatch (stored {stored:016x}, \
+             computed {computed:016x}): file is corrupt or truncated"
+        );
+    }
+    let header_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let header_end = 16usize
+        .checked_add(header_len)
+        .ok_or_else(|| anyhow!("checkpoint header length overflow"))?;
+    if header_end > body_end {
+        bail!("checkpoint header overruns the file");
+    }
+    let header_text = std::str::from_utf8(&bytes[16..header_end])
+        .context("checkpoint header is not UTF-8")?;
+    let h = parse(header_text).context("parsing checkpoint header")?;
+    let schema = h.req_str("schema")?;
+    if schema != SCHEMA {
+        bail!("unsupported checkpoint schema '{schema}' (this build reads {SCHEMA})");
+    }
+    let iter = req_u64(&h, "iter")?;
+    let cfg = RunCfg::from_json(
+        h.get("cfg")
+            .ok_or_else(|| anyhow!("checkpoint header missing 'cfg'"))?,
+    )
+    .context("parsing embedded run config")?;
+    let fingerprint = h.req_str("fingerprint")?;
+    if fingerprint != cfg.fingerprint() {
+        bail!(
+            "checkpoint fingerprint {fingerprint} does not match its own \
+             embedded config ({}): file is corrupt",
+            cfg.fingerprint()
+        );
+    }
+
+    let sampler_h = h
+        .get("sampler")
+        .ok_or_else(|| anyhow!("checkpoint header missing 'sampler'"))?;
+    let smd_h = h
+        .get("smd")
+        .ok_or_else(|| anyhow!("checkpoint header missing 'smd'"))?;
+    let swa_h = h
+        .get("swa")
+        .ok_or_else(|| anyhow!("checkpoint header missing 'swa'"))?;
+    let ledger_h = h
+        .get("ledger")
+        .ok_or_else(|| anyhow!("checkpoint header missing 'ledger'"))?;
+    let perm_len = req_usize(sampler_h, "perm_len")?;
+    let ledger_trace_len = req_usize(ledger_h, "trace_len")?;
+    let trace_len = req_usize(&h, "trace_len")?;
+    let gate_means_len = req_usize(&h, "gate_means")?;
+    let model_specs = h.req_arr("model")?;
+    let swa_specs = match h.get("swa_model") {
+        Some(Json::Null) | None => None,
+        Some(v) => Some(
+            v.as_arr()
+                .ok_or_else(|| anyhow!("checkpoint 'swa_model' is not a list"))?,
+        ),
+    };
+
+    let mut r = Reader::new(&bytes[header_end..body_end]);
+    // 1. RNG streams
+    let sampler_rng = r.rng()?;
+    let smd_rng = r.rng()?;
+    let sd_rng = r.rng()?;
+    // 2. sampler permutation
+    let perm = r.u32_vec(perm_len)?;
+    // 3. energy ledger
+    let breakdown = EnergyBreakdown {
+        fwd_mac: r.f64()?,
+        bwd_mac: r.f64()?,
+        sram: r.f64()?,
+        dram: r.f64()?,
+        update: r.f64()?,
+    };
+    let macs = r.f64()?;
+    let mut ledger_trace = Vec::with_capacity(ledger_trace_len.min(1 << 20));
+    for _ in 0..ledger_trace_len {
+        let it = r.u64()?;
+        let j = r.f64()?;
+        ledger_trace.push((it, j));
+    }
+    // 4. lifetime means
+    let mut gate_means = Vec::with_capacity(gate_means_len.min(1 << 16));
+    for _ in 0..gate_means_len {
+        gate_means.push(r.mean()?);
+    }
+    let psg_mean = r.mean()?;
+    // 5. metrics trace
+    let mut trace = Vec::with_capacity(trace_len.min(1 << 20));
+    for _ in 0..trace_len {
+        let it = r.u64()?;
+        let loss = r.f64()?;
+        let train_acc = r.f64()?;
+        let joules = r.f64()?;
+        let has_test = r.u8()? != 0;
+        let test = r.f64()?;
+        trace.push(TracePoint {
+            iter: it,
+            loss,
+            train_acc,
+            joules,
+            test_acc: if has_test { Some(test) } else { None },
+        });
+    }
+    // 6./7. tensor payloads
+    let model = read_tensors(model_specs, &mut r)?;
+    let swa_model = match swa_specs {
+        Some(specs) => Some(read_tensors(specs, &mut r)?),
+        None => None,
+    };
+    r.done()?;
+
+    Ok(CheckpointData {
+        iter,
+        model,
+        swa_model,
+        swa: SwaState {
+            n_models: req_u64(swa_h, "n_models")?,
+            start_iter: req_u64(swa_h, "start_iter")?,
+            period: req_u64(swa_h, "period")?.max(1),
+        },
+        sampler: SamplerState {
+            rng: sampler_rng,
+            perm,
+            cursor: req_u64(sampler_h, "cursor")?,
+            epoch: req_u64(sampler_h, "epoch")?,
+        },
+        smd: SmdState {
+            rng: smd_rng,
+            skipped: req_u64(smd_h, "skipped")?,
+            seen: req_u64(smd_h, "seen")?,
+        },
+        sd: SdState { rng: sd_rng },
+        ledger: EnergyLedger {
+            steps_charged: req_u64(ledger_h, "steps_charged")?,
+            steps_skipped: req_u64(ledger_h, "steps_skipped")?,
+            breakdown,
+            macs,
+            trace: ledger_trace,
+        },
+        trace,
+        gate_means,
+        psg_mean,
+        cfg,
+    })
+}
+
+/// Read + decode one checkpoint file.
+pub fn read_checkpoint(path: &std::path::Path) -> Result<CheckpointData> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    decode(&bytes).with_context(|| format!("decoding checkpoint {}", path.display()))
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::config::RunCfg;
+
+    fn toy_model(seed: f32) -> ModelState {
+        ModelState::new(
+            vec![
+                HostTensor::f32(vec![2, 3], (0..6).map(|i| i as f32 + seed).collect()),
+                HostTensor::f32(vec![3], vec![seed, -seed, 0.5]),
+                HostTensor::i32(vec![2], vec![7, -9]),
+            ],
+            vec!["w".into(), "b".into(), "counts".into()],
+        )
+    }
+
+    pub(crate) fn toy_checkpoint() -> CheckpointData {
+        let mut ledger = EnergyLedger::default();
+        ledger.steps_charged = 5;
+        ledger.steps_skipped = 2;
+        ledger.macs = 123.5;
+        ledger.breakdown.fwd_mac = 1e9;
+        ledger.trace = vec![(0, 0.25), (1, 0.5)];
+        let mut psg = Mean::default();
+        psg.push(0.75);
+        CheckpointData {
+            iter: 7,
+            cfg: RunCfg::quick("fam", "e2train", 20),
+            model: toy_model(1.0),
+            swa_model: Some(toy_model(-3.0)),
+            swa: SwaState { n_models: 2, start_iter: 10, period: 1 },
+            sampler: SamplerState {
+                rng: [1, 2, 3, 4],
+                perm: vec![3, 0, 2, 1],
+                cursor: 2,
+                epoch: 1,
+            },
+            smd: SmdState { rng: [5, 6, 7, 8], skipped: 2, seen: 7 },
+            sd: SdState { rng: [9, 10, 11, 12] },
+            ledger,
+            trace: vec![
+                TracePoint {
+                    iter: 0,
+                    loss: 2.302,
+                    train_acc: 0.125,
+                    joules: 0.25,
+                    test_acc: Some(0.1),
+                },
+                TracePoint {
+                    iter: 4,
+                    loss: f64::NAN, // exactness includes non-finite values
+                    train_acc: 0.25,
+                    joules: 0.5,
+                    test_acc: None,
+                },
+            ],
+            gate_means: vec![Mean::from_parts(1.5, 3), Mean::from_parts(0.0, 0)],
+            psg_mean: psg,
+        }
+    }
+
+    /// Bitwise state compare that also covers i32 tensors (the crate's
+    /// `assert_bitwise_eq` is f32-only).
+    fn assert_state_eq(a: &ModelState, b: &ModelState) {
+        assert_eq!(a.names, b.names);
+        for ((n, x), y) in a.names.iter().zip(a.values.iter()).zip(b.values.iter()) {
+            assert_eq!(x.shape, y.shape, "{n}: shape drift");
+            match (&x.data, &y.data) {
+                (TensorData::F32(p), TensorData::F32(q)) => {
+                    let pb: Vec<u32> = p.iter().map(|v| v.to_bits()).collect();
+                    let qb: Vec<u32> = q.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(pb, qb, "{n}: f32 payload drift");
+                }
+                (TensorData::I32(p), TensorData::I32(q)) => {
+                    assert_eq!(p, q, "{n}: i32 payload drift");
+                }
+                _ => panic!("{n}: dtype drift"),
+            }
+        }
+    }
+
+    fn assert_same(a: &CheckpointData, b: &CheckpointData) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.cfg.to_json(), b.cfg.to_json());
+        assert_state_eq(&a.model, &b.model);
+        match (&a.swa_model, &b.swa_model) {
+            (Some(x), Some(y)) => assert_state_eq(x, y),
+            (None, None) => {}
+            _ => panic!("swa_model presence drifted"),
+        }
+        assert_eq!(
+            (a.swa.n_models, a.swa.start_iter, a.swa.period),
+            (b.swa.n_models, b.swa.start_iter, b.swa.period)
+        );
+        assert_eq!(a.sampler, b.sampler);
+        assert_eq!(a.smd, b.smd);
+        assert_eq!(a.sd, b.sd);
+        assert_eq!(a.ledger.steps_charged, b.ledger.steps_charged);
+        assert_eq!(a.ledger.steps_skipped, b.ledger.steps_skipped);
+        assert_eq!(a.ledger.macs.to_bits(), b.ledger.macs.to_bits());
+        assert_eq!(
+            a.ledger.breakdown.total().to_bits(),
+            b.ledger.breakdown.total().to_bits()
+        );
+        assert_eq!(a.ledger.trace, b.ledger.trace);
+        assert_eq!(a.trace.len(), b.trace.len());
+        for (x, y) in a.trace.iter().zip(b.trace.iter()) {
+            assert_eq!(x.iter, y.iter);
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+            assert_eq!(x.train_acc.to_bits(), y.train_acc.to_bits());
+            assert_eq!(x.joules.to_bits(), y.joules.to_bits());
+            assert_eq!(
+                x.test_acc.map(f64::to_bits),
+                y.test_acc.map(f64::to_bits)
+            );
+        }
+        let parts = |ms: &[Mean]| -> Vec<(u64, u64)> {
+            ms.iter()
+                .map(|m| {
+                    let (s, n) = m.parts();
+                    (s.to_bits(), n)
+                })
+                .collect()
+        };
+        assert_eq!(parts(&a.gate_means), parts(&b.gate_means));
+        assert_eq!(parts(&[a.psg_mean.clone()]), parts(&[b.psg_mean.clone()]));
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let data = toy_checkpoint();
+        let bytes = encode(&data);
+        let back = decode(&bytes).unwrap();
+        assert_same(&data, &back);
+        // encoding is deterministic
+        assert_eq!(bytes, encode(&back));
+    }
+
+    #[test]
+    fn roundtrip_without_swa_model() {
+        let mut data = toy_checkpoint();
+        data.swa_model = None;
+        let back = decode(&encode(&data)).unwrap();
+        assert!(back.swa_model.is_none());
+        assert_same(&data, &back);
+    }
+
+    #[test]
+    fn corruption_is_rejected_cleanly() {
+        let bytes = encode(&toy_checkpoint());
+
+        // truncations at every region boundary (and inside them)
+        for cut in [0, 4, 12, 20, bytes.len() / 2, bytes.len() - 1] {
+            let err = decode(&bytes[..cut]).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("too short")
+                    || msg.contains("hash mismatch")
+                    || msg.contains("truncated"),
+                "cut at {cut}: unexpected error {msg}"
+            );
+        }
+        // a single flipped bit anywhere fails the content hash
+        for pos in [9, 17, bytes.len() / 2, bytes.len() - 9] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(decode(&bad).is_err(), "flip at {pos} accepted");
+        }
+        // wrong magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(format!("{:#}", decode(&bad).unwrap_err()).contains("magic"));
+        // empty / garbage files
+        assert!(decode(&[]).is_err());
+        assert!(decode(b"hello world, definitely not a checkpoint").is_err());
+    }
+
+    #[test]
+    fn serving_state_prefers_swa() {
+        let data = toy_checkpoint();
+        assert_eq!(
+            data.serving_state().values[0].as_f32().unwrap(),
+            data.swa_model.as_ref().unwrap().values[0].as_f32().unwrap()
+        );
+        let mut no_swa = data.clone();
+        no_swa.swa_model = None;
+        assert_eq!(
+            no_swa.serving_state().values[0].as_f32().unwrap(),
+            no_swa.model.values[0].as_f32().unwrap()
+        );
+    }
+}

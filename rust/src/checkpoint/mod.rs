@@ -1,0 +1,36 @@
+//! `checkpoint` — durable, versioned training checkpoints with
+//! bitwise-identical resume and cross-process serving hot-loads.
+//!
+//! E2-Train targets edge devices, and edge training gets preempted and
+//! power-cycled; the system-level answer is small persistent state plus
+//! interruption tolerance.  This subsystem extends the repo's standing
+//! determinism contract — resident == host == sharded, bit for bit — to
+//! *time*: a run interrupted at any checkpoint boundary and resumed
+//! (`e2train resume <dir>`, [`crate::coordinator::Trainer::resume`])
+//! produces exactly the metrics and final state of the run that never
+//! stopped (tests/resume_equivalence.rs).
+//!
+//! * [`format`] — the `ckpt/v1` single-file container: JSON header for
+//!   structure, little-endian binary payload for every exact value
+//!   (tensors, RNG words, f64 accumulators), FNV-64 content hash.
+//!   Truncation/corruption is rejected cleanly, never a panic.
+//! * [`registry`] — a directory of checkpoints with an atomically-
+//!   swapped `MANIFEST.json` and keep-last-N / keep-every-M retention.
+//!   Safe for concurrent cross-process readers.
+//! * [`writer`] — the background publish thread the trainer hands
+//!   snapshots to (off the host-side master, so sharded runs checkpoint
+//!   without draining replicas), with backpressure and loud failure.
+//!
+//! The serve side consumes registries through
+//! [`crate::serve::watch_registry`]: a server process polls a registry
+//! directory and hot-loads each new checkpoint into its
+//! [`crate::runtime::SnapshotCell`] with a bumped `snapshot_version` —
+//! trainer→server publishing across processes, no shared memory.
+
+pub mod format;
+pub mod registry;
+pub mod writer;
+
+pub use format::{decode, encode, read_checkpoint, CheckpointData, SCHEMA};
+pub use registry::{CheckpointEntry, CheckpointRegistry, RetentionCfg, REGISTRY_SCHEMA};
+pub use writer::CheckpointWriter;

@@ -1,0 +1,341 @@
+//! Directory-level checkpoint registry.
+//!
+//! A registry is a directory of `ckpt-<iter>.e2c` files plus a
+//! `MANIFEST.json` index (`schema ckpt_registry/v1`).  Both the
+//! checkpoint files and the manifest are written **atomically**
+//! (temp file in the same directory + `rename`), so a concurrent
+//! reader — `e2train resume`, or a serve process hot-loading weights
+//! ([`crate::serve::watch_registry`]) — never observes a torn file.
+//! Write ordering is checkpoint-file-first, manifest-second: anything
+//! the manifest lists is fully on disk.
+//!
+//! Retention is applied at publish time: the newest `keep_last`
+//! checkpoints always survive, and when `keep_every > 0` every
+//! checkpoint whose iteration is a multiple of it is kept forever
+//! (coarse history for rollback/debugging while the tail stays dense).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::hash::fnv1a64_hex;
+use crate::util::json::{parse, Json};
+
+use super::format::{self, CheckpointData};
+
+/// Manifest schema tag.
+pub const REGISTRY_SCHEMA: &str = "ckpt_registry/v1";
+
+const MANIFEST: &str = "MANIFEST.json";
+
+/// Retention policy applied on every publish.
+#[derive(Debug, Clone, Copy)]
+pub struct RetentionCfg {
+    /// Always keep the newest N checkpoints (min 1).
+    pub keep_last: usize,
+    /// Additionally keep every checkpoint with `iter % keep_every == 0`
+    /// (0 = disabled).
+    pub keep_every: u64,
+}
+
+impl Default for RetentionCfg {
+    fn default() -> Self {
+        Self { keep_last: 3, keep_every: 0 }
+    }
+}
+
+/// One manifest row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointEntry {
+    pub iter: u64,
+    /// File name relative to the registry directory.
+    pub file: String,
+    /// FNV-1a-64 hex of the file contents (verified on load).
+    pub hash: String,
+    pub bytes: u64,
+}
+
+/// Handle to a registry directory.  Stateless — every operation reads
+/// the manifest fresh, so multiple handles (and multiple processes)
+/// stay coherent through the atomic manifest swaps.
+pub struct CheckpointRegistry {
+    dir: PathBuf,
+    retention: RetentionCfg,
+}
+
+impl CheckpointRegistry {
+    /// A handle on `dir` (no I/O yet; the directory is created on the
+    /// first publish, and a missing manifest reads as "no checkpoints").
+    pub fn new(dir: impl Into<PathBuf>, retention: RetentionCfg) -> Self {
+        Self { dir: dir.into(), retention }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.dir.join(MANIFEST)
+    }
+
+    /// All published checkpoints, ascending by iteration.  An absent
+    /// manifest is an empty registry; a corrupt one is an error.
+    pub fn entries(&self) -> Result<Vec<CheckpointEntry>> {
+        let path = self.manifest_path();
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading manifest {}", path.display()))
+            }
+        };
+        let v = parse(&text)
+            .with_context(|| format!("parsing manifest {}", path.display()))?;
+        let schema = v.req_str("schema")?;
+        if schema != REGISTRY_SCHEMA {
+            bail!("unsupported registry schema '{schema}'");
+        }
+        let mut out = Vec::new();
+        for row in v.req_arr("checkpoints")? {
+            out.push(CheckpointEntry {
+                iter: row
+                    .get("iter")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("manifest row missing 'iter'"))?,
+                file: row.req_str("file")?.to_string(),
+                hash: row.req_str("hash")?.to_string(),
+                bytes: row.get("bytes").and_then(Json::as_u64).unwrap_or(0),
+            });
+        }
+        out.sort_by_key(|e| e.iter);
+        Ok(out)
+    }
+
+    /// The newest checkpoint entry, if any.
+    pub fn latest(&self) -> Result<Option<CheckpointEntry>> {
+        Ok(self.entries()?.into_iter().last())
+    }
+
+    /// Load + verify one listed checkpoint.
+    pub fn load(&self, entry: &CheckpointEntry) -> Result<CheckpointData> {
+        let path = self.dir.join(&entry.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let hash = fnv1a64_hex(&bytes);
+        if hash != entry.hash {
+            bail!(
+                "checkpoint {} hash {hash} does not match manifest ({}): \
+                 file is corrupt",
+                path.display(),
+                entry.hash
+            );
+        }
+        format::decode(&bytes)
+            .with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+
+    /// Load the newest checkpoint, `None` for an empty registry.
+    pub fn load_latest(&self) -> Result<Option<CheckpointData>> {
+        match self.latest()? {
+            Some(e) => Ok(Some(self.load(&e)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Load the checkpoint published at a specific iteration.
+    pub fn load_iter(&self, iter: u64) -> Result<CheckpointData> {
+        let entries = self.entries()?;
+        let entry = entries.iter().find(|e| e.iter == iter).ok_or_else(|| {
+            anyhow!(
+                "no checkpoint at iter {iter} under {} (have: {})",
+                self.dir.display(),
+                entries
+                    .iter()
+                    .map(|e| e.iter.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+        self.load(entry)
+    }
+
+    /// Serialize + publish one checkpoint: atomic file write, manifest
+    /// update, retention pruning.  Re-publishing an iteration replaces
+    /// its entry.  Single-writer by design (the trainer's writer
+    /// thread); readers in other processes stay safe throughout.
+    pub fn publish(&self, data: &CheckpointData) -> Result<CheckpointEntry> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating registry dir {}", self.dir.display()))?;
+        let bytes = format::encode(data);
+        let entry = CheckpointEntry {
+            iter: data.iter,
+            file: format!("ckpt-{:010}.e2c", data.iter),
+            hash: fnv1a64_hex(&bytes),
+            bytes: bytes.len() as u64,
+        };
+        write_atomic(&self.dir.join(&entry.file), &bytes)?;
+
+        let mut entries = self.entries()?;
+        entries.retain(|e| e.iter != entry.iter);
+        entries.push(entry.clone());
+        entries.sort_by_key(|e| e.iter);
+        let (keep, pruned) = self.split_retained(entries);
+        self.write_manifest(&keep)?;
+        // Files are unlinked only after the manifest stopped listing
+        // them, so a reader never sees a listed-but-missing checkpoint.
+        for p in &pruned {
+            let _ = std::fs::remove_file(self.dir.join(&p.file));
+        }
+        Ok(entry)
+    }
+
+    fn split_retained(
+        &self,
+        entries: Vec<CheckpointEntry>,
+    ) -> (Vec<CheckpointEntry>, Vec<CheckpointEntry>) {
+        let keep_last = self.retention.keep_last.max(1);
+        let n = entries.len();
+        let mut keep = Vec::with_capacity(n);
+        let mut pruned = Vec::new();
+        for (i, e) in entries.into_iter().enumerate() {
+            let in_tail = i + keep_last >= n;
+            let pinned =
+                self.retention.keep_every > 0 && e.iter % self.retention.keep_every == 0;
+            if in_tail || pinned {
+                keep.push(e);
+            } else {
+                pruned.push(e);
+            }
+        }
+        (keep, pruned)
+    }
+
+    fn write_manifest(&self, entries: &[CheckpointEntry]) -> Result<()> {
+        let v = Json::obj(vec![
+            ("schema", Json::str(REGISTRY_SCHEMA)),
+            (
+                "checkpoints",
+                Json::arr(entries.iter().map(|e| {
+                    Json::obj(vec![
+                        ("iter", Json::num(e.iter as f64)),
+                        ("file", Json::str(&e.file)),
+                        ("hash", Json::str(&e.hash)),
+                        ("bytes", Json::num(e.bytes as f64)),
+                    ])
+                })),
+            ),
+        ]);
+        write_atomic(&self.manifest_path(), v.to_string().as_bytes())
+    }
+}
+
+/// Write-then-rename in the target's directory (same filesystem, so the
+/// rename is atomic on POSIX).
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow!("bad target path {}", path.display()))?
+        .to_string_lossy()
+        .to_string();
+    let tmp = path.with_file_name(format!(".{file_name}.tmp-{}", std::process::id()));
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        let _ = std::fs::remove_file(&tmp);
+        format!("publishing {}", path.display())
+    })?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::format::tests::toy_checkpoint;
+    use crate::util::tmp::TempDir;
+
+    fn publish_at(reg: &CheckpointRegistry, iter: u64) -> CheckpointEntry {
+        let mut data = toy_checkpoint();
+        data.iter = iter;
+        reg.publish(&data).unwrap()
+    }
+
+    #[test]
+    fn empty_registry_reads_clean() {
+        let tmp = TempDir::new().unwrap();
+        let reg = CheckpointRegistry::new(
+            tmp.path().join("does-not-exist-yet"),
+            RetentionCfg::default(),
+        );
+        assert!(reg.entries().unwrap().is_empty());
+        assert!(reg.latest().unwrap().is_none());
+        assert!(reg.load_latest().unwrap().is_none());
+        assert!(reg.load_iter(5).is_err());
+    }
+
+    #[test]
+    fn publish_load_roundtrip_and_latest() {
+        let tmp = TempDir::new().unwrap();
+        let reg = CheckpointRegistry::new(tmp.path(), RetentionCfg::default());
+        publish_at(&reg, 10);
+        publish_at(&reg, 20);
+        let latest = reg.latest().unwrap().unwrap();
+        assert_eq!(latest.iter, 20);
+        assert_eq!(reg.load_latest().unwrap().unwrap().iter, 20);
+        assert_eq!(reg.load_iter(10).unwrap().iter, 10);
+        // re-publishing an iteration replaces, not duplicates
+        publish_at(&reg, 20);
+        assert_eq!(
+            reg.entries().unwrap().iter().filter(|e| e.iter == 20).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn retention_keeps_tail_and_pinned() {
+        let tmp = TempDir::new().unwrap();
+        let reg = CheckpointRegistry::new(
+            tmp.path(),
+            RetentionCfg { keep_last: 2, keep_every: 40 },
+        );
+        for iter in [10, 20, 30, 40, 50, 60, 70, 80, 90] {
+            publish_at(&reg, iter);
+        }
+        let iters: Vec<u64> = reg.entries().unwrap().iter().map(|e| e.iter).collect();
+        // tail of 2 (80, 90) + multiples of 40 (40, 80)
+        assert_eq!(iters, vec![40, 80, 90]);
+        // pruned files are actually gone; kept files exist
+        assert!(!tmp.path().join("ckpt-0000000010.e2c").exists());
+        assert!(!tmp.path().join("ckpt-0000000070.e2c").exists());
+        assert!(tmp.path().join("ckpt-0000000040.e2c").exists());
+        assert!(tmp.path().join("ckpt-0000000090.e2c").exists());
+        // everything retained still loads + verifies
+        for e in reg.entries().unwrap() {
+            assert_eq!(reg.load(&e).unwrap().iter, e.iter);
+        }
+    }
+
+    #[test]
+    fn corrupt_file_or_manifest_is_a_clean_error() {
+        let tmp = TempDir::new().unwrap();
+        let reg = CheckpointRegistry::new(tmp.path(), RetentionCfg::default());
+        let e = publish_at(&reg, 5);
+
+        // flip a byte in the checkpoint file -> hash mismatch on load
+        let p = tmp.path().join(&e.file);
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", reg.load_latest().unwrap_err());
+        assert!(err.contains("hash"), "unexpected error: {err}");
+
+        // truncate the file -> still a clean error
+        std::fs::write(&p, &bytes[..bytes.len() / 3]).unwrap();
+        assert!(reg.load_latest().is_err());
+
+        // corrupt manifest -> parse error, not a panic
+        std::fs::write(tmp.path().join(MANIFEST), b"{not json").unwrap();
+        assert!(reg.entries().is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Background checkpoint writer.
+//!
+//! The trainer snapshots its host-side state (for the sharded path
+//! that's the host master — replicas never drain) and hands the
+//! [`CheckpointData`] off here; serialization, hashing and the atomic
+//! registry publish all happen on this thread, so the step loop's only
+//! checkpoint cost is the host snapshot itself.
+//!
+//! The handoff channel has depth 1: at most one checkpoint is queued
+//! while another is being written, so a pathologically slow disk
+//! applies backpressure to the trainer instead of growing a queue of
+//! full model copies.  A failed write parks the error; the next
+//! [`CheckpointWriter::submit`] (or the end-of-run
+//! [`CheckpointWriter::finish`]) surfaces it — a run whose checkpoints
+//! cannot be written fails loudly rather than pretending to be
+//! preemptible.
+
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::format::CheckpointData;
+use super::registry::CheckpointRegistry;
+
+pub struct CheckpointWriter {
+    tx: Option<SyncSender<CheckpointData>>,
+    worker: Option<JoinHandle<()>>,
+    error: Arc<Mutex<Option<anyhow::Error>>>,
+    /// Checkpoints successfully published so far.
+    published: Arc<Mutex<u64>>,
+}
+
+impl CheckpointWriter {
+    /// Spawn the writer thread over a registry handle.
+    pub fn spawn(registry: CheckpointRegistry) -> Self {
+        let (tx, rx) = sync_channel::<CheckpointData>(1);
+        let error = Arc::new(Mutex::new(None));
+        let published = Arc::new(Mutex::new(0u64));
+        let err_slot = error.clone();
+        let pub_slot = published.clone();
+        let worker = std::thread::Builder::new()
+            .name("e2train-ckpt-writer".into())
+            .spawn(move || {
+                while let Ok(data) = rx.recv() {
+                    match registry.publish(&data) {
+                        Ok(_) => *pub_slot.lock().unwrap() += 1,
+                        Err(e) => {
+                            *err_slot.lock().unwrap() = Some(e);
+                            // Stop consuming: the sender sees a closed
+                            // channel and reports the parked error.
+                            return;
+                        }
+                    }
+                }
+            })
+            .expect("spawning checkpoint writer thread");
+        Self { tx: Some(tx), worker: Some(worker), error, published }
+    }
+
+    /// Queue one checkpoint.  Blocks only while a previous checkpoint
+    /// is still being serialized/written (bounded memory); fails with
+    /// the original cause once the writer has died.
+    pub fn submit(&self, data: CheckpointData) -> Result<()> {
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("checkpoint writer already finished"))?;
+        if tx.send(data).is_err() {
+            return Err(self.take_error("checkpoint writer stopped"));
+        }
+        Ok(())
+    }
+
+    /// Checkpoints published so far (telemetry/tests).
+    pub fn published(&self) -> u64 {
+        *self.published.lock().unwrap()
+    }
+
+    /// Flush the queue, join the thread, and surface any deferred write
+    /// error.  Returns the number of checkpoints published.
+    pub fn finish(mut self) -> Result<u64> {
+        self.close_and_join();
+        if self.error.lock().unwrap().is_some() {
+            return Err(self.take_error("checkpoint writer failed"));
+        }
+        Ok(self.published())
+    }
+
+    fn take_error(&self, fallback: &str) -> anyhow::Error {
+        self.error
+            .lock()
+            .unwrap()
+            .take()
+            .unwrap_or_else(|| anyhow!("{fallback}"))
+    }
+
+    fn close_and_join(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for CheckpointWriter {
+    fn drop(&mut self) {
+        // A run that errored out mid-loop still flushes + reaps the
+        // thread; its error (if any) is intentionally swallowed here —
+        // the run's own error is the one the caller sees.
+        self.close_and_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::format::tests::toy_checkpoint;
+    use crate::checkpoint::registry::RetentionCfg;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn writes_flow_through_and_finish_flushes() {
+        let tmp = TempDir::new().unwrap();
+        let reg = CheckpointRegistry::new(tmp.path(), RetentionCfg::default());
+        let w = CheckpointWriter::spawn(CheckpointRegistry::new(
+            tmp.path(),
+            RetentionCfg::default(),
+        ));
+        for iter in [3, 6, 9] {
+            let mut d = toy_checkpoint();
+            d.iter = iter;
+            w.submit(d).unwrap();
+        }
+        assert_eq!(w.finish().unwrap(), 3);
+        let iters: Vec<u64> = reg.entries().unwrap().iter().map(|e| e.iter).collect();
+        assert_eq!(iters, vec![3, 6, 9]);
+    }
+
+    #[test]
+    fn write_failure_surfaces_on_submit_or_finish() {
+        let tmp = TempDir::new().unwrap();
+        // Registry dir is a *file*: create_dir_all fails on publish.
+        let blocked = tmp.path().join("blocked");
+        std::fs::write(&blocked, b"x").unwrap();
+        let w = CheckpointWriter::spawn(CheckpointRegistry::new(
+            &blocked,
+            RetentionCfg::default(),
+        ));
+        // First submit is accepted (depth-1 queue); the failure lands on
+        // a later submit or on finish.
+        let _ = w.submit(toy_checkpoint());
+        let mut failed = w.submit(toy_checkpoint()).is_err();
+        failed |= w.submit(toy_checkpoint()).is_err();
+        let fin = CheckpointWriter::spawn(CheckpointRegistry::new(
+            &blocked,
+            RetentionCfg::default(),
+        ));
+        fin.submit(toy_checkpoint()).unwrap();
+        let fin_err = fin.finish().is_err();
+        assert!(failed || fin_err, "write failure never surfaced");
+        assert!(fin_err, "finish must report the parked error");
+    }
+}

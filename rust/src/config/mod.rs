@@ -51,6 +51,28 @@ impl Default for SdCfg {
     }
 }
 
+/// Durable checkpointing (the `checkpoint` subsystem): write a
+/// `ckpt/v1` file every `every` iterations into the registry at `dir`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptCfg {
+    /// Checkpoint every N iterations (0 = off).
+    pub every: u64,
+    /// Registry directory (created on demand).  Required when
+    /// `every > 0`.
+    pub dir: Option<PathBuf>,
+    /// Retention: always keep the newest N checkpoints.
+    pub keep_last: usize,
+    /// Retention: additionally keep every checkpoint whose iteration is
+    /// a multiple of M forever (0 = none).
+    pub keep_every: u64,
+}
+
+impl Default for CkptCfg {
+    fn default() -> Self {
+        Self { every: 0, dir: None, keep_last: 3, keep_every: 0 }
+    }
+}
+
 /// One training run.
 #[derive(Debug, Clone)]
 pub struct RunCfg {
@@ -88,6 +110,11 @@ pub struct RunCfg {
     /// exercises the sharded machinery on one engine).  When set, it
     /// supersedes `resident` for the step loop.
     pub shards: usize,
+    /// Durable checkpoint cadence + registry (`checkpoint` subsystem):
+    /// when `checkpoint.every > 0`, the trainer publishes a `ckpt/v1`
+    /// file at every boundary and `e2train resume <dir>` continues the
+    /// run bitwise-identically (tests/resume_equivalence.rs).
+    pub checkpoint: CkptCfg,
     pub artifacts_dir: PathBuf,
 }
 
@@ -115,6 +142,7 @@ impl RunCfg {
             resident: true,
             prefetch: true,
             shards: 0,
+            checkpoint: CkptCfg::default(),
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -127,8 +155,8 @@ impl RunCfg {
 
     // ---------------- JSON (de)serialization ----------------
 
-    pub fn to_json(&self) -> Json {
-        let lr = match &self.lr {
+    fn lr_json(&self) -> Json {
+        match &self.lr {
             LrSchedule::Constant { lr0 } => Json::obj(vec![
                 ("kind", Json::str("constant")),
                 ("lr0", Json::num(*lr0)),
@@ -142,8 +170,11 @@ impl RunCfg {
                     Json::arr(boundaries.iter().map(|&b| Json::num(b as f64))),
                 ),
             ]),
-        };
-        let data = match &self.data {
+        }
+    }
+
+    fn data_json(&self) -> Json {
+        match &self.data {
             DataCfg::Synthetic { classes, n_train, n_test, seed } => Json::obj(vec![
                 ("kind", Json::str("synthetic")),
                 ("classes", Json::num(*classes as f64)),
@@ -155,22 +186,30 @@ impl RunCfg {
                 ("kind", Json::str("cifar_bin")),
                 ("dir", Json::str(dir.to_string_lossy())),
             ]),
-        };
+        }
+    }
+
+    fn smd_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.smd.enabled)),
+            ("p", Json::num(self.smd.p)),
+        ])
+    }
+
+    fn sd_json(&self) -> Json {
+        Json::obj(vec![("p_l", Json::num(self.sd.p_l))])
+    }
+
+    pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("family", Json::str(&self.family)),
             ("method", Json::str(&self.method)),
             ("iters", Json::num(self.iters as f64)),
             ("seed", Json::num(self.seed as f64)),
-            ("lr", lr),
-            ("data", data),
-            (
-                "smd",
-                Json::obj(vec![
-                    ("enabled", Json::Bool(self.smd.enabled)),
-                    ("p", Json::num(self.smd.p)),
-                ]),
-            ),
-            ("sd", Json::obj(vec![("p_l", Json::num(self.sd.p_l))])),
+            ("lr", self.lr_json()),
+            ("data", self.data_json()),
+            ("smd", self.smd_json()),
+            ("sd", self.sd_json()),
             ("eval_every", Json::num(self.eval_every as f64)),
             ("swa", Json::Bool(self.swa)),
             ("alpha", Json::num(self.alpha)),
@@ -179,54 +218,161 @@ impl RunCfg {
             ("prefetch", Json::Bool(self.prefetch)),
             ("shards", Json::num(self.shards as f64)),
             (
+                "checkpoint",
+                Json::obj(vec![
+                    ("every", Json::num(self.checkpoint.every as f64)),
+                    (
+                        "dir",
+                        match &self.checkpoint.dir {
+                            Some(d) => Json::str(d.to_string_lossy()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("keep_last", Json::num(self.checkpoint.keep_last as f64)),
+                    ("keep_every", Json::num(self.checkpoint.keep_every as f64)),
+                ]),
+            ),
+            (
                 "artifacts_dir",
                 Json::str(self.artifacts_dir.to_string_lossy()),
             ),
         ])
     }
 
+    /// JSON of exactly the fields the bitwise-resume contract depends
+    /// on.  Execution-layout knobs (`resident` / `prefetch` / `shards`)
+    /// are deliberately **excluded**: those paths are bitwise
+    /// interchangeable (tests/{resident,shard}_equivalence.rs), so a
+    /// checkpoint written by a resident run may legally resume sharded
+    /// and vice versa.  Paths and checkpoint cadence are excluded too —
+    /// relocating artifacts (`resume --artifacts`) or the CIFAR
+    /// binaries (`resume --data-dir`) or re-checkpointing on a
+    /// different schedule does not change the training stream.
+    pub fn determinism_json(&self) -> Json {
+        // The CIFAR `dir` is a mount point, not an identity: a
+        // preempted edge run must stay resumable after its storage
+        // comes back at a different path.  The synthetic generator's
+        // parameters *are* its identity and stay in.
+        let data = match &self.data {
+            DataCfg::Synthetic { .. } => self.data_json(),
+            DataCfg::CifarBin { .. } => {
+                Json::obj(vec![("kind", Json::str("cifar_bin"))])
+            }
+        };
+        Json::obj(vec![
+            ("family", Json::str(&self.family)),
+            ("method", Json::str(&self.method)),
+            ("iters", Json::num(self.iters as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("lr", self.lr_json()),
+            ("data", data),
+            ("smd", self.smd_json()),
+            ("sd", self.sd_json()),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("swa", Json::Bool(self.swa)),
+            ("alpha", Json::num(self.alpha)),
+            ("beta", Json::num(self.beta)),
+        ])
+    }
+
+    /// FNV-1a-64 hex fingerprint of [`RunCfg::determinism_json`] —
+    /// stamped into every checkpoint and verified on resume.
+    pub fn fingerprint(&self) -> String {
+        crate::util::hash::fnv1a64_hex(self.determinism_json().to_string().as_bytes())
+    }
+
+    /// Reject object keys this version does not understand — catches
+    /// launcher-file drift (a typo'd or stale knob silently falling back
+    /// to its default is exactly how a "checkpointed" run ends up never
+    /// checkpointing).  Keys starting with `_` are comments and pass
+    /// (`"_comment"` in the shipped launchers).
+    fn check_keys(v: &Json, allowed: &[&str], ctx: &str) -> Result<()> {
+        if let Some(m) = v.as_obj() {
+            for k in m.keys() {
+                if !k.starts_with('_') && !allowed.contains(&k.as_str()) {
+                    return Err(anyhow!(
+                        "unknown {ctx} key '{k}' (known keys: {})",
+                        allowed.join(", ")
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
     pub fn from_json(v: &Json) -> Result<Self> {
+        Self::check_keys(
+            v,
+            &[
+                "family", "method", "iters", "seed", "lr", "data", "smd", "sd",
+                "eval_every", "swa", "alpha", "beta", "resident", "prefetch",
+                "shards", "checkpoint", "artifacts_dir",
+            ],
+            "run-config",
+        )?;
         let family = v.req_str("family")?.to_string();
         let method = v.req_str("method")?.to_string();
         let iters = v.req_f64("iters")? as u64;
         let mut cfg = RunCfg::quick(&family, &method, iters);
         cfg.seed = v.get("seed").and_then(Json::as_u64).unwrap_or(0);
         if let Some(lr) = v.get("lr") {
+            // Per-kind allowlists: a knob belonging to the *other*
+            // variant is exactly as dead as a typo'd one.
             cfg.lr = match lr.req_str("kind")? {
-                "constant" => LrSchedule::Constant { lr0: lr.req_f64("lr0")? },
-                "step" => LrSchedule::Step {
-                    lr0: lr.req_f64("lr0")?,
-                    decay: lr.req_f64("decay")?,
-                    boundaries: lr
-                        .req_arr("boundaries")?
-                        .iter()
-                        .filter_map(Json::as_u64)
-                        .collect(),
-                },
+                "constant" => {
+                    Self::check_keys(lr, &["kind", "lr0"], "lr(constant)")?;
+                    LrSchedule::Constant { lr0: lr.req_f64("lr0")? }
+                }
+                "step" => {
+                    Self::check_keys(
+                        lr,
+                        &["kind", "lr0", "decay", "boundaries"],
+                        "lr(step)",
+                    )?;
+                    LrSchedule::Step {
+                        lr0: lr.req_f64("lr0")?,
+                        decay: lr.req_f64("decay")?,
+                        boundaries: lr
+                            .req_arr("boundaries")?
+                            .iter()
+                            .filter_map(Json::as_u64)
+                            .collect(),
+                    }
+                }
                 other => return Err(anyhow!("unknown lr kind {other}")),
             };
         }
         if let Some(d) = v.get("data") {
             cfg.data = match d.req_str("kind")? {
-                "synthetic" => DataCfg::Synthetic {
-                    classes: d.req_f64("classes")? as usize,
-                    n_train: d.req_f64("n_train")? as usize,
-                    n_test: d.req_f64("n_test")? as usize,
-                    seed: d.get("seed").and_then(Json::as_u64).unwrap_or(0),
-                },
-                "cifar_bin" => DataCfg::CifarBin {
-                    dir: PathBuf::from(d.req_str("dir")?),
-                },
+                "synthetic" => {
+                    Self::check_keys(
+                        d,
+                        &["kind", "classes", "n_train", "n_test", "seed"],
+                        "data(synthetic)",
+                    )?;
+                    DataCfg::Synthetic {
+                        classes: d.req_f64("classes")? as usize,
+                        n_train: d.req_f64("n_train")? as usize,
+                        n_test: d.req_f64("n_test")? as usize,
+                        seed: d.get("seed").and_then(Json::as_u64).unwrap_or(0),
+                    }
+                }
+                "cifar_bin" => {
+                    Self::check_keys(d, &["kind", "dir"], "data(cifar_bin)")?;
+                    DataCfg::CifarBin { dir: PathBuf::from(d.req_str("dir")?) }
+                }
                 other => return Err(anyhow!("unknown data kind {other}")),
             };
         }
         if let Some(s) = v.get("smd") {
+            Self::check_keys(s, &["enabled", "p"], "smd")?;
             cfg.smd = SmdCfg {
                 enabled: s.get("enabled").and_then(Json::as_bool).unwrap_or(false),
                 p: s.get("p").and_then(Json::as_f64).unwrap_or(0.5),
             };
         }
         if let Some(s) = v.get("sd") {
+            Self::check_keys(s, &["p_l"], "sd")?;
             cfg.sd = SdCfg { p_l: s.get("p_l").and_then(Json::as_f64).unwrap_or(0.5) };
         }
         cfg.eval_every = v.get("eval_every").and_then(Json::as_u64).unwrap_or(0);
@@ -236,6 +382,21 @@ impl RunCfg {
         cfg.resident = v.get("resident").and_then(Json::as_bool).unwrap_or(true);
         cfg.prefetch = v.get("prefetch").and_then(Json::as_bool).unwrap_or(true);
         cfg.shards = v.get("shards").and_then(Json::as_usize).unwrap_or(0);
+        if let Some(c) = v.get("checkpoint") {
+            Self::check_keys(c, &["every", "dir", "keep_last", "keep_every"], "checkpoint")?;
+            cfg.checkpoint = CkptCfg {
+                every: c.get("every").and_then(Json::as_u64).unwrap_or(0),
+                dir: c.get("dir").and_then(Json::as_str).map(PathBuf::from),
+                keep_last: c.get("keep_last").and_then(Json::as_usize).unwrap_or(3),
+                keep_every: c.get("keep_every").and_then(Json::as_u64).unwrap_or(0),
+            };
+            if cfg.checkpoint.every > 0 && cfg.checkpoint.dir.is_none() {
+                return Err(anyhow!(
+                    "checkpoint.every = {} but checkpoint.dir is unset",
+                    cfg.checkpoint.every
+                ));
+            }
+        }
         if let Some(d) = v.get("artifacts_dir").and_then(Json::as_str) {
             cfg.artifacts_dir = PathBuf::from(d);
         }
@@ -268,6 +429,12 @@ mod tests {
         cfg.resident = false;
         cfg.prefetch = false;
         cfg.shards = 2;
+        cfg.checkpoint = CkptCfg {
+            every: 25,
+            dir: Some(PathBuf::from("ckpts/run1")),
+            keep_last: 2,
+            keep_every: 50,
+        };
         let dir = TempDir::new().unwrap();
         let p = dir.path().join("run.json");
         cfg.save(&p).unwrap();
@@ -281,6 +448,66 @@ mod tests {
         assert_eq!(back.lr, cfg.lr);
         assert!(!back.resident && !back.prefetch);
         assert_eq!(back.shards, 2);
+        assert_eq!(back.checkpoint, cfg.checkpoint);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        let base = RunCfg::quick("f", "sgd32", 5).to_json();
+        // a stale/typo'd top-level knob must not silently no-op
+        let mut m = base.as_obj().unwrap().clone();
+        m.insert("checkpoint_evry".into(), Json::num(10.0));
+        let err = RunCfg::from_json(&Json::Obj(m)).unwrap_err();
+        assert!(format!("{err:#}").contains("checkpoint_evry"));
+        // ...nor a nested one
+        let mut m = base.as_obj().unwrap().clone();
+        m.insert(
+            "checkpoint".into(),
+            Json::obj(vec![("evry", Json::num(10.0))]),
+        );
+        assert!(RunCfg::from_json(&Json::Obj(m)).is_err());
+        // checkpointing without a registry dir is a config error
+        let mut m = base.as_obj().unwrap().clone();
+        m.insert(
+            "checkpoint".into(),
+            Json::obj(vec![("every", Json::num(10.0))]),
+        );
+        let err = RunCfg::from_json(&Json::Obj(m)).unwrap_err();
+        assert!(format!("{err:#}").contains("checkpoint.dir"));
+    }
+
+    #[test]
+    fn fingerprint_tracks_determinism_fields_only() {
+        let a = RunCfg::quick("f", "e2train", 100);
+        // layout knobs don't change the fingerprint...
+        let mut b = a.clone();
+        b.resident = false;
+        b.prefetch = false;
+        b.shards = 3;
+        b.artifacts_dir = PathBuf::from("elsewhere");
+        b.checkpoint.every = 7;
+        b.checkpoint.dir = Some(PathBuf::from("x"));
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // ...stream-relevant knobs do
+        let mut c = a.clone();
+        c.seed = 1;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let mut d = a.clone();
+        d.smd.p = 0.25;
+        assert_ne!(a.fingerprint(), d.fingerprint());
+        let mut e = a.clone();
+        e.iters = 101;
+        assert_ne!(a.fingerprint(), e.fingerprint());
+        // CIFAR mount point is relocatable; synthetic params are not
+        let mut f = a.clone();
+        f.data = DataCfg::CifarBin { dir: PathBuf::from("/mnt/sd/cifar") };
+        let mut g = f.clone();
+        g.data = DataCfg::CifarBin { dir: PathBuf::from("/data/cifar") };
+        assert_eq!(f.fingerprint(), g.fingerprint());
+        assert_ne!(a.fingerprint(), f.fingerprint());
+        let mut h = a.clone();
+        h.data = DataCfg::Synthetic { classes: 10, n_train: 999, n_test: 512, seed: 0 };
+        assert_ne!(a.fingerprint(), h.fingerprint());
     }
 
     #[test]

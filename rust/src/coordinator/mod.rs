@@ -15,6 +15,6 @@ pub mod sd;
 pub mod smd;
 pub mod trainer;
 
-pub use sd::SdScheduler;
-pub use smd::SmdScheduler;
+pub use sd::{SdScheduler, SdState};
+pub use smd::{SmdScheduler, SmdState};
 pub use trainer::{RunOutcome, Trainer};

@@ -10,6 +10,14 @@
 
 use crate::util::Rng;
 
+/// Exported scheduler position (`checkpoint` subsystem).  The survival
+/// curve is derived from `(num_blocks, p_l)` — config, not state — so
+/// only the RNG stream needs capturing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SdState {
+    pub rng: [u64; 4],
+}
+
 pub struct SdScheduler {
     rng: Rng,
     survival: Vec<f64>,
@@ -34,6 +42,19 @@ impl SdScheduler {
         let n = num_blocks.max(1) as f64;
         let p_l = 1.0 - (1.0 - mean_active) * 2.0 * n / (n + 1.0);
         Self::new(num_blocks, p_l.clamp(0.0, 1.0), seed)
+    }
+
+    /// Export the stream position for a checkpoint.
+    pub fn export(&self) -> SdState {
+        SdState { rng: self.rng.state() }
+    }
+
+    /// Rebuild mid-stream with the schedule re-derived from config;
+    /// `None` for a corrupt (all-zero) RNG state.
+    pub fn restore(num_blocks: usize, p_l: f64, st: &SdState) -> Option<Self> {
+        let mut s = Self::new(num_blocks, p_l, 0);
+        s.rng = Rng::from_state(st.rng)?;
+        Some(s)
     }
 
     /// Sample a per-block {0,1} mask for one mini-batch.

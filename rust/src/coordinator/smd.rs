@@ -8,6 +8,16 @@
 
 use crate::util::Rng;
 
+/// Exported scheduler position (`checkpoint` subsystem): the RNG stream
+/// plus the drop counters, so a restored scheduler continues the exact
+/// skip/keep sequence *and* reports the same observed drop rate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SmdState {
+    pub rng: [u64; 4],
+    pub skipped: u64,
+    pub seen: u64,
+}
+
 pub struct SmdScheduler {
     rng: Rng,
     pub p: f64,
@@ -19,6 +29,26 @@ pub struct SmdScheduler {
 impl SmdScheduler {
     pub fn new(enabled: bool, p: f64, seed: u64) -> Self {
         Self { rng: Rng::seed_from_u64(seed), p, enabled, skipped: 0, seen: 0 }
+    }
+
+    /// Export the stream position for a checkpoint.
+    pub fn export(&self) -> SmdState {
+        SmdState { rng: self.rng.state(), skipped: self.skipped, seen: self.seen }
+    }
+
+    /// Rebuild mid-stream; `None` for a corrupt (all-zero) RNG state or
+    /// counters that contradict each other.
+    pub fn restore(enabled: bool, p: f64, st: &SmdState) -> Option<Self> {
+        if st.skipped > st.seen {
+            return None;
+        }
+        Some(Self {
+            rng: Rng::from_state(st.rng)?,
+            p,
+            enabled,
+            skipped: st.skipped,
+            seen: st.seen,
+        })
     }
 
     /// Should this iteration's mini-batch be dropped?

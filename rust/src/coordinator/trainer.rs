@@ -25,6 +25,17 @@
 //! consume the whole batch — all shard slices — exactly like the
 //! single-device loop; SWA snapshots and serve publishing read the
 //! sharded master state without any device round-trip.
+//!
+//! `cfg.checkpoint.every > 0` publishes a durable `ckpt/v1` checkpoint
+//! (`crate::checkpoint`) at every boundary, off the host-side state via
+//! a background writer.  The checkpoint captures the complete loop
+//! state — model/momenta/gates/run_mean, the SWA accumulator, every RNG
+//! stream at its exact position (a *shadow sampler* replays the batch
+//! stream's draws on this thread, so the position is exportable even
+//! while the live sampler runs ahead on the prefetch worker), the
+//! energy ledger and metric accumulators — so [`Trainer::resume`]
+//! continues **bitwise identically** to the run that never stopped, on
+//! any execution path (tests/resume_equivalence.rs).
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -32,8 +43,11 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::checkpoint::{CheckpointData, CheckpointRegistry, CheckpointWriter, RetentionCfg};
 use crate::config::{DataCfg, RunCfg};
-use crate::data::{cifar, prefetch, synthetic, AugmentCfg, Dataset, Prefetcher, Sampler};
+use crate::data::{
+    cifar, prefetch, synthetic, AugmentCfg, Dataset, Prefetcher, Sampler, SamplerState,
+};
 use crate::energy::{EnergyLedger, EnergyModel};
 use crate::metrics::{Mean, RunMetrics};
 use crate::optim::SwaState;
@@ -113,6 +127,63 @@ impl BatchSource {
             },
         }
     }
+}
+
+/// How a run starts: a fresh init (optionally warm-started by name
+/// migration, the fine-tune path) or an exact checkpoint restore.
+enum Start {
+    Fresh(Option<ModelState>),
+    Resume(Box<CheckpointData>),
+}
+
+/// Where the batch stream starts: a fresh seed or an exported mid-run
+/// position.  Threaded into every batch-source variant *and* the shadow
+/// sampler, so all of them stand at the same point of the same stream.
+enum SamplerStart {
+    Seed(u64),
+    State(SamplerState),
+}
+
+impl SamplerStart {
+    fn build(&self, dataset_len: usize, batch: usize, augment: AugmentCfg) -> Result<Sampler> {
+        match self {
+            SamplerStart::Seed(s) => Ok(Sampler::new(dataset_len, batch, augment, *s)),
+            SamplerStart::State(st) => Sampler::restore(st, dataset_len, batch, augment),
+        }
+    }
+}
+
+/// Assemble one checkpoint from the loop's live state (free function so
+/// the borrow of each piece stays explicit at the call sites).
+#[allow(clippy::too_many_arguments)]
+fn snapshot_checkpoint(
+    cfg: &RunCfg,
+    iter: u64,
+    loop_state: &LoopState,
+    shadow: &Sampler,
+    smd: &SmdScheduler,
+    sd: &SdScheduler,
+    swa: &SwaState,
+    swa_model: &Option<ModelState>,
+    ledger: &EnergyLedger,
+    metrics: &RunMetrics,
+    gate_means: &[Mean],
+    psg_mean: &Mean,
+) -> Result<CheckpointData> {
+    Ok(CheckpointData {
+        iter,
+        cfg: cfg.clone(),
+        model: loop_state.snapshot()?,
+        swa_model: swa_model.clone(),
+        swa: swa.clone(),
+        sampler: shadow.export(),
+        smd: smd.export(),
+        sd: sd.export(),
+        ledger: ledger.clone(),
+        trace: metrics.trace.clone(),
+        gate_means: gate_means.to_vec(),
+        psg_mean: psg_mean.clone(),
+    })
 }
 
 /// Where the training set lives before the step loop starts.
@@ -218,8 +289,66 @@ impl<'e> Trainer<'e> {
     }
 
     /// Run the configured number of iterations starting from a fresh
-    /// init (or from `from_state` when resuming / fine-tuning).
+    /// init (or from `from_state` when warm-starting / fine-tuning).
     pub fn run(&mut self, from_state: Option<ModelState>) -> Result<RunOutcome> {
+        self.run_inner(Start::Fresh(from_state))
+    }
+
+    /// Continue a checkpointed run from its exact loop state.  For a
+    /// matching configuration the continuation is **bitwise identical**
+    /// to the run that never stopped — metrics trace, energy ledger and
+    /// final model state (tests/resume_equivalence.rs).  The execution
+    /// layout may legally differ (a resident checkpoint can resume
+    /// sharded and vice versa — those paths are bitwise interchangeable);
+    /// anything determinism-relevant must match, enforced through the
+    /// config fingerprint.
+    pub fn resume(&mut self, ckpt: CheckpointData) -> Result<RunOutcome> {
+        let want = self.cfg.fingerprint();
+        let got = ckpt.cfg.fingerprint();
+        if got != want {
+            return Err(anyhow!(
+                "checkpoint fingerprint {got} does not match this run's {want}: \
+                 resume requires the identical determinism-relevant config \
+                 (family/method/iters/seed/lr/data/smd/sd/eval_every/swa/alpha/beta)"
+            ));
+        }
+        if ckpt.iter > self.cfg.iters {
+            return Err(anyhow!(
+                "checkpoint is at iter {} but the run is configured for {} iters",
+                ckpt.iter,
+                self.cfg.iters
+            ));
+        }
+        self.run_inner(Start::Resume(Box::new(ckpt)))
+    }
+
+    /// Validate that a checkpoint's model (and SWA) state belongs to
+    /// this artifact — [`ModelState::matches_spec`] against the
+    /// manifest's state spec, the same comparison the serve registry
+    /// watcher applies before hot-loading.  (The fingerprint already
+    /// pins family/method; this catches a checkpoint file paired with
+    /// a drifted artifact.)
+    fn check_resume_state(&self, ck: &CheckpointData) -> Result<()> {
+        let spec = self.program.manifest.state_spec();
+        if !ck.model.matches_spec(&spec) {
+            return Err(anyhow!(
+                "checkpoint state tensors do not match artifact {}/{} \
+                 (names/shapes in manifest order)",
+                self.cfg.family,
+                self.cfg.method
+            ));
+        }
+        if let Some(sw) = &ck.swa_model {
+            if !sw.matches_spec(&spec) {
+                return Err(anyhow!(
+                    "checkpoint SWA state does not match the artifact's state layout"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn run_inner(&mut self, start: Start) -> Result<RunOutcome> {
         // The synchronous-sampling path needs the decoded train set on
         // this thread; materialize a deferred CIFAR source up front.
         // (With prefetch on, the worker decodes it instead.)
@@ -228,12 +357,61 @@ impl<'e> Trainer<'e> {
         } else {
             Some(self.train_set()?)
         };
+        // Training-set length without materializing a deferred CIFAR
+        // source (its record count comes from file metadata) — the
+        // shadow sampler and restore validation need it.
+        let train_len = match &self.train_data {
+            TrainData::Ready(d) => d.n,
+            TrainData::DeferredCifar(f) => f.n,
+        };
         let m = &self.program.manifest;
-        let init_state = match from_state {
-            // Name-based migration handles method changes (e.g. resuming
-            // a sgd32-pretrained trunk under e2train, which adds gates).
-            Some(s) => ModelState::init_from(m, self.cfg.seed, &s),
-            None => ModelState::init(m, self.cfg.seed),
+        let num_gated = m.num_gated();
+
+        // Loop-state defaults for a fresh run; a resume overwrites all
+        // of them wholesale from the checkpoint.
+        let mut start_iter = 0u64;
+        let mut sampler_start = SamplerStart::Seed(self.cfg.seed ^ 0xda7a);
+        let mut smd =
+            SmdScheduler::new(self.cfg.smd.enabled, self.cfg.smd.p, self.cfg.seed ^ 0x50d);
+        let mut sd = SdScheduler::new(num_gated, self.cfg.sd.p_l, self.cfg.seed ^ 0x5d);
+        let mut swa = SwaState::new(self.cfg.iters / 2, (self.cfg.iters / 20).max(1));
+        let mut swa_model: Option<ModelState> = None;
+        let mut ledger = EnergyLedger::default();
+        let mut metrics = RunMetrics::default();
+        let mut gate_means: Vec<Mean> = vec![Mean::default(); num_gated];
+        let mut psg_mean = Mean::default();
+
+        let init_state = match start {
+            Start::Fresh(from_state) => match from_state {
+                // Name-based migration handles method changes (e.g.
+                // resuming a sgd32-pretrained trunk under e2train,
+                // which adds gates).
+                Some(s) => ModelState::init_from(m, self.cfg.seed, &s),
+                None => ModelState::init(m, self.cfg.seed),
+            },
+            Start::Resume(ck) => {
+                self.check_resume_state(&ck)?;
+                let ck = *ck;
+                if ck.gate_means.len() != num_gated {
+                    return Err(anyhow!(
+                        "checkpoint tracks {} gates, artifact has {num_gated}",
+                        ck.gate_means.len()
+                    ));
+                }
+                start_iter = ck.iter;
+                sampler_start = SamplerStart::State(ck.sampler);
+                smd = SmdScheduler::restore(self.cfg.smd.enabled, self.cfg.smd.p, &ck.smd)
+                    .ok_or_else(|| anyhow!("checkpoint SMD scheduler state is corrupt"))?;
+                sd = SdScheduler::restore(num_gated, self.cfg.sd.p_l, &ck.sd)
+                    .ok_or_else(|| anyhow!("checkpoint SD scheduler state is corrupt"))?;
+                swa = ck.swa;
+                swa_model = ck.swa_model;
+                ledger = ck.ledger;
+                metrics.trace = ck.trace;
+                gate_means = ck.gate_means;
+                psg_mean = ck.psg_mean;
+                ck.model
+            }
         };
         let mut loop_state = if self.cfg.shards >= 1 {
             LoopState::Sharded(Box::new(ShardedTrainer::new(
@@ -247,9 +425,36 @@ impl<'e> Trainer<'e> {
         } else {
             LoopState::Host(init_state)
         };
-        let num_gated = m.num_gated();
         let needs_mask = m.method.gating == "mask";
-        let sampler_seed = self.cfg.seed ^ 0xda7a;
+
+        // Durable checkpointing: a background writer over the registry,
+        // plus the shadow sampler that tracks the batch stream's
+        // position on this thread (the live sampler may be ahead on the
+        // prefetch worker; consumption order is what a checkpoint must
+        // capture).  Both restart from `sampler_start`, so shadow and
+        // stream stand at the same point on fresh *and* resumed runs.
+        let ckpt_every = self.cfg.checkpoint.every;
+        let mut ckpt_writer: Option<CheckpointWriter> = None;
+        let mut shadow: Option<Sampler> = None;
+        if ckpt_every > 0 {
+            let dir = self.cfg.checkpoint.dir.clone().ok_or_else(|| {
+                anyhow!("checkpoint.every = {ckpt_every} but checkpoint.dir is unset")
+            })?;
+            let registry = CheckpointRegistry::new(
+                dir,
+                RetentionCfg {
+                    keep_last: self.cfg.checkpoint.keep_last,
+                    keep_every: self.cfg.checkpoint.keep_every,
+                },
+            );
+            ckpt_writer = Some(CheckpointWriter::spawn(registry));
+            shadow = Some(sampler_start.build(
+                train_len,
+                self.program.batch(),
+                AugmentCfg::default(),
+            )?);
+        }
+
         let mut prefetch_depth: Option<usize> = None;
         // Assembly time of the probe batches: they are the stream's
         // real first batches (replayed to the loop), so their cost
@@ -262,20 +467,29 @@ impl<'e> Trainer<'e> {
                 // depth auto-tuner needs decoded probe batches, so
                 // deferred ingestion keeps the classic double buffer;
                 // the batch stream itself is bit-identical (the worker
-                // builds the same sampler seed over the same records).
+                // builds the same sampler start over the same records —
+                // a fresh seed, or the restored mid-run position).
                 let depth = prefetch::DEFAULT_DEPTH;
                 prefetch_depth = Some(depth);
                 let files = files.clone();
-                BatchSource::Prefetch {
-                    staged: VecDeque::new(),
-                    pre: Prefetcher::spawn_deferred(
+                let batch = self.program.batch();
+                let pre = match &sampler_start {
+                    SamplerStart::Seed(s) => Prefetcher::spawn_deferred(
                         move || files.decode(),
-                        self.program.batch(),
+                        batch,
                         AugmentCfg::default(),
-                        sampler_seed,
+                        *s,
                         depth,
                     ),
-                }
+                    SamplerStart::State(st) => Prefetcher::spawn_deferred_resume(
+                        move || files.decode(),
+                        batch,
+                        AugmentCfg::default(),
+                        st.clone(),
+                        depth,
+                    ),
+                };
+                BatchSource::Prefetch { staged: VecDeque::new(), pre }
             }
             (TrainData::Ready(data), true) => {
                 // Depth auto-tuning: assemble (and time) the first batches
@@ -286,12 +500,11 @@ impl<'e> Trainer<'e> {
                 // batch stream is bit-identical to the synchronous path.
                 const PROBE_BATCHES: usize = 2;
                 let data = data.clone();
-                let mut sampler = Sampler::new(
+                let mut sampler = sampler_start.build(
                     data.n,
                     self.program.batch(),
                     AugmentCfg::default(),
-                    sampler_seed,
-                );
+                )?;
                 let t0 = Instant::now();
                 let staged: VecDeque<(HostTensor, HostTensor)> = (0..PROBE_BATCHES)
                     .map(|_| sampler.next_batch(&data))
@@ -313,26 +526,14 @@ impl<'e> Trainer<'e> {
             }
             (_, false) => {
                 let data = sync_data.expect("materialized above");
-                let sampler = Sampler::new(
+                let sampler = sampler_start.build(
                     data.n,
                     self.program.batch(),
                     AugmentCfg::default(),
-                    sampler_seed,
-                );
+                )?;
                 BatchSource::Sync { sampler, data }
             }
         };
-        let mut smd =
-            SmdScheduler::new(self.cfg.smd.enabled, self.cfg.smd.p, self.cfg.seed ^ 0x50d);
-        let mut sd = SdScheduler::new(num_gated, self.cfg.sd.p_l, self.cfg.seed ^ 0x5d);
-
-        let mut swa = SwaState::new(self.cfg.iters / 2, (self.cfg.iters / 20).max(1));
-        let mut swa_model: Option<ModelState> = None;
-
-        let mut ledger = EnergyLedger::default();
-        let mut metrics = RunMetrics::default();
-        let mut gate_means: Vec<Mean> = vec![Mean::default(); num_gated];
-        let mut psg_mean = Mean::default();
         let record_every = (self.cfg.iters / 50).max(1);
 
         // Clock the loop itself, after pipeline setup.  The auto-tune
@@ -341,7 +542,22 @@ impl<'e> Trainer<'e> {
         // above — so the prefetch-on vs prefetch-off steps/s comparison
         // in BENCH_runtime.json measures the same work on both paths.
         let t0 = Instant::now();
-        for iter in 0..self.cfg.iters {
+        for iter in start_iter..self.cfg.iters {
+            // Checkpoint at the boundary *before* executing `iter`: the
+            // loop state here is exactly the state after `iter - 1`, so
+            // the file is identical whether the process died at this
+            // point or kept going — which is what makes "interrupt at k
+            // + resume" indistinguishable from never stopping.  The
+            // boundary the run started from is skipped (it is already
+            // on disk).
+            if let (Some(w), Some(sh)) = (&ckpt_writer, &shadow) {
+                if iter != start_iter && iter % ckpt_every == 0 {
+                    w.submit(snapshot_checkpoint(
+                        &self.cfg, iter, &loop_state, sh, &smd, &sd, &swa,
+                        &swa_model, &ledger, &metrics, &gate_means, &psg_mean,
+                    )?)?;
+                }
+            }
             let lr = self.cfg.lr.at(iter) as f32;
             if smd.skip() {
                 // SMD: the batch is consumed (sampling with limited
@@ -351,10 +567,16 @@ impl<'e> Trainer<'e> {
                 // batch, all shard slices included — slicing happens
                 // inside the sharded step, downstream of this stream.
                 let _ = source.next_batch()?;
+                if let Some(sh) = shadow.as_mut() {
+                    sh.skip_batch();
+                }
                 ledger.skip();
                 continue;
             }
             let (x, y) = source.next_batch()?;
+            if let Some(sh) = shadow.as_mut() {
+                sh.skip_batch();
+            }
             let mask = if needs_mask { Some(sd.sample()) } else { None };
             let hp = StepHyper {
                 lr,
@@ -421,6 +643,31 @@ impl<'e> Trainer<'e> {
                 };
                 metrics.record(iter, sm.loss, train_acc, ledger.total_joules(), test_acc);
             }
+        }
+
+        // Final checkpoint at the `iters` boundary (regardless of
+        // divisibility): resuming it re-derives the final outcome, and
+        // a registry watcher serving this run picks up the last weights
+        // (SWA average included via the checkpoint's serving state).
+        if let (Some(w), Some(sh)) = (&ckpt_writer, &shadow) {
+            if self.cfg.iters != start_iter {
+                w.submit(snapshot_checkpoint(
+                    &self.cfg, self.cfg.iters, &loop_state, sh, &smd, &sd, &swa,
+                    &swa_model, &ledger, &metrics, &gate_means, &psg_mean,
+                )?)?;
+            }
+        }
+        if let Some(w) = ckpt_writer.take() {
+            let published = w.finish()?;
+            eprintln!(
+                "[ckpt] {published} checkpoint(s) published -> {}",
+                self.cfg
+                    .checkpoint
+                    .dir
+                    .as_deref()
+                    .unwrap_or_else(|| std::path::Path::new("?"))
+                    .display()
+            );
         }
 
         // Final evaluation — SWA weights if averaging ran.

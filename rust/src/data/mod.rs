@@ -8,7 +8,7 @@ pub mod sampler;
 pub mod synthetic;
 
 pub use prefetch::Prefetcher;
-pub use sampler::{shard_ranges, slice_batch, AugmentCfg, Sampler};
+pub use sampler::{shard_ranges, slice_batch, AugmentCfg, Sampler, SamplerState};
 
 /// An in-memory image-classification dataset, NHWC f32 + i32 labels.
 #[derive(Debug, Clone)]

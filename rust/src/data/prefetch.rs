@@ -18,7 +18,7 @@ use anyhow::{anyhow, Result};
 
 use crate::runtime::HostTensor;
 
-use super::sampler::{AugmentCfg, Sampler};
+use super::sampler::{AugmentCfg, Sampler, SamplerState};
 use super::Dataset;
 
 /// Default channel depth: one batch in flight + one staged.
@@ -85,6 +85,39 @@ impl Prefetcher {
     where
         F: FnOnce() -> Result<Dataset> + Send + 'static,
     {
+        Self::spawn_deferred_inner(load, depth, move |n| {
+            Ok(Sampler::new(n, batch, augment, seed))
+        })
+    }
+
+    /// Deferred-dataset spawn that **resumes** the stream: the worker
+    /// rebuilds its sampler from an exported [`SamplerState`] instead of
+    /// a fresh seed.  This is the checkpoint/resume path for streaming
+    /// CIFAR-bin ingestion, where the sampler lives on this worker —
+    /// the restored stream continues batch-for-batch where the
+    /// checkpointed run's consumption point stood.  A state that does
+    /// not match the decoded dataset fails like a failed load: the
+    /// error surfaces from the consumer's next [`Prefetcher::next_batch`].
+    pub fn spawn_deferred_resume<F>(
+        load: F,
+        batch: usize,
+        augment: AugmentCfg,
+        state: SamplerState,
+        depth: usize,
+    ) -> Self
+    where
+        F: FnOnce() -> Result<Dataset> + Send + 'static,
+    {
+        Self::spawn_deferred_inner(load, depth, move |n| {
+            Sampler::restore(&state, n, batch, augment)
+        })
+    }
+
+    fn spawn_deferred_inner<F, M>(load: F, depth: usize, make_sampler: M) -> Self
+    where
+        F: FnOnce() -> Result<Dataset> + Send + 'static,
+        M: FnOnce(usize) -> Result<Sampler> + Send + 'static,
+    {
         let (tx, rx) = sync_channel(depth.max(1));
         let error = Arc::new(Mutex::new(None));
         let err_slot = error.clone();
@@ -98,7 +131,13 @@ impl Prefetcher {
                         return;
                     }
                 };
-                let mut sampler = Sampler::new(data.n, batch, augment, seed);
+                let mut sampler = match make_sampler(data.n) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        *err_slot.lock().unwrap() = Some(e);
+                        return;
+                    }
+                };
                 loop {
                     if tx.send(sampler.next_batch(&data)).is_err() {
                         return;
@@ -235,6 +274,49 @@ mod tests {
             let (xb, _) = pre.next_batch().unwrap();
             assert_eq!(xa.as_f32().unwrap(), xb.as_f32().unwrap());
         }
+    }
+
+    #[test]
+    fn deferred_resume_continues_the_stream() {
+        let data = Arc::new(synthetic::generate(10, 64, 8, 5));
+        // Ground truth: one uninterrupted synchronous stream.
+        let mut sync = Sampler::new(data.n, 16, AugmentCfg::default(), 17);
+        // Interrupted stream: consume 3 batches, export, resume on a
+        // deferred worker over a freshly-decoded dataset.
+        let mut first = Sampler::new(data.n, 16, AugmentCfg::default(), 17);
+        for _ in 0..3 {
+            let _ = sync.next_batch(&data);
+            let _ = first.next_batch(&data);
+        }
+        let state = first.export();
+        let mut pre = Prefetcher::spawn_deferred_resume(
+            || Ok(synthetic::generate(10, 64, 8, 5)),
+            16,
+            AugmentCfg::default(),
+            state,
+            2,
+        );
+        for _ in 0..8 {
+            let (xa, _) = sync.next_batch(&data);
+            let (xb, _) = pre.next_batch().unwrap();
+            assert_eq!(xa.as_f32().unwrap(), xb.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn deferred_resume_rejects_mismatched_state() {
+        let data = synthetic::generate(10, 64, 8, 5);
+        let state = Sampler::new(data.n, 16, AugmentCfg::default(), 0).export();
+        // worker decodes a dataset of a different size -> clean error
+        let mut pre = Prefetcher::spawn_deferred_resume(
+            || Ok(synthetic::generate(10, 32, 8, 5)),
+            16,
+            AugmentCfg::default(),
+            state,
+            2,
+        );
+        let err = pre.next_batch().unwrap_err();
+        assert!(format!("{err:#}").contains("dataset has"), "lost the cause");
     }
 
     #[test]

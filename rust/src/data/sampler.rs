@@ -3,7 +3,7 @@
 //! plus standard CIFAR augmentation (4-px pad + random crop, horizontal
 //! flip) applied on the fly in rust — never in the HLO.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::{HostTensor, TensorData};
 use crate::util::Rng;
@@ -21,6 +21,21 @@ impl Default for AugmentCfg {
     fn default() -> Self {
         Self { pad: 4, flip: true, enabled: true }
     }
+}
+
+/// Exported sampler position (`checkpoint` subsystem): the RNG stream,
+/// the current epoch's permutation, and the cursor into it — everything
+/// `next_batch` consumes that isn't the dataset itself.  Restoring one
+/// mid-stream continues the batch/augmentation sequence bitwise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplerState {
+    /// xoshiro256** state ([`Rng::state`]).
+    pub rng: [u64; 4],
+    /// Current epoch permutation (u32 is ample: datasets are indexed in
+    /// memory, far below 2^32 samples).
+    pub perm: Vec<u32>,
+    pub cursor: u64,
+    pub epoch: u64,
 }
 
 /// Deterministic batch sampler over a dataset.
@@ -58,6 +73,17 @@ impl Sampler {
         self.perm.len() / self.batch
     }
 
+    /// The RNG draws for one sample's augmentation — shared by
+    /// [`Sampler::next_batch`] and [`Sampler::skip_batch`] so a shadow
+    /// cursor consumes draw-for-draw the identical stream.
+    fn draw_augment(&mut self) -> (isize, isize, bool) {
+        let pad = self.augment.pad as isize;
+        let dy = self.rng.offset(pad);
+        let dx = self.rng.offset(pad);
+        let flip = self.augment.flip && self.rng.bool(0.5);
+        (dy, dx, flip)
+    }
+
     /// Next batch of (x, y) host tensors; reshuffles between epochs.
     pub fn next_batch(&mut self, data: &Dataset) -> (HostTensor, HostTensor) {
         if self.cursor + self.batch > self.perm.len() {
@@ -74,10 +100,7 @@ impl Sampler {
             let src = &data.images[idx * stride..(idx + 1) * stride];
             let dst = &mut x[b * stride..(b + 1) * stride];
             if self.augment.enabled {
-                let pad = self.augment.pad as isize;
-                let dy = self.rng.offset(pad);
-                let dx = self.rng.offset(pad);
-                let flip = self.augment.flip && self.rng.bool(0.5);
+                let (dy, dx, flip) = self.draw_augment();
                 crop_flip(src, dst, hw, dy, dx, flip);
             } else {
                 dst.copy_from_slice(src);
@@ -88,6 +111,82 @@ impl Sampler {
             HostTensor::f32(vec![self.batch, hw, hw, 3], x),
             HostTensor::i32(vec![self.batch], y),
         )
+    }
+
+    /// Consume one batch's worth of cursor/RNG state without assembling
+    /// tensors — draw-for-draw identical to [`Sampler::next_batch`].
+    /// The trainer's *shadow cursor* tracks the prefetch worker's
+    /// sampler with this (3 cheap draws per sample, no pixel work), so
+    /// a checkpoint can export the exact stream position at the step
+    /// loop's consumption point even though the live sampler runs ahead
+    /// on another thread.
+    pub fn skip_batch(&mut self) {
+        if self.cursor + self.batch > self.perm.len() {
+            self.epoch += 1;
+            self.shuffle();
+        }
+        if self.augment.enabled {
+            for _ in 0..self.batch {
+                let _ = self.draw_augment();
+            }
+        }
+        self.cursor += self.batch;
+    }
+
+    /// Export the stream position for a checkpoint.
+    pub fn export(&self) -> SamplerState {
+        SamplerState {
+            rng: self.rng.state(),
+            perm: self.perm.iter().map(|&p| p as u32).collect(),
+            cursor: self.cursor as u64,
+            epoch: self.epoch,
+        }
+    }
+
+    /// Rebuild a sampler mid-stream from an exported state.  Validates
+    /// hard — the permutation must cover `0..dataset_len` exactly, the
+    /// cursor must be in range, the RNG state must be live — so a
+    /// corrupt checkpoint surfaces here as a clean error instead of an
+    /// out-of-bounds panic inside `next_batch`.
+    pub fn restore(
+        st: &SamplerState,
+        dataset_len: usize,
+        batch: usize,
+        augment: AugmentCfg,
+    ) -> Result<Self> {
+        if batch == 0 {
+            bail!("sampler batch size must be positive");
+        }
+        if st.perm.len() != dataset_len {
+            bail!(
+                "sampler state covers {} samples, dataset has {dataset_len}",
+                st.perm.len()
+            );
+        }
+        let mut seen = vec![false; dataset_len];
+        for &p in &st.perm {
+            let p = p as usize;
+            if p >= dataset_len || seen[p] {
+                bail!("sampler state permutation is corrupt");
+            }
+            seen[p] = true;
+        }
+        if st.cursor as usize > dataset_len {
+            bail!(
+                "sampler cursor {} out of range for {dataset_len} samples",
+                st.cursor
+            );
+        }
+        let rng = Rng::from_state(st.rng)
+            .ok_or_else(|| anyhow!("sampler RNG state is corrupt (all zero)"))?;
+        Ok(Self {
+            rng,
+            perm: st.perm.iter().map(|&p| p as usize).collect(),
+            cursor: st.cursor as usize,
+            epoch: st.epoch,
+            batch,
+            augment,
+        })
     }
 }
 
@@ -272,6 +371,75 @@ mod tests {
         // out-of-range and empty slices are rejected
         assert!(slice_batch(&x, &y, 6..9).is_err());
         assert!(slice_batch(&x, &y, 4..4).is_err());
+    }
+
+    #[test]
+    fn skip_batch_is_draw_identical_to_next_batch() {
+        let d = synthetic::generate(10, 64, 8, 0);
+        let mut real = Sampler::new(d.n, 8, AugmentCfg::default(), 13);
+        let mut shadow = Sampler::new(d.n, 8, AugmentCfg::default(), 13);
+        // Cross an epoch boundary (64/8 = 8 batches/epoch).
+        for _ in 0..11 {
+            let _ = real.next_batch(&d);
+            shadow.skip_batch();
+        }
+        assert_eq!(real.export(), shadow.export());
+        // ...and with augmentation off (no per-sample draws at all).
+        let off = AugmentCfg { enabled: false, ..Default::default() };
+        let mut real = Sampler::new(d.n, 8, off, 13);
+        let mut shadow = Sampler::new(d.n, 8, off, 13);
+        for _ in 0..11 {
+            let _ = real.next_batch(&d);
+            shadow.skip_batch();
+        }
+        assert_eq!(real.export(), shadow.export());
+    }
+
+    #[test]
+    fn export_restore_continues_stream_bitwise() {
+        let d = synthetic::generate(10, 64, 8, 0);
+        let mut a = Sampler::new(d.n, 8, AugmentCfg::default(), 21);
+        for _ in 0..5 {
+            let _ = a.next_batch(&d);
+        }
+        let st = a.export();
+        let mut b = Sampler::restore(&st, d.n, 8, AugmentCfg::default()).unwrap();
+        for _ in 0..10 {
+            let (xa, ya) = a.next_batch(&d);
+            let (xb, yb) = b.next_batch(&d);
+            assert_eq!(xa.as_f32().unwrap(), xb.as_f32().unwrap());
+            assert_eq!(y_as_vec(&ya), y_as_vec(&yb));
+        }
+    }
+
+    #[test]
+    fn restore_rejects_corruption() {
+        let d = synthetic::generate(10, 64, 8, 0);
+        let s = Sampler::new(d.n, 8, AugmentCfg::default(), 3);
+        let good = s.export();
+
+        // wrong dataset length
+        assert!(Sampler::restore(&good, d.n + 1, 8, AugmentCfg::default()).is_err());
+        // duplicate permutation entry
+        let mut dup = good.clone();
+        dup.perm[1] = dup.perm[0];
+        assert!(Sampler::restore(&dup, d.n, 8, AugmentCfg::default()).is_err());
+        // out-of-range entry
+        let mut oob = good.clone();
+        oob.perm[0] = d.n as u32;
+        assert!(Sampler::restore(&oob, d.n, 8, AugmentCfg::default()).is_err());
+        // cursor past the end
+        let mut cur = good.clone();
+        cur.cursor = d.n as u64 + 1;
+        assert!(Sampler::restore(&cur, d.n, 8, AugmentCfg::default()).is_err());
+        // dead RNG
+        let mut rng = good.clone();
+        rng.rng = [0; 4];
+        assert!(Sampler::restore(&rng, d.n, 8, AugmentCfg::default()).is_err());
+        // zero batch
+        assert!(Sampler::restore(&good, d.n, 0, AugmentCfg::default()).is_err());
+        // the untouched state restores fine
+        assert!(Sampler::restore(&good, d.n, 8, AugmentCfg::default()).is_ok());
     }
 
     #[test]

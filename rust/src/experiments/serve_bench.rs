@@ -38,6 +38,11 @@ pub struct ServeBenchCfg {
     /// Batcher flush deadline.
     pub max_delay: Duration,
     pub seed: u64,
+    /// Serve weights from this checkpoint registry instead of a
+    /// freshly-initialized state: no in-process trainer — the bench
+    /// waits for the watcher's first hot-load, exercising the
+    /// cross-process publish path end-to-end.
+    pub registry: Option<PathBuf>,
     /// Provenance string recorded in the report (producer + profile).
     pub source: String,
 }
@@ -51,6 +56,7 @@ impl Default for ServeBenchCfg {
             workers: 2,
             max_delay: Duration::from_millis(2),
             seed: 0,
+            registry: None,
             source: "serve_bench".into(),
         }
     }
@@ -96,12 +102,44 @@ pub fn run_serve_bench(
     let stride = hw * hw * 3;
     let micro_batch = probe.eval_batch();
 
-    // Shared resident state: one freshly-initialized checkpoint
-    // published for the whole sweep (the serve integration with a live
-    // trainer is exercised by tests/serve_equivalence.rs).
+    // Shared resident state for the whole sweep: a freshly-initialized
+    // snapshot by default (the serve integration with a live trainer is
+    // exercised by tests/serve_equivalence.rs), or — with a registry —
+    // whatever checkpoint a trainer process last published there,
+    // hot-loaded by the watcher with no in-process trainer at all.
     let cell = Arc::new(SnapshotCell::new());
-    let state = ModelState::init(&probe.manifest, cfg.seed);
-    cell.publish(StateSnapshot::from_model_state(probe.backend(), &state)?);
+    let _watcher = match &cfg.registry {
+        None => {
+            let state = ModelState::init(&probe.manifest, cfg.seed);
+            cell.publish(StateSnapshot::from_model_state(probe.backend(), &state)?);
+            None
+        }
+        Some(dir) => {
+            let w = crate::serve::watch_registry(
+                cell.clone(),
+                probe.backend(),
+                Arc::new(probe.manifest.state_spec()),
+                dir,
+                Duration::from_millis(50),
+            );
+            let t0 = Instant::now();
+            while cell.version() == 0 {
+                if t0.elapsed() > Duration::from_secs(10) {
+                    bail!(
+                        "no checkpoint appeared under {} within 10s",
+                        dir.display()
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            println!(
+                "serve: registry {} -> snapshot v{}",
+                dir.display(),
+                cell.version()
+            );
+            Some(w)
+        }
+    };
 
     let data = synthetic::generate(classes, 256, hw, cfg.seed);
     let req_size = cfg.samples_per_request.max(1);
@@ -177,6 +215,7 @@ pub fn run_serve_bench(
             ("latency_mean_ms", Json::num(stats.latency_mean_s * 1e3)),
             ("mean_occupancy", Json::num(stats.occupancy_mean)),
             ("batches", Json::num(stats.batches as f64)),
+            ("expired", Json::num(stats.expired as f64)),
             ("wall_s", Json::num(wall)),
         ]));
     }

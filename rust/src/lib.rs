@@ -15,6 +15,7 @@
 //!   baked into the `psg`/`e2train` artifacts + datapath-width modelling
 //!   in [`energy::model`]
 
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;

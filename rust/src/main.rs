@@ -4,16 +4,20 @@
 //! ```text
 //! e2train list
 //! e2train train --family resnet8-c10-tiny --method e2train --iters 300
+//! e2train train --family refmlp-tiny --iters 300 --ckpt-every 50 --ckpt-dir ckpts
+//! e2train resume ckpts
 //! e2train exp tab2 --iters 400 --out results
 //! e2train serve --clients 2,8 --requests 32 --out BENCH_serve.json
+//! e2train serve --registry ckpts --clients 2,8
 //! e2train shard-bench --shards 1,2,4 --out BENCH_shard.json
 //! e2train energy-report --family resnet20-c10
 //! ```
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
+use e2train::checkpoint::{CheckpointRegistry, RetentionCfg};
 use e2train::config::{DataCfg, RunCfg};
 use e2train::coordinator::Trainer;
 use e2train::experiments;
@@ -43,7 +47,18 @@ COMMANDS:
     --n-train <n>               synthetic train size [2048]
     --n-test <n>                synthetic test size  [512]
     --eval-every <n>            periodic eval every n iters  [0]
+    --ckpt-every <n>            write a ckpt/v1 checkpoint every n iters [0]
+    --ckpt-dir <dir>            checkpoint registry directory
+    --ckpt-keep-last <n>        retention: keep newest n checkpoints [3]
+    --ckpt-keep-every <n>       retention: pin every n-th iteration  [0]
     --config <path>             load a JSON run config instead
+    --out <path>                write run-metrics JSON
+  resume <dir>                  continue a checkpointed run, bitwise
+                                identical to the uninterrupted one
+    --iter <n>                  resume a specific checkpointed iteration
+                                (default: the newest)
+    --data-dir <dir>            relocated CIFAR binaries (path is not
+                                part of the resume fingerprint)
     --out <path>                write run-metrics JSON
   exp <id>                      reproduce a paper table/figure
                                 fig3a|fig3b|tab1|fig4|tab2|tab3|fig5|tab4|finetune|all
@@ -58,6 +73,9 @@ COMMANDS:
     --out <path>                report path [BENCH_shard.json]
   serve                         micro-batching inference service bench
     --family <fam>              artifact family (reference fixture if absent)
+    --registry <dir>            serve weights from a checkpoint registry
+                                (cross-process publish: no in-process
+                                trainer; hot-loads new checkpoints)
     --clients <a,b,..>          client concurrency levels [2,8]
     --requests <n>              requests per client       [32]
     --req-size <n>              samples per request       [2]
@@ -124,6 +142,13 @@ fn main() -> Result<()> {
                         n_test: args.usize_or("n-test", 512)?,
                         seed,
                     };
+                    c.checkpoint.every = args.u64_or("ckpt-every", 0)?;
+                    c.checkpoint.dir = args.get("ckpt-dir").map(PathBuf::from);
+                    c.checkpoint.keep_last = args.usize_or("ckpt-keep-last", 3)?;
+                    c.checkpoint.keep_every = args.u64_or("ckpt-keep-every", 0)?;
+                    if c.checkpoint.every > 0 && c.checkpoint.dir.is_none() {
+                        bail!("--ckpt-every needs --ckpt-dir");
+                    }
                     c
                 }
             };
@@ -136,6 +161,53 @@ fn main() -> Result<()> {
             let engine = Engine::cpu()?;
             let mut trainer = Trainer::new(&engine, cfg)?;
             let outcome = trainer.run(None)?;
+            println!(
+                "final: acc={:.4} top5={:.4} loss={:.4} J={:.3} steps={} skipped={}",
+                outcome.metrics.final_test_acc,
+                outcome.metrics.final_test_acc_top5,
+                outcome.metrics.final_loss,
+                outcome.metrics.total_joules,
+                outcome.metrics.steps_run,
+                outcome.metrics.steps_skipped,
+            );
+            if let Some(p) = args.get("out") {
+                std::fs::write(p, outcome.metrics.to_json())?;
+                println!("metrics -> {p}");
+            }
+        }
+        "resume" => {
+            let dir = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("resume needs a checkpoint registry directory"))?;
+            let registry = CheckpointRegistry::new(dir, RetentionCfg::default());
+            let ckpt = match args.get("iter") {
+                Some(_) => registry.load_iter(args.u64_or("iter", 0)?)?,
+                None => registry
+                    .load_latest()?
+                    .ok_or_else(|| anyhow!("no checkpoints under {dir}"))?,
+            };
+            // The checkpoint embeds its full run config, so no launcher
+            // file is needed; --artifacts / --data-dir relocate what
+            // may have moved across the interruption (neither path is
+            // part of the determinism fingerprint).
+            let mut cfg = ckpt.cfg.clone();
+            if let Some(a) = args.get("artifacts") {
+                cfg.artifacts_dir = PathBuf::from(a);
+            }
+            if let Some(d) = args.get("data-dir") {
+                match &mut cfg.data {
+                    DataCfg::CifarBin { dir } => *dir = PathBuf::from(d),
+                    _ => bail!("--data-dir only applies to cifar_bin runs"),
+                }
+            }
+            println!(
+                "resuming {}/{} at iter {}/{} from {dir}",
+                cfg.family, cfg.method, ckpt.iter, cfg.iters
+            );
+            let engine = Engine::cpu()?;
+            let mut trainer = Trainer::new(&engine, cfg)?;
+            let outcome = trainer.resume(ckpt)?;
             println!(
                 "final: acc={:.4} top5={:.4} loss={:.4} J={:.3} steps={} skipped={}",
                 outcome.metrics.final_test_acc,
@@ -196,6 +268,7 @@ fn main() -> Result<()> {
                 workers: args.usize_or("workers", 2)?,
                 max_delay: std::time::Duration::from_millis(args.u64_or("delay-ms", 2)?),
                 seed: args.u64_or("seed", 0)?,
+                registry: args.get("registry").map(PathBuf::from),
                 source: if cfg!(debug_assertions) {
                     "e2train serve (debug profile)"
                 } else {

@@ -116,6 +116,16 @@ impl Mean {
         self.n += 1;
     }
 
+    /// `(sum, count)` — exported by checkpoints so a resumed run's
+    /// lifetime means keep accumulating the identical f64 sums.
+    pub fn parts(&self) -> (f64, u64) {
+        (self.sum, self.n)
+    }
+
+    pub fn from_parts(sum: f64, n: u64) -> Self {
+        Self { sum, n }
+    }
+
     pub fn get(&self) -> f64 {
         if self.n == 0 {
             f64::NAN

@@ -260,6 +260,20 @@ impl Manifest {
         }
     }
 
+    /// (name, shape) of every train-state tensor (roles `param | mom |
+    /// state`), in train-input order — the order `ModelState` and
+    /// published snapshots are indexed by.  The single definition of
+    /// "state layout" shared by checkpoint-resume validation
+    /// (`Trainer::resume`) and serve registry hot-loads
+    /// (`serve::watch_registry`), via `ModelState::matches_spec`.
+    pub fn state_spec(&self) -> Vec<(String, Vec<usize>)> {
+        self.train_inputs
+            .iter()
+            .filter(|s| matches!(s.role.as_str(), "param" | "mom" | "state"))
+            .map(|s| (s.name.clone(), s.shape.clone()))
+            .collect()
+    }
+
     /// Count of gateable blocks (length of `gate_fracs` outputs).
     pub fn num_gated(&self) -> usize {
         self.blocks.iter().filter(|b| b.gateable).count()

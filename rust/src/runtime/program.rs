@@ -107,6 +107,19 @@ impl ModelState {
         self.index.get(name).copied()
     }
 
+    /// Does this state match `spec` exactly — same tensor names and
+    /// shapes, in order?  `spec` is a [`Manifest::state_spec`]; resume
+    /// validation and serve hot-loads share this one comparison.
+    ///
+    /// [`Manifest::state_spec`]: super::manifest::Manifest::state_spec
+    pub fn matches_spec(&self, spec: &[(String, Vec<usize>)]) -> bool {
+        self.names.len() == spec.len()
+            && spec
+                .iter()
+                .zip(self.names.iter().zip(self.values.iter()))
+                .all(|((name, shape), (n, v))| name == n && *shape == v.shape)
+    }
+
     /// Panic unless `other` is bitwise identical (names, shapes, f32
     /// payloads), naming the first drifting tensor.  Shared assertion
     /// behind the determinism contracts (the resident / sharded /

@@ -77,6 +77,15 @@ struct Shard {
 }
 
 /// Data-parallel sharded training step over an engine pool.
+///
+/// Checkpoint/resume integration (`crate::checkpoint`): durable
+/// checkpoints snapshot [`ShardedTrainer::state`] — the host-side
+/// master — so a sharded run checkpoints without draining or syncing
+/// replicas; on resume the constructor seeds every replica from the
+/// restored master (the same rebroadcast a post-update refresh does),
+/// and the continuation stays bitwise identical for any shard count,
+/// including a shard count different from the checkpointing run's
+/// (tests/resume_equivalence.rs).
 pub struct ShardedTrainer {
     shards: Vec<Shard>,
     /// Host-side authoritative state (full train-state order); SWA /

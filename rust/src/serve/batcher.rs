@@ -12,6 +12,12 @@
 //! batches at full-batch boundaries — the leading side always ships
 //! full; the trailing fragment starts the next batch and may itself
 //! deadline-flush partial if the queue goes idle.
+//!
+//! Admission check: a request whose **client deadline** already passed
+//! when the batcher pops it is never staged — its samples complete
+//! immediately with an explicit `expired` error instead of burning a
+//! worker eval slot on an answer nobody is waiting for.  Drops are
+//! counted in [`super::ServeStats::expired`].
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -19,6 +25,7 @@ use std::time::{Duration, Instant};
 use crate::runtime::HostTensor;
 
 use super::queue::{Bounded, PopResult};
+use super::stats::StatsCollector;
 use super::{Collector, Request};
 
 /// One executable unit: a padded `[micro_batch, hw, hw, 3]` batch plus
@@ -88,6 +95,7 @@ impl Staging {
 pub(crate) fn run(
     queue: &Bounded<Request>,
     batch_q: &Bounded<MicroBatch>,
+    stats: &StatsCollector,
     micro_batch: usize,
     hw: usize,
     max_delay: Duration,
@@ -122,6 +130,18 @@ pub(crate) fn run(
                 PopResult::Closed => break,
             }
         };
+
+        // Drop-before-dispatch: a request that already missed its
+        // client deadline completes with an explicit expired error —
+        // it never occupies micro-batch rows or worker time.
+        if let Some(d) = req.deadline {
+            if Instant::now() >= d {
+                stats.record_expired(req.y.len());
+                req.collector
+                    .fail("request expired before dispatch (client deadline passed)");
+                continue;
+            }
+        }
 
         // Stage the whole request; ship full batches as they fill.
         for (k, &label) in req.y.iter().enumerate() {

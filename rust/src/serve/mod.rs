@@ -28,6 +28,18 @@
 //! snapshot they loaded, later batches see the new version (reported
 //! per sample in [`SampleResult::snapshot_version`]).
 //!
+//! Publishing also works **across processes**: a [`RegistryWatcher`]
+//! ([`ServeService::watch_registry`]) polls a checkpoint registry
+//! directory (`crate::checkpoint`) and hot-loads each new checkpoint
+//! into the cell with a bumped version — a trainer writing `ckpt/v1`
+//! files in another process updates this server with no in-process
+//! coupling at all.
+//!
+//! Admission: requests may carry a client deadline; the batcher drops
+//! a request whose deadline already passed before dispatch, completing
+//! it with an explicit `expired` error instead of burning worker eval
+//! slots ([`ServeStats::expired`]).
+//!
 //! Correctness contract: the eval program computes logits row-by-row,
 //! so a sample's result is bitwise independent of which micro-batch it
 //! was coalesced into — N concurrent clients receive exactly the
@@ -41,14 +53,18 @@ pub mod worker;
 
 pub use stats::{ServeStats, StatsCollector};
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::runtime::{BackendKind, Engine, EnginePool, SnapshotCell, TrainProgram};
+use crate::checkpoint::{CheckpointRegistry, RetentionCfg};
+use crate::runtime::{
+    BackendKind, Engine, EnginePool, Manifest, SnapshotCell, StateSnapshot,
+    TrainProgram,
+};
 
 use batcher::MicroBatch;
 use queue::Bounded;
@@ -176,6 +192,9 @@ pub(crate) struct Request {
     pub y: Vec<i32>,
     pub collector: Arc<Collector>,
     pub t_submit: Instant,
+    /// Client deadline: past this instant the answer is worthless, so
+    /// the batcher drops the request instead of dispatching it.
+    pub deadline: Option<Instant>,
 }
 
 /// Cloneable client handle: submit single samples or small batches.
@@ -193,6 +212,20 @@ impl ServeClient {
     /// request queue is full (backpressure), errors once the service
     /// shut down.
     pub fn submit(&self, pixels: &[f32], labels: &[i32]) -> Result<Ticket> {
+        self.submit_with_deadline(pixels, labels, None)
+    }
+
+    /// [`ServeClient::submit`] with a client deadline: if the request
+    /// is still queued when `deadline` passes, the batcher completes it
+    /// with an explicit `expired` error instead of dispatching it
+    /// (the answer would arrive after the client stopped caring — the
+    /// eval slots go to requests that can still make their deadline).
+    pub fn submit_with_deadline(
+        &self,
+        pixels: &[f32],
+        labels: &[i32],
+        deadline: Option<Instant>,
+    ) -> Result<Ticket> {
         let stride = self.sample_stride();
         if labels.is_empty() {
             bail!("empty request");
@@ -213,6 +246,7 @@ impl ServeClient {
             y: labels.to_vec(),
             collector: collector.clone(),
             t_submit: Instant::now(),
+            deadline,
         };
         self.queue
             .push(req)
@@ -237,6 +271,14 @@ pub struct ServeService {
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<StatsCollector>,
+    /// The publish point workers read snapshots from — kept here so a
+    /// registry watcher can be attached after start.
+    cell: Arc<SnapshotCell>,
+    backend: BackendKind,
+    /// (name, shape) of every train-state tensor the served artifact
+    /// expects — the registry watcher refuses checkpoints that don't
+    /// match instead of poisoning the snapshot cell.
+    state_spec: Arc<StateSpec>,
     hw: usize,
     classes: usize,
     micro_batch: usize,
@@ -312,11 +354,12 @@ impl ServeService {
         let batcher = {
             let queue = queue.clone();
             let batch_q = batch_q.clone();
+            let st = stats.clone();
             let max_delay = cfg.max_delay;
             std::thread::Builder::new()
                 .name("e2train-serve-batcher".into())
                 .spawn(move || {
-                    batcher::run(&queue, &batch_q, micro_batch, hw, max_delay)
+                    batcher::run(&queue, &batch_q, &st, micro_batch, hw, max_delay)
                 })
                 .context("spawning serve batcher")?
         };
@@ -354,10 +397,31 @@ impl ServeService {
             batcher: Some(batcher),
             workers,
             stats,
+            backend: probe.backend(),
+            state_spec: Arc::new(probe.manifest.state_spec()),
+            cell,
             hw,
             classes,
             micro_batch,
         })
+    }
+
+    /// Attach a checkpoint-registry watcher: newly published
+    /// checkpoints under `dir` hot-load into this service's snapshot
+    /// cell with a bumped `snapshot_version`.  This is the
+    /// cross-process publish path — the trainer writing the registry
+    /// may live in a different process entirely; this service needs no
+    /// in-process trainer.  Checkpoints whose state doesn't match the
+    /// served artifact are rejected (logged, snapshot kept).  The
+    /// watcher stops when the returned handle drops.
+    pub fn watch_registry(&self, dir: &Path, poll: Duration) -> RegistryWatcher {
+        watch_registry(
+            self.cell.clone(),
+            self.backend,
+            self.state_spec.clone(),
+            dir,
+            poll,
+        )
     }
 
     /// A new client handle (cheap, cloneable, sendable across threads).
@@ -404,4 +468,148 @@ impl Drop for ServeService {
     fn drop(&mut self) {
         self.stop();
     }
+}
+
+/// Handle to a background registry watcher; dropping it stops the
+/// polling thread promptly (condvar-signalled, no poll-interval wait).
+pub struct RegistryWatcher {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// (name, shape) per train-state tensor, in manifest order — what a
+/// hot-loaded checkpoint's serving state must match exactly.  Produced
+/// by [`Manifest::state_spec`].
+pub type StateSpec = Vec<(String, Vec<usize>)>;
+
+impl RegistryWatcher {
+    /// Checkpoints successfully published into the cell so far is
+    /// observable through `SnapshotCell::version`; this handle only
+    /// controls the thread's lifetime.
+    fn spawn(
+        cell: Arc<SnapshotCell>,
+        backend: BackendKind,
+        spec: Arc<StateSpec>,
+        dir: PathBuf,
+        poll: Duration,
+    ) -> Self {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("e2train-ckpt-watcher".into())
+            .spawn(move || {
+                let registry = CheckpointRegistry::new(dir, RetentionCfg::default());
+                // (iter, hash) of the last checkpoint published into the
+                // cell — a re-published iteration with new content (new
+                // hash) still hot-loads.
+                let mut seen: Option<(u64, String)> = None;
+                let mut last_err = String::new();
+                loop {
+                    match watch_tick(&registry, &cell, backend, &spec, &mut seen) {
+                        Ok(()) => last_err.clear(),
+                        Err(e) => {
+                            // Transient by assumption (mid-publish read,
+                            // partial copy): keep serving the snapshot we
+                            // have and retry next tick.  Log once per
+                            // distinct cause, not once per poll.
+                            let msg = format!("{e:#}");
+                            if msg != last_err {
+                                eprintln!("[serve] registry watch: {msg}");
+                                last_err = msg;
+                            }
+                        }
+                    }
+                    let (lock, cv) = &*stop2;
+                    let mut stopped = lock.lock().unwrap();
+                    while !*stopped {
+                        let (g, timeout) = cv.wait_timeout(stopped, poll).unwrap();
+                        stopped = g;
+                        if timeout.timed_out() {
+                            break;
+                        }
+                    }
+                    if *stopped {
+                        return;
+                    }
+                }
+            })
+            .expect("spawning registry watcher thread");
+        Self { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for RegistryWatcher {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.stop;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One poll: if the registry's newest checkpoint differs from what was
+/// last published, load + verify it — content hash via the registry,
+/// then names/shapes against the served artifact's state spec — and
+/// publish its serving state (the SWA average when present, like the
+/// in-process trainer publish).  A checkpoint from a different
+/// family/method fails here and the cell keeps its current snapshot;
+/// it never reaches the workers.
+fn watch_tick(
+    registry: &CheckpointRegistry,
+    cell: &SnapshotCell,
+    backend: BackendKind,
+    spec: &StateSpec,
+    seen: &mut Option<(u64, String)>,
+) -> Result<()> {
+    let entry = match registry.latest()? {
+        Some(e) => e,
+        None => return Ok(()), // nothing published yet
+    };
+    let key = (entry.iter, entry.hash.clone());
+    if seen.as_ref() == Some(&key) {
+        return Ok(());
+    }
+    let ckpt = registry.load(&entry)?;
+    let state = ckpt.serving_state();
+    if !state.matches_spec(spec) {
+        // Deterministic rejection: this exact file can never become
+        // loadable, so remember its key — otherwise every poll would
+        // re-read and re-decode the whole checkpoint just to refuse it
+        // again.  A future checkpoint (new iter or content) gets a new
+        // key and a fresh look.
+        *seen = Some(key);
+        bail!(
+            "checkpoint iter {} ({}/{}) does not match the served artifact's \
+             state layout — refusing to hot-load it",
+            entry.iter,
+            ckpt.cfg.family,
+            ckpt.cfg.method
+        );
+    }
+    let snap = StateSnapshot::from_model_state(backend, state)?;
+    let version = cell.publish(snap);
+    eprintln!(
+        "[serve] hot-loaded checkpoint iter {} ({} bytes) -> snapshot v{version}",
+        entry.iter, entry.bytes
+    );
+    *seen = Some(key);
+    Ok(())
+}
+
+/// Watch a checkpoint registry directory and hot-load each new
+/// checkpoint into `cell` — the standalone form of
+/// [`ServeService::watch_registry`] for callers that own the cell
+/// (e.g. one watcher feeding services across several sweep levels).
+/// `spec` pins the state layout hot-loads must match
+/// ([`Manifest::state_spec`] of the served artifact).
+pub fn watch_registry(
+    cell: Arc<SnapshotCell>,
+    backend: BackendKind,
+    spec: Arc<StateSpec>,
+    dir: &Path,
+    poll: Duration,
+) -> RegistryWatcher {
+    RegistryWatcher::spawn(cell, backend, spec, dir.to_path_buf(), poll)
 }

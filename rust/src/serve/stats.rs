@@ -34,6 +34,10 @@ struct StatsInner {
     batches: usize,
     /// Lifetime sum of real samples over executed batches.
     occupancy_sum: usize,
+    /// Samples dropped by the batcher because their client deadline
+    /// expired before dispatch (completed with an `expired` error
+    /// instead of burning a worker eval slot).
+    expired: usize,
     /// Completion-window bounds for throughput.
     first_done: Option<Instant>,
     last_done: Option<Instant>,
@@ -55,6 +59,11 @@ impl StatsCollector {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.occupancy_sum += n_real;
+    }
+
+    /// `n` samples dropped before dispatch on an expired deadline.
+    pub fn record_expired(&self, n: usize) {
+        self.inner.lock().unwrap().expired += n;
     }
 
     /// One completed sample submitted at `t_submit`.
@@ -81,7 +90,7 @@ impl StatsCollector {
     /// cloned under the lock but sorted outside it, so workers are
     /// never blocked behind the sort.
     pub fn snapshot(&self) -> ServeStats {
-        let (mut lat, samples, latency_sum_s, batches, occupancy_sum, wall_s) = {
+        let (mut lat, samples, latency_sum_s, batches, occupancy_sum, expired, wall_s) = {
             let g = self.inner.lock().unwrap();
             (
                 g.latencies.clone(),
@@ -89,6 +98,7 @@ impl StatsCollector {
                 g.latency_sum_s,
                 g.batches,
                 g.occupancy_sum,
+                g.expired,
                 match (g.first_done, g.last_done) {
                     (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
                     _ => 0.0,
@@ -99,6 +109,7 @@ impl StatsCollector {
         ServeStats {
             samples,
             batches,
+            expired,
             occupancy_mean: if batches == 0 {
                 0.0
             } else {
@@ -138,6 +149,9 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
 pub struct ServeStats {
     pub samples: usize,
     pub batches: usize,
+    /// Samples completed with an `expired` error instead of being
+    /// dispatched (client deadline passed while queued).
+    pub expired: usize,
     /// Mean real samples per executed micro-batch (> 1 means requests
     /// actually coalesced).
     pub occupancy_mean: f64,
@@ -171,12 +185,14 @@ mod tests {
         let c = StatsCollector::new();
         c.record_batch(4);
         c.record_batch(2);
+        c.record_expired(3);
         let t0 = Instant::now() - Duration::from_millis(10);
         c.record_sample(t0);
         c.record_sample(t0);
         let s = c.snapshot();
         assert_eq!(s.samples, 2);
         assert_eq!(s.batches, 2);
+        assert_eq!(s.expired, 3);
         assert!((s.occupancy_mean - 3.0).abs() < 1e-12);
         assert!(s.latency_p50_s >= 0.010);
         assert!(s.latency_p99_s >= s.latency_p50_s);

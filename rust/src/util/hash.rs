@@ -1,0 +1,79 @@
+//! FNV-1a 64-bit hashing — the content-hash substrate for the
+//! checkpoint subsystem (no sha2/xxhash crates on the offline testbed).
+//!
+//! FNV-1a is not cryptographic; it guards against *corruption*
+//! (truncated writes, bit rot, torn reads), which is exactly the threat
+//! model for `ckpt/v1` files and the run-config fingerprint.  The
+//! streaming form lets large tensor payloads hash without an extra
+//! concatenation pass.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// One-shot FNV-1a 64 over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// `fnv1a64` rendered the way registries and fingerprints store it.
+pub fn fnv1a64_hex(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a64(bytes))
+}
+
+/// Streaming FNV-1a 64 hasher.
+#[derive(Debug, Clone)]
+pub struct Fnv64 {
+    h: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Self { h: FNV_OFFSET }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let mut h = Fnv64::new();
+        h.update(&data[..10]);
+        h.update(&data[10..]);
+        assert_eq!(h.finish(), fnv1a64(data));
+    }
+
+    #[test]
+    fn hex_is_sixteen_chars() {
+        assert_eq!(fnv1a64_hex(b"x").len(), 16);
+    }
+}

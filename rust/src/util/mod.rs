@@ -8,9 +8,11 @@
 //! * [`perf`] — host-vs-resident step-path comparisons (BENCH_runtime.json)
 //! * [`prop`] — seeded property testing (replaces proptest)
 //! * [`tmp`] — scratch dirs for tests (replaces tempfile)
+//! * [`hash`] — FNV-1a 64 content hashing (checkpoint files/fingerprints)
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod perf;
 pub mod prop;

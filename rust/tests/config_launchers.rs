@@ -1,0 +1,141 @@
+//! Every shipped launcher under `rust/configs/` must parse, validate,
+//! and round-trip — and the parser must *reject* keys it doesn't know,
+//! so a stale or typo'd knob (the way a new `checkpoint`/`shards` field
+//! goes quietly dead) fails in CI instead of silently falling back to a
+//! default at 3am on somebody's edge box.
+
+use std::path::{Path, PathBuf};
+
+use e2train::config::RunCfg;
+use e2train::util::json::{parse, Json};
+
+fn configs_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("configs")
+}
+
+fn launcher_paths() -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(configs_dir())
+        .expect("configs/ exists")
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().map(|e| e == "json").unwrap_or(false))
+        .collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn every_shipped_launcher_parses_and_validates() {
+    let paths = launcher_paths();
+    assert!(
+        paths.len() >= 5,
+        "expected the shipped launcher set, found {}",
+        paths.len()
+    );
+    for p in &paths {
+        let cfg = RunCfg::load(p).unwrap_or_else(|e| {
+            panic!("launcher {} failed to load: {e:#}", p.display())
+        });
+        assert!(cfg.iters > 0, "{}: zero iters", p.display());
+        assert!(!cfg.family.is_empty(), "{}", p.display());
+        assert!(!cfg.method.is_empty(), "{}", p.display());
+        assert!(
+            (0.0..=1.0).contains(&cfg.smd.p),
+            "{}: smd.p out of range",
+            p.display()
+        );
+        if cfg.checkpoint.every > 0 {
+            assert!(
+                cfg.checkpoint.dir.is_some(),
+                "{}: checkpointing without a registry dir",
+                p.display()
+            );
+            assert!(
+                cfg.checkpoint.keep_last >= 1,
+                "{}: retention keeps nothing",
+                p.display()
+            );
+        }
+        // Round-trip: what we serialize is what we parse.
+        let back = RunCfg::from_json(&cfg.to_json())
+            .unwrap_or_else(|e| panic!("{}: round-trip failed: {e:#}", p.display()));
+        assert_eq!(back.to_json(), cfg.to_json(), "{}", p.display());
+    }
+}
+
+/// The shipped launcher set includes the new subsystem knobs, so their
+/// JSON spelling is pinned by a real file (key drift fails here).
+#[test]
+fn launcher_set_covers_shards_and_checkpoint_knobs() {
+    let mut has_shards = false;
+    let mut has_checkpoint = false;
+    for p in launcher_paths() {
+        let cfg = RunCfg::load(&p).unwrap();
+        has_shards |= cfg.shards > 0;
+        has_checkpoint |= cfg.checkpoint.every > 0;
+    }
+    assert!(has_shards, "no launcher exercises `shards`");
+    assert!(has_checkpoint, "no launcher exercises `checkpoint.every`");
+}
+
+#[test]
+fn unknown_and_stale_keys_are_rejected() {
+    // Take a real launcher, inject drifted keys at both levels.
+    let path = configs_dir().join("e2train-quick.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = parse(&text).unwrap();
+
+    let mut top = v.as_obj().unwrap().clone();
+    top.insert("iterations".into(), Json::num(100.0)); // stale spelling
+    let err = RunCfg::from_json(&Json::Obj(top)).unwrap_err();
+    assert!(format!("{err:#}").contains("iterations"));
+
+    let mut top = v.as_obj().unwrap().clone();
+    top.insert(
+        "checkpoint".into(),
+        Json::obj(vec![
+            ("every", Json::num(10.0)),
+            ("dir", Json::str("ckpts")),
+            ("keep_lats", Json::num(3.0)), // typo'd retention knob
+        ]),
+    );
+    let err = RunCfg::from_json(&Json::Obj(top)).unwrap_err();
+    assert!(format!("{err:#}").contains("keep_lats"));
+
+    let mut top = v.as_obj().unwrap().clone();
+    top.insert("smd".into(), Json::obj(vec![("prob", Json::num(0.5))]));
+    assert!(RunCfg::from_json(&Json::Obj(top)).is_err());
+}
+
+/// Keys that belong to the *other* variant of a tagged section are
+/// just as dead as typos — the per-kind allowlists reject them.
+#[test]
+fn cross_variant_keys_are_rejected() {
+    let path = configs_dir().join("e2train-quick.json");
+    let v = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+
+    // synthetic knobs on a cifar_bin source silently no-op'd before
+    let mut top = v.as_obj().unwrap().clone();
+    top.insert(
+        "data".into(),
+        Json::obj(vec![
+            ("kind", Json::str("cifar_bin")),
+            ("dir", Json::str("/data/cifar")),
+            ("n_train", Json::num(4096.0)),
+        ]),
+    );
+    let err = RunCfg::from_json(&Json::Obj(top)).unwrap_err();
+    assert!(format!("{err:#}").contains("n_train"));
+
+    // step-schedule boundaries on a constant lr are dead too
+    let mut top = v.as_obj().unwrap().clone();
+    top.insert(
+        "lr".into(),
+        Json::obj(vec![
+            ("kind", Json::str("constant")),
+            ("lr0", Json::num(0.1)),
+            ("boundaries", Json::arr([Json::num(100.0)])),
+        ]),
+    );
+    let err = RunCfg::from_json(&Json::Obj(top)).unwrap_err();
+    assert!(format!("{err:#}").contains("boundaries"));
+}

@@ -178,6 +178,121 @@ fn prop_json_roundtrip_random_values() {
     });
 }
 
+// ---------------------------------------------------------------------
+// Export → import → continue round-trips: the primitive the checkpoint
+// subsystem's bitwise-resume contract rests on.  Each property splits a
+// stream at a random point, restores from the exported state, and
+// requires the continuation to match the uninterrupted stream exactly.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_rng_state_roundtrip_continues_bitwise() {
+    prop::check(200, |rng| {
+        let seed = rng.next_u64();
+        let split = rng.range_usize(0, 500);
+        let mut a = e2train::util::Rng::seed_from_u64(seed);
+        for _ in 0..split {
+            a.next_u64();
+        }
+        let mut b = e2train::util::Rng::from_state(a.state()).unwrap();
+        for i in 0..128 {
+            assert_eq!(a.next_u64(), b.next_u64(), "drift at draw {i}");
+        }
+        // f64 draws stay aligned too (they consume the same stream)
+        assert_eq!(a.f64().to_bits(), b.f64().to_bits());
+    });
+}
+
+#[test]
+fn prop_smd_state_roundtrip_continues_bitwise() {
+    prop::check(100, |rng| {
+        let p = rng.range_f64(0.05, 0.95);
+        let seed = rng.next_u64();
+        let split = rng.range_usize(0, 300);
+        let mut a = SmdScheduler::new(true, p, seed);
+        for _ in 0..split {
+            a.skip();
+        }
+        let st = a.export();
+        assert_eq!(st.seen, split as u64);
+        let mut b = SmdScheduler::restore(true, p, &st).unwrap();
+        assert_eq!(a.observed_drop_rate(), b.observed_drop_rate());
+        for i in 0..256 {
+            assert_eq!(a.skip(), b.skip(), "drift at iter {i}");
+        }
+        assert_eq!(a.observed_drop_rate(), b.observed_drop_rate());
+        assert_eq!(a.export(), b.export());
+        // corrupt states are rejected, not constructed
+        let mut dead = st.clone();
+        dead.rng = [0; 4];
+        assert!(SmdScheduler::restore(true, p, &dead).is_none());
+        let mut bad = st.clone();
+        bad.skipped = bad.seen + 1;
+        assert!(SmdScheduler::restore(true, p, &bad).is_none());
+    });
+}
+
+#[test]
+fn prop_sd_state_roundtrip_continues_bitwise() {
+    prop::check(100, |rng| {
+        let blocks = rng.range_usize(1, 24);
+        let p_l = rng.range_f64(0.0, 1.0);
+        let seed = rng.next_u64();
+        let split = rng.range_usize(0, 200);
+        let mut a = SdScheduler::new(blocks, p_l, seed);
+        for _ in 0..split {
+            a.sample();
+        }
+        let st = a.export();
+        let mut b = SdScheduler::restore(blocks, p_l, &st).unwrap();
+        assert_eq!(a.mean_survival(), b.mean_survival());
+        for i in 0..128 {
+            assert_eq!(a.sample(), b.sample(), "drift at batch {i}");
+        }
+        assert_eq!(a.export(), b.export());
+        let mut dead = st.clone();
+        dead.rng = [0; 4];
+        assert!(SdScheduler::restore(blocks, p_l, &dead).is_none());
+    });
+}
+
+#[test]
+fn prop_sampler_state_roundtrip_continues_bitwise() {
+    prop::check(40, |rng| {
+        let n = rng.range_usize(2, 24) * 4;
+        let batch = rng.range_usize(1, 8);
+        let seed = rng.next_u64();
+        let split = rng.range_usize(0, 40);
+        let data = synthetic::generate(4, n, 4, rng.next_u64());
+        let augment = if rng.bool(0.5) {
+            AugmentCfg::default()
+        } else {
+            AugmentCfg { enabled: false, ..Default::default() }
+        };
+        // `a` is the uninterrupted stream; `shadow` replays draws only.
+        let mut a = Sampler::new(n, batch, augment, seed);
+        let mut shadow = Sampler::new(n, batch, augment, seed);
+        for _ in 0..split {
+            let _ = a.next_batch(&data);
+            shadow.skip_batch();
+        }
+        // The shadow's exported position equals the real stream's...
+        let st = shadow.export();
+        assert_eq!(st, a.export());
+        // ...and restoring it continues the stream bitwise.
+        let mut b = Sampler::restore(&st, n, batch, augment).unwrap();
+        for i in 0..24 {
+            let (xa, _) = a.next_batch(&data);
+            let (xb, _) = b.next_batch(&data);
+            let ba: Vec<u32> =
+                xa.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> =
+                xb.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ba, bb, "drift at batch {i}");
+        }
+    });
+}
+
 #[test]
 fn prop_rng_range_bounds() {
     prop::check(300, |rng| {

@@ -1,0 +1,483 @@
+//! The checkpoint subsystem's contract (reference backend, runs
+//! everywhere):
+//!
+//! 1. **Bitwise resume** — a run interrupted at any checkpoint boundary
+//!    and resumed produces exactly the metrics trace, energy ledger and
+//!    final model state of the run that never stopped, across the
+//!    resident(+prefetch), host+sync, SMD-dropping, streaming-CIFAR
+//!    deferred-decode, and sharded (S ∈ {1,2,3}) execution paths —
+//!    including resuming under a *different* layout than the one that
+//!    checkpointed (the layouts are bitwise interchangeable).
+//! 2. **Cross-process serving** — a `ServeService` with no in-process
+//!    trainer answers from a registry-loaded checkpoint via the watcher,
+//!    reporting the hot-loaded `snapshot_version`.
+//! 3. **Corruption safety** — truncated or bit-flipped checkpoint files
+//!    and mismatched configs are rejected with clean errors, never a
+//!    panic.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use e2train::checkpoint::{read_checkpoint, CheckpointRegistry, RetentionCfg};
+use e2train::config::{CkptCfg, DataCfg, RunCfg};
+use e2train::coordinator::{RunOutcome, Trainer};
+use e2train::runtime::{
+    write_reference_family, Engine, RefFamilySpec, SnapshotCell, StateSnapshot,
+    TrainProgram,
+};
+use e2train::serve::{ServeCfg, ServeService};
+use e2train::util::tmp::TempDir;
+
+const FAM: &str = "refmlp-tiny";
+
+fn ref_cfg(artifacts: &Path, method: &str, iters: u64) -> RunCfg {
+    let mut cfg = RunCfg::quick(FAM, method, iters);
+    cfg.artifacts_dir = artifacts.to_path_buf();
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 128, n_test: 40, seed: 0 };
+    cfg.eval_every = 8;
+    cfg
+}
+
+fn with_ckpt(mut cfg: RunCfg, dir: &Path, every: u64) -> RunCfg {
+    cfg.checkpoint = CkptCfg {
+        every,
+        dir: Some(dir.to_path_buf()),
+        keep_last: 16, // keep everything: the test resumes old boundaries
+        keep_every: 0,
+    };
+    cfg
+}
+
+/// Full bitwise comparison of two run outcomes (everything except wall
+/// time and the machine-dependent prefetch depth).
+fn assert_outcomes_identical(a: &RunOutcome, b: &RunOutcome, ctx: &str) {
+    assert_eq!(a.metrics.final_test_acc, b.metrics.final_test_acc, "{ctx}: acc");
+    assert_eq!(
+        a.metrics.final_test_acc_top5, b.metrics.final_test_acc_top5,
+        "{ctx}: top5"
+    );
+    assert_eq!(a.metrics.final_loss, b.metrics.final_loss, "{ctx}: loss");
+    assert_eq!(a.metrics.total_joules, b.metrics.total_joules, "{ctx}: joules");
+    assert_eq!(a.metrics.executed_macs, b.metrics.executed_macs, "{ctx}: macs");
+    assert_eq!(a.metrics.steps_run, b.metrics.steps_run, "{ctx}: steps");
+    assert_eq!(
+        a.metrics.steps_skipped, b.metrics.steps_skipped,
+        "{ctx}: skipped"
+    );
+    assert_eq!(
+        a.metrics.mean_gate_fracs, b.metrics.mean_gate_fracs,
+        "{ctx}: gate means"
+    );
+    assert_eq!(
+        a.metrics.mean_psg_frac, b.metrics.mean_psg_frac,
+        "{ctx}: psg mean"
+    );
+    assert_eq!(a.metrics.trace.len(), b.metrics.trace.len(), "{ctx}: trace len");
+    for (x, y) in a.metrics.trace.iter().zip(b.metrics.trace.iter()) {
+        assert_eq!(x.iter, y.iter, "{ctx}: trace iter");
+        assert_eq!(x.loss, y.loss, "{ctx}: trace loss @{}", x.iter);
+        assert_eq!(x.train_acc, y.train_acc, "{ctx}: trace acc @{}", x.iter);
+        assert_eq!(x.joules, y.joules, "{ctx}: trace joules @{}", x.iter);
+        assert_eq!(x.test_acc, y.test_acc, "{ctx}: trace eval @{}", x.iter);
+    }
+    assert_eq!(
+        a.ledger.steps_charged, b.ledger.steps_charged,
+        "{ctx}: ledger steps"
+    );
+    assert_eq!(a.ledger.macs, b.ledger.macs, "{ctx}: ledger macs");
+    assert_eq!(a.ledger.trace, b.ledger.trace, "{ctx}: ledger trace");
+    a.state.assert_bitwise_eq(&b.state);
+}
+
+/// Interrupt-at-k + resume == never stopped, for every boundary the
+/// registry holds.  `make_resume_cfg` lets callers resume under a
+/// different execution layout.
+fn check_resume_boundaries(
+    engine: &Engine,
+    full: &RunOutcome,
+    registry_dir: &Path,
+    make_resume_cfg: impl Fn() -> RunCfg,
+    ctx: &str,
+) {
+    let registry = CheckpointRegistry::new(registry_dir, RetentionCfg::default());
+    let entries = registry.entries().unwrap();
+    assert!(
+        entries.len() >= 3,
+        "{ctx}: expected several checkpoint boundaries, found {}",
+        entries.len()
+    );
+    for entry in &entries {
+        let ckpt = registry.load(entry).unwrap();
+        let mut resumed = Trainer::new(engine, make_resume_cfg()).unwrap();
+        let out = resumed.resume(ckpt).unwrap();
+        assert_outcomes_identical(full, &out, &format!("{ctx} @iter {}", entry.iter));
+    }
+}
+
+/// Resident(+prefetch, the default) and host+sync paths, sgd32 and
+/// e2train (the latter exercises SMD drops, SWA snapshots and PSG
+/// telemetry through the checkpoint).
+#[test]
+fn resume_is_bitwise_identical_on_single_device_paths() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    for method in ["sgd32", "e2train"] {
+        for (resident, prefetch) in [(true, true), (false, false)] {
+            let reg = TempDir::new().unwrap();
+            let shape = |mut c: RunCfg| {
+                c.resident = resident;
+                c.prefetch = prefetch;
+                c
+            };
+            let full_cfg =
+                shape(with_ckpt(ref_cfg(tmp.path(), method, 24), reg.path(), 6));
+            let full = Trainer::new(&engine, full_cfg).unwrap().run(None).unwrap();
+            // boundaries 6, 12, 18 + the final 24
+            check_resume_boundaries(
+                &engine,
+                &full,
+                reg.path(),
+                || shape(ref_cfg(tmp.path(), method, 24)),
+                &format!("{method} resident={resident}"),
+            );
+        }
+    }
+}
+
+/// Sharded path: checkpoints come off the host-side master (replicas
+/// never drain); resume rebuilds + rebroadcasts replicas from the
+/// restored master for S ∈ {1, 2, 3}.  Also pins the cross-layout
+/// contract both ways: a resident checkpoint resumes sharded, a sharded
+/// checkpoint resumes resident — both bitwise equal to the
+/// uninterrupted run.
+#[test]
+fn resume_is_bitwise_identical_on_sharded_paths() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    for shards in [1usize, 2, 3] {
+        let reg = TempDir::new().unwrap();
+        let mut full_cfg = with_ckpt(ref_cfg(tmp.path(), "e2train", 18), reg.path(), 6);
+        full_cfg.shards = shards;
+        let full = Trainer::new(&engine, full_cfg).unwrap().run(None).unwrap();
+        check_resume_boundaries(
+            &engine,
+            &full,
+            reg.path(),
+            || {
+                let mut c = ref_cfg(tmp.path(), "e2train", 18);
+                c.shards = shards;
+                c
+            },
+            &format!("sharded S={shards}"),
+        );
+    }
+
+    // Cross-layout: one resident run's registry, resumed sharded (and a
+    // sharded registry resumed resident) — the execution layout is not
+    // part of the determinism contract.
+    let reg = TempDir::new().unwrap();
+    let full_cfg = with_ckpt(ref_cfg(tmp.path(), "e2train", 18), reg.path(), 6);
+    let full = Trainer::new(&engine, full_cfg).unwrap().run(None).unwrap();
+    check_resume_boundaries(
+        &engine,
+        &full,
+        reg.path(),
+        || {
+            let mut c = ref_cfg(tmp.path(), "e2train", 18);
+            c.shards = 2;
+            c
+        },
+        "resident ckpt -> sharded resume",
+    );
+    let reg2 = TempDir::new().unwrap();
+    let mut sharded_cfg = with_ckpt(ref_cfg(tmp.path(), "e2train", 18), reg2.path(), 6);
+    sharded_cfg.shards = 3;
+    let sharded_full =
+        Trainer::new(&engine, sharded_cfg).unwrap().run(None).unwrap();
+    check_resume_boundaries(
+        &engine,
+        &sharded_full,
+        reg2.path(),
+        || ref_cfg(tmp.path(), "e2train", 18),
+        "sharded ckpt -> resident resume",
+    );
+    // and the two uninterrupted runs agree with each other
+    assert_outcomes_identical(&full, &sharded_full, "resident vs sharded full runs");
+}
+
+// ---------------------------------------------------------------------
+// Streaming CIFAR-bin ingestion (deferred decode on the prefetch worker)
+// ---------------------------------------------------------------------
+
+const REC: usize = 1 + 3072;
+
+/// Deterministic pseudo-CIFAR binaries (same generator as
+/// tests/cifar_stream.rs): 5 train files + 1 test file.
+fn write_cifar_dir(dir: &Path, per_file: usize, test_records: usize) {
+    let mut state = 0x1234_5678u32;
+    let mut next = move || -> u8 {
+        state = state.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+        (state >> 24) as u8
+    };
+    let mut file = |n: usize| -> Vec<u8> {
+        let mut bytes = Vec::with_capacity(n * REC);
+        for _ in 0..n {
+            bytes.push(next() % 10);
+            for _ in 0..3072 {
+                bytes.push(next());
+            }
+        }
+        bytes
+    };
+    for i in 1..=5 {
+        std::fs::write(dir.join(format!("data_batch_{i}.bin")), file(per_file)).unwrap();
+    }
+    std::fs::write(dir.join("test_batch.bin"), file(test_records)).unwrap();
+}
+
+/// A 32px/10-class reference family so CIFAR binaries are loadable.
+fn cifar_family() -> RefFamilySpec {
+    RefFamilySpec {
+        family: "refmlp-c32".into(),
+        hw: 32,
+        hidden: 8,
+        classes: 10,
+        batch: 8,
+        eval_batch: 16,
+        gated_blocks: 4,
+    }
+}
+
+#[test]
+fn resume_is_bitwise_identical_on_deferred_cifar_path() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &cifar_family()).unwrap();
+    let data_dir = TempDir::new().unwrap();
+    write_cifar_dir(data_dir.path(), 16, 16); // 80 train / 16 test records
+    let engine = Engine::cpu().unwrap();
+
+    let cfg = |ckpt: Option<&Path>| {
+        let mut c = RunCfg::quick("refmlp-c32", "e2train", 12);
+        c.artifacts_dir = tmp.path().to_path_buf();
+        c.data = DataCfg::CifarBin { dir: data_dir.path().to_path_buf() };
+        c.eval_every = 4;
+        assert!(c.prefetch, "deferred decode needs the prefetch default");
+        if let Some(d) = ckpt {
+            c = with_ckpt(c, d, 4);
+        }
+        c
+    };
+    let reg = TempDir::new().unwrap();
+    let full = Trainer::new(&engine, cfg(Some(reg.path())))
+        .unwrap()
+        .run(None)
+        .unwrap();
+    check_resume_boundaries(
+        &engine,
+        &full,
+        reg.path(),
+        || cfg(None),
+        "deferred CIFAR",
+    );
+}
+
+// ---------------------------------------------------------------------
+// Cross-process serving from a registry
+// ---------------------------------------------------------------------
+
+/// A serve service with **no in-process trainer** answers from a
+/// registry-loaded checkpoint, reporting the hot-loaded
+/// `snapshot_version`, with logits bitwise equal to a direct eval of
+/// the checkpoint's serving state (the SWA average here — e2train runs
+/// average past the midpoint).
+#[test]
+fn serve_answers_from_registry_checkpoint_without_trainer() {
+    let tmp = TempDir::new().unwrap();
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    // A trainer (conceptually: another process) leaves checkpoints in a
+    // registry.  No SnapshotCell is shared with it.
+    let reg = TempDir::new().unwrap();
+    let full_cfg = with_ckpt(ref_cfg(tmp.path(), "e2train", 16), reg.path(), 8);
+    Trainer::new(&engine, full_cfg).unwrap().run(None).unwrap();
+
+    let registry = CheckpointRegistry::new(reg.path(), RetentionCfg::default());
+    let ckpt = registry.load_latest().unwrap().expect("checkpoints were written");
+    assert!(ckpt.swa_model.is_some(), "e2train past midpoint has SWA state");
+
+    // Server process: empty cell + registry watcher.
+    let manifest = fam.join("e2train.json");
+    let cell = Arc::new(SnapshotCell::new());
+    let service = ServeService::start(
+        &engine,
+        &manifest,
+        cell.clone(),
+        ServeCfg { workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let _watcher = service.watch_registry(reg.path(), Duration::from_millis(10));
+    let t0 = Instant::now();
+    while cell.version() == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "watcher never hot-loaded the checkpoint"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let served_version = cell.version();
+    assert!(served_version >= 1);
+
+    // Ground truth: direct snapshot eval of the checkpoint's serving
+    // state (SWA preferred), through the same padded-batch shape.
+    let prog = TrainProgram::load_eval_only(&engine, &manifest).unwrap();
+    let snap =
+        StateSnapshot::from_model_state(prog.backend(), ckpt.serving_state()).unwrap();
+    let hw = prog.manifest.arch.image_size;
+    let classes = prog.manifest.arch.num_classes;
+    let stride = hw * hw * 3;
+    let data = e2train::data::synthetic::generate(classes, 24, hw, 99);
+
+    let client = service.client();
+    for i in 0..data.n {
+        let px = &data.images[i * stride..(i + 1) * stride];
+        let label = data.labels[i];
+        let got = client.submit(px, &[label]).unwrap().wait().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].snapshot_version, served_version, "sample {i}");
+
+        let eb = prog.eval_batch();
+        let mut bx = vec![0f32; eb * stride];
+        bx[..stride].copy_from_slice(px);
+        let mut by = vec![-1i32; eb];
+        by[0] = label;
+        let out = prog
+            .eval_batch_snapshot(
+                &snap,
+                &e2train::runtime::HostTensor::f32(vec![eb, hw, hw, 3], bx),
+                &e2train::runtime::HostTensor::i32(vec![eb], by),
+            )
+            .unwrap();
+        let logits = out.logits.unwrap();
+        let want = &logits.as_f32().unwrap()[..classes];
+        let got_bits: Vec<u32> = got[0].logits.iter().map(|v| v.to_bits()).collect();
+        let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, want_bits, "sample {i}: served logits drifted");
+    }
+    service.shutdown();
+}
+
+/// A registry holding checkpoints for a *different* artifact must never
+/// poison the snapshot cell: the watcher refuses the layout mismatch
+/// and the service keeps waiting (version stays 0) instead of workers
+/// failing on every batch.
+#[test]
+fn watcher_refuses_checkpoints_from_a_different_artifact() {
+    let tmp = TempDir::new().unwrap();
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    // e2train checkpoints (extra gate.* tensors) ...
+    let reg = TempDir::new().unwrap();
+    let full_cfg = with_ckpt(ref_cfg(tmp.path(), "e2train", 12), reg.path(), 6);
+    Trainer::new(&engine, full_cfg).unwrap().run(None).unwrap();
+
+    // ... served through the sgd32 artifact: never hot-loaded.
+    let cell = Arc::new(SnapshotCell::new());
+    let service = ServeService::start(
+        &engine,
+        &fam.join("sgd32.json"),
+        cell.clone(),
+        ServeCfg::default(),
+    )
+    .unwrap();
+    let _watcher = service.watch_registry(reg.path(), Duration::from_millis(5));
+    std::thread::sleep(Duration::from_millis(120));
+    assert_eq!(
+        cell.version(),
+        0,
+        "a mismatched checkpoint must be refused, not published"
+    );
+    service.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Corruption + misconfiguration safety
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupt_checkpoints_and_wrong_configs_are_rejected_cleanly() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let reg = TempDir::new().unwrap();
+    let full_cfg = with_ckpt(ref_cfg(tmp.path(), "e2train", 12), reg.path(), 6);
+    Trainer::new(&engine, full_cfg).unwrap().run(None).unwrap();
+
+    let registry = CheckpointRegistry::new(reg.path(), RetentionCfg::default());
+    let entry = registry.latest().unwrap().unwrap();
+    let path = reg.path().join(&entry.file);
+    let good = std::fs::read(&path).unwrap();
+
+    // Truncation at several depths: clean errors, never a panic.
+    for cut in [0, 10, good.len() / 3, good.len() - 1] {
+        std::fs::write(&path, &good[..cut]).unwrap();
+        assert!(read_checkpoint(&path).is_err(), "cut {cut} accepted");
+        assert!(registry.load(&entry).is_err(), "cut {cut} passed the registry");
+    }
+    // A flipped byte fails the content hash.
+    let mut bad = good.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x01;
+    std::fs::write(&path, &bad).unwrap();
+    let msg = format!("{:#}", read_checkpoint(&path).unwrap_err());
+    assert!(msg.contains("hash"), "unexpected error: {msg}");
+
+    // Restore the good bytes; resume under a drifted config must fail
+    // with the fingerprint message, not run.
+    std::fs::write(&path, &good).unwrap();
+    let ckpt = registry.load_latest().unwrap().unwrap();
+    let mut wrong = ref_cfg(tmp.path(), "e2train", 12);
+    wrong.seed = 1;
+    let err = Trainer::new(&engine, wrong)
+        .unwrap()
+        .resume(ckpt)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"));
+
+    // A checkpoint past the configured horizon is rejected too.
+    let ckpt = registry.load_latest().unwrap().unwrap();
+    let mut short = ref_cfg(tmp.path(), "e2train", 12);
+    short.iters = ckpt.iter - 1;
+    let err = Trainer::new(&engine, short)
+        .unwrap()
+        .resume(ckpt)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint") || format!("{err:#}").contains("iter"));
+}
+
+/// Resuming the *final* checkpoint runs zero iterations and re-derives
+/// the uninterrupted outcome — useful for re-evaluating a finished run.
+#[test]
+fn resuming_the_final_checkpoint_rederives_the_outcome() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let reg = TempDir::new().unwrap();
+    let full_cfg = with_ckpt(ref_cfg(tmp.path(), "sgd32", 12), reg.path(), 5);
+    let full = Trainer::new(&engine, full_cfg).unwrap().run(None).unwrap();
+
+    let registry = CheckpointRegistry::new(reg.path(), RetentionCfg::default());
+    let last = registry.latest().unwrap().unwrap();
+    assert_eq!(last.iter, 12, "final boundary checkpoint exists");
+    let ckpt = registry.load(&last).unwrap();
+    let out = Trainer::new(&engine, ref_cfg(tmp.path(), "sgd32", 12))
+        .unwrap()
+        .resume(ckpt)
+        .unwrap();
+    assert_outcomes_identical(&full, &out, "final-checkpoint resume");
+}

@@ -336,3 +336,71 @@ fn unpublished_state_and_closed_service_fail_fast() {
         "submits after shutdown must fail"
     );
 }
+
+/// Admission control: a request whose client deadline already expired
+/// before dispatch completes with an explicit `expired` error (never a
+/// hang, never an eval slot), is counted in `ServeStats::expired`, and
+/// live requests around it are unaffected.
+#[test]
+fn expired_requests_fail_fast_with_expired_error() {
+    use std::time::Instant;
+
+    let tmp = TempDir::new().unwrap();
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let manifest = fam.join("sgd32.json");
+    let prog = TrainProgram::load(&engine, &manifest).unwrap();
+    let data = synthetic::generate(10, 8, 8, 4);
+    let stride = 8 * 8 * 3;
+
+    let cell = Arc::new(SnapshotCell::new());
+    cell.publish(
+        StateSnapshot::from_model_state(
+            prog.backend(),
+            &ModelState::init(&prog.manifest, 0),
+        )
+        .unwrap(),
+    );
+    let service = ServeService::start(
+        &engine,
+        &manifest,
+        cell,
+        ServeCfg { workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    let client = service.client();
+
+    // Already-expired two-sample request: fails with the explicit
+    // expired error.
+    let err = client
+        .submit_with_deadline(
+            &data.images[..2 * stride],
+            &data.labels[..2],
+            Some(Instant::now() - Duration::from_millis(1)),
+        )
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("expired"),
+        "wrong failure: {err:#}"
+    );
+
+    // A generous deadline and a no-deadline request still serve fine.
+    let ok = client
+        .submit_with_deadline(
+            &data.images[..stride],
+            &data.labels[..1],
+            Some(Instant::now() + Duration::from_secs(30)),
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(ok.len(), 1);
+    let ok = client.submit(&data.images[..stride], &data.labels[..1]).unwrap();
+    assert_eq!(ok.wait().unwrap().len(), 1);
+
+    let stats = service.shutdown();
+    assert_eq!(stats.expired, 2, "both expired samples counted");
+    assert_eq!(stats.samples, 2, "only live samples completed");
+}
