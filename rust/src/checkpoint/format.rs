@@ -32,6 +32,8 @@
 //! Decoding is fully bounds-checked and hash-verified: a truncated or
 //! bit-flipped file is rejected with a clean error, never a panic.
 
+use std::io;
+
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::RunCfg;
@@ -41,7 +43,7 @@ use crate::energy::{EnergyBreakdown, EnergyLedger};
 use crate::metrics::{Mean, TracePoint};
 use crate::optim::SwaState;
 use crate::runtime::{HostTensor, ModelState, TensorData};
-use crate::util::hash::fnv1a64;
+use crate::util::hash::{fnv1a64, Fnv64};
 use crate::util::json::{parse, Json};
 
 /// Schema tag written into (and required from) every header.
@@ -89,44 +91,60 @@ impl CheckpointData {
 // ==========================================================================
 // Encode
 // ==========================================================================
+//
+// The byte layout is defined once: [`write_body`] emits magic + header +
+// payload sections to any `io::Write` sink.  Two containers assemble it:
+//
+// * [`encode`] — the whole-buffer reference path: serialize to memory,
+//   hash the buffer, append the trailer.  Spec-grade and used by the
+//   corruption/roundtrip tests;
+// * [`write_checkpoint`] — the streaming production path: every byte
+//   flows through the FNV-1a-64 hasher *straight to the sink* (the
+//   registry's temp file), so encoding holds no serialized copy of the
+//   model — constant memory beyond the live state itself.
+//
+// `streaming_write_is_byte_identical_to_encode` pins the two paths
+// byte-for-byte, so a drift in container assembly can't ship.
 
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
-    buf.extend_from_slice(&v.to_le_bytes());
+fn put_u64<W: io::Write>(w: &mut W, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
 }
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
-    buf.extend_from_slice(&v.to_le_bytes());
+fn put_u32<W: io::Write>(w: &mut W, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
 }
 
-fn put_f64(buf: &mut Vec<u8>, v: f64) {
-    buf.extend_from_slice(&v.to_le_bytes());
+fn put_f64<W: io::Write>(w: &mut W, v: f64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
 }
 
-fn put_rng(buf: &mut Vec<u8>, s: &[u64; 4]) {
-    for &w in s {
-        put_u64(buf, w);
+fn put_rng<W: io::Write>(w: &mut W, s: &[u64; 4]) -> io::Result<()> {
+    for &word in s {
+        put_u64(w, word)?;
     }
+    Ok(())
 }
 
-fn put_mean(buf: &mut Vec<u8>, m: &Mean) {
+fn put_mean<W: io::Write>(w: &mut W, m: &Mean) -> io::Result<()> {
     let (sum, n) = m.parts();
-    put_f64(buf, sum);
-    put_u64(buf, n);
+    put_f64(w, sum)?;
+    put_u64(w, n)
 }
 
-fn put_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
+fn put_tensor<W: io::Write>(w: &mut W, t: &HostTensor) -> io::Result<()> {
     match &t.data {
         TensorData::F32(v) => {
             for &x in v {
-                buf.extend_from_slice(&x.to_le_bytes());
+                w.write_all(&x.to_le_bytes())?;
             }
         }
         TensorData::I32(v) => {
             for &x in v {
-                buf.extend_from_slice(&x.to_le_bytes());
+                w.write_all(&x.to_le_bytes())?;
             }
         }
     }
+    Ok(())
 }
 
 fn tensor_specs(state: &ModelState) -> Json {
@@ -150,10 +168,10 @@ fn tensor_specs(state: &ModelState) -> Json {
     }))
 }
 
-/// Serialize to the `ckpt/v1` byte container.
-pub fn encode(data: &CheckpointData) -> Vec<u8> {
-    // ---- header ---------------------------------------------------
-    let header = Json::obj(vec![
+/// Build the header JSON (structure only — names/shapes/counts; exact
+/// values live in the binary payload).
+fn build_header(data: &CheckpointData) -> String {
+    Json::obj(vec![
         ("schema", Json::str(SCHEMA)),
         ("iter", Json::num(data.iter as f64)),
         ("fingerprint", Json::str(data.cfg.fingerprint())),
@@ -200,60 +218,117 @@ pub fn encode(data: &CheckpointData) -> Vec<u8> {
             },
         ),
     ])
-    .to_string();
+    .to_string()
+}
 
-    // ---- payload ---------------------------------------------------
-    let mut p = Vec::new();
+/// Emit everything except the trailing hash — magic, header length,
+/// header, payload sections in header order — to any sink.  This is the
+/// single definition of the byte layout; both container paths call it.
+fn write_body<W: io::Write>(data: &CheckpointData, w: &mut W) -> io::Result<()> {
+    let header = build_header(data);
+    w.write_all(MAGIC)?;
+    put_u64(w, header.len() as u64)?;
+    w.write_all(header.as_bytes())?;
+
     // 1. RNG streams
-    put_rng(&mut p, &data.sampler.rng);
-    put_rng(&mut p, &data.smd.rng);
-    put_rng(&mut p, &data.sd.rng);
+    put_rng(w, &data.sampler.rng)?;
+    put_rng(w, &data.smd.rng)?;
+    put_rng(w, &data.sd.rng)?;
     // 2. sampler permutation
     for &x in &data.sampler.perm {
-        put_u32(&mut p, x);
+        put_u32(w, x)?;
     }
     // 3. energy ledger
     let b = &data.ledger.breakdown;
     for v in [b.fwd_mac, b.bwd_mac, b.sram, b.dram, b.update, data.ledger.macs] {
-        put_f64(&mut p, v);
+        put_f64(w, v)?;
     }
     for &(it, j) in &data.ledger.trace {
-        put_u64(&mut p, it);
-        put_f64(&mut p, j);
+        put_u64(w, it)?;
+        put_f64(w, j)?;
     }
     // 4. lifetime means
     for m in &data.gate_means {
-        put_mean(&mut p, m);
+        put_mean(w, m)?;
     }
-    put_mean(&mut p, &data.psg_mean);
+    put_mean(w, &data.psg_mean)?;
     // 5. metrics trace
     for t in &data.trace {
-        put_u64(&mut p, t.iter);
-        put_f64(&mut p, t.loss);
-        put_f64(&mut p, t.train_acc);
-        put_f64(&mut p, t.joules);
-        p.push(u8::from(t.test_acc.is_some()));
-        put_f64(&mut p, t.test_acc.unwrap_or(0.0));
+        put_u64(w, t.iter)?;
+        put_f64(w, t.loss)?;
+        put_f64(w, t.train_acc)?;
+        put_f64(w, t.joules)?;
+        w.write_all(&[u8::from(t.test_acc.is_some())])?;
+        put_f64(w, t.test_acc.unwrap_or(0.0))?;
     }
     // 6./7. tensor payloads
     for t in &data.model.values {
-        put_tensor(&mut p, t);
+        put_tensor(w, t)?;
     }
     if let Some(s) = &data.swa_model {
         for t in &s.values {
-            put_tensor(&mut p, t);
+            put_tensor(w, t)?;
         }
     }
+    Ok(())
+}
 
-    // ---- container --------------------------------------------------
-    let mut out = Vec::with_capacity(16 + header.len() + p.len() + 8);
-    out.extend_from_slice(MAGIC);
-    put_u64(&mut out, header.len() as u64);
-    out.extend_from_slice(header.as_bytes());
-    out.extend_from_slice(&p);
+/// Serialize to the `ckpt/v1` byte container (whole-buffer reference
+/// path: body to memory, hash, trailer).
+pub fn encode(data: &CheckpointData) -> Vec<u8> {
+    let mut out = Vec::new();
+    write_body(data, &mut out).expect("writing to a Vec cannot fail");
     let h = fnv1a64(&out);
-    put_u64(&mut out, h);
+    put_u64(&mut out, h).expect("writing to a Vec cannot fail");
     out
+}
+
+/// What [`write_checkpoint`] streamed: total container size and the
+/// FNV-1a-64 of the *complete file* (trailer included) — the hash the
+/// registry manifest records for transfer/corruption checks.
+#[derive(Debug, Clone, Copy)]
+pub struct EncodeStats {
+    pub bytes: u64,
+    pub file_hash: u64,
+}
+
+/// Counts + hashes every byte on its way to the sink.
+struct HashingWriter<'w, W: io::Write> {
+    w: &'w mut W,
+    hasher: Fnv64,
+    bytes: u64,
+}
+
+impl<W: io::Write> io::Write for HashingWriter<'_, W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let n = self.w.write(buf)?;
+        self.hasher.update(&buf[..n]);
+        self.bytes += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Streaming production encoder: pipe the body through the FNV-1a-64
+/// hasher straight to `w` (the registry's temp file), then append the
+/// content-hash trailer — byte-identical to [`encode`] (pinned by
+/// `streaming_write_is_byte_identical_to_encode`) with no full
+/// serialized copy in memory.
+pub fn write_checkpoint<W: io::Write>(
+    data: &CheckpointData,
+    w: &mut W,
+) -> Result<EncodeStats> {
+    let mut hw = HashingWriter { w, hasher: Fnv64::new(), bytes: 0 };
+    write_body(data, &mut hw).context("streaming checkpoint body")?;
+    // The trailer is the hash of everything before it; it is itself part
+    // of the file hash the registry manifest records.
+    let content = hw.hasher.finish();
+    io::Write::write_all(&mut hw, &content.to_le_bytes())
+        .context("writing checkpoint trailer")?;
+    Ok(EncodeStats { bytes: hw.bytes, file_hash: hw.hasher.finish() })
 }
 
 // ==========================================================================
@@ -711,6 +786,45 @@ pub(crate) mod tests {
         assert_same(&data, &back);
         // encoding is deterministic
         assert_eq!(bytes, encode(&back));
+    }
+
+    /// The streaming production path must produce the exact bytes of
+    /// the whole-buffer reference path — trailer included — and report
+    /// the whole-file hash the registry manifest records.
+    #[test]
+    fn streaming_write_is_byte_identical_to_encode() {
+        for data in [toy_checkpoint(), {
+            let mut d = toy_checkpoint();
+            d.swa_model = None;
+            d.trace.clear();
+            d
+        }] {
+            let reference = encode(&data);
+            let mut streamed = Vec::new();
+            let stats = write_checkpoint(&data, &mut streamed).unwrap();
+            assert_eq!(streamed, reference, "container bytes drifted");
+            assert_eq!(stats.bytes, reference.len() as u64);
+            assert_eq!(stats.file_hash, crate::util::hash::fnv1a64(&reference));
+            // and the streamed container decodes like any other
+            assert_same(&data, &decode(&streamed).unwrap());
+        }
+    }
+
+    /// A failing sink surfaces as a clean error, never a panic or a
+    /// silent short file.
+    #[test]
+    fn streaming_write_propagates_sink_errors() {
+        struct Broken;
+        impl std::io::Write for Broken {
+            fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::other("disk full"))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let err = write_checkpoint(&toy_checkpoint(), &mut Broken).unwrap_err();
+        assert!(format!("{err:#}").contains("disk full"));
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! * [`format`] — the `ckpt/v1` single-file container: JSON header for
 //!   structure, little-endian binary payload for every exact value
 //!   (tensors, RNG words, f64 accumulators), FNV-64 content hash.
-//!   Truncation/corruption is rejected cleanly, never a panic.
+//!   Truncation/corruption is rejected cleanly, never a panic.  The
+//!   production encoder streams through the hasher straight to the temp
+//!   file ([`format::write_checkpoint`] — constant memory, pinned
+//!   byte-identical to the whole-buffer [`encode`]).
 //! * [`registry`] — a directory of checkpoints with an atomically-
 //!   swapped `MANIFEST.json` and keep-last-N / keep-every-M retention.
 //!   Safe for concurrent cross-process readers.
@@ -31,6 +34,9 @@ pub mod format;
 pub mod registry;
 pub mod writer;
 
-pub use format::{decode, encode, read_checkpoint, CheckpointData, SCHEMA};
+pub use format::{
+    decode, encode, read_checkpoint, write_checkpoint, CheckpointData, EncodeStats,
+    SCHEMA,
+};
 pub use registry::{CheckpointEntry, CheckpointRegistry, RetentionCfg, REGISTRY_SCHEMA};
 pub use writer::CheckpointWriter;

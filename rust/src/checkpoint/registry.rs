@@ -160,21 +160,27 @@ impl CheckpointRegistry {
         self.load(entry)
     }
 
-    /// Serialize + publish one checkpoint: atomic file write, manifest
-    /// update, retention pruning.  Re-publishing an iteration replaces
-    /// its entry.  Single-writer by design (the trainer's writer
-    /// thread); readers in other processes stay safe throughout.
+    /// Serialize + publish one checkpoint: streaming atomic file write,
+    /// manifest update, retention pruning.  Re-publishing an iteration
+    /// replaces its entry.  Single-writer by design (the trainer's
+    /// writer thread); readers in other processes stay safe throughout.
+    ///
+    /// The checkpoint streams through the FNV hasher straight to the
+    /// temp file (`format::write_checkpoint`) — constant memory instead
+    /// of a full serialized copy, byte-identical to the whole-buffer
+    /// encoder by pinned test.
     pub fn publish(&self, data: &CheckpointData) -> Result<CheckpointEntry> {
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("creating registry dir {}", self.dir.display()))?;
-        let bytes = format::encode(data);
+        let file = format!("ckpt-{:010}.e2c", data.iter);
+        let path = self.dir.join(&file);
+        let stats = stream_atomic(&path, data)?;
         let entry = CheckpointEntry {
             iter: data.iter,
-            file: format!("ckpt-{:010}.e2c", data.iter),
-            hash: fnv1a64_hex(&bytes),
-            bytes: bytes.len() as u64,
+            file,
+            hash: format!("{:016x}", stats.file_hash),
+            bytes: stats.bytes,
         };
-        write_atomic(&self.dir.join(&entry.file), &bytes)?;
 
         let mut entries = self.entries()?;
         entries.retain(|e| e.iter != entry.iter);
@@ -233,19 +239,53 @@ impl CheckpointRegistry {
 /// Write-then-rename in the target's directory (same filesystem, so the
 /// rename is atomic on POSIX).
 fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_sibling(path)?;
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    rename_into_place(&tmp, path)
+}
+
+/// Stream-encode one checkpoint into a temp sibling of `path` and
+/// rename it into place — the same atomicity contract as
+/// [`write_atomic`], without ever holding the serialized checkpoint in
+/// memory.
+fn stream_atomic(path: &Path, data: &CheckpointData) -> Result<format::EncodeStats> {
+    let tmp = tmp_sibling(path)?;
+    let write = || -> Result<format::EncodeStats> {
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = std::io::BufWriter::new(file);
+        let stats = format::write_checkpoint(data, &mut w)?;
+        // Surface buffered-write errors before the rename publishes.
+        w.into_inner()
+            .map_err(|e| anyhow!("flushing {}: {}", tmp.display(), e.error()))?;
+        Ok(stats)
+    };
+    let stats = match write() {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+    };
+    rename_into_place(&tmp, path)?;
+    Ok(stats)
+}
+
+fn tmp_sibling(path: &Path) -> Result<PathBuf> {
     let file_name = path
         .file_name()
         .ok_or_else(|| anyhow!("bad target path {}", path.display()))?
         .to_string_lossy()
         .to_string();
-    let tmp = path.with_file_name(format!(".{file_name}.tmp-{}", std::process::id()));
-    std::fs::write(&tmp, bytes)
-        .with_context(|| format!("writing {}", tmp.display()))?;
-    std::fs::rename(&tmp, path).with_context(|| {
-        let _ = std::fs::remove_file(&tmp);
+    Ok(path.with_file_name(format!(".{file_name}.tmp-{}", std::process::id())))
+}
+
+fn rename_into_place(tmp: &Path, path: &Path) -> Result<()> {
+    std::fs::rename(tmp, path).with_context(|| {
+        let _ = std::fs::remove_file(tmp);
         format!("publishing {}", path.display())
-    })?;
-    Ok(())
+    })
 }
 
 #[cfg(test)]

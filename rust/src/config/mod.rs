@@ -25,6 +25,43 @@ impl Default for DataCfg {
     }
 }
 
+/// Explicit execution-backend selection for the step loop
+/// (`runtime::exec::StepBackend`).  All three backends are bitwise
+/// interchangeable for a fixed seed (tests/backend_matrix.rs) — this
+/// knob picks *where* a step executes, never *what* it computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Legacy host path: the full state converts in and out of the
+    /// executing backend every step (the equivalence baseline).
+    Host,
+    /// Device-resident state across steps (the single-executor default).
+    Resident,
+    /// Data-parallel sharded execution over an engine pool
+    /// (`runtime::shard`); requires `shards >= 1`.
+    Sharded,
+}
+
+impl BackendChoice {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendChoice::Host => "host",
+            BackendChoice::Resident => "resident",
+            BackendChoice::Sharded => "sharded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "host" => Ok(BackendChoice::Host),
+            "resident" => Ok(BackendChoice::Resident),
+            "sharded" => Ok(BackendChoice::Sharded),
+            other => Err(anyhow!(
+                "unknown backend '{other}' (known: host, resident, sharded)"
+            )),
+        }
+    }
+}
+
 /// SMD (Sec. 3.1): drop each mini-batch with probability `p`.
 #[derive(Debug, Clone, Copy)]
 pub struct SmdCfg {
@@ -110,6 +147,14 @@ pub struct RunCfg {
     /// exercises the sharded machinery on one engine).  When set, it
     /// supersedes `resident` for the step loop.
     pub shards: usize,
+    /// Explicit execution-backend selection.  `None` (the default)
+    /// keeps the legacy mapping — `shards >= 1` selects sharded, else
+    /// `resident` selects resident vs host; `Some(..)` names the
+    /// backend outright and is validated against `shards`
+    /// ([`RunCfg::validate_backend`]).  Not part of the determinism
+    /// fingerprint: backends are bitwise interchangeable, so a
+    /// checkpoint taken under one may resume under another.
+    pub backend: Option<BackendChoice>,
     /// Durable checkpoint cadence + registry (`checkpoint` subsystem):
     /// when `checkpoint.every > 0`, the trainer publishes a `ckpt/v1`
     /// file at every boundary and `e2train resume <dir>` continues the
@@ -142,8 +187,44 @@ impl RunCfg {
             resident: true,
             prefetch: true,
             shards: 0,
+            backend: None,
             checkpoint: CkptCfg::default(),
             artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+
+    /// The execution backend this config selects: the explicit
+    /// `backend` knob when present, else the legacy mapping from
+    /// `shards` / `resident`.
+    pub fn resolved_backend(&self) -> BackendChoice {
+        match self.backend {
+            Some(b) => b,
+            None if self.shards >= 1 => BackendChoice::Sharded,
+            None if self.resident => BackendChoice::Resident,
+            None => BackendChoice::Host,
+        }
+    }
+
+    /// Reject contradictory backend/shards combinations.  Called by the
+    /// JSON parser *and* by `Trainer::new`, so launcher files and
+    /// programmatic configs fail with the same clean message instead of
+    /// one knob silently superseding the other.
+    pub fn validate_backend(&self) -> Result<()> {
+        match self.backend {
+            Some(BackendChoice::Sharded) if self.shards == 0 => Err(anyhow!(
+                "backend \"sharded\" needs shards >= 1 (set the `shards` knob)"
+            )),
+            Some(b @ (BackendChoice::Host | BackendChoice::Resident))
+                if self.shards >= 1 =>
+            {
+                Err(anyhow!(
+                    "backend \"{}\" contradicts shards = {} (drop `shards` or \
+                     select backend \"sharded\")",
+                    b.as_str(),
+                    self.shards
+                ))
+            }
+            _ => Ok(()),
         }
     }
 
@@ -218,6 +299,13 @@ impl RunCfg {
             ("prefetch", Json::Bool(self.prefetch)),
             ("shards", Json::num(self.shards as f64)),
             (
+                "backend",
+                match self.backend {
+                    Some(b) => Json::str(b.as_str()),
+                    None => Json::Null,
+                },
+            ),
+            (
                 "checkpoint",
                 Json::obj(vec![
                     ("every", Json::num(self.checkpoint.every as f64)),
@@ -240,11 +328,11 @@ impl RunCfg {
     }
 
     /// JSON of exactly the fields the bitwise-resume contract depends
-    /// on.  Execution-layout knobs (`resident` / `prefetch` / `shards`)
-    /// are deliberately **excluded**: those paths are bitwise
-    /// interchangeable (tests/{resident,shard}_equivalence.rs), so a
-    /// checkpoint written by a resident run may legally resume sharded
-    /// and vice versa.  Paths and checkpoint cadence are excluded too —
+    /// on.  Execution-layout knobs (`backend` / `resident` / `prefetch`
+    /// / `shards`) are deliberately **excluded**: the backends are
+    /// bitwise interchangeable (tests/backend_matrix.rs,
+    /// tests/{resident,shard}_equivalence.rs), so a checkpoint written
+    /// by a resident run may legally resume sharded and vice versa.  Paths and checkpoint cadence are excluded too —
     /// relocating artifacts (`resume --artifacts`) or the CIFAR
     /// binaries (`resume --data-dir`) or re-checkpointing on a
     /// different schedule does not change the training stream.
@@ -306,7 +394,7 @@ impl RunCfg {
             &[
                 "family", "method", "iters", "seed", "lr", "data", "smd", "sd",
                 "eval_every", "swa", "alpha", "beta", "resident", "prefetch",
-                "shards", "checkpoint", "artifacts_dir",
+                "shards", "backend", "checkpoint", "artifacts_dir",
             ],
             "run-config",
         )?;
@@ -382,6 +470,13 @@ impl RunCfg {
         cfg.resident = v.get("resident").and_then(Json::as_bool).unwrap_or(true);
         cfg.prefetch = v.get("prefetch").and_then(Json::as_bool).unwrap_or(true);
         cfg.shards = v.get("shards").and_then(Json::as_usize).unwrap_or(0);
+        cfg.backend = match v.get("backend") {
+            None | Some(Json::Null) => None,
+            Some(b) => Some(BackendChoice::parse(b.as_str().ok_or_else(|| {
+                anyhow!("`backend` must be a string (host | resident | sharded)")
+            })?)?),
+        };
+        cfg.validate_backend()?;
         if let Some(c) = v.get("checkpoint") {
             Self::check_keys(c, &["every", "dir", "keep_last", "keep_every"], "checkpoint")?;
             cfg.checkpoint = CkptCfg {
@@ -484,6 +579,7 @@ mod tests {
         b.resident = false;
         b.prefetch = false;
         b.shards = 3;
+        b.backend = Some(BackendChoice::Sharded);
         b.artifacts_dir = PathBuf::from("elsewhere");
         b.checkpoint.every = 7;
         b.checkpoint.dir = Some(PathBuf::from("x"));
@@ -508,6 +604,43 @@ mod tests {
         let mut h = a.clone();
         h.data = DataCfg::Synthetic { classes: 10, n_train: 999, n_test: 512, seed: 0 };
         assert_ne!(a.fingerprint(), h.fingerprint());
+    }
+
+    #[test]
+    fn backend_knob_resolves_and_validates() {
+        // Legacy mapping when the knob is absent.
+        let mut cfg = RunCfg::quick("f", "sgd32", 5);
+        assert_eq!(cfg.resolved_backend(), BackendChoice::Resident);
+        cfg.resident = false;
+        assert_eq!(cfg.resolved_backend(), BackendChoice::Host);
+        cfg.shards = 2;
+        assert_eq!(cfg.resolved_backend(), BackendChoice::Sharded);
+
+        // Explicit knob wins, and round-trips through JSON.
+        let mut cfg = RunCfg::quick("f", "sgd32", 5);
+        cfg.backend = Some(BackendChoice::Sharded);
+        cfg.shards = 2;
+        cfg.validate_backend().unwrap();
+        let back = RunCfg::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.backend, Some(BackendChoice::Sharded));
+        assert_eq!(back.resolved_backend(), BackendChoice::Sharded);
+
+        // Contradictions are rejected, programmatically and via JSON.
+        let mut bad = RunCfg::quick("f", "sgd32", 5);
+        bad.backend = Some(BackendChoice::Sharded);
+        assert!(bad.validate_backend().is_err(), "sharded without shards");
+        let mut bad = RunCfg::quick("f", "sgd32", 5);
+        bad.backend = Some(BackendChoice::Host);
+        bad.shards = 2;
+        let err = format!("{:#}", bad.validate_backend().unwrap_err());
+        assert!(err.contains("host") && err.contains("shards"));
+        assert!(RunCfg::from_json(&bad.to_json()).is_err());
+
+        // Unknown spelling fails the parse with a naming message.
+        let mut m = RunCfg::quick("f", "sgd32", 5).to_json().as_obj().unwrap().clone();
+        m.insert("backend".into(), Json::str("warp"));
+        let err = format!("{:#}", RunCfg::from_json(&Json::Obj(m)).unwrap_err());
+        assert!(err.contains("warp"));
     }
 
     #[test]

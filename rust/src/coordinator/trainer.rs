@@ -4,27 +4,29 @@
 //!
 //! The step loop is buffer-resident and overlapped by default:
 //!
-//! * model state lives in a [`DeviceState`] across steps (only metric
-//!   outputs sync to host each iteration; `sync_to_host` runs only for
-//!   SWA snapshots / fine-tune handoff / end-of-run);
+//! * model state lives in backend-native buffers across steps (only
+//!   metric outputs sync to host each iteration; a full host sync runs
+//!   only for SWA snapshots / fine-tune handoff / end-of-run);
 //! * batch assembly + augmentation run on a background prefetch thread
 //!   behind a bounded channel whose depth is auto-tuned to the measured
 //!   augment/step time ratio (`data::prefetch::auto_depth`), so data
 //!   prep overlaps executable dispatch — an SMD skip consumes a staged
 //!   batch without stalling.
 //!
-//! `cfg.resident = false` / `cfg.prefetch = false` select the legacy
-//! synchronous host path; for fixed seeds both paths produce
-//! bitwise-identical metrics (tests/resident_equivalence.rs).
-//!
-//! `cfg.shards >= 1` switches the step loop to the data-parallel
-//! sharded path (`runtime::shard::ShardedTrainer`): every batch splits
-//! across N engines and recombines through a deterministic host-side
-//! all-reduce, bitwise identical to the single-device resident path for
-//! the same seed (tests/shard_equivalence.rs).  SMD-dropped iterations
-//! consume the whole batch — all shard slices — exactly like the
-//! single-device loop; SWA snapshots and serve publishing read the
-//! sharded master state without any device round-trip.
+//! **Where** a step executes is not this module's business: the loop is
+//! written once against the [`StepBackend`] trait (`runtime::exec`) and
+//! `cfg.backend` picks the strategy — `host` (legacy full-state
+//! round-trip), `resident` (the default described above), or `sharded`
+//! (data-parallel over an engine pool with a deterministic host-side
+//! all-reduce).  With the knob unset, the legacy `resident` / `shards`
+//! fields map onto the same three choices.  All backends are bitwise
+//! interchangeable for a fixed seed — SMD drops, SWA, publishing,
+//! checkpointing and eval go through the trait, so
+//! tests/backend_matrix.rs pins the full matrix (and
+//! tests/{resident,shard}_equivalence.rs the historical pairwise
+//! contracts).  SMD-dropped iterations consume the whole batch — shard
+//! slicing happens inside the sharded backend, downstream of the batch
+//! stream.
 //!
 //! `cfg.checkpoint.every > 0` publishes a durable `ckpt/v1` checkpoint
 //! (`crate::checkpoint`) at every boundary, off the host-side state via
@@ -52,8 +54,8 @@ use crate::energy::{EnergyLedger, EnergyModel};
 use crate::metrics::{Mean, RunMetrics};
 use crate::optim::SwaState;
 use crate::runtime::{
-    DeviceState, Engine, EvalMetrics, HostTensor, ModelState, ShardedTrainer,
-    SnapshotCell, StateSnapshot, StepHyper, TrainProgram,
+    prepare_backend, Engine, EvalMetrics, HostTensor, ModelState, SnapshotCell,
+    StateSnapshot, StepBackend, StepHyper, TrainProgram,
 };
 
 use super::sd::SdScheduler;
@@ -65,37 +67,6 @@ pub struct RunOutcome {
     pub metrics: RunMetrics,
     pub state: ModelState,
     pub ledger: EnergyLedger,
-}
-
-/// Where the model state lives during the step loop.
-enum LoopState {
-    /// Legacy host path: full state converts in/out every step.
-    Host(ModelState),
-    /// Resident path: state stays in backend-native buffers.
-    Device(DeviceState),
-    /// Data-parallel sharded path: per-shard engines + resident
-    /// replicas, host-side master state (`runtime::shard`).
-    Sharded(Box<ShardedTrainer>),
-}
-
-impl LoopState {
-    /// Materialize a host copy (SWA snapshots).
-    fn snapshot(&self) -> Result<ModelState> {
-        match self {
-            LoopState::Host(s) => Ok(s.clone()),
-            LoopState::Device(d) => d.sync_to_host(),
-            LoopState::Sharded(st) => Ok(st.state().clone()),
-        }
-    }
-
-    /// Consume into a host state (end of run).
-    fn into_model_state(self) -> Result<ModelState> {
-        match self {
-            LoopState::Host(s) => Ok(s),
-            LoopState::Device(d) => d.into_host(),
-            LoopState::Sharded(st) => Ok(st.into_state()),
-        }
-    }
 }
 
 /// The training batch stream: synchronous sampling or the prefetch
@@ -154,12 +125,14 @@ impl SamplerStart {
 }
 
 /// Assemble one checkpoint from the loop's live state (free function so
-/// the borrow of each piece stays explicit at the call sites).
+/// the borrow of each piece stays explicit at the call sites).  The
+/// model comes off [`StepBackend::export_for_checkpoint`] — host-side by
+/// contract, which is what makes checkpoints backend-agnostic.
 #[allow(clippy::too_many_arguments)]
 fn snapshot_checkpoint(
     cfg: &RunCfg,
     iter: u64,
-    loop_state: &LoopState,
+    backend: &dyn StepBackend,
     shadow: &Sampler,
     smd: &SmdScheduler,
     sd: &SdScheduler,
@@ -173,7 +146,7 @@ fn snapshot_checkpoint(
     Ok(CheckpointData {
         iter,
         cfg: cfg.clone(),
-        model: loop_state.snapshot()?,
+        model: backend.export_for_checkpoint()?,
         swa_model: swa_model.clone(),
         swa: swa.clone(),
         sampler: shadow.export(),
@@ -213,6 +186,9 @@ pub struct Trainer<'e> {
 
 impl<'e> Trainer<'e> {
     pub fn new(engine: &'e Engine, cfg: RunCfg) -> Result<Self> {
+        // Launcher files validate at parse time; programmatic configs
+        // get the same contradiction check here.
+        cfg.validate_backend()?;
         let program = TrainProgram::load(engine, &cfg.manifest_path())?;
         let energy = EnergyModel::from_manifest(&program.manifest);
         let (train_data, test_set) = Self::load_data(&cfg, &program)?;
@@ -413,18 +389,17 @@ impl<'e> Trainer<'e> {
                 ck.model
             }
         };
-        let mut loop_state = if self.cfg.shards >= 1 {
-            LoopState::Sharded(Box::new(ShardedTrainer::new(
-                self.engine,
-                &self.cfg.manifest_path(),
-                self.cfg.shards,
-                init_state,
-            )?))
-        } else if self.cfg.resident {
-            LoopState::Device(self.program.upload_state(init_state)?)
-        } else {
-            LoopState::Host(init_state)
-        };
+        // The execution layer: everything below this line is
+        // backend-agnostic — swapping host/resident/sharded (or a
+        // future real-PJRT collective impl) changes nothing in the loop.
+        let mut backend = prepare_backend(
+            self.engine,
+            &self.program,
+            &self.cfg.manifest_path(),
+            self.cfg.resolved_backend(),
+            self.cfg.shards,
+            init_state,
+        )?;
         let needs_mask = m.method.gating == "mask";
 
         // Durable checkpointing: a background writer over the registry,
@@ -512,7 +487,7 @@ impl<'e> Trainer<'e> {
                 wall_offset_s = t0.elapsed().as_secs_f64();
                 let augment_mean = wall_offset_s / PROBE_BATCHES as f64;
                 let step_mean = self.probe_step_time(
-                    &mut loop_state,
+                    backend.as_mut(),
                     staged.front().expect("probe batches"),
                     needs_mask,
                     num_gated,
@@ -553,7 +528,7 @@ impl<'e> Trainer<'e> {
             if let (Some(w), Some(sh)) = (&ckpt_writer, &shadow) {
                 if iter != start_iter && iter % ckpt_every == 0 {
                     w.submit(snapshot_checkpoint(
-                        &self.cfg, iter, &loop_state, sh, &smd, &sd, &swa,
+                        &self.cfg, iter, backend.as_ref(), sh, &smd, &sd, &swa,
                         &swa_model, &ledger, &metrics, &gate_means, &psg_mean,
                     )?)?;
                 }
@@ -583,15 +558,7 @@ impl<'e> Trainer<'e> {
                 alpha: self.cfg.alpha as f32,
                 beta: self.cfg.beta as f32,
             };
-            let sm = match &mut loop_state {
-                LoopState::Host(st) => {
-                    self.program.step(st, &x, &y, hp, mask.as_deref())?
-                }
-                LoopState::Device(ds) => {
-                    self.program.step_device(ds, &x, &y, hp, mask.as_deref())?
-                }
-                LoopState::Sharded(st) => st.step(&x, &y, hp)?,
-            };
+            let sm = backend.train_step(&x, &y, hp, mask.as_deref())?;
 
             // Energy: SD masks are per-batch gate fractions too.
             let fracs: Vec<f64> = if !sm.gate_fracs.is_empty() {
@@ -615,7 +582,7 @@ impl<'e> Trainer<'e> {
             // of the few places resident state syncs to host.
             if self.cfg.swa && swa.should_average(iter) {
                 let w = swa.observe();
-                let snap = loop_state.snapshot()?;
+                let snap = backend.sync_master()?;
                 match &mut swa_model {
                     None => swa_model = Some(snap),
                     Some(sw) => {
@@ -637,7 +604,7 @@ impl<'e> Trainer<'e> {
                 let test_acc = if self.cfg.eval_every > 0
                     && iter % self.cfg.eval_every == 0
                 {
-                    Some(self.evaluate_loop_state(&loop_state)?.0)
+                    Some(self.evaluate_backend(backend.as_ref())?.0)
                 } else {
                     None
                 };
@@ -652,8 +619,8 @@ impl<'e> Trainer<'e> {
         if let (Some(w), Some(sh)) = (&ckpt_writer, &shadow) {
             if self.cfg.iters != start_iter {
                 w.submit(snapshot_checkpoint(
-                    &self.cfg, self.cfg.iters, &loop_state, sh, &smd, &sd, &swa,
-                    &swa_model, &ledger, &metrics, &gate_means, &psg_mean,
+                    &self.cfg, self.cfg.iters, backend.as_ref(), sh, &smd, &sd,
+                    &swa, &swa_model, &ledger, &metrics, &gate_means, &psg_mean,
                 )?)?;
             }
         }
@@ -670,10 +637,15 @@ impl<'e> Trainer<'e> {
             );
         }
 
+        // Bench/metrics attribution: which execution backend ran the
+        // loop, and over how many shards (0 = single-executor).
+        metrics.backend = backend.name().to_string();
+        metrics.shards = backend.shard_count();
+
         // Final evaluation — SWA weights if averaging ran.
         let final_state = match swa_model {
             Some(sw) => sw,
-            None => loop_state.into_model_state()?,
+            None => backend.into_state()?,
         };
         // Publish the final checkpoint (SWA weights when averaging ran).
         if let Some(cell) = &self.publish {
@@ -710,14 +682,12 @@ impl<'e> Trainer<'e> {
     }
 
     /// Time one train step without perturbing the run — the depth
-    /// auto-tuner's denominator.  Host/resident paths step a **cloned**
-    /// state; the sharded path steps for real and restores its master
-    /// state + replicas afterwards.  Either way the probe is invisible:
-    /// the real state, RNG streams and metrics are untouched, so
-    /// prefetch on/off stay bitwise equivalent.
+    /// auto-tuner's denominator.  [`StepBackend::probe_step`] guarantees
+    /// invisibility (clone-and-step or step-and-restore), so prefetch
+    /// on/off stay bitwise equivalent on every backend.
     fn probe_step_time(
         &self,
-        ls: &mut LoopState,
+        backend: &mut dyn StepBackend,
         batch: &(HostTensor, HostTensor),
         needs_mask: bool,
         num_gated: usize,
@@ -733,43 +703,20 @@ impl<'e> Trainer<'e> {
             beta: self.cfg.beta as f32,
         };
         let (x, y) = batch;
-        Ok(match ls {
-            LoopState::Host(s) => {
-                let mut probe = s.clone();
-                let t0 = Instant::now();
-                self.program.step(&mut probe, x, y, hp, mask.as_deref())?;
-                t0.elapsed().as_secs_f64()
-            }
-            LoopState::Device(d) => {
-                let mut probe = d.clone();
-                let t0 = Instant::now();
-                self.program
-                    .step_device(&mut probe, x, y, hp, mask.as_deref())?;
-                t0.elapsed().as_secs_f64()
-            }
-            LoopState::Sharded(st) => st.probe_step(x, y, hp)?,
-        })
+        backend.probe_step(x, y, hp, mask.as_deref())
     }
 
-    fn evaluate_loop_state(&self, ls: &LoopState) -> Result<(f64, f64, f64)> {
-        match ls {
-            LoopState::Host(s) => self.evaluate_full(s),
-            LoopState::Device(d) => self.evaluate_full_device(d),
-            // Sharded master state lives host-side already.
-            LoopState::Sharded(st) => self.evaluate_full(st.state()),
-        }
+    /// Periodic eval against the live training state, through the
+    /// backend's cheapest route (resident state evaluates in place; a
+    /// host-side master evaluates directly).
+    fn evaluate_backend(&self, backend: &dyn StepBackend) -> Result<(f64, f64, f64)> {
+        self.eval_batches(|x, y| backend.eval_batch(x, y))
     }
 
     /// (accuracy, top5, loss) over the full test set in `eval_batch`
     /// chunks, host-path state.
     pub fn evaluate_full(&self, state: &ModelState) -> Result<(f64, f64, f64)> {
         self.eval_batches(|x, y| self.program.eval_batch_run(state, x, y))
-    }
-
-    /// Same, straight from resident state — the model never syncs to
-    /// host, only metric scalars come back per batch.
-    pub fn evaluate_full_device(&self, state: &DeviceState) -> Result<(f64, f64, f64)> {
-        self.eval_batches(|x, y| self.program.eval_batch_device(state, x, y))
     }
 
     /// Drive `run_batch` over the whole test set, including the tail

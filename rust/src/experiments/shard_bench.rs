@@ -105,6 +105,9 @@ pub fn run_shard_bench(
         );
         rows.push(Json::obj(vec![
             ("shards", Json::num(s as f64)),
+            // Execution backend per row, so trajectories stay
+            // attributable after the `cfg.backend` knob.
+            ("exec_backend", Json::str("sharded")),
             ("steps_per_sec", Json::num(sps)),
             ("speedup_vs_first", Json::num(speedup)),
             ("efficiency", Json::num(efficiency)),
@@ -126,6 +129,8 @@ pub fn run_shard_bench(
         ("batch", Json::num(prog.batch() as f64)),
         ("steps_timed", Json::num(steps as f64)),
         ("single_device_sps", Json::num(single_sps)),
+        // The baseline row's execution backend (the resident step loop).
+        ("single_device_backend", Json::str("resident")),
         ("rows", Json::Arr(rows)),
     ]))
 }

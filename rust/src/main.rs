@@ -18,7 +18,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, bail, Result};
 
 use e2train::checkpoint::{CheckpointRegistry, RetentionCfg};
-use e2train::config::{DataCfg, RunCfg};
+use e2train::config::{BackendChoice, DataCfg, RunCfg};
 use e2train::coordinator::Trainer;
 use e2train::experiments;
 use e2train::runtime::{ArtifactIndex, Engine};
@@ -44,6 +44,11 @@ COMMANDS:
     --smd                       enable stochastic mini-batch dropping
     --alpha <f>                 SLU FLOPs-regularizer weight [1.0]
     --beta <f>                  PSG adaptive threshold       [0.05]
+    --backend <b>               execution backend: host|resident|sharded
+                                (default: resident, or sharded when
+                                --shards is set — all three are bitwise
+                                interchangeable for a fixed seed)
+    --shards <n>                data-parallel shard count    [0]
     --n-train <n>               synthetic train size [2048]
     --n-test <n>                synthetic test size  [512]
     --eval-every <n>            periodic eval every n iters  [0]
@@ -59,6 +64,9 @@ COMMANDS:
                                 (default: the newest)
     --data-dir <dir>            relocated CIFAR binaries (path is not
                                 part of the resume fingerprint)
+    --backend <b> --shards <n>  resume under a different execution
+                                backend than the one that checkpointed
+                                (backends are bitwise interchangeable)
     --out <path>                write run-metrics JSON
   exp <id>                      reproduce a paper table/figure
                                 fig3a|fig3b|tab1|fig4|tab2|tab3|fig5|tab4|finetune|all
@@ -152,6 +160,9 @@ fn main() -> Result<()> {
                     c
                 }
             };
+            // Flags override whichever source built the config (quick
+            // flags or --config launcher) — never silently ignored.
+            apply_backend_flags(&mut cfg, &args)?;
             cfg.artifacts_dir = artifacts;
             // Align the synthetic class count with the artifact.
             let manifest = e2train::runtime::Manifest::load(&cfg.manifest_path())?;
@@ -201,6 +212,10 @@ fn main() -> Result<()> {
                     _ => bail!("--data-dir only applies to cifar_bin runs"),
                 }
             }
+            // Backends are bitwise interchangeable, so a checkpoint may
+            // legally resume under a different one (--backend/--shards
+            // override the embedded layout; not part of the fingerprint).
+            apply_backend_flags(&mut cfg, &args)?;
             println!(
                 "resuming {}/{} at iter {}/{} from {dir}",
                 cfg.family, cfg.method, ckpt.iter, cfg.iters
@@ -303,4 +318,28 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Apply `--backend` / `--shards` overrides to a run config from any
+/// source — quick flags, a `--config` launcher, or a checkpoint's
+/// embedded config — so the flags are never silently ignored.  A
+/// single-executor `--backend` clears an inherited shard count unless
+/// `--shards` is pinned explicitly; the combination is then validated
+/// like any other config.
+fn apply_backend_flags(cfg: &mut RunCfg, args: &Args) -> Result<()> {
+    let backend = args.get("backend").map(BackendChoice::parse).transpose()?;
+    let shards = match args.get("shards") {
+        Some(_) => Some(args.usize_or("shards", 0)?),
+        None => None,
+    };
+    if let Some(b) = backend {
+        cfg.backend = Some(b);
+        if b != BackendChoice::Sharded && shards.is_none() {
+            cfg.shards = 0;
+        }
+    }
+    if let Some(s) = shards {
+        cfg.shards = s;
+    }
+    cfg.validate_backend()
 }

@@ -33,6 +33,12 @@ pub struct RunMetrics {
     /// Prefetch channel depth the auto-tuner picked (None when the run
     /// sampled synchronously).
     pub prefetch_depth: Option<usize>,
+    /// Execution backend the step loop ran on ("host" | "resident" |
+    /// "sharded") — recorded so bench trajectories stay attributable
+    /// across the `cfg.backend` knob.
+    pub backend: String,
+    /// Data-parallel shard count (0 = single-executor backend).
+    pub shards: usize,
 }
 
 impl RunMetrics {
@@ -95,6 +101,8 @@ impl RunMetrics {
                     .map(|d| Json::num(d as f64))
                     .unwrap_or(Json::Null),
             ),
+            ("backend", Json::str(&self.backend)),
+            ("shards", Json::num(self.shards as f64)),
         ])
     }
 

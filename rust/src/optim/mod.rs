@@ -1,10 +1,15 @@
 //! Host-side optimizer bookkeeping: parameter initialization, learning
-//! rate schedules, and stochastic weight averaging.  The update rules
-//! themselves (SGD-momentum / SignSGD / PSG, Sec. 3.3) are baked into the
-//! AOT train-step artifacts; rust owns everything *around* them.
+//! rate schedules, stochastic weight averaging — and the one shared
+//! update application ([`update::apply_update`]).  For AOT artifacts the
+//! update rules (SGD-momentum / SignSGD / PSG, Sec. 3.3) are baked into
+//! the lowered train step; every host-side apply (the reference
+//! interpreter, the sharded all-reduce path) goes through
+//! `optim::update` so the wd/PSG/momentum/gates/run_mean semantics live
+//! in exactly one place.
 
 pub mod init;
 pub mod schedule;
+pub mod update;
 
 pub use init::Initializer;
 pub use schedule::{LrSchedule, SwaState};

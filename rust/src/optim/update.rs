@@ -1,0 +1,279 @@
+//! The optimizer update, in exactly one place.
+//!
+//! Every execution backend reaches the same parameter update through
+//! [`apply_update`]: weight decay on weight matrices, PSG predictor
+//! telemetry over the decayed gradients, momentum SGD, the analytic
+//! learned-gate update, and the running-mean EMA of hidden activations.
+//! The reference train-step interpreter (`runtime::reference::run_train`)
+//! and the sharded host-side apply (`runtime::shard`) used to mirror
+//! this math expression-for-expression in two files; the bitwise
+//! equivalence contracts (tests/{resident,shard}_equivalence.rs,
+//! tests/backend_matrix.rs) rested on that mirror never drifting.  Now
+//! they rest on there being nothing to mirror.
+//!
+//! Bitwise discipline: callers hand in *reduced* gradients (and reduced
+//! hidden-activation column sums) accumulated in the canonical global
+//! sample order; this function performs only element-wise arithmetic in
+//! input order, with every expression written exactly once.  Identical
+//! inputs therefore produce bit-identical outputs on every backend.
+
+/// Scalar knobs of one update application.
+#[derive(Debug, Clone, Copy)]
+pub struct UpdateCfg {
+    pub lr: f32,
+    /// Eq. (1) FLOPs-regularizer weight (learned gating only; unused
+    /// otherwise).
+    pub alpha: f32,
+    /// PSG adaptive-threshold ratio (psg update only; unused otherwise).
+    pub beta: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// Whether the method's update rule is "psg" (emit predictor
+    /// telemetry over the decayed gradients).
+    pub psg: bool,
+    /// Global batch size — the denominator of the running-mean EMA.
+    pub batch: f32,
+}
+
+/// One non-gate trainable parameter entering the update: current value,
+/// momentum buffer, and the *reduced* raw gradient (weight decay is
+/// applied in here, not by the caller).
+pub struct ParamIn<'a> {
+    pub w: &'a [f32],
+    pub mom: &'a [f32],
+    pub grad: Vec<f32>,
+    /// Weight decay applies to weight matrices (rank >= 2), not biases.
+    pub decay: bool,
+}
+
+/// The learned-gate parameter (batch-independent analytic gradient).
+pub struct GateIn<'a> {
+    pub w: &'a [f32],
+    pub mom: &'a [f32],
+}
+
+/// The running-mean persistent state: current value plus per-column
+/// sums of this step's hidden activations (accumulated by the caller in
+/// global sample order).
+pub struct RunMeanIn<'a> {
+    pub current: &'a [f32],
+    pub col_sums: Vec<f32>,
+}
+
+/// Updated gate parameter + the pre-update activation fractions the
+/// energy ledger charges.
+pub struct GateOut {
+    pub w: Vec<f32>,
+    pub mom: Vec<f32>,
+    pub fracs: Vec<f32>,
+}
+
+/// Everything [`apply_update`] produces, in the input order of `params`.
+pub struct UpdateOut {
+    /// `(new_w, new_mom)` per [`ParamIn`], same order.
+    pub params: Vec<(Vec<f32>, Vec<f32>)>,
+    pub gate: Option<GateOut>,
+    pub run_mean: Option<Vec<f32>>,
+    /// Fraction of gradient entries the PSG MSB predictor would resolve
+    /// (`cfg.psg` only).
+    pub psg_frac: Option<f32>,
+}
+
+/// Apply one optimizer update: wd -> PSG telemetry -> momentum SGD ->
+/// gates -> run_mean, each expression written once, evaluated in a
+/// fixed order.
+pub fn apply_update(
+    cfg: &UpdateCfg,
+    mut params: Vec<ParamIn>,
+    gate: Option<GateIn>,
+    run_mean: Option<RunMeanIn>,
+) -> UpdateOut {
+    // ---- weight decay on weight matrices (biases exempt) -------------
+    let wd = cfg.weight_decay;
+    for p in params.iter_mut().filter(|p| p.decay) {
+        for (g, w) in p.grad.iter_mut().zip(p.w) {
+            *g += wd * *w;
+        }
+    }
+
+    // ---- PSG predictor telemetry over the decayed gradients ----------
+    // Entries small relative to the per-step max are the ones the MSB
+    // predictor resolves (Sec. 3.3).
+    let psg_frac = if cfg.psg {
+        let beta = cfg.beta;
+        let gmax = params
+            .iter()
+            .flat_map(|p| p.grad.iter())
+            .fold(0f32, |m, &v| m.max(v.abs()));
+        if gmax > 0.0 {
+            let total: usize = params.iter().map(|p| p.grad.len()).sum();
+            let confident = params
+                .iter()
+                .flat_map(|p| p.grad.iter())
+                .filter(|v| v.abs() <= beta * gmax)
+                .count();
+            Some(confident as f32 / total as f32)
+        } else {
+            Some(0.0)
+        }
+    } else {
+        None
+    };
+
+    // ---- momentum SGD ------------------------------------------------
+    let mu = cfg.momentum;
+    let lr = cfg.lr;
+    let new_params: Vec<(Vec<f32>, Vec<f32>)> = params
+        .iter()
+        .map(|p| {
+            let mut nw = Vec::with_capacity(p.w.len());
+            let mut nm = Vec::with_capacity(p.mom.len());
+            for i in 0..p.w.len() {
+                let mi = mu * p.mom[i] + p.grad[i];
+                nm.push(mi);
+                nw.push(p.w[i] - lr * mi);
+            }
+            (nw, nm)
+        })
+        .collect();
+
+    // ---- learned gates: batch-independent, applied analytically ------
+    // The FLOPs regularizer (Eq. 1 analog): alpha pushes the gate
+    // logits down; the reported fraction is the pre-update activity.
+    let gate_out = gate.map(|gp| {
+        let alpha = cfg.alpha;
+        let g = gp.w.len().max(1) as f32;
+        let mut fracs = Vec::with_capacity(gp.w.len());
+        let mut ngw = Vec::with_capacity(gp.w.len());
+        let mut ngm = Vec::with_capacity(gp.w.len());
+        for i in 0..gp.w.len() {
+            let sig = 1.0 / (1.0 + (-gp.w[i]).exp());
+            fracs.push(sig);
+            let grad = alpha * sig * (1.0 - sig) / g;
+            let mi = mu * gp.mom[i] + grad;
+            ngm.push(mi);
+            ngw.push(gp.w[i] - lr * mi);
+        }
+        GateOut { w: ngw, mom: ngm, fracs }
+    });
+
+    // ---- running-mean state: EMA over the batch-mean activation ------
+    let run_mean_out = run_mean.map(|rm| {
+        rm.current
+            .iter()
+            .zip(rm.col_sums.iter())
+            .map(|(&cur, &s)| 0.9 * cur + 0.1 * s / cfg.batch)
+            .collect()
+    });
+
+    UpdateOut {
+        params: new_params,
+        gate: gate_out,
+        run_mean: run_mean_out,
+        psg_frac,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> UpdateCfg {
+        UpdateCfg {
+            lr: 0.1,
+            alpha: 2.0,
+            beta: 0.05,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            psg: true,
+            batch: 4.0,
+        }
+    }
+
+    #[test]
+    fn momentum_and_decay_follow_the_reference_expressions() {
+        let w = [1.0f32, -2.0];
+        let m = [0.5f32, 0.0];
+        let out = apply_update(
+            &cfg(),
+            vec![ParamIn { w: &w, mom: &m, grad: vec![0.2, -0.1], decay: true }],
+            None,
+            None,
+        );
+        let (nw, nm) = &out.params[0];
+        // grad after decay: g + wd*w
+        let g0 = 0.2 + 1e-4 * 1.0;
+        let g1 = -0.1 + 1e-4 * -2.0;
+        assert_eq!(nm[0], 0.9 * 0.5 + g0);
+        assert_eq!(nm[1], 0.9 * 0.0 + g1);
+        assert_eq!(nw[0], 1.0 - 0.1 * nm[0]);
+        assert_eq!(nw[1], -2.0 - 0.1 * nm[1]);
+    }
+
+    #[test]
+    fn biases_are_not_decayed() {
+        let w = [1.0f32];
+        let m = [0.0f32];
+        let out = apply_update(
+            &cfg(),
+            vec![ParamIn { w: &w, mom: &m, grad: vec![0.0], decay: false }],
+            None,
+            None,
+        );
+        // No decay, zero grad, zero momentum: the weight must not move.
+        assert_eq!(out.params[0].0[0], 1.0);
+    }
+
+    #[test]
+    fn psg_counts_confident_entries_after_decay() {
+        // grads 1.0 and 0.04 with beta 0.05: only the small one is
+        // within beta * gmax.
+        let w = [0.0f32, 0.0];
+        let m = [0.0f32, 0.0];
+        let out = apply_update(
+            &cfg(),
+            vec![ParamIn { w: &w, mom: &m, grad: vec![1.0, 0.04], decay: false }],
+            None,
+            None,
+        );
+        assert_eq!(out.psg_frac, Some(0.5));
+        // All-zero gradients report 0.0, not NaN.
+        let out = apply_update(
+            &cfg(),
+            vec![ParamIn { w: &w, mom: &m, grad: vec![0.0, 0.0], decay: false }],
+            None,
+            None,
+        );
+        assert_eq!(out.psg_frac, Some(0.0));
+    }
+
+    #[test]
+    fn gate_update_reports_pre_update_activity() {
+        let gw = [0.0f32, 0.0];
+        let gm = [0.0f32, 0.0];
+        let out = apply_update(
+            &cfg(),
+            Vec::new(),
+            Some(GateIn { w: &gw, mom: &gm }),
+            None,
+        );
+        let gate = out.gate.unwrap();
+        // sigmoid(0) = 0.5 activity, and the regularizer pushes the
+        // logits down.
+        assert_eq!(gate.fracs, vec![0.5, 0.5]);
+        assert!(gate.w.iter().all(|&v| v < 0.0));
+    }
+
+    #[test]
+    fn run_mean_is_the_ema_of_the_batch_mean() {
+        let out = apply_update(
+            &cfg(),
+            Vec::new(),
+            None,
+            Some(RunMeanIn { current: &[1.0, 0.0], col_sums: vec![8.0, 2.0] }),
+        );
+        let rm = out.run_mean.unwrap();
+        assert_eq!(rm[0], 0.9 * 1.0 + 0.1 * 8.0 / 4.0);
+        assert_eq!(rm[1], 0.9 * 0.0 + 0.1 * 2.0 / 4.0);
+    }
+}

@@ -1,0 +1,461 @@
+//! The execution layer: *where* a training step runs, behind one trait.
+//!
+//! E2-Train's savings levers (SMD, selective layer update, PSG) are
+//! orthogonal to the execution strategy, so the trainer's step loop is
+//! written once against [`StepBackend`] and the strategy is picked by
+//! `cfg.backend` (`config::BackendChoice`):
+//!
+//! * [`HostBackend`] — the legacy host path: the full [`ModelState`]
+//!   converts in and out of the executing backend every step.  Kept as
+//!   the equivalence baseline;
+//! * [`ResidentBackend`] — state lives in a [`DeviceState`] across
+//!   steps; only per-step inputs and metric outputs cross the host
+//!   boundary (the single-executor default);
+//! * [`ShardedBackend`] — data-parallel execution over an engine pool
+//!   with the deterministic host-side all-reduce
+//!   ([`super::shard::ShardedTrainer`]).
+//!
+//! All three are **bitwise interchangeable** for a fixed seed
+//! (tests/backend_matrix.rs): they execute the same program(s) and every
+//! host-side update goes through the one shared
+//! `optim::update::apply_update`.  That is also the extension contract —
+//! a real-PJRT collective all-reduce or a buffer-donating resident path
+//! (ROADMAP) lands as a new `StepBackend` impl, not as trainer surgery.
+//!
+//! Checkpointing goes through [`StepBackend::export_for_checkpoint`]:
+//! every backend can export its authoritative state as a host-side
+//! [`ModelState`], which is why a checkpoint taken under one backend
+//! resumes under any other ([`StepBackend::prepare`] re-derives the
+//! backend-native form, rebroadcasting replicas where needed).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::BackendChoice;
+
+use super::device::DeviceState;
+use super::engine::Engine;
+use super::program::{EvalMetrics, ModelState, StepHyper, StepMetrics, TrainProgram};
+use super::shard::ShardedTrainer;
+use super::tensor::HostTensor;
+
+/// One execution strategy for the training step loop.  The trainer owns
+/// a `Box<dyn StepBackend>` and never matches on the concrete type.
+pub trait StepBackend {
+    /// Stable name recorded in run metrics and bench rows
+    /// ("host" | "resident" | "sharded").
+    fn name(&self) -> &'static str;
+
+    /// Data-parallel shard count (0 for single-executor backends).
+    fn shard_count(&self) -> usize {
+        0
+    }
+
+    /// Execute one optimizer step on a full batch.
+    fn train_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+        mask: Option<&[f32]>,
+    ) -> Result<StepMetrics>;
+
+    /// Time one step without perturbing the run (the prefetch depth
+    /// auto-tuner's denominator).  Implementations either step a cloned
+    /// state or step for real and restore — either way the live state,
+    /// RNG streams and metrics are untouched.
+    fn probe_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+        mask: Option<&[f32]>,
+    ) -> Result<f64>;
+
+    /// Materialize a host copy of the authoritative model state (SWA
+    /// snapshots, serve publishing).
+    fn sync_master(&self) -> Result<ModelState>;
+
+    /// Push the authoritative state back out to any execution replicas
+    /// (no-op for backends whose authority *is* the executing buffer).
+    /// Today's backends call this internally where needed (the sharded
+    /// step/probe restore); it is part of the trait surface because the
+    /// real-PJRT collective backend (ROADMAP) needs an externally
+    /// drivable replica refresh, and
+    /// `exec::tests::rebroadcast_is_state_preserving` pins its contract
+    /// for every impl.
+    fn rebroadcast(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// The state a durable checkpoint captures.  Host-side by contract,
+    /// so checkpoints are backend-agnostic and cross-backend resume
+    /// falls out of the abstraction (tests/backend_matrix.rs).
+    fn export_for_checkpoint(&self) -> Result<ModelState> {
+        self.sync_master()
+    }
+
+    /// Evaluate one batch against the live training state, using the
+    /// cheapest route this backend has (resident state evaluates
+    /// in place; host-side masters evaluate directly).
+    fn eval_batch(&self, x: &HostTensor, y: &HostTensor) -> Result<EvalMetrics>;
+
+    /// Consume into the final host state (end of run).
+    fn into_state(self: Box<Self>) -> Result<ModelState>;
+}
+
+/// Build the backend `choice` selects around an initial host state.
+/// This is the only place the trainer's configuration meets concrete
+/// backend types.
+pub fn prepare_backend<'p>(
+    engine: &Engine,
+    program: &'p TrainProgram,
+    manifest_path: &Path,
+    choice: BackendChoice,
+    shards: usize,
+    init: ModelState,
+) -> Result<Box<dyn StepBackend + 'p>> {
+    Ok(match choice {
+        BackendChoice::Host => Box::new(HostBackend::prepare(program, init)),
+        BackendChoice::Resident => Box::new(ResidentBackend::prepare(program, init)?),
+        BackendChoice::Sharded => Box::new(ShardedBackend::prepare(
+            engine,
+            program,
+            manifest_path,
+            shards,
+            init,
+        )?),
+    })
+}
+
+// ==========================================================================
+// Host
+// ==========================================================================
+
+/// Legacy host path: the authoritative state is a host [`ModelState`]
+/// and every step converts it in and out of the executing backend.
+pub struct HostBackend<'p> {
+    program: &'p TrainProgram,
+    state: ModelState,
+}
+
+impl<'p> HostBackend<'p> {
+    pub fn prepare(program: &'p TrainProgram, init: ModelState) -> Self {
+        Self { program, state: init }
+    }
+}
+
+impl StepBackend for HostBackend<'_> {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn train_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+        mask: Option<&[f32]>,
+    ) -> Result<StepMetrics> {
+        self.program.step(&mut self.state, x, y, hp, mask)
+    }
+
+    fn probe_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+        mask: Option<&[f32]>,
+    ) -> Result<f64> {
+        let mut probe = self.state.clone();
+        let t0 = Instant::now();
+        self.program.step(&mut probe, x, y, hp, mask)?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn sync_master(&self) -> Result<ModelState> {
+        Ok(self.state.clone())
+    }
+
+    fn eval_batch(&self, x: &HostTensor, y: &HostTensor) -> Result<EvalMetrics> {
+        self.program.eval_batch_run(&self.state, x, y)
+    }
+
+    fn into_state(self: Box<Self>) -> Result<ModelState> {
+        Ok(self.state)
+    }
+}
+
+// ==========================================================================
+// Resident
+// ==========================================================================
+
+/// Device-resident path: the authoritative state lives in
+/// backend-native buffers across steps and syncs to host only on demand.
+pub struct ResidentBackend<'p> {
+    program: &'p TrainProgram,
+    state: DeviceState,
+}
+
+impl<'p> ResidentBackend<'p> {
+    pub fn prepare(program: &'p TrainProgram, init: ModelState) -> Result<Self> {
+        Ok(Self { program, state: program.upload_state(init)? })
+    }
+}
+
+impl StepBackend for ResidentBackend<'_> {
+    fn name(&self) -> &'static str {
+        "resident"
+    }
+
+    fn train_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+        mask: Option<&[f32]>,
+    ) -> Result<StepMetrics> {
+        self.program.step_device(&mut self.state, x, y, hp, mask)
+    }
+
+    fn probe_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+        mask: Option<&[f32]>,
+    ) -> Result<f64> {
+        let mut probe = self.state.clone();
+        let t0 = Instant::now();
+        self.program.step_device(&mut probe, x, y, hp, mask)?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn sync_master(&self) -> Result<ModelState> {
+        self.state.sync_to_host()
+    }
+
+    fn eval_batch(&self, x: &HostTensor, y: &HostTensor) -> Result<EvalMetrics> {
+        self.program.eval_batch_device(&self.state, x, y)
+    }
+
+    fn into_state(self: Box<Self>) -> Result<ModelState> {
+        self.state.into_host()
+    }
+}
+
+// ==========================================================================
+// Sharded
+// ==========================================================================
+
+/// Data-parallel path: wraps [`ShardedTrainer`] (per-shard grad
+/// programs over resident replicas, fixed-order host all-reduce, the
+/// shared update on a host-side master, replica rebroadcast).
+pub struct ShardedBackend<'p> {
+    program: &'p TrainProgram,
+    inner: ShardedTrainer,
+}
+
+impl<'p> ShardedBackend<'p> {
+    pub fn prepare(
+        engine: &Engine,
+        program: &'p TrainProgram,
+        manifest_path: &Path,
+        shards: usize,
+        init: ModelState,
+    ) -> Result<Self> {
+        Ok(Self {
+            program,
+            inner: ShardedTrainer::new(engine, manifest_path, shards, init)?,
+        })
+    }
+}
+
+impl StepBackend for ShardedBackend<'_> {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn shard_count(&self) -> usize {
+        self.inner.num_shards()
+    }
+
+    fn train_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+        mask: Option<&[f32]>,
+    ) -> Result<StepMetrics> {
+        if mask.is_some() {
+            bail!("sharded training does not support SD masks");
+        }
+        self.inner.step(x, y, hp)
+    }
+
+    fn probe_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        hp: StepHyper,
+        mask: Option<&[f32]>,
+    ) -> Result<f64> {
+        if mask.is_some() {
+            bail!("sharded training does not support SD masks");
+        }
+        self.inner.probe_step(x, y, hp)
+    }
+
+    fn sync_master(&self) -> Result<ModelState> {
+        // The master already lives host-side: no device round-trip.
+        Ok(self.inner.state().clone())
+    }
+
+    fn rebroadcast(&mut self) -> Result<()> {
+        self.inner.rebroadcast()
+    }
+
+    fn eval_batch(&self, x: &HostTensor, y: &HostTensor) -> Result<EvalMetrics> {
+        self.program.eval_batch_run(self.inner.state(), x, y)
+    }
+
+    fn into_state(self: Box<Self>) -> Result<ModelState> {
+        Ok(self.inner.into_state())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, AugmentCfg, Sampler};
+    use crate::runtime::{write_reference_family, RefFamilySpec};
+    use crate::util::tmp::TempDir;
+
+    fn backends<'p>(
+        engine: &Engine,
+        program: &'p TrainProgram,
+        manifest: &Path,
+        init: &ModelState,
+    ) -> Vec<Box<dyn StepBackend + 'p>> {
+        vec![
+            prepare_backend(
+                engine,
+                program,
+                manifest,
+                BackendChoice::Host,
+                0,
+                init.clone(),
+            )
+            .unwrap(),
+            prepare_backend(
+                engine,
+                program,
+                manifest,
+                BackendChoice::Resident,
+                0,
+                init.clone(),
+            )
+            .unwrap(),
+            prepare_backend(
+                engine,
+                program,
+                manifest,
+                BackendChoice::Sharded,
+                2,
+                init.clone(),
+            )
+            .unwrap(),
+        ]
+    }
+
+    /// Step-granularity contract: the three backends agree bitwise on
+    /// metrics, synced masters and eval — including after a probe step,
+    /// which must be invisible everywhere.
+    #[test]
+    fn backends_agree_bitwise_at_step_granularity() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let manifest = fam.join("e2train.json");
+        let prog = TrainProgram::load(&engine, &manifest).unwrap();
+        let data = synthetic::generate(10, 64, 8, 3);
+        let init = ModelState::init(&prog.manifest, 11);
+        let hp = StepHyper { lr: 0.03, alpha: 1.5, beta: 0.05 };
+
+        let mut bs = backends(&engine, &prog, &manifest, &init);
+        assert_eq!(
+            bs.iter().map(|b| b.name()).collect::<Vec<_>>(),
+            vec!["host", "resident", "sharded"]
+        );
+        assert_eq!(
+            bs.iter().map(|b| b.shard_count()).collect::<Vec<_>>(),
+            vec![0, 0, 2]
+        );
+
+        let mut sampler = Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 5);
+        for step in 0..4 {
+            let (x, y) = sampler.next_batch(&data);
+            if step == 2 {
+                for b in bs.iter_mut() {
+                    assert!(b.probe_step(&x, &y, hp, None).unwrap() > 0.0);
+                }
+            }
+            let sms: Vec<StepMetrics> = bs
+                .iter_mut()
+                .map(|b| b.train_step(&x, &y, hp, None).unwrap())
+                .collect();
+            for sm in &sms[1..] {
+                assert_eq!(sms[0].loss, sm.loss, "step {step}");
+                assert_eq!(sms[0].correct, sm.correct, "step {step}");
+                assert_eq!(sms[0].gate_fracs, sm.gate_fracs, "step {step}");
+                assert_eq!(sms[0].psg_frac, sm.psg_frac, "step {step}");
+            }
+            let masters: Vec<ModelState> =
+                bs.iter().map(|b| b.sync_master().unwrap()).collect();
+            for m in &masters[1..] {
+                masters[0].assert_bitwise_eq(m);
+            }
+            // export_for_checkpoint routes through the same master
+            for b in bs.iter() {
+                masters[0].assert_bitwise_eq(&b.export_for_checkpoint().unwrap());
+            }
+        }
+
+        // Eval off the live state agrees bitwise too.
+        let eb = prog.eval_batch();
+        let hw = prog.manifest.arch.image_size;
+        let ex = HostTensor::f32(vec![eb, hw, hw, 3], vec![0.25; eb * hw * hw * 3]);
+        let ey = HostTensor::i32(vec![eb], vec![1; eb]);
+        let evals: Vec<EvalMetrics> =
+            bs.iter().map(|b| b.eval_batch(&ex, &ey).unwrap()).collect();
+        for e in &evals[1..] {
+            assert_eq!(evals[0].loss, e.loss);
+            assert_eq!(evals[0].correct, e.correct);
+        }
+
+        // into_state agrees with the final synced master.
+        let want = bs[0].sync_master().unwrap();
+        for b in bs {
+            want.assert_bitwise_eq(&b.into_state().unwrap());
+        }
+    }
+
+    /// `rebroadcast` is callable on every backend (a no-op off the
+    /// sharded path) and never perturbs the authoritative state.
+    #[test]
+    fn rebroadcast_is_state_preserving() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let manifest = fam.join("sgd32.json");
+        let prog = TrainProgram::load(&engine, &manifest).unwrap();
+        let init = ModelState::init(&prog.manifest, 0);
+        for mut b in backends(&engine, &prog, &manifest, &init) {
+            let before = b.sync_master().unwrap();
+            b.rebroadcast().unwrap();
+            before.assert_bitwise_eq(&b.sync_master().unwrap());
+        }
+    }
+}

@@ -12,6 +12,9 @@
 //! * [`program`] — (train, eval) executable pairs + state plumbing, with
 //!   a host step path, a resident step path, an eval-only load for serve
 //!   workers, and a snapshot eval path for the serving workload.
+//! * [`exec`] — the execution layer: [`exec::StepBackend`] abstracts
+//!   *where* a step runs (host / resident / sharded) behind one trait
+//!   the trainer's loop is written against; see ARCHITECTURE.md.
 //! * [`shard`] — data-parallel sharded training over an engine pool with
 //!   a deterministic (fixed-order, bitwise-reproducible) host-side
 //!   all-reduce of per-sample gradient contributions.
@@ -20,6 +23,7 @@
 
 pub mod device;
 pub mod engine;
+pub mod exec;
 pub mod manifest;
 pub mod pool;
 pub mod program;
@@ -29,6 +33,9 @@ pub mod tensor;
 
 pub use device::{DeviceState, DeviceValue, SnapshotCell, StateSnapshot, ValueRef};
 pub use engine::{BackendKind, Engine, Program, SharedProgramCache};
+pub use exec::{
+    prepare_backend, HostBackend, ResidentBackend, ShardedBackend, StepBackend,
+};
 pub use manifest::{ArtifactIndex, BlockInfo, IoSpec, Manifest, MethodInfo};
 pub use pool::EnginePool;
 pub use program::{

@@ -21,6 +21,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::optim::update::{apply_update, GateIn, ParamIn, RunMeanIn, UpdateCfg};
 use crate::util::json::{parse, Json};
 
 use super::tensor::{HostTensor, TensorData};
@@ -213,9 +214,6 @@ impl RefProgram {
                 }
             }
         }
-        for (g, w) in dw2.iter_mut().zip(w2.iter()) {
-            *g += wd * *w;
-        }
 
         let mut dh = vec![0f32; bsz * h];
         for bi in 0..bsz {
@@ -254,86 +252,78 @@ impl RefProgram {
                 }
             }
         }
-        for (g, w) in dw1.iter_mut().zip(w1.iter()) {
-            *g += wd * *w;
+
+        // ---- hidden-activation column sums (run_mean numerator) ------
+        let mut col_sums = vec![0f32; h];
+        for row in fwd.hact.chunks_exact(h) {
+            for (acc, v) in col_sums.iter_mut().zip(row) {
+                *acc += *v;
+            }
         }
 
-        // ---- PSG telemetry (update == "psg") -------------------------
-        // Fraction of weight-gradient entries the MSB predictor would
-        // resolve: entries small relative to the per-step max.
-        let psg_frac = if self.update == "psg" {
-            let beta = self.scalar_in(inputs, "beta")?;
-            let grads = [&dw1[..], &db1[..], &dw2[..], &db2[..]];
-            let gmax = grads
-                .iter()
-                .flat_map(|g| g.iter())
-                .fold(0f32, |m, &v| m.max(v.abs()));
-            if gmax > 0.0 {
-                let total: usize = grads.iter().map(|g| g.len()).sum();
-                let confident = grads
-                    .iter()
-                    .flat_map(|g| g.iter())
-                    .filter(|v| v.abs() <= beta * gmax)
-                    .count();
-                Some(confident as f32 / total as f32)
-            } else {
-                Some(0.0)
-            }
+        // ---- the one shared optimizer update -------------------------
+        // wd -> PSG telemetry -> momentum SGD -> gates -> run_mean all
+        // live in `optim::update::apply_update`; this interpreter only
+        // produces raw gradients and packages the results.
+        let mut ucfg = UpdateCfg {
+            lr,
+            alpha: 0.0,
+            beta: 0.0,
+            momentum: mu,
+            weight_decay: wd,
+            psg: self.update == "psg",
+            batch: bsz as f32,
+        };
+        if ucfg.psg {
+            ucfg.beta = self.scalar_in(inputs, "beta")?;
+        }
+        let gate = if self.gating == "learned" {
+            ucfg.alpha = self.scalar_in(inputs, "alpha")?;
+            Some(GateIn {
+                w: self.f32_in(inputs, "gate.w")?.as_f32()?,
+                mom: self.f32_in(inputs, "mom.gate.w")?.as_f32()?,
+            })
         } else {
             None
         };
-
-        // ---- momentum SGD updates ------------------------------------
-        let step = |w: &[f32], m: &[f32], g: &[f32]| -> (Vec<f32>, Vec<f32>) {
-            let mut nm = Vec::with_capacity(m.len());
-            let mut nw = Vec::with_capacity(w.len());
-            for i in 0..w.len() {
-                let mi = mu * m[i] + g[i];
-                nm.push(mi);
-                nw.push(w[i] - lr * mi);
-            }
-            (nw, nm)
+        let params = vec![
+            ParamIn {
+                w: w1,
+                mom: self.f32_in(inputs, "mom.w1")?.as_f32()?,
+                grad: dw1,
+                decay: true,
+            },
+            ParamIn {
+                w: b1,
+                mom: self.f32_in(inputs, "mom.b1")?.as_f32()?,
+                grad: db1,
+                decay: false,
+            },
+            ParamIn {
+                w: w2,
+                mom: self.f32_in(inputs, "mom.w2")?.as_f32()?,
+                grad: dw2,
+                decay: true,
+            },
+            ParamIn {
+                w: b2,
+                mom: self.f32_in(inputs, "mom.b2")?.as_f32()?,
+                grad: db2,
+                decay: false,
+            },
+        ];
+        let run_mean = RunMeanIn {
+            current: self.f32_in(inputs, "run_mean")?.as_f32()?,
+            col_sums,
         };
-        let (nw1, nm1) = step(w1, self.f32_in(inputs, "mom.w1")?.as_f32()?, &dw1);
-        let (nb1, nmb1) = step(b1, self.f32_in(inputs, "mom.b1")?.as_f32()?, &db1);
-        let (nw2, nm2) = step(w2, self.f32_in(inputs, "mom.w2")?.as_f32()?, &dw2);
-        let (nb2, nmb2) = step(b2, self.f32_in(inputs, "mom.b2")?.as_f32()?, &db2);
-
-        // ---- learned gates (gating == "learned") ---------------------
-        // The FLOPs regularizer (Eq. 1 analog): alpha pushes the gate
-        // logits down; the reported fraction is the pre-update activity.
-        let mut gate_results: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
-        if self.gating == "learned" {
-            let alpha = self.scalar_in(inputs, "alpha")?;
-            let gw = self.f32_in(inputs, "gate.w")?.as_f32()?;
-            let gm = self.f32_in(inputs, "mom.gate.w")?.as_f32()?;
-            let g = gw.len().max(1) as f32;
-            let mut fracs = Vec::with_capacity(gw.len());
-            let mut ngw = Vec::with_capacity(gw.len());
-            let mut ngm = Vec::with_capacity(gw.len());
-            for i in 0..gw.len() {
-                let sig = 1.0 / (1.0 + (-gw[i]).exp());
-                fracs.push(sig);
-                let grad = alpha * sig * (1.0 - sig) / g;
-                let mi = mu * gm[i] + grad;
-                ngm.push(mi);
-                ngw.push(gw[i] - lr * mi);
-            }
-            gate_results = Some((ngw, ngm, fracs));
-        }
-
-        // ---- persistent state: running mean of hidden activations ----
-        let run_mean = self.f32_in(inputs, "run_mean")?.as_f32()?;
-        let mut new_mean = Vec::with_capacity(h);
-        for j in 0..h {
-            let mut s = 0f32;
-            for bi in 0..bsz {
-                s += fwd.hact[bi * h + j];
-            }
-            new_mean.push(0.9 * run_mean[j] + 0.1 * s / bsz as f32);
-        }
+        let up = apply_update(&ucfg, params, gate, Some(run_mean));
 
         // ---- assemble outputs in spec order --------------------------
+        let mut pit = up.params.into_iter();
+        let (nw1, nm1) = pit.next().expect("w1 update");
+        let (nb1, nmb1) = pit.next().expect("b1 update");
+        let (nw2, nm2) = pit.next().expect("w2 update");
+        let (nb2, nmb2) = pit.next().expect("b2 update");
         let mut computed: HashMap<&str, HostTensor> = HashMap::new();
         computed.insert("w1", HostTensor::f32(vec![d, h], nw1));
         computed.insert("b1", HostTensor::f32(vec![h], nb1));
@@ -343,16 +333,19 @@ impl RefProgram {
         computed.insert("mom.b1", HostTensor::f32(vec![h], nmb1));
         computed.insert("mom.w2", HostTensor::f32(vec![h, c], nm2));
         computed.insert("mom.b2", HostTensor::f32(vec![c], nmb2));
-        computed.insert("run_mean", HostTensor::f32(vec![h], new_mean));
+        computed.insert(
+            "run_mean",
+            HostTensor::f32(vec![h], up.run_mean.expect("run_mean update")),
+        );
         computed.insert("loss", HostTensor::scalar_f32(loss));
         computed.insert("correct", HostTensor::scalar_f32(correct));
-        if let Some((ngw, ngm, fracs)) = gate_results {
-            let g = fracs.len();
-            computed.insert("gate.w", HostTensor::f32(vec![g], ngw));
-            computed.insert("mom.gate.w", HostTensor::f32(vec![g], ngm));
-            computed.insert("gate_fracs", HostTensor::f32(vec![g], fracs));
+        if let Some(g) = up.gate {
+            let n = g.fracs.len();
+            computed.insert("gate.w", HostTensor::f32(vec![n], g.w));
+            computed.insert("mom.gate.w", HostTensor::f32(vec![n], g.mom));
+            computed.insert("gate_fracs", HostTensor::f32(vec![n], g.fracs));
         }
-        if let Some(p) = psg_frac {
+        if let Some(p) = up.psg_frac {
             computed.insert("psg_frac", HostTensor::scalar_f32(p));
         }
 

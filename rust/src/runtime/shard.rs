@@ -28,12 +28,14 @@
 //! for every other value.
 //!
 //! The update itself (weight decay, PSG telemetry, momentum SGD, learned
-//! gates, the running-mean state) mirrors the reference train step
-//! expression-for-expression, so for a fixed seed the sharded loop is
+//! gates, the running-mean state) is the one shared
+//! [`crate::optim::update::apply_update`] — the same function the
+//! reference train step calls — so for a fixed seed the sharded loop is
 //! **bitwise identical** to the single-device resident path for any
-//! shard count — the same determinism contract
+//! shard count: the same determinism contract
 //! `tests/resident_equivalence.rs` pins for resident-vs-host, extended
-//! by `tests/shard_equivalence.rs` to S ∈ {1, 2, 3}.
+//! by `tests/shard_equivalence.rs` to S ∈ {1, 2, 3} and by
+//! `tests/backend_matrix.rs` to the full backend matrix.
 //!
 //! Real-PJRT note: this path requires the reference backend's grad
 //! programs.  On real devices the same structure maps to on-device
@@ -48,6 +50,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::sampler::{shard_ranges, slice_batch};
+use crate::optim::update::{apply_update, GateIn, ParamIn, RunMeanIn, UpdateCfg};
 
 use super::device::{DeviceState, DeviceValue, ValueRef};
 use super::engine::{BackendKind, Engine, Program};
@@ -299,9 +302,9 @@ impl ShardedTrainer {
         Ok(dt)
     }
 
-    /// Combine shard outputs (global sample order) and apply the
-    /// optimizer update to the master state — every expression mirrors
-    /// the reference train step bit-for-bit.
+    /// Combine shard outputs with the **fixed-order all-reduce**
+    /// (global sample order) and hand the reduced gradients to the one
+    /// shared [`apply_update`] — no update math lives here.
     fn reduce_and_apply(
         &mut self,
         b: usize,
@@ -352,115 +355,87 @@ impl ShardedTrainer {
                 correct_sum += v;
             }
         }
-
-        // ---- weight decay on weight matrices (biases exempt) ---------
-        let wd = self.weight_decay;
-        for (p, g) in self.data_params.iter().zip(grads.iter_mut()) {
-            if !p.decay {
-                continue;
+        // ---- hidden-activation column sums, global row order ---------
+        // (the run_mean EMA's numerator; per column, additions happen in
+        // ascending global sample order — shard slices are contiguous
+        // and ordered, so this is the train step's own accumulation.)
+        let col_sums = match self.run_mean_idx {
+            Some(ri) => {
+                let h = self.master.values[ri].elem_count();
+                let mut cs = vec![0f32; h];
+                for out in outs {
+                    let ha = out[pp].as_f32()?;
+                    let rows = out[pp].shape.first().copied().unwrap_or(0);
+                    if ha.len() != rows * h {
+                        bail!("shard hact output has the wrong size");
+                    }
+                    for row in ha.chunks_exact(h) {
+                        for (c, v) in cs.iter_mut().zip(row) {
+                            *c += *v;
+                        }
+                    }
+                }
+                Some(cs)
             }
-            let w = self.master.values[p.idx].as_f32()?;
-            for (gv, wv) in g.iter_mut().zip(w) {
-                *gv += wd * *wv;
-            }
-        }
-
-        // ---- PSG predictor telemetry over the reduced grads ----------
-        let psg_frac = if self.update == "psg" {
-            let beta = hp.beta;
-            let gmax = grads
-                .iter()
-                .flat_map(|g| g.iter())
-                .fold(0f32, |m, &v| m.max(v.abs()));
-            if gmax > 0.0 {
-                let total: usize = grads.iter().map(|g| g.len()).sum();
-                let confident = grads
-                    .iter()
-                    .flat_map(|g| g.iter())
-                    .filter(|v| v.abs() <= beta * gmax)
-                    .count();
-                Some(confident as f32 / total as f32)
-            } else {
-                Some(0.0)
-            }
-        } else {
-            None
+            None => None,
         };
 
-        // ---- momentum SGD on the master state ------------------------
-        let mu = self.momentum;
-        let lr = hp.lr;
-        for (p, g) in self.data_params.iter().zip(grads.iter()) {
-            let (nw, nm) = {
-                let w = self.master.values[p.idx].as_f32()?;
-                let m = self.master.values[p.mom_idx].as_f32()?;
-                let mut nm = Vec::with_capacity(m.len());
-                let mut nw = Vec::with_capacity(w.len());
-                for i in 0..w.len() {
-                    let mi = mu * m[i] + g[i];
-                    nm.push(mi);
-                    nw.push(w[i] - lr * mi);
-                }
-                (nw, nm)
+        // ---- the one shared optimizer update -------------------------
+        let ucfg = UpdateCfg {
+            lr: hp.lr,
+            alpha: hp.alpha,
+            beta: hp.beta,
+            momentum: self.momentum,
+            weight_decay: self.weight_decay,
+            psg: self.update == "psg",
+            batch: b as f32,
+        };
+        let out = {
+            let params = self
+                .data_params
+                .iter()
+                .zip(grads)
+                .map(|(p, g)| {
+                    Ok(ParamIn {
+                        w: self.master.values[p.idx].as_f32()?,
+                        mom: self.master.values[p.mom_idx].as_f32()?,
+                        grad: g,
+                        decay: p.decay,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let gate = match self.gate {
+                Some((gi, gmi)) => Some(GateIn {
+                    w: self.master.values[gi].as_f32()?,
+                    mom: self.master.values[gmi].as_f32()?,
+                }),
+                None => None,
             };
+            let run_mean = match (self.run_mean_idx, col_sums) {
+                (Some(ri), Some(cs)) => Some(RunMeanIn {
+                    current: self.master.values[ri].as_f32()?,
+                    col_sums: cs,
+                }),
+                _ => None,
+            };
+            apply_update(&ucfg, params, gate, run_mean)
+        };
+
+        // ---- write the update back into the master state -------------
+        for (p, (nw, nm)) in self.data_params.iter().zip(out.params) {
             self.master.values[p.idx].as_f32_mut()?.copy_from_slice(&nw);
             self.master.values[p.mom_idx]
                 .as_f32_mut()?
                 .copy_from_slice(&nm);
         }
-
-        // ---- learned gates: batch-independent, applied analytically --
         let mut gate_fracs: Vec<f64> = Vec::new();
-        if let Some((gi, gmi)) = self.gate {
-            let alpha = hp.alpha;
-            let (ngw, ngm, fracs) = {
-                let gw = self.master.values[gi].as_f32()?;
-                let gm = self.master.values[gmi].as_f32()?;
-                let g = gw.len().max(1) as f32;
-                let mut ngw = Vec::with_capacity(gw.len());
-                let mut ngm = Vec::with_capacity(gw.len());
-                let mut fracs = Vec::with_capacity(gw.len());
-                for i in 0..gw.len() {
-                    let sig = 1.0 / (1.0 + (-gw[i]).exp());
-                    fracs.push(sig);
-                    let grad = alpha * sig * (1.0 - sig) / g;
-                    let mi = mu * gm[i] + grad;
-                    ngm.push(mi);
-                    ngw.push(gw[i] - lr * mi);
-                }
-                (ngw, ngm, fracs)
-            };
-            self.master.values[gi].as_f32_mut()?.copy_from_slice(&ngw);
-            self.master.values[gmi].as_f32_mut()?.copy_from_slice(&ngm);
-            gate_fracs = fracs.iter().map(|&v| v as f64).collect();
+        if let (Some((gi, gmi)), Some(g)) = (self.gate, out.gate) {
+            self.master.values[gi].as_f32_mut()?.copy_from_slice(&g.w);
+            self.master.values[gmi].as_f32_mut()?.copy_from_slice(&g.mom);
+            gate_fracs = g.fracs.iter().map(|&v| v as f64).collect();
         }
-
-        // ---- running-mean state: column sums in global row order -----
-        if let Some(ri) = self.run_mean_idx {
-            let h = self.master.values[ri].elem_count();
-            let nbf = b as f32;
-            let new_mean = {
-                let rm = self.master.values[ri].as_f32()?;
-                let mut nm = Vec::with_capacity(h);
-                for j in 0..h {
-                    let mut s = 0f32;
-                    for out in outs {
-                        let ha = out[pp].as_f32()?;
-                        let rows = out[pp].shape.first().copied().unwrap_or(0);
-                        if ha.len() != rows * h {
-                            bail!("shard hact output has the wrong size");
-                        }
-                        for bi in 0..rows {
-                            s += ha[bi * h + j];
-                        }
-                    }
-                    nm.push(0.9 * rm[j] + 0.1 * s / nbf);
-                }
-                nm
-            };
-            self.master.values[ri]
-                .as_f32_mut()?
-                .copy_from_slice(&new_mean);
+        if let (Some(ri), Some(nm)) = (self.run_mean_idx, out.run_mean) {
+            self.master.values[ri].as_f32_mut()?.copy_from_slice(&nm);
         }
 
         self.rebroadcast()?;
@@ -469,13 +444,16 @@ impl ShardedTrainer {
             loss: (loss_sum / b as f32) as f64,
             correct: correct_sum as f64,
             gate_fracs,
-            psg_frac: psg_frac.map(|v| v as f64),
+            psg_frac: out.psg_frac.map(|v| v as f64),
         })
     }
 
     /// Refresh every replica's grad-input tensors from the master state
     /// (params + persistent state; momenta never leave the host).
-    fn rebroadcast(&mut self) -> Result<()> {
+    /// Public because [`super::exec::ShardedBackend`] exposes it through
+    /// the `StepBackend` trait; the on-device-collective follow-up
+    /// (ROADMAP) replaces its body without touching callers.
+    pub fn rebroadcast(&mut self) -> Result<()> {
         for shard in &mut self.shards {
             for (ri, &mi) in self.grad_state_idx.iter().enumerate() {
                 shard

@@ -41,6 +41,11 @@ pub struct PrefetchComparison {
     /// (`data::prefetch::auto_depth`, from the measured augment/step
     /// time ratio).
     pub chosen_depth: usize,
+    /// Execution backend the trainer ran on (`RunMetrics::backend`) and
+    /// its shard count — recorded into the report row so bench
+    /// trajectories stay attributable across the `cfg.backend` knob.
+    pub exec_backend: String,
+    pub shards: usize,
 }
 
 /// Measure train-step latency through both state paths for one
@@ -99,7 +104,7 @@ pub fn compare_prefetch(
     method: &str,
     iters: u64,
 ) -> Result<PrefetchComparison> {
-    let run = |prefetch: bool| -> Result<(f64, Option<usize>)> {
+    let run = |prefetch: bool| -> Result<crate::metrics::RunMetrics> {
         let mut cfg = RunCfg::quick(family, method, iters);
         cfg.artifacts_dir = artifacts.to_path_buf();
         cfg.prefetch = prefetch;
@@ -112,18 +117,18 @@ pub fn compare_prefetch(
             seed: 0,
         };
         let mut trainer = Trainer::new(engine, cfg)?;
-        let out = trainer.run(None)?;
-        Ok((
-            out.metrics.steps_run as f64 / out.metrics.wall_seconds.max(1e-9),
-            out.metrics.prefetch_depth,
-        ))
+        Ok(trainer.run(None)?.metrics)
     };
-    let (on, depth) = run(true)?;
-    let (off, _) = run(false)?;
+    let on = run(true)?;
+    let off = run(false)?;
     Ok(PrefetchComparison {
-        steps_per_sec_on: on,
-        steps_per_sec_off: off,
-        chosen_depth: depth.unwrap_or(crate::data::prefetch::DEFAULT_DEPTH),
+        steps_per_sec_on: on.steps_run as f64 / on.wall_seconds.max(1e-9),
+        steps_per_sec_off: off.steps_run as f64 / off.wall_seconds.max(1e-9),
+        chosen_depth: on
+            .prefetch_depth
+            .unwrap_or(crate::data::prefetch::DEFAULT_DEPTH),
+        exec_backend: on.backend,
+        shards: on.shards,
     })
 }
 
@@ -170,6 +175,10 @@ pub fn bench_report(
             "prefetch_depth",
             Json::num(prefetch.chosen_depth as f64),
         ),
+        // Active execution backend (RunMetrics::backend) + shard count,
+        // so rows stay attributable after the `cfg.backend` knob.
+        ("exec_backend", Json::str(&prefetch.exec_backend)),
+        ("shards", Json::num(prefetch.shards as f64)),
     ])
 }
 
@@ -200,6 +209,8 @@ mod tests {
             (crate::data::prefetch::DEFAULT_DEPTH..=crate::data::prefetch::MAX_DEPTH)
                 .contains(&pf.chosen_depth)
         );
+        assert_eq!(pf.exec_backend, "resident");
+        assert_eq!(pf.shards, 0);
         let report = bench_report("unit-test", "refmlp-tiny", &[cmp], &pf);
         let text = report.to_string();
         let back = crate::util::json::parse(&text).unwrap();
@@ -209,5 +220,7 @@ mod tests {
             .as_f64()
             .is_some());
         assert!(back.at(&["prefetch_depth"]).as_f64().is_some());
+        assert_eq!(back.at(&["exec_backend"]).as_str(), Some("resident"));
+        assert_eq!(back.at(&["shards"]).as_f64(), Some(0.0));
     }
 }

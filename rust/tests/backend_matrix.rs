@@ -1,0 +1,191 @@
+//! The execution-layer contract, pinned as a full matrix: **every**
+//! `StepBackend` — host, resident, sharded for S ∈ {1, 2, 3} — produces
+//! bitwise-identical runs for the same seed, and a run interrupted under
+//! one backend resumes under any other without a bit of drift.
+//!
+//! This subsumes and tightens the historical pairwise checks
+//! (tests/resident_equivalence.rs, tests/shard_equivalence.rs): the
+//! whole matrix is compared against one reference outcome — metrics
+//! trace, energy-ledger rows, `psg_frac` telemetry, gate means and the
+//! final model state — and the recorded `RunMetrics::backend` /
+//! `RunMetrics::shards` attribution is asserted per cell.
+
+use std::path::Path;
+
+use e2train::checkpoint::{CheckpointRegistry, RetentionCfg};
+use e2train::config::{BackendChoice, CkptCfg, DataCfg, RunCfg};
+use e2train::coordinator::{RunOutcome, Trainer};
+use e2train::runtime::{write_reference_family, Engine, RefFamilySpec};
+use e2train::util::tmp::TempDir;
+
+const FAM: &str = "refmlp-tiny";
+
+/// One matrix cell: (label, explicit backend, shard count).
+const CELLS: &[(&str, BackendChoice, usize)] = &[
+    ("host", BackendChoice::Host, 0),
+    ("resident", BackendChoice::Resident, 0),
+    ("sharded", BackendChoice::Sharded, 1),
+    ("sharded", BackendChoice::Sharded, 2),
+    ("sharded", BackendChoice::Sharded, 3),
+];
+
+fn ref_cfg(artifacts: &Path, method: &str, iters: u64) -> RunCfg {
+    let mut cfg = RunCfg::quick(FAM, method, iters);
+    cfg.artifacts_dir = artifacts.to_path_buf();
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 128, n_test: 40, seed: 0 };
+    cfg.eval_every = 8;
+    cfg
+}
+
+fn cell_cfg(mut cfg: RunCfg, backend: BackendChoice, shards: usize) -> RunCfg {
+    cfg.backend = Some(backend);
+    cfg.shards = shards;
+    // The host cell also drops prefetch so the legacy synchronous
+    // sampling path stays in the matrix.
+    if backend == BackendChoice::Host {
+        cfg.resident = false;
+        cfg.prefetch = false;
+    }
+    cfg
+}
+
+fn with_ckpt(mut cfg: RunCfg, dir: &Path, every: u64) -> RunCfg {
+    cfg.checkpoint = CkptCfg {
+        every,
+        dir: Some(dir.to_path_buf()),
+        keep_last: 16,
+        keep_every: 0,
+    };
+    cfg
+}
+
+/// Full bitwise comparison of two run outcomes (everything except wall
+/// time, the machine-dependent prefetch depth, and the backend
+/// attribution itself).
+fn assert_outcomes_identical(a: &RunOutcome, b: &RunOutcome, ctx: &str) {
+    assert_eq!(a.metrics.final_test_acc, b.metrics.final_test_acc, "{ctx}: acc");
+    assert_eq!(
+        a.metrics.final_test_acc_top5, b.metrics.final_test_acc_top5,
+        "{ctx}: top5"
+    );
+    assert_eq!(a.metrics.final_loss, b.metrics.final_loss, "{ctx}: loss");
+    assert_eq!(a.metrics.total_joules, b.metrics.total_joules, "{ctx}: joules");
+    assert_eq!(a.metrics.executed_macs, b.metrics.executed_macs, "{ctx}: macs");
+    assert_eq!(a.metrics.steps_run, b.metrics.steps_run, "{ctx}: steps");
+    assert_eq!(
+        a.metrics.steps_skipped, b.metrics.steps_skipped,
+        "{ctx}: skipped"
+    );
+    assert_eq!(
+        a.metrics.mean_gate_fracs, b.metrics.mean_gate_fracs,
+        "{ctx}: gate means"
+    );
+    assert_eq!(
+        a.metrics.mean_psg_frac, b.metrics.mean_psg_frac,
+        "{ctx}: psg telemetry"
+    );
+    assert_eq!(a.metrics.trace.len(), b.metrics.trace.len(), "{ctx}: trace len");
+    for (x, y) in a.metrics.trace.iter().zip(b.metrics.trace.iter()) {
+        assert_eq!(x.iter, y.iter, "{ctx}: trace iter");
+        assert_eq!(x.loss, y.loss, "{ctx}: trace loss @{}", x.iter);
+        assert_eq!(x.train_acc, y.train_acc, "{ctx}: trace acc @{}", x.iter);
+        assert_eq!(x.joules, y.joules, "{ctx}: trace joules @{}", x.iter);
+        assert_eq!(x.test_acc, y.test_acc, "{ctx}: trace eval @{}", x.iter);
+    }
+    assert_eq!(
+        a.ledger.steps_charged, b.ledger.steps_charged,
+        "{ctx}: ledger steps"
+    );
+    assert_eq!(a.ledger.macs, b.ledger.macs, "{ctx}: ledger macs");
+    assert_eq!(a.ledger.trace, b.ledger.trace, "{ctx}: ledger rows");
+    a.state.assert_bitwise_eq(&b.state);
+}
+
+/// Every backend cell produces the identical run — sgd32 (plain SGD)
+/// and e2train (SMD drops + SWA + learned gates + PSG telemetry).
+#[test]
+fn all_backends_produce_bitwise_identical_runs() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    for method in ["sgd32", "e2train"] {
+        let mut reference: Option<RunOutcome> = None;
+        for &(label, backend, shards) in CELLS {
+            let cfg = cell_cfg(ref_cfg(tmp.path(), method, 24), backend, shards);
+            let out = Trainer::new(&engine, cfg).unwrap().run(None).unwrap();
+            // Attribution: the run records which backend executed it.
+            assert_eq!(out.metrics.backend, label, "{method} S={shards}");
+            assert_eq!(out.metrics.shards, shards, "{method} {label}");
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => assert_outcomes_identical(
+                    r,
+                    &out,
+                    &format!("{method} {label} S={shards} vs host"),
+                ),
+            }
+        }
+        // e2train runs must actually exercise the telemetry being
+        // compared, or the psg/gate assertions above are vacuous.
+        if method == "e2train" {
+            let r = reference.as_ref().unwrap();
+            assert!(r.metrics.mean_psg_frac.is_some(), "no PSG telemetry");
+            assert!(!r.metrics.mean_gate_fracs.is_empty(), "no gate telemetry");
+            assert!(r.metrics.steps_skipped > 0, "SMD never dropped a batch");
+        }
+    }
+}
+
+/// Interrupt + resume **across** backends: a run checkpointed under one
+/// backend resumes under every other, bitwise equal to the run that
+/// never stopped.  (Within-backend resume is pinned by
+/// tests/resume_equivalence.rs; this is the cross-cell tightening.)
+#[test]
+fn interrupt_and_resume_across_backends_is_bitwise() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    // (checkpoint under, resume under) — covers every backend on both
+    // sides of the interruption.
+    let pairs: &[((BackendChoice, usize), (BackendChoice, usize))] = &[
+        ((BackendChoice::Host, 0), (BackendChoice::Sharded, 2)),
+        ((BackendChoice::Resident, 0), (BackendChoice::Host, 0)),
+        ((BackendChoice::Sharded, 3), (BackendChoice::Resident, 0)),
+    ];
+    for &((from_b, from_s), (to_b, to_s)) in pairs {
+        let reg = TempDir::new().unwrap();
+        let full_cfg = cell_cfg(
+            with_ckpt(ref_cfg(tmp.path(), "e2train", 18), reg.path(), 6),
+            from_b,
+            from_s,
+        );
+        let full = Trainer::new(&engine, full_cfg).unwrap().run(None).unwrap();
+
+        let registry = CheckpointRegistry::new(reg.path(), RetentionCfg::default());
+        let entries = registry.entries().unwrap();
+        assert!(entries.len() >= 3, "expected several boundaries");
+        for entry in &entries {
+            let ckpt = registry.load(entry).unwrap();
+            let resume_cfg = cell_cfg(ref_cfg(tmp.path(), "e2train", 18), to_b, to_s);
+            let out = Trainer::new(&engine, resume_cfg)
+                .unwrap()
+                .resume(ckpt)
+                .unwrap();
+            assert_eq!(out.metrics.backend, to_b.as_str());
+            assert_outcomes_identical(
+                &full,
+                &out,
+                &format!(
+                    "{}/S{} ckpt @iter {} -> {}/S{} resume",
+                    from_b.as_str(),
+                    from_s,
+                    entry.iter,
+                    to_b.as_str(),
+                    to_s
+                ),
+            );
+        }
+    }
+}

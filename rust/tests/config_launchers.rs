@@ -6,7 +6,7 @@
 
 use std::path::{Path, PathBuf};
 
-use e2train::config::RunCfg;
+use e2train::config::{BackendChoice, RunCfg};
 use e2train::util::json::{parse, Json};
 
 fn configs_dir() -> PathBuf {
@@ -65,16 +65,72 @@ fn every_shipped_launcher_parses_and_validates() {
 /// The shipped launcher set includes the new subsystem knobs, so their
 /// JSON spelling is pinned by a real file (key drift fails here).
 #[test]
-fn launcher_set_covers_shards_and_checkpoint_knobs() {
+fn launcher_set_covers_shards_checkpoint_and_backend_knobs() {
     let mut has_shards = false;
     let mut has_checkpoint = false;
+    let mut backends = Vec::new();
     for p in launcher_paths() {
         let cfg = RunCfg::load(&p).unwrap();
         has_shards |= cfg.shards > 0;
         has_checkpoint |= cfg.checkpoint.every > 0;
+        if let Some(b) = cfg.backend {
+            backends.push(b);
+        }
     }
     assert!(has_shards, "no launcher exercises `shards`");
     assert!(has_checkpoint, "no launcher exercises `checkpoint.every`");
+    // Both an explicit single-executor spelling and the sharded one.
+    assert!(
+        backends.contains(&BackendChoice::Host),
+        "no launcher pins backend: \"host\""
+    );
+    assert!(
+        backends.contains(&BackendChoice::Sharded),
+        "no launcher pins backend: \"sharded\""
+    );
+}
+
+/// `cfg.backend` validation: unknown values, `sharded` without a shard
+/// count, and a single-executor backend contradicting `shards` must all
+/// fail with clean errors naming the problem — a launcher can't silently
+/// run on a different execution path than it names.
+#[test]
+fn backend_knob_is_strictly_validated() {
+    let path = configs_dir().join("backend-matrix.json");
+    let base = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    // the shipped matrix launcher itself selects sharded execution
+    let cfg = RunCfg::load(&path).unwrap();
+    assert_eq!(cfg.backend, Some(BackendChoice::Sharded));
+    assert_eq!(cfg.resolved_backend(), BackendChoice::Sharded);
+    assert_eq!(cfg.shards, 3);
+
+    // unknown value
+    let mut top = base.as_obj().unwrap().clone();
+    top.insert("backend".into(), Json::str("gpu-cluster"));
+    let err = format!("{:#}", RunCfg::from_json(&Json::Obj(top)).unwrap_err());
+    assert!(err.contains("gpu-cluster"), "unexpected error: {err}");
+
+    // backend "sharded" without shards
+    let mut top = base.as_obj().unwrap().clone();
+    top.remove("shards");
+    let err = format!("{:#}", RunCfg::from_json(&Json::Obj(top)).unwrap_err());
+    assert!(err.contains("shards"), "unexpected error: {err}");
+
+    // backend "host" / "resident" with shards set
+    for single in ["host", "resident"] {
+        let mut top = base.as_obj().unwrap().clone();
+        top.insert("backend".into(), Json::str(single));
+        let err = format!("{:#}", RunCfg::from_json(&Json::Obj(top)).unwrap_err());
+        assert!(
+            err.contains(single) && err.contains("shards"),
+            "unexpected error: {err}"
+        );
+    }
+
+    // a non-string backend is rejected, not coerced
+    let mut top = base.as_obj().unwrap().clone();
+    top.insert("backend".into(), Json::num(2.0));
+    assert!(RunCfg::from_json(&Json::Obj(top)).is_err());
 }
 
 #[test]
