@@ -15,9 +15,12 @@
 //! (coarse history for rollback/debugging while the tail stays dense).
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::util::fault::{self, FaultPlan, FaultShot};
 use crate::util::hash::fnv1a64_hex;
 use crate::util::json::{parse, Json};
 
@@ -61,13 +64,35 @@ pub struct CheckpointEntry {
 pub struct CheckpointRegistry {
     dir: PathBuf,
     retention: RetentionCfg,
+    faults: Option<Arc<FaultPlan>>,
+    prune_failures: Arc<AtomicU64>,
 }
 
 impl CheckpointRegistry {
     /// A handle on `dir` (no I/O yet; the directory is created on the
     /// first publish, and a missing manifest reads as "no checkpoints").
     pub fn new(dir: impl Into<PathBuf>, retention: RetentionCfg) -> Self {
-        Self { dir: dir.into(), retention }
+        Self {
+            dir: dir.into(),
+            retention,
+            faults: None,
+            prune_failures: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Arm a fault plan: the `checkpoint.sink` site fails the streaming
+    /// file write after its byte budget and `registry.read` makes a
+    /// manifest read come back torn.
+    pub fn with_faults(mut self, faults: Arc<FaultPlan>) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Shared counter of retention-prune failures (see
+    /// [`CheckpointRegistry::publish`]): grab a handle before moving the
+    /// registry into a writer thread, read it after the run.
+    pub fn prune_failure_counter(&self) -> Arc<AtomicU64> {
+        self.prune_failures.clone()
     }
 
     pub fn dir(&self) -> &Path {
@@ -82,6 +107,12 @@ impl CheckpointRegistry {
     /// manifest is an empty registry; a corrupt one is an error.
     pub fn entries(&self) -> Result<Vec<CheckpointEntry>> {
         let path = self.manifest_path();
+        if let Some(p) = &self.faults {
+            p.check(fault::SITE_REGISTRY_READ).map_err(|e| {
+                anyhow::Error::new(e)
+                    .context(format!("reading manifest {} (torn read)", path.display()))
+            })?;
+        }
         let text = match std::fs::read_to_string(&path) {
             Ok(t) => t,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
@@ -174,7 +205,8 @@ impl CheckpointRegistry {
             .with_context(|| format!("creating registry dir {}", self.dir.display()))?;
         let file = format!("ckpt-{:010}.e2c", data.iter);
         let path = self.dir.join(&file);
-        let stats = stream_atomic(&path, data)?;
+        let sink_fault = self.faults.as_ref().and_then(|p| p.hit(fault::SITE_CKPT_SINK));
+        let stats = stream_atomic(&path, data, sink_fault)?;
         let entry = CheckpointEntry {
             iter: data.iter,
             file,
@@ -190,8 +222,22 @@ impl CheckpointRegistry {
         self.write_manifest(&keep)?;
         // Files are unlinked only after the manifest stopped listing
         // them, so a reader never sees a listed-but-missing checkpoint.
+        // A failed unlink (a version directory deleted out from under
+        // us, a permission flip) must never abort training — the new
+        // checkpoint is already durable.  Log it, count it (surfaces in
+        // `RunMetrics::prune_failures`), move on.  An already-gone file
+        // is the *goal* of pruning, not a failure.
         for p in &pruned {
-            let _ = std::fs::remove_file(self.dir.join(&p.file));
+            let victim = self.dir.join(&p.file);
+            if let Err(e) = std::fs::remove_file(&victim) {
+                if e.kind() != std::io::ErrorKind::NotFound {
+                    self.prune_failures.fetch_add(1, Ordering::Relaxed);
+                    eprintln!(
+                        "[ckpt] retention prune of {} failed ({e}); continuing",
+                        victim.display()
+                    );
+                }
+            }
         }
         Ok(entry)
     }
@@ -248,14 +294,26 @@ fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
 /// Stream-encode one checkpoint into a temp sibling of `path` and
 /// rename it into place — the same atomicity contract as
 /// [`write_atomic`], without ever holding the serialized checkpoint in
-/// memory.
-fn stream_atomic(path: &Path, data: &CheckpointData) -> Result<format::EncodeStats> {
+/// memory.  An armed `checkpoint.sink` fault swaps in a byte-budgeted
+/// writer ("disk full after N bytes"); the failure path is identical to
+/// a real I/O error — the temp file is removed and nothing publishes.
+fn stream_atomic(
+    path: &Path,
+    data: &CheckpointData,
+    sink_fault: Option<FaultShot>,
+) -> Result<format::EncodeStats> {
     let tmp = tmp_sibling(path)?;
     let write = || -> Result<format::EncodeStats> {
         let file = std::fs::File::create(&tmp)
             .with_context(|| format!("creating {}", tmp.display()))?;
         let mut w = std::io::BufWriter::new(file);
-        let stats = format::write_checkpoint(data, &mut w)?;
+        let stats = match sink_fault {
+            None => format::write_checkpoint(data, &mut w)?,
+            Some(shot) => {
+                let mut fw = fault::FailingWriter::new(&mut w, shot.after_bytes);
+                format::write_checkpoint(data, &mut fw)?
+            }
+        };
         // Surface buffered-write errors before the rename publishes.
         w.into_inner()
             .map_err(|e| anyhow!("flushing {}: {}", tmp.display(), e.error()))?;
@@ -377,5 +435,109 @@ mod tests {
         // corrupt manifest -> parse error, not a panic
         std::fs::write(tmp.path().join(MANIFEST), b"{not json").unwrap();
         assert!(reg.entries().is_err());
+    }
+
+    /// A retention prune that can't unlink its victim (here: the file
+    /// was replaced by a directory out from under us) must not fail the
+    /// publish — the new checkpoint is already durable.  It is counted
+    /// on the shared prune-failure counter; an already-missing victim
+    /// is not a failure at all.
+    #[test]
+    fn prune_failure_is_tolerated_and_counted() {
+        let tmp = TempDir::new().unwrap();
+        let reg = CheckpointRegistry::new(
+            tmp.path(),
+            RetentionCfg { keep_last: 1, keep_every: 0 },
+        );
+        let ctr = reg.prune_failure_counter();
+        let e10 = publish_at(&reg, 10);
+        let victim = tmp.path().join(&e10.file);
+        std::fs::remove_file(&victim).unwrap();
+        std::fs::create_dir(&victim).unwrap();
+
+        publish_at(&reg, 20); // prunes iter 10 -> unlink fails -> tolerated
+        assert_eq!(ctr.load(Ordering::Relaxed), 1, "failed prune counted");
+        assert_eq!(reg.latest().unwrap().unwrap().iter, 20);
+        assert!(
+            !reg.entries().unwrap().iter().any(|e| e.iter == 10),
+            "the manifest stopped listing the unprunable checkpoint"
+        );
+
+        // an already-gone victim is the goal of pruning, not a failure
+        std::fs::remove_file(tmp.path().join("ckpt-0000000020.e2c")).unwrap();
+        publish_at(&reg, 30);
+        assert_eq!(ctr.load(Ordering::Relaxed), 1, "NotFound not counted");
+    }
+
+    /// The `checkpoint.sink` fault site fails the streaming write after
+    /// its byte budget exactly like a full disk: nothing publishes, no
+    /// temp litter, and the next publish (site exhausted) succeeds.
+    #[test]
+    fn injected_sink_fault_fails_the_publish_atomically() {
+        use crate::util::fault::{FaultPlan, FaultSiteCfg, FaultsCfg};
+
+        let tmp = TempDir::new().unwrap();
+        let plan = FaultPlan::from_cfg(
+            &FaultsCfg {
+                sites: vec![FaultSiteCfg {
+                    site: fault::SITE_CKPT_SINK.into(),
+                    at: 1,
+                    times: 1,
+                    after_bytes: Some(64),
+                }],
+                ..Default::default()
+            },
+            0,
+        )
+        .unwrap();
+        let reg = CheckpointRegistry::new(tmp.path(), RetentionCfg::default())
+            .with_faults(plan.clone());
+
+        let mut data = toy_checkpoint();
+        data.iter = 10;
+        let err = reg.publish(&data).unwrap_err();
+        assert!(fault::is_injected(&err), "untyped failure: {err:#}");
+        assert!(reg.entries().unwrap().is_empty(), "partial publish listed");
+        let litter: Vec<_> = std::fs::read_dir(tmp.path())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+            .filter(|n| n.contains("tmp"))
+            .collect();
+        assert!(litter.is_empty(), "temp litter left behind: {litter:?}");
+
+        // site exhausted: the retry goes through
+        assert_eq!(reg.publish(&data).unwrap().iter, 10);
+        assert_eq!(plan.fired(fault::SITE_CKPT_SINK), 1);
+    }
+
+    /// The `registry.read` fault site makes one manifest read come back
+    /// torn; the next read is clean (readers retry around it).
+    #[test]
+    fn injected_manifest_fault_tears_one_read() {
+        use crate::util::fault::{FaultPlan, FaultSiteCfg, FaultsCfg};
+
+        let tmp = TempDir::new().unwrap();
+        let plain = CheckpointRegistry::new(tmp.path(), RetentionCfg::default());
+        publish_at(&plain, 5);
+
+        let plan = FaultPlan::from_cfg(
+            &FaultsCfg {
+                sites: vec![FaultSiteCfg {
+                    site: fault::SITE_REGISTRY_READ.into(),
+                    at: 2,
+                    times: 1,
+                    after_bytes: None,
+                }],
+                ..Default::default()
+            },
+            0,
+        )
+        .unwrap();
+        let reg = CheckpointRegistry::new(tmp.path(), RetentionCfg::default())
+            .with_faults(plan);
+        assert_eq!(reg.entries().unwrap().len(), 1);
+        let err = reg.entries().unwrap_err();
+        assert!(fault::is_injected(&err), "untyped failure: {err:#}");
+        assert_eq!(reg.entries().unwrap().len(), 1, "reads recover");
     }
 }

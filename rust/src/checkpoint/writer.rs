@@ -138,6 +138,57 @@ mod tests {
         assert_eq!(iters, vec![3, 6, 9]);
     }
 
+    /// Round-trip with the fault harness's sink-error site: the writer
+    /// thread parks the injected I/O failure and surfaces it typed at
+    /// the *next* snapshot attempt (or finish) — never a panic, and the
+    /// trainer thread itself keeps running to make that next attempt.
+    #[test]
+    fn injected_sink_fault_parks_and_surfaces_typed() {
+        use crate::util::fault::{self, FaultPlan, FaultSiteCfg, FaultsCfg};
+
+        let tmp = TempDir::new().unwrap();
+        let plan = FaultPlan::from_cfg(
+            &FaultsCfg {
+                sites: vec![FaultSiteCfg {
+                    site: fault::SITE_CKPT_SINK.into(),
+                    at: 2,
+                    times: 1,
+                    after_bytes: Some(128),
+                }],
+                ..Default::default()
+            },
+            0,
+        )
+        .unwrap();
+        let reg = CheckpointRegistry::new(tmp.path(), RetentionCfg::default())
+            .with_faults(plan);
+        let w = CheckpointWriter::spawn(reg);
+
+        let at = |iter: u64| {
+            let mut d = toy_checkpoint();
+            d.iter = iter;
+            d
+        };
+        w.submit(at(3)).unwrap(); // publishes fine (sink hit 1)
+        let _ = w.submit(at(6)); // dies on the sink fault (hit 2)
+        // the parked error surfaces on a later submit or on finish
+        let mut surfaced = Vec::new();
+        for iter in [9, 12] {
+            if let Err(e) = w.submit(at(iter)) {
+                surfaced.push(e);
+            }
+        }
+        if let Err(e) = w.finish() {
+            surfaced.push(e);
+        }
+        let err = surfaced.pop().expect("the sink failure never surfaced");
+        assert!(fault::is_injected(&err), "untyped failure: {err:#}");
+
+        // the registry itself is intact: iter 3 published and loads
+        let reg = CheckpointRegistry::new(tmp.path(), RetentionCfg::default());
+        assert_eq!(reg.load_iter(3).unwrap().iter, 3);
+    }
+
     #[test]
     fn write_failure_surfaces_on_submit_or_finish() {
         let tmp = TempDir::new().unwrap();

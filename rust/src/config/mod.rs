@@ -8,6 +8,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Context, Result};
 
 use crate::optim::LrSchedule;
+use crate::util::fault::{self, FaultSiteCfg, FaultsCfg};
 use crate::util::json::{parse, Json};
 
 /// Which dataset backs the run.
@@ -160,6 +161,14 @@ pub struct RunCfg {
     /// file at every boundary and `e2train resume <dir>` continues the
     /// run bitwise-identically (tests/resume_equivalence.rs).
     pub checkpoint: CkptCfg,
+    /// Fault injection + supervised recovery policy
+    /// (`util::fault` / `coordinator::supervisor`): armed sites inject
+    /// deterministic failures, and `max_retries`/`backoff_ms` bound the
+    /// supervisor's restore-and-resume loop.  Not part of the
+    /// determinism fingerprint — a recovered run is bitwise identical
+    /// to the fault-free run (tests/fault_matrix.rs), so it must
+    /// fingerprint identically too.
+    pub faults: FaultsCfg,
     pub artifacts_dir: PathBuf,
 }
 
@@ -189,6 +198,7 @@ impl RunCfg {
             shards: 0,
             backend: None,
             checkpoint: CkptCfg::default(),
+            faults: FaultsCfg::default(),
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -321,6 +331,28 @@ impl RunCfg {
                 ]),
             ),
             (
+                "faults",
+                Json::obj(vec![
+                    ("seed", Json::num(self.faults.seed as f64)),
+                    ("max_retries", Json::num(self.faults.max_retries as f64)),
+                    ("backoff_ms", Json::num(self.faults.backoff_ms as f64)),
+                    (
+                        "sites",
+                        Json::arr(self.faults.sites.iter().map(|s| {
+                            let mut kv = vec![
+                                ("site", Json::str(&s.site)),
+                                ("at", Json::num(s.at as f64)),
+                                ("times", Json::num(s.times as f64)),
+                            ];
+                            if let Some(b) = s.after_bytes {
+                                kv.push(("after_bytes", Json::num(b as f64)));
+                            }
+                            Json::obj(kv)
+                        })),
+                    ),
+                ]),
+            ),
+            (
                 "artifacts_dir",
                 Json::str(self.artifacts_dir.to_string_lossy()),
             ),
@@ -394,7 +426,7 @@ impl RunCfg {
             &[
                 "family", "method", "iters", "seed", "lr", "data", "smd", "sd",
                 "eval_every", "swa", "alpha", "beta", "resident", "prefetch",
-                "shards", "backend", "checkpoint", "artifacts_dir",
+                "shards", "backend", "checkpoint", "faults", "artifacts_dir",
             ],
             "run-config",
         )?;
@@ -492,6 +524,46 @@ impl RunCfg {
                 ));
             }
         }
+        if let Some(f) = v.get("faults") {
+            Self::check_keys(
+                f,
+                &["seed", "max_retries", "backoff_ms", "sites"],
+                "faults",
+            )?;
+            let mut faults = FaultsCfg {
+                seed: f.get("seed").and_then(Json::as_u64).unwrap_or(0),
+                ..FaultsCfg::default()
+            };
+            if let Some(r) = f.get("max_retries").and_then(Json::as_u64) {
+                faults.max_retries = r;
+            }
+            if let Some(b) = f.get("backoff_ms").and_then(Json::as_u64) {
+                faults.backoff_ms = b;
+            }
+            if f.get("sites").is_some() {
+                for s in f.req_arr("sites")? {
+                    Self::check_keys(
+                        s,
+                        &["site", "at", "times", "after_bytes"],
+                        "faults.sites entry",
+                    )?;
+                    let site = s.req_str("site")?.to_string();
+                    if !fault::KNOWN_SITES.contains(&site.as_str()) {
+                        return Err(anyhow!(
+                            "unknown fault site '{site}' (known sites: {})",
+                            fault::KNOWN_SITES.join(", ")
+                        ));
+                    }
+                    faults.sites.push(FaultSiteCfg {
+                        site,
+                        at: s.get("at").and_then(Json::as_u64).unwrap_or(0),
+                        times: s.get("times").and_then(Json::as_u64).unwrap_or(1),
+                        after_bytes: s.get("after_bytes").and_then(Json::as_u64),
+                    });
+                }
+            }
+            cfg.faults = faults;
+        }
         if let Some(d) = v.get("artifacts_dir").and_then(Json::as_str) {
             cfg.artifacts_dir = PathBuf::from(d);
         }
@@ -530,6 +602,25 @@ mod tests {
             keep_last: 2,
             keep_every: 50,
         };
+        cfg.faults = FaultsCfg {
+            sites: vec![
+                FaultSiteCfg {
+                    site: fault::SITE_TRAIN_STEP.into(),
+                    at: 7,
+                    times: 2,
+                    after_bytes: None,
+                },
+                FaultSiteCfg {
+                    site: fault::SITE_CKPT_SINK.into(),
+                    at: 0,
+                    times: 1,
+                    after_bytes: Some(4096),
+                },
+            ],
+            max_retries: 6,
+            backoff_ms: 3,
+            seed: 11,
+        };
         let dir = TempDir::new().unwrap();
         let p = dir.path().join("run.json");
         cfg.save(&p).unwrap();
@@ -544,6 +635,45 @@ mod tests {
         assert!(!back.resident && !back.prefetch);
         assert_eq!(back.shards, 2);
         assert_eq!(back.checkpoint, cfg.checkpoint);
+        assert_eq!(back.faults, cfg.faults);
+    }
+
+    #[test]
+    fn fault_section_is_strictly_validated() {
+        let base = RunCfg::quick("f", "sgd32", 5).to_json();
+        // an unknown site name is a config error, not a silent no-op
+        let mut m = base.as_obj().unwrap().clone();
+        m.insert(
+            "faults".into(),
+            Json::obj(vec![(
+                "sites",
+                Json::arr([Json::obj(vec![("site", Json::str("disk.melt"))])]),
+            )]),
+        );
+        let err = format!("{:#}", RunCfg::from_json(&Json::Obj(m)).unwrap_err());
+        assert!(err.contains("disk.melt"), "unexpected error: {err}");
+        // ...and so is a typo'd policy knob
+        let mut m = base.as_obj().unwrap().clone();
+        m.insert(
+            "faults".into(),
+            Json::obj(vec![("max_retrys", Json::num(2.0))]),
+        );
+        let err = format!("{:#}", RunCfg::from_json(&Json::Obj(m)).unwrap_err());
+        assert!(err.contains("max_retrys"), "unexpected error: {err}");
+        // ...or a stale per-site key
+        let mut m = base.as_obj().unwrap().clone();
+        m.insert(
+            "faults".into(),
+            Json::obj(vec![(
+                "sites",
+                Json::arr([Json::obj(vec![
+                    ("site", Json::str(fault::SITE_PREFETCH)),
+                    ("when", Json::num(3.0)),
+                ])]),
+            )]),
+        );
+        let err = format!("{:#}", RunCfg::from_json(&Json::Obj(m)).unwrap_err());
+        assert!(err.contains("when"), "unexpected error: {err}");
     }
 
     #[test]
@@ -583,6 +713,16 @@ mod tests {
         b.artifacts_dir = PathBuf::from("elsewhere");
         b.checkpoint.every = 7;
         b.checkpoint.dir = Some(PathBuf::from("x"));
+        // ...and neither does an armed fault plan: a supervised run that
+        // recovers from injected faults must fingerprint-match both its
+        // own checkpoints and the fault-free baseline.
+        b.faults.sites.push(FaultSiteCfg {
+            site: fault::SITE_TRAIN_STEP.into(),
+            at: 3,
+            times: 1,
+            after_bytes: None,
+        });
+        b.faults.max_retries = 9;
         assert_eq!(a.fingerprint(), b.fingerprint());
         // ...stream-relevant knobs do
         let mut c = a.clone();

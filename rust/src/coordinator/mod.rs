@@ -4,6 +4,9 @@
 //! * [`sd`] — stochastic-depth baseline scheduler [66] (Sec. 4.3)
 //! * [`trainer`] — the orchestrated step loop: sampling, SMD, SD masks,
 //!   AOT step execution, SWA, energy charging, eval, metrics.
+//! * [`supervisor`] — supervised recovery: transient-vs-fatal error
+//!   classification, restore-from-latest-checkpoint, bounded retries
+//!   with deterministic backoff ([`Trainer::run_supervised`]).
 //!
 //! SLU and PSG live inside the AOT artifacts (the gates and the
 //! psg_select kernel are part of the lowered train step); the coordinator
@@ -13,8 +16,10 @@
 
 pub mod sd;
 pub mod smd;
+pub mod supervisor;
 pub mod trainer;
 
 pub use sd::{SdScheduler, SdState};
 pub use smd::{SmdScheduler, SmdState};
+pub use supervisor::Severity;
 pub use trainer::{RunOutcome, Trainer};

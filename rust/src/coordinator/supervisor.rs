@@ -1,0 +1,245 @@
+//! Supervised recovery: the retry loop around a training run.
+//!
+//! [`Trainer::run_supervised`] wraps the ordinary run in a supervisor
+//! that classifies failures **transient vs fatal**, restores from the
+//! latest readable registry checkpoint, and retries with bounded,
+//! exponentially backed-off delays.  Because a resumed run is bitwise
+//! identical to the run that never stopped (tests/resume_equivalence.rs)
+//! and the sharded backend additionally recovers failed shards in place
+//! (`runtime::shard`), a supervised run that survives its faults ends
+//! **bitwise identical** — trace, energy ledger, final state — to a
+//! fault-free run of the same config (tests/fault_matrix.rs).  The only
+//! observable differences live outside the determinism contract:
+//! `RunMetrics::recoveries` and the wall clock.
+//!
+//! Classification is deliberately conservative: injected faults
+//! (`util::fault`) and unrecognized errors are transient — a crashed
+//! worker, a torn manifest read, a failed checkpoint write are all
+//! things a restart can outlive.  Fatal is reserved for errors a retry
+//! provably cannot fix: a checkpoint whose config fingerprint or state
+//! spec contradicts this run, or a checkpoint past the run's horizon.
+//! Those fail fast with the original error.
+//!
+//! Backoff is deterministic: delays derive from a seeded
+//! [`Rng`](crate::util::rng::Rng) (run seed ⊕ fault seed), so a
+//! supervised run's retry timing — like everything else in the repo —
+//! replays exactly.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::checkpoint::{CheckpointData, CheckpointRegistry, RetentionCfg};
+use crate::config::RunCfg;
+use crate::util::fault::{is_injected, FaultPlan};
+use crate::util::rng::Rng;
+
+use super::trainer::{RunOutcome, Trainer};
+
+/// Whether a failed attempt is worth retrying.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// A restart from the latest checkpoint can outlive this.
+    Transient,
+    /// Retrying reproduces the same failure — surface it now.
+    Fatal,
+}
+
+/// Error messages that no retry can fix: configuration/artifact
+/// contradictions detected at resume time ([`Trainer::resume`] and its
+/// state-spec check).  Matched against the full context chain.
+const FATAL_MARKERS: &[&str] = &[
+    // checkpoint fingerprint != this run's determinism fingerprint
+    "does not match this run's",
+    // checkpoint tensors vs the artifact's state spec
+    "do not match artifact",
+    "does not match the artifact",
+    // checkpoint past the configured horizon
+    "but the run is configured for",
+];
+
+/// Classify one failed attempt.  Injected faults are transient by
+/// construction; config/artifact contradictions are fatal; everything
+/// else defaults to transient (a retry against a crashed worker or a
+/// flaky disk is cheap, and the retry budget bounds the damage).
+pub fn classify(err: &anyhow::Error) -> Severity {
+    if is_injected(err) {
+        return Severity::Transient;
+    }
+    let msg = format!("{err:#}");
+    if FATAL_MARKERS.iter().any(|m| msg.contains(m)) {
+        return Severity::Fatal;
+    }
+    Severity::Transient
+}
+
+/// Deterministic exponential backoff: attempt `k` waits
+/// `base << min(k, 6)` ms plus a seeded jitter in `[0, base]` ms.
+struct Backoff {
+    rng: Rng,
+    base_ms: u64,
+    k: u32,
+}
+
+impl Backoff {
+    fn new(base_ms: u64, seed: u64) -> Self {
+        Self { rng: Rng::seed_from_u64(seed), base_ms: base_ms.max(1), k: 0 }
+    }
+
+    fn next_delay(&mut self) -> Duration {
+        let exp = self.base_ms << self.k.min(6);
+        self.k += 1;
+        let jitter = self.rng.below(self.base_ms as usize + 1) as u64;
+        Duration::from_millis(exp + jitter)
+    }
+}
+
+/// The newest checkpoint this run can restore from, walking the
+/// registry newest→oldest and *skipping* checkpoints that fail to load
+/// (truncated file, hash mismatch) — one corrupt checkpoint costs
+/// `checkpoint.every` replayed steps, not the run.  `None` when the run
+/// has no checkpoint directory or nothing readable is published yet
+/// (the supervisor then restarts from scratch, which is equally
+/// deterministic).  A torn *manifest* read propagates as an error: it
+/// is itself a transient fault the caller's retry loop absorbs.
+fn latest_restore_point(
+    cfg: &RunCfg,
+    faults: Option<&std::sync::Arc<FaultPlan>>,
+) -> Result<Option<CheckpointData>> {
+    if cfg.checkpoint.every == 0 {
+        return Ok(None);
+    }
+    let Some(dir) = cfg.checkpoint.dir.clone() else {
+        return Ok(None);
+    };
+    let mut registry = CheckpointRegistry::new(
+        dir,
+        RetentionCfg {
+            keep_last: cfg.checkpoint.keep_last,
+            keep_every: cfg.checkpoint.keep_every,
+        },
+    );
+    if let Some(p) = faults {
+        registry = registry.with_faults(p.clone());
+    }
+    for entry in registry.entries()?.iter().rev() {
+        match registry.load(entry) {
+            Ok(data) => return Ok(Some(data)),
+            Err(e) => eprintln!(
+                "[supervise] checkpoint {} unreadable ({e:#}); trying an older one",
+                entry.file
+            ),
+        }
+    }
+    Ok(None)
+}
+
+impl Trainer<'_> {
+    /// Run under supervision: on a transient failure, restore from the
+    /// latest readable checkpoint (or restart from scratch when none
+    /// exists) and retry, up to `cfg.faults.max_retries` recoveries with
+    /// deterministic exponential backoff.  Fatal errors — a checkpoint
+    /// whose fingerprint or state spec contradicts this run — fail fast.
+    ///
+    /// The fault plan comes from `cfg.faults` (seeded by the run seed);
+    /// a plan already armed via [`Trainer::set_faults`] is reused
+    /// instead, so tests can hold the handle and assert firings.  The
+    /// plan's hit counters live across attempts — an injected fault
+    /// with `times: 1` stays spent after the restart, which is what
+    /// makes recovery convergent.
+    pub fn run_supervised(&mut self) -> Result<RunOutcome> {
+        let plan = match self.faults() {
+            Some(p) => p,
+            None => {
+                let p = FaultPlan::from_cfg(&self.cfg.faults, self.cfg.seed)?;
+                self.set_faults(p.clone());
+                p
+            }
+        };
+        let max_retries = self.cfg.faults.max_retries;
+        let mut backoff = Backoff::new(
+            self.cfg.faults.backoff_ms,
+            self.cfg.seed ^ self.cfg.faults.seed ^ 0xb0ff,
+        );
+        let mut failures: u64 = 0;
+        loop {
+            let attempt = match latest_restore_point(&self.cfg, Some(&plan)) {
+                Ok(Some(ckpt)) => {
+                    if failures > 0 {
+                        eprintln!(
+                            "[supervise] restoring from checkpoint iter {}",
+                            ckpt.iter
+                        );
+                    }
+                    self.resume(ckpt)
+                }
+                Ok(None) => self.run(None),
+                Err(e) => Err(e),
+            };
+            let err = match attempt {
+                Ok(mut out) => {
+                    out.metrics.recoveries = failures;
+                    return Ok(out);
+                }
+                Err(e) => e,
+            };
+            if classify(&err) == Severity::Fatal {
+                return Err(err.context("supervised run hit a fatal (non-retryable) error"));
+            }
+            failures += 1;
+            if failures > max_retries {
+                return Err(err.context(format!(
+                    "supervised run retry budget exhausted ({max_retries} retries)"
+                )));
+            }
+            let delay = backoff.next_delay();
+            eprintln!(
+                "[supervise] attempt {failures} failed ({err:#}); retrying from the \
+                 latest checkpoint in {}ms",
+                delay.as_millis()
+            );
+            std::thread::sleep(delay);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+    use crate::util::fault::{self, InjectedFault};
+
+    #[test]
+    fn classification_rules() {
+        let injected = anyhow::Error::new(InjectedFault::new(fault::SITE_TRAIN_STEP))
+            .context("step 7 failed");
+        assert_eq!(classify(&injected), Severity::Transient);
+
+        let fatal = anyhow!(
+            "checkpoint fingerprint deadbeef does not match this run's cafebabe"
+        );
+        assert_eq!(classify(&fatal), Severity::Fatal);
+        let fatal2 = anyhow!("checkpoint is at iter 40 but the run is configured for 20 iters");
+        assert_eq!(classify(&fatal2), Severity::Fatal);
+
+        // unknown errors default to transient (the budget bounds them)
+        assert_eq!(classify(&anyhow!("disk fell over")), Severity::Transient);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_monotonic_in_exponent() {
+        let delays = |seed| {
+            let mut b = Backoff::new(10, seed);
+            (0..9).map(|_| b.next_delay().as_millis() as u64).collect::<Vec<_>>()
+        };
+        let a = delays(7);
+        assert_eq!(a, delays(7), "same seed must replay the same delays");
+        assert_ne!(a, delays(8), "different seed should jitter differently");
+        for (k, d) in a.iter().enumerate() {
+            let exp = 10u64 << (k as u32).min(6);
+            assert!(*d >= exp && *d <= exp + 10, "attempt {k}: {d}ms out of range");
+        }
+        // the shift saturates at 6 so delays stay bounded
+        assert!(a[8] <= (10 << 6) + 10);
+    }
+}

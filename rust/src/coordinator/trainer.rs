@@ -57,6 +57,7 @@ use crate::runtime::{
     prepare_backend, Engine, EvalMetrics, HostTensor, ModelState, SnapshotCell,
     StateSnapshot, StepBackend, StepHyper, TrainProgram,
 };
+use crate::util::fault::{self, FaultPlan};
 
 use super::sd::SdScheduler;
 use super::smd::SmdScheduler;
@@ -182,6 +183,11 @@ pub struct Trainer<'e> {
     /// the run publishes each refreshed SWA average and the final state
     /// into the cell (mid-flight — the serve queue never drains).
     publish: Option<Arc<SnapshotCell>>,
+    /// Armed fault-injection plan (tests / supervised runs): threaded
+    /// into the prefetch worker, the checkpoint registry and the
+    /// execution backend, plus the trainer's own `engine.train_step`
+    /// site.  `None` (the default) injects nothing anywhere.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl<'e> Trainer<'e> {
@@ -200,6 +206,7 @@ impl<'e> Trainer<'e> {
             train_data,
             test_set,
             publish: None,
+            faults: None,
         })
     }
 
@@ -207,6 +214,19 @@ impl<'e> Trainer<'e> {
     /// checkpoints into it (SWA refreshes + the final state).
     pub fn set_publisher(&mut self, cell: Arc<SnapshotCell>) {
         self.publish = Some(cell);
+    }
+
+    /// Arm a fault-injection plan for subsequent runs.
+    /// [`Trainer::run_supervised`] builds one from `cfg.faults`
+    /// automatically; tests set an explicit plan here so they can hold
+    /// the handle and assert which sites actually fired.
+    pub fn set_faults(&mut self, plan: Arc<FaultPlan>) {
+        self.faults = Some(plan);
+    }
+
+    /// The armed fault plan, if any.
+    pub fn faults(&self) -> Option<Arc<FaultPlan>> {
+        self.faults.clone()
     }
 
     fn load_data(cfg: &RunCfg, program: &TrainProgram) -> Result<(TrainData, Dataset)> {
@@ -400,6 +420,9 @@ impl<'e> Trainer<'e> {
             self.cfg.shards,
             init_state,
         )?;
+        if let Some(p) = &self.faults {
+            backend.set_faults(p.clone());
+        }
         let needs_mask = m.method.gating == "mask";
 
         // Durable checkpointing: a background writer over the registry,
@@ -411,17 +434,22 @@ impl<'e> Trainer<'e> {
         let ckpt_every = self.cfg.checkpoint.every;
         let mut ckpt_writer: Option<CheckpointWriter> = None;
         let mut shadow: Option<Sampler> = None;
+        let mut prune_failures = None;
         if ckpt_every > 0 {
             let dir = self.cfg.checkpoint.dir.clone().ok_or_else(|| {
                 anyhow!("checkpoint.every = {ckpt_every} but checkpoint.dir is unset")
             })?;
-            let registry = CheckpointRegistry::new(
+            let mut registry = CheckpointRegistry::new(
                 dir,
                 RetentionCfg {
                     keep_last: self.cfg.checkpoint.keep_last,
                     keep_every: self.cfg.checkpoint.keep_every,
                 },
             );
+            if let Some(p) = &self.faults {
+                registry = registry.with_faults(p.clone());
+            }
+            prune_failures = Some(registry.prune_failure_counter());
             ckpt_writer = Some(CheckpointWriter::spawn(registry));
             shadow = Some(sampler_start.build(
                 train_len,
@@ -449,20 +477,22 @@ impl<'e> Trainer<'e> {
                 let files = files.clone();
                 let batch = self.program.batch();
                 let pre = match &sampler_start {
-                    SamplerStart::Seed(s) => Prefetcher::spawn_deferred(
+                    SamplerStart::Seed(s) => Prefetcher::spawn_deferred_opts(
                         move || files.decode(),
                         batch,
                         AugmentCfg::default(),
                         *s,
                         depth,
-                    ),
-                    SamplerStart::State(st) => Prefetcher::spawn_deferred_resume(
+                        self.faults.clone(),
+                    )?,
+                    SamplerStart::State(st) => Prefetcher::spawn_deferred_resume_opts(
                         move || files.decode(),
                         batch,
                         AugmentCfg::default(),
                         st.clone(),
                         depth,
-                    ),
+                        self.faults.clone(),
+                    )?,
                 };
                 BatchSource::Prefetch { staged: VecDeque::new(), pre }
             }
@@ -496,7 +526,12 @@ impl<'e> Trainer<'e> {
                 prefetch_depth = Some(depth);
                 BatchSource::Prefetch {
                     staged,
-                    pre: Prefetcher::spawn_from(sampler, data, depth),
+                    pre: Prefetcher::spawn_from_opts(
+                        sampler,
+                        data,
+                        depth,
+                        self.faults.clone(),
+                    )?,
                 }
             }
             (_, false) => {
@@ -558,6 +593,12 @@ impl<'e> Trainer<'e> {
                 alpha: self.cfg.alpha as f32,
                 beta: self.cfg.beta as f32,
             };
+            // The step-level fault site: a transient engine failure at
+            // the trainer's own boundary (the backend-local sites live
+            // below the `StepBackend` trait).
+            if let Some(p) = &self.faults {
+                p.check(fault::SITE_TRAIN_STEP)?;
+            }
             let sm = backend.train_step(&x, &y, hp, mask.as_deref())?;
 
             // Energy: SD masks are per-batch gate fractions too.
@@ -667,6 +708,9 @@ impl<'e> Trainer<'e> {
         metrics.mean_psg_frac =
             if psg_mean.count() > 0 { Some(psg_mean.get()) } else { None };
         metrics.prefetch_depth = prefetch_depth;
+        if let Some(c) = &prune_failures {
+            metrics.prune_failures = c.load(std::sync::atomic::Ordering::Relaxed);
+        }
 
         eprintln!(
             "[run] {}/{}: acc {:.4}, {:.2} J, {} steps ({} skipped), {:.1}s",

@@ -10,13 +10,14 @@
 //! tests/resident_equivalence.rs).  The worker runs at most
 //! `depth` batches ahead; it never reorders.
 
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::runtime::HostTensor;
+use crate::util::fault::{self, FaultPlan, InjectedFault};
 
 use super::sampler::{AugmentCfg, Sampler, SamplerState};
 use super::Dataset;
@@ -62,7 +63,7 @@ impl Prefetcher {
         augment: AugmentCfg,
         seed: u64,
         depth: usize,
-    ) -> Self {
+    ) -> Result<Self> {
         Self::spawn_from(Sampler::new(data.n, batch, augment, seed), data, depth)
     }
 
@@ -81,13 +82,32 @@ impl Prefetcher {
         augment: AugmentCfg,
         seed: u64,
         depth: usize,
-    ) -> Self
+    ) -> Result<Self>
     where
         F: FnOnce() -> Result<Dataset> + Send + 'static,
     {
-        Self::spawn_deferred_inner(load, depth, move |n| {
-            Ok(Sampler::new(n, batch, augment, seed))
-        })
+        Self::spawn_deferred_opts(load, batch, augment, seed, depth, None)
+    }
+
+    /// [`Prefetcher::spawn_deferred`] with an optional fault plan (the
+    /// `data.prefetch` site panics the worker mid-stream).
+    pub fn spawn_deferred_opts<F>(
+        load: F,
+        batch: usize,
+        augment: AugmentCfg,
+        seed: u64,
+        depth: usize,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Dataset> + Send + 'static,
+    {
+        Self::spawn_deferred_inner(
+            load,
+            depth,
+            move |n| Ok(Sampler::new(n, batch, augment, seed)),
+            faults,
+        )
     }
 
     /// Deferred-dataset spawn that **resumes** the stream: the worker
@@ -104,16 +124,39 @@ impl Prefetcher {
         augment: AugmentCfg,
         state: SamplerState,
         depth: usize,
-    ) -> Self
+    ) -> Result<Self>
     where
         F: FnOnce() -> Result<Dataset> + Send + 'static,
     {
-        Self::spawn_deferred_inner(load, depth, move |n| {
-            Sampler::restore(&state, n, batch, augment)
-        })
+        Self::spawn_deferred_resume_opts(load, batch, augment, state, depth, None)
     }
 
-    fn spawn_deferred_inner<F, M>(load: F, depth: usize, make_sampler: M) -> Self
+    /// [`Prefetcher::spawn_deferred_resume`] with an optional fault plan.
+    pub fn spawn_deferred_resume_opts<F>(
+        load: F,
+        batch: usize,
+        augment: AugmentCfg,
+        state: SamplerState,
+        depth: usize,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Dataset> + Send + 'static,
+    {
+        Self::spawn_deferred_inner(
+            load,
+            depth,
+            move |n| Sampler::restore(&state, n, batch, augment),
+            faults,
+        )
+    }
+
+    fn spawn_deferred_inner<F, M>(
+        load: F,
+        depth: usize,
+        make_sampler: M,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Result<Self>
     where
         F: FnOnce() -> Result<Dataset> + Send + 'static,
         M: FnOnce(usize) -> Result<Sampler> + Send + 'static,
@@ -127,25 +170,21 @@ impl Prefetcher {
                 let data = match load() {
                     Ok(d) => Arc::new(d),
                     Err(e) => {
-                        *err_slot.lock().unwrap() = Some(e);
+                        park(&err_slot, e);
                         return;
                     }
                 };
-                let mut sampler = match make_sampler(data.n) {
+                let sampler = match make_sampler(data.n) {
                     Ok(s) => s,
                     Err(e) => {
-                        *err_slot.lock().unwrap() = Some(e);
+                        park(&err_slot, e);
                         return;
                     }
                 };
-                loop {
-                    if tx.send(sampler.next_batch(&data)).is_err() {
-                        return;
-                    }
-                }
+                produce(sampler, data, tx, &err_slot, faults);
             })
-            .expect("spawning prefetch thread");
-        Self { rx: Some(rx), worker: Some(worker), error }
+            .context("spawning prefetch thread")?;
+        Ok(Self { rx: Some(rx), worker: Some(worker), error })
     }
 
     /// Spawn from an already-built (possibly partially-consumed)
@@ -153,24 +192,35 @@ impl Prefetcher {
     /// couple of probe batches synchronously on the real sampler,
     /// picks a depth ([`auto_depth`]), and hands the sampler over —
     /// the worker continues the exact same deterministic stream.
-    pub fn spawn_from(mut sampler: Sampler, data: Arc<Dataset>, depth: usize) -> Self {
+    pub fn spawn_from(
+        sampler: Sampler,
+        data: Arc<Dataset>,
+        depth: usize,
+    ) -> Result<Self> {
+        Self::spawn_from_opts(sampler, data, depth, None)
+    }
+
+    /// [`Prefetcher::spawn_from`] with an optional fault plan.
+    pub fn spawn_from_opts(
+        sampler: Sampler,
+        data: Arc<Dataset>,
+        depth: usize,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Result<Self> {
         let (tx, rx) = sync_channel(depth.max(1));
+        let error = Arc::new(Mutex::new(None));
+        let err_slot = error.clone();
         let worker = std::thread::Builder::new()
             .name("e2train-prefetch".into())
-            .spawn(move || loop {
-                let b = sampler.next_batch(&data);
-                // The receiver hung up: the run is over.
-                if tx.send(b).is_err() {
-                    return;
-                }
-            })
-            .expect("spawning prefetch thread");
-        Self { rx: Some(rx), worker: Some(worker), error: Arc::new(Mutex::new(None)) }
+            .spawn(move || produce(sampler, data, tx, &err_slot, faults))
+            .context("spawning prefetch thread")?;
+        Ok(Self { rx: Some(rx), worker: Some(worker), error })
     }
 
     /// Blocking pull of the next staged batch (usually already
     /// buffered).  Errors when the worker stopped — with the deferred
-    /// load's failure cause when there is one.
+    /// load's failure cause or the worker's panic message when there is
+    /// one.
     pub fn next_batch(&mut self) -> Result<(HostTensor, HostTensor)> {
         let rx = self
             .rx
@@ -178,13 +228,73 @@ impl Prefetcher {
             .ok_or_else(|| anyhow!("prefetcher already shut down"))?;
         match rx.recv() {
             Ok(b) => Ok(b),
-            Err(_) => Err(self
-                .error
-                .lock()
-                .unwrap()
+            Err(_) => Err(lock_err(&self.error)
                 .take()
                 .unwrap_or_else(|| anyhow!("prefetch worker died"))),
         }
+    }
+}
+
+/// The worker's production loop.  Batch assembly runs under
+/// `catch_unwind`, so an augment-path panic (or the injected
+/// `data.prefetch` fault) lands in the error slot and flows out of
+/// [`Prefetcher::next_batch`] as an error — it never poisons the slot
+/// mutex or silently strands the consumer.
+fn produce(
+    mut sampler: Sampler,
+    data: Arc<Dataset>,
+    tx: SyncSender<(HostTensor, HostTensor)>,
+    err_slot: &Mutex<Option<anyhow::Error>>,
+    faults: Option<Arc<FaultPlan>>,
+) {
+    loop {
+        let made = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let Some(p) = &faults {
+                if p.hit(fault::SITE_PREFETCH).is_some() {
+                    panic!("{}", InjectedFault::new(fault::SITE_PREFETCH));
+                }
+            }
+            sampler.next_batch(&data)
+        }));
+        let b = match made {
+            Ok(b) => b,
+            Err(payload) => {
+                park(
+                    err_slot,
+                    anyhow!(
+                        "prefetch worker panicked assembling a batch: {}",
+                        panic_message(&payload)
+                    ),
+                );
+                return;
+            }
+        };
+        // The receiver hung up: the run is over.
+        if tx.send(b).is_err() {
+            return;
+        }
+    }
+}
+
+/// Store an error for the consumer; a poisoned slot (a panic elsewhere
+/// while holding the lock) must not eat the real cause.
+fn park(slot: &Mutex<Option<anyhow::Error>>, e: anyhow::Error) {
+    *lock_err(slot) = Some(e);
+}
+
+fn lock_err(
+    slot: &Mutex<Option<anyhow::Error>>,
+) -> std::sync::MutexGuard<'_, Option<anyhow::Error>> {
+    slot.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -208,7 +318,8 @@ mod tests {
     fn stream_matches_synchronous_sampler() {
         let data = Arc::new(synthetic::generate(10, 64, 8, 0));
         let mut sync = Sampler::new(data.n, 16, AugmentCfg::default(), 42);
-        let mut pre = Prefetcher::spawn(data.clone(), 16, AugmentCfg::default(), 42, 2);
+        let mut pre =
+            Prefetcher::spawn(data.clone(), 16, AugmentCfg::default(), 42, 2).unwrap();
         for _ in 0..12 {
             // crosses an epoch boundary (reshuffle) at batch 4
             let (xa, ya) = sync.next_batch(&data);
@@ -232,7 +343,7 @@ mod tests {
         // Probe phase consumes two batches synchronously...
         let _ = handoff.next_batch(&data);
         let _ = handoff.next_batch(&data);
-        let mut pre = Prefetcher::spawn_from(handoff, data.clone(), 3);
+        let mut pre = Prefetcher::spawn_from(handoff, data.clone(), 3).unwrap();
         // ...and the worker must continue at batch 2 of the same stream.
         let _ = sync.next_batch(&data);
         let _ = sync.next_batch(&data);
@@ -268,7 +379,8 @@ mod tests {
             AugmentCfg::default(),
             11,
             2,
-        );
+        )
+        .unwrap();
         for _ in 0..6 {
             let (xa, _) = sync.next_batch(&sync_data);
             let (xb, _) = pre.next_batch().unwrap();
@@ -295,7 +407,8 @@ mod tests {
             AugmentCfg::default(),
             state,
             2,
-        );
+        )
+        .unwrap();
         for _ in 0..8 {
             let (xa, _) = sync.next_batch(&data);
             let (xb, _) = pre.next_batch().unwrap();
@@ -314,7 +427,8 @@ mod tests {
             AugmentCfg::default(),
             state,
             2,
-        );
+        )
+        .unwrap();
         let err = pre.next_batch().unwrap_err();
         assert!(format!("{err:#}").contains("dataset has"), "lost the cause");
     }
@@ -327,7 +441,8 @@ mod tests {
             AugmentCfg::default(),
             0,
             2,
-        );
+        )
+        .unwrap();
         let err = pre.next_batch().unwrap_err();
         assert!(format!("{err:#}").contains("boom"), "lost the load error");
     }
@@ -335,8 +450,47 @@ mod tests {
     #[test]
     fn drop_mid_stream_terminates_worker() {
         let data = Arc::new(synthetic::generate(4, 32, 4, 1));
-        let mut pre = Prefetcher::spawn(data, 8, AugmentCfg::default(), 0, 2);
+        let mut pre = Prefetcher::spawn(data, 8, AugmentCfg::default(), 0, 2).unwrap();
         let _ = pre.next_batch().unwrap();
         drop(pre); // must not hang
+    }
+
+    /// A worker panic mid-stream (here: the injected `data.prefetch`
+    /// fault) surfaces from `next_batch` as an error carrying the panic
+    /// message — batches before the panic are unaffected, the slot
+    /// mutex never poisons, and drop still reaps the thread.
+    #[test]
+    fn worker_panic_surfaces_as_an_error() {
+        use crate::util::fault::{FaultPlan, FaultSiteCfg, FaultsCfg};
+
+        let data = Arc::new(synthetic::generate(10, 64, 8, 0));
+        let plan = FaultPlan::from_cfg(
+            &FaultsCfg {
+                sites: vec![FaultSiteCfg {
+                    site: fault::SITE_PREFETCH.into(),
+                    at: 3,
+                    times: 1,
+                    after_bytes: None,
+                }],
+                ..Default::default()
+            },
+            0,
+        )
+        .unwrap();
+        let sampler = Sampler::new(data.n, 16, AugmentCfg::default(), 9);
+        let mut pre =
+            Prefetcher::spawn_from_opts(sampler, data, 2, Some(plan)).unwrap();
+        // batches 1 and 2 stream normally
+        assert!(pre.next_batch().is_ok());
+        assert!(pre.next_batch().is_ok());
+        // batch 3 panicked on the worker -> typed message, not a hang
+        let err = pre.next_batch().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("panicked") && msg.contains(fault::SITE_PREFETCH),
+            "unexpected error: {msg}"
+        );
+        // the prefetcher stays usable as an object (errors, not panics)
+        assert!(pre.next_batch().is_err());
     }
 }

@@ -156,6 +156,7 @@ pub fn run_serve_bench(
                 queue_cap: (clients * 2).max(16),
                 max_delay: cfg.max_delay,
                 micro_batch: None,
+                ..Default::default()
             },
         )?;
         let t0 = Instant::now();

@@ -57,11 +57,16 @@ COMMANDS:
     --ckpt-keep-last <n>        retention: keep newest n checkpoints [3]
     --ckpt-keep-every <n>       retention: pin every n-th iteration  [0]
     --config <path>             load a JSON run config instead
+    --supervised                run under the recovery supervisor:
+                                transient failures restore from the
+                                latest checkpoint and retry (implied
+                                when the config arms fault injection)
     --out <path>                write run-metrics JSON
   resume <dir>                  continue a checkpointed run, bitwise
                                 identical to the uninterrupted one
     --iter <n>                  resume a specific checkpointed iteration
                                 (default: the newest)
+    --supervised                supervise the resumed run (see train)
     --data-dir <dir>            relocated CIFAR binaries (path is not
                                 part of the resume fingerprint)
     --backend <b> --shards <n>  resume under a different execution
@@ -169,17 +174,26 @@ fn main() -> Result<()> {
             if let DataCfg::Synthetic { classes, .. } = &mut cfg.data {
                 *classes = manifest.arch.num_classes;
             }
+            // Supervision is explicit (--supervised) or implied by a
+            // config that arms fault injection — injected faults only
+            // make sense under the recovery loop that absorbs them.
+            let supervised = args.bool("supervised") || cfg.faults.enabled();
             let engine = Engine::cpu()?;
             let mut trainer = Trainer::new(&engine, cfg)?;
-            let outcome = trainer.run(None)?;
+            let outcome = if supervised {
+                trainer.run_supervised()?
+            } else {
+                trainer.run(None)?
+            };
             println!(
-                "final: acc={:.4} top5={:.4} loss={:.4} J={:.3} steps={} skipped={}",
+                "final: acc={:.4} top5={:.4} loss={:.4} J={:.3} steps={} skipped={} recoveries={}",
                 outcome.metrics.final_test_acc,
                 outcome.metrics.final_test_acc_top5,
                 outcome.metrics.final_loss,
                 outcome.metrics.total_joules,
                 outcome.metrics.steps_run,
                 outcome.metrics.steps_skipped,
+                outcome.metrics.recoveries,
             );
             if let Some(p) = args.get("out") {
                 std::fs::write(p, outcome.metrics.to_json())?;
@@ -220,17 +234,33 @@ fn main() -> Result<()> {
                 "resuming {}/{} at iter {}/{} from {dir}",
                 cfg.family, cfg.method, ckpt.iter, cfg.iters
             );
+            let supervised = args.bool("supervised") || cfg.faults.enabled();
             let engine = Engine::cpu()?;
-            let mut trainer = Trainer::new(&engine, cfg)?;
-            let outcome = trainer.resume(ckpt)?;
+            let outcome = if supervised {
+                // The supervisor owns checkpoint selection (it restores
+                // from the newest readable one, possibly several times),
+                // so a pinned --iter contradicts it.
+                if args.get("iter").is_some() {
+                    bail!("--iter cannot combine with --supervised (the supervisor always restores the latest checkpoint)");
+                }
+                // Restore from the registry the user pointed at, not
+                // wherever the embedded config once wrote checkpoints.
+                cfg.checkpoint.dir = Some(PathBuf::from(dir));
+                let mut trainer = Trainer::new(&engine, cfg)?;
+                trainer.run_supervised()?
+            } else {
+                let mut trainer = Trainer::new(&engine, cfg)?;
+                trainer.resume(ckpt)?
+            };
             println!(
-                "final: acc={:.4} top5={:.4} loss={:.4} J={:.3} steps={} skipped={}",
+                "final: acc={:.4} top5={:.4} loss={:.4} J={:.3} steps={} skipped={} recoveries={}",
                 outcome.metrics.final_test_acc,
                 outcome.metrics.final_test_acc_top5,
                 outcome.metrics.final_loss,
                 outcome.metrics.total_joules,
                 outcome.metrics.steps_run,
                 outcome.metrics.steps_skipped,
+                outcome.metrics.recoveries,
             );
             if let Some(p) = args.get("out") {
                 std::fs::write(p, outcome.metrics.to_json())?;

@@ -39,6 +39,14 @@ pub struct RunMetrics {
     pub backend: String,
     /// Data-parallel shard count (0 = single-executor backend).
     pub shards: usize,
+    /// Supervised-run restarts that recovered from a transient fault
+    /// (0 for an unsupervised or fault-free run).  Deliberately *not*
+    /// part of the determinism contract: a recovered run's trace,
+    /// ledger and final state are bitwise those of the fault-free run.
+    pub recoveries: u64,
+    /// Checkpoint retention prunes that failed (logged and tolerated —
+    /// pruning is best-effort and never aborts training).
+    pub prune_failures: u64,
 }
 
 impl RunMetrics {
@@ -103,6 +111,8 @@ impl RunMetrics {
             ),
             ("backend", Json::str(&self.backend)),
             ("shards", Json::num(self.shards as f64)),
+            ("recoveries", Json::num(self.recoveries as f64)),
+            ("prune_failures", Json::num(self.prune_failures as f64)),
         ])
     }
 

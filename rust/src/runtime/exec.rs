@@ -29,11 +29,13 @@
 //! backend-native form, rebroadcasting replicas where needed).
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::config::BackendChoice;
+use crate::util::fault::FaultPlan;
 
 use super::device::DeviceState;
 use super::engine::Engine;
@@ -52,6 +54,13 @@ pub trait StepBackend {
     fn shard_count(&self) -> usize {
         0
     }
+
+    /// Arm this backend's fault-injection sites (tests/supervised runs).
+    /// Single-executor backends have no backend-local sites — their
+    /// step-level faults are injected by the trainer — so the default
+    /// is a no-op; the sharded backend forwards the plan to its shard
+    /// fan-out for in-place shard recovery.
+    fn set_faults(&mut self, _plan: Arc<FaultPlan>) {}
 
     /// Execute one optimizer step on a full batch.
     fn train_step(
@@ -280,6 +289,10 @@ impl StepBackend for ShardedBackend<'_> {
 
     fn shard_count(&self) -> usize {
         self.inner.num_shards()
+    }
+
+    fn set_faults(&mut self, plan: Arc<FaultPlan>) {
+        self.inner.set_faults(plan);
     }
 
     fn train_step(

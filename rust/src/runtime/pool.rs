@@ -21,6 +21,8 @@
 
 use anyhow::Result;
 
+use crate::util::fault::{self, FaultPlan};
+
 use super::engine::Engine;
 
 /// A set of engines, one per worker, sharing (or not) a program cache.
@@ -37,6 +39,18 @@ impl EnginePool {
             engines.push(base.fork()?);
         }
         Ok(Self { engines })
+    }
+
+    /// Fork one replacement engine from `base`, sharing its program
+    /// cache — the recovery path (shard re-fork, serve worker respawn)
+    /// rebuilds a dead worker's engine through here.  The `pool.fork`
+    /// fault site makes a *transient* fork failure injectable, so the
+    /// recovery-of-the-recovery path is testable too.
+    pub fn fork_one(base: &Engine, faults: Option<&FaultPlan>) -> Result<Engine> {
+        if let Some(p) = faults {
+            p.check(fault::SITE_POOL_FORK)?;
+        }
+        base.fork()
     }
 
     /// `n` fully isolated engines — one private cache each.  The safe
@@ -101,6 +115,36 @@ mod tests {
         assert!(!Arc::ptr_eq(&a, &b));
         assert_eq!(pool.engine(0).cached_count(), 1);
         assert_eq!(pool.engine(1).cached_count(), 1);
+    }
+
+    #[test]
+    fn fork_one_shares_cache_and_honors_the_fault_site() {
+        use crate::util::fault::{FaultPlan, FaultSiteCfg, FaultsCfg};
+
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let base = Engine::cpu().unwrap();
+        let p0 = base.load(&fam.join("sgd32.train.ref.json")).unwrap();
+
+        let plan = FaultPlan::from_cfg(
+            &FaultsCfg {
+                sites: vec![FaultSiteCfg {
+                    site: fault::SITE_POOL_FORK.into(),
+                    at: 1,
+                    times: 1,
+                    after_bytes: None,
+                }],
+                ..Default::default()
+            },
+            0,
+        )
+        .unwrap();
+        let err = EnginePool::fork_one(&base, Some(&plan)).unwrap_err();
+        assert!(fault::is_injected(&err), "untyped fork failure: {err:#}");
+        // the fault is spent: the retry succeeds and shares the cache
+        let e = EnginePool::fork_one(&base, Some(&plan)).unwrap();
+        let p1 = e.load(&fam.join("sgd32.train.ref.json")).unwrap();
+        assert!(Arc::ptr_eq(&p0, &p1), "replacement engine recompiled");
     }
 
     #[test]

@@ -43,14 +43,15 @@
 //! follow-up in ROADMAP.md — the shard/replica/rebroadcast substrate
 //! here is what it will reuse.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::sampler::{shard_ranges, slice_batch};
 use crate::optim::update::{apply_update, GateIn, ParamIn, RunMeanIn, UpdateCfg};
+use crate::util::fault::{self, FaultPlan, InjectedFault};
 
 use super::device::{DeviceState, DeviceValue, ValueRef};
 use super::engine::{BackendKind, Engine, Program};
@@ -106,7 +107,20 @@ pub struct ShardedTrainer {
     weight_decay: f32,
     update: String,
     backend: BackendKind,
+    /// A private fork of the construction-time base engine, kept so a
+    /// failed shard can be re-forked in place (sharing the same program
+    /// cache) without the caller's engine handle.
+    base: Engine,
+    grad_path: PathBuf,
+    faults: Option<Arc<FaultPlan>>,
+    /// In-place shard recoveries performed so far (telemetry/tests).
+    recoveries: u64,
 }
+
+/// In-step failure budget: a step tolerates this many shard/fork
+/// failures (each answered by an in-place re-fork) before giving up and
+/// surfacing the error to the supervisor's checkpoint-restore path.
+const MAX_STEP_FAILURES: u32 = 3;
 
 impl ShardedTrainer {
     /// Build `shards` engines (forked from `base`, sharing its compiled
@@ -202,7 +216,22 @@ impl ShardedTrainer {
             weight_decay: manifest.method.weight_decay as f32,
             update: manifest.method.update.clone(),
             backend,
+            base: base.fork()?,
+            grad_path,
+            faults: None,
+            recoveries: 0,
         })
+    }
+
+    /// Arm fault-injection sites on the shard fan-out (`shard.engine`)
+    /// and the recovery fork (`pool.fork`).
+    pub fn set_faults(&mut self, plan: Arc<FaultPlan>) {
+        self.faults = Some(plan);
+    }
+
+    /// In-place shard recoveries performed so far.
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries
     }
 
     fn replica(
@@ -238,6 +267,14 @@ impl ShardedTrainer {
 
     /// One data-parallel optimizer step: slice, fan out, reduce in
     /// fixed order, apply, rebroadcast.
+    ///
+    /// A shard that fails mid-fan-out is recovered **in place**: its
+    /// engine is re-forked from the construction-time base, the grad
+    /// program reloaded, and the replica rebuilt from the host master —
+    /// then the whole fan-out retries.  This is bitwise invisible
+    /// because every failure happens *before* [`Self::reduce_and_apply`]
+    /// mutates the master, and a rebuilt replica carries exactly the
+    /// master tensors a rebroadcast would have pushed.
     pub fn step(
         &mut self,
         x: &HostTensor,
@@ -255,32 +292,112 @@ impl ShardedTrainer {
             .map(|r| slice_batch(x, y, r.clone()))
             .collect::<Result<Vec<_>>>()?;
 
-        let outs: Vec<Vec<HostTensor>> = if slices.len() == 1 {
-            vec![run_shard(&self.shards[0], &slices[0].0, &slices[0].1, &n_scalar)?]
+        let mut failures = 0u32;
+        loop {
+            let (i, e) = match self.fan_out(&slices, &n_scalar) {
+                Ok(outs) => return self.reduce_and_apply(b, &outs, hp),
+                Err(at) => at,
+            };
+            failures += 1;
+            if failures > MAX_STEP_FAILURES {
+                return Err(e.context(format!(
+                    "shard {i} still failing after {} in-place recoveries",
+                    failures - 1
+                )));
+            }
+            eprintln!(
+                "[shard] shard {i} failed ({e:#}); re-forking its engine and \
+                 retrying the step"
+            );
+            loop {
+                match self.recover_shard(i) {
+                    Ok(()) => break,
+                    Err(re) => {
+                        failures += 1;
+                        if failures > MAX_STEP_FAILURES {
+                            return Err(re.context(format!(
+                                "recovering shard {i} after a fan-out failure"
+                            )));
+                        }
+                        eprintln!(
+                            "[shard] recovering shard {i} failed ({re:#}); \
+                             retrying the fork"
+                        );
+                    }
+                }
+            }
+            self.recoveries += 1;
+        }
+    }
+
+    /// Fan the slices out over the shards; on failure, report *which*
+    /// shard died so [`Self::recover_shard`] can rebuild exactly it.
+    fn fan_out(
+        &self,
+        slices: &[(HostTensor, HostTensor)],
+        n_scalar: &HostTensor,
+    ) -> std::result::Result<Vec<Vec<HostTensor>>, (usize, anyhow::Error)> {
+        // The `shard.engine` site kills one fan-out leg: the victim is
+        // picked by the shot's firing sequence, so repeated injections
+        // walk the shards deterministically.
+        let victim = self
+            .faults
+            .as_ref()
+            .and_then(|p| p.hit(fault::SITE_SHARD_ENGINE))
+            .map(|shot| (shot.seq as usize) % slices.len().max(1));
+        let inject = |i: usize| -> Result<()> {
+            if victim == Some(i) {
+                return Err(anyhow::Error::new(InjectedFault::new(
+                    fault::SITE_SHARD_ENGINE,
+                )));
+            }
+            Ok(())
+        };
+
+        let mut results: Vec<Option<Result<Vec<HostTensor>>>> =
+            slices.iter().map(|_| None).collect();
+        if slices.len() == 1 {
+            results[0] = Some(inject(0).and_then(|()| {
+                run_shard(&self.shards[0], &slices[0].0, &slices[0].1, n_scalar)
+            }));
         } else {
-            let mut results: Vec<Option<Result<Vec<HostTensor>>>> =
-                slices.iter().map(|_| None).collect();
             std::thread::scope(|scope| {
-                for ((shard, (xs, ys)), slot) in self
+                for (i, ((shard, (xs, ys)), slot)) in self
                     .shards
                     .iter()
                     .zip(slices.iter())
                     .zip(results.iter_mut())
+                    .enumerate()
                 {
-                    let n_ref = &n_scalar;
+                    let inject = &inject;
                     scope.spawn(move || {
-                        *slot = Some(run_shard(shard, xs, ys, n_ref));
+                        *slot = Some(
+                            inject(i).and_then(|()| run_shard(shard, xs, ys, n_scalar)),
+                        );
                     });
                 }
             });
-            results
-                .into_iter()
-                .map(|r| {
-                    r.unwrap_or_else(|| Err(anyhow!("shard worker never ran")))
-                })
-                .collect::<Result<Vec<_>>>()?
-        };
-        self.reduce_and_apply(b, &outs, hp)
+        }
+        let mut outs = Vec::with_capacity(results.len());
+        for (i, r) in results.into_iter().enumerate() {
+            match r.unwrap_or_else(|| Err(anyhow!("shard worker never ran"))) {
+                Ok(o) => outs.push(o),
+                Err(e) => return Err((i, e)),
+            }
+        }
+        Ok(outs)
+    }
+
+    /// Rebuild shard `i` from scratch: re-fork its engine from the base
+    /// (through the injectable [`EnginePool::fork_one`]), reload the
+    /// grad program, and seed a fresh replica from the host master.
+    fn recover_shard(&mut self, i: usize) -> Result<()> {
+        let engine = EnginePool::fork_one(&self.base, self.faults.as_deref())
+            .context("re-forking a replacement shard engine")?;
+        let grad = engine.load(&self.grad_path)?;
+        let replica = Self::replica(&self.master, &self.grad_state_idx, grad.backend())?;
+        self.shards[i] = Shard { engine, grad, replica };
+        Ok(())
     }
 
     /// Time one sharded step without perturbing the run: the master
@@ -583,6 +700,99 @@ mod tests {
         let b = sharded.step(&x, &y, hp).unwrap();
         assert_eq!(a.loss, b.loss);
         dev.into_host().unwrap().assert_bitwise_eq(sharded.state());
+    }
+
+    /// In-place shard recovery is bitwise invisible: a run whose shard
+    /// engines are killed (and whose first recovery fork also fails)
+    /// ends identical to a run that never faulted.
+    #[test]
+    fn shard_failure_recovers_in_place_bitwise() {
+        use crate::util::fault::{FaultPlan, FaultSiteCfg, FaultsCfg};
+
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let manifest = fam.join("e2train.json");
+        let prog = TrainProgram::load(&engine, &manifest).unwrap();
+        let data = synthetic::generate(10, 64, 8, 4);
+        let hp = StepHyper { lr: 0.03, alpha: 1.5, beta: 0.05 };
+        let init = ModelState::init(&prog.manifest, 9);
+
+        let site = |s: &str, at: u64| FaultSiteCfg {
+            site: s.into(),
+            at,
+            times: 1,
+            after_bytes: None,
+        };
+        let plan = FaultPlan::from_cfg(
+            &FaultsCfg {
+                sites: vec![
+                    site(fault::SITE_SHARD_ENGINE, 2),
+                    site(fault::SITE_POOL_FORK, 1),
+                ],
+                ..Default::default()
+            },
+            9,
+        )
+        .unwrap();
+
+        let mut plain =
+            ShardedTrainer::new(&engine, &manifest, 3, init.clone()).unwrap();
+        let mut faulted =
+            ShardedTrainer::new(&engine, &manifest, 3, init).unwrap();
+        faulted.set_faults(plan.clone());
+
+        let mut sampler = Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 5);
+        let mut sampler2 = Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 5);
+        for step in 0..5 {
+            let (x, y) = sampler.next_batch(&data);
+            let (x2, y2) = sampler2.next_batch(&data);
+            let a = plain.step(&x, &y, hp).unwrap();
+            let b = faulted.step(&x2, &y2, hp).unwrap();
+            assert_eq!(a.loss, b.loss, "step {step}");
+            assert_eq!(a.correct, b.correct, "step {step}");
+        }
+        plain.state().assert_bitwise_eq(faulted.state());
+        assert_eq!(plan.fired(fault::SITE_SHARD_ENGINE), 1, "shard fault never fired");
+        assert_eq!(plan.fired(fault::SITE_POOL_FORK), 1, "fork fault never fired");
+        assert_eq!(faulted.recoveries(), 1);
+        assert_eq!(plain.recoveries(), 0);
+    }
+
+    /// A shard fault that keeps firing past the in-step budget surfaces
+    /// a clean typed error instead of hanging or panicking.
+    #[test]
+    fn unrecoverable_shard_failure_fails_fast() {
+        use crate::util::fault::{FaultPlan, FaultSiteCfg, FaultsCfg};
+
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let manifest = fam.join("sgd32.json");
+        let prog = TrainProgram::load(&engine, &manifest).unwrap();
+        let data = synthetic::generate(10, 32, 8, 2);
+        let mut sampler = Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 3);
+        let (x, y) = sampler.next_batch(&data);
+        let init = ModelState::init(&prog.manifest, 1);
+
+        let plan = FaultPlan::from_cfg(
+            &FaultsCfg {
+                sites: vec![FaultSiteCfg {
+                    site: fault::SITE_SHARD_ENGINE.into(),
+                    at: 1,
+                    times: 100,
+                    after_bytes: None,
+                }],
+                ..Default::default()
+            },
+            0,
+        )
+        .unwrap();
+        let mut t = ShardedTrainer::new(&engine, &manifest, 2, init).unwrap();
+        t.set_faults(plan);
+        let err = t.step(&x, &y, StepHyper::lr(0.05)).unwrap_err();
+        assert!(fault::is_injected(&err), "untyped failure: {err:#}");
+        assert!(format!("{err:#}").contains("in-place recoveries"));
     }
 
     /// A manifest without a grad program (every PJRT family today) must

@@ -44,6 +44,18 @@ pub(crate) struct Route {
     pub t_submit: Instant,
 }
 
+/// The no-hung-ticket backstop: if a route is dropped before its slot
+/// was filled (a worker died holding the batch, a queue path forgot a
+/// failure branch), resolve the request with an explicit error.  On the
+/// normal paths the slot is already filled — or the collector already
+/// failed — by drop time, and [`Collector::abandon`] is a no-op.
+impl Drop for Route {
+    fn drop(&mut self) {
+        self.collector
+            .abandon(self.slot, "serve worker dropped the batch mid-flight");
+    }
+}
+
 struct Staging {
     x: Vec<f32>,
     y: Vec<i32>,
@@ -164,4 +176,43 @@ pub(crate) fn run(
     }
     // Closed: flush the tail so no ticket is left pending.
     staging.flush(batch_q);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::SampleResult;
+
+    fn result() -> SampleResult {
+        SampleResult {
+            logits: vec![0.0],
+            label: 0,
+            pred: 0,
+            correct: true,
+            loss: 0.0,
+            snapshot_version: 1,
+        }
+    }
+
+    #[test]
+    fn dropping_an_unfilled_route_fails_the_request_explicitly() {
+        let c = Collector::new(2);
+        c.fill(0, result());
+        // A worker died holding the batch: its routes drop unfilled.
+        drop(Route { collector: c.clone(), slot: 1, t_submit: Instant::now() });
+        let err = c.wait().unwrap_err().to_string();
+        assert!(err.contains("dropped the batch mid-flight"), "{err}");
+    }
+
+    #[test]
+    fn route_drop_is_a_noop_once_its_slot_was_filled() {
+        let c = Collector::new(1);
+        c.fill(0, result());
+        // The normal path: fill first, then the route drops with the
+        // batch — must not poison the completed request.
+        drop(Route { collector: c.clone(), slot: 0, t_submit: Instant::now() });
+        let r = c.wait().expect("completed request must stay completed");
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].snapshot_version, 1);
+    }
 }

@@ -54,7 +54,8 @@ pub mod worker;
 pub use stats::{ServeStats, StatsCollector};
 
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -65,9 +66,11 @@ use crate::runtime::{
     BackendKind, Engine, EnginePool, Manifest, SnapshotCell, StateSnapshot,
     TrainProgram,
 };
+use crate::util::fault::FaultPlan;
 
 use batcher::MicroBatch;
 use queue::Bounded;
+use worker::{MonitorMsg, WorkerCtx};
 
 /// Service tuning knobs.
 #[derive(Debug, Clone)]
@@ -82,6 +85,13 @@ pub struct ServeCfg {
     pub max_delay: Duration,
     /// Micro-batch size; `None` uses the artifact's `eval_batch`.
     pub micro_batch: Option<usize>,
+    /// Worker deaths the monitor answers with a respawn (fresh engine
+    /// fork) before declaring the pool unrecoverable; past the budget,
+    /// pending and future requests fail fast with an explicit error.
+    pub max_respawns: usize,
+    /// Fault-injection plan (tests): arms the `serve.worker` death site
+    /// and the `pool.fork` respawn-failure site.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServeCfg {
@@ -91,6 +101,8 @@ impl Default for ServeCfg {
             queue_cap: 64,
             max_delay: Duration::from_millis(2),
             micro_batch: None,
+            max_respawns: 4,
+            faults: None,
         }
     }
 }
@@ -153,6 +165,19 @@ impl Collector {
     pub(crate) fn fail(&self, msg: &str) {
         let mut g = self.m.lock().unwrap();
         if g.error.is_none() {
+            g.error = Some(msg.to_string());
+        }
+        self.cv.notify_all();
+    }
+
+    /// A completion route was dropped without filling its slot (a
+    /// worker died holding the batch): resolve the request with an
+    /// explicit error so its [`Ticket::wait`] can never hang.  No-op
+    /// when the slot was already filled or the request already failed —
+    /// the normal paths drop routes *after* resolving them.
+    pub(crate) fn abandon(&self, slot: usize, msg: &str) {
+        let mut g = self.m.lock().unwrap();
+        if g.error.is_none() && slot < g.results.len() && g.results[slot].is_none() {
             g.error = Some(msg.to_string());
         }
         self.cv.notify_all();
@@ -264,12 +289,21 @@ impl ServeClient {
     }
 }
 
-/// The running service: batcher thread + worker pool over one artifact.
+/// The running service: batcher thread + worker pool + a supervision
+/// monitor over one artifact.  The monitor answers worker deaths with
+/// respawns (fresh engine fork, shared program cache) up to
+/// `ServeCfg::max_respawns`; past the budget it drains the batch queue
+/// failing every batch, so clients always get explicit errors, never a
+/// hung [`Ticket::wait`].
 pub struct ServeService {
     queue: Arc<Bounded<Request>>,
     batch_q: Arc<Bounded<MicroBatch>>,
     batcher: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
+    /// Shared with the monitor thread, which pushes respawned workers'
+    /// handles; drained (after the monitor joins) on shutdown.
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    monitor: Option<JoinHandle<()>>,
+    deaths: mpsc::Sender<MonitorMsg>,
     stats: Arc<StatsCollector>,
     /// The publish point workers read snapshots from — kept here so a
     /// registry watcher can be attached after start.
@@ -279,6 +313,9 @@ pub struct ServeService {
     /// expects — the registry watcher refuses checkpoints that don't
     /// match instead of poisoning the snapshot cell.
     state_spec: Arc<StateSpec>,
+    /// Kept so an attached registry watcher shares the service's armed
+    /// fault sites (`registry.read` in particular).
+    faults: Option<Arc<FaultPlan>>,
     hw: usize,
     classes: usize,
     micro_batch: usize,
@@ -364,41 +401,84 @@ impl ServeService {
                 .context("spawning serve batcher")?
         };
 
-        let mut workers = Vec::with_capacity(n_workers);
-        let live = Arc::new(std::sync::atomic::AtomicUsize::new(n_workers));
+        // Respawn source: reference programs are backend-portable, so
+        // replacement workers fork from this engine and share the warm
+        // cache; under real PJRT (client-bound executables) the monitor
+        // builds a fresh isolated client per respawn instead.
+        let respawn_base = match probe.backend() {
+            BackendKind::Reference => Some(engine.fork()?),
+            BackendKind::Pjrt => None,
+        };
+
+        let (deaths, death_rx) = mpsc::channel::<MonitorMsg>();
+        let mut spawned_workers = Vec::with_capacity(n_workers);
+        let live = Arc::new(AtomicUsize::new(n_workers));
         for (i, worker_engine) in pool.into_engines().into_iter().enumerate() {
-            let bq = batch_q.clone();
-            let st = stats.clone();
-            let cl = cell.clone();
-            let lv = live.clone();
-            let manifest = manifest_path.to_path_buf();
-            let spawned = std::thread::Builder::new()
-                .name(format!("e2train-serve-worker{i}"))
-                .spawn(move || worker::run(worker_engine, &manifest, &cl, &bq, &st, &lv));
-            match spawned {
-                Ok(h) => workers.push(h),
+            let ctx = WorkerCtx {
+                engine: worker_engine,
+                manifest: manifest_path.to_path_buf(),
+                cell: cell.clone(),
+                batch_q: batch_q.clone(),
+                stats: stats.clone(),
+                live: live.clone(),
+                faults: cfg.faults.clone(),
+                index: i,
+                deaths: deaths.clone(),
+            };
+            match spawn_worker(ctx) {
+                Ok(h) => spawned_workers.push(h),
                 Err(e) => {
                     // Unwind the threads already running — a parked
                     // batcher holding an open queue would leak forever.
+                    // (The monitor isn't up yet; queued death messages
+                    // die with the channel.)
                     queue.close();
                     let _ = batcher.join();
                     batch_q.close();
-                    for w in workers.drain(..) {
+                    for w in spawned_workers.drain(..) {
                         let _ = w.join();
                     }
                     return Err(e).context("spawning serve worker");
                 }
             }
         }
+        let workers = Arc::new(Mutex::new(spawned_workers));
+
+        // The supervision monitor: receives worker deaths, respawns
+        // within budget, and — once the pool is gone for good — turns
+        // into the batch queue's consumer of last resort so pending and
+        // future requests fail explicitly instead of hanging.
+        let monitor = {
+            let ctx = MonitorCtx {
+                rx: death_rx,
+                budget: cfg.max_respawns,
+                respawn_base,
+                manifest: manifest_path.to_path_buf(),
+                cell: cell.clone(),
+                batch_q: batch_q.clone(),
+                stats: stats.clone(),
+                live: live.clone(),
+                faults: cfg.faults.clone(),
+                deaths: deaths.clone(),
+                workers: workers.clone(),
+            };
+            std::thread::Builder::new()
+                .name("e2train-serve-monitor".into())
+                .spawn(move || run_monitor(ctx))
+                .context("spawning serve monitor")?
+        };
 
         Ok(Self {
             queue,
             batch_q,
             batcher: Some(batcher),
             workers,
+            monitor: Some(monitor),
+            deaths,
             stats,
             backend: probe.backend(),
             state_spec: Arc::new(probe.manifest.state_spec()),
+            faults: cfg.faults,
             cell,
             hw,
             classes,
@@ -413,14 +493,21 @@ impl ServeService {
     /// may live in a different process entirely; this service needs no
     /// in-process trainer.  Checkpoints whose state doesn't match the
     /// served artifact are rejected (logged, snapshot kept).  The
-    /// watcher stops when the returned handle drops.
+    /// watcher stops when the returned handle drops.  Failed polls
+    /// (torn manifest read mid-publish, a partially copied file) are
+    /// absorbed: the current snapshot keeps serving, the retry is
+    /// counted in [`ServeStats::registry_retries`], and consecutive
+    /// failures back the poll interval off exponentially (capped at
+    /// 8× `poll`).
     pub fn watch_registry(&self, dir: &Path, poll: Duration) -> RegistryWatcher {
-        watch_registry(
+        watch_registry_opts(
             self.cell.clone(),
             self.backend,
             self.state_spec.clone(),
             dir,
             poll,
+            self.faults.clone(),
+            Some(self.stats.clone()),
         )
     }
 
@@ -453,13 +540,141 @@ impl ServeService {
         // Order matters: close the request queue first so the batcher
         // drains + flushes its tail, join it, then close the batch
         // queue so workers drain the flushed batches before exiting.
+        // The monitor stops next (an explicit Shutdown message; the
+        // closed batch queue also unblocks its drain-of-last-resort),
+        // and only then are worker handles drained — the monitor is the
+        // one other pusher into that vec, so after it joins the list is
+        // final.
         self.queue.close();
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
         }
         self.batch_q.close();
-        for w in self.workers.drain(..) {
+        let _ = self.deaths.send(MonitorMsg::Shutdown);
+        if let Some(m) = self.monitor.take() {
+            let _ = m.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.workers.lock().unwrap().drain(..).collect();
+        for w in handles {
             let _ = w.join();
+        }
+    }
+}
+
+/// Spawn one worker thread around its context.
+fn spawn_worker(ctx: WorkerCtx) -> std::io::Result<JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(format!("e2train-serve-worker{}", ctx.index))
+        .spawn(move || worker::run(ctx))
+}
+
+/// Everything the supervision monitor owns.
+struct MonitorCtx {
+    rx: mpsc::Receiver<MonitorMsg>,
+    /// Remaining respawns before the pool is declared unrecoverable.
+    budget: usize,
+    /// Fork source for replacement engines (None = isolated clients).
+    respawn_base: Option<Engine>,
+    manifest: PathBuf,
+    cell: Arc<SnapshotCell>,
+    batch_q: Arc<Bounded<MicroBatch>>,
+    stats: Arc<StatsCollector>,
+    live: Arc<AtomicUsize>,
+    faults: Option<Arc<FaultPlan>>,
+    deaths: mpsc::Sender<MonitorMsg>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+/// Monitor thread body: respawn dead workers within budget; once no
+/// consumer is left, drain the batch queue failing every batch (pending
+/// *and* future — the drain blocks on the open queue) until shutdown
+/// closes it.
+fn run_monitor(mut ctx: MonitorCtx) {
+    while let Ok(msg) = ctx.rx.recv() {
+        let (index, reason) = match msg {
+            MonitorMsg::Shutdown => return,
+            MonitorMsg::Died { index, reason } => (index, reason),
+        };
+        if ctx.budget > 0 {
+            ctx.budget -= 1;
+            match respawn_worker(&ctx, index) {
+                Ok(handle) => {
+                    ctx.stats.record_respawn();
+                    ctx.workers.lock().unwrap().push(handle);
+                    eprintln!(
+                        "[serve] worker {index} died ({reason}); respawned \
+                         ({} respawn(s) left)",
+                        ctx.budget
+                    );
+                    continue;
+                }
+                Err(e) => eprintln!(
+                    "[serve] worker {index} died ({reason}) and its respawn \
+                     failed ({e:#})"
+                ),
+            }
+        } else {
+            eprintln!(
+                "[serve] worker {index} died ({reason}); respawn budget exhausted"
+            );
+        }
+        if ctx.live.load(Ordering::Acquire) == 0 {
+            // Consumer of last resort: nobody else pops, so without
+            // this the batcher would eventually block in push and every
+            // pending Ticket::wait would hang.  Exits when shutdown
+            // closes the queue.
+            while let Some(mb) = ctx.batch_q.pop() {
+                worker::fail_batch(&mb, "all serve workers stopped");
+            }
+        }
+    }
+}
+
+/// Build a replacement engine (a fork sharing the warm cache, or a
+/// fresh isolated client) and spawn a worker on it.  The fork goes
+/// through the injectable [`EnginePool::fork_one`] and is retried a
+/// couple of times so one transient failure doesn't burn the pool.
+fn respawn_worker(ctx: &MonitorCtx, index: usize) -> Result<JoinHandle<()>> {
+    const FORK_TRIES: usize = 3;
+    let mut engine = None;
+    for attempt in 0..FORK_TRIES {
+        let forked = match &ctx.respawn_base {
+            Some(base) => EnginePool::fork_one(base, ctx.faults.as_deref()),
+            None => Engine::cpu(),
+        };
+        match forked {
+            Ok(e) => {
+                engine = Some(e);
+                break;
+            }
+            Err(e) if attempt + 1 < FORK_TRIES => {
+                eprintln!("[serve] respawn fork failed ({e:#}); retrying");
+            }
+            Err(e) => return Err(e.context("forking a replacement worker engine")),
+        }
+    }
+    let engine = engine.expect("loop either set an engine or returned");
+    // Count the replacement as live *before* it runs: a gap would let a
+    // concurrent death observe live == 0 and start the terminal drain
+    // while a healthy worker is on the way up.
+    ctx.live.fetch_add(1, Ordering::AcqRel);
+    let wctx = WorkerCtx {
+        engine,
+        manifest: ctx.manifest.clone(),
+        cell: ctx.cell.clone(),
+        batch_q: ctx.batch_q.clone(),
+        stats: ctx.stats.clone(),
+        live: ctx.live.clone(),
+        faults: ctx.faults.clone(),
+        index,
+        deaths: ctx.deaths.clone(),
+    };
+    match spawn_worker(wctx) {
+        Ok(h) => Ok(h),
+        Err(e) => {
+            ctx.live.fetch_sub(1, Ordering::AcqRel);
+            Err(anyhow::Error::new(e).context("spawning a replacement serve worker"))
         }
     }
 }
@@ -492,26 +707,43 @@ impl RegistryWatcher {
         spec: Arc<StateSpec>,
         dir: PathBuf,
         poll: Duration,
+        faults: Option<Arc<FaultPlan>>,
+        stats: Option<Arc<StatsCollector>>,
     ) -> Self {
         let stop = Arc::new((Mutex::new(false), Condvar::new()));
         let stop2 = stop.clone();
         let handle = std::thread::Builder::new()
             .name("e2train-ckpt-watcher".into())
             .spawn(move || {
-                let registry = CheckpointRegistry::new(dir, RetentionCfg::default());
+                let mut registry =
+                    CheckpointRegistry::new(dir, RetentionCfg::default());
+                if let Some(p) = faults {
+                    registry = registry.with_faults(p);
+                }
                 // (iter, hash) of the last checkpoint published into the
                 // cell — a re-published iteration with new content (new
                 // hash) still hot-loads.
                 let mut seen: Option<(u64, String)> = None;
                 let mut last_err = String::new();
+                // Consecutive failed polls: backs the poll interval off
+                // exponentially (1×, 2×, 4×, 8× capped) so a registry
+                // that is down for a while isn't hammered at full rate.
+                let mut consec_errs: u32 = 0;
                 loop {
                     match watch_tick(&registry, &cell, backend, &spec, &mut seen) {
-                        Ok(()) => last_err.clear(),
+                        Ok(()) => {
+                            last_err.clear();
+                            consec_errs = 0;
+                        }
                         Err(e) => {
                             // Transient by assumption (mid-publish read,
                             // partial copy): keep serving the snapshot we
                             // have and retry next tick.  Log once per
                             // distinct cause, not once per poll.
+                            consec_errs += 1;
+                            if let Some(s) = &stats {
+                                s.record_registry_retry();
+                            }
                             let msg = format!("{e:#}");
                             if msg != last_err {
                                 eprintln!("[serve] registry watch: {msg}");
@@ -519,10 +751,13 @@ impl RegistryWatcher {
                             }
                         }
                     }
+                    // First retry comes at the normal poll rate (a torn
+                    // read usually heals immediately); repeats back off.
+                    let wait = poll * 2u32.pow(consec_errs.saturating_sub(1).min(3));
                     let (lock, cv) = &*stop2;
                     let mut stopped = lock.lock().unwrap();
                     while !*stopped {
-                        let (g, timeout) = cv.wait_timeout(stopped, poll).unwrap();
+                        let (g, timeout) = cv.wait_timeout(stopped, wait).unwrap();
                         stopped = g;
                         if timeout.timed_out() {
                             break;
@@ -611,5 +846,21 @@ pub fn watch_registry(
     dir: &Path,
     poll: Duration,
 ) -> RegistryWatcher {
-    RegistryWatcher::spawn(cell, backend, spec, dir.to_path_buf(), poll)
+    watch_registry_opts(cell, backend, spec, dir, poll, None, None)
+}
+
+/// [`watch_registry`] with fault-injection and telemetry hooks: `faults`
+/// arms the registry's `registry.read` site (torn manifest reads), and
+/// failed polls are counted into `stats` as
+/// [`ServeStats::registry_retries`].
+pub fn watch_registry_opts(
+    cell: Arc<SnapshotCell>,
+    backend: BackendKind,
+    spec: Arc<StateSpec>,
+    dir: &Path,
+    poll: Duration,
+    faults: Option<Arc<FaultPlan>>,
+    stats: Option<Arc<StatsCollector>>,
+) -> RegistryWatcher {
+    RegistryWatcher::spawn(cell, backend, spec, dir.to_path_buf(), poll, faults, stats)
 }

@@ -38,6 +38,11 @@ struct StatsInner {
     /// expired before dispatch (completed with an `expired` error
     /// instead of burning a worker eval slot).
     expired: usize,
+    /// Dead workers the monitor replaced with a fresh engine fork.
+    respawns: usize,
+    /// Registry-watcher polls that failed (torn manifest read, partial
+    /// copy) and were retried on a later tick.
+    registry_retries: usize,
     /// Completion-window bounds for throughput.
     first_done: Option<Instant>,
     last_done: Option<Instant>,
@@ -66,6 +71,16 @@ impl StatsCollector {
         self.inner.lock().unwrap().expired += n;
     }
 
+    /// One dead worker replaced by the supervision monitor.
+    pub fn record_respawn(&self) {
+        self.inner.lock().unwrap().respawns += 1;
+    }
+
+    /// One failed registry-watcher poll (retried next tick).
+    pub fn record_registry_retry(&self) {
+        self.inner.lock().unwrap().registry_retries += 1;
+    }
+
     /// One completed sample submitted at `t_submit`.
     pub fn record_sample(&self, t_submit: Instant) {
         let now = Instant::now();
@@ -90,7 +105,17 @@ impl StatsCollector {
     /// cloned under the lock but sorted outside it, so workers are
     /// never blocked behind the sort.
     pub fn snapshot(&self) -> ServeStats {
-        let (mut lat, samples, latency_sum_s, batches, occupancy_sum, expired, wall_s) = {
+        let (
+            mut lat,
+            samples,
+            latency_sum_s,
+            batches,
+            occupancy_sum,
+            expired,
+            respawns,
+            registry_retries,
+            wall_s,
+        ) = {
             let g = self.inner.lock().unwrap();
             (
                 g.latencies.clone(),
@@ -99,6 +124,8 @@ impl StatsCollector {
                 g.batches,
                 g.occupancy_sum,
                 g.expired,
+                g.respawns,
+                g.registry_retries,
                 match (g.first_done, g.last_done) {
                     (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
                     _ => 0.0,
@@ -110,6 +137,8 @@ impl StatsCollector {
             samples,
             batches,
             expired,
+            worker_respawns: respawns,
+            registry_retries,
             occupancy_mean: if batches == 0 {
                 0.0
             } else {
@@ -152,6 +181,12 @@ pub struct ServeStats {
     /// Samples completed with an `expired` error instead of being
     /// dispatched (client deadline passed while queued).
     pub expired: usize,
+    /// Dead workers the supervision monitor replaced within its
+    /// respawn budget ([`super::ServeCfg::max_respawns`]).
+    pub worker_respawns: usize,
+    /// Failed registry-watcher polls that were absorbed by retrying on
+    /// a later tick (the served snapshot is kept meanwhile).
+    pub registry_retries: usize,
     /// Mean real samples per executed micro-batch (> 1 means requests
     /// actually coalesced).
     pub occupancy_mean: f64,
@@ -189,10 +224,15 @@ mod tests {
         let t0 = Instant::now() - Duration::from_millis(10);
         c.record_sample(t0);
         c.record_sample(t0);
+        c.record_respawn();
+        c.record_registry_retry();
+        c.record_registry_retry();
         let s = c.snapshot();
         assert_eq!(s.samples, 2);
         assert_eq!(s.batches, 2);
         assert_eq!(s.expired, 3);
+        assert_eq!(s.worker_respawns, 1);
+        assert_eq!(s.registry_retries, 2);
         assert!((s.occupancy_mean - 3.0).abs() < 1e-12);
         assert!(s.latency_p50_s >= 0.010);
         assert!(s.latency_p99_s >= s.latency_p50_s);

@@ -8,88 +8,130 @@
 //! [`crate::runtime::StateSnapshot`] — a mid-flight publish swaps state
 //! between batches without draining the queue — executes the eval
 //! program, slices logits rows, and completes each sample's collector.
+//!
+//! Failure containment is layered: per-batch panics are caught and fail
+//! that batch's collectors; a death that escapes the batch level (an
+//! artifact that won't load, a panic outside batch isolation, an
+//! injected `serve.worker` fault) reports to the service monitor
+//! (`super::run_monitor`), which respawns the worker within budget.  A
+//! batch a dying worker takes down with it resolves through
+//! [`super::batcher::Route`]'s drop hook — clients get an explicit
+//! error, never a hung `Ticket::wait`.
 
-use std::path::Path;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 
 use crate::runtime::{
     row_argmax, row_rank, row_softmax_loss, Engine, SnapshotCell, TensorData,
     TrainProgram,
 };
+use crate::util::fault::{self, FaultPlan};
 
 use super::batcher::MicroBatch;
-use super::stats::StatsCollector;
 use super::queue::Bounded;
+use super::stats::StatsCollector;
 use super::SampleResult;
 
-fn fail_batch(mb: &MicroBatch, msg: &str) {
+/// Everything one worker thread owns.
+pub(crate) struct WorkerCtx {
+    pub engine: Engine,
+    pub manifest: PathBuf,
+    pub cell: Arc<SnapshotCell>,
+    pub batch_q: Arc<Bounded<MicroBatch>>,
+    pub stats: Arc<StatsCollector>,
+    /// Workers still consuming the batch queue (respawns re-increment).
+    pub live: Arc<AtomicUsize>,
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Stable worker slot (respawns reuse the dead worker's index).
+    pub index: usize,
+    /// Death reports to the service monitor.
+    pub deaths: mpsc::Sender<MonitorMsg>,
+}
+
+/// Messages into the service monitor thread.
+pub(crate) enum MonitorMsg {
+    /// A worker stopped consuming for a reason other than queue close.
+    Died { index: usize, reason: String },
+    /// Graceful shutdown: stop monitoring, respawn nothing.
+    Shutdown,
+}
+
+/// Why a worker's serve loop ended.
+enum WorkerExit {
+    /// Normal shutdown: the batch queue closed and drained.
+    QueueClosed,
+    /// Abnormal: load failure, an escaped panic, or an injected death.
+    Died(String),
+}
+
+pub(crate) fn fail_batch(mb: &MicroBatch, msg: &str) {
     for r in &mb.routes {
         r.collector.fail(msg);
     }
 }
 
-/// Worker thread body: drains the batch queue until it closes.
-///
-/// `live` counts workers still consuming the batch queue.  A worker
-/// that stops early (artifact load failure, or a panic that escaped
-/// the per-batch isolation) simply exits while healthy workers remain
-/// — they keep serving.  Only the **last** consumer out falls back to
-/// a drain-and-fail loop: with nobody popping, the batcher could block
-/// forever in `push` and every pending `Ticket::wait` would hang.
-pub(crate) fn run(
-    engine: Engine,
-    manifest_path: &Path,
-    cell: &SnapshotCell,
-    batch_q: &Bounded<MicroBatch>,
-    stats: &StatsCollector,
-    live: &AtomicUsize,
-) {
-    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        serve_loop(&engine, manifest_path, cell, batch_q, stats)
-    }));
-    if live.fetch_sub(1, Ordering::AcqRel) == 1 {
-        // Last consumer out: on a normal shutdown the queue is closed
-        // and drained so this is a no-op; on an abnormal exit it keeps
-        // the pipeline failing fast instead of deadlocking.
-        while let Some(mb) = batch_q.pop() {
-            fail_batch(&mb, "all serve workers stopped");
-        }
+/// Worker thread body: drains the batch queue until it closes, then
+/// reports how it went.  The `live` decrement happens before the death
+/// report so the monitor's "is anybody still consuming?" check is
+/// accurate by the time it processes the message.
+pub(crate) fn run(ctx: WorkerCtx) {
+    let exit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        serve_loop(&ctx)
+    }))
+    .unwrap_or_else(|p| WorkerExit::Died(panic_message(p.as_ref())));
+    ctx.live.fetch_sub(1, Ordering::AcqRel);
+    if let WorkerExit::Died(reason) = exit {
+        // A closed channel means the monitor is already gone (service
+        // tear-down); nothing left to notify.
+        let _ = ctx.deaths.send(MonitorMsg::Died { index: ctx.index, reason });
     }
-    let _ = result;
 }
 
-fn serve_loop(
-    engine: &Engine,
-    manifest_path: &Path,
-    cell: &SnapshotCell,
-    batch_q: &Bounded<MicroBatch>,
-    stats: &StatsCollector,
-) {
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("worker panicked: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("worker panicked: {s}")
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+fn serve_loop(ctx: &WorkerCtx) -> WorkerExit {
     // Eval-only load: serve workers never step, so they skip the
     // train-program compile entirely — under real PJRT (isolated
     // per-worker engines) that was a full wasted compile per worker.
-    let prog = match TrainProgram::load_eval_only(engine, manifest_path) {
+    let prog = match TrainProgram::load_eval_only(&ctx.engine, &ctx.manifest) {
         Ok(p) => p,
-        Err(e) => {
-            // Can't serve anything: exit and let the remaining workers
-            // (or the last-consumer drain in `run`) handle the queue.
-            eprintln!("[serve] worker could not load artifact: {e:#}");
-            return;
-        }
+        Err(e) => return WorkerExit::Died(format!("could not load artifact: {e:#}")),
     };
 
-    while let Some(mb) = batch_q.pop() {
+    while let Some(mb) = ctx.batch_q.pop() {
+        // Injected worker death: die *holding* the popped batch, the
+        // way a real crash would.  Dropping it resolves its tickets
+        // through Route's drop hook — the harness pins that contract.
+        if let Some(p) = &ctx.faults {
+            if p.hit(fault::SITE_SERVE_WORKER).is_some() {
+                drop(mb);
+                return WorkerExit::Died(format!(
+                    "injected fault at {}",
+                    fault::SITE_SERVE_WORKER
+                ));
+            }
+        }
         // Per-batch panic isolation: the batch is only borrowed by the
         // closure, so if execution panics (e.g. a published snapshot
         // with mismatched shapes) we still own it and can fail its
         // collectors — no client may ever hang in Ticket::wait.
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            process_batch(&prog, &mb, cell, stats)
+            process_batch(&prog, &mb, &ctx.cell, &ctx.stats)
         }));
         if r.is_err() {
             fail_batch(&mb, "serve worker panicked executing the batch");
         }
     }
+    WorkerExit::QueueClosed
 }
 
 fn process_batch(

@@ -1,0 +1,367 @@
+//! Deterministic fault injection (`cfg.faults`).
+//!
+//! A [`FaultPlan`] arms named **sites** across the stack — engine
+//! `train_step` errors, prefetch worker panics, checkpoint sink I/O
+//! errors after N bytes, torn `MANIFEST` reads, shard engine loss,
+//! serve worker death, transient engine-fork failures — with a
+//! schedule derived from the run RNG, so every injected failure is
+//! bitwise reproducible.  Each site counts *hits* (times execution
+//! passes through it) and fires at a configured or seeded-random hit,
+//! for a configured number of consecutive hits.
+//!
+//! The plan is a plain `Arc` handle threaded explicitly through the
+//! subsystems that honour it (trainer, backends, prefetcher, registry,
+//! serve workers) — there is no process-global state, so parallel
+//! tests with different plans never interfere.  Injected errors carry
+//! a typed [`InjectedFault`] in their chain; the supervisor
+//! (`coordinator::supervisor`) classifies those as transient by
+//! construction.
+
+use std::collections::BTreeMap;
+use std::io::{self, Write};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// The trainer's per-iteration `train_step` call fails.
+pub const SITE_TRAIN_STEP: &str = "engine.train_step";
+/// The prefetch worker panics while assembling a batch.
+pub const SITE_PREFETCH: &str = "data.prefetch";
+/// The checkpoint sink returns an I/O error after `after_bytes` bytes.
+pub const SITE_CKPT_SINK: &str = "checkpoint.sink";
+/// A registry `MANIFEST.json` read comes back torn/corrupt.
+pub const SITE_REGISTRY_READ: &str = "registry.read";
+/// One shard's engine fails mid-step (recovered in place).
+pub const SITE_SHARD_ENGINE: &str = "shard.engine";
+/// A serve worker dies while holding a micro-batch.
+pub const SITE_SERVE_WORKER: &str = "serve.worker";
+/// An engine fork (shard recovery / worker respawn) fails transiently.
+pub const SITE_POOL_FORK: &str = "pool.fork";
+
+/// Every site name the config parser and plan builder accept.
+pub const KNOWN_SITES: &[&str] = &[
+    SITE_TRAIN_STEP,
+    SITE_PREFETCH,
+    SITE_CKPT_SINK,
+    SITE_REGISTRY_READ,
+    SITE_SHARD_ENGINE,
+    SITE_SERVE_WORKER,
+    SITE_POOL_FORK,
+];
+
+/// One armed site in `cfg.faults.sites`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSiteCfg {
+    /// One of [`KNOWN_SITES`].
+    pub site: String,
+    /// 1-based hit index at which the site starts firing; `0` derives
+    /// the index from the seeded schedule RNG (still deterministic).
+    pub at: u64,
+    /// Number of consecutive hits that fire (default 1).
+    pub times: u64,
+    /// `checkpoint.sink` only: the sink accepts this many bytes before
+    /// erroring (default: fail on the first write).
+    pub after_bytes: Option<u64>,
+}
+
+/// The `faults` config section: injection sites plus the supervised
+/// recovery policy (`coordinator::supervisor`).  Excluded from the
+/// determinism fingerprint — a recovered run is bitwise identical to
+/// the fault-free run, so it must also *fingerprint* identically.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultsCfg {
+    pub sites: Vec<FaultSiteCfg>,
+    /// Supervisor retry budget: restore attempts after the first run.
+    pub max_retries: u64,
+    /// Base supervisor backoff in milliseconds; doubles per consecutive
+    /// failure, plus deterministic jitter from the seeded RNG.
+    pub backoff_ms: u64,
+    /// XOR'd with the run seed to derive the injection schedule.
+    pub seed: u64,
+}
+
+impl Default for FaultsCfg {
+    fn default() -> Self {
+        FaultsCfg { sites: Vec::new(), max_retries: 4, backoff_ms: 10, seed: 0 }
+    }
+}
+
+impl FaultsCfg {
+    /// True when at least one site is armed.
+    pub fn enabled(&self) -> bool {
+        !self.sites.is_empty()
+    }
+}
+
+/// Typed marker carried in the chain of every injected error, so the
+/// supervisor can classify injections as transient without string
+/// matching.
+#[derive(Debug, Clone)]
+pub struct InjectedFault {
+    pub site: String,
+}
+
+impl InjectedFault {
+    pub fn new(site: &str) -> Self {
+        InjectedFault { site: site.to_string() }
+    }
+}
+
+impl std::fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected fault at {}", self.site)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// Returned by [`FaultPlan::hit`] when the site fires: `seq` is the
+/// 0-based firing ordinal at that site (lets callers vary the victim
+/// deterministically, e.g. which shard dies).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultShot {
+    pub seq: u64,
+    pub after_bytes: Option<u64>,
+}
+
+#[derive(Debug)]
+struct SiteState {
+    fire_at: u64,
+    times: u64,
+    hits: u64,
+    fired: u64,
+    after_bytes: Option<u64>,
+}
+
+/// A compiled, shareable injection schedule.  All methods take `&self`;
+/// per-site counters live behind one mutex, so the same plan can be
+/// hit from the trainer thread, prefetch worker, checkpoint writer and
+/// serve workers concurrently.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    sites: Mutex<BTreeMap<String, SiteState>>,
+}
+
+impl FaultPlan {
+    /// Compile a plan.  Sites with `at == 0` draw their firing hit from
+    /// `run_seed ^ cfg.seed` (window 1..=8), so "fail somewhere early"
+    /// schedules are still reproducible.
+    pub fn from_cfg(cfg: &FaultsCfg, run_seed: u64) -> Result<Arc<Self>> {
+        let mut rng = Rng::seed_from_u64(run_seed ^ cfg.seed ^ 0xfa17_5eed);
+        let mut sites = BTreeMap::new();
+        for s in &cfg.sites {
+            if !KNOWN_SITES.contains(&s.site.as_str()) {
+                bail!(
+                    "unknown fault site '{}' (known sites: {})",
+                    s.site,
+                    KNOWN_SITES.join(", ")
+                );
+            }
+            if s.times == 0 {
+                bail!("fault site '{}' arms zero firings (times = 0)", s.site);
+            }
+            let fire_at = if s.at == 0 { 1 + rng.below(8) as u64 } else { s.at };
+            let state = SiteState {
+                fire_at,
+                times: s.times,
+                hits: 0,
+                fired: 0,
+                after_bytes: s.after_bytes,
+            };
+            if sites.insert(s.site.clone(), state).is_some() {
+                bail!("fault site '{}' is armed twice", s.site);
+            }
+        }
+        Ok(Arc::new(FaultPlan { sites: Mutex::new(sites) }))
+    }
+
+    /// True when any site is armed (unarmed plans make every check a
+    /// cheap no-op).
+    pub fn armed(&self) -> bool {
+        !self.lock().is_empty()
+    }
+
+    /// Count one pass through `site`; `Some(shot)` when this hit fires.
+    pub fn hit(&self, site: &str) -> Option<FaultShot> {
+        let mut g = self.lock();
+        let st = g.get_mut(site)?;
+        st.hits += 1;
+        if st.hits >= st.fire_at && st.hits < st.fire_at + st.times {
+            let seq = st.fired;
+            st.fired += 1;
+            Some(FaultShot { seq, after_bytes: st.after_bytes })
+        } else {
+            None
+        }
+    }
+
+    /// [`hit`](Self::hit) as a `Result`: `Err(InjectedFault)` when the
+    /// site fires (auto-converts into `anyhow::Error` via `?`).
+    pub fn check(&self, site: &str) -> std::result::Result<(), InjectedFault> {
+        match self.hit(site) {
+            Some(_) => Err(InjectedFault::new(site)),
+            None => Ok(()),
+        }
+    }
+
+    /// How many times `site` has fired so far.
+    pub fn fired(&self, site: &str) -> u64 {
+        self.lock().get(site).map(|s| s.fired).unwrap_or(0)
+    }
+
+    /// Total firings across all sites.
+    pub fn fired_total(&self) -> u64 {
+        self.lock().values().map(|s| s.fired).sum()
+    }
+
+    /// A counter check must never be lost to a poisoned mutex (a panic
+    /// between `lock()` and drop can only leave fully-written counter
+    /// state behind).
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, SiteState>> {
+        self.sites.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// True when `err`'s chain carries an [`InjectedFault`] (works through
+/// `anyhow` contexts and custom `io::Error` payloads).
+pub fn is_injected(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.downcast_ref::<InjectedFault>().is_some())
+}
+
+/// An `io::Write` adapter that accepts `budget` bytes and then fails
+/// every write with an [`InjectedFault`]-carrying error — the
+/// `checkpoint.sink` site ("disk full after N bytes").
+pub struct FailingWriter<W> {
+    inner: W,
+    left: u64,
+    tripped: bool,
+}
+
+impl<W: Write> FailingWriter<W> {
+    pub fn new(inner: W, budget: Option<u64>) -> Self {
+        FailingWriter { inner, left: budget.unwrap_or(0), tripped: false }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: Write> Write for FailingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.tripped || buf.len() as u64 > self.left {
+            self.tripped = true;
+            return Err(io::Error::other(InjectedFault::new(SITE_CKPT_SINK)));
+        }
+        self.left -= buf.len() as u64;
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn site(name: &str, at: u64, times: u64) -> FaultSiteCfg {
+        FaultSiteCfg { site: name.into(), at, times, after_bytes: None }
+    }
+
+    #[test]
+    fn explicit_schedule_fires_at_the_configured_hits() {
+        let cfg = FaultsCfg {
+            sites: vec![site(SITE_TRAIN_STEP, 3, 2)],
+            ..Default::default()
+        };
+        let plan = FaultPlan::from_cfg(&cfg, 0).unwrap();
+        assert!(plan.armed());
+        let fired: Vec<bool> =
+            (0..6).map(|_| plan.hit(SITE_TRAIN_STEP).is_some()).collect();
+        assert_eq!(fired, [false, false, true, true, false, false]);
+        assert_eq!(plan.fired(SITE_TRAIN_STEP), 2);
+        assert_eq!(plan.fired_total(), 2);
+        // shots number their firings
+        let cfg = FaultsCfg {
+            sites: vec![site(SITE_SHARD_ENGINE, 1, 3)],
+            ..Default::default()
+        };
+        let plan = FaultPlan::from_cfg(&cfg, 0).unwrap();
+        let seqs: Vec<u64> =
+            (0..3).map(|_| plan.hit(SITE_SHARD_ENGINE).unwrap().seq).collect();
+        assert_eq!(seqs, [0, 1, 2]);
+    }
+
+    #[test]
+    fn derived_schedule_is_seed_deterministic() {
+        let cfg = FaultsCfg {
+            sites: vec![site(SITE_PREFETCH, 0, 1), site(SITE_TRAIN_STEP, 0, 1)],
+            ..Default::default()
+        };
+        let fire_pattern = |seed: u64| -> Vec<bool> {
+            let plan = FaultPlan::from_cfg(&cfg, seed).unwrap();
+            (0..10).map(|_| plan.hit(SITE_PREFETCH).is_some()).collect()
+        };
+        assert_eq!(fire_pattern(7), fire_pattern(7), "same seed, same schedule");
+        assert_eq!(fire_pattern(7).iter().filter(|f| **f).count(), 1);
+        assert!(fire_pattern(7)[..8].contains(&true), "derived hit is in 1..=8");
+    }
+
+    #[test]
+    fn unarmed_sites_never_fire_and_unknown_sites_are_rejected() {
+        let plan = FaultPlan::from_cfg(&FaultsCfg::default(), 0).unwrap();
+        assert!(!plan.armed());
+        assert!(plan.hit(SITE_TRAIN_STEP).is_none());
+        assert!(plan.check(SITE_REGISTRY_READ).is_ok());
+
+        let bad = FaultsCfg { sites: vec![site("disk.melt", 1, 1)], ..Default::default() };
+        let err = FaultPlan::from_cfg(&bad, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("disk.melt"));
+        let dup = FaultsCfg {
+            sites: vec![site(SITE_PREFETCH, 1, 1), site(SITE_PREFETCH, 2, 1)],
+            ..Default::default()
+        };
+        assert!(FaultPlan::from_cfg(&dup, 0).is_err());
+        let zero = FaultsCfg { sites: vec![site(SITE_PREFETCH, 1, 0)], ..Default::default() };
+        assert!(FaultPlan::from_cfg(&zero, 0).is_err());
+    }
+
+    #[test]
+    fn injected_errors_are_typed_through_anyhow_chains() {
+        let cfg = FaultsCfg {
+            sites: vec![site(SITE_REGISTRY_READ, 1, 1)],
+            ..Default::default()
+        };
+        let plan = FaultPlan::from_cfg(&cfg, 0).unwrap();
+        let err: anyhow::Error = plan
+            .check(SITE_REGISTRY_READ)
+            .map_err(anyhow::Error::new)
+            .unwrap_err()
+            .context("reading MANIFEST.json");
+        assert!(is_injected(&err), "marker lost through context: {err:#}");
+        assert!(format!("{err:#}").contains(SITE_REGISTRY_READ));
+        let real = anyhow::anyhow!("disk actually full");
+        assert!(!is_injected(&real));
+    }
+
+    #[test]
+    fn failing_writer_trips_after_its_byte_budget() {
+        let mut w = FailingWriter::new(Vec::new(), Some(8));
+        assert_eq!(w.write(b"1234").unwrap(), 4);
+        assert_eq!(w.write(b"5678").unwrap(), 4);
+        let err = w.write(b"9").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Other);
+        // the typed marker survives io::Error -> anyhow conversion
+        let any = anyhow::Error::new(err).context("writing checkpoint");
+        assert!(is_injected(&any), "marker lost: {any:#}");
+        assert_eq!(w.into_inner(), b"12345678");
+
+        // no budget: the very first write fails
+        let mut w = FailingWriter::new(Vec::new(), None);
+        assert!(w.write(b"x").is_err());
+    }
+}

@@ -9,9 +9,11 @@
 //! * [`prop`] — seeded property testing (replaces proptest)
 //! * [`tmp`] — scratch dirs for tests (replaces tempfile)
 //! * [`hash`] — FNV-1a 64 content hashing (checkpoint files/fingerprints)
+//! * [`fault`] — deterministic fault injection (seeded, named sites)
 
 pub mod bench;
 pub mod cli;
+pub mod fault;
 pub mod hash;
 pub mod json;
 pub mod perf;

@@ -68,17 +68,29 @@ fn every_shipped_launcher_parses_and_validates() {
 fn launcher_set_covers_shards_checkpoint_and_backend_knobs() {
     let mut has_shards = false;
     let mut has_checkpoint = false;
+    let mut has_faults = false;
     let mut backends = Vec::new();
     for p in launcher_paths() {
         let cfg = RunCfg::load(&p).unwrap();
         has_shards |= cfg.shards > 0;
         has_checkpoint |= cfg.checkpoint.every > 0;
+        // a launcher arming faults must also checkpoint, or the
+        // supervisor can only ever restart from scratch
+        if cfg.faults.enabled() {
+            has_faults = true;
+            assert!(
+                cfg.checkpoint.every > 0,
+                "{}: arms `faults` without checkpointing",
+                p.display()
+            );
+        }
         if let Some(b) = cfg.backend {
             backends.push(b);
         }
     }
     assert!(has_shards, "no launcher exercises `shards`");
     assert!(has_checkpoint, "no launcher exercises `checkpoint.every`");
+    assert!(has_faults, "no launcher arms `faults` (supervised recovery)");
     // Both an explicit single-executor spelling and the sharded one.
     assert!(
         backends.contains(&BackendChoice::Host),

@@ -1,0 +1,452 @@
+//! The fault-injection matrix (reference backend, runs everywhere):
+//! supervised recovery must be **invisible** in everything the
+//! determinism contract covers.
+//!
+//! 1. **Bitwise recovery** — a supervised run with deterministic faults
+//!    injected at every armed site (`engine.train_step`,
+//!    `data.prefetch`, `checkpoint.sink`, `registry.read`,
+//!    `shard.engine` + `pool.fork`) ends with exactly the metrics
+//!    trace, energy ledger and final model state of the fault-free run
+//!    of the same config — across the host, resident(+prefetch) and
+//!    sharded (S ∈ {2, 3}) execution layouts.  Only
+//!    `RunMetrics::recoveries` (outside the contract) may differ.
+//! 2. **Fatal means fatal** — contradictions no retry can fix (a
+//!    checkpoint fingerprint from another run, an exhausted retry
+//!    budget) fail fast with the original error, never loop.
+//! 3. **Serve resilience** — a worker death fails only the batch it
+//!    held (explicit error, no hung ticket), the monitor respawns
+//!    within budget, and past the budget every request still fails
+//!    explicitly.  The registry watcher absorbs torn manifest reads and
+//!    counts the retries.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use e2train::config::{CkptCfg, DataCfg, RunCfg};
+use e2train::coordinator::{RunOutcome, Trainer};
+use e2train::data::synthetic;
+use e2train::runtime::{
+    write_reference_family, Engine, ModelState, RefFamilySpec, SnapshotCell,
+    StateSnapshot, TrainProgram,
+};
+use e2train::serve::{ServeCfg, ServeService};
+use e2train::util::fault::{self, FaultPlan, FaultSiteCfg, FaultsCfg};
+use e2train::util::tmp::TempDir;
+
+const FAM: &str = "refmlp-tiny";
+
+fn ref_cfg(artifacts: &Path, iters: u64) -> RunCfg {
+    let mut cfg = RunCfg::quick(FAM, "e2train", iters);
+    cfg.artifacts_dir = artifacts.to_path_buf();
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 128, n_test: 40, seed: 0 };
+    cfg.eval_every = 8;
+    cfg
+}
+
+fn with_ckpt(mut cfg: RunCfg, dir: &Path, every: u64) -> RunCfg {
+    cfg.checkpoint = CkptCfg {
+        every,
+        dir: Some(dir.to_path_buf()),
+        keep_last: 16,
+        keep_every: 0,
+    };
+    cfg
+}
+
+fn site(name: &str, at: u64, times: u64) -> FaultSiteCfg {
+    FaultSiteCfg { site: name.into(), at, times, after_bytes: None }
+}
+
+/// Full bitwise comparison of two run outcomes (everything except wall
+/// time, the machine-dependent prefetch depth, and the recovery count,
+/// which is exactly what supervision is allowed to change).
+fn assert_outcomes_identical(a: &RunOutcome, b: &RunOutcome, ctx: &str) {
+    assert_eq!(a.metrics.final_test_acc, b.metrics.final_test_acc, "{ctx}: acc");
+    assert_eq!(
+        a.metrics.final_test_acc_top5, b.metrics.final_test_acc_top5,
+        "{ctx}: top5"
+    );
+    assert_eq!(a.metrics.final_loss, b.metrics.final_loss, "{ctx}: loss");
+    assert_eq!(a.metrics.total_joules, b.metrics.total_joules, "{ctx}: joules");
+    assert_eq!(a.metrics.executed_macs, b.metrics.executed_macs, "{ctx}: macs");
+    assert_eq!(a.metrics.steps_run, b.metrics.steps_run, "{ctx}: steps");
+    assert_eq!(
+        a.metrics.steps_skipped, b.metrics.steps_skipped,
+        "{ctx}: skipped"
+    );
+    assert_eq!(
+        a.metrics.mean_gate_fracs, b.metrics.mean_gate_fracs,
+        "{ctx}: gate means"
+    );
+    assert_eq!(
+        a.metrics.mean_psg_frac, b.metrics.mean_psg_frac,
+        "{ctx}: psg mean"
+    );
+    assert_eq!(a.metrics.trace.len(), b.metrics.trace.len(), "{ctx}: trace len");
+    for (x, y) in a.metrics.trace.iter().zip(b.metrics.trace.iter()) {
+        assert_eq!(x.iter, y.iter, "{ctx}: trace iter");
+        assert_eq!(x.loss, y.loss, "{ctx}: trace loss @{}", x.iter);
+        assert_eq!(x.train_acc, y.train_acc, "{ctx}: trace acc @{}", x.iter);
+        assert_eq!(x.joules, y.joules, "{ctx}: trace joules @{}", x.iter);
+        assert_eq!(x.test_acc, y.test_acc, "{ctx}: trace eval @{}", x.iter);
+    }
+    assert_eq!(
+        a.ledger.steps_charged, b.ledger.steps_charged,
+        "{ctx}: ledger steps"
+    );
+    assert_eq!(a.ledger.macs, b.ledger.macs, "{ctx}: ledger macs");
+    assert_eq!(a.ledger.trace, b.ledger.trace, "{ctx}: ledger trace");
+    a.state.assert_bitwise_eq(&b.state);
+}
+
+/// One execution layout of the step loop (all bitwise interchangeable).
+struct Layout {
+    name: &'static str,
+    resident: bool,
+    prefetch: bool,
+    shards: usize,
+}
+
+const LAYOUTS: &[Layout] = &[
+    Layout { name: "host", resident: false, prefetch: false, shards: 0 },
+    Layout { name: "resident", resident: true, prefetch: true, shards: 0 },
+    Layout { name: "sharded2", resident: true, prefetch: true, shards: 2 },
+    Layout { name: "sharded3", resident: true, prefetch: true, shards: 3 },
+];
+
+fn shaped(mut cfg: RunCfg, l: &Layout) -> RunCfg {
+    cfg.resident = l.resident;
+    cfg.prefetch = l.prefetch;
+    cfg.shards = l.shards;
+    cfg
+}
+
+/// Run `cfg` under supervision with `sites` armed; hand back the
+/// outcome plus the plan so callers can assert firings.
+fn supervised_with_faults(
+    engine: &Engine,
+    mut cfg: RunCfg,
+    sites: Vec<FaultSiteCfg>,
+) -> (RunOutcome, Arc<FaultPlan>) {
+    cfg.faults = FaultsCfg { sites, backoff_ms: 1, ..Default::default() };
+    let plan = FaultPlan::from_cfg(&cfg.faults, cfg.seed).unwrap();
+    let mut trainer = Trainer::new(engine, cfg).unwrap();
+    trainer.set_faults(plan.clone());
+    let out = trainer.run_supervised().unwrap();
+    (out, plan)
+}
+
+/// The tentpole pin: every injectable site, on every execution layout,
+/// recovered to a bitwise fault-free outcome.
+#[test]
+fn injected_faults_recover_bitwise_on_every_layout() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    for layout in LAYOUTS {
+        let base_reg = TempDir::new().unwrap();
+        let base_cfg =
+            shaped(with_ckpt(ref_cfg(tmp.path(), 18), base_reg.path(), 6), layout);
+        let baseline = Trainer::new(&engine, base_cfg).unwrap().run(None).unwrap();
+
+        let mut site_sets: Vec<(&str, Vec<FaultSiteCfg>)> = vec![
+            // fires after the iter-6 checkpoint: exercises the
+            // restore-and-replay path
+            ("train-step", vec![site(fault::SITE_TRAIN_STEP, 8, 1)]),
+            // fires before any checkpoint exists: restart from scratch
+            ("train-step-early", vec![site(fault::SITE_TRAIN_STEP, 2, 1)]),
+            // the first checkpoint write dies after 200 bytes; the
+            // parked error surfaces and the run restarts
+            (
+                "ckpt-sink",
+                vec![FaultSiteCfg {
+                    site: fault::SITE_CKPT_SINK.into(),
+                    at: 1,
+                    times: 1,
+                    after_bytes: Some(200),
+                }],
+            ),
+            // the supervisor's own restore-point read comes back torn
+            ("registry-read", vec![site(fault::SITE_REGISTRY_READ, 1, 1)]),
+        ];
+        if layout.prefetch {
+            // the prefetch worker panics assembling its 5th batch
+            site_sets.push(("prefetch", vec![site(fault::SITE_PREFETCH, 5, 1)]));
+        }
+        if layout.shards > 0 {
+            // one shard dies mid-step AND its first replacement fork
+            // fails: recovered in place, no supervisor restart at all
+            site_sets.push((
+                "shard-engine+fork",
+                vec![
+                    site(fault::SITE_SHARD_ENGINE, 2, 1),
+                    site(fault::SITE_POOL_FORK, 1, 1),
+                ],
+            ));
+        }
+
+        for (name, sites) in site_sets {
+            let reg = TempDir::new().unwrap();
+            let cfg =
+                shaped(with_ckpt(ref_cfg(tmp.path(), 18), reg.path(), 6), layout);
+            let in_place = name.starts_with("shard-engine");
+            let (out, plan) = supervised_with_faults(&engine, cfg, sites);
+            assert!(
+                plan.fired_total() >= 1,
+                "{}/{name}: the armed fault never fired",
+                layout.name
+            );
+            if in_place {
+                // shard recovery never reaches the supervisor
+                assert_eq!(
+                    out.metrics.recoveries, 0,
+                    "{}/{name}: in-place recovery restarted the run",
+                    layout.name
+                );
+            } else {
+                assert!(
+                    out.metrics.recoveries >= 1,
+                    "{}/{name}: the supervisor never recovered",
+                    layout.name
+                );
+            }
+            assert_outcomes_identical(
+                &baseline,
+                &out,
+                &format!("{}/{name}", layout.name),
+            );
+        }
+    }
+}
+
+/// A checkpoint from a *different* run (other seed, other fingerprint)
+/// in the restore registry is a contradiction no retry fixes: the
+/// supervisor must fail fast with the fingerprint error, not burn its
+/// budget replaying the same rejection.
+#[test]
+fn foreign_checkpoint_fingerprint_is_fatal_not_retried() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    let reg = TempDir::new().unwrap();
+    let cfg = with_ckpt(ref_cfg(tmp.path(), 12), reg.path(), 6);
+    Trainer::new(&engine, cfg).unwrap().run(None).unwrap();
+
+    let mut wrong = with_ckpt(ref_cfg(tmp.path(), 12), reg.path(), 6);
+    wrong.seed = 1; // different training stream, same registry
+    let err = Trainer::new(&engine, wrong)
+        .unwrap()
+        .run_supervised()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fatal"), "not classified fatal: {msg}");
+    assert!(msg.contains("fingerprint"), "original cause lost: {msg}");
+}
+
+/// A fault that fires on every single attempt exhausts the retry budget
+/// and surfaces the (typed) original error — bounded, never an infinite
+/// recovery loop.
+#[test]
+fn exhausted_retry_budget_surfaces_the_injected_error() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    let reg = TempDir::new().unwrap();
+    let mut cfg = with_ckpt(ref_cfg(tmp.path(), 12), reg.path(), 6);
+    cfg.faults = FaultsCfg {
+        sites: vec![site(fault::SITE_TRAIN_STEP, 1, 1_000_000)],
+        max_retries: 2,
+        backoff_ms: 1,
+        seed: 0,
+    };
+    let t0 = Instant::now();
+    let err = Trainer::new(&engine, cfg)
+        .unwrap()
+        .run_supervised()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("retry budget exhausted"), "{msg}");
+    assert!(fault::is_injected(&err), "typed marker lost: {msg}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "budget exhaustion took implausibly long (runaway retries?)"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Serve-side resilience
+// ---------------------------------------------------------------------
+
+/// A booted service over the sgd32 fixture with one published snapshot.
+fn serve_fixture(
+    tmp: &TempDir,
+    engine: &Engine,
+    cfg: ServeCfg,
+) -> (ServeService, usize) {
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let manifest = fam.join("sgd32.json");
+    let prog = TrainProgram::load_eval_only(engine, &manifest).unwrap();
+    let hw = prog.manifest.arch.image_size;
+    let state = ModelState::init(&prog.manifest, 5);
+    let cell = Arc::new(SnapshotCell::new());
+    cell.publish(StateSnapshot::from_model_state(prog.backend(), &state).unwrap());
+    let service = ServeService::start(engine, &manifest, cell, cfg).unwrap();
+    (service, hw)
+}
+
+/// An injected worker death fails exactly the batch the worker held —
+/// with an explicit error, never a hung `Ticket::wait` — and the
+/// monitor's respawned worker serves the very next request.
+#[test]
+fn serve_worker_death_respawns_and_fails_only_the_held_batch() {
+    let tmp = TempDir::new().unwrap();
+    let engine = Engine::cpu().unwrap();
+    let plan = FaultPlan::from_cfg(
+        &FaultsCfg {
+            sites: vec![site(fault::SITE_SERVE_WORKER, 2, 1)],
+            ..Default::default()
+        },
+        0,
+    )
+    .unwrap();
+    let (service, hw) = serve_fixture(
+        &tmp,
+        &engine,
+        ServeCfg { workers: 1, faults: Some(plan.clone()), ..Default::default() },
+    );
+    let stride = hw * hw * 3;
+    let data = synthetic::generate(10, 4, hw, 11);
+    let client = service.client();
+    let submit = |i: usize| {
+        client
+            .submit(&data.images[i * stride..(i + 1) * stride], &[data.labels[i]])
+            .unwrap()
+            .wait()
+    };
+
+    // batch 1: hit 1, below the firing hit — served normally
+    let r1 = submit(0).expect("healthy worker answers");
+    assert_eq!(r1.len(), 1);
+    // batch 2: the worker dies holding it; the dropped routes resolve
+    // the ticket with an explicit error
+    let err = submit(1).expect_err("the held batch must fail, not hang");
+    assert!(
+        format!("{err:#}").contains("dropped the batch mid-flight"),
+        "unexpected failure shape: {err:#}"
+    );
+    // batch 3: the respawned worker (same plan, fault spent) answers
+    let r3 = submit(2).expect("respawned worker serves again");
+    assert_eq!(r3.len(), 1);
+    assert_eq!(plan.fired(fault::SITE_SERVE_WORKER), 1);
+
+    let stats = service.shutdown();
+    assert_eq!(stats.worker_respawns, 1, "exactly one respawn recorded");
+}
+
+/// With the respawn budget exhausted (zero here), pending and future
+/// requests fail explicitly through the monitor's terminal drain —
+/// clients never hang on a dead pool.
+#[test]
+fn exhausted_respawn_budget_fails_requests_explicitly() {
+    let tmp = TempDir::new().unwrap();
+    let engine = Engine::cpu().unwrap();
+    let plan = FaultPlan::from_cfg(
+        &FaultsCfg {
+            sites: vec![site(fault::SITE_SERVE_WORKER, 1, 1)],
+            ..Default::default()
+        },
+        0,
+    )
+    .unwrap();
+    let (service, hw) = serve_fixture(
+        &tmp,
+        &engine,
+        ServeCfg {
+            workers: 1,
+            max_respawns: 0,
+            faults: Some(plan),
+            ..Default::default()
+        },
+    );
+    let stride = hw * hw * 3;
+    let data = synthetic::generate(10, 4, hw, 11);
+    let client = service.client();
+
+    // the only worker dies on its first batch
+    let err = client
+        .submit(&data.images[..stride], &[data.labels[0]])
+        .unwrap()
+        .wait()
+        .expect_err("the held batch fails explicitly");
+    assert!(
+        format!("{err:#}").contains("dropped the batch mid-flight"),
+        "{err:#}"
+    );
+    // later requests drain through the monitor's consumer of last
+    // resort with its explicit error — and must not hang either
+    let err2 = client
+        .submit(&data.images[stride..2 * stride], &[data.labels[1]])
+        .unwrap()
+        .wait()
+        .expect_err("requests after pool death fail explicitly");
+    assert!(
+        format!("{err2:#}").contains("all serve workers stopped"),
+        "{err2:#}"
+    );
+    let stats = service.shutdown();
+    assert_eq!(stats.worker_respawns, 0);
+}
+
+/// The registry watcher rides out torn manifest reads: the armed
+/// `registry.read` site fails its first two polls, the retries are
+/// counted in the serve stats, and the checkpoint still hot-loads.
+#[test]
+fn registry_watcher_retries_torn_reads_and_counts_them() {
+    let tmp = TempDir::new().unwrap();
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    // a trainer (conceptually another process) leaves checkpoints
+    let reg = TempDir::new().unwrap();
+    let cfg = with_ckpt(ref_cfg(tmp.path(), 12), reg.path(), 6);
+    Trainer::new(&engine, cfg).unwrap().run(None).unwrap();
+
+    let plan = FaultPlan::from_cfg(
+        &FaultsCfg {
+            sites: vec![site(fault::SITE_REGISTRY_READ, 1, 2)],
+            ..Default::default()
+        },
+        0,
+    )
+    .unwrap();
+    let cell = Arc::new(SnapshotCell::new());
+    let service = ServeService::start(
+        &engine,
+        &fam.join("e2train.json"),
+        cell.clone(),
+        ServeCfg { faults: Some(plan.clone()), ..Default::default() },
+    )
+    .unwrap();
+    let _watcher = service.watch_registry(reg.path(), Duration::from_millis(5));
+
+    let t0 = Instant::now();
+    while cell.version() == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "watcher never recovered from the torn reads"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(plan.fired(fault::SITE_REGISTRY_READ), 2, "both tears injected");
+    let stats = service.stats();
+    assert!(
+        stats.registry_retries >= 2,
+        "torn reads not counted: {}",
+        stats.registry_retries
+    );
+    service.shutdown();
+}

@@ -143,6 +143,7 @@ fn concurrent_clients_match_serial_evaluate_full() {
             queue_cap: 16,
             max_delay: Duration::from_millis(1),
             micro_batch: None,
+            ..Default::default()
         },
     )
     .unwrap();
