@@ -20,6 +20,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::obs::{self, Obs};
 use crate::util::fault::{self, FaultPlan, FaultShot};
 use crate::util::hash::fnv1a64_hex;
 use crate::util::json::{parse, Json};
@@ -65,6 +66,7 @@ pub struct CheckpointRegistry {
     dir: PathBuf,
     retention: RetentionCfg,
     faults: Option<Arc<FaultPlan>>,
+    obs: Obs,
     prune_failures: Arc<AtomicU64>,
 }
 
@@ -76,6 +78,7 @@ impl CheckpointRegistry {
             dir: dir.into(),
             retention,
             faults: None,
+            obs: Obs::off(),
             prune_failures: Arc::new(AtomicU64::new(0)),
         }
     }
@@ -86,6 +89,23 @@ impl CheckpointRegistry {
     pub fn with_faults(mut self, faults: Arc<FaultPlan>) -> Self {
         self.faults = Some(faults);
         self
+    }
+
+    /// Attach an observability handle: [`CheckpointRegistry::publish`]
+    /// records `checkpoint-encode` (the streaming serialize + write) and
+    /// `registry-publish` (the whole publish, retention included) spans
+    /// on the calling thread — the background writer, in a live run.
+    pub fn with_obs(mut self, obs: Obs) -> Self {
+        self.obs = obs;
+        self
+    }
+
+    /// The attached observability handle ([`Obs::off`] by default) —
+    /// cloned by [`super::CheckpointWriter::spawn`] before the registry
+    /// moves into the writer thread, so submit-side backpressure waits
+    /// land in the same trace.
+    pub fn obs(&self) -> Obs {
+        self.obs.clone()
     }
 
     /// Shared counter of retention-prune failures (see
@@ -201,12 +221,15 @@ impl CheckpointRegistry {
     /// of a full serialized copy, byte-identical to the whole-buffer
     /// encoder by pinned test.
     pub fn publish(&self, data: &CheckpointData) -> Result<CheckpointEntry> {
+        let t_pub = std::time::Instant::now();
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("creating registry dir {}", self.dir.display()))?;
         let file = format!("ckpt-{:010}.e2c", data.iter);
         let path = self.dir.join(&file);
         let sink_fault = self.faults.as_ref().and_then(|p| p.hit(fault::SITE_CKPT_SINK));
+        let t_enc = std::time::Instant::now();
         let stats = stream_atomic(&path, data, sink_fault)?;
+        self.obs.record(obs::PHASE_CKPT_ENCODE, t_enc.elapsed());
         let entry = CheckpointEntry {
             iter: data.iter,
             file,
@@ -239,6 +262,7 @@ impl CheckpointRegistry {
                 }
             }
         }
+        self.obs.record(obs::PHASE_REGISTRY_PUBLISH, t_pub.elapsed());
         Ok(entry)
     }
 

@@ -21,6 +21,8 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
+use crate::obs::{self, Obs};
+
 use super::format::CheckpointData;
 use super::registry::CheckpointRegistry;
 
@@ -30,11 +32,16 @@ pub struct CheckpointWriter {
     error: Arc<Mutex<Option<anyhow::Error>>>,
     /// Checkpoints successfully published so far.
     published: Arc<Mutex<u64>>,
+    /// Cloned from the registry before it moves into the writer thread;
+    /// counts submit-side backpressure (time blocked on the depth-1
+    /// queue) in the same trace the registry's publish spans land in.
+    obs: Obs,
 }
 
 impl CheckpointWriter {
     /// Spawn the writer thread over a registry handle.
     pub fn spawn(registry: CheckpointRegistry) -> Self {
+        let obs = registry.obs();
         let (tx, rx) = sync_channel::<CheckpointData>(1);
         let error = Arc::new(Mutex::new(None));
         let published = Arc::new(Mutex::new(0u64));
@@ -56,7 +63,7 @@ impl CheckpointWriter {
                 }
             })
             .expect("spawning checkpoint writer thread");
-        Self { tx: Some(tx), worker: Some(worker), error, published }
+        Self { tx: Some(tx), worker: Some(worker), error, published, obs }
     }
 
     /// Queue one checkpoint.  Blocks only while a previous checkpoint
@@ -67,7 +74,16 @@ impl CheckpointWriter {
             .tx
             .as_ref()
             .ok_or_else(|| anyhow!("checkpoint writer already finished"))?;
-        if tx.send(data).is_err() {
+        let t_send = std::time::Instant::now();
+        let sent = tx.send(data);
+        // Floored at 1ns per submit (like span records), so the counter
+        // doubles as proof the submit path ran at all.
+        self.obs.count(
+            obs::CTR_CKPT_BACKPRESSURE_WAIT_NS,
+            (t_send.elapsed().as_nanos() as u64).max(1),
+        );
+        self.obs.count(obs::CTR_CKPT_SUBMITS, 1);
+        if sent.is_err() {
             return Err(self.take_error("checkpoint writer stopped"));
         }
         Ok(())

@@ -169,6 +169,13 @@ pub struct RunCfg {
     /// to the fault-free run (tests/fault_matrix.rs), so it must
     /// fingerprint identically too.
     pub faults: FaultsCfg,
+    /// Observability (`obs` subsystem): when set, the trainer writes an
+    /// `obs_trace/v1` JSONL event log here at the end of the run.  Not
+    /// part of the determinism fingerprint — telemetry is provably
+    /// inert (tests/obs_invariance.rs): a traced run is bitwise
+    /// identical to an untraced one, so where (or whether) the trace
+    /// lands cannot change the training stream.
+    pub trace_out: Option<PathBuf>,
     pub artifacts_dir: PathBuf,
 }
 
@@ -199,6 +206,7 @@ impl RunCfg {
             backend: None,
             checkpoint: CkptCfg::default(),
             faults: FaultsCfg::default(),
+            trace_out: None,
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -353,6 +361,13 @@ impl RunCfg {
                 ]),
             ),
             (
+                "trace_out",
+                match &self.trace_out {
+                    Some(p) => Json::str(p.to_string_lossy()),
+                    None => Json::Null,
+                },
+            ),
+            (
                 "artifacts_dir",
                 Json::str(self.artifacts_dir.to_string_lossy()),
             ),
@@ -368,6 +383,9 @@ impl RunCfg {
     /// relocating artifacts (`resume --artifacts`) or the CIFAR
     /// binaries (`resume --data-dir`) or re-checkpointing on a
     /// different schedule does not change the training stream.
+    /// `trace_out` is likewise excluded: telemetry is inert
+    /// (tests/obs_invariance.rs), so tracing a run must not move its
+    /// fingerprint.
     pub fn determinism_json(&self) -> Json {
         // The CIFAR `dir` is a mount point, not an identity: a
         // preempted edge run must stay resumable after its storage
@@ -426,7 +444,8 @@ impl RunCfg {
             &[
                 "family", "method", "iters", "seed", "lr", "data", "smd", "sd",
                 "eval_every", "swa", "alpha", "beta", "resident", "prefetch",
-                "shards", "backend", "checkpoint", "faults", "artifacts_dir",
+                "shards", "backend", "checkpoint", "faults", "trace_out",
+                "artifacts_dir",
             ],
             "run-config",
         )?;
@@ -564,6 +583,7 @@ impl RunCfg {
             }
             cfg.faults = faults;
         }
+        cfg.trace_out = v.get("trace_out").and_then(Json::as_str).map(PathBuf::from);
         if let Some(d) = v.get("artifacts_dir").and_then(Json::as_str) {
             cfg.artifacts_dir = PathBuf::from(d);
         }
@@ -621,6 +641,7 @@ mod tests {
             backoff_ms: 3,
             seed: 11,
         };
+        cfg.trace_out = Some(PathBuf::from("out/trace.jsonl"));
         let dir = TempDir::new().unwrap();
         let p = dir.path().join("run.json");
         cfg.save(&p).unwrap();
@@ -636,6 +657,7 @@ mod tests {
         assert_eq!(back.shards, 2);
         assert_eq!(back.checkpoint, cfg.checkpoint);
         assert_eq!(back.faults, cfg.faults);
+        assert_eq!(back.trace_out, cfg.trace_out);
     }
 
     #[test]
@@ -713,6 +735,7 @@ mod tests {
         b.artifacts_dir = PathBuf::from("elsewhere");
         b.checkpoint.every = 7;
         b.checkpoint.dir = Some(PathBuf::from("x"));
+        b.trace_out = Some(PathBuf::from("trace.jsonl"));
         // ...and neither does an armed fault plan: a supervised run that
         // recovers from injected faults must fingerprint-match both its
         // own checkpoints and the fault-free baseline.

@@ -31,7 +31,7 @@ use anyhow::Result;
 
 use crate::checkpoint::{CheckpointData, CheckpointRegistry, RetentionCfg};
 use crate::config::RunCfg;
-use crate::util::fault::{is_injected, FaultPlan};
+use crate::util::fault::{injected_site, is_injected, FaultPlan};
 use crate::util::rng::Rng;
 
 use super::trainer::{RunOutcome, Trainer};
@@ -193,6 +193,11 @@ impl Trainer<'_> {
                 )));
             }
             let delay = backoff.next_delay();
+            self.obs().recovery(
+                injected_site(&err).unwrap_or("unknown"),
+                failures,
+                delay.as_millis() as u64,
+            );
             eprintln!(
                 "[supervise] attempt {failures} failed ({err:#}); retrying from the \
                  latest checkpoint in {}ms",

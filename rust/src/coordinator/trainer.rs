@@ -52,6 +52,7 @@ use crate::data::{
 };
 use crate::energy::{EnergyLedger, EnergyModel};
 use crate::metrics::{Mean, RunMetrics};
+use crate::obs::{Obs, TraceKey};
 use crate::optim::SwaState;
 use crate::runtime::{
     prepare_backend, Engine, EvalMetrics, HostTensor, ModelState, SnapshotCell,
@@ -88,9 +89,18 @@ enum BatchSource {
 }
 
 impl BatchSource {
-    fn next_batch(&mut self) -> Result<(HostTensor, HostTensor)> {
+    fn next_batch(&mut self, obs: &Obs) -> Result<(HostTensor, HostTensor)> {
         match self {
-            BatchSource::Sync { sampler, data } => Ok(sampler.next_batch(data)),
+            BatchSource::Sync { sampler, data } => {
+                // Synchronous sampling assembles the batch right here on
+                // the step loop's thread — that *is* the augment phase.
+                // (With prefetch on, the worker records it instead, and
+                // the consumer's pull time lands under `prefetch-stall`.)
+                let t0 = Instant::now();
+                let b = sampler.next_batch(data);
+                obs.record(crate::obs::PHASE_AUGMENT, t0.elapsed());
+                Ok(b)
+            }
             BatchSource::Prefetch { staged, pre } => match staged.pop_front() {
                 Some(b) => Ok(b),
                 // Surfaces a deferred CIFAR decode failure as a clean
@@ -188,6 +198,13 @@ pub struct Trainer<'e> {
     /// execution backend, plus the trainer's own `engine.train_step`
     /// site.  `None` (the default) injects nothing anywhere.
     faults: Option<Arc<FaultPlan>>,
+    /// The observability hub, threaded (like `faults`) into the
+    /// prefetch worker, the checkpoint registry/writer and the
+    /// execution backend.  Aggregates are always collected; the JSONL
+    /// event log is recorded only when `cfg.trace_out` is set.  Inert
+    /// either way: tests/obs_invariance.rs pins that a traced run is
+    /// bitwise identical to an untraced one.
+    obs: Obs,
 }
 
 impl<'e> Trainer<'e> {
@@ -198,6 +215,7 @@ impl<'e> Trainer<'e> {
         let program = TrainProgram::load(engine, &cfg.manifest_path())?;
         let energy = EnergyModel::from_manifest(&program.manifest);
         let (train_data, test_set) = Self::load_data(&cfg, &program)?;
+        let obs = Obs::new(cfg.trace_out.is_some());
         Ok(Self {
             engine,
             cfg,
@@ -207,6 +225,7 @@ impl<'e> Trainer<'e> {
             test_set,
             publish: None,
             faults: None,
+            obs,
         })
     }
 
@@ -227,6 +246,13 @@ impl<'e> Trainer<'e> {
     /// The armed fault plan, if any.
     pub fn faults(&self) -> Option<Arc<FaultPlan>> {
         self.faults.clone()
+    }
+
+    /// The observability handle (shared hub; cheap to clone).  The
+    /// supervisor uses it to record structured recovery events into the
+    /// same trace the run's spans land in.
+    pub fn obs(&self) -> Obs {
+        self.obs.clone()
     }
 
     fn load_data(cfg: &RunCfg, program: &TrainProgram) -> Result<(TrainData, Dataset)> {
@@ -423,6 +449,17 @@ impl<'e> Trainer<'e> {
         if let Some(p) = &self.faults {
             backend.set_faults(p.clone());
         }
+        backend.set_obs(self.obs.clone());
+        // Catalog key: every trace row this run emits is attributable
+        // to (family, method, backend, shards, batch) — the shape the
+        // cost/energy catalog (ROADMAP) ingests.
+        self.obs.set_key(TraceKey {
+            family: self.cfg.family.clone(),
+            method: self.cfg.method.clone(),
+            backend: backend.name().to_string(),
+            shards: backend.shard_count(),
+            batch: self.program.batch(),
+        });
         let needs_mask = m.method.gating == "mask";
 
         // Durable checkpointing: a background writer over the registry,
@@ -449,6 +486,7 @@ impl<'e> Trainer<'e> {
             if let Some(p) = &self.faults {
                 registry = registry.with_faults(p.clone());
             }
+            registry = registry.with_obs(self.obs.clone());
             prune_failures = Some(registry.prune_failure_counter());
             ckpt_writer = Some(CheckpointWriter::spawn(registry));
             shadow = Some(sampler_start.build(
@@ -484,6 +522,7 @@ impl<'e> Trainer<'e> {
                         *s,
                         depth,
                         self.faults.clone(),
+                        self.obs.clone(),
                     )?,
                     SamplerStart::State(st) => Prefetcher::spawn_deferred_resume_opts(
                         move || files.decode(),
@@ -492,6 +531,7 @@ impl<'e> Trainer<'e> {
                         st.clone(),
                         depth,
                         self.faults.clone(),
+                        self.obs.clone(),
                     )?,
                 };
                 BatchSource::Prefetch { staged: VecDeque::new(), pre }
@@ -515,6 +555,10 @@ impl<'e> Trainer<'e> {
                     .map(|_| sampler.next_batch(&data))
                     .collect();
                 wall_offset_s = t0.elapsed().as_secs_f64();
+                // The probe batches are real stream batches assembled on
+                // this thread; their augment time belongs in the trace
+                // like any other batch's.
+                self.obs.record(crate::obs::PHASE_AUGMENT, t0.elapsed());
                 let augment_mean = wall_offset_s / PROBE_BATCHES as f64;
                 let step_mean = self.probe_step_time(
                     backend.as_mut(),
@@ -531,6 +575,7 @@ impl<'e> Trainer<'e> {
                         data,
                         depth,
                         self.faults.clone(),
+                        self.obs.clone(),
                     )?,
                 }
             }
@@ -576,14 +621,14 @@ impl<'e> Trainer<'e> {
                 // no stall.  A dropped iteration consumes the *whole*
                 // batch, all shard slices included — slicing happens
                 // inside the sharded step, downstream of this stream.
-                let _ = source.next_batch()?;
+                let _ = source.next_batch(&self.obs)?;
                 if let Some(sh) = shadow.as_mut() {
                     sh.skip_batch();
                 }
                 ledger.skip();
                 continue;
             }
-            let (x, y) = source.next_batch()?;
+            let (x, y) = source.next_batch(&self.obs)?;
             if let Some(sh) = shadow.as_mut() {
                 sh.skip_batch();
             }
@@ -599,7 +644,9 @@ impl<'e> Trainer<'e> {
             if let Some(p) = &self.faults {
                 p.check(fault::SITE_TRAIN_STEP)?;
             }
+            let t_step = Instant::now();
             let sm = backend.train_step(&x, &y, hp, mask.as_deref())?;
+            self.obs.record(crate::obs::PHASE_STEP_EXEC, t_step.elapsed());
 
             // Energy: SD masks are per-batch gate fractions too.
             let fracs: Vec<f64> = if !sm.gate_fracs.is_empty() {
@@ -710,6 +757,18 @@ impl<'e> Trainer<'e> {
         metrics.prefetch_depth = prefetch_depth;
         if let Some(c) = &prune_failures {
             metrics.prune_failures = c.load(std::sync::atomic::Ordering::Relaxed);
+        }
+
+        // Fold the per-phase summary into the run metrics and, when
+        // requested, write the full `obs_trace/v1` event log.  Both are
+        // strictly observability-plane: nothing upstream of this point
+        // read a clock that fed the training stream.
+        if let Some(trace) = self.obs.snapshot() {
+            metrics.obs = Some(trace.summary.clone());
+            if let Some(p) = &self.cfg.trace_out {
+                trace.write(p)?;
+                eprintln!("[obs] trace -> {}", p.display());
+            }
         }
 
         eprintln!(

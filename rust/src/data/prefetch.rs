@@ -10,12 +10,15 @@
 //! tests/resident_equivalence.rs).  The worker runs at most
 //! `depth` batches ahead; it never reorders.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::obs::{self, Obs};
 use crate::runtime::HostTensor;
 use crate::util::fault::{self, FaultPlan, InjectedFault};
 
@@ -54,6 +57,16 @@ pub struct Prefetcher {
     /// load, so the consumer's [`Prefetcher::next_batch`] surfaces the
     /// real cause instead of a generic worker-died error.
     error: Arc<Mutex<Option<anyhow::Error>>>,
+    /// Observability handle: the worker times augmentation
+    /// (`augment` spans on the prefetch thread), the consumer times the
+    /// channel receive (`prefetch-stall` spans) and samples channel
+    /// occupancy.  `Obs::off()` unless the trainer attached a hub.
+    obs: Obs,
+    /// Batches the worker has pushed into the channel (shared with the
+    /// consumer for occupancy sampling).
+    produced: Arc<AtomicU64>,
+    /// Batches this consumer has pulled out.
+    consumed: u64,
 }
 
 impl Prefetcher {
@@ -86,11 +99,12 @@ impl Prefetcher {
     where
         F: FnOnce() -> Result<Dataset> + Send + 'static,
     {
-        Self::spawn_deferred_opts(load, batch, augment, seed, depth, None)
+        Self::spawn_deferred_opts(load, batch, augment, seed, depth, None, Obs::off())
     }
 
     /// [`Prefetcher::spawn_deferred`] with an optional fault plan (the
-    /// `data.prefetch` site panics the worker mid-stream).
+    /// `data.prefetch` site panics the worker mid-stream) and an
+    /// observability handle.
     pub fn spawn_deferred_opts<F>(
         load: F,
         batch: usize,
@@ -98,6 +112,7 @@ impl Prefetcher {
         seed: u64,
         depth: usize,
         faults: Option<Arc<FaultPlan>>,
+        obs: Obs,
     ) -> Result<Self>
     where
         F: FnOnce() -> Result<Dataset> + Send + 'static,
@@ -107,6 +122,7 @@ impl Prefetcher {
             depth,
             move |n| Ok(Sampler::new(n, batch, augment, seed)),
             faults,
+            obs,
         )
     }
 
@@ -128,10 +144,19 @@ impl Prefetcher {
     where
         F: FnOnce() -> Result<Dataset> + Send + 'static,
     {
-        Self::spawn_deferred_resume_opts(load, batch, augment, state, depth, None)
+        Self::spawn_deferred_resume_opts(
+            load,
+            batch,
+            augment,
+            state,
+            depth,
+            None,
+            Obs::off(),
+        )
     }
 
-    /// [`Prefetcher::spawn_deferred_resume`] with an optional fault plan.
+    /// [`Prefetcher::spawn_deferred_resume`] with an optional fault plan
+    /// and an observability handle.
     pub fn spawn_deferred_resume_opts<F>(
         load: F,
         batch: usize,
@@ -139,6 +164,7 @@ impl Prefetcher {
         state: SamplerState,
         depth: usize,
         faults: Option<Arc<FaultPlan>>,
+        obs: Obs,
     ) -> Result<Self>
     where
         F: FnOnce() -> Result<Dataset> + Send + 'static,
@@ -148,6 +174,7 @@ impl Prefetcher {
             depth,
             move |n| Sampler::restore(&state, n, batch, augment),
             faults,
+            obs,
         )
     }
 
@@ -156,6 +183,7 @@ impl Prefetcher {
         depth: usize,
         make_sampler: M,
         faults: Option<Arc<FaultPlan>>,
+        obs: Obs,
     ) -> Result<Self>
     where
         F: FnOnce() -> Result<Dataset> + Send + 'static,
@@ -164,6 +192,9 @@ impl Prefetcher {
         let (tx, rx) = sync_channel(depth.max(1));
         let error = Arc::new(Mutex::new(None));
         let err_slot = error.clone();
+        let produced = Arc::new(AtomicU64::new(0));
+        let w_obs = obs.clone();
+        let w_produced = produced.clone();
         let worker = std::thread::Builder::new()
             .name("e2train-prefetch".into())
             .spawn(move || {
@@ -181,10 +212,17 @@ impl Prefetcher {
                         return;
                     }
                 };
-                produce(sampler, data, tx, &err_slot, faults);
+                produce(sampler, data, tx, &err_slot, faults, w_obs, &w_produced);
             })
             .context("spawning prefetch thread")?;
-        Ok(Self { rx: Some(rx), worker: Some(worker), error })
+        Ok(Self {
+            rx: Some(rx),
+            worker: Some(worker),
+            error,
+            obs,
+            produced,
+            consumed: 0,
+        })
     }
 
     /// Spawn from an already-built (possibly partially-consumed)
@@ -197,24 +235,38 @@ impl Prefetcher {
         data: Arc<Dataset>,
         depth: usize,
     ) -> Result<Self> {
-        Self::spawn_from_opts(sampler, data, depth, None)
+        Self::spawn_from_opts(sampler, data, depth, None, Obs::off())
     }
 
-    /// [`Prefetcher::spawn_from`] with an optional fault plan.
+    /// [`Prefetcher::spawn_from`] with an optional fault plan and an
+    /// observability handle.
     pub fn spawn_from_opts(
         sampler: Sampler,
         data: Arc<Dataset>,
         depth: usize,
         faults: Option<Arc<FaultPlan>>,
+        obs: Obs,
     ) -> Result<Self> {
         let (tx, rx) = sync_channel(depth.max(1));
         let error = Arc::new(Mutex::new(None));
         let err_slot = error.clone();
+        let produced = Arc::new(AtomicU64::new(0));
+        let w_obs = obs.clone();
+        let w_produced = produced.clone();
         let worker = std::thread::Builder::new()
             .name("e2train-prefetch".into())
-            .spawn(move || produce(sampler, data, tx, &err_slot, faults))
+            .spawn(move || {
+                produce(sampler, data, tx, &err_slot, faults, w_obs, &w_produced)
+            })
             .context("spawning prefetch thread")?;
-        Ok(Self { rx: Some(rx), worker: Some(worker), error })
+        Ok(Self {
+            rx: Some(rx),
+            worker: Some(worker),
+            error,
+            obs,
+            produced,
+            consumed: 0,
+        })
     }
 
     /// Blocking pull of the next staged batch (usually already
@@ -226,9 +278,34 @@ impl Prefetcher {
             .rx
             .as_ref()
             .ok_or_else(|| anyhow!("prefetcher already shut down"))?;
-        match rx.recv() {
-            Ok(b) => Ok(b),
-            Err(_) => Err(lock_err(&self.error)
+        // Occupancy sample: batches staged ahead of this pull.  A pull
+        // that finds the channel empty is a stall — the step loop is
+        // about to block on data.
+        let occ = self
+            .produced
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.consumed);
+        self.obs.count(obs::CTR_PREFETCH_OCC_SUM, occ);
+        self.obs.count(obs::CTR_PREFETCH_OCC_SAMPLES, 1);
+        let t0 = Instant::now();
+        let got = match rx.try_recv() {
+            Ok(b) => Some(b),
+            Err(TryRecvError::Empty) => {
+                self.obs.count(obs::CTR_PREFETCH_STALLS, 1);
+                rx.recv().ok()
+            }
+            Err(TryRecvError::Disconnected) => None,
+        };
+        // Always timed, not just on the empty path: the phase total
+        // answers "how long did the step loop wait on data", which is
+        // nonzero even when every batch was staged.
+        self.obs.record(obs::PHASE_PREFETCH_STALL, t0.elapsed());
+        match got {
+            Some(b) => {
+                self.consumed += 1;
+                Ok(b)
+            }
+            None => Err(lock_err(&self.error)
                 .take()
                 .unwrap_or_else(|| anyhow!("prefetch worker died"))),
         }
@@ -246,8 +323,11 @@ fn produce(
     tx: SyncSender<(HostTensor, HostTensor)>,
     err_slot: &Mutex<Option<anyhow::Error>>,
     faults: Option<Arc<FaultPlan>>,
+    obs: Obs,
+    produced: &AtomicU64,
 ) {
     loop {
+        let t0 = Instant::now();
         let made = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             if let Some(p) = &faults {
                 if p.hit(fault::SITE_PREFETCH).is_some() {
@@ -269,10 +349,15 @@ fn produce(
                 return;
             }
         };
+        // Recorded on this thread ("e2train-prefetch"), so augment time
+        // stays distinguishable from the step loop's own phases.
+        obs.record(obs::PHASE_AUGMENT, t0.elapsed());
+        obs.count(obs::CTR_PREFETCH_PRODUCED, 1);
         // The receiver hung up: the run is over.
         if tx.send(b).is_err() {
             return;
         }
+        produced.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -479,7 +564,8 @@ mod tests {
         .unwrap();
         let sampler = Sampler::new(data.n, 16, AugmentCfg::default(), 9);
         let mut pre =
-            Prefetcher::spawn_from_opts(sampler, data, 2, Some(plan)).unwrap();
+            Prefetcher::spawn_from_opts(sampler, data, 2, Some(plan), Obs::off())
+                .unwrap();
         // batches 1 and 2 stream normally
         assert!(pre.next_batch().is_ok());
         assert!(pre.next_batch().is_ok());

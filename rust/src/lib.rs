@@ -22,6 +22,7 @@ pub mod data;
 pub mod energy;
 pub mod experiments;
 pub mod metrics;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod serve;

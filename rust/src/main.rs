@@ -10,6 +10,8 @@
 //! e2train serve --clients 2,8 --requests 32 --out BENCH_serve.json
 //! e2train serve --registry ckpts --clients 2,8
 //! e2train shard-bench --shards 1,2,4 --out BENCH_shard.json
+//! e2train train --family refmlp-tiny --trace-out trace.jsonl
+//! e2train trace-report trace.jsonl
 //! e2train energy-report --family resnet20-c10
 //! ```
 
@@ -61,6 +63,9 @@ COMMANDS:
                                 transient failures restore from the
                                 latest checkpoint and retry (implied
                                 when the config arms fault injection)
+    --trace-out <path>          write an obs_trace/v1 JSONL run trace
+                                (observability plane only — the traced
+                                run stays bitwise identical)
     --out <path>                write run-metrics JSON
   resume <dir>                  continue a checkpointed run, bitwise
                                 identical to the uninterrupted one
@@ -72,6 +77,7 @@ COMMANDS:
     --backend <b> --shards <n>  resume under a different execution
                                 backend than the one that checkpointed
                                 (backends are bitwise interchangeable)
+    --trace-out <path>          write an obs_trace/v1 JSONL run trace
     --out <path>                write run-metrics JSON
   exp <id>                      reproduce a paper table/figure
                                 fig3a|fig3b|tab1|fig4|tab2|tab3|fig5|tab4|finetune|all
@@ -96,6 +102,10 @@ COMMANDS:
     --delay-ms <n>              batcher flush deadline    [2]
     --seed <n>                  rng seed                  [0]
     --out <path>                report path [BENCH_serve.json]
+  trace-report <file.jsonl>     render an obs_trace/v1 run trace as a
+                                per-phase table (count, total/mean ms,
+                                p50/p99, % of run) plus counters and
+                                recovery events
   energy-report                 analytic energy model vs paper anchors
     --family <fam>              [resnet20-c10]
 
@@ -168,6 +178,9 @@ fn main() -> Result<()> {
             // Flags override whichever source built the config (quick
             // flags or --config launcher) — never silently ignored.
             apply_backend_flags(&mut cfg, &args)?;
+            if let Some(p) = args.get("trace-out") {
+                cfg.trace_out = Some(PathBuf::from(p));
+            }
             cfg.artifacts_dir = artifacts;
             // Align the synthetic class count with the artifact.
             let manifest = e2train::runtime::Manifest::load(&cfg.manifest_path())?;
@@ -230,6 +243,11 @@ fn main() -> Result<()> {
             // legally resume under a different one (--backend/--shards
             // override the embedded layout; not part of the fingerprint).
             apply_backend_flags(&mut cfg, &args)?;
+            // Like the layout knobs, tracing is outside the fingerprint:
+            // a resumed run may trace even if the original didn't.
+            if let Some(p) = args.get("trace-out") {
+                cfg.trace_out = Some(PathBuf::from(p));
+            }
             println!(
                 "resuming {}/{} at iter {}/{} from {dir}",
                 cfg.family, cfg.method, ckpt.iter, cfg.iters
@@ -334,6 +352,16 @@ fn main() -> Result<()> {
             let out = args.str_or("out", "BENCH_serve.json");
             std::fs::write(&out, report.to_string())?;
             println!("serve bench -> {out}");
+        }
+        "trace-report" => {
+            let file = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("trace-report needs an obs_trace/v1 JSONL file"))?;
+            let text = std::fs::read_to_string(file)
+                .map_err(|e| anyhow!("reading {file}: {e}"))?;
+            let rep = e2train::obs::report::aggregate(&text)?;
+            print!("{}", rep.render());
         }
         "energy-report" => {
             let family = args.str_or("family", "resnet20-c10");

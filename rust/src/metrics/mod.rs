@@ -47,6 +47,11 @@ pub struct RunMetrics {
     /// Checkpoint retention prunes that failed (logged and tolerated —
     /// pruning is best-effort and never aborts training).
     pub prune_failures: u64,
+    /// Per-phase wall-time summary from the observability plane
+    /// (`obs` subsystem).  Timing only — lives outside the determinism
+    /// contract, like `wall_seconds`: two bitwise-identical runs will
+    /// differ here.
+    pub obs: Option<crate::obs::ObsSummary>,
 }
 
 impl RunMetrics {
@@ -71,7 +76,7 @@ impl RunMetrics {
     }
 
     pub fn json_value(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             (
                 "trace",
                 Json::arr(self.trace.iter().map(|p| {
@@ -113,7 +118,11 @@ impl RunMetrics {
             ("shards", Json::num(self.shards as f64)),
             ("recoveries", Json::num(self.recoveries as f64)),
             ("prune_failures", Json::num(self.prune_failures as f64)),
-        ])
+        ];
+        if let Some(obs) = &self.obs {
+            pairs.push(("obs", obs.to_json()));
+        }
+        Json::obj(pairs)
     }
 
     pub fn to_json(&self) -> String {

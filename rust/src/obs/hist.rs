@@ -1,0 +1,201 @@
+//! Fixed-bucket log-scale latency histogram.
+//!
+//! Durations land in power-of-two octaves subdivided into 4 linear
+//! sub-buckets, so a bucket's upper bound overestimates a sample by at
+//! most 25% — accurate enough for p50/p99 while the whole histogram is
+//! a fixed 252-slot array regardless of how many samples it absorbs.
+//! That bound is why the serve stats collector can drop its unbounded
+//! latency ring (`serve::stats`): observing a sample is O(1), memory is
+//! constant, and percentiles never require a sort.
+//!
+//! Everything is plain data: no clocks, no threads, no allocation after
+//! the first observation.  [`Histogram::merge`] is associative and
+//! commutative, so per-thread histograms combine deterministically in
+//! any order.
+
+/// Number of buckets: values 0..8 exact, then 4 sub-buckets per octave
+/// up to the full `u64` range.
+pub const NUM_BUCKETS: usize = 252;
+
+/// A fixed-size log-scale histogram over `u64` samples (nanoseconds by
+/// convention, but unit-agnostic).
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    /// Lazily sized to [`NUM_BUCKETS`] on first observation.
+    counts: Vec<u64>,
+    count: u64,
+    total: u64,
+    max: u64,
+}
+
+/// Bucket index for a sample: exact below 8, then
+/// `8 + 4*(msb-3) + sub` where `sub` is the sample's two bits below the
+/// most significant one.
+fn bucket_index(v: u64) -> usize {
+    if v < 8 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize; // >= 3
+    let sub = ((v >> (msb - 2)) & 3) as usize;
+    (8 + 4 * (msb - 3) + sub).min(NUM_BUCKETS - 1)
+}
+
+/// Largest sample a bucket can hold — the value reported for any
+/// percentile that lands in it (clamped to the observed max).
+fn bucket_upper(idx: usize) -> u64 {
+    if idx < 8 {
+        return idx as u64;
+    }
+    let msb = (idx - 8) / 4 + 3;
+    let sub = ((idx - 8) % 4) as u64;
+    (1u64 << msb) + ((sub + 1) << (msb - 2)) - 1
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample.
+    pub fn observe(&mut self, v: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; NUM_BUCKETS];
+        }
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.total = self.total.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Samples observed.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of all samples (saturating).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Exact largest sample.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile estimate for `p` in [0, 1]: the upper
+    /// bound of the bucket holding the rank-th sample (≤ 25% above the
+    /// true value), clamped to the exact observed max.  0.0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((self.count as f64 * p).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_upper(idx).min(self.max) as f64;
+            }
+        }
+        self.max as f64
+    }
+
+    /// Fold another histogram in (associative + commutative, so
+    /// per-thread histograms combine deterministically in any order).
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; NUM_BUCKETS];
+        }
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.total = self.total.saturating_add(other.total);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_tight_and_monotone() {
+        // Exact below 8; ≤ 25% overestimate everywhere else.
+        for v in [0u64, 1, 7, 8, 9, 100, 1_000, 65_536, 1_000_000, u64::MAX / 2] {
+            let up = bucket_upper(bucket_index(v));
+            assert!(up >= v, "upper {up} < value {v}");
+            assert!(up <= v + v / 4 + 1, "upper {up} too loose for {v}");
+        }
+        // Bucket uppers strictly increase (no overlap, no gap inversion).
+        for i in 1..NUM_BUCKETS {
+            assert!(bucket_upper(i) > bucket_upper(i - 1), "bucket {i}");
+        }
+        // Adjacent values never map to earlier buckets.
+        let mut prev = 0;
+        for v in 0..100_000u64 {
+            let b = bucket_index(v);
+            assert!(b >= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn percentiles_bracket_the_data() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.observe(v * 1000); // 1µs..1ms in µs steps
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile(0.50);
+        let p99 = h.percentile(0.99);
+        assert!(p50 >= 500_000.0 && p50 <= 625_001.0, "p50 = {p50}");
+        assert!(p99 >= 990_000.0 && p99 <= 1_000_000.0, "p99 = {p99}");
+        assert!(p99 >= p50);
+        assert_eq!(h.max(), 1_000_000);
+        assert!((h.mean() - 500_500.0).abs() < 1e-6);
+        // Empty histogram reports zeros, not NaNs.
+        let e = Histogram::new();
+        assert_eq!(e.percentile(0.99), 0.0);
+        assert_eq!(e.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_matches_combined_observation() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for v in 0..500u64 {
+            a.observe(v * 7);
+            all.observe(v * 7);
+        }
+        for v in 0..300u64 {
+            b.observe(v * 13 + 5);
+            all.observe(v * 13 + 5);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.total(), all.total());
+        assert_eq!(a.max(), all.max());
+        for p in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.percentile(p), all.percentile(p), "p = {p}");
+        }
+        // Merging into an empty histogram copies.
+        let mut e = Histogram::new();
+        e.merge(&all);
+        assert_eq!(e.count(), all.count());
+        assert_eq!(e.percentile(0.5), all.percentile(0.5));
+    }
+}

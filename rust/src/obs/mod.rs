@@ -1,0 +1,615 @@
+//! `obs` — the observability plane: phase-labeled span timers, named
+//! monotonic counters, fixed-bucket latency histograms, and a
+//! deterministic end-of-run trace (`obs_trace/v1`).
+//!
+//! Every layer of the stack answers "where did this run's wall-time
+//! go?" through one [`Obs`] handle: the trainer times `augment` /
+//! `prefetch-stall` / `step-exec`, the sharded backend times per-shard
+//! execution plus the `shard-reduce` / `optim-apply` host phases, the
+//! checkpoint registry times `checkpoint-encode` / `registry-publish`,
+//! and the serve pipeline times `serve-batch-assembly` / `serve-infer`.
+//! Spans record under the *recording thread's* label (worker threads
+//! are already named — `e2train-prefetch`, `e2train-ckpt-writer`,
+//! `e2train-serve-batcher` — and shard legs label themselves
+//! `shard-{i}`), and per-thread aggregates merge into per-phase
+//! summaries by sorted `BTreeMap` iteration, so the summary is
+//! deterministic no matter how threads interleaved.
+//!
+//! **The inertness contract.**  Telemetry must be provably inert: a run
+//! with tracing on is bitwise identical — metrics trace, energy ledger,
+//! final state — to the same run with tracing off
+//! (`tests/obs_invariance.rs` pins this across the backend matrix).
+//! The contract holds by construction: recording only reads clocks and
+//! mutates `obs`-private state, never an RNG or a tensor; timestamps
+//! live only in this plane and are excluded from the determinism
+//! fingerprint (`config::RunCfg::determinism_json`) and the checkpoint
+//! payload.  `Obs` is a cheap cloneable handle around an
+//! `Option<Arc<ObsHub>>` — [`Obs::off`] makes every call a no-op, the
+//! fault-plan threading pattern (`util::fault`) applied to telemetry.
+//!
+//! Aggregates are always collected (they feed `RunMetrics` and
+//! `BENCH_runtime.json`); the per-span *event log* is recorded only
+//! when a JSONL trace was requested (`cfg.trace_out` /
+//! `e2train train --trace-out`), capped at [`MAX_EVENTS`] with an
+//! explicit dropped-event count — never a silent truncation.  Trace
+//! rows are keyed by (family, method, backend, shards, batch) so the
+//! planned cost/energy catalog (ROADMAP) can ingest them directly.
+
+pub mod hist;
+pub mod report;
+
+pub use hist::Histogram;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Trace schema identifier (first JSONL line of every trace).
+pub const TRACE_SCHEMA: &str = "obs_trace/v1";
+
+/// Per-span event-log cap; past it spans still aggregate but the event
+/// is counted into `dropped_events` instead of logged.
+pub const MAX_EVENTS: usize = 65_536;
+
+// Phase labels.  One constant per instrumented phase so the trace, the
+// summary, `BENCH_runtime.json` and the tests all agree on spelling.
+/// Batch assembly (sampler + augmentation), sync path or prefetch worker.
+pub const PHASE_AUGMENT: &str = "augment";
+/// Consumer-side wait on the prefetch channel (pipeline bubble).
+pub const PHASE_PREFETCH_STALL: &str = "prefetch-stall";
+/// One `StepBackend::train_step` as the trainer sees it.
+pub const PHASE_STEP_EXEC: &str = "step-exec";
+/// One shard leg's forward/backward (recorded per shard thread).
+pub const PHASE_SHARD_EXEC: &str = "shard-exec";
+/// Fixed-order host all-reduce of per-shard outputs.
+pub const PHASE_SHARD_REDUCE: &str = "shard-reduce";
+/// `optim::update::apply_update` + master write-back + rebroadcast.
+pub const PHASE_OPTIM_APPLY: &str = "optim-apply";
+/// Streaming `ckpt/v1` encode to the registry temp file.
+pub const PHASE_CKPT_ENCODE: &str = "checkpoint-encode";
+/// Whole registry publish (encode + rename + manifest + retention).
+pub const PHASE_REGISTRY_PUBLISH: &str = "registry-publish";
+/// Serve batcher: first staged sample -> micro-batch flush.
+pub const PHASE_SERVE_ASSEMBLY: &str = "serve-batch-assembly";
+/// Serve worker: one `eval_batch_snapshot` execution.
+pub const PHASE_SERVE_INFER: &str = "serve-infer";
+
+// Counter names (monotonic u64).
+/// Batches the prefetch worker finished assembling.
+pub const CTR_PREFETCH_PRODUCED: &str = "prefetch.batches-produced";
+/// Consumer arrivals that found the prefetch channel empty.
+pub const CTR_PREFETCH_STALLS: &str = "prefetch.stalls";
+/// Sum of ready-batch counts sampled at each consumer arrival …
+pub const CTR_PREFETCH_OCC_SUM: &str = "prefetch.occupancy-sum";
+/// … over this many samples (mean occupancy = sum / samples).
+pub const CTR_PREFETCH_OCC_SAMPLES: &str = "prefetch.occupancy-samples";
+/// Nanoseconds `CheckpointWriter::submit` blocked on the depth-1
+/// channel while the previous write was still in flight.
+pub const CTR_CKPT_BACKPRESSURE_WAIT_NS: &str = "ckpt.backpressure-wait-ns";
+/// Checkpoints submitted to the background writer.
+pub const CTR_CKPT_SUBMITS: &str = "ckpt.submits";
+/// Accumulated per-step spread between the slowest and fastest shard
+/// leg (ns) — the straggler cost the fixed-order reduce waits out.
+pub const CTR_SHARD_IMBALANCE_NS: &str = "shard.imbalance-ns";
+/// Sum of request-queue depths sampled at each batcher pop …
+pub const CTR_SERVE_QUEUE_DEPTH_SUM: &str = "serve.queue-depth-sum";
+/// … over this many samples.
+pub const CTR_SERVE_QUEUE_DEPTH_SAMPLES: &str = "serve.queue-depth-samples";
+/// Real (non-padding) rows across executed serve micro-batches …
+pub const CTR_SERVE_BATCH_REAL: &str = "serve.batch-rows-real";
+/// … out of this many total rows (fill ratio = real / total).
+pub const CTR_SERVE_BATCH_SLOTS: &str = "serve.batch-rows-total";
+
+/// The catalog key a trace row is attributed to.
+#[derive(Debug, Clone, Default)]
+pub struct TraceKey {
+    pub family: String,
+    pub method: String,
+    pub backend: String,
+    pub shards: usize,
+    pub batch: usize,
+}
+
+/// One logged span occurrence (event log only; aggregates live in the
+/// per-thread histograms).
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub phase: String,
+    pub thread: String,
+    /// Global record order (under the hub lock, so gap-free).
+    pub seq: u64,
+    /// Milliseconds since the hub was created.
+    pub t_ms: f64,
+    pub dur_ms: f64,
+}
+
+/// One supervised-recovery occurrence (`coordinator::supervisor`),
+/// always kept — recoveries are rare and load-bearing.
+#[derive(Debug, Clone)]
+pub struct RecoveryEvent {
+    /// Fault site that triggered the attempt (`util::fault` site name,
+    /// or `"unknown"` for non-injected failures).
+    pub site: String,
+    /// 1-based failed-attempt ordinal.
+    pub attempt: u64,
+    pub backoff_ms: u64,
+    pub t_ms: f64,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// (thread label, phase) -> samples.  Two-level key so the merge
+    /// order is fixed by `BTreeMap` iteration, not thread scheduling.
+    phases: BTreeMap<(String, String), Histogram>,
+    counters: BTreeMap<String, u64>,
+    events: Vec<SpanEvent>,
+    dropped_events: u64,
+    recoveries: Vec<RecoveryEvent>,
+    seq: u64,
+    key: TraceKey,
+}
+
+/// The shared collection point behind an [`Obs`] handle.
+pub struct ObsHub {
+    record_events: bool,
+    t0: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl ObsHub {
+    /// A record must never be lost to a poisoned mutex — spans are
+    /// recorded inside `catch_unwind` scopes (serve workers), and a
+    /// panic between lock and drop leaves only fully-written state.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn record(&self, thread: &str, phase: &str, dur: Duration) {
+        // A span floors at 1ns so "the phase ran" is always
+        // distinguishable from "the phase never ran" (totals > 0), even
+        // under a coarse clock.
+        let dur_ns = (dur.as_nanos().min(u64::MAX as u128) as u64).max(1);
+        let t_ms = self.t0.elapsed().as_secs_f64() * 1e3;
+        let mut g = self.lock();
+        g.phases
+            .entry((thread.to_string(), phase.to_string()))
+            .or_default()
+            .observe(dur_ns);
+        if self.record_events {
+            if g.events.len() < MAX_EVENTS {
+                let seq = g.seq;
+                g.seq += 1;
+                g.events.push(SpanEvent {
+                    phase: phase.to_string(),
+                    thread: thread.to_string(),
+                    seq,
+                    t_ms,
+                    dur_ms: dur_ns as f64 / 1e6,
+                });
+            } else {
+                g.dropped_events += 1;
+            }
+        }
+    }
+}
+
+/// Cheap cloneable telemetry handle, threaded explicitly (no process
+/// globals) through trainer, backends, prefetcher, registry, writer and
+/// serve — exactly like `Arc<FaultPlan>`.  [`Obs::off`] (the `Default`)
+/// turns every call into a no-op.
+#[derive(Clone, Default)]
+pub struct Obs {
+    hub: Option<Arc<ObsHub>>,
+}
+
+/// RAII span: created by [`Obs::span`], records its phase duration on
+/// drop under the dropping thread's label.
+pub struct SpanGuard {
+    hub: Option<Arc<ObsHub>>,
+    phase: &'static str,
+    t0: Instant,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(hub) = self.hub.take() {
+            hub.record(&current_thread_label(), self.phase, self.t0.elapsed());
+        }
+    }
+}
+
+fn current_thread_label() -> String {
+    std::thread::current().name().unwrap_or("main").to_string()
+}
+
+impl Obs {
+    /// The inert handle: every call is a no-op.
+    pub fn off() -> Self {
+        Obs { hub: None }
+    }
+
+    /// A live hub.  Aggregates are always collected; `record_events`
+    /// additionally keeps the per-span event log for a JSONL trace.
+    pub fn new(record_events: bool) -> Self {
+        Obs {
+            hub: Some(Arc::new(ObsHub {
+                record_events,
+                t0: Instant::now(),
+                inner: Mutex::new(Inner::default()),
+            })),
+        }
+    }
+
+    /// False for [`Obs::off`] handles.
+    pub fn is_on(&self) -> bool {
+        self.hub.is_some()
+    }
+
+    /// Attribute everything collected so far (and after) to this
+    /// catalog key — called once the backend is resolved.
+    pub fn set_key(&self, key: TraceKey) {
+        if let Some(h) = &self.hub {
+            h.lock().key = key;
+        }
+    }
+
+    /// Open a phase span; the duration records when the guard drops,
+    /// under the dropping thread's label.
+    pub fn span(&self, phase: &'static str) -> SpanGuard {
+        SpanGuard { hub: self.hub.clone(), phase, t0: Instant::now() }
+    }
+
+    /// Record an externally-timed duration under the calling thread.
+    pub fn record(&self, phase: &str, dur: Duration) {
+        if let Some(h) = &self.hub {
+            h.record(&current_thread_label(), phase, dur);
+        }
+    }
+
+    /// Record an externally-timed duration under an explicit thread
+    /// label (shard legs label themselves `shard-{i}` regardless of
+    /// which scoped thread ran them).
+    pub fn record_on(&self, thread: &str, phase: &str, dur: Duration) {
+        if let Some(h) = &self.hub {
+            h.record(thread, phase, dur);
+        }
+    }
+
+    /// Bump a named monotonic counter.
+    pub fn count(&self, name: &str, delta: u64) {
+        if let Some(h) = &self.hub {
+            let mut g = h.lock();
+            *g.counters.entry(name.to_string()).or_insert(0) += delta;
+        }
+    }
+
+    /// Record one supervised-recovery attempt as a structured event.
+    pub fn recovery(&self, site: &str, attempt: u64, backoff_ms: u64) {
+        if let Some(h) = &self.hub {
+            let t_ms = h.t0.elapsed().as_secs_f64() * 1e3;
+            h.lock().recoveries.push(RecoveryEvent {
+                site: site.to_string(),
+                attempt,
+                backoff_ms,
+                t_ms,
+            });
+        }
+    }
+
+    /// Merge everything collected so far into a [`RunTrace`] without
+    /// clearing the hub (a supervised run snapshots after its final
+    /// attempt and keeps accumulating across restarts).  `None` for an
+    /// [`Obs::off`] handle.
+    pub fn snapshot(&self) -> Option<RunTrace> {
+        let h = self.hub.as_ref()?;
+        let wall_ms = h.t0.elapsed().as_secs_f64() * 1e3;
+        let g = h.lock();
+        // Per-phase merge across thread labels: BTreeMap iteration is
+        // sorted by (thread, phase), so the merge order — and therefore
+        // the summary — is deterministic for identical recorded data.
+        let mut by_phase: BTreeMap<String, Histogram> = BTreeMap::new();
+        for ((_, phase), hist) in g.phases.iter() {
+            by_phase.entry(phase.clone()).or_default().merge(hist);
+        }
+        let phases = by_phase
+            .into_iter()
+            .map(|(phase, h)| PhaseSummary {
+                count: h.count(),
+                total_ms: h.total() as f64 / 1e6,
+                mean_ms: h.mean() / 1e6,
+                p50_ms: h.percentile(0.50) / 1e6,
+                p99_ms: h.percentile(0.99) / 1e6,
+                max_ms: h.max() as f64 / 1e6,
+                phase,
+            })
+            .collect();
+        let counters = g.counters.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        Some(RunTrace {
+            key: g.key.clone(),
+            wall_ms,
+            summary: ObsSummary { phases, counters },
+            events: g.events.clone(),
+            recoveries: g.recoveries.clone(),
+            dropped_events: g.dropped_events,
+        })
+    }
+}
+
+/// Per-phase aggregate row, the catalog-facing shape.
+#[derive(Debug, Clone)]
+pub struct PhaseSummary {
+    pub phase: String,
+    pub count: u64,
+    pub total_ms: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl PhaseSummary {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("total_ms", Json::num(self.total_ms)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("max_ms", Json::num(self.max_ms)),
+        ])
+    }
+}
+
+/// The end-of-run summary folded into `RunMetrics` (and from there into
+/// run-metrics JSON and `BENCH_runtime.json`).
+#[derive(Debug, Clone, Default)]
+pub struct ObsSummary {
+    /// Sorted by phase name.
+    pub phases: Vec<PhaseSummary>,
+    /// Sorted by counter name.
+    pub counters: Vec<(String, u64)>,
+}
+
+impl ObsSummary {
+    /// Total wall-ms spent in `phase` (0.0 when never recorded).
+    pub fn phase_total_ms(&self, phase: &str) -> f64 {
+        self.phases
+            .iter()
+            .find(|p| p.phase == phase)
+            .map(|p| p.total_ms)
+            .unwrap_or(0.0)
+    }
+
+    /// Final value of a named counter (0 when never bumped).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "phases",
+                Json::Obj(
+                    self.phases
+                        .iter()
+                        .map(|p| (p.phase.clone(), p.to_json()))
+                        .collect(),
+                ),
+            ),
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Everything one run recorded, ready to serialize as `obs_trace/v1`.
+#[derive(Debug, Clone)]
+pub struct RunTrace {
+    pub key: TraceKey,
+    /// Wall milliseconds from hub creation to snapshot.
+    pub wall_ms: f64,
+    pub summary: ObsSummary,
+    /// Per-span event log (empty unless events were recorded).
+    pub events: Vec<SpanEvent>,
+    pub recoveries: Vec<RecoveryEvent>,
+    /// Spans past [`MAX_EVENTS`] that aggregated but were not logged.
+    pub dropped_events: u64,
+}
+
+impl RunTrace {
+    /// Serialize as `obs_trace/v1` JSONL: one `meta` line, then `span`
+    /// events in record order, `recovery` events, final `counter`
+    /// values, and one `summary` line per phase.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let mut line = |j: Json| {
+            out.push_str(&j.to_string());
+            out.push('\n');
+        };
+        line(Json::obj(vec![
+            ("kind", Json::str("meta")),
+            ("schema", Json::str(TRACE_SCHEMA)),
+            ("family", Json::str(&self.key.family)),
+            ("method", Json::str(&self.key.method)),
+            ("backend", Json::str(&self.key.backend)),
+            ("shards", Json::num(self.key.shards as f64)),
+            ("batch", Json::num(self.key.batch as f64)),
+            ("wall_ms", Json::num(self.wall_ms)),
+            ("dropped_events", Json::num(self.dropped_events as f64)),
+        ]));
+        for e in &self.events {
+            line(Json::obj(vec![
+                ("kind", Json::str("span")),
+                ("phase", Json::str(&e.phase)),
+                ("thread", Json::str(&e.thread)),
+                ("seq", Json::num(e.seq as f64)),
+                ("t_ms", Json::num(e.t_ms)),
+                ("dur_ms", Json::num(e.dur_ms)),
+            ]));
+        }
+        for r in &self.recoveries {
+            line(Json::obj(vec![
+                ("kind", Json::str("recovery")),
+                ("site", Json::str(&r.site)),
+                ("attempt", Json::num(r.attempt as f64)),
+                ("backoff_ms", Json::num(r.backoff_ms as f64)),
+                ("t_ms", Json::num(r.t_ms)),
+            ]));
+        }
+        for (name, value) in &self.summary.counters {
+            line(Json::obj(vec![
+                ("kind", Json::str("counter")),
+                ("name", Json::str(name)),
+                ("value", Json::num(*value as f64)),
+            ]));
+        }
+        for p in &self.summary.phases {
+            line(Json::obj(vec![
+                ("kind", Json::str("summary")),
+                ("phase", Json::str(&p.phase)),
+                ("count", Json::num(p.count as f64)),
+                ("total_ms", Json::num(p.total_ms)),
+                ("mean_ms", Json::num(p.mean_ms)),
+                ("p50_ms", Json::num(p.p50_ms)),
+                ("p99_ms", Json::num(p.p99_ms)),
+                ("max_ms", Json::num(p.max_ms)),
+            ]));
+        }
+        out
+    }
+
+    /// Write the JSONL trace to `path`.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_jsonl())
+            .with_context(|| format!("writing obs trace {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_handle_is_a_total_noop() {
+        let obs = Obs::off();
+        assert!(!obs.is_on());
+        drop(obs.span(PHASE_STEP_EXEC));
+        obs.record(PHASE_AUGMENT, Duration::from_millis(1));
+        obs.count(CTR_PREFETCH_STALLS, 3);
+        obs.recovery("engine.train_step", 1, 10);
+        assert!(obs.snapshot().is_none());
+    }
+
+    #[test]
+    fn spans_aggregate_across_threads_and_merge_by_phase() {
+        let obs = Obs::new(false);
+        drop(obs.span(PHASE_STEP_EXEC));
+        obs.record_on("shard-0", PHASE_SHARD_EXEC, Duration::from_micros(100));
+        obs.record_on("shard-1", PHASE_SHARD_EXEC, Duration::from_micros(300));
+        obs.count(CTR_SHARD_IMBALANCE_NS, 200_000);
+        let t = obs.snapshot().unwrap();
+        // per-phase merge: both shard labels fold into one phase row
+        let shard = t
+            .summary
+            .phases
+            .iter()
+            .find(|p| p.phase == PHASE_SHARD_EXEC)
+            .expect("shard-exec row");
+        assert_eq!(shard.count, 2);
+        assert!(shard.total_ms >= 0.4 - 1e-9, "total {}", shard.total_ms);
+        assert!(t.summary.phase_total_ms(PHASE_STEP_EXEC) > 0.0);
+        assert_eq!(t.summary.counter(CTR_SHARD_IMBALANCE_NS), 200_000);
+        assert_eq!(t.summary.counter("no.such.counter"), 0);
+        // phases arrive sorted by name
+        let names: Vec<&str> =
+            t.summary.phases.iter().map(|p| p.phase.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        // events were not recorded (aggregate-only hub)
+        assert!(t.events.is_empty());
+        assert_eq!(t.dropped_events, 0);
+    }
+
+    #[test]
+    fn event_log_records_in_order_and_caps_explicitly() {
+        let obs = Obs::new(true);
+        obs.record(PHASE_AUGMENT, Duration::from_micros(10));
+        obs.record(PHASE_STEP_EXEC, Duration::from_micros(20));
+        let t = obs.snapshot().unwrap();
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.events[0].seq, 0);
+        assert_eq!(t.events[1].seq, 1);
+        assert_eq!(t.events[0].phase, PHASE_AUGMENT);
+        assert!(t.events[1].t_ms >= t.events[0].t_ms);
+
+        // Cap: aggregates keep counting, drops are counted not silent.
+        let obs = Obs::new(true);
+        for _ in 0..(MAX_EVENTS + 5) {
+            obs.record(PHASE_AUGMENT, Duration::from_nanos(50));
+        }
+        let t = obs.snapshot().unwrap();
+        assert_eq!(t.events.len(), MAX_EVENTS);
+        assert_eq!(t.dropped_events, 5);
+        let aug = t.summary.phases.iter().find(|p| p.phase == PHASE_AUGMENT);
+        assert_eq!(aug.unwrap().count, (MAX_EVENTS + 5) as u64);
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_the_parser() {
+        let obs = Obs::new(true);
+        obs.set_key(TraceKey {
+            family: "refmlp-tiny".into(),
+            method: "e2train".into(),
+            backend: "sharded".into(),
+            shards: 2,
+            batch: 8,
+        });
+        obs.record(PHASE_STEP_EXEC, Duration::from_micros(250));
+        obs.count(CTR_CKPT_SUBMITS, 1);
+        obs.recovery("shard.engine", 1, 20);
+        let trace = obs.snapshot().unwrap();
+        let text = trace.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 4, "meta + span + counter + summary");
+        let meta = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(meta.at(&["kind"]).as_str(), Some("meta"));
+        assert_eq!(meta.at(&["schema"]).as_str(), Some(TRACE_SCHEMA));
+        assert_eq!(meta.at(&["family"]).as_str(), Some("refmlp-tiny"));
+        assert_eq!(meta.at(&["shards"]).as_f64(), Some(2.0));
+        for l in &lines[1..] {
+            let v = crate::util::json::parse(l).unwrap();
+            let kind = v.at(&["kind"]).as_str().unwrap();
+            assert!(
+                ["span", "counter", "recovery", "summary"].contains(&kind),
+                "unexpected kind {kind}"
+            );
+        }
+        // the recovery row is structured, not a log line
+        let rec = lines
+            .iter()
+            .map(|l| crate::util::json::parse(l).unwrap())
+            .find(|v| v.at(&["kind"]).as_str() == Some("recovery"))
+            .expect("recovery row");
+        assert_eq!(rec.at(&["site"]).as_str(), Some("shard.engine"));
+        assert_eq!(rec.at(&["attempt"]).as_f64(), Some(1.0));
+        assert_eq!(rec.at(&["backoff_ms"]).as_f64(), Some(20.0));
+    }
+}

@@ -1,0 +1,272 @@
+//! `e2train trace-report` — aggregate an `obs_trace/v1` JSONL file into
+//! a per-phase table (count, total ms, mean, p50/p99, % of run).
+//!
+//! Aggregation prefers the raw `span` events (re-histogrammed here, so
+//! the table reflects exactly what the trace carries); a phase whose
+//! spans were capped out of the event log — or a trace stripped down to
+//! its tail — falls back to that phase's authoritative `summary` row.
+//! Counters and recovery events are appended verbatim.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+use super::hist::Histogram;
+use super::TRACE_SCHEMA;
+
+/// One rendered table row.
+#[derive(Debug, Clone)]
+pub struct ReportRow {
+    pub phase: String,
+    pub count: u64,
+    pub total_ms: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Share of the run's wall clock (0..100); phases overlap across
+    /// threads, so the column need not sum to 100.
+    pub pct_of_run: f64,
+}
+
+/// Aggregated view of one trace file.
+#[derive(Debug, Clone, Default)]
+pub struct TraceReport {
+    /// (family, method, backend, shards, batch) from the meta row.
+    pub key_line: String,
+    pub wall_ms: f64,
+    pub dropped_events: u64,
+    /// Sorted by total ms, descending.
+    pub rows: Vec<ReportRow>,
+    pub counters: Vec<(String, u64)>,
+    /// (site, attempt, backoff_ms) per supervised recovery.
+    pub recoveries: Vec<(String, u64, u64)>,
+}
+
+/// Parse + aggregate an `obs_trace/v1` JSONL document.
+pub fn aggregate(text: &str) -> Result<TraceReport> {
+    let mut meta: Option<Json> = None;
+    let mut spans: Vec<(String, f64)> = Vec::new();
+    let mut summaries: Vec<Json> = Vec::new();
+    let mut counters = Vec::new();
+    let mut recoveries = Vec::new();
+
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = parse(line).with_context(|| format!("trace line {}", i + 1))?;
+        match v.at(&["kind"]).as_str() {
+            Some("meta") => {
+                let schema = v.at(&["schema"]).as_str().unwrap_or("?");
+                if schema != TRACE_SCHEMA {
+                    bail!("unsupported trace schema {schema:?} (want {TRACE_SCHEMA})");
+                }
+                meta = Some(v);
+            }
+            Some("span") => spans.push((
+                v.at(&["phase"]).as_str().unwrap_or("?").to_string(),
+                v.at(&["dur_ms"]).as_f64().unwrap_or(0.0),
+            )),
+            Some("summary") => summaries.push(v),
+            Some("counter") => counters.push((
+                v.at(&["name"]).as_str().unwrap_or("?").to_string(),
+                v.at(&["value"]).as_u64().unwrap_or(0),
+            )),
+            Some("recovery") => recoveries.push((
+                v.at(&["site"]).as_str().unwrap_or("?").to_string(),
+                v.at(&["attempt"]).as_u64().unwrap_or(0),
+                v.at(&["backoff_ms"]).as_u64().unwrap_or(0),
+            )),
+            other => bail!("trace line {}: unknown kind {other:?}", i + 1),
+        }
+    }
+    let meta = meta.ok_or_else(|| {
+        anyhow::anyhow!("no meta row — not an {TRACE_SCHEMA} trace")
+    })?;
+    let wall_ms = meta.at(&["wall_ms"]).as_f64().unwrap_or(0.0);
+
+    // Re-aggregate spans per phase through the same fixed-bucket
+    // histogram the live collector uses.
+    let mut by_phase: std::collections::BTreeMap<String, Histogram> =
+        std::collections::BTreeMap::new();
+    for (phase, dur_ms) in spans {
+        by_phase
+            .entry(phase)
+            .or_default()
+            .observe((dur_ms * 1e6).max(1.0) as u64);
+    }
+    let mut rows: Vec<ReportRow> = Vec::new();
+    for (phase, h) in &by_phase {
+        rows.push(ReportRow {
+            phase: phase.clone(),
+            count: h.count(),
+            total_ms: h.total() as f64 / 1e6,
+            mean_ms: h.mean() / 1e6,
+            p50_ms: h.percentile(0.50) / 1e6,
+            p99_ms: h.percentile(0.99) / 1e6,
+            pct_of_run: 0.0,
+        });
+    }
+    // Summary rows cover phases whose spans never made the event log
+    // (capped, or a trace reduced to its summary tail).
+    for s in &summaries {
+        let phase = s.at(&["phase"]).as_str().unwrap_or("?");
+        let count = s.at(&["count"]).as_u64().unwrap_or(0);
+        let logged = by_phase.get(phase).map(|h| h.count()).unwrap_or(0);
+        if logged >= count {
+            continue;
+        }
+        rows.retain(|r| r.phase != phase);
+        rows.push(ReportRow {
+            phase: phase.to_string(),
+            count,
+            total_ms: s.at(&["total_ms"]).as_f64().unwrap_or(0.0),
+            mean_ms: s.at(&["mean_ms"]).as_f64().unwrap_or(0.0),
+            p50_ms: s.at(&["p50_ms"]).as_f64().unwrap_or(0.0),
+            p99_ms: s.at(&["p99_ms"]).as_f64().unwrap_or(0.0),
+            pct_of_run: 0.0,
+        });
+    }
+    for r in &mut rows {
+        r.pct_of_run = if wall_ms > 0.0 {
+            100.0 * r.total_ms / wall_ms
+        } else {
+            0.0
+        };
+    }
+    rows.sort_by(|a, b| {
+        b.total_ms
+            .partial_cmp(&a.total_ms)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.phase.cmp(&b.phase))
+    });
+
+    Ok(TraceReport {
+        key_line: format!(
+            "{}/{} backend={} shards={} batch={}",
+            meta.at(&["family"]).as_str().unwrap_or("?"),
+            meta.at(&["method"]).as_str().unwrap_or("?"),
+            meta.at(&["backend"]).as_str().unwrap_or("?"),
+            meta.at(&["shards"]).as_u64().unwrap_or(0),
+            meta.at(&["batch"]).as_u64().unwrap_or(0),
+        ),
+        wall_ms,
+        dropped_events: meta.at(&["dropped_events"]).as_u64().unwrap_or(0),
+        rows,
+        counters,
+        recoveries,
+    })
+}
+
+impl TraceReport {
+    /// Render the human-facing table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace: {}  wall {:.1}ms\n",
+            self.key_line, self.wall_ms
+        ));
+        if self.dropped_events > 0 {
+            out.push_str(&format!(
+                "note: {} span event(s) past the {}-event cap were aggregated but not logged\n",
+                self.dropped_events,
+                super::MAX_EVENTS
+            ));
+        }
+        out.push_str(&format!(
+            "{:<22} {:>8} {:>12} {:>10} {:>10} {:>10} {:>7}\n",
+            "phase", "count", "total ms", "mean ms", "p50 ms", "p99 ms", "% run"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<22} {:>8} {:>12.3} {:>10.4} {:>10.4} {:>10.4} {:>6.1}%\n",
+                r.phase, r.count, r.total_ms, r.mean_ms, r.p50_ms, r.p99_ms, r.pct_of_run
+            ));
+        }
+        if !self.counters.is_empty() {
+            out.push_str("counters:\n");
+            for (name, value) in &self.counters {
+                out.push_str(&format!("  {name:<38} {value}\n"));
+            }
+        }
+        if !self.recoveries.is_empty() {
+            out.push_str("recoveries:\n");
+            for (site, attempt, backoff_ms) in &self.recoveries {
+                out.push_str(&format!(
+                    "  attempt {attempt} at {site} (backoff {backoff_ms}ms)\n"
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Obs, TraceKey, CTR_CKPT_SUBMITS, PHASE_AUGMENT, PHASE_STEP_EXEC};
+    use std::time::Duration;
+
+    fn sample_trace() -> String {
+        let obs = Obs::new(true);
+        obs.set_key(TraceKey {
+            family: "refmlp-tiny".into(),
+            method: "sgd32".into(),
+            backend: "host".into(),
+            shards: 0,
+            batch: 8,
+        });
+        for i in 0..10 {
+            obs.record(PHASE_STEP_EXEC, Duration::from_micros(200 + i));
+            obs.record(PHASE_AUGMENT, Duration::from_micros(40));
+        }
+        obs.count(CTR_CKPT_SUBMITS, 3);
+        obs.recovery("engine.train_step", 1, 10);
+        obs.snapshot().unwrap().to_jsonl()
+    }
+
+    #[test]
+    fn aggregates_spans_into_the_table() {
+        let rep = aggregate(&sample_trace()).unwrap();
+        assert!(rep.key_line.contains("refmlp-tiny/sgd32"));
+        assert!(rep.key_line.contains("backend=host"));
+        assert!(rep.wall_ms > 0.0);
+        let step = rep.rows.iter().find(|r| r.phase == PHASE_STEP_EXEC).unwrap();
+        assert_eq!(step.count, 10);
+        assert!(step.total_ms >= 2.0, "total {}", step.total_ms);
+        assert!(step.p99_ms >= step.p50_ms);
+        // step-exec dominates augment, so it sorts first
+        assert_eq!(rep.rows[0].phase, PHASE_STEP_EXEC);
+        assert_eq!(rep.counters, vec![(CTR_CKPT_SUBMITS.to_string(), 3)]);
+        assert_eq!(rep.recoveries.len(), 1);
+        let text = rep.render();
+        assert!(text.contains("step-exec"));
+        assert!(text.contains("% run"));
+        assert!(text.contains(CTR_CKPT_SUBMITS));
+        assert!(text.contains("engine.train_step"));
+    }
+
+    #[test]
+    fn summary_rows_back_fill_missing_spans() {
+        // Keep only meta + summary lines (a trace reduced to its tail).
+        let tail: String = sample_trace()
+            .lines()
+            .filter(|l| l.contains("\"meta\"") || l.contains("\"summary\""))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let rep = aggregate(&tail).unwrap();
+        let step = rep.rows.iter().find(|r| r.phase == PHASE_STEP_EXEC).unwrap();
+        assert_eq!(step.count, 10);
+        assert!(step.total_ms > 0.0);
+    }
+
+    #[test]
+    fn rejects_non_traces() {
+        assert!(aggregate("").is_err());
+        assert!(aggregate("{\"kind\":\"span\"}").is_err(), "no meta row");
+        let bad_schema =
+            "{\"kind\":\"meta\",\"schema\":\"obs_trace/v9\",\"wall_ms\":1}";
+        let err = aggregate(bad_schema).unwrap_err();
+        assert!(format!("{err:#}").contains("obs_trace/v9"));
+    }
+}

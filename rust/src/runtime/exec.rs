@@ -62,6 +62,13 @@ pub trait StepBackend {
     /// fan-out for in-place shard recovery.
     fn set_faults(&mut self, _plan: Arc<FaultPlan>) {}
 
+    /// Attach an observability handle (`obs` subsystem).  Mirrors
+    /// `set_faults`: single-executor backends are timed from the
+    /// trainer's step loop, so the default is a no-op; the sharded
+    /// backend forwards the handle to record per-shard execution time,
+    /// reduce/apply spans and the shard imbalance counter.
+    fn set_obs(&mut self, _obs: crate::obs::Obs) {}
+
     /// Execute one optimizer step on a full batch.
     fn train_step(
         &mut self,
@@ -293,6 +300,10 @@ impl StepBackend for ShardedBackend<'_> {
 
     fn set_faults(&mut self, plan: Arc<FaultPlan>) {
         self.inner.set_faults(plan);
+    }
+
+    fn set_obs(&mut self, obs: crate::obs::Obs) {
+        self.inner.set_obs(obs);
     }
 
     fn train_step(

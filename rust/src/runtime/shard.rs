@@ -45,11 +45,12 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::sampler::{shard_ranges, slice_batch};
+use crate::obs::{self, Obs};
 use crate::optim::update::{apply_update, GateIn, ParamIn, RunMeanIn, UpdateCfg};
 use crate::util::fault::{self, FaultPlan, InjectedFault};
 
@@ -113,6 +114,10 @@ pub struct ShardedTrainer {
     base: Engine,
     grad_path: PathBuf,
     faults: Option<Arc<FaultPlan>>,
+    /// Observability handle (per-shard exec timing, reduce/apply spans,
+    /// the imbalance counter).  `Obs::off()` unless the trainer attached
+    /// a live hub — always inert either way (tests/obs_invariance.rs).
+    obs: Obs,
     /// In-place shard recoveries performed so far (telemetry/tests).
     recoveries: u64,
 }
@@ -219,6 +224,7 @@ impl ShardedTrainer {
             base: base.fork()?,
             grad_path,
             faults: None,
+            obs: Obs::off(),
             recoveries: 0,
         })
     }
@@ -227,6 +233,12 @@ impl ShardedTrainer {
     /// and the recovery fork (`pool.fork`).
     pub fn set_faults(&mut self, plan: Arc<FaultPlan>) {
         self.faults = Some(plan);
+    }
+
+    /// Attach an observability handle (forwarded by
+    /// [`super::exec::ShardedBackend::set_obs`]).
+    pub fn set_obs(&mut self, obs: Obs) {
+        self.obs = obs;
     }
 
     /// In-place shard recoveries performed so far.
@@ -354,12 +366,14 @@ impl ShardedTrainer {
             Ok(())
         };
 
-        let mut results: Vec<Option<Result<Vec<HostTensor>>>> =
+        let mut results: Vec<Option<(Result<Vec<HostTensor>>, Duration)>> =
             slices.iter().map(|_| None).collect();
         if slices.len() == 1 {
-            results[0] = Some(inject(0).and_then(|()| {
+            let t0 = Instant::now();
+            let r = inject(0).and_then(|()| {
                 run_shard(&self.shards[0], &slices[0].0, &slices[0].1, n_scalar)
-            }));
+            });
+            results[0] = Some((r, t0.elapsed()));
         } else {
             std::thread::scope(|scope| {
                 for (i, ((shard, (xs, ys)), slot)) in self
@@ -371,19 +385,38 @@ impl ShardedTrainer {
                 {
                     let inject = &inject;
                     scope.spawn(move || {
-                        *slot = Some(
-                            inject(i).and_then(|()| run_shard(shard, xs, ys, n_scalar)),
-                        );
+                        let t0 = Instant::now();
+                        let r =
+                            inject(i).and_then(|()| run_shard(shard, xs, ys, n_scalar));
+                        *slot = Some((r, t0.elapsed()));
                     });
                 }
             });
         }
-        let mut outs = Vec::with_capacity(results.len());
+        let n = results.len();
+        let mut outs = Vec::with_capacity(n);
+        let (mut min_dur, mut max_dur) = (Duration::MAX, Duration::ZERO);
         for (i, r) in results.into_iter().enumerate() {
-            match r.unwrap_or_else(|| Err(anyhow!("shard worker never ran"))) {
+            let (res, dur) = r.unwrap_or_else(|| {
+                (Err(anyhow!("shard worker never ran")), Duration::ZERO)
+            });
+            self.obs
+                .record_on(&format!("shard-{i}"), obs::PHASE_SHARD_EXEC, dur);
+            min_dur = min_dur.min(dur);
+            max_dur = max_dur.max(dur);
+            match res {
                 Ok(o) => outs.push(o),
                 Err(e) => return Err((i, e)),
             }
+        }
+        if n > 1 {
+            // Straggler gap this step: slowest minus fastest shard leg.
+            // Floored at 1ns (like span records) so the counter also
+            // proves the multi-shard fan-out path ran at all.
+            self.obs.count(
+                obs::CTR_SHARD_IMBALANCE_NS,
+                (max_dur.saturating_sub(min_dur).as_nanos() as u64).max(1),
+            );
         }
         Ok(outs)
     }
@@ -440,6 +473,7 @@ impl ShardedTrainer {
             }
         }
 
+        let t_reduce = Instant::now();
         // ---- fixed-order all-reduce of gradient contributions --------
         let mut grads: Vec<Vec<f32>> = self
             .data_params
@@ -496,7 +530,9 @@ impl ShardedTrainer {
             }
             None => None,
         };
+        self.obs.record(obs::PHASE_SHARD_REDUCE, t_reduce.elapsed());
 
+        let t_apply = Instant::now();
         // ---- the one shared optimizer update -------------------------
         let ucfg = UpdateCfg {
             lr: hp.lr,
@@ -556,6 +592,7 @@ impl ShardedTrainer {
         }
 
         self.rebroadcast()?;
+        self.obs.record(obs::PHASE_OPTIM_APPLY, t_apply.elapsed());
 
         Ok(StepMetrics {
             loss: (loss_sum / b as f32) as f64,

@@ -22,6 +22,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::obs::{self, Obs};
 use crate::runtime::HostTensor;
 
 use super::queue::{Bounded, PopResult};
@@ -108,6 +109,7 @@ pub(crate) fn run(
     queue: &Bounded<Request>,
     batch_q: &Bounded<MicroBatch>,
     stats: &StatsCollector,
+    obs: &Obs,
     micro_batch: usize,
     hw: usize,
     max_delay: Duration,
@@ -124,6 +126,10 @@ pub(crate) fn run(
     // Deadline of the oldest staged sample; meaningful only while the
     // staging buffer is non-empty.
     let mut deadline = Instant::now();
+    // Assembly span start: set when the first sample of a batch stages,
+    // taken when that batch flushes — the coalescing wait the
+    // deadline-vs-size knob trades against (`serve-batch-assembly`).
+    let mut t_assembly: Option<Instant> = None;
 
     loop {
         let req = if staging.routes.is_empty() {
@@ -136,12 +142,19 @@ pub(crate) fn run(
             match queue.pop_deadline(deadline) {
                 PopResult::Item(r) => r,
                 PopResult::TimedOut => {
+                    if let Some(t0) = t_assembly.take() {
+                        obs.record(obs::PHASE_SERVE_ASSEMBLY, t0.elapsed());
+                    }
                     staging.flush(batch_q);
                     continue;
                 }
                 PopResult::Closed => break,
             }
         };
+        // Request-queue depth the moment after this pop: how much work
+        // clients have backed up behind the batcher.
+        obs.count(obs::CTR_SERVE_QUEUE_DEPTH_SUM, queue.len() as u64);
+        obs.count(obs::CTR_SERVE_QUEUE_DEPTH_SAMPLES, 1);
 
         // Drop-before-dispatch: a request that already missed its
         // client deadline completes with an explicit expired error —
@@ -159,6 +172,7 @@ pub(crate) fn run(
         for (k, &label) in req.y.iter().enumerate() {
             if staging.routes.is_empty() {
                 deadline = Instant::now() + max_delay;
+                t_assembly = Some(Instant::now());
             }
             staging
                 .x
@@ -170,11 +184,17 @@ pub(crate) fn run(
                 t_submit: req.t_submit,
             });
             if staging.routes.len() == micro_batch {
+                if let Some(t0) = t_assembly.take() {
+                    obs.record(obs::PHASE_SERVE_ASSEMBLY, t0.elapsed());
+                }
                 staging.flush(batch_q);
             }
         }
     }
     // Closed: flush the tail so no ticket is left pending.
+    if let Some(t0) = t_assembly.take() {
+        obs.record(obs::PHASE_SERVE_ASSEMBLY, t0.elapsed());
+    }
     staging.flush(batch_q);
 }
 

@@ -62,6 +62,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::checkpoint::{CheckpointRegistry, RetentionCfg};
+use crate::obs::Obs;
 use crate::runtime::{
     BackendKind, Engine, EnginePool, Manifest, SnapshotCell, StateSnapshot,
     TrainProgram,
@@ -92,6 +93,11 @@ pub struct ServeCfg {
     /// Fault-injection plan (tests): arms the `serve.worker` death site
     /// and the `pool.fork` respawn-failure site.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Observability handle ([`Obs::off`] by default): the batcher
+    /// records `serve-batch-assembly` spans and queue-depth samples,
+    /// workers record `serve-infer` spans and batch fill-ratio
+    /// counters — all into the same trace a co-located trainer writes.
+    pub obs: Obs,
 }
 
 impl Default for ServeCfg {
@@ -103,6 +109,7 @@ impl Default for ServeCfg {
             micro_batch: None,
             max_respawns: 4,
             faults: None,
+            obs: Obs::off(),
         }
     }
 }
@@ -393,10 +400,11 @@ impl ServeService {
             let batch_q = batch_q.clone();
             let st = stats.clone();
             let max_delay = cfg.max_delay;
+            let obs = cfg.obs.clone();
             std::thread::Builder::new()
                 .name("e2train-serve-batcher".into())
                 .spawn(move || {
-                    batcher::run(&queue, &batch_q, &st, micro_batch, hw, max_delay)
+                    batcher::run(&queue, &batch_q, &st, &obs, micro_batch, hw, max_delay)
                 })
                 .context("spawning serve batcher")?
         };
@@ -422,6 +430,7 @@ impl ServeService {
                 stats: stats.clone(),
                 live: live.clone(),
                 faults: cfg.faults.clone(),
+                obs: cfg.obs.clone(),
                 index: i,
                 deaths: deaths.clone(),
             };
@@ -459,6 +468,7 @@ impl ServeService {
                 stats: stats.clone(),
                 live: live.clone(),
                 faults: cfg.faults.clone(),
+                obs: cfg.obs.clone(),
                 deaths: deaths.clone(),
                 workers: workers.clone(),
             };
@@ -582,6 +592,7 @@ struct MonitorCtx {
     stats: Arc<StatsCollector>,
     live: Arc<AtomicUsize>,
     faults: Option<Arc<FaultPlan>>,
+    obs: Obs,
     deaths: mpsc::Sender<MonitorMsg>,
     workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
@@ -667,6 +678,7 @@ fn respawn_worker(ctx: &MonitorCtx, index: usize) -> Result<JoinHandle<()>> {
         stats: ctx.stats.clone(),
         live: ctx.live.clone(),
         faults: ctx.faults.clone(),
+        obs: ctx.obs.clone(),
         index,
         deaths: ctx.deaths.clone(),
     };

@@ -7,28 +7,26 @@
 //! means it is fully amortized) and one latency point per completed
 //! sample (submit -> result fill).
 //!
-//! Bounded by design: occupancy keeps running sums, and latencies live
-//! in a fixed-size ring ([`LATENCY_WINDOW`] most recent samples), so a
-//! long-lived service neither grows memory without bound nor stalls
-//! the worker pool while a `stats()` snapshot clones history.
-//! Percentiles therefore describe the recent window; counts and means
-//! are lifetime.
+//! Bounded by design: occupancy keeps running sums, and latencies land
+//! in a fixed 252-bucket log-scale [`Histogram`]
+//! (`obs::hist`) — observing is O(1), memory is constant no matter how
+//! long the service lives, and a `stats()` snapshot never sorts or
+//! clones sample history while workers wait on the lock.  Bucket upper
+//! bounds overestimate a sample by at most 25%, clamped to the exact
+//! observed max; counts and means stay exact and lifetime.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
-/// Latency samples retained for percentile estimation (most recent).
-pub const LATENCY_WINDOW: usize = 1 << 16;
+use crate::obs::hist::Histogram;
 
 #[derive(Default)]
 struct StatsInner {
-    /// Ring of the most recent completion latencies (seconds).
-    latencies: Vec<f64>,
-    /// Ring cursor (next slot to overwrite once the ring is full).
-    cursor: usize,
+    /// Completion latencies in nanoseconds (fixed-size log histogram).
+    latency: Histogram,
     /// Lifetime completed-sample count.
     samples: usize,
-    /// Lifetime latency sum (for the lifetime mean).
+    /// Lifetime latency sum (for the exact lifetime mean).
     latency_sum_s: f64,
     /// Lifetime executed-batch count.
     batches: usize,
@@ -84,77 +82,48 @@ impl StatsCollector {
     /// One completed sample submitted at `t_submit`.
     pub fn record_sample(&self, t_submit: Instant) {
         let now = Instant::now();
-        let lat = now.duration_since(t_submit).as_secs_f64();
+        let lat = now.duration_since(t_submit);
         let mut g = self.inner.lock().unwrap();
-        if g.latencies.len() < LATENCY_WINDOW {
-            g.latencies.push(lat);
-        } else {
-            let i = g.cursor;
-            g.latencies[i] = lat;
-        }
-        g.cursor = (g.cursor + 1) % LATENCY_WINDOW;
+        g.latency.observe(lat.as_nanos() as u64);
         g.samples += 1;
-        g.latency_sum_s += lat;
+        g.latency_sum_s += lat.as_secs_f64();
         if g.first_done.is_none() {
             g.first_done = Some(now);
         }
         g.last_done = Some(now);
     }
 
-    /// Aggregate everything recorded so far.  The latency history is
-    /// cloned under the lock but sorted outside it, so workers are
-    /// never blocked behind the sort.
+    /// Aggregate everything recorded so far.  Percentiles come straight
+    /// off the histogram — no sort, no history clone, O(buckets) under
+    /// the lock.
     pub fn snapshot(&self) -> ServeStats {
-        let (
-            mut lat,
-            samples,
-            latency_sum_s,
-            batches,
-            occupancy_sum,
-            expired,
-            respawns,
-            registry_retries,
-            wall_s,
-        ) = {
-            let g = self.inner.lock().unwrap();
-            (
-                g.latencies.clone(),
-                g.samples,
-                g.latency_sum_s,
-                g.batches,
-                g.occupancy_sum,
-                g.expired,
-                g.respawns,
-                g.registry_retries,
-                match (g.first_done, g.last_done) {
-                    (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
-                    _ => 0.0,
-                },
-            )
+        let g = self.inner.lock().unwrap();
+        let wall_s = match (g.first_done, g.last_done) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
         };
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         ServeStats {
-            samples,
-            batches,
-            expired,
-            worker_respawns: respawns,
-            registry_retries,
-            occupancy_mean: if batches == 0 {
+            samples: g.samples,
+            batches: g.batches,
+            expired: g.expired,
+            worker_respawns: g.respawns,
+            registry_retries: g.registry_retries,
+            occupancy_mean: if g.batches == 0 {
                 0.0
             } else {
-                occupancy_sum as f64 / batches as f64
+                g.occupancy_sum as f64 / g.batches as f64
             },
-            latency_p50_s: percentile(&lat, 0.50),
-            latency_p99_s: percentile(&lat, 0.99),
-            latency_mean_s: if samples == 0 {
+            latency_p50_s: g.latency.percentile(0.50) / 1e9,
+            latency_p99_s: g.latency.percentile(0.99) / 1e9,
+            latency_mean_s: if g.samples == 0 {
                 0.0
             } else {
-                latency_sum_s / samples as f64
+                g.latency_sum_s / g.samples as f64
             },
             // Completion-window throughput; the bench harness also
             // reports end-to-end wall throughput around the client run.
             throughput_sps: if wall_s > 0.0 {
-                samples as f64 / wall_s
+                g.samples as f64 / wall_s
             } else {
                 0.0
             },
@@ -162,7 +131,9 @@ impl StatsCollector {
     }
 }
 
-/// `p` in [0, 1] over an ascending-sorted slice (nearest-rank).
+/// `p` in [0, 1] over an ascending-sorted slice (nearest-rank).  The
+/// exact-sample counterpart of [`Histogram::percentile`]; bench
+/// harnesses that hold their own sample vectors still use it.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
@@ -190,10 +161,12 @@ pub struct ServeStats {
     /// Mean real samples per executed micro-batch (> 1 means requests
     /// actually coalesced).
     pub occupancy_mean: f64,
-    /// Percentiles over the most recent [`LATENCY_WINDOW`] samples.
+    /// Lifetime latency percentiles off the fixed-bucket histogram:
+    /// a bucket upper bound, so ≤ 25% above the true sample, clamped
+    /// to the exact observed max.
     pub latency_p50_s: f64,
     pub latency_p99_s: f64,
-    /// Lifetime mean completion latency.
+    /// Lifetime mean completion latency (exact).
     pub latency_mean_s: f64,
     /// Samples per second over the completion window.
     pub throughput_sps: f64,
@@ -234,21 +207,36 @@ mod tests {
         assert_eq!(s.worker_respawns, 1);
         assert_eq!(s.registry_retries, 2);
         assert!((s.occupancy_mean - 3.0).abs() < 1e-12);
+        // Histogram percentiles are upper bounds clamped to the exact
+        // max, so they can never under-report the 10ms latency floor.
         assert!(s.latency_p50_s >= 0.010);
         assert!(s.latency_p99_s >= s.latency_p50_s);
         assert!(s.latency_mean_s >= 0.010);
+        // ≤ 25% bucket overestimate, and the max clamp keeps p99 at or
+        // below the largest real sample (well under double the floor).
+        assert!(s.latency_p99_s < 0.020, "p99 {} too loose", s.latency_p99_s);
     }
 
     #[test]
-    fn latency_ring_is_bounded() {
+    fn latency_memory_is_bounded() {
         let c = StatsCollector::new();
         let t0 = Instant::now();
-        for _ in 0..(LATENCY_WINDOW + 10) {
+        let n = (1 << 16) + 10;
+        for _ in 0..n {
             c.record_sample(t0);
         }
         let g = c.inner.lock().unwrap();
-        assert_eq!(g.latencies.len(), LATENCY_WINDOW, "ring must not grow");
-        assert_eq!(g.samples, LATENCY_WINDOW + 10, "lifetime count keeps going");
-        assert_eq!(g.cursor, 10);
+        assert_eq!(
+            g.latency.count(),
+            n as u64,
+            "histogram absorbs every sample"
+        );
+        assert_eq!(g.samples, n, "lifetime count keeps going");
+        // The histogram's storage is a fixed bucket array — no
+        // per-sample history exists to grow.
+        assert!(
+            std::mem::size_of::<Histogram>() < 64,
+            "histogram header stays constant-size"
+        );
     }
 }

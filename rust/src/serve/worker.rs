@@ -22,6 +22,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 
+use crate::obs::{self, Obs};
 use crate::runtime::{
     row_argmax, row_rank, row_softmax_loss, Engine, SnapshotCell, TensorData,
     TrainProgram,
@@ -43,6 +44,9 @@ pub(crate) struct WorkerCtx {
     /// Workers still consuming the batch queue (respawns re-increment).
     pub live: Arc<AtomicUsize>,
     pub faults: Option<Arc<FaultPlan>>,
+    /// Records `serve-infer` spans and batch fill-ratio counters on
+    /// this worker's thread.
+    pub obs: Obs,
     /// Stable worker slot (respawns reuse the dead worker's index).
     pub index: usize,
     /// Death reports to the service monitor.
@@ -125,7 +129,7 @@ fn serve_loop(ctx: &WorkerCtx) -> WorkerExit {
         // with mismatched shapes) we still own it and can fail its
         // collectors — no client may ever hang in Ticket::wait.
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            process_batch(&prog, &mb, &ctx.cell, &ctx.stats)
+            process_batch(&prog, &mb, &ctx.cell, &ctx.stats, &ctx.obs)
         }));
         if r.is_err() {
             fail_batch(&mb, "serve worker panicked executing the batch");
@@ -139,6 +143,7 @@ fn process_batch(
     mb: &MicroBatch,
     cell: &SnapshotCell,
     stats: &StatsCollector,
+    obs_handle: &Obs,
 ) {
     let classes = prog.manifest.arch.num_classes;
     let snap = match cell.load() {
@@ -148,6 +153,7 @@ fn process_batch(
             return;
         }
     };
+    let t_infer = std::time::Instant::now();
     let out = match prog.eval_batch_snapshot(&snap, &mb.x, &mb.y) {
         Ok(o) => o,
         Err(e) => {
@@ -155,6 +161,7 @@ fn process_batch(
             return;
         }
     };
+    obs_handle.record(obs::PHASE_SERVE_INFER, t_infer.elapsed());
     let logits = match out.logits.as_ref().map(|t| t.as_f32()) {
         Some(Ok(v)) => v,
         Some(Err(_)) => {
@@ -181,6 +188,10 @@ fn process_batch(
     // The batch actually executed: this is where occupancy counts
     // (failed batches above never reach the coalescing stats).
     stats.record_batch(mb.routes.len());
+    // Fill ratio: real rows over padded capacity of executed batches
+    // (labels carry the padded length — one row per micro-batch slot).
+    obs_handle.count(obs::CTR_SERVE_BATCH_REAL, mb.routes.len() as u64);
+    obs_handle.count(obs::CTR_SERVE_BATCH_SLOTS, labels.len() as u64);
     for (i, route) in mb.routes.iter().enumerate() {
         let zr = &logits[i * classes..(i + 1) * classes];
         let label = labels[i];

@@ -230,6 +230,14 @@ pub fn is_injected(err: &anyhow::Error) -> bool {
     err.chain().any(|c| c.downcast_ref::<InjectedFault>().is_some())
 }
 
+/// The fault site carried in `err`'s chain, when the error is an
+/// injection — lets the supervisor label recovery events in the run
+/// trace without string matching.
+pub fn injected_site(err: &anyhow::Error) -> Option<&str> {
+    err.chain()
+        .find_map(|c| c.downcast_ref::<InjectedFault>().map(|f| f.site.as_str()))
+}
+
 /// An `io::Write` adapter that accepts `budget` bytes and then fails
 /// every write with an [`InjectedFault`]-carrying error — the
 /// `checkpoint.sink` site ("disk full after N bytes").

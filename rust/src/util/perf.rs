@@ -46,6 +46,15 @@ pub struct PrefetchComparison {
     /// trajectories stay attributable across the `cfg.backend` knob.
     pub exec_backend: String,
     pub shards: usize,
+    /// Wall-ms the prefetch-on run's consumer spent acquiring batches
+    /// (`prefetch-stall` phase): near zero means the producer kept up.
+    pub prefetch_stall_ms: f64,
+    /// Mean prefetch-channel occupancy over the on-run's consumer
+    /// samples (0 when never sampled): how full the pipeline ran.
+    pub prefetch_occupancy: f64,
+    /// Wall-ms the on-run's step loop blocked submitting checkpoints to
+    /// the depth-1 writer queue (disk backpressure reaching the loop).
+    pub ckpt_backpressure_wait_ms: f64,
 }
 
 /// Measure train-step latency through both state paths for one
@@ -109,6 +118,14 @@ pub fn compare_prefetch(
         cfg.artifacts_dir = artifacts.to_path_buf();
         cfg.prefetch = prefetch;
         cfg.smd.enabled = false;
+        // Checkpoint a few times per run so the writer path (and its
+        // submit backpressure counter) is exercised by the same run the
+        // report describes.
+        cfg.checkpoint.every = (iters / 3).max(1);
+        cfg.checkpoint.dir = Some(artifacts.join(format!(
+            "_bench_ckpt_{}",
+            if prefetch { "on" } else { "off" }
+        )));
         let manifest = crate::runtime::Manifest::load(&cfg.manifest_path())?;
         cfg.data = DataCfg::Synthetic {
             classes: manifest.arch.num_classes,
@@ -121,6 +138,8 @@ pub fn compare_prefetch(
     };
     let on = run(true)?;
     let off = run(false)?;
+    let obs = on.obs.clone().unwrap_or_default();
+    let occ_samples = obs.counter(crate::obs::CTR_PREFETCH_OCC_SAMPLES);
     Ok(PrefetchComparison {
         steps_per_sec_on: on.steps_run as f64 / on.wall_seconds.max(1e-9),
         steps_per_sec_off: off.steps_run as f64 / off.wall_seconds.max(1e-9),
@@ -129,6 +148,15 @@ pub fn compare_prefetch(
             .unwrap_or(crate::data::prefetch::DEFAULT_DEPTH),
         exec_backend: on.backend,
         shards: on.shards,
+        prefetch_stall_ms: obs.phase_total_ms(crate::obs::PHASE_PREFETCH_STALL),
+        prefetch_occupancy: if occ_samples == 0 {
+            0.0
+        } else {
+            obs.counter(crate::obs::CTR_PREFETCH_OCC_SUM) as f64 / occ_samples as f64
+        },
+        ckpt_backpressure_wait_ms: obs.counter(crate::obs::CTR_CKPT_BACKPRESSURE_WAIT_NS)
+            as f64
+            / 1e6,
     })
 }
 
@@ -179,6 +207,14 @@ pub fn bench_report(
         // so rows stay attributable after the `cfg.backend` knob.
         ("exec_backend", Json::str(&prefetch.exec_backend)),
         ("shards", Json::num(prefetch.shards as f64)),
+        // Observability-plane aggregates from the prefetch-on run
+        // (additive fields; schema stays bench_runtime/v1 — see PERF.md).
+        ("prefetch_stall_ms", Json::num(prefetch.prefetch_stall_ms)),
+        ("prefetch_occupancy", Json::num(prefetch.prefetch_occupancy)),
+        (
+            "ckpt_backpressure_wait_ms",
+            Json::num(prefetch.ckpt_backpressure_wait_ms),
+        ),
     ])
 }
 
@@ -211,6 +247,14 @@ mod tests {
         );
         assert_eq!(pf.exec_backend, "resident");
         assert_eq!(pf.shards, 0);
+        // The on-run checkpointed and consumed through the prefetcher,
+        // so its observability aggregates are live, not defaults.
+        assert!(pf.prefetch_stall_ms > 0.0, "stall phase never recorded");
+        assert!(pf.prefetch_occupancy >= 0.0);
+        assert!(
+            pf.ckpt_backpressure_wait_ms > 0.0,
+            "ckpt submits never counted"
+        );
         let report = bench_report("unit-test", "refmlp-tiny", &[cmp], &pf);
         let text = report.to_string();
         let back = crate::util::json::parse(&text).unwrap();
@@ -222,5 +266,8 @@ mod tests {
         assert!(back.at(&["prefetch_depth"]).as_f64().is_some());
         assert_eq!(back.at(&["exec_backend"]).as_str(), Some("resident"));
         assert_eq!(back.at(&["shards"]).as_f64(), Some(0.0));
+        assert!(back.at(&["prefetch_stall_ms"]).as_f64().is_some());
+        assert!(back.at(&["prefetch_occupancy"]).as_f64().is_some());
+        assert!(back.at(&["ckpt_backpressure_wait_ms"]).as_f64().is_some());
     }
 }

@@ -1,0 +1,243 @@
+//! The observability invariance matrix: tracing must be **provably
+//! inert**.
+//!
+//! For every execution layout (host, resident(+prefetch), sharded
+//! S ∈ {1, 2, 3}) the same config is run twice — once untraced
+//! (`trace_out: None`, the `Obs::off()` hub everywhere) and once traced
+//! to an `obs_trace/v1` JSONL file.  The traced run must end with
+//! exactly the metrics trace, energy ledger and final model state of
+//! the untraced run: telemetry lives on the observability plane and is
+//! never allowed to touch the data plane.
+//!
+//! On top of bitwise identity, the traced run must actually *observe*:
+//! the JSONL parses through `obs::report::aggregate`, and every phase
+//! the layout exercises shows a nonzero total — a phase that silently
+//! stopped recording is a regression even though the run still trains.
+
+use std::path::Path;
+
+use e2train::config::{CkptCfg, DataCfg, RunCfg};
+use e2train::coordinator::{RunOutcome, Trainer};
+use e2train::obs;
+use e2train::runtime::{write_reference_family, Engine, RefFamilySpec};
+use e2train::util::tmp::TempDir;
+
+const FAM: &str = "refmlp-tiny";
+
+fn ref_cfg(artifacts: &Path, iters: u64) -> RunCfg {
+    let mut cfg = RunCfg::quick(FAM, "e2train", iters);
+    cfg.artifacts_dir = artifacts.to_path_buf();
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 128, n_test: 40, seed: 0 };
+    cfg.eval_every = 8;
+    cfg
+}
+
+fn with_ckpt(mut cfg: RunCfg, dir: &Path, every: u64) -> RunCfg {
+    cfg.checkpoint = CkptCfg {
+        every,
+        dir: Some(dir.to_path_buf()),
+        keep_last: 16,
+        keep_every: 0,
+    };
+    cfg
+}
+
+/// Full bitwise comparison of two run outcomes.  Deliberately does NOT
+/// compare `metrics.obs` — the traced run carries timings the untraced
+/// run doesn't have; everything the determinism contract covers must
+/// still match exactly.
+fn assert_outcomes_identical(a: &RunOutcome, b: &RunOutcome, ctx: &str) {
+    assert_eq!(a.metrics.final_test_acc, b.metrics.final_test_acc, "{ctx}: acc");
+    assert_eq!(
+        a.metrics.final_test_acc_top5, b.metrics.final_test_acc_top5,
+        "{ctx}: top5"
+    );
+    assert_eq!(a.metrics.final_loss, b.metrics.final_loss, "{ctx}: loss");
+    assert_eq!(a.metrics.total_joules, b.metrics.total_joules, "{ctx}: joules");
+    assert_eq!(a.metrics.executed_macs, b.metrics.executed_macs, "{ctx}: macs");
+    assert_eq!(a.metrics.steps_run, b.metrics.steps_run, "{ctx}: steps");
+    assert_eq!(
+        a.metrics.steps_skipped, b.metrics.steps_skipped,
+        "{ctx}: skipped"
+    );
+    assert_eq!(
+        a.metrics.mean_gate_fracs, b.metrics.mean_gate_fracs,
+        "{ctx}: gate means"
+    );
+    assert_eq!(
+        a.metrics.mean_psg_frac, b.metrics.mean_psg_frac,
+        "{ctx}: psg mean"
+    );
+    assert_eq!(a.metrics.trace.len(), b.metrics.trace.len(), "{ctx}: trace len");
+    for (x, y) in a.metrics.trace.iter().zip(b.metrics.trace.iter()) {
+        assert_eq!(x.iter, y.iter, "{ctx}: trace iter");
+        assert_eq!(x.loss, y.loss, "{ctx}: trace loss @{}", x.iter);
+        assert_eq!(x.train_acc, y.train_acc, "{ctx}: trace acc @{}", x.iter);
+        assert_eq!(x.joules, y.joules, "{ctx}: trace joules @{}", x.iter);
+        assert_eq!(x.test_acc, y.test_acc, "{ctx}: trace eval @{}", x.iter);
+    }
+    assert_eq!(
+        a.ledger.steps_charged, b.ledger.steps_charged,
+        "{ctx}: ledger steps"
+    );
+    assert_eq!(a.ledger.macs, b.ledger.macs, "{ctx}: ledger macs");
+    assert_eq!(a.ledger.trace, b.ledger.trace, "{ctx}: ledger trace");
+    a.state.assert_bitwise_eq(&b.state);
+}
+
+/// One execution layout of the step loop (all bitwise interchangeable).
+struct Layout {
+    name: &'static str,
+    resident: bool,
+    prefetch: bool,
+    shards: usize,
+}
+
+/// `sharded1` is deliberately in the matrix: a single-shard run still
+/// goes through the fan-out/reduce machinery, so its shard phases must
+/// record like the multi-shard legs.
+const LAYOUTS: &[Layout] = &[
+    Layout { name: "host", resident: false, prefetch: false, shards: 0 },
+    Layout { name: "resident", resident: true, prefetch: true, shards: 0 },
+    Layout { name: "sharded1", resident: true, prefetch: true, shards: 1 },
+    Layout { name: "sharded2", resident: true, prefetch: true, shards: 2 },
+    Layout { name: "sharded3", resident: true, prefetch: true, shards: 3 },
+];
+
+fn shaped(mut cfg: RunCfg, l: &Layout) -> RunCfg {
+    cfg.resident = l.resident;
+    cfg.prefetch = l.prefetch;
+    cfg.shards = l.shards;
+    cfg
+}
+
+/// The tentpole pin: on every layout, the traced run is bitwise
+/// identical to the untraced run, AND the trace it wrote is live —
+/// parseable, keyed, with every layout-relevant phase showing time.
+#[test]
+fn tracing_is_bitwise_inert_on_every_layout() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    for layout in LAYOUTS {
+        let base_reg = TempDir::new().unwrap();
+        let base_cfg =
+            shaped(with_ckpt(ref_cfg(tmp.path(), 18), base_reg.path(), 6), layout);
+        let baseline = Trainer::new(&engine, base_cfg).unwrap().run(None).unwrap();
+
+        let traced_reg = TempDir::new().unwrap();
+        let trace_path = traced_reg.path().join("trace.jsonl");
+        let mut traced_cfg =
+            shaped(with_ckpt(ref_cfg(tmp.path(), 18), traced_reg.path(), 6), layout);
+        traced_cfg.trace_out = Some(trace_path.clone());
+        let traced = Trainer::new(&engine, traced_cfg).unwrap().run(None).unwrap();
+
+        assert_outcomes_identical(&baseline, &traced, layout.name);
+
+        // The trace file round-trips through the report aggregator.
+        let text = std::fs::read_to_string(&trace_path)
+            .unwrap_or_else(|e| panic!("{}: reading trace: {e}", layout.name));
+        let rep = e2train::obs::report::aggregate(&text)
+            .unwrap_or_else(|e| panic!("{}: parsing trace: {e:#}", layout.name));
+        assert!(rep.wall_ms > 0.0, "{}: wall_ms", layout.name);
+        assert!(
+            rep.key_line.contains(FAM),
+            "{}: key line {:?} lost the family",
+            layout.name,
+            rep.key_line
+        );
+        assert!(
+            rep.key_line.contains(&format!("shards={}", layout.shards)),
+            "{}: key line {:?} lost the shard count",
+            layout.name,
+            rep.key_line
+        );
+
+        // Every phase this layout exercises recorded real time.  The
+        // summary folded into RunMetrics is the same data the JSONL
+        // carries, just pre-aggregated.
+        let summary = traced.metrics.obs.as_ref().expect("traced run has obs summary");
+        let mut want: Vec<&str> = vec![
+            obs::PHASE_AUGMENT,
+            obs::PHASE_STEP_EXEC,
+            obs::PHASE_CKPT_ENCODE,
+            obs::PHASE_REGISTRY_PUBLISH,
+        ];
+        if layout.prefetch {
+            want.push(obs::PHASE_PREFETCH_STALL);
+        }
+        if layout.shards > 0 {
+            // optim-apply is recorded by the sharded backend's host-side
+            // gradient application; host/resident fold it into step-exec.
+            want.extend([
+                obs::PHASE_SHARD_EXEC,
+                obs::PHASE_SHARD_REDUCE,
+                obs::PHASE_OPTIM_APPLY,
+            ]);
+        }
+        for phase in want {
+            assert!(
+                summary.phase_total_ms(phase) > 0.0,
+                "{}: phase {phase:?} never recorded",
+                layout.name
+            );
+        }
+
+        // Counter liveness, per layer the layout runs through.
+        assert!(
+            summary.counter(obs::CTR_CKPT_SUBMITS) >= 1,
+            "{}: no checkpoint submits counted",
+            layout.name
+        );
+        assert!(
+            summary.counter(obs::CTR_CKPT_BACKPRESSURE_WAIT_NS) >= 1,
+            "{}: backpressure wait never counted",
+            layout.name
+        );
+        if layout.prefetch {
+            assert!(
+                summary.counter(obs::CTR_PREFETCH_PRODUCED) >= 1,
+                "{}: prefetch produced nothing",
+                layout.name
+            );
+            assert!(
+                summary.counter(obs::CTR_PREFETCH_OCC_SAMPLES) >= 1,
+                "{}: occupancy never sampled",
+                layout.name
+            );
+        }
+        if layout.shards > 1 {
+            // With 2+ shards the slow/fast spread is nonzero every step.
+            assert!(
+                summary.counter(obs::CTR_SHARD_IMBALANCE_NS) >= 1,
+                "{}: shard imbalance never counted",
+                layout.name
+            );
+        }
+    }
+}
+
+/// An untraced run still aggregates nothing: `metrics.obs` summarizes a
+/// hub only when the trainer created one, and `Obs::off()` snapshots to
+/// `None`.  (The trainer always creates a hub, so the summary is
+/// present — but the *event log* only exists when a trace was asked
+/// for.  This pins the cheap path: no trace file, no event buffering.)
+#[test]
+fn untraced_run_writes_no_trace_file() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let reg = TempDir::new().unwrap();
+    let cfg = with_ckpt(ref_cfg(tmp.path(), 6), reg.path(), 3);
+    let out = Trainer::new(&engine, cfg).unwrap().run(None).unwrap();
+    // Summary present (the trainer aggregates for BENCH fields)…
+    assert!(out.metrics.obs.is_some());
+    // …but nothing landed on disk anywhere near the registry.
+    let stray: Vec<_> = std::fs::read_dir(reg.path())
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().map(|x| x == "jsonl").unwrap_or(false))
+        .collect();
+    assert!(stray.is_empty(), "untraced run wrote {stray:?}");
+}

@@ -1,0 +1,167 @@
+//! Golden-shape test for the `obs_trace/v1` JSONL contract.
+//!
+//! `e2train trace-report`, external tooling, and future schema bumps
+//! all hang off these exact row shapes, so this test pins them field by
+//! field: row order (meta, spans, recoveries, counters, summaries), the
+//! exact key set of every kind, and every value that is deterministic
+//! (durations fed through `Obs::record` are explicit, so only wall-clock
+//! offsets float).  Growing the schema additively is fine — rename or
+//! drop a field and this test is the tripwire that says "bump the
+//! schema string".
+
+use std::time::Duration;
+
+use e2train::obs::{self, Obs, TraceKey, TRACE_SCHEMA};
+use e2train::util::json::{parse, Json};
+
+/// The golden key set per row kind.  BTreeMap-backed objects iterate
+/// sorted, so the comparison is order-insensitive but exhaustive:
+/// missing AND extra fields both fail.
+fn assert_fields(row: &Json, kind: &str, want: &[&str]) {
+    let obj = row.as_obj().unwrap_or_else(|| panic!("{kind} row not an object"));
+    let mut got: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+    got.sort_unstable();
+    let mut want: Vec<&str> = want.to_vec();
+    want.sort_unstable();
+    assert_eq!(got, want, "{kind} row field set drifted");
+}
+
+/// Build the reference trace: one of everything, with explicit
+/// durations so every dur/count/value below is exact.
+fn sample_trace() -> obs::RunTrace {
+    let obs = Obs::new(true);
+    obs.set_key(TraceKey {
+        family: "refmlp-tiny".into(),
+        method: "e2train".into(),
+        backend: "sharded".into(),
+        shards: 2,
+        batch: 8,
+    });
+    obs.record(obs::PHASE_AUGMENT, Duration::from_micros(150));
+    obs.record(obs::PHASE_STEP_EXEC, Duration::from_micros(400));
+    obs.record_on("shard-0", obs::PHASE_SHARD_EXEC, Duration::from_micros(180));
+    obs.record_on("shard-1", obs::PHASE_SHARD_EXEC, Duration::from_micros(220));
+    obs.count(obs::CTR_CKPT_SUBMITS, 1);
+    obs.count(obs::CTR_SHARD_IMBALANCE_NS, 40_000);
+    obs.recovery("engine.train_step", 1, 10);
+    obs.snapshot().expect("live hub snapshots")
+}
+
+#[test]
+fn jsonl_rows_match_the_golden_shape() {
+    let trace = sample_trace();
+    let text = trace.to_jsonl();
+    let rows: Vec<Json> = text.lines().map(|l| parse(l).unwrap()).collect();
+
+    // Row order is part of the contract: meta first, then the span
+    // event log in record order, recoveries, counters, summaries.
+    let kinds: Vec<&str> =
+        rows.iter().map(|r| r.at(&["kind"]).as_str().unwrap()).collect();
+    assert_eq!(
+        kinds,
+        vec![
+            "meta", "span", "span", "span", "span", "recovery", "counter",
+            "counter", "summary", "summary", "summary",
+        ],
+        "row order drifted"
+    );
+
+    // meta: the run key + trace-wide facts.
+    let meta = &rows[0];
+    assert_fields(
+        meta,
+        "meta",
+        &[
+            "kind", "schema", "family", "method", "backend", "shards", "batch",
+            "wall_ms", "dropped_events",
+        ],
+    );
+    assert_eq!(meta.at(&["schema"]).as_str(), Some(TRACE_SCHEMA));
+    assert_eq!(meta.at(&["schema"]).as_str(), Some("obs_trace/v1"));
+    assert_eq!(meta.at(&["family"]).as_str(), Some("refmlp-tiny"));
+    assert_eq!(meta.at(&["method"]).as_str(), Some("e2train"));
+    assert_eq!(meta.at(&["backend"]).as_str(), Some("sharded"));
+    assert_eq!(meta.at(&["shards"]).as_f64(), Some(2.0));
+    assert_eq!(meta.at(&["batch"]).as_f64(), Some(8.0));
+    assert_eq!(meta.at(&["dropped_events"]).as_f64(), Some(0.0));
+    assert!(meta.at(&["wall_ms"]).as_f64().unwrap() >= 0.0);
+
+    // span events: record order, sequenced, thread-labeled.
+    for (i, row) in rows[1..5].iter().enumerate() {
+        assert_fields(row, "span", &["kind", "phase", "thread", "seq", "t_ms", "dur_ms"]);
+        assert_eq!(row.at(&["seq"]).as_f64(), Some(i as f64), "span seq");
+    }
+    assert_eq!(rows[1].at(&["phase"]).as_str(), Some(obs::PHASE_AUGMENT));
+    assert_eq!(rows[1].at(&["dur_ms"]).as_f64(), Some(0.15));
+    assert_eq!(rows[3].at(&["phase"]).as_str(), Some(obs::PHASE_SHARD_EXEC));
+    assert_eq!(rows[3].at(&["thread"]).as_str(), Some("shard-0"));
+    assert_eq!(rows[4].at(&["thread"]).as_str(), Some("shard-1"));
+    assert_eq!(rows[4].at(&["dur_ms"]).as_f64(), Some(0.22));
+
+    // recovery: structured supervision events, not log lines.
+    let rec = &rows[5];
+    assert_fields(rec, "recovery", &["kind", "site", "attempt", "backoff_ms", "t_ms"]);
+    assert_eq!(rec.at(&["site"]).as_str(), Some("engine.train_step"));
+    assert_eq!(rec.at(&["attempt"]).as_f64(), Some(1.0));
+    assert_eq!(rec.at(&["backoff_ms"]).as_f64(), Some(10.0));
+
+    // counters: final values, sorted by name (BTreeMap order).
+    for row in &rows[6..8] {
+        assert_fields(row, "counter", &["kind", "name", "value"]);
+    }
+    assert_eq!(rows[6].at(&["name"]).as_str(), Some(obs::CTR_CKPT_SUBMITS));
+    assert_eq!(rows[6].at(&["value"]).as_f64(), Some(1.0));
+    assert_eq!(rows[7].at(&["name"]).as_str(), Some(obs::CTR_SHARD_IMBALANCE_NS));
+    assert_eq!(rows[7].at(&["value"]).as_f64(), Some(40_000.0));
+
+    // summaries: one per phase, sorted by phase name, with the full
+    // latency digest.  shard-exec merged both thread labels.
+    for row in &rows[8..] {
+        assert_fields(
+            row,
+            "summary",
+            &["kind", "phase", "count", "total_ms", "mean_ms", "p50_ms", "p99_ms", "max_ms"],
+        );
+    }
+    let phases: Vec<&str> =
+        rows[8..].iter().map(|r| r.at(&["phase"]).as_str().unwrap()).collect();
+    assert_eq!(
+        phases,
+        vec![obs::PHASE_AUGMENT, obs::PHASE_SHARD_EXEC, obs::PHASE_STEP_EXEC],
+        "summary rows must arrive sorted by phase"
+    );
+    let shard = &rows[9];
+    assert_eq!(shard.at(&["count"]).as_f64(), Some(2.0));
+    let total = shard.at(&["total_ms"]).as_f64().unwrap();
+    assert!((total - 0.4).abs() < 1e-9, "shard-exec total {total}");
+    // Histogram percentiles are bucket upper bounds clamped to the
+    // observed max — never below the true p50, never above the max.
+    let p50 = shard.at(&["p50_ms"]).as_f64().unwrap();
+    let max = shard.at(&["max_ms"]).as_f64().unwrap();
+    assert!((max - 0.22).abs() < 1e-9, "shard-exec max {max}");
+    assert!(p50 >= 0.18 - 1e-9 && p50 <= max + 1e-9, "shard-exec p50 {p50}");
+}
+
+/// The trace file a real traced run writes is exactly `to_jsonl()` —
+/// pinned so `trace-report` can always re-read what `--trace-out` wrote.
+#[test]
+fn write_emits_the_same_bytes_as_to_jsonl() {
+    let trace = sample_trace();
+    let tmp = e2train::util::tmp::TempDir::new().unwrap();
+    let path = tmp.path().join("trace.jsonl");
+    trace.write(&path).unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), trace.to_jsonl());
+}
+
+/// An aggregate-only hub (no `--trace-out`) produces no span rows at
+/// all: the event log costs nothing unless a trace was requested.
+#[test]
+fn aggregate_only_traces_carry_no_span_rows() {
+    let obs = Obs::new(false);
+    obs.record(obs::PHASE_STEP_EXEC, Duration::from_micros(100));
+    let text = obs.snapshot().unwrap().to_jsonl();
+    assert!(
+        !text.lines().any(|l| parse(l).unwrap().at(&["kind"]).as_str() == Some("span")),
+        "aggregate-only hub leaked span events"
+    );
+}

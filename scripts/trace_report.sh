@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Demo the observability plane end-to-end: run a short traced training
+# run (reference family, checkpointing on so every instrumented layer
+# fires), then render the obs_trace/v1 JSONL with `e2train trace-report`.
+#
+# Usage: scripts/trace_report.sh [extra e2train train flags...]
+# e.g.:  scripts/trace_report.sh --backend sharded --shards 2
+#
+# Tracing is observability-plane only: the traced run is bitwise
+# identical to the untraced one (tests/obs_invariance.rs).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+TRACE="${TRACE:-trace.jsonl}"
+CKPT_DIR="$(mktemp -d)"
+trap 'rm -rf "$CKPT_DIR"' EXIT
+
+cargo run --release --bin e2train -- gen-ref
+cargo run --release --bin e2train -- train \
+  --family refmlp-tiny \
+  --method sgd32 \
+  --iters 60 \
+  --ckpt-every 20 \
+  --ckpt-dir "$CKPT_DIR" \
+  --trace-out "$TRACE" \
+  "$@"
+
+exec cargo run --release --bin e2train -- trace-report "$TRACE"
