@@ -48,7 +48,10 @@ fn bucket_upper(idx: usize) -> u64 {
     }
     let msb = (idx - 8) / 4 + 3;
     let sub = ((idx - 8) % 4) as u64;
-    (1u64 << msb) + ((sub + 1) << (msb - 2)) - 1
+    // Subtract before adding: for the top bucket (msb 63, sub 3) the
+    // naive `(1<<msb) + ((sub+1)<<(msb-2)) - 1` overflows u64 mid-way;
+    // this order peaks at exactly u64::MAX.
+    (1u64 << msb) - 1 + ((sub + 1) << (msb - 2))
 }
 
 impl Histogram {
@@ -143,6 +146,10 @@ mod tests {
         for i in 1..NUM_BUCKETS {
             assert!(bucket_upper(i) > bucket_upper(i - 1), "bucket {i}");
         }
+        // The top bucket's bound is exactly u64::MAX — the naive
+        // arithmetic order overflowed here.
+        assert_eq!(bucket_upper(bucket_index(u64::MAX)), u64::MAX);
+        assert_eq!(bucket_upper(NUM_BUCKETS - 1), u64::MAX);
         // Adjacent values never map to earlier buckets.
         let mut prev = 0;
         for v in 0..100_000u64 {
@@ -170,6 +177,11 @@ mod tests {
         let e = Histogram::new();
         assert_eq!(e.percentile(0.99), 0.0);
         assert_eq!(e.mean(), 0.0);
+        // A top-bucket sample (e.g. a corrupt duration re-histogrammed
+        // by trace-report) must not overflow percentile().
+        let mut big = Histogram::new();
+        big.observe(u64::MAX);
+        assert_eq!(big.percentile(0.99), u64::MAX as f64);
     }
 
     #[test]

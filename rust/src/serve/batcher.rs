@@ -152,9 +152,12 @@ pub(crate) fn run(
             }
         };
         // Request-queue depth the moment after this pop: how much work
-        // clients have backed up behind the batcher.
-        obs.count(obs::CTR_SERVE_QUEUE_DEPTH_SUM, queue.len() as u64);
-        obs.count(obs::CTR_SERVE_QUEUE_DEPTH_SAMPLES, 1);
+        // clients have backed up behind the batcher.  Guarded so the
+        // untraced path never takes the queue mutex just for the sample.
+        if obs.is_on() {
+            obs.count(obs::CTR_SERVE_QUEUE_DEPTH_SUM, queue.len() as u64);
+            obs.count(obs::CTR_SERVE_QUEUE_DEPTH_SAMPLES, 1);
+        }
 
         // Drop-before-dispatch: a request that already missed its
         // client deadline completes with an explicit expired error —

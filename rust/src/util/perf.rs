@@ -54,7 +54,13 @@ pub struct PrefetchComparison {
     pub prefetch_occupancy: f64,
     /// Wall-ms the on-run's step loop blocked submitting checkpoints to
     /// the depth-1 writer queue (disk backpressure reaching the loop).
+    /// Floored at 1 ns per submit, so read it against `ckpt_submits`:
+    /// a value ≈ submits·1ns is clock/queue overhead, not backpressure.
     pub ckpt_backpressure_wait_ms: f64,
+    /// Checkpoints the on-run submitted to the writer — the denominator
+    /// that separates the wait field's per-submit floor from real
+    /// backpressure.
+    pub ckpt_submits: u64,
 }
 
 /// Measure train-step latency through both state paths for one
@@ -157,6 +163,7 @@ pub fn compare_prefetch(
         ckpt_backpressure_wait_ms: obs.counter(crate::obs::CTR_CKPT_BACKPRESSURE_WAIT_NS)
             as f64
             / 1e6,
+        ckpt_submits: obs.counter(crate::obs::CTR_CKPT_SUBMITS),
     })
 }
 
@@ -215,6 +222,7 @@ pub fn bench_report(
             "ckpt_backpressure_wait_ms",
             Json::num(prefetch.ckpt_backpressure_wait_ms),
         ),
+        ("ckpt_submits", Json::num(prefetch.ckpt_submits as f64)),
     ])
 }
 
@@ -255,6 +263,7 @@ mod tests {
             pf.ckpt_backpressure_wait_ms > 0.0,
             "ckpt submits never counted"
         );
+        assert!(pf.ckpt_submits > 0, "ckpt writer never submitted");
         let report = bench_report("unit-test", "refmlp-tiny", &[cmp], &pf);
         let text = report.to_string();
         let back = crate::util::json::parse(&text).unwrap();
@@ -269,5 +278,6 @@ mod tests {
         assert!(back.at(&["prefetch_stall_ms"]).as_f64().is_some());
         assert!(back.at(&["prefetch_occupancy"]).as_f64().is_some());
         assert!(back.at(&["ckpt_backpressure_wait_ms"]).as_f64().is_some());
+        assert!(back.at(&["ckpt_submits"]).as_f64().unwrap() > 0.0);
     }
 }
