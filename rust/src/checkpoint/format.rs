@@ -483,9 +483,13 @@ fn read_tensors(specs: &[Json], r: &mut Reader) -> Result<ModelState> {
     Ok(ModelState::new(values, names))
 }
 
-/// Deserialize a `ckpt/v1` byte container, verifying magic, hash,
-/// schema and internal consistency.  Every failure is a clean error.
-pub fn decode(bytes: &[u8]) -> Result<CheckpointData> {
+/// Verify the container framing without decoding: magic, minimum
+/// length, and the FNV-1a-64 trailer over everything before it.  A
+/// cheap whole-file integrity gate — truncation and bit-flips are
+/// rejected here before any header parse or tensor construction, so
+/// hot-load and replica-admission paths can refuse corrupt bytes
+/// without paying for a decode.
+pub fn verify_trailer(bytes: &[u8]) -> Result<()> {
     if bytes.len() < MAGIC.len() + 8 + 8 {
         bail!("checkpoint file too short ({} bytes)", bytes.len());
     }
@@ -501,6 +505,14 @@ pub fn decode(bytes: &[u8]) -> Result<CheckpointData> {
              computed {computed:016x}): file is corrupt or truncated"
         );
     }
+    Ok(())
+}
+
+/// Deserialize a `ckpt/v1` byte container, verifying magic, hash,
+/// schema and internal consistency.  Every failure is a clean error.
+pub fn decode(bytes: &[u8]) -> Result<CheckpointData> {
+    verify_trailer(bytes)?;
+    let body_end = bytes.len() - 8;
     let header_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
     let header_end = 16usize
         .checked_add(header_len)

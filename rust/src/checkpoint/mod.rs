@@ -23,20 +23,33 @@
 //! * [`writer`] — the background publish thread the trainer hands
 //!   snapshots to (off the host-side master, so sharded runs checkpoint
 //!   without draining replicas), with backpressure and loud failure.
+//! * [`remote`] — the off-box side: the [`remote::RemoteStore`]
+//!   evacuation-target trait (filesystem-backed today, object-store
+//!   shaped), and [`remote::RemoteRegistry`], the pull-through verified
+//!   reader a serve fleet or resumed run in another failure domain uses.
+//! * [`replicate`] — the background [`replicate::Replicator`] thread
+//!   that evacuates each published checkpoint to a remote store with
+//!   resumable chunked transfer, and the retention watermark that keeps
+//!   prune and upload from racing.
 //!
 //! The serve side consumes registries through
 //! [`crate::serve::watch_registry`]: a server process polls a registry
-//! directory and hot-loads each new checkpoint into its
+//! directory — local, or a replica root in another failure domain — and
+//! hot-loads each new checkpoint into its
 //! [`crate::runtime::SnapshotCell`] with a bumped `snapshot_version` —
 //! trainer→server publishing across processes, no shared memory.
 
 pub mod format;
 pub mod registry;
+pub mod remote;
+pub mod replicate;
 pub mod writer;
 
 pub use format::{
-    decode, encode, read_checkpoint, write_checkpoint, CheckpointData, EncodeStats,
-    SCHEMA,
+    decode, encode, read_checkpoint, verify_trailer, write_checkpoint, CheckpointData,
+    EncodeStats, SCHEMA,
 };
 pub use registry::{CheckpointEntry, CheckpointRegistry, RetentionCfg, REGISTRY_SCHEMA};
+pub use remote::{FsRemoteStore, RemoteRegistry, RemoteStore, REMOTE_MANIFEST};
+pub use replicate::{ReplicaReport, ReplicaSync, Replicator};
 pub use writer::CheckpointWriter;

@@ -13,6 +13,10 @@
 //! checkpoints always survive, and when `keep_every > 0` every
 //! checkpoint whose iteration is a multiple of it is kept forever
 //! (coarse history for rollback/debugging while the tail stays dense).
+//! When replication is armed ([`CheckpointRegistry::with_replication_floor`])
+//! retention additionally never prunes a checkpoint the replicator has
+//! not yet evacuated — the local registry may only forget what another
+//! failure domain already holds.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -68,6 +72,7 @@ pub struct CheckpointRegistry {
     faults: Option<Arc<FaultPlan>>,
     obs: Obs,
     prune_failures: Arc<AtomicU64>,
+    replication_floor: Option<Arc<AtomicU64>>,
 }
 
 impl CheckpointRegistry {
@@ -80,6 +85,7 @@ impl CheckpointRegistry {
             faults: None,
             obs: Obs::off(),
             prune_failures: Arc::new(AtomicU64::new(0)),
+            replication_floor: None,
         }
     }
 
@@ -115,6 +121,18 @@ impl CheckpointRegistry {
         self.prune_failures.clone()
     }
 
+    /// Arm the replicator-vs-retention guard: `floor` is the replication
+    /// watermark (highest iteration fully verified on the remote,
+    /// maintained by [`super::Replicator`]).  While armed, retention
+    /// never prunes a checkpoint with `iter > floor` — the prune-vs-
+    /// mid-upload race is closed at its source, and the local registry
+    /// only forgets checkpoints another failure domain already holds.
+    /// Disk growth is bounded by replication lag, not by `keep_last`.
+    pub fn with_replication_floor(mut self, floor: Arc<AtomicU64>) -> Self {
+        self.replication_floor = Some(floor);
+        self
+    }
+
     pub fn dir(&self) -> &Path {
         &self.dir
     }
@@ -141,26 +159,8 @@ impl CheckpointRegistry {
                     .with_context(|| format!("reading manifest {}", path.display()))
             }
         };
-        let v = parse(&text)
-            .with_context(|| format!("parsing manifest {}", path.display()))?;
-        let schema = v.req_str("schema")?;
-        if schema != REGISTRY_SCHEMA {
-            bail!("unsupported registry schema '{schema}'");
-        }
-        let mut out = Vec::new();
-        for row in v.req_arr("checkpoints")? {
-            out.push(CheckpointEntry {
-                iter: row
-                    .get("iter")
-                    .and_then(Json::as_u64)
-                    .ok_or_else(|| anyhow!("manifest row missing 'iter'"))?,
-                file: row.req_str("file")?.to_string(),
-                hash: row.req_str("hash")?.to_string(),
-                bytes: row.get("bytes").and_then(Json::as_u64).unwrap_or(0),
-            });
-        }
-        out.sort_by_key(|e| e.iter);
-        Ok(out)
+        parse_manifest(&text)
+            .with_context(|| format!("parsing manifest {}", path.display()))
     }
 
     /// The newest checkpoint entry, if any.
@@ -168,11 +168,23 @@ impl CheckpointRegistry {
         Ok(self.entries()?.into_iter().last())
     }
 
-    /// Load + verify one listed checkpoint.
-    pub fn load(&self, entry: &CheckpointEntry) -> Result<CheckpointData> {
+    /// Read one listed checkpoint's bytes with **no** verification —
+    /// for callers that own the integrity check themselves (the serve
+    /// watcher verifies hash + trailer so it can count corrupt files as
+    /// rejects rather than transient read errors).
+    pub fn read_raw(&self, entry: &CheckpointEntry) -> Result<Vec<u8>> {
         let path = self.dir.join(&entry.file);
-        let bytes = std::fs::read(&path)
-            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        std::fs::read(&path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))
+    }
+
+    /// Read one listed checkpoint's raw bytes, verified against the
+    /// manifest hash but **not** decoded — the cheap integrity gate the
+    /// restore paths share (pair with [`format::verify_trailer`] to also
+    /// check the container framing).
+    pub fn load_bytes(&self, entry: &CheckpointEntry) -> Result<Vec<u8>> {
+        let path = self.dir.join(&entry.file);
+        let bytes = self.read_raw(entry)?;
         let hash = fnv1a64_hex(&bytes);
         if hash != entry.hash {
             bail!(
@@ -182,6 +194,13 @@ impl CheckpointRegistry {
                 entry.hash
             );
         }
+        Ok(bytes)
+    }
+
+    /// Load + verify one listed checkpoint.
+    pub fn load(&self, entry: &CheckpointEntry) -> Result<CheckpointData> {
+        let path = self.dir.join(&entry.file);
+        let bytes = self.load_bytes(entry)?;
         format::decode(&bytes)
             .with_context(|| format!("decoding checkpoint {}", path.display()))
     }
@@ -271,6 +290,12 @@ impl CheckpointRegistry {
         entries: Vec<CheckpointEntry>,
     ) -> (Vec<CheckpointEntry>, Vec<CheckpointEntry>) {
         let keep_last = self.retention.keep_last.max(1);
+        // Replication guard: everything newer than the watermark is
+        // still in flight to the remote and must survive retention.
+        let floor = self
+            .replication_floor
+            .as_ref()
+            .map(|f| f.load(Ordering::Acquire));
         let n = entries.len();
         let mut keep = Vec::with_capacity(n);
         let mut pruned = Vec::new();
@@ -278,7 +303,8 @@ impl CheckpointRegistry {
             let in_tail = i + keep_last >= n;
             let pinned =
                 self.retention.keep_every > 0 && e.iter % self.retention.keep_every == 0;
-            if in_tail || pinned {
+            let unreplicated = floor.is_some_and(|w| e.iter > w);
+            if in_tail || pinned || unreplicated {
                 keep.push(e);
             } else {
                 pruned.push(e);
@@ -288,27 +314,62 @@ impl CheckpointRegistry {
     }
 
     fn write_manifest(&self, entries: &[CheckpointEntry]) -> Result<()> {
-        let v = Json::obj(vec![
-            ("schema", Json::str(REGISTRY_SCHEMA)),
-            (
-                "checkpoints",
-                Json::arr(entries.iter().map(|e| {
-                    Json::obj(vec![
-                        ("iter", Json::num(e.iter as f64)),
-                        ("file", Json::str(&e.file)),
-                        ("hash", Json::str(&e.hash)),
-                        ("bytes", Json::num(e.bytes as f64)),
-                    ])
-                })),
-            ),
-        ]);
-        write_atomic(&self.manifest_path(), v.to_string().as_bytes())
+        write_atomic(
+            &self.manifest_path(),
+            manifest_json(entries).to_string().as_bytes(),
+        )
     }
 }
 
+/// Parse a `ckpt_registry/v1` manifest body into its entries, ascending
+/// by iteration.  Shared by the local registry and the remote replica
+/// reader (`checkpoint::remote`) — both sides speak the same schema.
+pub(crate) fn parse_manifest(text: &str) -> Result<Vec<CheckpointEntry>> {
+    let v = parse(text)?;
+    let schema = v.req_str("schema")?;
+    if schema != REGISTRY_SCHEMA {
+        bail!("unsupported registry schema '{schema}'");
+    }
+    let mut out = Vec::new();
+    for row in v.req_arr("checkpoints")? {
+        out.push(CheckpointEntry {
+            iter: row
+                .get("iter")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("manifest row missing 'iter'"))?,
+            file: row.req_str("file")?.to_string(),
+            hash: row.req_str("hash")?.to_string(),
+            bytes: row.get("bytes").and_then(Json::as_u64).unwrap_or(0),
+        });
+    }
+    out.sort_by_key(|e| e.iter);
+    Ok(out)
+}
+
+/// Serialize entries as a `ckpt_registry/v1` manifest document — the
+/// single source of the schema for local and replica manifests alike.
+pub(crate) fn manifest_json(entries: &[CheckpointEntry]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(REGISTRY_SCHEMA)),
+        (
+            "checkpoints",
+            Json::arr(entries.iter().map(|e| {
+                Json::obj(vec![
+                    ("iter", Json::num(e.iter as f64)),
+                    ("file", Json::str(&e.file)),
+                    ("hash", Json::str(&e.hash)),
+                    ("bytes", Json::num(e.bytes as f64)),
+                ])
+            })),
+        ),
+    ])
+}
+
 /// Write-then-rename in the target's directory (same filesystem, so the
-/// rename is atomic on POSIX).
-fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+/// rename is atomic on POSIX).  Shared with the filesystem-backed
+/// remote store (`checkpoint::remote`), which publishes its replica
+/// manifest under the identical contract.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     let tmp = tmp_sibling(path)?;
     std::fs::write(&tmp, bytes)
         .with_context(|| format!("writing {}", tmp.display()))?;
@@ -354,7 +415,7 @@ fn stream_atomic(
     Ok(stats)
 }
 
-fn tmp_sibling(path: &Path) -> Result<PathBuf> {
+pub(crate) fn tmp_sibling(path: &Path) -> Result<PathBuf> {
     let file_name = path
         .file_name()
         .ok_or_else(|| anyhow!("bad target path {}", path.display()))?
@@ -363,7 +424,7 @@ fn tmp_sibling(path: &Path) -> Result<PathBuf> {
     Ok(path.with_file_name(format!(".{file_name}.tmp-{}", std::process::id())))
 }
 
-fn rename_into_place(tmp: &Path, path: &Path) -> Result<()> {
+pub(crate) fn rename_into_place(tmp: &Path, path: &Path) -> Result<()> {
     std::fs::rename(tmp, path).with_context(|| {
         let _ = std::fs::remove_file(tmp);
         format!("publishing {}", path.display())
@@ -459,6 +520,35 @@ mod tests {
         // corrupt manifest -> parse error, not a panic
         std::fs::write(tmp.path().join(MANIFEST), b"{not json").unwrap();
         assert!(reg.entries().is_err());
+    }
+
+    /// With the replication guard armed, retention never prunes entries
+    /// above the watermark — they are still in flight to the remote.
+    /// Once the watermark advances, the ordinary policy applies again.
+    #[test]
+    fn replication_floor_protects_unreplicated_entries() {
+        let tmp = TempDir::new().unwrap();
+        let floor = Arc::new(AtomicU64::new(0));
+        let reg = CheckpointRegistry::new(
+            tmp.path(),
+            RetentionCfg { keep_last: 1, keep_every: 0 },
+        )
+        .with_replication_floor(floor.clone());
+
+        for iter in [10, 20, 30] {
+            publish_at(&reg, iter);
+        }
+        let iters: Vec<u64> = reg.entries().unwrap().iter().map(|e| e.iter).collect();
+        assert_eq!(iters, vec![10, 20, 30], "nothing replicated, nothing pruned");
+
+        // the replicator verified through iter 20: 10 and 20 become
+        // ordinary candidates, 30 stays protected (and is also the tail)
+        floor.store(20, Ordering::Release);
+        publish_at(&reg, 40);
+        let iters: Vec<u64> = reg.entries().unwrap().iter().map(|e| e.iter).collect();
+        assert_eq!(iters, vec![30, 40], "replicated history pruned, in-flight kept");
+        assert!(!tmp.path().join("ckpt-0000000010.e2c").exists());
+        assert!(tmp.path().join("ckpt-0000000030.e2c").exists());
     }
 
     /// A retention prune that can't unlink its victim (here: the file

@@ -1,0 +1,667 @@
+//! Remote checkpoint stores and the pull-through replica registry.
+//!
+//! [`RemoteStore`] is the evacuation target abstraction: a flat
+//! namespace of objects with **staged** (resumable, append-only) and
+//! **final** (atomically promoted) states.  The filesystem
+//! implementation ([`FsRemoteStore`]) models a mounted replica root in
+//! another failure domain; the trait is deliberately narrow —
+//! staged-append / promote / read / atomic-write is exactly the subset
+//! an object store with multipart uploads can provide, so an S3/GCS
+//! implementation slots in without touching the replicator.
+//!
+//! The transfer protocol ([`super::Replicator`] drives it):
+//!
+//! 1. upload chunks append to a *staged* object, never the final name;
+//! 2. a partial upload survives as staged bytes — the next attempt
+//!    compares them against the local prefix and resumes from the last
+//!    verified offset instead of restarting;
+//! 3. the staged object is promoted (atomic rename) only after its
+//!    full FNV-1a-64 hash matches the local manifest entry;
+//! 4. the remote `MANIFEST.json` (same `ckpt_registry/v1` schema as the
+//!    local registry) is rewritten atomically after the payload is
+//!    final, so a replica reader never sees a listed-but-unverified
+//!    checkpoint.
+//!
+//! [`RemoteRegistry`] is the consuming side: a serve fleet or a resumed
+//! run in another failure domain reads the replica manifest and
+//! fetches-and-verifies checkpoints (manifest hash **and** `ckpt/v1`
+//! trailer checked before admission), optionally through a local cache
+//! directory.  Torn remote manifests and truncated transfers surface as
+//! clean errors; [`RemoteRegistry::entries_with_retry`] and
+//! [`RemoteRegistry::load_latest_with_retry`] absorb them with the same
+//! deterministic capped backoff the supervisor uses.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::fault::{self, FaultPlan};
+use crate::util::hash::fnv1a64_hex;
+use crate::util::rng::Rng;
+
+use super::format::{self, CheckpointData};
+use super::registry::{self, CheckpointEntry};
+
+/// The replica manifest object name (same schema as the local
+/// registry's `MANIFEST.json`: `ckpt_registry/v1`).
+pub const REMOTE_MANIFEST: &str = "MANIFEST.json";
+
+/// True when the error chain bottoms out in a filesystem NotFound —
+/// "object absent" as opposed to "read failed", which the replica
+/// protocol treats very differently (empty vs retry).
+pub(crate) fn is_not_found(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>()
+            .is_some_and(|io| io.kind() == std::io::ErrorKind::NotFound)
+    })
+}
+
+/// An evacuation target in another failure domain.  Objects live in a
+/// flat namespace; each can exist in a *staged* (partial, resumable)
+/// and a *final* (promoted, immutable) state.  All methods take `&self`
+/// — implementations synchronize internally if they must.
+pub trait RemoteStore: Send + Sync {
+    /// Human-readable location for logs and error contexts.
+    fn describe(&self) -> String;
+
+    /// Bytes currently staged for `name` (0 when nothing is staged).
+    fn staged_len(&self, name: &str) -> Result<u64>;
+
+    /// Read the first `len` staged bytes of `name`.
+    fn read_staged(&self, name: &str, len: u64) -> Result<Vec<u8>>;
+
+    /// Append `data` to the staged object at `offset`, which must equal
+    /// the current staged length (the resume protocol never writes
+    /// holes).  A failure may leave a *prefix* of `data` staged —
+    /// truncated transfers are the expected failure mode, and the next
+    /// attempt resumes from whatever verified bytes survived.
+    fn append_staged(&self, name: &str, offset: u64, data: &[u8]) -> Result<()>;
+
+    /// Atomically promote the staged object to its final name.
+    fn promote(&self, name: &str) -> Result<()>;
+
+    /// Discard any staged bytes for `name` (absent staged state is not
+    /// an error — abort is idempotent).
+    fn abort_staged(&self, name: &str) -> Result<()>;
+
+    /// Read a final object in full.
+    fn read(&self, name: &str) -> Result<Vec<u8>>;
+
+    /// True when the final object exists.
+    fn exists(&self, name: &str) -> Result<bool>;
+
+    /// Atomically replace a small final object (the manifest): readers
+    /// see the old bytes or the new bytes, never a mix — except where a
+    /// torn write is *injected* (`replicate.manifest`), which is
+    /// exactly the failure replica readers must reject.
+    fn write_atomic(&self, name: &str, bytes: &[u8]) -> Result<()>;
+}
+
+/// Filesystem-backed [`RemoteStore`]: the replica root is a directory,
+/// typically a mount from another failure domain (NFS, a second disk, a
+/// synced folder).  Staged objects are dot-prefixed siblings
+/// (`.stage-<name>`), so replica readers that list final names never
+/// see partial uploads.
+pub struct FsRemoteStore {
+    root: PathBuf,
+    faults: Option<Arc<FaultPlan>>,
+}
+
+impl FsRemoteStore {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        Self { root: root.into(), faults: None }
+    }
+
+    /// Arm fault injection: `replicate.upload` truncates a staged
+    /// append, `replicate.manifest` tears an atomic manifest write, and
+    /// `remote.read` fails a read transiently.
+    pub fn with_faults(mut self, faults: Arc<FaultPlan>) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn final_path(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    fn staged_path(&self, name: &str) -> PathBuf {
+        self.root.join(format!(".stage-{name}"))
+    }
+}
+
+impl RemoteStore for FsRemoteStore {
+    fn describe(&self) -> String {
+        self.root.display().to_string()
+    }
+
+    fn staged_len(&self, name: &str) -> Result<u64> {
+        match std::fs::metadata(self.staged_path(name)) {
+            Ok(m) => Ok(m.len()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(0),
+            Err(e) => Err(e).with_context(|| {
+                format!("stat of staged {} under {}", name, self.root.display())
+            }),
+        }
+    }
+
+    fn read_staged(&self, name: &str, len: u64) -> Result<Vec<u8>> {
+        let path = self.staged_path(name);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading staged {}", path.display()))?;
+        if (bytes.len() as u64) < len {
+            bail!(
+                "staged {} holds {} bytes, {} requested",
+                path.display(),
+                bytes.len(),
+                len
+            );
+        }
+        Ok(bytes[..len as usize].to_vec())
+    }
+
+    fn append_staged(&self, name: &str, offset: u64, data: &[u8]) -> Result<()> {
+        use std::io::Write;
+        std::fs::create_dir_all(&self.root)
+            .with_context(|| format!("creating replica root {}", self.root.display()))?;
+        let path = self.staged_path(name);
+        let cur = self.staged_len(name)?;
+        if cur != offset {
+            bail!(
+                "staged {} is at {} bytes but the append targets offset {}",
+                path.display(),
+                cur,
+                offset
+            );
+        }
+        // An armed `replicate.upload` fault truncates this append: only
+        // a prefix of `data` lands, then the transfer errors — the
+        // canonical mid-upload network/power loss.  The surviving
+        // prefix is real staged state the resume path must handle.
+        let shot = self
+            .faults
+            .as_ref()
+            .and_then(|p| p.hit(fault::SITE_REPLICATE_UPLOAD));
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening staged {}", path.display()))?;
+        match shot {
+            None => f
+                .write_all(data)
+                .with_context(|| format!("appending to staged {}", path.display())),
+            Some(s) => {
+                let keep = (s.after_bytes.unwrap_or(0) as usize).min(data.len());
+                f.write_all(&data[..keep])
+                    .with_context(|| format!("appending to staged {}", path.display()))?;
+                let _ = f.flush();
+                Err(anyhow::Error::new(fault::InjectedFault::new(
+                    fault::SITE_REPLICATE_UPLOAD,
+                ))
+                .context(format!(
+                    "upload to {} truncated after {keep} of {} bytes",
+                    path.display(),
+                    data.len()
+                )))
+            }
+        }
+    }
+
+    fn promote(&self, name: &str) -> Result<()> {
+        registry::rename_into_place(&self.staged_path(name), &self.final_path(name))
+    }
+
+    fn abort_staged(&self, name: &str) -> Result<()> {
+        match std::fs::remove_file(self.staged_path(name)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e).with_context(|| {
+                format!("aborting staged {} under {}", name, self.root.display())
+            }),
+        }
+    }
+
+    fn read(&self, name: &str) -> Result<Vec<u8>> {
+        if let Some(p) = &self.faults {
+            p.check(fault::SITE_REMOTE_READ).map_err(|e| {
+                anyhow::Error::new(e).context(format!(
+                    "reading {} from replica {} (transient)",
+                    name,
+                    self.root.display()
+                ))
+            })?;
+        }
+        let path = self.final_path(name);
+        std::fs::read(&path)
+            .with_context(|| format!("reading replica object {}", path.display()))
+    }
+
+    fn exists(&self, name: &str) -> Result<bool> {
+        Ok(self.final_path(name).exists())
+    }
+
+    fn write_atomic(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        std::fs::create_dir_all(&self.root)
+            .with_context(|| format!("creating replica root {}", self.root.display()))?;
+        let path = self.final_path(name);
+        // An armed `replicate.manifest` fault lands a *torn* document at
+        // the final path and errors — the one failure the atomic
+        // temp+rename protocol exists to prevent, injected so replica
+        // readers prove they reject it.
+        if let Some(p) = &self.faults {
+            if p.hit(fault::SITE_REPLICATE_MANIFEST).is_some() {
+                let torn = &bytes[..bytes.len() / 2];
+                std::fs::write(&path, torn)
+                    .with_context(|| format!("tearing {}", path.display()))?;
+                return Err(anyhow::Error::new(fault::InjectedFault::new(
+                    fault::SITE_REPLICATE_MANIFEST,
+                ))
+                .context(format!(
+                    "manifest write to {} torn after {} of {} bytes",
+                    path.display(),
+                    torn.len(),
+                    bytes.len()
+                )));
+            }
+        }
+        registry::write_atomic(&path, bytes)
+    }
+}
+
+/// Pull-through reader over a [`RemoteStore`]: the replica-side
+/// counterpart of [`super::CheckpointRegistry`].  Every fetched
+/// checkpoint is verified twice before admission — whole-file FNV-1a-64
+/// against the manifest entry, then the `ckpt/v1` trailer
+/// ([`format::verify_trailer`]) — so a truncated transfer, a bit-flip
+/// in transit, or a replica listing it never produced is rejected with
+/// a clean error before any decode.  With a cache directory attached,
+/// verified bytes are written through atomically and later fetches of
+/// the same entry are served locally.
+pub struct RemoteRegistry {
+    store: Box<dyn RemoteStore>,
+    cache_dir: Option<PathBuf>,
+    /// Deterministic capped backoff for the `_with_retry` helpers
+    /// (mirrors the supervisor: `base << min(k, 6)` ms + seeded jitter).
+    max_retries: u64,
+    backoff_ms: u64,
+    seed: u64,
+}
+
+impl RemoteRegistry {
+    pub fn new(store: Box<dyn RemoteStore>) -> Self {
+        Self { store, cache_dir: None, max_retries: 4, backoff_ms: 10, seed: 0 }
+    }
+
+    /// Write verified checkpoints through to `dir` and serve repeat
+    /// fetches from it (hash-checked on the way back out, so a corrupted
+    /// cache falls through to the remote instead of poisoning a resume).
+    pub fn with_cache(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
+    /// Tune the `_with_retry` helpers (defaults mirror `FaultsCfg`).
+    pub fn with_retry_policy(mut self, max_retries: u64, backoff_ms: u64, seed: u64) -> Self {
+        self.max_retries = max_retries;
+        self.backoff_ms = backoff_ms.max(1);
+        self.seed = seed;
+        self
+    }
+
+    /// Human-readable replica location for logs.
+    pub fn describe(&self) -> String {
+        self.store.describe()
+    }
+
+    /// All replicated checkpoints, ascending by iteration.  An absent
+    /// manifest reads as an empty replica; a torn or truncated one is a
+    /// clean (transient) error.
+    pub fn entries(&self) -> Result<Vec<CheckpointEntry>> {
+        let text = match self.store.read(REMOTE_MANIFEST) {
+            Ok(bytes) => String::from_utf8(bytes).map_err(|_| {
+                anyhow!(
+                    "replica manifest at {} is not UTF-8 (torn write?)",
+                    self.store.describe()
+                )
+            })?,
+            Err(e) => {
+                // A replica that was never written to is empty, not
+                // broken; injected transient read errors stay errors.
+                if is_not_found(&e) && !fault::is_injected(&e) {
+                    return Ok(Vec::new());
+                }
+                return Err(e);
+            }
+        };
+        registry::parse_manifest(&text).with_context(|| {
+            format!("parsing replica manifest at {}", self.store.describe())
+        })
+    }
+
+    /// The newest replicated checkpoint entry, if any.
+    pub fn latest(&self) -> Result<Option<CheckpointEntry>> {
+        Ok(self.entries()?.into_iter().last())
+    }
+
+    /// Raw (unverified) bytes of one listed checkpoint — cache first,
+    /// then the remote.  Callers that skip [`RemoteRegistry::fetch`]
+    /// must verify hash + trailer themselves (the serve watcher does,
+    /// counting rejects).
+    pub fn read_entry_bytes(&self, entry: &CheckpointEntry) -> Result<Vec<u8>> {
+        if let Some(dir) = &self.cache_dir {
+            let cached = dir.join(&entry.file);
+            if let Ok(bytes) = std::fs::read(&cached) {
+                if fnv1a64_hex(&bytes) == entry.hash {
+                    return Ok(bytes);
+                }
+                // Corrupt cache: fall through to the remote.
+            }
+        }
+        self.store.read(&entry.file)
+    }
+
+    /// Fetch + verify one listed checkpoint's bytes: manifest hash,
+    /// then `ckpt/v1` trailer, then (on success) write-through to the
+    /// cache.  The admission gate for everything replica-sourced.
+    pub fn fetch(&self, entry: &CheckpointEntry) -> Result<Vec<u8>> {
+        let bytes = self.read_entry_bytes(entry)?;
+        let hash = fnv1a64_hex(&bytes);
+        if hash != entry.hash {
+            bail!(
+                "replica checkpoint {} hash {hash} does not match manifest ({}): \
+                 transfer truncated or replica corrupt",
+                entry.file,
+                entry.hash
+            );
+        }
+        format::verify_trailer(&bytes).with_context(|| {
+            format!("verifying replica checkpoint {} before admission", entry.file)
+        })?;
+        if let Some(dir) = &self.cache_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating replica cache {}", dir.display()))?;
+            registry::write_atomic(&dir.join(&entry.file), &bytes)?;
+        }
+        Ok(bytes)
+    }
+
+    /// Fetch, verify and decode one listed checkpoint.
+    pub fn load(&self, entry: &CheckpointEntry) -> Result<CheckpointData> {
+        let bytes = self.fetch(entry)?;
+        format::decode(&bytes).with_context(|| {
+            format!("decoding replica checkpoint {}", entry.file)
+        })
+    }
+
+    /// Load the newest replicated checkpoint, `None` for an empty
+    /// replica.
+    pub fn load_latest(&self) -> Result<Option<CheckpointData>> {
+        match self.latest()? {
+            Some(e) => Ok(Some(self.load(&e)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Load the checkpoint replicated at a specific iteration.
+    pub fn load_iter(&self, iter: u64) -> Result<CheckpointData> {
+        let entries = self.entries()?;
+        let entry = entries.iter().find(|e| e.iter == iter).ok_or_else(|| {
+            anyhow!(
+                "no replicated checkpoint at iter {iter} under {} (have: {})",
+                self.store.describe(),
+                entries
+                    .iter()
+                    .map(|e| e.iter.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+        self.load(entry)
+    }
+
+    /// [`entries`](Self::entries) behind the deterministic capped
+    /// backoff: transient remote failures (torn manifest, injected read
+    /// error) are retried up to the budget.
+    pub fn entries_with_retry(&self) -> Result<Vec<CheckpointEntry>> {
+        self.retrying("listing replica", |r| r.entries())
+    }
+
+    /// [`load_latest`](Self::load_latest) behind the same backoff.
+    pub fn load_latest_with_retry(&self) -> Result<Option<CheckpointData>> {
+        self.retrying("loading latest replica checkpoint", |r| r.load_latest())
+    }
+
+    fn retrying<T>(
+        &self,
+        what: &str,
+        op: impl Fn(&Self) -> Result<T>,
+    ) -> Result<T> {
+        let mut rng = Rng::seed_from_u64(self.seed ^ 0x5e41_b0ff);
+        let mut attempt: u64 = 0;
+        loop {
+            match op(self) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    attempt += 1;
+                    if attempt > self.max_retries {
+                        return Err(e.context(format!(
+                            "{what} from {}: retry budget exhausted ({} retries)",
+                            self.store.describe(),
+                            self.max_retries
+                        )));
+                    }
+                    let exp = self.backoff_ms << (attempt - 1).min(6);
+                    let jitter = rng.below(self.backoff_ms as usize + 1) as u64;
+                    let delay = Duration::from_millis(exp + jitter);
+                    eprintln!(
+                        "[replica] {what} failed ({e:#}); retrying in {}ms",
+                        delay.as_millis()
+                    );
+                    std::thread::sleep(delay);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::format::tests::toy_checkpoint;
+    use crate::checkpoint::registry::{CheckpointRegistry, RetentionCfg};
+    use crate::util::fault::{FaultPlan, FaultSiteCfg, FaultsCfg};
+    use crate::util::tmp::TempDir;
+
+    fn site(name: &str, at: u64, times: u64, after_bytes: Option<u64>) -> FaultSiteCfg {
+        FaultSiteCfg { site: name.into(), at, times, after_bytes }
+    }
+
+    fn plan_for(sites: Vec<FaultSiteCfg>) -> Arc<FaultPlan> {
+        FaultPlan::from_cfg(&FaultsCfg { sites, ..Default::default() }, 0).unwrap()
+    }
+
+    /// A published local entry + its verified bytes, for upload tests.
+    fn published_entry(dir: &Path, iter: u64) -> (CheckpointEntry, Vec<u8>) {
+        let reg = CheckpointRegistry::new(dir, RetentionCfg::default());
+        let mut data = toy_checkpoint();
+        data.iter = iter;
+        let entry = reg.publish(&data).unwrap();
+        let bytes = reg.load_bytes(&entry).unwrap();
+        (entry, bytes)
+    }
+
+    #[test]
+    fn staged_append_promote_roundtrip() {
+        let tmp = TempDir::new().unwrap();
+        let store = FsRemoteStore::new(tmp.path().join("replica"));
+        assert_eq!(store.staged_len("obj").unwrap(), 0);
+        store.append_staged("obj", 0, b"hello ").unwrap();
+        store.append_staged("obj", 6, b"world").unwrap();
+        assert_eq!(store.staged_len("obj").unwrap(), 11);
+        assert_eq!(store.read_staged("obj", 5).unwrap(), b"hello");
+        // wrong offset = protocol violation, not silent corruption
+        assert!(store.append_staged("obj", 3, b"x").is_err());
+        assert!(!store.exists("obj").unwrap());
+        store.promote("obj").unwrap();
+        assert!(store.exists("obj").unwrap());
+        assert_eq!(store.read("obj").unwrap(), b"hello world");
+        assert_eq!(store.staged_len("obj").unwrap(), 0, "staging consumed");
+        // abort is idempotent on absent staged state
+        store.abort_staged("obj").unwrap();
+    }
+
+    #[test]
+    fn injected_upload_fault_leaves_a_resumable_prefix() {
+        let tmp = TempDir::new().unwrap();
+        let plan = plan_for(vec![site(
+            fault::SITE_REPLICATE_UPLOAD,
+            1,
+            1,
+            Some(4),
+        )]);
+        let store =
+            FsRemoteStore::new(tmp.path().join("replica")).with_faults(plan.clone());
+        let err = store.append_staged("obj", 0, b"abcdefgh").unwrap_err();
+        assert!(fault::is_injected(&err), "untyped failure: {err:#}");
+        // the truncated prefix survives as staged state ...
+        assert_eq!(store.staged_len("obj").unwrap(), 4);
+        assert_eq!(store.read_staged("obj", 4).unwrap(), b"abcd");
+        // ... and the resumed append (site spent) completes the object
+        store.append_staged("obj", 4, b"efgh").unwrap();
+        store.promote("obj").unwrap();
+        assert_eq!(store.read("obj").unwrap(), b"abcdefgh");
+        assert_eq!(plan.fired(fault::SITE_REPLICATE_UPLOAD), 1);
+    }
+
+    #[test]
+    fn injected_manifest_tear_is_visible_then_repaired() {
+        let tmp = TempDir::new().unwrap();
+        let plan = plan_for(vec![site(fault::SITE_REPLICATE_MANIFEST, 1, 1, None)]);
+        let store =
+            FsRemoteStore::new(tmp.path().join("replica")).with_faults(plan.clone());
+        let doc = br#"{"schema": "ckpt_registry/v1", "checkpoints": []}"#;
+        let err = store.write_atomic(REMOTE_MANIFEST, doc).unwrap_err();
+        assert!(fault::is_injected(&err), "untyped failure: {err:#}");
+        // the torn bytes are visible at the final path — and rejected
+        // by the reader as a clean error, not a panic
+        let reg = RemoteRegistry::new(Box::new(FsRemoteStore::new(
+            tmp.path().join("replica"),
+        )));
+        assert!(reg.entries().is_err(), "torn manifest accepted");
+        // the retried write (site spent) repairs it atomically
+        store.write_atomic(REMOTE_MANIFEST, doc).unwrap();
+        assert!(reg.entries().unwrap().is_empty());
+    }
+
+    #[test]
+    fn fetch_verifies_hash_and_trailer_and_caches() {
+        let tmp = TempDir::new().unwrap();
+        let local = tmp.path().join("local");
+        let (entry, bytes) = published_entry(&local, 7);
+
+        let root = tmp.path().join("replica");
+        let store = FsRemoteStore::new(&root);
+        store.append_staged(&entry.file, 0, &bytes).unwrap();
+        store.promote(&entry.file).unwrap();
+        store
+            .write_atomic(
+                REMOTE_MANIFEST,
+                registry::manifest_json(std::slice::from_ref(&entry))
+                    .to_string()
+                    .as_bytes(),
+            )
+            .unwrap();
+
+        let cache = tmp.path().join("cache");
+        let reg = RemoteRegistry::new(Box::new(FsRemoteStore::new(&root)))
+            .with_cache(&cache);
+        let got = reg.entries().unwrap();
+        assert_eq!(got, vec![entry.clone()]);
+        assert_eq!(reg.load(&entry).unwrap().iter, 7);
+        assert!(cache.join(&entry.file).exists(), "verified bytes cached");
+        // a later fetch is served from the cache even if the remote
+        // object vanishes
+        std::fs::remove_file(root.join(&entry.file)).unwrap();
+        assert_eq!(reg.load(&entry).unwrap().iter, 7);
+
+        // truncated replica object: rejected before decode
+        store.append_staged(&entry.file, 0, &bytes[..bytes.len() / 2]).unwrap();
+        store.promote(&entry.file).unwrap();
+        let fresh = RemoteRegistry::new(Box::new(FsRemoteStore::new(&root)));
+        let msg = format!("{:#}", fresh.fetch(&entry).unwrap_err());
+        assert!(msg.contains("hash"), "unexpected rejection: {msg}");
+        // bit-flipped replica object: ditto
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x01;
+        store.abort_staged(&entry.file).unwrap();
+        store.append_staged(&entry.file, 0, &bad).unwrap();
+        store.promote(&entry.file).unwrap();
+        assert!(fresh.fetch(&entry).is_err(), "bit-flip admitted");
+        // a corrupted *cache* falls through to the (restored) remote
+        store.abort_staged(&entry.file).unwrap();
+        store.append_staged(&entry.file, 0, &bytes).unwrap();
+        store.promote(&entry.file).unwrap();
+        std::fs::write(cache.join(&entry.file), b"garbage").unwrap();
+        assert_eq!(reg.load(&entry).unwrap().iter, 7, "cache corruption fatal");
+    }
+
+    #[test]
+    fn transient_read_faults_are_absorbed_by_the_retry_helpers() {
+        let tmp = TempDir::new().unwrap();
+        let root = tmp.path().join("replica");
+        let local = tmp.path().join("local");
+        let (entry, bytes) = published_entry(&local, 3);
+        let store = FsRemoteStore::new(&root);
+        store.append_staged(&entry.file, 0, &bytes).unwrap();
+        store.promote(&entry.file).unwrap();
+        store
+            .write_atomic(
+                REMOTE_MANIFEST,
+                registry::manifest_json(std::slice::from_ref(&entry))
+                    .to_string()
+                    .as_bytes(),
+            )
+            .unwrap();
+
+        let plan = plan_for(vec![site(fault::SITE_REMOTE_READ, 1, 2, None)]);
+        let faulty = RemoteRegistry::new(Box::new(
+            FsRemoteStore::new(&root).with_faults(plan.clone()),
+        ))
+        .with_retry_policy(4, 1, 0);
+        // direct read fails on the injected fault ...
+        assert!(faulty.entries().is_err());
+        // ... the retry helper rides out the remaining firing
+        let ckpt = faulty.load_latest_with_retry().unwrap().unwrap();
+        assert_eq!(ckpt.iter, 3);
+        assert_eq!(plan.fired(fault::SITE_REMOTE_READ), 2);
+
+        // an exhausted budget surfaces the typed original error
+        let plan = plan_for(vec![site(fault::SITE_REMOTE_READ, 1, 1_000, None)]);
+        let dead = RemoteRegistry::new(Box::new(
+            FsRemoteStore::new(&root).with_faults(plan),
+        ))
+        .with_retry_policy(2, 1, 0);
+        let err = dead.entries_with_retry().unwrap_err();
+        assert!(fault::is_injected(&err), "typed marker lost: {err:#}");
+        assert!(format!("{err:#}").contains("retry budget exhausted"));
+    }
+
+    #[test]
+    fn absent_replica_reads_as_empty() {
+        let tmp = TempDir::new().unwrap();
+        let reg = RemoteRegistry::new(Box::new(FsRemoteStore::new(
+            tmp.path().join("never-written"),
+        )));
+        assert!(reg.entries().unwrap().is_empty());
+        assert!(reg.latest().unwrap().is_none());
+        assert!(reg.load_latest().unwrap().is_none());
+        assert!(reg.load_iter(5).is_err());
+    }
+}

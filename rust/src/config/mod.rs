@@ -103,11 +103,28 @@ pub struct CkptCfg {
     /// Retention: additionally keep every checkpoint whose iteration is
     /// a multiple of M forever (0 = none).
     pub keep_every: u64,
+    /// Evacuation target: replicate every published checkpoint to this
+    /// remote registry root (another failure domain) via the background
+    /// [`crate::checkpoint::Replicator`].  Retention never prunes an
+    /// entry that has not landed there yet.
+    pub replicate: Option<PathBuf>,
+    /// Restore source of last resort: when the local registry at `dir`
+    /// has nothing readable, the supervisor falls back to this replica
+    /// root (fetch-and-verify through
+    /// [`crate::checkpoint::RemoteRegistry`]).
+    pub replica: Option<PathBuf>,
 }
 
 impl Default for CkptCfg {
     fn default() -> Self {
-        Self { every: 0, dir: None, keep_last: 3, keep_every: 0 }
+        Self {
+            every: 0,
+            dir: None,
+            keep_last: 3,
+            keep_every: 0,
+            replicate: None,
+            replica: None,
+        }
     }
 }
 
@@ -336,6 +353,20 @@ impl RunCfg {
                     ),
                     ("keep_last", Json::num(self.checkpoint.keep_last as f64)),
                     ("keep_every", Json::num(self.checkpoint.keep_every as f64)),
+                    (
+                        "replicate",
+                        match &self.checkpoint.replicate {
+                            Some(d) => Json::str(d.to_string_lossy()),
+                            None => Json::Null,
+                        },
+                    ),
+                    (
+                        "replica",
+                        match &self.checkpoint.replica {
+                            Some(d) => Json::str(d.to_string_lossy()),
+                            None => Json::Null,
+                        },
+                    ),
                 ]),
             ),
             (
@@ -529,13 +560,25 @@ impl RunCfg {
         };
         cfg.validate_backend()?;
         if let Some(c) = v.get("checkpoint") {
-            Self::check_keys(c, &["every", "dir", "keep_last", "keep_every"], "checkpoint")?;
+            Self::check_keys(
+                c,
+                &["every", "dir", "keep_last", "keep_every", "replicate", "replica"],
+                "checkpoint",
+            )?;
             cfg.checkpoint = CkptCfg {
                 every: c.get("every").and_then(Json::as_u64).unwrap_or(0),
                 dir: c.get("dir").and_then(Json::as_str).map(PathBuf::from),
                 keep_last: c.get("keep_last").and_then(Json::as_usize).unwrap_or(3),
                 keep_every: c.get("keep_every").and_then(Json::as_u64).unwrap_or(0),
+                replicate: c.get("replicate").and_then(Json::as_str).map(PathBuf::from),
+                replica: c.get("replica").and_then(Json::as_str).map(PathBuf::from),
             };
+            if cfg.checkpoint.replicate.is_some() && cfg.checkpoint.every == 0 {
+                return Err(anyhow!(
+                    "checkpoint.replicate is set but checkpoint.every = 0 \
+                     (nothing will ever be published to evacuate)"
+                ));
+            }
             if cfg.checkpoint.every > 0 && cfg.checkpoint.dir.is_none() {
                 return Err(anyhow!(
                     "checkpoint.every = {} but checkpoint.dir is unset",
@@ -621,6 +664,8 @@ mod tests {
             dir: Some(PathBuf::from("ckpts/run1")),
             keep_last: 2,
             keep_every: 50,
+            replicate: Some(PathBuf::from("replica/run1")),
+            replica: Some(PathBuf::from("replica/run1")),
         };
         cfg.faults = FaultsCfg {
             sites: vec![

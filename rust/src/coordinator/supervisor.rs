@@ -29,7 +29,9 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::checkpoint::{CheckpointData, CheckpointRegistry, RetentionCfg};
+use crate::checkpoint::{
+    CheckpointData, CheckpointRegistry, FsRemoteStore, RemoteRegistry, RetentionCfg,
+};
 use crate::config::RunCfg;
 use crate::util::fault::{injected_site, is_injected, FaultPlan};
 use crate::util::rng::Rng;
@@ -94,41 +96,74 @@ impl Backoff {
     }
 }
 
-/// The newest checkpoint this run can restore from, walking the
-/// registry newest→oldest and *skipping* checkpoints that fail to load
+/// The newest checkpoint this run can restore from — the recovery
+/// ladder: **local registry → replica → fresh**.  The local registry is
+/// walked newest→oldest, *skipping* checkpoints that fail to load
 /// (truncated file, hash mismatch) — one corrupt checkpoint costs
-/// `checkpoint.every` replayed steps, not the run.  `None` when the run
-/// has no checkpoint directory or nothing readable is published yet
-/// (the supervisor then restarts from scratch, which is equally
-/// deterministic).  A torn *manifest* read propagates as an error: it
-/// is itself a transient fault the caller's retry loop absorbs.
+/// `checkpoint.every` replayed steps, not the run.  When nothing local
+/// is readable and `checkpoint.replica` names a replica root, the same
+/// walk runs against the remote registry (fetch-and-verify through
+/// [`RemoteRegistry`], cached next to the local registry when there is
+/// one) — so a box that lost its whole disk resumes from the evacuated
+/// copies.  `None` when neither rung holds anything readable (the
+/// supervisor then restarts from scratch, which is equally
+/// deterministic).  A torn *manifest* read — local or remote — and a
+/// transient replica read error propagate as errors: they are
+/// themselves transient faults the caller's retry loop absorbs with its
+/// deterministic capped backoff.
 fn latest_restore_point(
     cfg: &RunCfg,
     faults: Option<&std::sync::Arc<FaultPlan>>,
 ) -> Result<Option<CheckpointData>> {
-    if cfg.checkpoint.every == 0 {
-        return Ok(None);
+    if cfg.checkpoint.every > 0 {
+        if let Some(dir) = cfg.checkpoint.dir.clone() {
+            let mut registry = CheckpointRegistry::new(
+                dir,
+                RetentionCfg {
+                    keep_last: cfg.checkpoint.keep_last,
+                    keep_every: cfg.checkpoint.keep_every,
+                },
+            );
+            if let Some(p) = faults {
+                registry = registry.with_faults(p.clone());
+            }
+            for entry in registry.entries()?.iter().rev() {
+                match registry.load(entry) {
+                    Ok(data) => return Ok(Some(data)),
+                    Err(e) => eprintln!(
+                        "[supervise] checkpoint {} unreadable ({e:#}); trying an older one",
+                        entry.file
+                    ),
+                }
+            }
+        }
     }
-    let Some(dir) = cfg.checkpoint.dir.clone() else {
-        return Ok(None);
-    };
-    let mut registry = CheckpointRegistry::new(
-        dir,
-        RetentionCfg {
-            keep_last: cfg.checkpoint.keep_last,
-            keep_every: cfg.checkpoint.keep_every,
-        },
-    );
-    if let Some(p) = faults {
-        registry = registry.with_faults(p.clone());
-    }
-    for entry in registry.entries()?.iter().rev() {
-        match registry.load(entry) {
-            Ok(data) => return Ok(Some(data)),
-            Err(e) => eprintln!(
-                "[supervise] checkpoint {} unreadable ({e:#}); trying an older one",
-                entry.file
-            ),
+    if let Some(root) = &cfg.checkpoint.replica {
+        let mut store = FsRemoteStore::new(root);
+        if let Some(p) = faults {
+            store = store.with_faults(p.clone());
+        }
+        let mut remote = RemoteRegistry::new(Box::new(store));
+        if let Some(dir) = &cfg.checkpoint.dir {
+            remote = remote.with_cache(dir.join(".replica-cache"));
+        }
+        for entry in remote.entries()?.iter().rev() {
+            match remote.load(entry) {
+                Ok(data) => {
+                    eprintln!(
+                        "[supervise] local registry empty; restoring iter {} from \
+                         replica {}",
+                        data.iter,
+                        remote.describe()
+                    );
+                    return Ok(Some(data));
+                }
+                Err(e) => eprintln!(
+                    "[supervise] replica checkpoint {} unreadable ({e:#}); trying an \
+                     older one",
+                    entry.file
+                ),
+            }
         }
     }
     Ok(None)

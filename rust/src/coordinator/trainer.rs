@@ -45,7 +45,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::checkpoint::{CheckpointData, CheckpointRegistry, CheckpointWriter, RetentionCfg};
+use crate::checkpoint::{
+    CheckpointData, CheckpointRegistry, CheckpointWriter, FsRemoteStore, Replicator,
+    RetentionCfg,
+};
 use crate::config::{DataCfg, RunCfg};
 use crate::data::{
     cifar, prefetch, synthetic, AugmentCfg, Dataset, Prefetcher, Sampler, SamplerState,
@@ -472,12 +475,13 @@ impl<'e> Trainer<'e> {
         let mut ckpt_writer: Option<CheckpointWriter> = None;
         let mut shadow: Option<Sampler> = None;
         let mut prune_failures = None;
+        let mut replicator: Option<Replicator> = None;
         if ckpt_every > 0 {
             let dir = self.cfg.checkpoint.dir.clone().ok_or_else(|| {
                 anyhow!("checkpoint.every = {ckpt_every} but checkpoint.dir is unset")
             })?;
             let mut registry = CheckpointRegistry::new(
-                dir,
+                &dir,
                 RetentionCfg {
                     keep_last: self.cfg.checkpoint.keep_last,
                     keep_every: self.cfg.checkpoint.keep_every,
@@ -488,6 +492,26 @@ impl<'e> Trainer<'e> {
             }
             registry = registry.with_obs(self.obs.clone());
             prune_failures = Some(registry.prune_failure_counter());
+            // Off-box evacuation: the replicator follows the manifest
+            // and pushes each published checkpoint to the remote root.
+            // The shared watermark pins retention — prune never removes
+            // an entry the replicator has not finished evacuating.
+            if let Some(root) = self.cfg.checkpoint.replicate.clone() {
+                let watermark =
+                    std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+                registry = registry.with_replication_floor(watermark.clone());
+                let mut store = FsRemoteStore::new(root);
+                if let Some(p) = &self.faults {
+                    store = store.with_faults(p.clone());
+                }
+                replicator = Some(Replicator::spawn(
+                    &dir,
+                    Box::new(store),
+                    watermark,
+                    self.obs.clone(),
+                    std::time::Duration::from_millis(10),
+                ));
+            }
             ckpt_writer = Some(CheckpointWriter::spawn(registry));
             shadow = Some(sampler_start.build(
                 train_len,
@@ -724,6 +748,29 @@ impl<'e> Trainer<'e> {
                     .display()
             );
         }
+        // Drain the replicator *after* the writer: its final sync picks
+        // up the boundary checkpoint published above.  A parked upload
+        // error fails the run here — under supervision that is a
+        // transient the next attempt outlives (staged bytes resume).
+        let mut replica_report = None;
+        if let Some(r) = replicator.take() {
+            let report = r.finish()?;
+            eprintln!(
+                "[replicate] {} checkpoint(s) evacuated ({} bytes, {} resumed, \
+                 {} vanished) -> {}",
+                report.uploaded,
+                report.bytes,
+                report.retries,
+                report.skipped_vanished,
+                self.cfg
+                    .checkpoint
+                    .replicate
+                    .as_deref()
+                    .unwrap_or_else(|| std::path::Path::new("?"))
+                    .display()
+            );
+            replica_report = Some(report);
+        }
 
         // Bench/metrics attribution: which execution backend ran the
         // loop, and over how many shards (0 = single-executor).
@@ -757,6 +804,12 @@ impl<'e> Trainer<'e> {
         metrics.prefetch_depth = prefetch_depth;
         if let Some(c) = &prune_failures {
             metrics.prune_failures = c.load(std::sync::atomic::Ordering::Relaxed);
+        }
+        if let Some(r) = &replica_report {
+            metrics.replica_lag_iters = r.lag_iters;
+            metrics.replica_bytes = r.bytes;
+            metrics.replica_retries = r.retries;
+            metrics.replica_skipped_vanished = r.skipped_vanished;
         }
 
         // Fold the per-phase summary into the run metrics and, when

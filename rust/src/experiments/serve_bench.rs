@@ -43,6 +43,12 @@ pub struct ServeBenchCfg {
     /// waits for the watcher's first hot-load, exercising the
     /// cross-process publish path end-to-end.
     pub registry: Option<PathBuf>,
+    /// Serve from a **replicated** registry root instead (the replica a
+    /// training box evacuates to via `checkpoint.replicate`): same
+    /// hot-load path, but every fetch is hash- and trailer-verified —
+    /// a serve fleet in another failure domain needs no local registry.
+    /// Mutually exclusive with `registry`.
+    pub replica: Option<PathBuf>,
     /// Provenance string recorded in the report (producer + profile).
     pub source: String,
 }
@@ -57,6 +63,7 @@ impl Default for ServeBenchCfg {
             max_delay: Duration::from_millis(2),
             seed: 0,
             registry: None,
+            replica: None,
             source: "serve_bench".into(),
         }
     }
@@ -88,6 +95,21 @@ pub fn resolve_bench_family(
     Ok((fam.join("sgd32.json"), Some(tmp)))
 }
 
+/// Block until the watcher publishes its first snapshot (a checkpoint
+/// must already exist — or soon appear — under `src`); `kind` labels
+/// the source in the timeout message and the progress line.
+fn wait_first_snapshot(cell: &SnapshotCell, src: &Path, kind: &str) -> Result<()> {
+    let t0 = Instant::now();
+    while cell.version() == 0 {
+        if t0.elapsed() > Duration::from_secs(10) {
+            bail!("no checkpoint appeared under {kind} {} within 10s", src.display());
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    println!("serve: {kind} {} -> snapshot v{}", src.display(), cell.version());
+    Ok(())
+}
+
 /// Run the sweep and return the `bench_serve/v1` report.
 pub fn run_serve_bench(
     engine: &Engine,
@@ -108,13 +130,16 @@ pub fn run_serve_bench(
     // whatever checkpoint a trainer process last published there,
     // hot-loaded by the watcher with no in-process trainer at all.
     let cell = Arc::new(SnapshotCell::new());
-    let _watcher = match &cfg.registry {
-        None => {
+    let _watcher = match (&cfg.registry, &cfg.replica) {
+        (Some(_), Some(_)) => {
+            bail!("--registry and --replica are mutually exclusive (one source of truth)")
+        }
+        (None, None) => {
             let state = ModelState::init(&probe.manifest, cfg.seed);
             cell.publish(StateSnapshot::from_model_state(probe.backend(), &state)?);
             None
         }
-        Some(dir) => {
+        (Some(dir), None) => {
             let w = crate::serve::watch_registry(
                 cell.clone(),
                 probe.backend(),
@@ -122,21 +147,18 @@ pub fn run_serve_bench(
                 dir,
                 Duration::from_millis(50),
             );
-            let t0 = Instant::now();
-            while cell.version() == 0 {
-                if t0.elapsed() > Duration::from_secs(10) {
-                    bail!(
-                        "no checkpoint appeared under {} within 10s",
-                        dir.display()
-                    );
-                }
-                std::thread::sleep(Duration::from_millis(10));
-            }
-            println!(
-                "serve: registry {} -> snapshot v{}",
-                dir.display(),
-                cell.version()
+            wait_first_snapshot(&cell, dir, "registry")?;
+            Some(w)
+        }
+        (None, Some(root)) => {
+            let w = crate::serve::watch_replica(
+                cell.clone(),
+                probe.backend(),
+                Arc::new(probe.manifest.state_spec()),
+                root,
+                Duration::from_millis(50),
             );
+            wait_first_snapshot(&cell, root, "replica")?;
             Some(w)
         }
     };

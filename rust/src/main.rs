@@ -6,6 +6,8 @@
 //! e2train train --family resnet8-c10-tiny --method e2train --iters 300
 //! e2train train --family refmlp-tiny --iters 300 --ckpt-every 50 --ckpt-dir ckpts
 //! e2train resume ckpts
+//! e2train resume --replica replica/run1
+//! e2train serve --replica replica/run1 --clients 2,8
 //! e2train exp tab2 --iters 400 --out results
 //! e2train serve --clients 2,8 --requests 32 --out BENCH_serve.json
 //! e2train serve --registry ckpts --clients 2,8
@@ -19,7 +21,9 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
-use e2train::checkpoint::{CheckpointRegistry, RetentionCfg};
+use e2train::checkpoint::{
+    CheckpointRegistry, FsRemoteStore, RemoteRegistry, RetentionCfg,
+};
 use e2train::config::{BackendChoice, DataCfg, RunCfg};
 use e2train::coordinator::Trainer;
 use e2train::experiments;
@@ -58,6 +62,9 @@ COMMANDS:
     --ckpt-dir <dir>            checkpoint registry directory
     --ckpt-keep-last <n>        retention: keep newest n checkpoints [3]
     --ckpt-keep-every <n>       retention: pin every n-th iteration  [0]
+    --replicate <root>          evacuate every published checkpoint to
+                                this replica root (resumable chunked
+                                transfer, verified before publish)
     --config <path>             load a JSON run config instead
     --supervised                run under the recovery supervisor:
                                 transient failures restore from the
@@ -67,8 +74,13 @@ COMMANDS:
                                 (observability plane only — the traced
                                 run stays bitwise identical)
     --out <path>                write run-metrics JSON
-  resume <dir>                  continue a checkpointed run, bitwise
+  resume [dir]                  continue a checkpointed run, bitwise
                                 identical to the uninterrupted one
+    --replica <root>            restore from a replicated registry root
+                                when the local dir is gone or behind
+                                (fetches are hash+trailer verified;
+                                with no [dir] at all, a dead box's run
+                                resumes entirely from the replica)
     --iter <n>                  resume a specific checkpointed iteration
                                 (default: the newest)
     --supervised                supervise the resumed run (see train)
@@ -95,6 +107,10 @@ COMMANDS:
     --registry <dir>            serve weights from a checkpoint registry
                                 (cross-process publish: no in-process
                                 trainer; hot-loads new checkpoints)
+    --replica <root>            serve from a replicated registry root in
+                                another failure domain (hot-loads are
+                                hash+trailer verified; excludes
+                                --registry)
     --clients <a,b,..>          client concurrency levels [2,8]
     --requests <n>              requests per client       [32]
     --req-size <n>              samples per request       [2]
@@ -169,8 +185,12 @@ fn main() -> Result<()> {
                     c.checkpoint.dir = args.get("ckpt-dir").map(PathBuf::from);
                     c.checkpoint.keep_last = args.usize_or("ckpt-keep-last", 3)?;
                     c.checkpoint.keep_every = args.u64_or("ckpt-keep-every", 0)?;
+                    c.checkpoint.replicate = args.get("replicate").map(PathBuf::from);
                     if c.checkpoint.every > 0 && c.checkpoint.dir.is_none() {
                         bail!("--ckpt-every needs --ckpt-dir");
+                    }
+                    if c.checkpoint.replicate.is_some() && c.checkpoint.every == 0 {
+                        bail!("--replicate needs --ckpt-every/--ckpt-dir (nothing is ever published to evacuate)");
                     }
                     c
                 }
@@ -214,16 +234,44 @@ fn main() -> Result<()> {
             }
         }
         "resume" => {
-            let dir = args
-                .positional
-                .get(1)
-                .ok_or_else(|| anyhow!("resume needs a checkpoint registry directory"))?;
-            let registry = CheckpointRegistry::new(dir, RetentionCfg::default());
-            let ckpt = match args.get("iter") {
-                Some(_) => registry.load_iter(args.u64_or("iter", 0)?)?,
-                None => registry
-                    .load_latest()?
-                    .ok_or_else(|| anyhow!("no checkpoints under {dir}"))?,
+            // The starting checkpoint comes from a local registry dir
+            // (positional), a --replica root, or both — local wins and
+            // the replica is the cross-failure-domain fallback, the
+            // same ladder the supervisor walks on every restart.  A
+            // dead training box therefore resumes with no local
+            // registry at all: `e2train resume --replica <root>`.
+            let dir = args.positional.get(1).cloned();
+            let replica = args.get("replica").map(PathBuf::from);
+            if dir.is_none() && replica.is_none() {
+                bail!("resume needs a checkpoint registry directory (or --replica <root>)");
+            }
+            let pinned = args.get("iter").is_some();
+            let mut ckpt = None;
+            if let Some(d) = &dir {
+                let registry = CheckpointRegistry::new(d, RetentionCfg::default());
+                ckpt = match pinned {
+                    true => Some(registry.load_iter(args.u64_or("iter", 0)?)?),
+                    false => registry.load_latest()?,
+                };
+            }
+            let (ckpt, from) = match (ckpt, &replica) {
+                (Some(c), _) => (c, dir.clone().unwrap()),
+                (None, Some(root)) => {
+                    // Every replica fetch is hash- and trailer-verified
+                    // before it is admitted, so a truncated transfer or
+                    // bit-flipped replica fails here instead of
+                    // resuming from corrupt state.
+                    let remote =
+                        RemoteRegistry::new(Box::new(FsRemoteStore::new(root)));
+                    let c = match pinned {
+                        true => remote.load_iter(args.u64_or("iter", 0)?)?,
+                        false => remote.load_latest()?.ok_or_else(|| {
+                            anyhow!("no checkpoints under replica {}", root.display())
+                        })?,
+                    };
+                    (c, format!("replica {}", root.display()))
+                }
+                (None, None) => bail!("no checkpoints under {}", dir.unwrap()),
             };
             // The checkpoint embeds its full run config, so no launcher
             // file is needed; --artifacts / --data-dir relocate what
@@ -249,7 +297,7 @@ fn main() -> Result<()> {
                 cfg.trace_out = Some(PathBuf::from(p));
             }
             println!(
-                "resuming {}/{} at iter {}/{} from {dir}",
+                "resuming {}/{} at iter {}/{} from {from}",
                 cfg.family, cfg.method, ckpt.iter, cfg.iters
             );
             let supervised = args.bool("supervised") || cfg.faults.enabled();
@@ -258,12 +306,18 @@ fn main() -> Result<()> {
                 // The supervisor owns checkpoint selection (it restores
                 // from the newest readable one, possibly several times),
                 // so a pinned --iter contradicts it.
-                if args.get("iter").is_some() {
+                if pinned {
                     bail!("--iter cannot combine with --supervised (the supervisor always restores the latest checkpoint)");
                 }
-                // Restore from the registry the user pointed at, not
-                // wherever the embedded config once wrote checkpoints.
-                cfg.checkpoint.dir = Some(PathBuf::from(dir));
+                // Restore from the sources the user pointed at, not
+                // wherever the embedded config once looked: the local
+                // registry first (when given), then the replica root.
+                if let Some(d) = &dir {
+                    cfg.checkpoint.dir = Some(PathBuf::from(d));
+                }
+                if replica.is_some() {
+                    cfg.checkpoint.replica = replica.clone();
+                }
                 let mut trainer = Trainer::new(&engine, cfg)?;
                 trainer.run_supervised()?
             } else {
@@ -332,6 +386,7 @@ fn main() -> Result<()> {
                 max_delay: std::time::Duration::from_millis(args.u64_or("delay-ms", 2)?),
                 seed: args.u64_or("seed", 0)?,
                 registry: args.get("registry").map(PathBuf::from),
+                replica: args.get("replica").map(PathBuf::from),
                 source: if cfg!(debug_assertions) {
                     "e2train serve (debug profile)"
                 } else {

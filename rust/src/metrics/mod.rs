@@ -47,6 +47,17 @@ pub struct RunMetrics {
     /// Checkpoint retention prunes that failed (logged and tolerated —
     /// pruning is best-effort and never aborts training).
     pub prune_failures: u64,
+    /// Local iterations not yet on the replica when the run ended
+    /// (0 when replication is off or fully drained).  Like
+    /// `recoveries`, replication stats live outside the determinism
+    /// contract.
+    pub replica_lag_iters: u64,
+    /// Payload bytes the replicator appended to the remote store.
+    pub replica_bytes: u64,
+    /// Uploads resumed from a prior attempt's verified staged bytes.
+    pub replica_retries: u64,
+    /// Source checkpoints pruned away before they could be evacuated.
+    pub replica_skipped_vanished: u64,
     /// Per-phase wall-time summary from the observability plane
     /// (`obs` subsystem).  Timing only — lives outside the determinism
     /// contract, like `wall_seconds`: two bitwise-identical runs will
@@ -118,6 +129,13 @@ impl RunMetrics {
             ("shards", Json::num(self.shards as f64)),
             ("recoveries", Json::num(self.recoveries as f64)),
             ("prune_failures", Json::num(self.prune_failures as f64)),
+            ("replica_lag_iters", Json::num(self.replica_lag_iters as f64)),
+            ("replica_bytes", Json::num(self.replica_bytes as f64)),
+            ("replica_retries", Json::num(self.replica_retries as f64)),
+            (
+                "replica_skipped_vanished",
+                Json::num(self.replica_skipped_vanished as f64),
+            ),
         ];
         if let Some(obs) = &self.obs {
             pairs.push(("obs", obs.to_json()));

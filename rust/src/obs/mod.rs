@@ -78,6 +78,10 @@ pub const PHASE_REGISTRY_PUBLISH: &str = "registry-publish";
 pub const PHASE_SERVE_ASSEMBLY: &str = "serve-batch-assembly";
 /// Serve worker: one `eval_batch_snapshot` execution.
 pub const PHASE_SERVE_INFER: &str = "serve-infer";
+/// One checkpoint's evacuation to the remote store (chunked upload +
+/// verify + promote + remote manifest publish), recorded on the
+/// replicator thread.
+pub const PHASE_REPLICATE_UPLOAD: &str = "replicate-upload";
 
 // Counter names (monotonic u64).
 /// Batches the prefetch worker finished assembling.
@@ -104,6 +108,15 @@ pub const CTR_SERVE_QUEUE_DEPTH_SAMPLES: &str = "serve.queue-depth-samples";
 pub const CTR_SERVE_BATCH_REAL: &str = "serve.batch-rows-real";
 /// … out of this many total rows (fill ratio = real / total).
 pub const CTR_SERVE_BATCH_SLOTS: &str = "serve.batch-rows-total";
+/// Payload bytes the replicator landed on the remote store (staged
+/// appends that verified and promoted; excludes discarded prefixes).
+pub const CTR_REPLICA_BYTES: &str = "replica.bytes";
+/// Upload resumptions: a new replication attempt found verified staged
+/// bytes from an interrupted transfer and continued from that offset.
+pub const CTR_REPLICA_RETRIES: &str = "replica.retries";
+/// Source checkpoints that vanished (retention prune) before the
+/// replicator could read them — skipped, never an error.
+pub const CTR_REPLICA_SKIPPED_VANISHED: &str = "replica.skipped-vanished";
 
 /// The catalog key a trace row is attributed to.
 #[derive(Debug, Clone, Default)]

@@ -61,8 +61,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::checkpoint::{CheckpointRegistry, RetentionCfg};
+use crate::checkpoint::{
+    format, CheckpointEntry, CheckpointRegistry, FsRemoteStore, RemoteRegistry,
+    RetentionCfg,
+};
 use crate::obs::Obs;
+use crate::util::hash::fnv1a64_hex;
 use crate::runtime::{
     BackendKind, Engine, EnginePool, Manifest, SnapshotCell, StateSnapshot,
     TrainProgram,
@@ -521,6 +525,23 @@ impl ServeService {
         )
     }
 
+    /// Like [`ServeService::watch_registry`], but following a
+    /// **replicated** registry root in another failure domain — the
+    /// serve fleet hot-loads evacuated checkpoints with no local
+    /// registry at all.  Every fetched file is verified (manifest hash
+    /// + `ckpt/v1` trailer) before it can reach the snapshot cell.
+    pub fn watch_replica(&self, root: &Path, poll: Duration) -> RegistryWatcher {
+        watch_replica_opts(
+            self.cell.clone(),
+            self.backend,
+            self.state_spec.clone(),
+            root,
+            poll,
+            self.faults.clone(),
+            Some(self.stats.clone()),
+        )
+    }
+
     /// A new client handle (cheap, cloneable, sendable across threads).
     pub fn client(&self) -> ServeClient {
         ServeClient {
@@ -709,6 +730,34 @@ pub struct RegistryWatcher {
 /// by [`Manifest::state_spec`].
 pub type StateSpec = Vec<(String, Vec<usize>)>;
 
+/// Where a watcher reads checkpoints from: the local registry on this
+/// box, or a replicated registry root in another failure domain
+/// (pull-through [`RemoteRegistry`]).  Both speak `ckpt_registry/v1`
+/// and feed the same verify-then-publish tick.
+enum WatchSource {
+    Local(CheckpointRegistry),
+    Replica(RemoteRegistry),
+}
+
+impl WatchSource {
+    fn latest(&self) -> Result<Option<CheckpointEntry>> {
+        match self {
+            WatchSource::Local(r) => r.latest(),
+            WatchSource::Replica(r) => r.latest(),
+        }
+    }
+
+    /// Raw, unverified bytes — the tick owns the integrity check so it
+    /// can tell corruption (permanent, counted reject) from a failed
+    /// read (transient, retried).
+    fn read_raw(&self, entry: &CheckpointEntry) -> Result<Vec<u8>> {
+        match self {
+            WatchSource::Local(r) => r.read_raw(entry),
+            WatchSource::Replica(r) => r.read_entry_bytes(entry),
+        }
+    }
+}
+
 impl RegistryWatcher {
     /// Checkpoints successfully published into the cell so far is
     /// observable through `SnapshotCell::version`; this handle only
@@ -717,9 +766,8 @@ impl RegistryWatcher {
         cell: Arc<SnapshotCell>,
         backend: BackendKind,
         spec: Arc<StateSpec>,
-        dir: PathBuf,
+        source: WatchSource,
         poll: Duration,
-        faults: Option<Arc<FaultPlan>>,
         stats: Option<Arc<StatsCollector>>,
     ) -> Self {
         let stop = Arc::new((Mutex::new(false), Condvar::new()));
@@ -727,11 +775,6 @@ impl RegistryWatcher {
         let handle = std::thread::Builder::new()
             .name("e2train-ckpt-watcher".into())
             .spawn(move || {
-                let mut registry =
-                    CheckpointRegistry::new(dir, RetentionCfg::default());
-                if let Some(p) = faults {
-                    registry = registry.with_faults(p);
-                }
                 // (iter, hash) of the last checkpoint published into the
                 // cell — a re-published iteration with new content (new
                 // hash) still hot-loads.
@@ -742,7 +785,8 @@ impl RegistryWatcher {
                 // that is down for a while isn't hammered at full rate.
                 let mut consec_errs: u32 = 0;
                 loop {
-                    match watch_tick(&registry, &cell, backend, &spec, &mut seen) {
+                    match watch_tick(&source, &cell, backend, &spec, &mut seen, &stats)
+                    {
                         Ok(()) => {
                             last_err.clear();
                             consec_errs = 0;
@@ -796,21 +840,23 @@ impl Drop for RegistryWatcher {
     }
 }
 
-/// One poll: if the registry's newest checkpoint differs from what was
-/// last published, load + verify it — content hash via the registry,
-/// then names/shapes against the served artifact's state spec — and
+/// One poll: if the source's newest checkpoint differs from what was
+/// last published, load + verify it — whole-file FNV hash against the
+/// manifest and the `ckpt/v1` trailer *before* any decode, then
+/// names/shapes against the served artifact's state spec — and
 /// publish its serving state (the SWA average when present, like the
 /// in-process trainer publish).  A checkpoint from a different
 /// family/method fails here and the cell keeps its current snapshot;
 /// it never reaches the workers.
 fn watch_tick(
-    registry: &CheckpointRegistry,
+    source: &WatchSource,
     cell: &SnapshotCell,
     backend: BackendKind,
     spec: &StateSpec,
     seen: &mut Option<(u64, String)>,
+    stats: &Option<Arc<StatsCollector>>,
 ) -> Result<()> {
-    let entry = match registry.latest()? {
+    let entry = match source.latest()? {
         Some(e) => e,
         None => return Ok(()), // nothing published yet
     };
@@ -818,7 +864,38 @@ fn watch_tick(
     if seen.as_ref() == Some(&key) {
         return Ok(());
     }
-    let ckpt = registry.load(&entry)?;
+    // Raw bytes first; a failed *read* (mid-publish copy, replica
+    // hiccup) is transient and retried next tick.
+    let bytes = source.read_raw(&entry)?;
+    // Cheap integrity gate before decode: manifest hash, then trailer.
+    // Corrupt bytes are a permanent property of this (iter, hash) key —
+    // reject once, count it, and stop re-reading the file every poll.
+    let hash = fnv1a64_hex(&bytes);
+    if hash != entry.hash {
+        *seen = Some(key);
+        if let Some(s) = stats {
+            s.record_hot_load_reject();
+        }
+        bail!(
+            "checkpoint iter {} hash {hash} does not match manifest ({}) — \
+             refusing to hot-load corrupt bytes",
+            entry.iter,
+            entry.hash
+        );
+    }
+    if let Err(e) = format::verify_trailer(&bytes) {
+        *seen = Some(key);
+        if let Some(s) = stats {
+            s.record_hot_load_reject();
+        }
+        return Err(e.context(format!(
+            "checkpoint iter {} failed the ckpt/v1 trailer check — refusing to \
+             hot-load corrupt bytes",
+            entry.iter
+        )));
+    }
+    let ckpt = format::decode(&bytes)
+        .with_context(|| format!("decoding checkpoint iter {}", entry.iter))?;
     let state = ckpt.serving_state();
     if !state.matches_spec(spec) {
         // Deterministic rejection: this exact file can never become
@@ -864,7 +941,8 @@ pub fn watch_registry(
 /// [`watch_registry`] with fault-injection and telemetry hooks: `faults`
 /// arms the registry's `registry.read` site (torn manifest reads), and
 /// failed polls are counted into `stats` as
-/// [`ServeStats::registry_retries`].
+/// [`ServeStats::registry_retries`] (corrupt checkpoints additionally as
+/// [`ServeStats::hot_load_rejects`]).
 pub fn watch_registry_opts(
     cell: Arc<SnapshotCell>,
     backend: BackendKind,
@@ -874,5 +952,44 @@ pub fn watch_registry_opts(
     faults: Option<Arc<FaultPlan>>,
     stats: Option<Arc<StatsCollector>>,
 ) -> RegistryWatcher {
-    RegistryWatcher::spawn(cell, backend, spec, dir.to_path_buf(), poll, faults, stats)
+    let mut registry = CheckpointRegistry::new(dir, RetentionCfg::default());
+    if let Some(p) = faults {
+        registry = registry.with_faults(p);
+    }
+    RegistryWatcher::spawn(cell, backend, spec, WatchSource::Local(registry), poll, stats)
+}
+
+/// Watch a **replicated** registry root in another failure domain and
+/// hot-load each new verified checkpoint into `cell` — the serve fleet's
+/// disaster-recovery path: it needs no local registry, only the replica
+/// the training box evacuates to.  Same tick as [`watch_registry`]
+/// (hash + trailer verified before decode, spec-mismatch and corrupt
+/// checkpoints rejected without touching the snapshot).
+pub fn watch_replica(
+    cell: Arc<SnapshotCell>,
+    backend: BackendKind,
+    spec: Arc<StateSpec>,
+    root: &Path,
+    poll: Duration,
+) -> RegistryWatcher {
+    watch_replica_opts(cell, backend, spec, root, poll, None, None)
+}
+
+/// [`watch_replica`] with fault-injection (`remote.read` transient
+/// errors) and telemetry hooks, mirroring [`watch_registry_opts`].
+pub fn watch_replica_opts(
+    cell: Arc<SnapshotCell>,
+    backend: BackendKind,
+    spec: Arc<StateSpec>,
+    root: &Path,
+    poll: Duration,
+    faults: Option<Arc<FaultPlan>>,
+    stats: Option<Arc<StatsCollector>>,
+) -> RegistryWatcher {
+    let mut store = FsRemoteStore::new(root);
+    if let Some(p) = faults {
+        store = store.with_faults(p);
+    }
+    let remote = RemoteRegistry::new(Box::new(store));
+    RegistryWatcher::spawn(cell, backend, spec, WatchSource::Replica(remote), poll, stats)
 }

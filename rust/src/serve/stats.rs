@@ -41,6 +41,11 @@ struct StatsInner {
     /// Registry-watcher polls that failed (torn manifest read, partial
     /// copy) and were retried on a later tick.
     registry_retries: usize,
+    /// Checkpoints the watcher refused to hot-load because their bytes
+    /// failed integrity verification (manifest hash or `ckpt/v1`
+    /// trailer) — bit-flips and truncated transfers, rejected before
+    /// decode and never re-read.
+    hot_load_rejects: usize,
     /// Completion-window bounds for throughput.
     first_done: Option<Instant>,
     last_done: Option<Instant>,
@@ -79,6 +84,12 @@ impl StatsCollector {
         self.inner.lock().unwrap().registry_retries += 1;
     }
 
+    /// One checkpoint rejected by the watcher's integrity gate (corrupt
+    /// bytes: manifest-hash or trailer mismatch).
+    pub fn record_hot_load_reject(&self) {
+        self.inner.lock().unwrap().hot_load_rejects += 1;
+    }
+
     /// One completed sample submitted at `t_submit`.
     pub fn record_sample(&self, t_submit: Instant) {
         let now = Instant::now();
@@ -108,6 +119,7 @@ impl StatsCollector {
             expired: g.expired,
             worker_respawns: g.respawns,
             registry_retries: g.registry_retries,
+            hot_load_rejects: g.hot_load_rejects,
             occupancy_mean: if g.batches == 0 {
                 0.0
             } else {
@@ -158,6 +170,9 @@ pub struct ServeStats {
     /// Failed registry-watcher polls that were absorbed by retrying on
     /// a later tick (the served snapshot is kept meanwhile).
     pub registry_retries: usize,
+    /// Checkpoints refused by the hot-load integrity gate (corrupt
+    /// bytes rejected before decode; the served snapshot is kept).
+    pub hot_load_rejects: usize,
     /// Mean real samples per executed micro-batch (> 1 means requests
     /// actually coalesced).
     pub occupancy_mean: f64,
@@ -200,12 +215,14 @@ mod tests {
         c.record_respawn();
         c.record_registry_retry();
         c.record_registry_retry();
+        c.record_hot_load_reject();
         let s = c.snapshot();
         assert_eq!(s.samples, 2);
         assert_eq!(s.batches, 2);
         assert_eq!(s.expired, 3);
         assert_eq!(s.worker_respawns, 1);
         assert_eq!(s.registry_retries, 2);
+        assert_eq!(s.hot_load_rejects, 1);
         assert!((s.occupancy_mean - 3.0).abs() < 1e-12);
         // Histogram percentiles are upper bounds clamped to the exact
         // max, so they can never under-report the 10ms latency floor.

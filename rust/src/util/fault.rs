@@ -39,6 +39,15 @@ pub const SITE_SHARD_ENGINE: &str = "shard.engine";
 pub const SITE_SERVE_WORKER: &str = "serve.worker";
 /// An engine fork (shard recovery / worker respawn) fails transiently.
 pub const SITE_POOL_FORK: &str = "pool.fork";
+/// A replication upload truncates mid-transfer (after `after_bytes`
+/// staged bytes when set) and errors.
+pub const SITE_REPLICATE_UPLOAD: &str = "replicate.upload";
+/// The remote manifest publish tears: partial bytes land at the final
+/// path and the write errors.
+pub const SITE_REPLICATE_MANIFEST: &str = "replicate.manifest";
+/// A read from the remote store (manifest or checkpoint payload) fails
+/// transiently.
+pub const SITE_REMOTE_READ: &str = "remote.read";
 
 /// Every site name the config parser and plan builder accept.
 pub const KNOWN_SITES: &[&str] = &[
@@ -49,6 +58,9 @@ pub const KNOWN_SITES: &[&str] = &[
     SITE_SHARD_ENGINE,
     SITE_SERVE_WORKER,
     SITE_POOL_FORK,
+    SITE_REPLICATE_UPLOAD,
+    SITE_REPLICATE_MANIFEST,
+    SITE_REMOTE_READ,
 ];
 
 /// One armed site in `cfg.faults.sites`.
@@ -61,8 +73,9 @@ pub struct FaultSiteCfg {
     pub at: u64,
     /// Number of consecutive hits that fire (default 1).
     pub times: u64,
-    /// `checkpoint.sink` only: the sink accepts this many bytes before
-    /// erroring (default: fail on the first write).
+    /// `checkpoint.sink` / `replicate.upload` only: the sink accepts
+    /// this many bytes before erroring (default: fail on the first
+    /// write).
     pub after_bytes: Option<u64>,
 }
 

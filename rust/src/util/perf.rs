@@ -61,6 +61,15 @@ pub struct PrefetchComparison {
     /// that separates the wait field's per-submit floor from real
     /// backpressure.
     pub ckpt_submits: u64,
+    /// Replication lag at run end: local iterations not yet evacuated
+    /// to the replica (0 when replication was off or fully drained).
+    pub replica_lag_iters: u64,
+    /// Payload bytes the on-run's replicator landed on the remote store
+    /// (0 when replication was off).
+    pub replica_bytes: u64,
+    /// Uploads that resumed from a prior attempt's verified staged
+    /// bytes (0 when replication was off or never interrupted).
+    pub replica_retries: u64,
 }
 
 /// Measure train-step latency through both state paths for one
@@ -164,6 +173,9 @@ pub fn compare_prefetch(
             as f64
             / 1e6,
         ckpt_submits: obs.counter(crate::obs::CTR_CKPT_SUBMITS),
+        replica_lag_iters: on.replica_lag_iters,
+        replica_bytes: on.replica_bytes,
+        replica_retries: on.replica_retries,
     })
 }
 
@@ -223,6 +235,11 @@ pub fn bench_report(
             Json::num(prefetch.ckpt_backpressure_wait_ms),
         ),
         ("ckpt_submits", Json::num(prefetch.ckpt_submits as f64)),
+        // Replication-lag aggregates (zeros when replication is off) —
+        // additive like the obs fields above.
+        ("replica_lag_iters", Json::num(prefetch.replica_lag_iters as f64)),
+        ("replica_bytes", Json::num(prefetch.replica_bytes as f64)),
+        ("replica_retries", Json::num(prefetch.replica_retries as f64)),
     ])
 }
 
@@ -279,5 +296,9 @@ mod tests {
         assert!(back.at(&["prefetch_occupancy"]).as_f64().is_some());
         assert!(back.at(&["ckpt_backpressure_wait_ms"]).as_f64().is_some());
         assert!(back.at(&["ckpt_submits"]).as_f64().unwrap() > 0.0);
+        // Replication was off for the bench run: fields present, zero.
+        assert_eq!(back.at(&["replica_lag_iters"]).as_f64(), Some(0.0));
+        assert_eq!(back.at(&["replica_bytes"]).as_f64(), Some(0.0));
+        assert_eq!(back.at(&["replica_retries"]).as_f64(), Some(0.0));
     }
 }

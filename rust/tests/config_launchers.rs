@@ -69,11 +69,23 @@ fn launcher_set_covers_shards_checkpoint_and_backend_knobs() {
     let mut has_shards = false;
     let mut has_checkpoint = false;
     let mut has_faults = false;
+    let mut has_replicate = false;
     let mut backends = Vec::new();
     for p in launcher_paths() {
         let cfg = RunCfg::load(&p).unwrap();
         has_shards |= cfg.shards > 0;
         has_checkpoint |= cfg.checkpoint.every > 0;
+        // replication only makes sense over a publishing registry (the
+        // parser enforces it; assert here so the shipped file stays an
+        // example of the valid shape)
+        if cfg.checkpoint.replicate.is_some() {
+            has_replicate = true;
+            assert!(
+                cfg.checkpoint.every > 0,
+                "{}: arms `checkpoint.replicate` without checkpointing",
+                p.display()
+            );
+        }
         // a launcher arming faults must also checkpoint, or the
         // supervisor can only ever restart from scratch
         if cfg.faults.enabled() {

@@ -23,6 +23,9 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use e2train::checkpoint::{
+    CheckpointRegistry, FsRemoteStore, RemoteRegistry, RetentionCfg,
+};
 use e2train::config::{CkptCfg, DataCfg, RunCfg};
 use e2train::coordinator::{RunOutcome, Trainer};
 use e2train::data::synthetic;
@@ -50,6 +53,7 @@ fn with_ckpt(mut cfg: RunCfg, dir: &Path, every: u64) -> RunCfg {
         dir: Some(dir.to_path_buf()),
         keep_last: 16,
         keep_every: 0,
+        ..CkptCfg::default()
     };
     cfg
 }
@@ -275,6 +279,119 @@ fn exhausted_retry_budget_surfaces_the_injected_error() {
         t0.elapsed() < Duration::from_secs(30),
         "budget exhaustion took implausibly long (runaway retries?)"
     );
+}
+
+// ---------------------------------------------------------------------
+// Replication fault sites
+// ---------------------------------------------------------------------
+
+/// The replica root must list exactly the local registry's entries and
+/// serve back its newest checkpoint (fetches are hash+trailer verified,
+/// so a successful load *is* a bitwise guarantee).
+fn assert_replica_complete(replica: &Path, local: &Path) {
+    let local_entries = CheckpointRegistry::new(local, RetentionCfg::default())
+        .entries()
+        .unwrap();
+    let remote = RemoteRegistry::new(Box::new(FsRemoteStore::new(replica)));
+    assert_eq!(remote.entries().unwrap(), local_entries, "replica out of sync");
+    let latest = remote.load_latest().unwrap().expect("replica has checkpoints");
+    assert_eq!(latest.iter, local_entries.last().unwrap().iter);
+}
+
+/// The three replication fault sites recover under supervision to the
+/// bitwise fault-free (and replication-free) outcome:
+///
+/// * `replicate.upload` — the first staged append is truncated; the
+///   parked error fails the run at drain time and the next attempt's
+///   replicator **resumes from the verified staged prefix**.
+/// * `replicate.manifest` — the remote manifest write tears at the
+///   final path; the next attempt's replicator rebuilds it.
+/// * `remote.read` — disaster resume: a box with an **empty local
+///   registry** restores from the replica, riding out a transient
+///   remote read on the first attempt.
+#[test]
+fn replication_faults_recover_bitwise() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    let base_reg = TempDir::new().unwrap();
+    let baseline =
+        Trainer::new(&engine, with_ckpt(ref_cfg(tmp.path(), 18), base_reg.path(), 6))
+            .unwrap()
+            .run(None)
+            .unwrap();
+
+    // (a) truncated upload -> resumed from the staged prefix
+    {
+        let reg = TempDir::new().unwrap();
+        let replica = TempDir::new().unwrap();
+        let mut cfg = with_ckpt(ref_cfg(tmp.path(), 18), reg.path(), 6);
+        cfg.checkpoint.replicate = Some(replica.path().to_path_buf());
+        let (out, plan) = supervised_with_faults(
+            &engine,
+            cfg,
+            vec![FaultSiteCfg {
+                site: fault::SITE_REPLICATE_UPLOAD.into(),
+                at: 1,
+                times: 1,
+                after_bytes: Some(100),
+            }],
+        );
+        assert_eq!(plan.fired(fault::SITE_REPLICATE_UPLOAD), 1);
+        assert!(out.metrics.recoveries >= 1, "upload: supervisor never recovered");
+        assert!(
+            out.metrics.replica_retries >= 1,
+            "the resumed staged upload was not counted"
+        );
+        assert_eq!(out.metrics.replica_lag_iters, 0, "replica left behind");
+        assert_outcomes_identical(&baseline, &out, "replicate.upload");
+        assert_replica_complete(replica.path(), reg.path());
+    }
+
+    // (b) torn remote manifest -> rebuilt on the next attempt
+    {
+        let reg = TempDir::new().unwrap();
+        let replica = TempDir::new().unwrap();
+        let mut cfg = with_ckpt(ref_cfg(tmp.path(), 18), reg.path(), 6);
+        cfg.checkpoint.replicate = Some(replica.path().to_path_buf());
+        let (out, plan) = supervised_with_faults(
+            &engine,
+            cfg,
+            vec![site(fault::SITE_REPLICATE_MANIFEST, 1, 1)],
+        );
+        assert_eq!(plan.fired(fault::SITE_REPLICATE_MANIFEST), 1);
+        assert!(out.metrics.recoveries >= 1, "manifest: supervisor never recovered");
+        assert_eq!(out.metrics.replica_lag_iters, 0, "replica left behind");
+        assert_outcomes_identical(&baseline, &out, "replicate.manifest");
+        assert_replica_complete(replica.path(), reg.path());
+    }
+
+    // (c) disaster resume from the replica with no local checkpoints
+    {
+        // a fault-free replicated run populates the replica — and must
+        // itself be invisible next to the replication-free baseline
+        let reg1 = TempDir::new().unwrap();
+        let replica = TempDir::new().unwrap();
+        let mut seed_cfg = with_ckpt(ref_cfg(tmp.path(), 18), reg1.path(), 6);
+        seed_cfg.checkpoint.replicate = Some(replica.path().to_path_buf());
+        let seeded = Trainer::new(&engine, seed_cfg).unwrap().run(None).unwrap();
+        assert_outcomes_identical(&baseline, &seeded, "replication invisibility");
+
+        // the replacement box: fresh (empty) local registry, replica
+        // configured; its very first replica read fails transiently
+        let reg2 = TempDir::new().unwrap();
+        let mut cfg = with_ckpt(ref_cfg(tmp.path(), 18), reg2.path(), 6);
+        cfg.checkpoint.replica = Some(replica.path().to_path_buf());
+        let (out, plan) = supervised_with_faults(
+            &engine,
+            cfg,
+            vec![site(fault::SITE_REMOTE_READ, 1, 1)],
+        );
+        assert_eq!(plan.fired(fault::SITE_REMOTE_READ), 1);
+        assert_eq!(out.metrics.recoveries, 1, "exactly one transient replica read");
+        assert_outcomes_identical(&baseline, &out, "remote.read disaster resume");
+    }
 }
 
 // ---------------------------------------------------------------------

@@ -38,6 +38,7 @@ fn with_ckpt(mut cfg: RunCfg, dir: &Path, every: u64) -> RunCfg {
         dir: Some(dir.to_path_buf()),
         keep_last: 16,
         keep_every: 0,
+        ..CkptCfg::default()
     };
     cfg
 }

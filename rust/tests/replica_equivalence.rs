@@ -1,0 +1,378 @@
+//! Cross-failure-domain equivalence (reference backend, runs
+//! everywhere): everything a replica serves back must be **bitwise**
+//! what the local registry holds.
+//!
+//! 1. **Resume from the replica** — after the training box's local
+//!    registry is destroyed, resuming from the evacuated copies (any
+//!    boundary, via [`RemoteRegistry`]) replays to exactly the
+//!    uninterrupted run's trace, ledger and final state.
+//! 2. **Serve from the replica** — a serve fleet in another failure
+//!    domain hot-loads the replica and answers with logits bitwise
+//!    identical to a fleet on the training box's own registry.
+//! 3. **Rejection** — truncated transfers and bit-flipped replica
+//!    objects never decode: direct loads fail with the hash/trailer
+//!    error, and the serve watcher refuses the hot-load, counts it in
+//!    `ServeStats::hot_load_rejects`, and keeps its snapshot.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use e2train::checkpoint::{FsRemoteStore, RemoteRegistry, REMOTE_MANIFEST};
+use e2train::config::{CkptCfg, DataCfg, RunCfg};
+use e2train::coordinator::{RunOutcome, Trainer};
+use e2train::data::{synthetic, Dataset};
+use e2train::runtime::{
+    write_reference_family, Engine, HostTensor, RefFamilySpec, SnapshotCell,
+    StateSnapshot, TrainProgram,
+};
+use e2train::serve::{watch_registry, watch_replica, ServeCfg, ServeService};
+use e2train::util::tmp::TempDir;
+
+const FAM: &str = "refmlp-tiny";
+
+fn ref_cfg(artifacts: &Path, iters: u64) -> RunCfg {
+    let mut cfg = RunCfg::quick(FAM, "e2train", iters);
+    cfg.artifacts_dir = artifacts.to_path_buf();
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 128, n_test: 40, seed: 0 };
+    cfg.eval_every = 8;
+    cfg
+}
+
+/// A config that checkpoints into `dir` and evacuates to `replica`.
+fn replicated_cfg(artifacts: &Path, dir: &Path, replica: &Path) -> RunCfg {
+    let mut cfg = ref_cfg(artifacts, 18);
+    cfg.checkpoint = CkptCfg {
+        every: 6,
+        dir: Some(dir.to_path_buf()),
+        keep_last: 16,
+        keep_every: 0,
+        replicate: Some(replica.to_path_buf()),
+        replica: None,
+    };
+    cfg
+}
+
+fn remote(root: &Path) -> RemoteRegistry {
+    RemoteRegistry::new(Box::new(FsRemoteStore::new(root)))
+}
+
+/// Bitwise outcome comparison (everything inside the determinism
+/// contract; wall time, prefetch depth and replication stats excluded).
+fn assert_outcomes_identical(a: &RunOutcome, b: &RunOutcome, ctx: &str) {
+    assert_eq!(a.metrics.final_test_acc, b.metrics.final_test_acc, "{ctx}: acc");
+    assert_eq!(a.metrics.final_loss, b.metrics.final_loss, "{ctx}: loss");
+    assert_eq!(a.metrics.total_joules, b.metrics.total_joules, "{ctx}: joules");
+    assert_eq!(a.metrics.steps_run, b.metrics.steps_run, "{ctx}: steps");
+    assert_eq!(
+        a.metrics.steps_skipped, b.metrics.steps_skipped,
+        "{ctx}: skipped"
+    );
+    assert_eq!(a.metrics.trace.len(), b.metrics.trace.len(), "{ctx}: trace len");
+    for (x, y) in a.metrics.trace.iter().zip(b.metrics.trace.iter()) {
+        assert_eq!(x.iter, y.iter, "{ctx}: trace iter");
+        assert_eq!(x.loss, y.loss, "{ctx}: trace loss @{}", x.iter);
+        assert_eq!(x.joules, y.joules, "{ctx}: trace joules @{}", x.iter);
+        assert_eq!(x.test_acc, y.test_acc, "{ctx}: trace eval @{}", x.iter);
+    }
+    assert_eq!(a.ledger.steps_charged, b.ledger.steps_charged, "{ctx}: ledger");
+    assert_eq!(a.ledger.macs, b.ledger.macs, "{ctx}: ledger macs");
+    assert_eq!(a.ledger.trace, b.ledger.trace, "{ctx}: ledger trace");
+    a.state.assert_bitwise_eq(&b.state);
+}
+
+/// Train a replicated run (registry under `reg`, evacuation into
+/// `replica`) and hand back its outcome.
+fn replicated_run(
+    tmp: &TempDir,
+    engine: &Engine,
+    reg: &TempDir,
+    replica: &TempDir,
+) -> RunOutcome {
+    let cfg =
+        replicated_cfg(tmp.path(), &reg.path().join("ckpts"), replica.path());
+    Trainer::new(engine, cfg).unwrap().run(None).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// 1. Resume from the replica
+// ---------------------------------------------------------------------
+
+/// Kill the local registry after a replicated run; resuming any
+/// evacuated boundary from the replica replays bitwise to the
+/// uninterrupted outcome — the "dead training box" recovery path.
+#[test]
+fn resume_from_replica_is_bitwise_identical() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    // Baseline: same training stream, checkpointing but no replication.
+    let base_reg = TempDir::new().unwrap();
+    let mut base_cfg = ref_cfg(tmp.path(), 18);
+    base_cfg.checkpoint = CkptCfg {
+        every: 6,
+        dir: Some(base_reg.path().join("ckpts")),
+        keep_last: 16,
+        keep_every: 0,
+        ..CkptCfg::default()
+    };
+    let baseline = Trainer::new(&engine, base_cfg).unwrap().run(None).unwrap();
+
+    let reg = TempDir::new().unwrap();
+    let replica = TempDir::new().unwrap();
+    let replicated = replicated_run(&tmp, &engine, &reg, &replica);
+    assert_outcomes_identical(&baseline, &replicated, "replication invisibility");
+
+    // The training box dies: its registry is gone for good.
+    std::fs::remove_dir_all(reg.path().join("ckpts")).unwrap();
+
+    // Every evacuated boundary resumes bitwise from the replica alone.
+    let remote = remote(replica.path());
+    let iters: Vec<u64> =
+        remote.entries().unwrap().iter().map(|e| e.iter).collect();
+    assert_eq!(iters, vec![6, 12, 18], "expected every boundary evacuated");
+    for iter in [6, 18] {
+        let ckpt = remote.load_iter(iter).unwrap();
+        let mut cfg = ckpt.cfg.clone();
+        // The resumed box neither checkpoints nor replicates — both
+        // knobs are outside the determinism fingerprint.
+        cfg.checkpoint = CkptCfg::default();
+        let out = Trainer::new(&engine, cfg).unwrap().resume(ckpt).unwrap();
+        assert_outcomes_identical(
+            &baseline,
+            &out,
+            &format!("resume from replica @{iter}"),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Serve from the replica
+// ---------------------------------------------------------------------
+
+/// Per-sample logits ground truth: serially, through the same padded
+/// batching `evaluate_full` uses (see tests/serve_equivalence.rs).
+fn serial_rows(
+    prog: &TrainProgram,
+    snap: &StateSnapshot,
+    data: &Dataset,
+) -> Vec<Vec<f32>> {
+    let eb = prog.eval_batch();
+    let hw = data.hw;
+    let stride = hw * hw * 3;
+    let classes = prog.manifest.arch.num_classes;
+    let mut rows = Vec::with_capacity(data.n);
+    let nb = (data.n + eb - 1) / eb;
+    for b in 0..nb {
+        let lo = b * eb;
+        let take = eb.min(data.n - lo);
+        let mut px = vec![0f32; eb * stride];
+        px[..take * stride]
+            .copy_from_slice(&data.images[lo * stride..(lo + take) * stride]);
+        let mut py = vec![-1i32; eb];
+        py[..take].copy_from_slice(&data.labels[lo..lo + take]);
+        let out = prog
+            .eval_batch_snapshot(
+                snap,
+                &HostTensor::f32(vec![eb, hw, hw, 3], px),
+                &HostTensor::i32(vec![eb], py),
+            )
+            .unwrap();
+        let logits = out.logits.expect("reference eval emits logits");
+        let lv = logits.as_f32().unwrap();
+        for i in 0..take {
+            rows.push(lv[i * classes..(i + 1) * classes].to_vec());
+        }
+    }
+    rows
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn wait_version(cell: &SnapshotCell, what: &str) {
+    let t0 = Instant::now();
+    while cell.version() == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "{what}: watcher never hot-loaded"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Two watchers — one on the local registry, one on the replica root —
+/// publish the same snapshot bit for bit, and a service answering from
+/// the replica-fed cell serves logits bitwise identical to the
+/// local-registry ground truth.
+#[test]
+fn serve_from_replica_matches_local_registry_serving() {
+    let tmp = TempDir::new().unwrap();
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let reg = TempDir::new().unwrap();
+    let replica = TempDir::new().unwrap();
+    replicated_run(&tmp, &engine, &reg, &replica);
+
+    let manifest = fam.join("e2train.json");
+    let prog = TrainProgram::load(&engine, &manifest).unwrap();
+    let spec = Arc::new(prog.manifest.state_spec());
+
+    let cell_local = Arc::new(SnapshotCell::new());
+    let _wl = watch_registry(
+        cell_local.clone(),
+        prog.backend(),
+        spec.clone(),
+        &reg.path().join("ckpts"),
+        Duration::from_millis(5),
+    );
+    let cell_replica = Arc::new(SnapshotCell::new());
+    let _wr = watch_replica(
+        cell_replica.clone(),
+        prog.backend(),
+        spec.clone(),
+        replica.path(),
+        Duration::from_millis(5),
+    );
+    wait_version(&cell_local, "local");
+    wait_version(&cell_replica, "replica");
+
+    let data = synthetic::generate(
+        10,
+        prog.eval_batch() + 3,
+        prog.manifest.arch.image_size,
+        7,
+    );
+    let local_rows = serial_rows(&prog, &cell_local.load().unwrap(), &data);
+    let replica_rows = serial_rows(&prog, &cell_replica.load().unwrap(), &data);
+    for (i, (a, b)) in local_rows.iter().zip(replica_rows.iter()).enumerate() {
+        assert_eq!(bits(a), bits(b), "sample {i}: replica snapshot differs");
+    }
+
+    // End to end: a service on the replica-fed cell answers with the
+    // local ground truth, bit for bit.
+    let service = ServeService::start(
+        &engine,
+        &manifest,
+        cell_replica.clone(),
+        ServeCfg { workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let client = service.client();
+    let stride = data.hw * data.hw * 3;
+    for i in 0..data.n {
+        let got = client
+            .submit(&data.images[i * stride..(i + 1) * stride], &[data.labels[i]])
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(
+            bits(&got[0].logits),
+            bits(&local_rows[i]),
+            "sample {i}: served-from-replica logits differ"
+        );
+    }
+    service.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// 3. Corrupt / truncated replicas are rejected
+// ---------------------------------------------------------------------
+
+/// Direct loads: truncations at several cut points and a mid-file
+/// bit-flip all fail verification — never a silently-wrong resume.
+#[test]
+fn corrupt_or_truncated_replica_objects_fail_to_load() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let reg = TempDir::new().unwrap();
+    let replica = TempDir::new().unwrap();
+    replicated_run(&tmp, &engine, &reg, &replica);
+
+    let rr = remote(replica.path());
+    let entry = rr.latest().unwrap().expect("replica populated");
+    let obj = replica.path().join(&entry.file);
+    let good = std::fs::read(&obj).unwrap();
+    assert_eq!(good.len() as u64, entry.bytes);
+
+    // Truncated transfers at representative cut points.
+    for cut in [0usize, 10, good.len() / 3, good.len() - 1] {
+        std::fs::write(&obj, &good[..cut]).unwrap();
+        let err = rr.load(&entry).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("truncated or replica corrupt"),
+            "cut {cut}: wrong error: {msg}"
+        );
+    }
+
+    // A single flipped byte (same length) must fail too.
+    let mut flipped = good.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x40;
+    std::fs::write(&obj, &flipped).unwrap();
+    assert!(rr.load(&entry).is_err(), "bit-flip decoded");
+
+    // A torn remote manifest is an error on the pull side (the caller's
+    // retry loop absorbs it) — not an empty listing.
+    std::fs::write(replica.path().join(REMOTE_MANIFEST), b"{\"schema\": \"ckpt_reg")
+        .unwrap();
+    assert!(rr.entries().is_err(), "torn manifest read as a listing");
+
+    // Intact bytes load again (the entry in hand needs no manifest).
+    std::fs::write(&obj, &good).unwrap();
+    assert_eq!(rr.load(&entry).unwrap().iter, entry.iter);
+}
+
+/// Watcher-level rejection: a bit-flipped newest replica object is
+/// refused by the hot-load integrity gate, counted in
+/// `ServeStats::hot_load_rejects`, and the snapshot cell stays empty.
+#[test]
+fn serve_watcher_rejects_corrupt_replica_and_counts_it() {
+    let tmp = TempDir::new().unwrap();
+    let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let reg = TempDir::new().unwrap();
+    let replica = TempDir::new().unwrap();
+    replicated_run(&tmp, &engine, &reg, &replica);
+
+    // Flip one payload byte of the newest evacuated checkpoint.
+    let rr = remote(replica.path());
+    let entry = rr.latest().unwrap().expect("replica populated");
+    let obj = replica.path().join(&entry.file);
+    let mut bytes = std::fs::read(&obj).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&obj, &bytes).unwrap();
+
+    let cell = Arc::new(SnapshotCell::new());
+    let service = ServeService::start(
+        &engine,
+        &fam.join("e2train.json"),
+        cell.clone(),
+        ServeCfg::default(),
+    )
+    .unwrap();
+    let _w = service.watch_replica(replica.path(), Duration::from_millis(5));
+
+    let t0 = Instant::now();
+    loop {
+        let stats = service.stats();
+        if stats.hot_load_rejects >= 1 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "corrupt replica checkpoint was never rejected"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // The reject is terminal for that checkpoint: nothing was admitted.
+    std::thread::sleep(Duration::from_millis(30));
+    assert_eq!(cell.version(), 0, "corrupt checkpoint was hot-loaded");
+    service.shutdown();
+}

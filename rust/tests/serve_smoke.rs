@@ -30,6 +30,7 @@ fn serve_smoke_records_bench_serve_json() {
         max_delay: Duration::from_millis(2),
         seed: 0,
         registry: None,
+        replica: None,
         source: "cargo-test smoke (debug profile)".into(),
     };
     let report = run_serve_bench(&engine, &fam.join("sgd32.json"), &cfg).unwrap();

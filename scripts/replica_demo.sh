@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Demonstrates checkpoint replication & disaster recovery end-to-end on
+# the reference backend:
+#   1. materialize the reference artifact families,
+#   2. train with durable checkpoints AND replication armed — every
+#      published checkpoint is evacuated to a replica root (resumable
+#      chunked transfer, verified before publish),
+#   3. disaster: destroy the local registry entirely ("the training box
+#      died"),
+#   4. resume from the replica alone — bitwise identical to the
+#      uninterrupted run,
+#   5. serve straight from the replica in the other failure domain (no
+#      local registry, hash+trailer-verified hot-loads).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${BIN:-cargo run --release --quiet --bin e2train --}
+CKPT_DIR=${CKPT_DIR:-checkpoints/replica-demo}
+REPLICA_DIR=${REPLICA_DIR:-replica/replica-demo}
+
+$BIN gen-ref
+
+echo "== train with checkpoints every 40 iters, evacuating to $REPLICA_DIR =="
+# sgd32: the serve bench below resolves the family's sgd32 artifact, so
+# the registry's state layout must match the served method.
+$BIN train --family refmlp-tiny --method sgd32 --iters 120 \
+  --ckpt-every 40 --ckpt-dir "$CKPT_DIR" --replicate "$REPLICA_DIR" \
+  --out RUN_replicated.json
+
+echo "== disaster: the local registry is gone =="
+rm -rf "$CKPT_DIR"
+
+echo "== resume from the replica alone (replica: $REPLICA_DIR) =="
+$BIN resume --replica "$REPLICA_DIR" --out RUN_replica_resumed.json
+
+echo "== serve from the replica (other failure domain, no local registry) =="
+$BIN serve --family refmlp-tiny --replica "$REPLICA_DIR" \
+  --clients 2,8 --requests 16 --out BENCH_serve_replica.json
+
+echo "replica contents:"
+cat "$REPLICA_DIR/MANIFEST.json"
