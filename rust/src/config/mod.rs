@@ -40,6 +40,13 @@ pub enum BackendChoice {
     /// Data-parallel sharded execution over an engine pool
     /// (`runtime::shard`); requires `shards >= 1`.
     Sharded,
+    /// Let the planner pick (`coordinator::planner`): backend, shard
+    /// count and prefetch depth are chosen from the calibrated cost
+    /// catalog at launch.  Accepts no explicit `shards` — the planner
+    /// owns the whole layout.  Still outside the determinism
+    /// fingerprint: whatever plan it picks is bitwise identical to the
+    /// same layout requested explicitly (tests/planner_matrix.rs).
+    Auto,
 }
 
 impl BackendChoice {
@@ -48,6 +55,7 @@ impl BackendChoice {
             BackendChoice::Host => "host",
             BackendChoice::Resident => "resident",
             BackendChoice::Sharded => "sharded",
+            BackendChoice::Auto => "auto",
         }
     }
 
@@ -56,8 +64,9 @@ impl BackendChoice {
             "host" => Ok(BackendChoice::Host),
             "resident" => Ok(BackendChoice::Resident),
             "sharded" => Ok(BackendChoice::Sharded),
+            "auto" => Ok(BackendChoice::Auto),
             other => Err(anyhow!(
-                "unknown backend '{other}' (known: host, resident, sharded)"
+                "unknown backend '{other}' (known: host, resident, sharded, auto)"
             )),
         }
     }
@@ -193,6 +202,18 @@ pub struct RunCfg {
     /// identical to an untraced one, so where (or whether) the trace
     /// lands cannot change the training stream.
     pub trace_out: Option<PathBuf>,
+    /// Planner energy hint (`backend = "auto"` only): prefer the fastest
+    /// plan whose predicted total joules fit this budget; when none fit,
+    /// take the lowest-energy plan.  A *plan-selection* hint, not a
+    /// controller — the run itself is unchanged, so it stays outside the
+    /// determinism fingerprint.
+    pub energy_budget_j: Option<f64>,
+    /// Cost-catalog file (`obs_catalog/v1`) the planner reads and every
+    /// run recalibrates.  Defaults to `OBS_CATALOG.json` (next to the
+    /// BENCH reports) when `backend = "auto"`; explicit-backend runs
+    /// only touch the catalog when this is set.  Pure layout/telemetry
+    /// plumbing — outside the determinism fingerprint.
+    pub catalog: Option<PathBuf>,
     pub artifacts_dir: PathBuf,
 }
 
@@ -224,6 +245,8 @@ impl RunCfg {
             checkpoint: CkptCfg::default(),
             faults: FaultsCfg::default(),
             trace_out: None,
+            energy_budget_j: None,
+            catalog: None,
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -248,6 +271,11 @@ impl RunCfg {
         match self.backend {
             Some(BackendChoice::Sharded) if self.shards == 0 => Err(anyhow!(
                 "backend \"sharded\" needs shards >= 1 (set the `shards` knob)"
+            )),
+            Some(BackendChoice::Auto) if self.shards >= 1 => Err(anyhow!(
+                "backend \"auto\" accepts no explicit shards (the planner \
+                 chooses the shard count; drop `shards` = {})",
+                self.shards
             )),
             Some(b @ (BackendChoice::Host | BackendChoice::Resident))
                 if self.shards >= 1 =>
@@ -399,6 +427,20 @@ impl RunCfg {
                 },
             ),
             (
+                "energy_budget_j",
+                match self.energy_budget_j {
+                    Some(j) => Json::num(j),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "catalog",
+                match &self.catalog {
+                    Some(p) => Json::str(p.to_string_lossy()),
+                    None => Json::Null,
+                },
+            ),
+            (
                 "artifacts_dir",
                 Json::str(self.artifacts_dir.to_string_lossy()),
             ),
@@ -476,7 +518,7 @@ impl RunCfg {
                 "family", "method", "iters", "seed", "lr", "data", "smd", "sd",
                 "eval_every", "swa", "alpha", "beta", "resident", "prefetch",
                 "shards", "backend", "checkpoint", "faults", "trace_out",
-                "artifacts_dir",
+                "energy_budget_j", "catalog", "artifacts_dir",
             ],
             "run-config",
         )?;
@@ -555,10 +597,26 @@ impl RunCfg {
         cfg.backend = match v.get("backend") {
             None | Some(Json::Null) => None,
             Some(b) => Some(BackendChoice::parse(b.as_str().ok_or_else(|| {
-                anyhow!("`backend` must be a string (host | resident | sharded)")
+                anyhow!("`backend` must be a string (host | resident | sharded | auto)")
             })?)?),
         };
         cfg.validate_backend()?;
+        cfg.energy_budget_j = match v.get("energy_budget_j") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(
+                j.as_f64()
+                    .filter(|j| j.is_finite() && *j > 0.0)
+                    .ok_or_else(|| {
+                        anyhow!("`energy_budget_j` must be a positive number of joules")
+                    })?,
+            ),
+        };
+        if cfg.energy_budget_j.is_some() && cfg.backend != Some(BackendChoice::Auto) {
+            return Err(anyhow!(
+                "`energy_budget_j` is a planner hint — it requires backend \"auto\""
+            ));
+        }
+        cfg.catalog = v.get("catalog").and_then(Json::as_str).map(PathBuf::from);
         if let Some(c) = v.get("checkpoint") {
             Self::check_keys(
                 c,
@@ -781,6 +839,9 @@ mod tests {
         b.checkpoint.every = 7;
         b.checkpoint.dir = Some(PathBuf::from("x"));
         b.trace_out = Some(PathBuf::from("trace.jsonl"));
+        // planner knobs are layout/selection hints, not stream identity
+        b.energy_budget_j = Some(125.0);
+        b.catalog = Some(PathBuf::from("OBS_CATALOG.json"));
         // ...and neither does an armed fault plan: a supervised run that
         // recovers from injected faults must fingerprint-match both its
         // own checkpoints and the fault-free baseline.
@@ -849,6 +910,43 @@ mod tests {
         m.insert("backend".into(), Json::str("warp"));
         let err = format!("{:#}", RunCfg::from_json(&Json::Obj(m)).unwrap_err());
         assert!(err.contains("warp"));
+    }
+
+    #[test]
+    fn auto_backend_and_planner_knobs_validate() {
+        // "auto" parses, round-trips, and resolves to itself (the
+        // planner replaces it before any backend is prepared).
+        let mut cfg = RunCfg::quick("f", "sgd32", 5);
+        cfg.backend = Some(BackendChoice::Auto);
+        cfg.energy_budget_j = Some(42.5);
+        cfg.catalog = Some(PathBuf::from("cat.json"));
+        cfg.validate_backend().unwrap();
+        assert_eq!(cfg.resolved_backend(), BackendChoice::Auto);
+        let back = RunCfg::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.backend, Some(BackendChoice::Auto));
+        assert_eq!(back.energy_budget_j, Some(42.5));
+        assert_eq!(back.catalog, Some(PathBuf::from("cat.json")));
+
+        // auto + explicit shards contradict: the planner owns the layout.
+        let mut bad = RunCfg::quick("f", "sgd32", 5);
+        bad.backend = Some(BackendChoice::Auto);
+        bad.shards = 2;
+        let err = format!("{:#}", bad.validate_backend().unwrap_err());
+        assert!(err.contains("auto") && err.contains("shards"), "{err}");
+        assert!(RunCfg::from_json(&bad.to_json()).is_err());
+
+        // the energy budget is meaningless without the planner
+        let mut bad = RunCfg::quick("f", "sgd32", 5);
+        bad.energy_budget_j = Some(10.0);
+        let err = format!("{:#}", RunCfg::from_json(&bad.to_json()).unwrap_err());
+        assert!(err.contains("auto"), "{err}");
+        // ...and must be a positive number
+        let mut m = cfg.to_json().as_obj().unwrap().clone();
+        m.insert("energy_budget_j".into(), Json::num(-3.0));
+        assert!(RunCfg::from_json(&Json::Obj(m)).is_err());
+        let mut m = cfg.to_json().as_obj().unwrap().clone();
+        m.insert("energy_budget_j".into(), Json::str("lots"));
+        assert!(RunCfg::from_json(&Json::Obj(m)).is_err());
     }
 
     #[test]

@@ -2,6 +2,9 @@
 //!
 //! * [`smd`] — stochastic mini-batch dropping (data level, Sec. 3.1)
 //! * [`sd`] — stochastic-depth baseline scheduler [66] (Sec. 4.3)
+//! * [`planner`] — the planning layer: `backend = "auto"` resolves into
+//!   a concrete layout against the calibrated cost catalog
+//!   (`obs::catalog`), with predicted-vs-actual accounting per run.
 //! * [`trainer`] — the orchestrated step loop: sampling, SMD, SD masks,
 //!   AOT step execution, SWA, energy charging, eval, metrics.
 //! * [`supervisor`] — supervised recovery: transient-vs-fatal error
@@ -14,6 +17,7 @@
 //! the energy ledger — mirroring how the paper's FPGA measurements
 //! attribute savings.
 
+pub mod planner;
 pub mod sd;
 pub mod smd;
 pub mod supervisor;

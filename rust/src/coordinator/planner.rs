@@ -1,0 +1,437 @@
+//! The planning layer: `cfg.backend = "auto"` resolves into a concrete
+//! execution layout here, against the calibrated cost catalog
+//! ([`crate::obs::catalog`]).
+//!
+//! The planner enumerates candidate plans — backend × shard count ×
+//! prefetch on/off (with a pinned channel depth) — predicts steps/sec
+//! and J/step for each from the catalog's measured histograms, and
+//! picks the fastest plan that fits the optional `cfg.energy_budget_j`
+//! hint.  When a candidate's catalog key has never been measured, a
+//! short seeded calibration probe times it live ([`PROBE_STEPS`]
+//! invisible `probe_step`s on a cloned init state) and folds the
+//! measurement into the catalog, so the very first `auto` run already
+//! plans from real numbers.
+//!
+//! Planning is a pure layout choice: every candidate is bitwise
+//! interchangeable by the backend-matrix contract, probe steps restore
+//! state by the `probe_step` contract, and the probe sampler is a
+//! throwaway (the run builds its own from the same start later) — so
+//! an `auto` run is bitwise identical to the same plan requested
+//! explicitly (tests/planner_matrix.rs).
+//!
+//! Selection is deterministic for a given catalog: candidates are
+//! enumerated in a fixed order (host, resident, sharded S=1..3; within
+//! each, prefetch-on before prefetch-off) and compared strictly, so
+//! equal predictions resolve to the earliest candidate.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{BackendChoice, RunCfg};
+use crate::data::{prefetch, AugmentCfg, Dataset, Sampler};
+use crate::obs::catalog::{
+    Catalog, CatalogKey, Observation, PlanRecord, DEFAULT_CATALOG_FILE, SERVE_BACKEND,
+};
+use crate::runtime::{prepare_backend, Engine, ModelState, StepHyper, TrainProgram};
+
+/// Steps each calibration probe times.  Probes are invisible
+/// (`StepBackend::probe_step` restores state), so this costs wall time
+/// only — never determinism.
+pub const PROBE_STEPS: usize = 2;
+
+/// Largest data-parallel shard count the planner considers.
+pub const MAX_PLAN_SHARDS: usize = 3;
+
+/// Everything `plan_run` needs from the trainer, borrowed — the plan it
+/// returns owns no part of this.
+pub struct PlanInputs<'a> {
+    pub engine: &'a Engine,
+    pub program: &'a TrainProgram,
+    pub cfg: &'a RunCfg,
+    /// The run's initial model state; probes step a clone of it.
+    pub init: &'a ModelState,
+    /// In-memory training set for calibration probes; `None` when the
+    /// source streams from disk (deferred CIFAR) — missing keys then
+    /// drop their candidates instead of probing.
+    pub data: Option<&'a Arc<Dataset>>,
+}
+
+/// A chosen execution layout, ready to hand to `prepare_backend`, plus
+/// the [`PlanRecord`] that carries its predictions into the run's
+/// metrics and trace.
+pub struct Plan {
+    pub choice: BackendChoice,
+    pub shards: usize,
+    pub prefetch: bool,
+    /// Pinned prefetch channel depth (None ⇒ prefetch off, or the
+    /// fallback plan that lets the run auto-tune as usual).
+    pub prefetch_depth: Option<usize>,
+    pub record: PlanRecord,
+}
+
+/// One evaluated candidate: a layout with its predictions attached.
+struct PlanEval {
+    choice: BackendChoice,
+    shards: usize,
+    prefetch: bool,
+    depth: Option<usize>,
+    /// Predicted steps/sec.
+    sps: f64,
+    /// Predicted J/step (None = no energy ever charged for this
+    /// workload, not even under another layout).
+    jps: Option<f64>,
+}
+
+/// Where this run's catalog lives: an explicit `cfg.catalog` wins;
+/// `backend = "auto"` without one uses [`DEFAULT_CATALOG_FILE`] in the
+/// working directory (next to the BENCH reports).  `None` means the
+/// run neither reads nor recalibrates a catalog — explicitly opting a
+/// non-auto run in is what `cfg.catalog` is for.
+pub fn catalog_path(cfg: &RunCfg) -> Option<PathBuf> {
+    match (&cfg.catalog, cfg.resolved_backend()) {
+        (Some(p), _) => Some(p.clone()),
+        (None, BackendChoice::Auto) => Some(PathBuf::from(DEFAULT_CATALOG_FILE)),
+        (None, _) => None,
+    }
+}
+
+/// Resolve `backend = "auto"` into a concrete plan.  Probe measurements
+/// (if any ran) are folded into `catalog`; the caller persists it.
+pub fn plan_run(inp: &PlanInputs, catalog: &mut Catalog) -> Result<Plan> {
+    let batch = inp.program.batch();
+    // SD masks are rejected by the sharded backend (mask gating is a
+    // whole-batch contract), so those candidates never enter the race.
+    let needs_mask = inp.program.manifest.method.gating == "mask";
+    let mut candidates = vec![(BackendChoice::Host, 0usize), (BackendChoice::Resident, 0)];
+    if !needs_mask {
+        for s in 1..=MAX_PLAN_SHARDS {
+            candidates.push((BackendChoice::Sharded, s));
+        }
+    }
+
+    let mut probed = false;
+    let mut evals: Vec<PlanEval> = Vec::new();
+    for (choice, shards) in candidates {
+        let key = CatalogKey {
+            family: inp.cfg.family.clone(),
+            method: inp.cfg.method.clone(),
+            backend: choice.as_str().to_string(),
+            shards,
+            batch,
+        };
+        let known = catalog
+            .get(&key)
+            .map(|e| e.step_ns.count() > 0)
+            .unwrap_or(false);
+        if !known {
+            let Some(data) = inp.data else {
+                // Streaming source: nothing to probe with — the key
+                // stays unknown and the candidate drops out.
+                continue;
+            };
+            match probe_candidate(inp, data, choice, shards, needs_mask) {
+                Ok(o) => {
+                    catalog.observe(key.clone(), &o);
+                    probed = true;
+                }
+                Err(e) => {
+                    // e.g. the artifact ships no grad program for the
+                    // sharded path — the candidate is not runnable here.
+                    eprintln!(
+                        "[plan] candidate {}/s{shards} dropped: {e:#}",
+                        choice.as_str()
+                    );
+                    continue;
+                }
+            }
+        }
+        let entry = catalog.get(&key).expect("known or just probed");
+        let Some(step) = entry.step_mean_ns() else { continue };
+        let aug = entry
+            .augment_mean_ns()
+            .or_else(|| augment_any_layout(catalog, inp.cfg, batch))
+            .unwrap_or(0.0);
+        let jps = entry.j_per_step().or_else(|| {
+            catalog.j_per_step_any_layout(&inp.cfg.family, &inp.cfg.method, batch)
+        });
+        // With the pipeline on, batch assembly overlaps dispatch: the
+        // slower leg bounds throughput.  Off, the legs serialize.
+        // Prefetch-on enumerates first so equal predictions (augment
+        // cost unknown/zero) keep the pipelined default.
+        let depth = prefetch::auto_depth(aug / 1e9, step / 1e9);
+        evals.push(PlanEval {
+            choice,
+            shards,
+            prefetch: true,
+            depth: Some(depth),
+            sps: 1e9 / step.max(aug).max(1.0),
+            jps,
+        });
+        evals.push(PlanEval {
+            choice,
+            shards,
+            prefetch: false,
+            depth: None,
+            sps: 1e9 / (step + aug).max(1.0),
+            jps,
+        });
+    }
+
+    if evals.is_empty() {
+        // Nothing measured and nothing probeable: fall back to the
+        // system default layout rather than failing the run.  Depth
+        // stays unpinned so the run auto-tunes as a non-planned run
+        // would.
+        eprintln!("[plan] empty catalog and no probeable source; defaulting to resident");
+        let record = PlanRecord {
+            backend: BackendChoice::Resident.as_str().to_string(),
+            prefetch: true,
+            probed,
+            ..Default::default()
+        };
+        return Ok(Plan {
+            choice: BackendChoice::Resident,
+            shards: 0,
+            prefetch: true,
+            prefetch_depth: None,
+            record,
+        });
+    }
+
+    // The budget compares predicted whole-run energy, so scale J/step
+    // by the steps that will actually execute (SMD drops are never
+    // charged).
+    let expected_steps = {
+        let keep = if inp.cfg.smd.enabled { 1.0 - inp.cfg.smd.p } else { 1.0 };
+        inp.cfg.iters as f64 * keep
+    };
+    let pick = &evals[select(&evals, inp.cfg.energy_budget_j, expected_steps)];
+    let record = PlanRecord {
+        backend: pick.choice.as_str().to_string(),
+        shards: pick.shards,
+        prefetch: pick.prefetch,
+        prefetch_depth: pick.depth,
+        probed,
+        predicted_sps: pick.sps,
+        predicted_j_per_step: pick.jps.unwrap_or(0.0),
+        ..Default::default()
+    };
+    Ok(Plan {
+        choice: pick.choice,
+        shards: pick.shards,
+        prefetch: pick.prefetch,
+        prefetch_depth: pick.depth,
+        record,
+    })
+}
+
+/// Pick the index of the winning candidate: highest predicted
+/// steps/sec, under the optional whole-run energy budget.  Strict
+/// comparisons over the fixed enumeration order make ties
+/// deterministic.
+fn select(evals: &[PlanEval], budget: Option<f64>, expected_steps: f64) -> usize {
+    let total = |e: &PlanEval| e.jps.map(|j| j * expected_steps);
+    let fastest = |ix: Vec<usize>| {
+        ix.iter()
+            .copied()
+            .fold(ix[0], |best, i| if evals[i].sps > evals[best].sps { i } else { best })
+    };
+    if let Some(b) = budget {
+        // A candidate with unknown energy is taken at its word — there
+        // is nothing to compare it against.
+        let fits: Vec<usize> = (0..evals.len())
+            .filter(|&i| total(&evals[i]).map(|t| t <= b).unwrap_or(true))
+            .collect();
+        if !fits.is_empty() {
+            return fastest(fits);
+        }
+        // Nothing fits: minimize predicted energy (every candidate has
+        // a known total here, or `fits` would be non-empty).
+        return (0..evals.len()).fold(0, |best, i| {
+            match (total(&evals[i]), total(&evals[best])) {
+                (Some(a), Some(bst)) if a < bst => i,
+                _ => best,
+            }
+        });
+    }
+    fastest((0..evals.len()).collect())
+}
+
+/// Augment cost is layout-invariant (batch assembly happens upstream
+/// of the backend), so any sibling training entry that measured it
+/// predicts it for a layout never run before.
+fn augment_any_layout(catalog: &Catalog, cfg: &RunCfg, batch: usize) -> Option<f64> {
+    catalog
+        .entries()
+        .find(|e| {
+            e.key.family == cfg.family
+                && e.key.method == cfg.method
+                && e.key.batch == batch
+                && e.key.backend != SERVE_BACKEND
+                && e.augment_ns.count() > 0
+        })
+        .map(|e| e.augment_ns.mean())
+}
+
+/// Time one missing-key candidate live: [`PROBE_STEPS`] batches from a
+/// throwaway sampler (the run builds its own from the same start later,
+/// so the real stream is untouched), each assembled (timed as augment)
+/// and stepped through the invisible `probe_step`.
+fn probe_candidate(
+    inp: &PlanInputs,
+    data: &Arc<Dataset>,
+    choice: BackendChoice,
+    shards: usize,
+    needs_mask: bool,
+) -> Result<Observation> {
+    let mut backend = prepare_backend(
+        inp.engine,
+        inp.program,
+        &inp.cfg.manifest_path(),
+        choice,
+        shards,
+        inp.init.clone(),
+    )?;
+    let mut sampler = Sampler::new(
+        data.n,
+        inp.program.batch(),
+        AugmentCfg::default(),
+        inp.cfg.seed ^ 0xda7a,
+    );
+    let mask: Option<Vec<f32>> =
+        needs_mask.then(|| vec![1.0; inp.program.manifest.num_gated()]);
+    let hp = StepHyper {
+        lr: inp.cfg.lr.at(0) as f32,
+        alpha: inp.cfg.alpha as f32,
+        beta: inp.cfg.beta as f32,
+    };
+    let mut obs = Observation { probe: true, ..Default::default() };
+    for _ in 0..PROBE_STEPS {
+        let t0 = Instant::now();
+        let (x, y) = sampler.next_batch(data);
+        obs.augment_ns.observe((t0.elapsed().as_nanos() as u64).max(1));
+        let secs = backend.probe_step(&x, &y, hp, mask.as_deref())?;
+        obs.step_ns.observe(((secs * 1e9) as u64).max(1));
+    }
+    Ok(obs)
+}
+
+/// Serve-side planning: pick the micro-batch with the highest predicted
+/// samples/sec from the catalog's [`SERVE_BACKEND`] entries for this
+/// (family, method).  Returns `(micro_batch, predicted_samples_per_sec)`;
+/// `None` until a serve bench has measured something.
+pub fn choose_micro_batch(catalog: &Catalog, family: &str, method: &str) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    for e in catalog.entries() {
+        if e.key.backend != SERVE_BACKEND || e.key.family != family || e.key.method != method {
+            continue;
+        }
+        let Some(mean) = e.step_mean_ns() else { continue };
+        let sps = e.key.batch as f64 * 1e9 / mean.max(1.0);
+        // Strict > over the catalog's BTreeMap order keeps ties
+        // deterministic (smallest micro-batch wins).
+        if best.map(|(_, b)| sps > b).unwrap_or(true) {
+            best = Some((e.key.batch, sps));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(
+        choice: BackendChoice,
+        shards: usize,
+        prefetch: bool,
+        sps: f64,
+        jps: Option<f64>,
+    ) -> PlanEval {
+        PlanEval { choice, shards, prefetch, depth: prefetch.then_some(2), sps, jps }
+    }
+
+    #[test]
+    fn selection_is_fastest_and_ties_resolve_to_enumeration_order() {
+        let evals = vec![
+            ev(BackendChoice::Host, 0, true, 100.0, Some(0.2)),
+            ev(BackendChoice::Host, 0, false, 80.0, Some(0.2)),
+            ev(BackendChoice::Resident, 0, true, 140.0, Some(0.2)),
+            ev(BackendChoice::Sharded, 2, true, 140.0, Some(0.3)),
+        ];
+        // No budget: fastest wins; the tie at 140.0 goes to the earlier
+        // candidate (resident), not the later sharded one.
+        assert_eq!(select(&evals, None, 100.0), 2);
+    }
+
+    #[test]
+    fn energy_budget_filters_then_minimizes() {
+        let evals = vec![
+            ev(BackendChoice::Host, 0, true, 100.0, Some(0.5)),
+            ev(BackendChoice::Resident, 0, true, 200.0, Some(1.0)),
+            ev(BackendChoice::Sharded, 2, true, 300.0, Some(2.0)),
+        ];
+        // Budget admits host + resident (totals 50 / 100 over 100
+        // steps): the faster of those wins even though sharded is
+        // faster still.
+        assert_eq!(select(&evals, Some(100.0), 100.0), 1);
+        // Budget admits nothing: minimum predicted energy wins.
+        assert_eq!(select(&evals, Some(10.0), 100.0), 0);
+        // Unknown energy is taken at its word under a budget.
+        let evals2 = vec![
+            ev(BackendChoice::Host, 0, true, 100.0, Some(0.5)),
+            ev(BackendChoice::Resident, 0, true, 400.0, None),
+        ];
+        assert_eq!(select(&evals2, Some(1.0), 100.0), 1);
+    }
+
+    #[test]
+    fn micro_batch_comes_from_serve_entries_only() {
+        let mut cat = Catalog::new();
+        let serve_key = |b: usize| CatalogKey {
+            family: "refmlp-tiny".into(),
+            method: "sgd32".into(),
+            backend: SERVE_BACKEND.into(),
+            shards: 0,
+            batch: b,
+        };
+        assert_eq!(choose_micro_batch(&cat, "refmlp-tiny", "sgd32"), None);
+        // b=4 at 1ms/infer = 4000 samples/s; b=8 at 4ms = 2000.
+        let mut o4 = Observation::default();
+        o4.step_ns.observe(1_000_000);
+        cat.observe(serve_key(4), &o4);
+        let mut o8 = Observation::default();
+        o8.step_ns.observe(4_000_000);
+        cat.observe(serve_key(8), &o8);
+        // A training entry with the same batch must not leak in.
+        let mut t = Observation::default();
+        t.step_ns.observe(1);
+        cat.observe(
+            CatalogKey {
+                family: "refmlp-tiny".into(),
+                method: "sgd32".into(),
+                backend: "host".into(),
+                shards: 0,
+                batch: 4,
+            },
+            &t,
+        );
+        let (mb, sps) = choose_micro_batch(&cat, "refmlp-tiny", "sgd32").unwrap();
+        assert_eq!(mb, 4);
+        assert!(sps > 2_000.0 && sps < 8_000.0, "{sps}");
+        assert_eq!(choose_micro_batch(&cat, "other", "sgd32"), None);
+    }
+
+    #[test]
+    fn catalog_path_prefers_explicit_then_auto_default() {
+        let mut cfg = RunCfg::quick("refmlp-tiny", "sgd32", 4);
+        assert_eq!(catalog_path(&cfg), None);
+        cfg.backend = Some(BackendChoice::Auto);
+        assert_eq!(catalog_path(&cfg), Some(PathBuf::from(DEFAULT_CATALOG_FILE)));
+        cfg.catalog = Some(PathBuf::from("custom/cat.json"));
+        assert_eq!(catalog_path(&cfg), Some(PathBuf::from("custom/cat.json")));
+    }
+}

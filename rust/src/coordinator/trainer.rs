@@ -49,12 +49,13 @@ use crate::checkpoint::{
     CheckpointData, CheckpointRegistry, CheckpointWriter, FsRemoteStore, Replicator,
     RetentionCfg,
 };
-use crate::config::{DataCfg, RunCfg};
+use crate::config::{BackendChoice, DataCfg, RunCfg};
 use crate::data::{
     cifar, prefetch, synthetic, AugmentCfg, Dataset, Prefetcher, Sampler, SamplerState,
 };
 use crate::energy::{EnergyLedger, EnergyModel};
 use crate::metrics::{Mean, RunMetrics};
+use crate::obs::catalog::{Catalog, CatalogKey, Observation, PlanRecord};
 use crate::obs::{Obs, TraceKey};
 use crate::optim::SwaState;
 use crate::runtime::{
@@ -63,6 +64,7 @@ use crate::runtime::{
 };
 use crate::util::fault::{self, FaultPlan};
 
+use super::planner;
 use super::sd::SdScheduler;
 use super::smd::SmdScheduler;
 
@@ -374,14 +376,6 @@ impl<'e> Trainer<'e> {
     }
 
     fn run_inner(&mut self, start: Start) -> Result<RunOutcome> {
-        // The synchronous-sampling path needs the decoded train set on
-        // this thread; materialize a deferred CIFAR source up front.
-        // (With prefetch on, the worker decodes it instead.)
-        let sync_data = if self.cfg.prefetch {
-            None
-        } else {
-            Some(self.train_set()?)
-        };
         // Training-set length without materializing a deferred CIFAR
         // source (its record count comes from file metadata) — the
         // shadow sampler and restore validation need it.
@@ -389,8 +383,7 @@ impl<'e> Trainer<'e> {
             TrainData::Ready(d) => d.n,
             TrainData::DeferredCifar(f) => f.n,
         };
-        let m = &self.program.manifest;
-        let num_gated = m.num_gated();
+        let num_gated = self.program.manifest.num_gated();
 
         // Loop-state defaults for a fresh run; a resume overwrites all
         // of them wholesale from the checkpoint.
@@ -411,8 +404,10 @@ impl<'e> Trainer<'e> {
                 // Name-based migration handles method changes (e.g.
                 // resuming a sgd32-pretrained trunk under e2train,
                 // which adds gates).
-                Some(s) => ModelState::init_from(m, self.cfg.seed, &s),
-                None => ModelState::init(m, self.cfg.seed),
+                Some(s) => {
+                    ModelState::init_from(&self.program.manifest, self.cfg.seed, &s)
+                }
+                None => ModelState::init(&self.program.manifest, self.cfg.seed),
             },
             Start::Resume(ck) => {
                 self.check_resume_state(&ck)?;
@@ -438,6 +433,68 @@ impl<'e> Trainer<'e> {
                 ck.model
             }
         };
+
+        // The planning layer: `backend = "auto"` resolves into a
+        // concrete layout here, against the calibrated cost catalog —
+        // before any backend exists, and strictly outside the
+        // determinism fingerprint (a plan only sets layout knobs, which
+        // are bitwise interchangeable by the backend-matrix contract).
+        let mut choice = self.cfg.resolved_backend();
+        let mut run_shards = self.cfg.shards;
+        let mut run_prefetch = self.cfg.prefetch;
+        let mut pinned_depth: Option<usize> = None;
+        let mut plan_record: Option<PlanRecord> = None;
+        let catalog_path = planner::catalog_path(&self.cfg);
+        if choice == BackendChoice::Auto {
+            let path = catalog_path
+                .as_deref()
+                .expect("auto always resolves a catalog path");
+            let mut catalog = Catalog::load_or_empty(path)?;
+            let plan = planner::plan_run(
+                &planner::PlanInputs {
+                    engine: self.engine,
+                    program: &self.program,
+                    cfg: &self.cfg,
+                    init: &init_state,
+                    data: match &self.train_data {
+                        TrainData::Ready(d) => Some(d),
+                        TrainData::DeferredCifar(_) => None,
+                    },
+                },
+                &mut catalog,
+            )?;
+            if plan.record.probed {
+                // Probe measurements are real calibration — persist
+                // them now so they survive even a run that later fails.
+                catalog.save(path)?;
+            }
+            eprintln!(
+                "[plan] auto -> {}/s{} prefetch={} depth={:?}: predicted \
+                 {:.1} steps/s, {} J/step{}",
+                plan.record.backend,
+                plan.record.shards,
+                plan.record.prefetch,
+                plan.record.prefetch_depth,
+                plan.record.predicted_sps,
+                if plan.record.predicted_j_per_step > 0.0 {
+                    format!("{:.4}", plan.record.predicted_j_per_step)
+                } else {
+                    "?".into()
+                },
+                if plan.record.probed { " (probe-calibrated)" } else { "" },
+            );
+            choice = plan.choice;
+            run_shards = plan.shards;
+            run_prefetch = plan.prefetch;
+            pinned_depth = plan.prefetch_depth;
+            plan_record = Some(plan.record);
+        }
+        // The synchronous-sampling path needs the decoded train set on
+        // this thread; materialize a deferred CIFAR source now that the
+        // plan (or the config) has fixed prefetch on/off.
+        let sync_data = if run_prefetch { None } else { Some(self.train_set()?) };
+        let m = &self.program.manifest;
+
         // The execution layer: everything below this line is
         // backend-agnostic — swapping host/resident/sharded (or a
         // future real-PJRT collective impl) changes nothing in the loop.
@@ -445,8 +502,8 @@ impl<'e> Trainer<'e> {
             self.engine,
             &self.program,
             &self.cfg.manifest_path(),
-            self.cfg.resolved_backend(),
-            self.cfg.shards,
+            choice,
+            run_shards,
             init_state,
         )?;
         if let Some(p) = &self.faults {
@@ -526,15 +583,16 @@ impl<'e> Trainer<'e> {
         // belongs on the wall clock even though they were built before
         // it starts — keeps the prefetch-on/off comparison fair.
         let mut wall_offset_s = 0.0;
-        let mut source = match (&self.train_data, self.cfg.prefetch) {
+        let mut source = match (&self.train_data, run_prefetch) {
             (TrainData::DeferredCifar(files), true) => {
                 // Stream + decode the CIFAR binaries on the worker.  The
                 // depth auto-tuner needs decoded probe batches, so
-                // deferred ingestion keeps the classic double buffer;
-                // the batch stream itself is bit-identical (the worker
+                // deferred ingestion keeps the classic double buffer —
+                // unless a plan pinned the depth from the catalog; the
+                // batch stream itself is bit-identical (the worker
                 // builds the same sampler start over the same records —
                 // a fresh seed, or the restored mid-run position).
-                let depth = prefetch::DEFAULT_DEPTH;
+                let depth = pinned_depth.unwrap_or(prefetch::DEFAULT_DEPTH);
                 prefetch_depth = Some(depth);
                 let files = files.clone();
                 let batch = self.program.batch();
@@ -559,6 +617,32 @@ impl<'e> Trainer<'e> {
                     )?,
                 };
                 BatchSource::Prefetch { staged: VecDeque::new(), pre }
+            }
+            (TrainData::Ready(data), true) if pinned_depth.is_some() => {
+                // Planned run: the depth came from the catalog, so the
+                // auto-tune probe is skipped and the worker owns the
+                // stream from batch 0.  Bitwise identical to the probing
+                // path below — its probe batches are merely a replayed
+                // head of the same stream, and its throwaway step is
+                // invisible by the `probe_step` contract.
+                let depth = pinned_depth.expect("guard");
+                prefetch_depth = Some(depth);
+                let data = data.clone();
+                let sampler = sampler_start.build(
+                    data.n,
+                    self.program.batch(),
+                    AugmentCfg::default(),
+                )?;
+                BatchSource::Prefetch {
+                    staged: VecDeque::new(),
+                    pre: Prefetcher::spawn_from_opts(
+                        sampler,
+                        data,
+                        depth,
+                        self.faults.clone(),
+                        self.obs.clone(),
+                    )?,
+                }
             }
             (TrainData::Ready(data), true) => {
                 // Depth auto-tuning: assemble (and time) the first batches
@@ -810,6 +894,63 @@ impl<'e> Trainer<'e> {
             metrics.replica_bytes = r.bytes;
             metrics.replica_retries = r.retries;
             metrics.replica_skipped_vanished = r.skipped_vanished;
+        }
+
+        // Planning-layer accounting: actuals measured on the same obs
+        // substrate the predictions came from, then the catalog learns
+        // this run.  Ordered before the trace snapshot below so the
+        // `plan` row carries the final predicted-vs-actual numbers.
+        let step_hist = self.obs.phase_histogram(crate::obs::PHASE_STEP_EXEC);
+        if let Some(mut rec) = plan_record {
+            let actual_sps = step_hist
+                .as_ref()
+                .map(|h| 1e9 / h.mean().max(1.0))
+                .unwrap_or(0.0);
+            let actual_jps = if ledger.steps_charged > 0 {
+                ledger.total_joules() / ledger.steps_charged as f64
+            } else {
+                0.0
+            };
+            rec.record_actuals(actual_sps, actual_jps);
+            eprintln!(
+                "[plan] predicted {:.1} steps/s vs actual {:.1} ({:+.1}%)",
+                rec.predicted_sps,
+                rec.actual_sps,
+                rec.sps_rel_err * 100.0
+            );
+            self.obs.set_plan(rec.clone());
+            metrics.plan = Some(rec);
+        }
+        if let Some(path) = &catalog_path {
+            // Recalibration: fold this run's measured step/augment
+            // distributions and its charged energy into the catalog
+            // (reloaded — another run may have written since planning).
+            let mut run_obs = Observation {
+                joules: ledger.total_joules(),
+                joule_steps: ledger.steps_charged,
+                ..Default::default()
+            };
+            if let Some(h) = step_hist {
+                run_obs.step_ns = h;
+            }
+            if let Some(h) = self.obs.phase_histogram(crate::obs::PHASE_AUGMENT) {
+                run_obs.augment_ns = h;
+            }
+            if run_obs.step_ns.count() > 0 {
+                let mut catalog = Catalog::load_or_empty(path)?;
+                catalog.observe(
+                    CatalogKey {
+                        family: self.cfg.family.clone(),
+                        method: self.cfg.method.clone(),
+                        backend: metrics.backend.clone(),
+                        shards: metrics.shards,
+                        batch: self.program.batch(),
+                    },
+                    &run_obs,
+                );
+                catalog.save(path)?;
+                eprintln!("[obs] catalog recalibrated -> {}", path.display());
+            }
         }
 
         // Fold the per-phase summary into the run metrics and, when

@@ -16,7 +16,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::coordinator::planner;
 use crate::data::synthetic;
+use crate::obs::catalog::{Catalog, CatalogKey, Observation, SERVE_BACKEND};
+use crate::obs::{Obs, PHASE_SERVE_INFER};
 use crate::runtime::{
     write_reference_family, BackendKind, Engine, ModelState, RefFamilySpec,
     SnapshotCell, StateSnapshot, TrainProgram,
@@ -49,6 +52,16 @@ pub struct ServeBenchCfg {
     /// a serve fleet in another failure domain needs no local registry.
     /// Mutually exclusive with `registry`.
     pub replica: Option<PathBuf>,
+    /// Explicit serve micro-batch override (`None`: the artifact's
+    /// eval batch, or the catalog's pick under `auto_micro_batch`).
+    pub micro_batch: Option<usize>,
+    /// Let the planner pick the micro-batch with the highest predicted
+    /// samples/sec from the catalog's measured serve entries
+    /// (`e2train serve --micro-batch auto`).
+    pub auto_micro_batch: bool,
+    /// Cost catalog (`obs_catalog/v1`) to plan from; the bench's
+    /// measured serve-infer spans recalibrate it afterwards.
+    pub catalog: Option<PathBuf>,
     /// Provenance string recorded in the report (producer + profile).
     pub source: String,
 }
@@ -64,6 +77,9 @@ impl Default for ServeBenchCfg {
             seed: 0,
             registry: None,
             replica: None,
+            micro_batch: None,
+            auto_micro_batch: false,
+            catalog: None,
             source: "serve_bench".into(),
         }
     }
@@ -122,7 +138,41 @@ pub fn run_serve_bench(
     let hw = probe.manifest.arch.image_size;
     let classes = probe.manifest.arch.num_classes;
     let stride = hw * hw * 3;
-    let micro_batch = probe.eval_batch();
+
+    // Serve-side planning: an explicit micro-batch wins; `auto` asks
+    // the catalog for the fastest measured one; otherwise the
+    // artifact's eval batch.  Either way the measured serve-infer
+    // spans recalibrate the catalog at the end when one is attached.
+    let mut catalog = cfg.catalog.as_deref().map(Catalog::load_or_empty).transpose()?;
+    let mut predicted_sps: Option<f64> = None;
+    let default_mb = probe.eval_batch();
+    let (micro_batch, mb_source) = if let Some(m) = cfg.micro_batch {
+        (m.max(1), "explicit")
+    } else if cfg.auto_micro_batch {
+        let cat = catalog
+            .as_ref()
+            .ok_or_else(|| anyhow!("--micro-batch auto needs a catalog (--catalog <path>)"))?;
+        match planner::choose_micro_batch(cat, probe.family(), probe.method()) {
+            Some((m, sps)) => {
+                println!(
+                    "serve: catalog picked micro-batch {m} (predicted {sps:.0} samples/s)"
+                );
+                predicted_sps = Some(sps);
+                (m, "catalog")
+            }
+            None => {
+                println!(
+                    "serve: catalog has no serve entries for {}/{} yet; \
+                     defaulting micro-batch to {default_mb}",
+                    probe.family(),
+                    probe.method()
+                );
+                (default_mb, "default")
+            }
+        }
+    } else {
+        (default_mb, "default")
+    };
 
     // Shared resident state for the whole sweep: a freshly-initialized
     // snapshot by default (the serve integration with a live trainer is
@@ -167,8 +217,12 @@ pub fn run_serve_bench(
     let req_size = cfg.samples_per_request.max(1);
 
     let mut rows = Vec::new();
+    // Measured serve-infer spans across all levels (same micro-batch ⇒
+    // same catalog key), folded back into the catalog after the sweep.
+    let mut measured = Observation::default();
     for &clients in &cfg.levels {
         let clients = clients.max(1);
+        let obs = Obs::new(false);
         let service = ServeService::start(
             engine,
             manifest_path,
@@ -177,7 +231,8 @@ pub fn run_serve_bench(
                 workers: cfg.workers,
                 queue_cap: (clients * 2).max(16),
                 max_delay: cfg.max_delay,
-                micro_batch: None,
+                micro_batch: Some(micro_batch),
+                obs: obs.clone(),
                 ..Default::default()
             },
         )?;
@@ -214,6 +269,9 @@ pub fn run_serve_bench(
         })?;
         let wall = t0.elapsed().as_secs_f64();
         let stats = service.shutdown();
+        if let Some(h) = obs.phase_histogram(PHASE_SERVE_INFER) {
+            measured.step_ns.merge(&h);
+        }
         println!(
             "serve: {clients:>3} clients  {:>8.1} samp/s  p50 {:>7.3}ms  p99 {:>7.3}ms  occupancy {:>5.2}/{micro_batch} ({} batches)",
             samples_done as f64 / wall.max(1e-9),
@@ -243,6 +301,25 @@ pub fn run_serve_bench(
         ]));
     }
 
+    // Close the loop: the bench's own measurements become the serve
+    // entry the next `--micro-batch auto` plans from.
+    if let (Some(cat), Some(path)) = (catalog.as_mut(), cfg.catalog.as_deref()) {
+        if measured.step_ns.count() > 0 {
+            cat.observe(
+                CatalogKey {
+                    family: probe.family().to_string(),
+                    method: probe.method().to_string(),
+                    backend: SERVE_BACKEND.to_string(),
+                    shards: 0,
+                    batch: micro_batch,
+                },
+                &measured,
+            );
+            cat.save(path)?;
+            println!("serve: catalog recalibrated -> {}", path.display());
+        }
+    }
+
     Ok(Json::obj(vec![
         ("schema", Json::str("bench_serve/v1")),
         ("source", Json::str(&cfg.source)),
@@ -256,6 +333,11 @@ pub fn run_serve_bench(
             }),
         ),
         ("micro_batch", Json::num(micro_batch as f64)),
+        ("micro_batch_source", Json::str(mb_source)),
+        (
+            "predicted_sps",
+            predicted_sps.map(Json::num).unwrap_or(Json::Null),
+        ),
         ("workers", Json::num(cfg.workers as f64)),
         (
             "max_delay_ms",

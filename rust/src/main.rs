@@ -14,6 +14,8 @@
 //! e2train shard-bench --shards 1,2,4 --out BENCH_shard.json
 //! e2train train --family refmlp-tiny --trace-out trace.jsonl
 //! e2train trace-report trace.jsonl
+//! e2train train --family refmlp-tiny --backend auto --catalog OBS_CATALOG.json
+//! e2train catalog --ingest trace.jsonl
 //! e2train energy-report --family resnet20-c10
 //! ```
 
@@ -50,11 +52,19 @@ COMMANDS:
     --smd                       enable stochastic mini-batch dropping
     --alpha <f>                 SLU FLOPs-regularizer weight [1.0]
     --beta <f>                  PSG adaptive threshold       [0.05]
-    --backend <b>               execution backend: host|resident|sharded
+    --backend <b>               execution backend: host|resident|sharded|auto
                                 (default: resident, or sharded when
-                                --shards is set — all three are bitwise
-                                interchangeable for a fixed seed)
+                                --shards is set — all are bitwise
+                                interchangeable for a fixed seed; `auto`
+                                lets the planner pick the layout from
+                                the obs_catalog/v1 cost catalog)
     --shards <n>                data-parallel shard count    [0]
+                                (not combinable with --backend auto)
+    --catalog <path>            cost catalog to plan from / recalibrate
+                                [OBS_CATALOG.json under --backend auto]
+    --energy-budget-j <f>       planner hint: prefer the fastest plan
+                                predicted to fit this whole-run energy
+                                budget (requires --backend auto)
     --n-train <n>               synthetic train size [2048]
     --n-test <n>                synthetic test size  [512]
     --eval-every <n>            periodic eval every n iters  [0]
@@ -116,12 +126,26 @@ COMMANDS:
     --req-size <n>              samples per request       [2]
     --workers <n>               eval worker threads       [2]
     --delay-ms <n>              batcher flush deadline    [2]
+    --micro-batch <n|auto>      serve micro-batch: a size, or `auto` to
+                                pick the fastest measured one from the
+                                catalog [the artifact's eval batch]
+    --catalog <path>            cost catalog for --micro-batch auto;
+                                measured serve-infer spans recalibrate
+                                it after the sweep
     --seed <n>                  rng seed                  [0]
     --out <path>                report path [BENCH_serve.json]
   trace-report <file.jsonl>     render an obs_trace/v1 run trace as a
                                 per-phase table (count, total/mean ms,
                                 p50/p99, % of run) plus counters and
                                 recovery events
+    --json                      emit the same aggregates as
+                                machine-readable trace_report/v1 JSON
+  catalog [file]                inspect the obs_catalog/v1 cost catalog
+                                [OBS_CATALOG.json]
+    --merge <a,b,..>            fold other catalog files in, then save
+    --ingest <a,b,..>           re-histogram obs_trace/v1 JSONL files
+                                into the catalog, then save
+    --out <path>                write result here instead of in place
   energy-report                 analytic energy model vs paper anchors
     --family <fam>              [resnet20-c10]
 
@@ -200,6 +224,23 @@ fn main() -> Result<()> {
             apply_backend_flags(&mut cfg, &args)?;
             if let Some(p) = args.get("trace-out") {
                 cfg.trace_out = Some(PathBuf::from(p));
+            }
+            // Planner knobs (layout hints — outside the determinism
+            // fingerprint, like --backend itself).
+            if args.get("energy-budget-j").is_some() {
+                let v = args.f64_or("energy-budget-j", 0.0)?;
+                if !(v.is_finite() && v > 0.0) {
+                    bail!("--energy-budget-j must be a positive number");
+                }
+                cfg.energy_budget_j = Some(v);
+            }
+            if let Some(p) = args.get("catalog") {
+                cfg.catalog = Some(PathBuf::from(p));
+            }
+            if cfg.energy_budget_j.is_some()
+                && cfg.resolved_backend() != BackendChoice::Auto
+            {
+                bail!("--energy-budget-j is a planner hint — it requires --backend auto");
             }
             cfg.artifacts_dir = artifacts;
             // Align the synthetic class count with the artifact.
@@ -378,6 +419,25 @@ fn main() -> Result<()> {
             println!("shard bench -> {out}");
         }
         "serve" => {
+            let (micro_batch, auto_micro_batch) = match args.get("micro-batch") {
+                None => (None, false),
+                Some("auto") => (None, true),
+                Some(v) => (
+                    Some(v.parse::<usize>().map_err(|_| {
+                        anyhow!("--micro-batch expects a positive integer or `auto`")
+                    })?),
+                    false,
+                ),
+            };
+            let catalog = match args.get("catalog") {
+                Some(p) => Some(PathBuf::from(p)),
+                // `auto` without an explicit path uses the default
+                // catalog file, same as `train --backend auto`.
+                None if auto_micro_batch => Some(PathBuf::from(
+                    e2train::obs::catalog::DEFAULT_CATALOG_FILE,
+                )),
+                None => None,
+            };
             let cfg = experiments::ServeBenchCfg {
                 levels: args.usize_list_or("clients", &[2, 8])?,
                 requests_per_client: args.usize_or("requests", 32)?,
@@ -387,6 +447,9 @@ fn main() -> Result<()> {
                 seed: args.u64_or("seed", 0)?,
                 registry: args.get("registry").map(PathBuf::from),
                 replica: args.get("replica").map(PathBuf::from),
+                micro_batch,
+                auto_micro_batch,
+                catalog,
                 source: if cfg!(debug_assertions) {
                     "e2train serve (debug profile)"
                 } else {
@@ -416,7 +479,44 @@ fn main() -> Result<()> {
             let text = std::fs::read_to_string(file)
                 .map_err(|e| anyhow!("reading {file}: {e}"))?;
             let rep = e2train::obs::report::aggregate(&text)?;
-            print!("{}", rep.render());
+            if args.bool("json") {
+                println!("{}", rep.to_json().to_string());
+            } else {
+                print!("{}", rep.render());
+            }
+        }
+        "catalog" => {
+            use e2train::obs::catalog::{Catalog, DEFAULT_CATALOG_FILE};
+            let file = PathBuf::from(
+                args.positional
+                    .get(1)
+                    .map(String::as_str)
+                    .unwrap_or(DEFAULT_CATALOG_FILE),
+            );
+            let mut cat = Catalog::load_or_empty(&file)?;
+            let mut changed = false;
+            if let Some(list) = args.get("merge") {
+                for p in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                    cat.merge(&Catalog::load(std::path::Path::new(p))?);
+                    changed = true;
+                }
+            }
+            if let Some(list) = args.get("ingest") {
+                for p in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                    let text = std::fs::read_to_string(p)
+                        .map_err(|e| anyhow!("reading {p}: {e}"))?;
+                    cat.ingest_trace(&text)
+                        .map_err(|e| anyhow!("ingesting {p}: {e:#}"))?;
+                    changed = true;
+                }
+            }
+            let out = args.get("out").map(PathBuf::from);
+            if changed || out.is_some() {
+                let dest = out.unwrap_or_else(|| file.clone());
+                cat.save(&dest)?;
+                println!("catalog ({} entries) -> {}", cat.len(), dest.display());
+            }
+            print!("{}", cat.render());
         }
         "energy-report" => {
             let family = args.str_or("family", "resnet20-c10");

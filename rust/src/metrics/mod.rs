@@ -63,6 +63,10 @@ pub struct RunMetrics {
     /// contract, like `wall_seconds`: two bitwise-identical runs will
     /// differ here.
     pub obs: Option<crate::obs::ObsSummary>,
+    /// The execution plan the planner chose (`backend = "auto"`), with
+    /// predicted-vs-actual steps/sec and J/step accounting.  Layout
+    /// only — outside the determinism contract like `backend`/`shards`.
+    pub plan: Option<crate::obs::catalog::PlanRecord>,
 }
 
 impl RunMetrics {
@@ -139,6 +143,9 @@ impl RunMetrics {
         ];
         if let Some(obs) = &self.obs {
             pairs.push(("obs", obs.to_json()));
+        }
+        if let Some(plan) = &self.plan {
+            pairs.push(("plan", plan.to_json()));
         }
         Json::obj(pairs)
     }

@@ -1,0 +1,696 @@
+//! The calibrated cost/energy catalog (`obs_catalog/v1`).
+//!
+//! One JSON file holds everything the system has measured about what an
+//! execution layout costs: per (family, method, backend, shards, batch)
+//! key, the full fixed-bucket histograms of `step-exec` and `augment`
+//! span durations plus accumulated joules per charged step.  Entries
+//! are built **only** from the observability plane — live runs fold in
+//! their [`crate::obs::Obs`] phase histograms and energy-ledger totals,
+//! and `e2train catalog --ingest` re-histograms the span rows of an
+//! `obs_trace/v1` file — there is no parallel timing path.
+//!
+//! The planner (`coordinator::planner`) reads the catalog to predict
+//! steps/sec and J/step for each candidate plan; every completed run
+//! writes its measurements back, so the catalog recalibrates itself
+//! run over run.  Histograms merge (associative + commutative, see
+//! `obs::hist`), so catalogs from different machines/runs can be merged
+//! with `e2train catalog --merge` without losing percentile fidelity.
+//!
+//! Serve costs live in the same file under the reserved backend name
+//! `"serve"` with `batch` = micro-batch size and `step_ns` holding
+//! `serve-infer` span durations.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+use super::hist::Histogram;
+use super::TRACE_SCHEMA;
+
+/// Schema identifier pinned field-by-field by `tests/planner_matrix.rs`.
+pub const CATALOG_SCHEMA: &str = "obs_catalog/v1";
+
+/// Default catalog filename, written next to the `BENCH_*.json` reports
+/// (the repo root in the shipped launchers).
+pub const DEFAULT_CATALOG_FILE: &str = "OBS_CATALOG.json";
+
+/// Reserved backend name for serve-side entries (`batch` = micro-batch).
+pub const SERVE_BACKEND: &str = "serve";
+
+/// The identity of one catalog entry.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CatalogKey {
+    pub family: String,
+    pub method: String,
+    /// `StepBackend::name()` (`host` | `resident` | `sharded`) or
+    /// [`SERVE_BACKEND`].
+    pub backend: String,
+    pub shards: usize,
+    pub batch: usize,
+}
+
+impl CatalogKey {
+    /// Stable string form used as the JSON map key (BTreeMap order ⇒
+    /// deterministic file layout).
+    pub fn id(&self) -> String {
+        format!(
+            "{}/{}/{}/s{}/b{}",
+            self.family, self.method, self.backend, self.shards, self.batch
+        )
+    }
+}
+
+/// Accumulated measurements for one key.
+#[derive(Debug, Clone)]
+pub struct CatalogEntry {
+    pub key: CatalogKey,
+    /// Full runs folded in.
+    pub runs: u64,
+    /// Short calibration probes folded in (kept separate so a noisy
+    /// 2-step probe is visibly different provenance from a 500-step run).
+    pub probes: u64,
+    /// `step-exec` span durations (ns).
+    pub step_ns: Histogram,
+    /// `augment` span durations (ns) — batch assembly cost, the other
+    /// leg of the prefetch-overlap pipeline.
+    pub augment_ns: Histogram,
+    /// Total joules charged across folded-in runs …
+    pub joules: f64,
+    /// … over this many executed steps (J/step = joules / joule_steps).
+    pub joule_steps: u64,
+}
+
+impl CatalogEntry {
+    fn new(key: CatalogKey) -> Self {
+        CatalogEntry {
+            key,
+            runs: 0,
+            probes: 0,
+            step_ns: Histogram::new(),
+            augment_ns: Histogram::new(),
+            joules: 0.0,
+            joule_steps: 0,
+        }
+    }
+
+    /// Mean step-exec nanoseconds (`None` until something was measured).
+    pub fn step_mean_ns(&self) -> Option<f64> {
+        (self.step_ns.count() > 0).then(|| self.step_ns.mean())
+    }
+
+    /// Mean augment nanoseconds (`None` until something was measured).
+    pub fn augment_mean_ns(&self) -> Option<f64> {
+        (self.augment_ns.count() > 0).then(|| self.augment_ns.mean())
+    }
+
+    /// Joules per executed step (`None` until energy was charged — the
+    /// analytic energy model is layout-invariant, so callers may fall
+    /// back to a sibling entry that differs only in backend/shards).
+    pub fn j_per_step(&self) -> Option<f64> {
+        (self.joule_steps > 0).then(|| self.joules / self.joule_steps as f64)
+    }
+
+    fn merge(&mut self, other: &CatalogEntry) {
+        self.runs += other.runs;
+        self.probes += other.probes;
+        self.step_ns.merge(&other.step_ns);
+        self.augment_ns.merge(&other.augment_ns);
+        self.joules += other.joules;
+        self.joule_steps += other.joule_steps;
+    }
+
+    fn hist_json(h: &Histogram) -> Json {
+        Json::obj(vec![
+            (
+                "buckets",
+                Json::arr(h.bucket_counts().into_iter().map(|(i, c)| {
+                    Json::arr([Json::num(i as f64), Json::num(c as f64)])
+                })),
+            ),
+            ("total", Json::num(h.total() as f64)),
+            ("max", Json::num(h.max() as f64)),
+        ])
+    }
+
+    fn hist_from_json(v: &Json, what: &str) -> Result<Histogram> {
+        let buckets = v
+            .at(&["buckets"])
+            .as_arr()
+            .ok_or_else(|| anyhow!("{what}: missing buckets array"))?
+            .iter()
+            .map(|pair| {
+                let p = pair
+                    .as_arr()
+                    .filter(|p| p.len() == 2)
+                    .ok_or_else(|| anyhow!("{what}: bucket is not an [index, count] pair"))?;
+                let idx = p[0]
+                    .as_f64()
+                    .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+                    .ok_or_else(|| anyhow!("{what}: non-integer bucket index"))?;
+                let count = p[1]
+                    .as_f64()
+                    .filter(|v| *v > 0.0 && v.fract() == 0.0)
+                    .ok_or_else(|| anyhow!("{what}: non-integer bucket count"))?;
+                Ok((idx as usize, count as u64))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let total = v
+            .at(&["total"])
+            .as_f64()
+            .ok_or_else(|| anyhow!("{what}: missing total"))? as u64;
+        let max = v
+            .at(&["max"])
+            .as_f64()
+            .ok_or_else(|| anyhow!("{what}: missing max"))? as u64;
+        Histogram::from_parts(&buckets, total, max)
+            .ok_or_else(|| anyhow!("{what}: bucket index out of range"))
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("family", Json::str(&self.key.family)),
+            ("method", Json::str(&self.key.method)),
+            ("backend", Json::str(&self.key.backend)),
+            ("shards", Json::num(self.key.shards as f64)),
+            ("batch", Json::num(self.key.batch as f64)),
+            ("runs", Json::num(self.runs as f64)),
+            ("probes", Json::num(self.probes as f64)),
+            ("step_ns", Self::hist_json(&self.step_ns)),
+            ("augment_ns", Self::hist_json(&self.augment_ns)),
+            ("joules", Json::num(self.joules)),
+            ("joule_steps", Json::num(self.joule_steps as f64)),
+        ])
+    }
+
+    fn from_json(id: &str, v: &Json) -> Result<CatalogEntry> {
+        let req_str = |k: &str| {
+            v.at(&[k])
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("entry {id}: missing string field {k:?}"))
+        };
+        let req_num = |k: &str| {
+            v.at(&[k])
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.is_finite())
+                .ok_or_else(|| anyhow!("entry {id}: missing/invalid number field {k:?}"))
+        };
+        let key = CatalogKey {
+            family: req_str("family")?,
+            method: req_str("method")?,
+            backend: req_str("backend")?,
+            shards: req_num("shards")? as usize,
+            batch: req_num("batch")? as usize,
+        };
+        if key.id() != id {
+            bail!("entry {id}: key fields disagree with map key ({})", key.id());
+        }
+        Ok(CatalogEntry {
+            key,
+            runs: req_num("runs")? as u64,
+            probes: req_num("probes")? as u64,
+            step_ns: Self::hist_from_json(v.at(&["step_ns"]), "step_ns")
+                .with_context(|| format!("entry {id}"))?,
+            augment_ns: Self::hist_from_json(v.at(&["augment_ns"]), "augment_ns")
+                .with_context(|| format!("entry {id}"))?,
+            joules: req_num("joules")?,
+            joule_steps: req_num("joule_steps")? as u64,
+        })
+    }
+}
+
+/// One measurement batch to fold into the catalog (a completed run, a
+/// calibration probe, or a serve bench level).
+#[derive(Debug, Clone, Default)]
+pub struct Observation {
+    /// `step-exec` (or `serve-infer`) durations, ns.
+    pub step_ns: Histogram,
+    /// `augment` durations, ns (empty for serve entries).
+    pub augment_ns: Histogram,
+    pub joules: f64,
+    pub joule_steps: u64,
+    /// True for short calibration probes.
+    pub probe: bool,
+}
+
+/// The persisted catalog: a deterministic map of entries.
+#[derive(Debug, Clone, Default)]
+pub struct Catalog {
+    entries: BTreeMap<String, CatalogEntry>,
+}
+
+impl Catalog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn get(&self, key: &CatalogKey) -> Option<&CatalogEntry> {
+        self.entries.get(&key.id())
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &CatalogEntry> {
+        self.entries.values()
+    }
+
+    /// The layout-invariant J/step fallback: energy is charged by the
+    /// analytic model per executed step, so any entry sharing (family,
+    /// method, batch) predicts J/step for a layout never run before.
+    pub fn j_per_step_any_layout(&self, family: &str, method: &str, batch: usize) -> Option<f64> {
+        self.entries
+            .values()
+            .find(|e| {
+                e.key.family == family
+                    && e.key.method == method
+                    && e.key.batch == batch
+                    && e.joule_steps > 0
+            })
+            .and_then(CatalogEntry::j_per_step)
+    }
+
+    /// Fold one measurement batch into `key`'s entry.
+    pub fn observe(&mut self, key: CatalogKey, obs: &Observation) {
+        let e = self
+            .entries
+            .entry(key.id())
+            .or_insert_with(|| CatalogEntry::new(key));
+        if obs.probe {
+            e.probes += 1;
+        } else {
+            e.runs += 1;
+        }
+        e.step_ns.merge(&obs.step_ns);
+        e.augment_ns.merge(&obs.augment_ns);
+        e.joules += obs.joules;
+        e.joule_steps += obs.joule_steps;
+    }
+
+    /// Fold another catalog in (entry-wise histogram merge).
+    pub fn merge(&mut self, other: &Catalog) {
+        for (id, entry) in &other.entries {
+            match self.entries.get_mut(id) {
+                Some(e) => e.merge(entry),
+                None => {
+                    self.entries.insert(id.clone(), entry.clone());
+                }
+            }
+        }
+    }
+
+    /// Re-histogram the span rows of an `obs_trace/v1` JSONL document
+    /// into this catalog under the trace's own (family, method, backend,
+    /// shards, batch) key.  Span-less traces are rejected — a summary
+    /// row's mean can't honestly reconstruct a distribution, and the
+    /// trace carries no energy ledger, so `joules` stays untouched.
+    pub fn ingest_trace(&mut self, text: &str) -> Result<()> {
+        let mut key: Option<CatalogKey> = None;
+        let mut obs = Observation::default();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = parse(line).with_context(|| format!("trace line {}", i + 1))?;
+            match v.at(&["kind"]).as_str() {
+                Some("meta") => {
+                    let schema = v.at(&["schema"]).as_str().unwrap_or("?");
+                    if schema != TRACE_SCHEMA {
+                        bail!("unsupported trace schema {schema:?} (want {TRACE_SCHEMA})");
+                    }
+                    key = Some(CatalogKey {
+                        family: v.at(&["family"]).as_str().unwrap_or("?").into(),
+                        method: v.at(&["method"]).as_str().unwrap_or("?").into(),
+                        backend: v.at(&["backend"]).as_str().unwrap_or("?").into(),
+                        shards: v.at(&["shards"]).as_usize().unwrap_or(0),
+                        batch: v.at(&["batch"]).as_usize().unwrap_or(0),
+                    });
+                }
+                Some("span") => {
+                    let ns = (v.at(&["dur_ms"]).as_f64().unwrap_or(0.0) * 1e6).max(1.0) as u64;
+                    match v.at(&["phase"]).as_str() {
+                        Some(super::PHASE_STEP_EXEC) | Some(super::PHASE_SERVE_INFER) => {
+                            obs.step_ns.observe(ns)
+                        }
+                        Some(super::PHASE_AUGMENT) => obs.augment_ns.observe(ns),
+                        _ => {}
+                    }
+                }
+                _ => {} // other row kinds carry no catalog-relevant cost
+            }
+        }
+        let key = key.ok_or_else(|| anyhow!("no meta row — not an {TRACE_SCHEMA} trace"))?;
+        if obs.step_ns.count() == 0 {
+            bail!(
+                "trace has no step-exec/serve-infer span rows to ingest \
+                 (record the run with --trace-out)"
+            );
+        }
+        self.observe(key, &obs);
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(CATALOG_SCHEMA)),
+            (
+                "entries",
+                Json::Obj(
+                    self.entries
+                        .iter()
+                        .map(|(id, e)| (id.clone(), e.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Catalog> {
+        let schema = v
+            .at(&["schema"])
+            .as_str()
+            .ok_or_else(|| anyhow!("not a catalog: missing schema field"))?;
+        if schema != CATALOG_SCHEMA {
+            bail!("unsupported catalog schema {schema:?} (want {CATALOG_SCHEMA})");
+        }
+        let raw = v
+            .at(&["entries"])
+            .as_obj()
+            .ok_or_else(|| anyhow!("catalog: missing entries object"))?;
+        let mut entries = BTreeMap::new();
+        for (id, ev) in raw {
+            entries.insert(id.clone(), CatalogEntry::from_json(id, ev)?);
+        }
+        Ok(Catalog { entries })
+    }
+
+    /// Parse a catalog file.  A missing file is an error here — callers
+    /// that treat "no catalog yet" as empty use [`Catalog::load_or_empty`].
+    pub fn load(path: &Path) -> Result<Catalog> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading catalog {}", path.display()))?;
+        let v = parse(&text).with_context(|| format!("parsing catalog {}", path.display()))?;
+        Self::from_json(&v).with_context(|| format!("catalog {}", path.display()))
+    }
+
+    /// A missing file is an empty catalog (first run bootstraps it); a
+    /// present-but-corrupt file is still a hard error — silently
+    /// resetting a corrupt catalog would erase every calibration.
+    pub fn load_or_empty(path: &Path) -> Result<Catalog> {
+        if path.exists() {
+            Self::load(path)
+        } else {
+            Ok(Catalog::new())
+        }
+    }
+
+    /// Atomic-ish save: write sibling temp, rename over.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string())
+            .with_context(|| format!("writing catalog {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing catalog {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Human-facing listing for `e2train catalog`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<44} {:>5} {:>6} {:>12} {:>12} {:>12}\n",
+            "key", "runs", "probes", "step ms", "augment ms", "J/step"
+        ));
+        for e in self.entries.values() {
+            let fmt_opt = |v: Option<f64>, scale: f64| match v {
+                Some(x) => format!("{:.4}", x / scale),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{:<44} {:>5} {:>6} {:>12} {:>12} {:>12}\n",
+                e.key.id(),
+                e.runs,
+                e.probes,
+                fmt_opt(e.step_mean_ns(), 1e6),
+                fmt_opt(e.augment_mean_ns(), 1e6),
+                fmt_opt(e.j_per_step(), 1.0),
+            ));
+        }
+        out
+    }
+}
+
+/// The plan the planner chose for one run, with predicted-vs-actual
+/// accounting filled in at end of run.  Carried in [`crate::metrics::RunMetrics`]
+/// and emitted as the `plan` row of the run trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlanRecord {
+    /// Chosen backend name (`host` | `resident` | `sharded`).
+    pub backend: String,
+    /// Chosen shard count (0 for single-executor backends).
+    pub shards: usize,
+    /// Whether the plan pipelines batch assembly.
+    pub prefetch: bool,
+    /// Pinned prefetch channel depth (None when prefetch is off).
+    pub prefetch_depth: Option<usize>,
+    /// True when a calibration probe ran because catalog keys were
+    /// missing — the plan is then measurement-seeded, not pure lookup.
+    pub probed: bool,
+    /// Planner's predicted training throughput (steps/sec).
+    pub predicted_sps: f64,
+    /// Planner's predicted energy per executed step (0.0 = unknown:
+    /// no energy had ever been charged for this workload).
+    pub predicted_j_per_step: f64,
+    /// Measured throughput over this run's step-exec spans.
+    pub actual_sps: f64,
+    /// Measured ledger joules per executed step.
+    pub actual_j_per_step: f64,
+    /// (predicted − actual) / actual for steps/sec (0.0 until actuals).
+    pub sps_rel_err: f64,
+    /// (predicted − actual) / actual for J/step.
+    pub j_rel_err: f64,
+}
+
+impl PlanRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("backend", Json::str(&self.backend)),
+            ("shards", Json::num(self.shards as f64)),
+            ("prefetch", Json::Bool(self.prefetch)),
+            (
+                "prefetch_depth",
+                match self.prefetch_depth {
+                    Some(d) => Json::num(d as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("probed", Json::Bool(self.probed)),
+            ("predicted_sps", Json::num(self.predicted_sps)),
+            ("predicted_j_per_step", Json::num(self.predicted_j_per_step)),
+            ("actual_sps", Json::num(self.actual_sps)),
+            ("actual_j_per_step", Json::num(self.actual_j_per_step)),
+            ("sps_rel_err", Json::num(self.sps_rel_err)),
+            ("j_rel_err", Json::num(self.j_rel_err)),
+        ])
+    }
+
+    /// Fill the actuals and relative errors from end-of-run measurements.
+    pub fn record_actuals(&mut self, actual_sps: f64, actual_j_per_step: f64) {
+        self.actual_sps = actual_sps;
+        self.actual_j_per_step = actual_j_per_step;
+        let rel = |pred: f64, act: f64| if act > 0.0 { (pred - act) / act } else { 0.0 };
+        self.sps_rel_err = rel(self.predicted_sps, actual_sps);
+        self.j_rel_err = if self.predicted_j_per_step > 0.0 {
+            rel(self.predicted_j_per_step, actual_j_per_step)
+        } else {
+            0.0
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Obs, TraceKey, PHASE_AUGMENT, PHASE_STEP_EXEC};
+    use std::time::Duration;
+
+    fn key(backend: &str, shards: usize) -> CatalogKey {
+        CatalogKey {
+            family: "refmlp-tiny".into(),
+            method: "sgd32".into(),
+            backend: backend.into(),
+            shards,
+            batch: 8,
+        }
+    }
+
+    fn obs_with(step_us: &[u64], aug_us: &[u64], joules: f64, steps: u64) -> Observation {
+        let mut o = Observation { joules, joule_steps: steps, ..Default::default() };
+        for &v in step_us {
+            o.step_ns.observe(v * 1000);
+        }
+        for &v in aug_us {
+            o.augment_ns.observe(v * 1000);
+        }
+        o
+    }
+
+    #[test]
+    fn observe_merge_and_roundtrip() {
+        let mut cat = Catalog::new();
+        cat.observe(key("host", 0), &obs_with(&[200, 220, 240], &[40, 42], 0.6, 3));
+        cat.observe(key("sharded", 2), &obs_with(&[150, 160], &[40], 0.4, 2));
+        assert_eq!(cat.len(), 2);
+        let e = cat.get(&key("host", 0)).unwrap();
+        assert_eq!(e.runs, 1);
+        assert_eq!(e.step_ns.count(), 3);
+        assert!((e.j_per_step().unwrap() - 0.2).abs() < 1e-12);
+        // Same key folds in, different provenance counted separately.
+        let mut probe = obs_with(&[210], &[], 0.0, 0);
+        probe.probe = true;
+        cat.observe(key("host", 0), &probe);
+        let e = cat.get(&key("host", 0)).unwrap();
+        assert_eq!((e.runs, e.probes), (1, 1));
+        assert_eq!(e.step_ns.count(), 4);
+
+        // JSON round-trip is exact (histograms included).
+        let back = Catalog::from_json(&cat.to_json()).unwrap();
+        assert_eq!(back.len(), cat.len());
+        for (a, b) in back.entries().zip(cat.entries()) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.step_ns.count(), b.step_ns.count());
+            assert_eq!(a.step_ns.percentile(0.99), b.step_ns.percentile(0.99));
+            assert_eq!(a.augment_ns.total(), b.augment_ns.total());
+            assert_eq!((a.runs, a.probes), (b.runs, b.probes));
+            assert_eq!(a.joule_steps, b.joule_steps);
+        }
+
+        // Catalog-level merge = entry-wise histogram merge.
+        let mut other = Catalog::new();
+        other.observe(key("host", 0), &obs_with(&[500], &[90], 0.25, 1));
+        other.observe(key("resident", 0), &obs_with(&[180], &[40], 0.2, 1));
+        let mut merged = cat.clone();
+        merged.merge(&other);
+        assert_eq!(merged.len(), 3);
+        let e = merged.get(&key("host", 0)).unwrap();
+        assert_eq!(e.step_ns.count(), 5);
+        assert_eq!(e.runs, 2);
+        assert!((e.joules - 0.85).abs() < 1e-12);
+
+        // Layout-invariant energy fallback finds a sibling entry.
+        let j = merged.j_per_step_any_layout("refmlp-tiny", "sgd32", 8);
+        assert!(j.is_some());
+        assert_eq!(merged.j_per_step_any_layout("nope", "sgd32", 8), None);
+
+        let text = merged.render();
+        assert!(text.contains("refmlp-tiny/sgd32/host/s0/b8"));
+        assert!(text.contains("J/step"));
+    }
+
+    #[test]
+    fn save_load_and_reject_corruption() {
+        let tmp = crate::util::tmp::TempDir::new().unwrap();
+        let path = tmp.path().join("OBS_CATALOG.json");
+        // Missing file: load_or_empty bootstraps, load errors.
+        assert!(Catalog::load_or_empty(&path).unwrap().is_empty());
+        assert!(Catalog::load(&path).is_err());
+
+        let mut cat = Catalog::new();
+        cat.observe(key("host", 0), &obs_with(&[200], &[40], 0.1, 1));
+        cat.save(&path).unwrap();
+        let back = Catalog::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+
+        // Corrupt file: hard error, never silently reset.
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(Catalog::load_or_empty(&path).is_err());
+        // Wrong schema: named in the error.
+        std::fs::write(&path, "{\"schema\":\"obs_catalog/v9\",\"entries\":{}}").unwrap();
+        let err = format!("{:#}", Catalog::load_or_empty(&path).unwrap_err());
+        assert!(err.contains("obs_catalog/v9"), "{err}");
+        // Out-of-range bucket index inside an entry: rejected.
+        let mut bad = cat.to_json().to_string();
+        bad = bad.replace("\"buckets\":[[", "\"buckets\":[[9999,1],[");
+        std::fs::write(&path, bad).unwrap();
+        assert!(Catalog::load(&path).is_err());
+        // Map key disagreeing with entry fields: rejected.
+        let mut v = cat.to_json().as_obj().unwrap().clone();
+        let entries = v.get("entries").unwrap().as_obj().unwrap().clone();
+        let (_, entry) = entries.iter().next().unwrap();
+        let mut renamed = BTreeMap::new();
+        renamed.insert("wrong/key/host/s0/b8".to_string(), entry.clone());
+        v.insert("entries".into(), Json::Obj(renamed));
+        std::fs::write(&path, Json::Obj(v).to_string()).unwrap();
+        assert!(Catalog::load(&path).is_err());
+    }
+
+    #[test]
+    fn ingests_trace_span_rows() {
+        let obs = Obs::new(true);
+        obs.set_key(TraceKey {
+            family: "refmlp-tiny".into(),
+            method: "sgd32".into(),
+            backend: "host".into(),
+            shards: 0,
+            batch: 8,
+        });
+        for i in 0..10 {
+            obs.record(PHASE_STEP_EXEC, Duration::from_micros(200 + i));
+            obs.record(PHASE_AUGMENT, Duration::from_micros(40));
+        }
+        let text = obs.snapshot().unwrap().to_jsonl();
+        let mut cat = Catalog::new();
+        cat.ingest_trace(&text).unwrap();
+        let e = cat.get(&key("host", 0)).unwrap();
+        assert_eq!(e.runs, 1);
+        assert_eq!(e.step_ns.count(), 10);
+        assert_eq!(e.augment_ns.count(), 10);
+        assert!(e.step_mean_ns().unwrap() >= 200_000.0);
+        assert_eq!(e.j_per_step(), None, "traces carry no energy ledger");
+
+        // A summary-only trace (spans capped/stripped) is rejected —
+        // means can't honestly reconstruct a distribution.
+        let tail: String = text
+            .lines()
+            .filter(|l| l.contains("\"meta\"") || l.contains("\"summary\""))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert!(cat.ingest_trace(&tail).is_err());
+        // Not a trace at all.
+        assert!(cat.ingest_trace("{\"kind\":\"span\"}").is_err());
+    }
+
+    #[test]
+    fn plan_record_actuals_and_json() {
+        let mut p = PlanRecord {
+            backend: "sharded".into(),
+            shards: 2,
+            prefetch: true,
+            prefetch_depth: Some(3),
+            probed: false,
+            predicted_sps: 1000.0,
+            predicted_j_per_step: 0.2,
+            ..Default::default()
+        };
+        p.record_actuals(800.0, 0.25);
+        assert!((p.sps_rel_err - 0.25).abs() < 1e-12);
+        assert!((p.j_rel_err + 0.2).abs() < 1e-12);
+        let j = p.to_json();
+        assert_eq!(j.at(&["backend"]).as_str(), Some("sharded"));
+        assert_eq!(j.at(&["prefetch_depth"]).as_f64(), Some(3.0));
+        assert_eq!(j.at(&["actual_sps"]).as_f64(), Some(800.0));
+        // Unknown predicted energy pins rel err at 0, not -1.
+        let mut q = PlanRecord { predicted_sps: 10.0, ..Default::default() };
+        q.record_actuals(10.0, 0.5);
+        assert_eq!(q.j_rel_err, 0.0);
+        assert_eq!(q.to_json().at(&["prefetch_depth"]), &Json::Null);
+    }
+}

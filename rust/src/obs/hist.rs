@@ -128,6 +128,39 @@ impl Histogram {
         self.total = self.total.saturating_add(other.total);
         self.max = self.max.max(other.max);
     }
+
+    /// Non-empty buckets as `(index, count)` pairs in index order — the
+    /// sparse wire form the `obs_catalog/v1` file persists.
+    pub fn bucket_counts(&self) -> Vec<(usize, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+            .collect()
+    }
+
+    /// Rebuild a histogram from its persisted sparse form.  The sample
+    /// count is derived from the bucket sum (it is not independently
+    /// trusted); an out-of-range bucket index rejects the whole thing —
+    /// a corrupt catalog must fail loudly, not shift percentiles.
+    pub fn from_parts(buckets: &[(usize, u64)], total: u64, max: u64) -> Option<Histogram> {
+        let mut h = Histogram::new();
+        if buckets.is_empty() {
+            return Some(h);
+        }
+        h.counts = vec![0; NUM_BUCKETS];
+        for &(idx, c) in buckets {
+            if idx >= NUM_BUCKETS {
+                return None;
+            }
+            h.counts[idx] = h.counts[idx].checked_add(c)?;
+            h.count = h.count.checked_add(c)?;
+        }
+        h.total = total;
+        h.max = max;
+        Some(h)
+    }
 }
 
 #[cfg(test)]
@@ -209,5 +242,71 @@ mod tests {
         e.merge(&all);
         assert_eq!(e.count(), all.count());
         assert_eq!(e.percentile(0.5), all.percentile(0.5));
+    }
+
+    /// Cross-run calibration merges histograms whose ranges don't
+    /// overlap at all (e.g. a fast host run folded into a slow sharded
+    /// one).  Pin the quantile contract on the merged result: every
+    /// percentile still falls inside the ≤25% bucket-overestimate band
+    /// of the true pooled quantile, the median lands *between* the two
+    /// clusters' ranges, and p100 is the exact pooled max.
+    #[test]
+    fn merged_disjoint_ranges_keep_the_quantile_contract() {
+        let mut fast = Histogram::new();
+        let mut slow = Histogram::new();
+        for v in 0..1000u64 {
+            fast.observe(1_000 + v); // ~1µs cluster
+            slow.observe(1_000_000 + v * 100); // ~1ms cluster
+        }
+        let mut merged = fast.clone();
+        merged.merge(&slow);
+        assert_eq!(merged.count(), 2000);
+        assert_eq!(merged.max(), slow.max());
+        // p25 resolves inside the fast cluster, p75 inside the slow one.
+        let p25 = merged.percentile(0.25);
+        assert!((1_000.0..=2_500.0).contains(&p25), "p25 = {p25}");
+        let p75 = merged.percentile(0.75);
+        assert!((1_000_000.0..=1_375_000.0).contains(&p75), "p75 = {p75}");
+        // The median is the bucket holding sample #1000 — the last fast
+        // sample — so it must report from the fast cluster's top bucket,
+        // never leak into the empty gap or the slow cluster.
+        let p50 = merged.percentile(0.50);
+        assert!((1_999.0..=2_500.0).contains(&p50), "p50 = {p50}");
+        // p100 is exact (clamped to observed max, not a bucket bound).
+        assert_eq!(merged.percentile(1.0), slow.max() as f64);
+        // Merge order doesn't matter (commutative).
+        let mut rev = slow.clone();
+        rev.merge(&fast);
+        for p in [0.0, 0.25, 0.5, 0.75, 0.99, 1.0] {
+            assert_eq!(rev.percentile(p), merged.percentile(p), "p = {p}");
+        }
+    }
+
+    /// The sparse persisted form round-trips exactly, and corrupt parts
+    /// are rejected rather than absorbed.
+    #[test]
+    fn sparse_parts_round_trip_and_reject_corruption() {
+        let mut h = Histogram::new();
+        for v in [0u64, 7, 8, 950, 65_000, 1_000_000, u64::MAX / 3] {
+            h.observe(v);
+        }
+        let parts = h.bucket_counts();
+        assert!(!parts.is_empty());
+        assert!(parts.windows(2).all(|w| w[0].0 < w[1].0), "sorted by index");
+        let back = Histogram::from_parts(&parts, h.total(), h.max()).unwrap();
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.total(), h.total());
+        assert_eq!(back.max(), h.max());
+        for p in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(back.percentile(p), h.percentile(p), "p = {p}");
+        }
+        // Empty round-trip.
+        let e = Histogram::from_parts(&[], 0, 0).unwrap();
+        assert_eq!(e.count(), 0);
+        assert_eq!(e.percentile(0.5), 0.0);
+        // Out-of-range bucket index → rejected.
+        assert!(Histogram::from_parts(&[(NUM_BUCKETS, 1)], 1, 1).is_none());
+        // Counts that overflow u64 on summation → rejected.
+        assert!(Histogram::from_parts(&[(0, u64::MAX), (1, 1)], 0, 0).is_none());
     }
 }

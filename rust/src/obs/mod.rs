@@ -35,10 +35,13 @@
 //! rows are keyed by (family, method, backend, shards, batch) so the
 //! planned cost/energy catalog (ROADMAP) can ingest them directly.
 
+pub mod catalog;
 pub mod hist;
 pub mod report;
 
 pub use hist::Histogram;
+
+use catalog::PlanRecord;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -165,6 +168,10 @@ struct Inner {
     recoveries: Vec<RecoveryEvent>,
     seq: u64,
     key: TraceKey,
+    /// Chosen execution plan + predicted-vs-actual accounting (auto
+    /// backend runs only; `None` keeps the trace byte-identical to
+    /// pre-planner output).
+    plan: Option<PlanRecord>,
 }
 
 /// The shared collection point behind an [`Obs`] handle.
@@ -301,6 +308,31 @@ impl Obs {
         }
     }
 
+    /// The merged cross-thread histogram for one phase (the same merge
+    /// [`Obs::snapshot`] performs, but returning the raw histogram so
+    /// the cost catalog can fold it in without a parallel timing path).
+    /// `None` for an off handle or a phase never recorded.
+    pub fn phase_histogram(&self, phase: &str) -> Option<Histogram> {
+        let h = self.hub.as_ref()?;
+        let g = h.lock();
+        let mut merged = Histogram::new();
+        // BTreeMap iteration ⇒ fixed (thread, phase) merge order.
+        for ((_, p), hist) in g.phases.iter() {
+            if p == phase {
+                merged.merge(hist);
+            }
+        }
+        (merged.count() > 0).then_some(merged)
+    }
+
+    /// Attach the planner's chosen plan (with predicted-vs-actual
+    /// accounting) to this run's trace.
+    pub fn set_plan(&self, plan: PlanRecord) {
+        if let Some(h) = &self.hub {
+            h.lock().plan = Some(plan);
+        }
+    }
+
     /// Record one supervised-recovery attempt as a structured event.
     pub fn recovery(&self, site: &str, attempt: u64, backoff_ms: u64) {
         if let Some(h) = &self.hub {
@@ -349,6 +381,7 @@ impl Obs {
             events: g.events.clone(),
             recoveries: g.recoveries.clone(),
             dropped_events: g.dropped_events,
+            plan: g.plan.clone(),
         })
     }
 }
@@ -443,12 +476,15 @@ pub struct RunTrace {
     pub recoveries: Vec<RecoveryEvent>,
     /// Spans past [`MAX_EVENTS`] that aggregated but were not logged.
     pub dropped_events: u64,
+    /// Chosen execution plan with predicted-vs-actual accounting
+    /// (planned runs only).
+    pub plan: Option<PlanRecord>,
 }
 
 impl RunTrace {
-    /// Serialize as `obs_trace/v1` JSONL: one `meta` line, then `span`
-    /// events in record order, `recovery` events, final `counter`
-    /// values, and one `summary` line per phase.
+    /// Serialize as `obs_trace/v1` JSONL: one `meta` line, an optional
+    /// `plan` line, then `span` events in record order, `recovery`
+    /// events, final `counter` values, and one `summary` line per phase.
     pub fn to_jsonl(&self) -> String {
         let mut out = String::new();
         let mut line = |j: Json| {
@@ -466,6 +502,11 @@ impl RunTrace {
             ("wall_ms", Json::num(self.wall_ms)),
             ("dropped_events", Json::num(self.dropped_events as f64)),
         ]));
+        if let Some(p) = &self.plan {
+            let mut row = p.to_json().as_obj().cloned().unwrap_or_default();
+            row.insert("kind".into(), Json::str("plan"));
+            line(Json::Obj(row));
+        }
         for e in &self.events {
             line(Json::obj(vec![
                 ("kind", Json::str("span")),

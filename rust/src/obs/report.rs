@@ -40,6 +40,8 @@ pub struct TraceReport {
     pub counters: Vec<(String, u64)>,
     /// (site, attempt, backoff_ms) per supervised recovery.
     pub recoveries: Vec<(String, u64, u64)>,
+    /// The planner's `plan` row (auto-backend runs), verbatim.
+    pub plan: Option<Json>,
 }
 
 /// Parse + aggregate an `obs_trace/v1` JSONL document.
@@ -49,6 +51,7 @@ pub fn aggregate(text: &str) -> Result<TraceReport> {
     let mut summaries: Vec<Json> = Vec::new();
     let mut counters = Vec::new();
     let mut recoveries = Vec::new();
+    let mut plan: Option<Json> = None;
 
     for (i, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
@@ -77,6 +80,11 @@ pub fn aggregate(text: &str) -> Result<TraceReport> {
                 v.at(&["attempt"]).as_u64().unwrap_or(0),
                 v.at(&["backoff_ms"]).as_u64().unwrap_or(0),
             )),
+            Some("plan") => {
+                let mut row = v.as_obj().cloned().unwrap_or_default();
+                row.remove("kind");
+                plan = Some(Json::Obj(row));
+            }
             other => bail!("trace line {}: unknown kind {other:?}", i + 1),
         }
     }
@@ -155,6 +163,7 @@ pub fn aggregate(text: &str) -> Result<TraceReport> {
         rows,
         counters,
         recoveries,
+        plan,
     })
 }
 
@@ -197,7 +206,69 @@ impl TraceReport {
                 ));
             }
         }
+        if let Some(p) = &self.plan {
+            out.push_str(&format!(
+                "plan: backend={} shards={} prefetch_depth={} predicted {:.1} sps / actual {:.1} sps ({:+.1}%)\n",
+                p.at(&["backend"]).as_str().unwrap_or("?"),
+                p.at(&["shards"]).as_u64().unwrap_or(0),
+                p.at(&["prefetch_depth"])
+                    .as_u64()
+                    .map(|d| d.to_string())
+                    .unwrap_or_else(|| "off".into()),
+                p.at(&["predicted_sps"]).as_f64().unwrap_or(0.0),
+                p.at(&["actual_sps"]).as_f64().unwrap_or(0.0),
+                p.at(&["sps_rel_err"]).as_f64().unwrap_or(0.0) * 100.0,
+            ));
+        }
         out
+    }
+
+    /// Machine-readable form (`e2train trace-report --json`): the same
+    /// aggregation as the table, one JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("schema", Json::str("trace_report/v1")),
+            ("key", Json::str(&self.key_line)),
+            ("wall_ms", Json::num(self.wall_ms)),
+            ("dropped_events", Json::num(self.dropped_events as f64)),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|r| {
+                    Json::obj(vec![
+                        ("phase", Json::str(&r.phase)),
+                        ("count", Json::num(r.count as f64)),
+                        ("total_ms", Json::num(r.total_ms)),
+                        ("mean_ms", Json::num(r.mean_ms)),
+                        ("p50_ms", Json::num(r.p50_ms)),
+                        ("p99_ms", Json::num(r.p99_ms)),
+                        ("pct_of_run", Json::num(r.pct_of_run)),
+                    ])
+                })),
+            ),
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "recoveries",
+                Json::arr(self.recoveries.iter().map(|(site, attempt, backoff_ms)| {
+                    Json::obj(vec![
+                        ("site", Json::str(site)),
+                        ("attempt", Json::num(*attempt as f64)),
+                        ("backoff_ms", Json::num(*backoff_ms as f64)),
+                    ])
+                })),
+            ),
+        ];
+        if let Some(p) = &self.plan {
+            pairs.push(("plan", p.clone()));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -258,6 +329,54 @@ mod tests {
         let step = rep.rows.iter().find(|r| r.phase == PHASE_STEP_EXEC).unwrap();
         assert_eq!(step.count, 10);
         assert!(step.total_ms > 0.0);
+    }
+
+    #[test]
+    fn json_output_mirrors_the_table_and_carries_the_plan() {
+        let obs = Obs::new(true);
+        obs.set_key(TraceKey {
+            family: "refmlp-tiny".into(),
+            method: "sgd32".into(),
+            backend: "resident".into(),
+            shards: 0,
+            batch: 8,
+        });
+        obs.record(PHASE_STEP_EXEC, Duration::from_micros(300));
+        obs.set_plan(crate::obs::catalog::PlanRecord {
+            backend: "resident".into(),
+            shards: 0,
+            prefetch: true,
+            prefetch_depth: Some(2),
+            predicted_sps: 1200.0,
+            actual_sps: 1000.0,
+            sps_rel_err: 0.2,
+            ..Default::default()
+        });
+        let rep = aggregate(&obs.snapshot().unwrap().to_jsonl()).unwrap();
+        let plan = rep.plan.as_ref().expect("plan row survives aggregation");
+        assert_eq!(plan.at(&["backend"]).as_str(), Some("resident"));
+        assert_eq!(plan.at(&["prefetch_depth"]).as_f64(), Some(2.0));
+        assert!(rep.render().contains("plan: backend=resident"));
+
+        let j = rep.to_json();
+        assert_eq!(j.at(&["schema"]).as_str(), Some("trace_report/v1"));
+        assert_eq!(j.at(&["key"]).as_str(), Some(rep.key_line.as_str()));
+        let rows = j.at(&["rows"]).as_arr().unwrap();
+        assert_eq!(rows.len(), rep.rows.len());
+        assert_eq!(rows[0].at(&["phase"]).as_str(), Some(PHASE_STEP_EXEC));
+        assert_eq!(
+            rows[0].at(&["count"]).as_u64(),
+            Some(rep.rows[0].count)
+        );
+        assert_eq!(j.at(&["plan", "predicted_sps"]).as_f64(), Some(1200.0));
+        // And it parses back (single-line machine format).
+        let text = j.to_string();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), j);
+
+        // A plan-less report omits the plan key entirely.
+        let rep2 = aggregate(&sample_trace()).unwrap();
+        assert!(rep2.plan.is_none());
+        assert_eq!(rep2.to_json().at(&["plan"]), &Json::Null);
     }
 
     #[test]

@@ -143,6 +143,12 @@ pub fn prepare_backend<'p>(
             shards,
             init,
         )?),
+        // The planner (`coordinator::planner`) replaces Auto with a
+        // concrete choice before any backend is prepared; reaching here
+        // means a caller skipped planning.
+        BackendChoice::Auto => bail!(
+            "backend \"auto\" must be resolved by the planner before prepare_backend"
+        ),
     })
 }
 

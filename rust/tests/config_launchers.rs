@@ -112,6 +112,43 @@ fn launcher_set_covers_shards_checkpoint_and_backend_knobs() {
         backends.contains(&BackendChoice::Sharded),
         "no launcher pins backend: \"sharded\""
     );
+    // ...and the planned spelling, with its catalog + budget knobs.
+    assert!(
+        backends.contains(&BackendChoice::Auto),
+        "no launcher hands the layout to the planner (backend: \"auto\")"
+    );
+}
+
+/// The planned launcher: `backend: "auto"` owns the whole layout, so an
+/// explicit `shards` is a contradiction, and `energy_budget_j` is a
+/// planner hint that means nothing without it.
+#[test]
+fn auto_backend_launcher_is_strictly_validated() {
+    let path = configs_dir().join("auto-backend.json");
+    let base = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let cfg = RunCfg::load(&path).unwrap();
+    assert_eq!(cfg.backend, Some(BackendChoice::Auto));
+    assert_eq!(cfg.resolved_backend(), BackendChoice::Auto);
+    assert_eq!(cfg.shards, 0, "auto accepts no explicit shards");
+    assert!(cfg.energy_budget_j.is_some(), "launcher shows the budget hint");
+    assert!(cfg.catalog.is_some(), "launcher pins the catalog file");
+
+    // auto + explicit shards: the planner owns the shard count.
+    let mut top = base.as_obj().unwrap().clone();
+    top.insert("shards".into(), Json::num(2.0));
+    let err = format!("{:#}", RunCfg::from_json(&Json::Obj(top)).unwrap_err());
+    assert!(err.contains("auto") && err.contains("shards"), "unexpected error: {err}");
+
+    // a budget without auto is a dead hint, rejected not ignored.
+    let mut top = base.as_obj().unwrap().clone();
+    top.insert("backend".into(), Json::str("resident"));
+    let err = format!("{:#}", RunCfg::from_json(&Json::Obj(top)).unwrap_err());
+    assert!(err.contains("energy_budget_j"), "unexpected error: {err}");
+
+    // a non-positive budget is rejected outright.
+    let mut top = base.as_obj().unwrap().clone();
+    top.insert("energy_budget_j".into(), Json::num(0.0));
+    assert!(RunCfg::from_json(&Json::Obj(top)).is_err());
 }
 
 /// `cfg.backend` validation: unknown values, `sharded` without a shard

@@ -1,0 +1,383 @@
+//! The planning-layer contract, pinned end to end:
+//!
+//! * the `obs_catalog/v1` JSON schema, field by field (like
+//!   tests/trace_schema.rs pins `obs_trace/v1`) — external tooling and
+//!   `e2train catalog --merge/--ingest` hang off these exact shapes;
+//! * `backend = "auto"` on an **empty** catalog runs calibration probes,
+//!   bootstraps the catalog file, and still completes the run;
+//! * planning is deterministic: the same catalog + config picks the
+//!   same plan, twice;
+//! * a planned run is **bitwise identical** to the same layout requested
+//!   explicitly — for every layout the planner can choose (host,
+//!   resident, sharded S ∈ {1, 2, 3}), forced by seeding the catalog;
+//! * predicted-vs-actual accounting lands in `RunMetrics::plan` and the
+//!   run trace's `plan` row, and the catalog is recalibrated with the
+//!   run's own measurements at end of run;
+//! * a corrupt catalog file fails the run cleanly instead of silently
+//!   erasing every calibration.
+
+use std::path::Path;
+
+use e2train::config::{BackendChoice, DataCfg, RunCfg};
+use e2train::coordinator::{RunOutcome, Trainer};
+use e2train::obs::catalog::{Catalog, CatalogKey, Observation, CATALOG_SCHEMA};
+use e2train::runtime::{write_reference_family, Engine, RefFamilySpec};
+use e2train::util::json::{parse, Json};
+use e2train::util::tmp::TempDir;
+
+const FAM: &str = "refmlp-tiny";
+/// `RefFamilySpec::tiny()` trains at batch 8 — catalog keys must match.
+const BATCH: usize = 8;
+
+/// Every layout the planner enumerates for a mask-free method, in its
+/// own enumeration order.
+const LAYOUTS: &[(&str, usize)] = &[
+    ("host", 0),
+    ("resident", 0),
+    ("sharded", 1),
+    ("sharded", 2),
+    ("sharded", 3),
+];
+
+fn key(method: &str, backend: &str, shards: usize) -> CatalogKey {
+    CatalogKey {
+        family: FAM.into(),
+        method: method.into(),
+        backend: backend.into(),
+        shards,
+        batch: BATCH,
+    }
+}
+
+/// A measurement batch of four identical step/augment observations —
+/// histogram means stay exact, so predicted orderings are exact too.
+fn measured(step_us: u64, aug_us: u64, joules: f64, steps: u64) -> Observation {
+    let mut o = Observation { joules, joule_steps: steps, ..Default::default() };
+    for _ in 0..4 {
+        o.step_ns.observe(step_us * 1000);
+        o.augment_ns.observe(aug_us * 1000);
+    }
+    o
+}
+
+/// A full catalog where `favorite` is strictly the fastest layout and
+/// everything else is measurably slower — forcing the planner's pick.
+fn catalog_favoring(method: &str, favorite: (&str, usize)) -> Catalog {
+    let mut cat = Catalog::new();
+    for (i, &(backend, shards)) in LAYOUTS.iter().enumerate() {
+        let step_us = if (backend, shards) == favorite { 100 } else { 400 + 100 * i as u64 };
+        cat.observe(key(method, backend, shards), &measured(step_us, 20, 0.8, 4));
+    }
+    cat
+}
+
+fn ref_cfg(artifacts: &Path, method: &str, iters: u64) -> RunCfg {
+    let mut cfg = RunCfg::quick(FAM, method, iters);
+    cfg.artifacts_dir = artifacts.to_path_buf();
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 128, n_test: 40, seed: 0 };
+    cfg.eval_every = 8;
+    cfg
+}
+
+/// The planned configuration: `backend = "auto"` with the catalog pinned
+/// to a temp path so tests never touch the working directory.
+fn auto_cfg(mut cfg: RunCfg, catalog: &Path) -> RunCfg {
+    cfg.backend = Some(BackendChoice::Auto);
+    cfg.shards = 0;
+    cfg.catalog = Some(catalog.to_path_buf());
+    cfg
+}
+
+/// Full bitwise comparison of two run outcomes (everything except wall
+/// time, prefetch depth, and the backend attribution itself) — the same
+/// contract tests/backend_matrix.rs pins across explicit layouts.
+fn assert_outcomes_identical(a: &RunOutcome, b: &RunOutcome, ctx: &str) {
+    assert_eq!(a.metrics.final_test_acc, b.metrics.final_test_acc, "{ctx}: acc");
+    assert_eq!(
+        a.metrics.final_test_acc_top5, b.metrics.final_test_acc_top5,
+        "{ctx}: top5"
+    );
+    assert_eq!(a.metrics.final_loss, b.metrics.final_loss, "{ctx}: loss");
+    assert_eq!(a.metrics.total_joules, b.metrics.total_joules, "{ctx}: joules");
+    assert_eq!(a.metrics.executed_macs, b.metrics.executed_macs, "{ctx}: macs");
+    assert_eq!(a.metrics.steps_run, b.metrics.steps_run, "{ctx}: steps");
+    assert_eq!(a.metrics.steps_skipped, b.metrics.steps_skipped, "{ctx}: skipped");
+    assert_eq!(
+        a.metrics.mean_gate_fracs, b.metrics.mean_gate_fracs,
+        "{ctx}: gate means"
+    );
+    assert_eq!(a.metrics.mean_psg_frac, b.metrics.mean_psg_frac, "{ctx}: psg");
+    assert_eq!(a.metrics.trace.len(), b.metrics.trace.len(), "{ctx}: trace len");
+    for (x, y) in a.metrics.trace.iter().zip(b.metrics.trace.iter()) {
+        assert_eq!(x.iter, y.iter, "{ctx}: trace iter");
+        assert_eq!(x.loss, y.loss, "{ctx}: trace loss @{}", x.iter);
+        assert_eq!(x.train_acc, y.train_acc, "{ctx}: trace acc @{}", x.iter);
+        assert_eq!(x.joules, y.joules, "{ctx}: trace joules @{}", x.iter);
+        assert_eq!(x.test_acc, y.test_acc, "{ctx}: trace eval @{}", x.iter);
+    }
+    assert_eq!(a.ledger.steps_charged, b.ledger.steps_charged, "{ctx}: ledger steps");
+    assert_eq!(a.ledger.macs, b.ledger.macs, "{ctx}: ledger macs");
+    assert_eq!(a.ledger.trace, b.ledger.trace, "{ctx}: ledger rows");
+    a.state.assert_bitwise_eq(&b.state);
+}
+
+/// Exhaustive field-set check: missing AND extra fields both fail.
+fn assert_fields(v: &Json, what: &str, want: &[&str]) {
+    let obj = v.as_obj().unwrap_or_else(|| panic!("{what} not an object"));
+    let mut got: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+    got.sort_unstable();
+    let mut want: Vec<&str> = want.to_vec();
+    want.sort_unstable();
+    assert_eq!(got, want, "{what} field set drifted");
+}
+
+/// `obs_catalog/v1`, pinned field by field.  Rename or drop a field and
+/// this is the tripwire that says "bump the schema string".
+#[test]
+fn catalog_json_matches_the_golden_shape() {
+    let mut cat = Catalog::new();
+    cat.observe(key("sgd32", "host", 0), &measured(200, 40, 0.8, 4));
+    let mut probe = Observation { probe: true, ..Default::default() };
+    probe.step_ns.observe(150_000);
+    cat.observe(key("sgd32", "sharded", 2), &probe);
+
+    let j = cat.to_json();
+    assert_fields(&j, "catalog", &["schema", "entries"]);
+    assert_eq!(j.at(&["schema"]).as_str(), Some(CATALOG_SCHEMA));
+    assert_eq!(j.at(&["schema"]).as_str(), Some("obs_catalog/v1"));
+
+    // Entry ids are "{family}/{method}/{backend}/s{shards}/b{batch}",
+    // in BTreeMap order (deterministic file layout).
+    let entries = j.at(&["entries"]).as_obj().unwrap();
+    let ids: Vec<&str> = entries.keys().map(|k| k.as_str()).collect();
+    assert_eq!(
+        ids,
+        vec!["refmlp-tiny/sgd32/host/s0/b8", "refmlp-tiny/sgd32/sharded/s2/b8"]
+    );
+    for (id, e) in entries {
+        assert_fields(
+            e,
+            id,
+            &[
+                "family", "method", "backend", "shards", "batch", "runs", "probes",
+                "step_ns", "augment_ns", "joules", "joule_steps",
+            ],
+        );
+        assert_fields(e.at(&["step_ns"]), "step_ns", &["buckets", "total", "max"]);
+        assert_fields(e.at(&["augment_ns"]), "augment_ns", &["buckets", "total", "max"]);
+    }
+
+    let host = &entries["refmlp-tiny/sgd32/host/s0/b8"];
+    assert_eq!(host.at(&["family"]).as_str(), Some(FAM));
+    assert_eq!(host.at(&["backend"]).as_str(), Some("host"));
+    assert_eq!(host.at(&["shards"]).as_f64(), Some(0.0));
+    assert_eq!(host.at(&["batch"]).as_f64(), Some(8.0));
+    assert_eq!(host.at(&["runs"]).as_f64(), Some(1.0));
+    assert_eq!(host.at(&["probes"]).as_f64(), Some(0.0));
+    assert_eq!(host.at(&["joules"]).as_f64(), Some(0.8));
+    assert_eq!(host.at(&["joule_steps"]).as_f64(), Some(4.0));
+    // Histogram totals are exact sums; 4 × 200 µs land in one bucket.
+    assert_eq!(host.at(&["step_ns", "total"]).as_f64(), Some(800_000.0));
+    assert_eq!(host.at(&["step_ns", "max"]).as_f64(), Some(200_000.0));
+    let buckets = host.at(&["step_ns", "buckets"]).as_arr().unwrap();
+    assert_eq!(buckets.len(), 1, "identical observations share a bucket");
+    let pair = buckets[0].as_arr().unwrap();
+    assert_eq!(pair.len(), 2, "bucket is an [index, count] pair");
+    assert_eq!(pair[1].as_f64(), Some(4.0));
+    // Probe provenance is kept separate from run provenance.
+    let probed = &entries["refmlp-tiny/sgd32/sharded/s2/b8"];
+    assert_eq!(probed.at(&["runs"]).as_f64(), Some(0.0));
+    assert_eq!(probed.at(&["probes"]).as_f64(), Some(1.0));
+
+    // The serialized text round-trips bitwise through our own parser.
+    let text = j.to_string();
+    let back = Catalog::from_json(&parse(&text).unwrap()).unwrap();
+    assert_eq!(back.to_json().to_string(), text);
+}
+
+/// First `auto` run ever: nothing measured, so the planner probes every
+/// candidate, bootstraps the catalog file, and the run completes with
+/// full predicted-vs-actual accounting.
+#[test]
+fn auto_on_empty_catalog_probes_and_bootstraps_the_file() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let cat_path = tmp.path().join("OBS_CATALOG.json");
+
+    let cfg = auto_cfg(ref_cfg(tmp.path(), "sgd32", 24), &cat_path);
+    let out = Trainer::new(&engine, cfg).unwrap().run(None).unwrap();
+
+    let plan = out.metrics.plan.as_ref().expect("auto run records a plan");
+    assert!(plan.probed, "empty catalog must force calibration probes");
+    assert!(plan.predicted_sps > 0.0, "probe-seeded prediction");
+    assert!(plan.actual_sps > 0.0, "measured throughput");
+    assert!(plan.actual_j_per_step > 0.0, "measured energy");
+    assert_eq!(out.metrics.backend, plan.backend, "attribution matches plan");
+    assert_eq!(out.metrics.shards, plan.shards);
+
+    // The file exists and holds a probe entry per candidate layout plus
+    // the completed run folded under the chosen key.
+    let cat = Catalog::load(&cat_path).expect("catalog bootstrapped");
+    for &(backend, shards) in LAYOUTS {
+        let e = cat.get(&key("sgd32", backend, shards)).unwrap_or_else(|| {
+            panic!("no catalog entry for probed candidate {backend}/s{shards}")
+        });
+        assert!(e.probes >= 1, "{backend}/s{shards} probe recorded");
+        assert!(e.step_mean_ns().is_some());
+    }
+    let chosen = cat.get(&key("sgd32", &plan.backend, plan.shards)).unwrap();
+    assert_eq!(chosen.runs, 1, "completed run recalibrated the chosen entry");
+    assert!(chosen.joule_steps > 0, "run folded its energy in");
+}
+
+/// Same catalog + same config ⇒ same plan, and the run itself is
+/// bitwise reproducible.  Also pins end-of-run recalibration: the
+/// chosen entry's run count grows by exactly one.
+#[test]
+fn planning_is_deterministic_for_a_given_catalog() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let seeded = catalog_favoring("sgd32", ("resident", 0));
+
+    let mut outs = Vec::new();
+    for i in 0..2 {
+        // A fresh copy of the identical seeded file each time — the
+        // previous run recalibrated its own copy with live timings.
+        let cat_path = tmp.path().join(format!("cat-{i}.json"));
+        seeded.save(&cat_path).unwrap();
+        let cfg = auto_cfg(ref_cfg(tmp.path(), "sgd32", 24), &cat_path);
+        outs.push(Trainer::new(&engine, cfg).unwrap().run(None).unwrap());
+
+        let after = Catalog::load(&cat_path).unwrap();
+        let chosen = after.get(&key("sgd32", "resident", 0)).unwrap();
+        assert_eq!(chosen.runs, 2, "seeded run + this run");
+        assert_eq!(chosen.probes, 0, "fully-seeded catalog never probes");
+    }
+    let (a, b) = (&outs[0], &outs[1]);
+    let (pa, pb) = (a.metrics.plan.as_ref().unwrap(), b.metrics.plan.as_ref().unwrap());
+    assert_eq!(pa.backend, pb.backend, "same catalog, same pick");
+    assert_eq!(pa.shards, pb.shards);
+    assert_eq!(pa.prefetch, pb.prefetch);
+    assert_eq!(pa.prefetch_depth, pb.prefetch_depth);
+    assert!(!pa.probed && !pb.probed);
+    assert_eq!(pa.predicted_sps, pb.predicted_sps, "predictions are pure lookups");
+    assert_eq!(pa.predicted_j_per_step, pb.predicted_j_per_step);
+    assert_outcomes_identical(a, b, "planned run repeated");
+}
+
+/// The core determinism claim: for **every** layout the planner can
+/// choose, `backend = "auto"` (forced onto that layout by a seeded
+/// catalog) is bitwise identical to the same layout requested
+/// explicitly.  Plan application is a pure layout choice.
+#[test]
+fn auto_is_bitwise_identical_to_the_explicit_layout() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    for &(label, shards) in LAYOUTS {
+        let cat_path = tmp.path().join(format!("force-{label}-{shards}.json"));
+        catalog_favoring("sgd32", (label, shards)).save(&cat_path).unwrap();
+
+        let auto = Trainer::new(&engine, auto_cfg(ref_cfg(tmp.path(), "sgd32", 24), &cat_path))
+            .unwrap()
+            .run(None)
+            .unwrap();
+        // The seeding worked: the planner picked the layout we forced.
+        assert_eq!(auto.metrics.backend, label, "forced pick");
+        assert_eq!(auto.metrics.shards, shards, "forced shard count");
+        let plan = auto.metrics.plan.as_ref().unwrap();
+        assert!(!plan.probed, "fully-seeded catalog plans without probing");
+        assert!(plan.prefetch, "measured augment cost keeps the pipeline on");
+        assert!(plan.prefetch_depth.is_some(), "planned depth is pinned");
+        assert!(plan.predicted_j_per_step > 0.0, "seeded energy predicts J/step");
+
+        let mut explicit_cfg = ref_cfg(tmp.path(), "sgd32", 24);
+        explicit_cfg.backend = Some(match label {
+            "host" => BackendChoice::Host,
+            "resident" => BackendChoice::Resident,
+            _ => BackendChoice::Sharded,
+        });
+        explicit_cfg.shards = shards;
+        let explicit = Trainer::new(&engine, explicit_cfg).unwrap().run(None).unwrap();
+        assert!(explicit.metrics.plan.is_none(), "explicit runs carry no plan");
+        assert_outcomes_identical(&auto, &explicit, &format!("auto vs {label}/S{shards}"));
+    }
+}
+
+/// A traced planned run carries the `plan` row — right after `meta`,
+/// with the exact `PlanRecord` field set, agreeing with
+/// `RunMetrics::plan`.
+#[test]
+fn run_trace_carries_the_plan_row() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let cat_path = tmp.path().join("cat.json");
+    catalog_favoring("sgd32", ("resident", 0)).save(&cat_path).unwrap();
+
+    let trace_path = tmp.path().join("trace.jsonl");
+    let mut cfg = auto_cfg(ref_cfg(tmp.path(), "sgd32", 24), &cat_path);
+    cfg.trace_out = Some(trace_path.clone());
+    let out = Trainer::new(&engine, cfg).unwrap().run(None).unwrap();
+
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let rows: Vec<Json> = text.lines().map(|l| parse(l).unwrap()).collect();
+    assert_eq!(rows[0].at(&["kind"]).as_str(), Some("meta"));
+    let row = &rows[1];
+    assert_eq!(row.at(&["kind"]).as_str(), Some("plan"), "plan row follows meta");
+    assert_fields(
+        row,
+        "plan",
+        &[
+            "kind", "backend", "shards", "prefetch", "prefetch_depth", "probed",
+            "predicted_sps", "predicted_j_per_step", "actual_sps", "actual_j_per_step",
+            "sps_rel_err", "j_rel_err",
+        ],
+    );
+    assert_eq!(
+        rows.iter().filter(|r| r.at(&["kind"]).as_str() == Some("plan")).count(),
+        1,
+        "exactly one plan row"
+    );
+
+    // The trace row and the metrics record are the same accounting.
+    let plan = out.metrics.plan.as_ref().unwrap();
+    assert_eq!(row.at(&["backend"]).as_str(), Some(plan.backend.as_str()));
+    assert_eq!(row.at(&["shards"]).as_f64(), Some(plan.shards as f64));
+    assert_eq!(row.at(&["predicted_sps"]).as_f64(), Some(plan.predicted_sps));
+    assert_eq!(row.at(&["actual_sps"]).as_f64(), Some(plan.actual_sps));
+    assert_eq!(row.at(&["sps_rel_err"]).as_f64(), Some(plan.sps_rel_err));
+    assert_eq!(row.at(&["j_rel_err"]).as_f64(), Some(plan.j_rel_err));
+    // Actuals were really measured, and the relative errors tie the
+    // prediction to them: err = (pred - act) / act.
+    assert!(plan.actual_sps > 0.0);
+    let want = (plan.predicted_sps - plan.actual_sps) / plan.actual_sps;
+    assert!((plan.sps_rel_err - want).abs() < 1e-12);
+}
+
+/// A corrupt catalog is a hard, clean error — never a silent reset that
+/// would erase every calibration.
+#[test]
+fn corrupt_catalog_fails_the_run_cleanly() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let cat_path = tmp.path().join("cat.json");
+    std::fs::write(&cat_path, "{definitely not a catalog").unwrap();
+
+    let cfg = auto_cfg(ref_cfg(tmp.path(), "sgd32", 8), &cat_path);
+    let err = match Trainer::new(&engine, cfg).unwrap().run(None) {
+        Ok(_) => panic!("corrupt catalog must fail the run"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("catalog"), "error names the catalog: {msg}");
+    // The corrupt file is left untouched for diagnosis.
+    assert_eq!(
+        std::fs::read_to_string(&cat_path).unwrap(),
+        "{definitely not a catalog"
+    );
+}

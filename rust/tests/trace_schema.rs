@@ -153,6 +153,50 @@ fn write_emits_the_same_bytes_as_to_jsonl() {
     assert_eq!(std::fs::read_to_string(&path).unwrap(), trace.to_jsonl());
 }
 
+/// When the planner recorded a plan, it becomes the second row — right
+/// after `meta`, before the span log — with the exact `PlanRecord`
+/// field set.  Planless traces (everything above) carry no such row, so
+/// the schema grows additively.
+#[test]
+fn plan_row_follows_meta_when_a_plan_was_recorded() {
+    use e2train::obs::catalog::PlanRecord;
+
+    let obs = Obs::new(true);
+    obs.set_key(TraceKey {
+        family: "refmlp-tiny".into(),
+        method: "sgd32".into(),
+        backend: "resident".into(),
+        shards: 0,
+        batch: 8,
+    });
+    obs.record(obs::PHASE_STEP_EXEC, Duration::from_micros(100));
+    obs.set_plan(PlanRecord {
+        backend: "resident".into(),
+        prefetch: true,
+        prefetch_depth: Some(2),
+        predicted_sps: 1000.0,
+        ..Default::default()
+    });
+    let text = obs.snapshot().unwrap().to_jsonl();
+    let rows: Vec<Json> = text.lines().map(|l| parse(l).unwrap()).collect();
+
+    let kinds: Vec<&str> =
+        rows.iter().map(|r| r.at(&["kind"]).as_str().unwrap()).collect();
+    assert_eq!(kinds, vec!["meta", "plan", "span", "summary"], "plan row position");
+    assert_fields(
+        &rows[1],
+        "plan",
+        &[
+            "kind", "backend", "shards", "prefetch", "prefetch_depth", "probed",
+            "predicted_sps", "predicted_j_per_step", "actual_sps",
+            "actual_j_per_step", "sps_rel_err", "j_rel_err",
+        ],
+    );
+    assert_eq!(rows[1].at(&["backend"]).as_str(), Some("resident"));
+    assert_eq!(rows[1].at(&["prefetch_depth"]).as_f64(), Some(2.0));
+    assert_eq!(rows[1].at(&["predicted_sps"]).as_f64(), Some(1000.0));
+}
+
 /// An aggregate-only hub (no `--trace-out`) produces no span rows at
 /// all: the event log costs nothing unless a trace was requested.
 #[test]
