@@ -1,10 +1,11 @@
 //! Sharded-training scaling bench (in-repo harness; criterion is
 //! unavailable offline): steps/sec through the data-parallel sharded
-//! path at shard counts {1, 2, 4} on the bench-scale reference family,
-//! plus the single-device resident baseline.  Writes `BENCH_shard.json`
-//! at the repo root (schema `bench_shard/v1`, see PERF.md) — the
-//! canonical release-profile record; the tier-1 smoke test writes debug
-//! numbers and never overwrites a release-sourced file.
+//! path at shard counts {1, 2, 4} × reducer overlap {off, on} on the
+//! bench-scale reference family, plus the single-device resident
+//! baseline.  Writes `BENCH_shard.json` at the repo root (schema
+//! `bench_shard/v1`, see PERF.md) — the canonical release-profile
+//! record; the tier-1 smoke test writes debug numbers and never
+//! overwrites a release-sourced file.
 
 use std::path::PathBuf;
 
@@ -23,6 +24,7 @@ fn main() {
         shard_counts: vec![1, 2, 4],
         warmup_steps: 5,
         steps: 60,
+        accum: 2,
         seed: 0,
         source: "bench_shard (release profile)".into(),
     };

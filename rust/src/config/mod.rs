@@ -182,6 +182,14 @@ pub struct RunCfg {
     /// fingerprint: backends are bitwise interchangeable, so a
     /// checkpoint taken under one may resume under another.
     pub backend: Option<BackendChoice>,
+    /// Gradient accumulation: micro-batches per logical step on the
+    /// sharded backend (pipelined through the reducer thread,
+    /// `runtime::shard`).  `1` (the default) reduces the whole batch in
+    /// one job.  A pure layout knob — any value is bitwise identical to
+    /// `1` (tests/reduce_matrix.rs) — so, like `shards`, it stays
+    /// outside the determinism fingerprint.  Values > 1 require the
+    /// resolved backend to be sharded ([`RunCfg::validate_backend`]).
+    pub accum: usize,
     /// Durable checkpoint cadence + registry (`checkpoint` subsystem):
     /// when `checkpoint.every > 0`, the trainer publishes a `ckpt/v1`
     /// file at every boundary and `e2train resume <dir>` continues the
@@ -242,6 +250,7 @@ impl RunCfg {
             prefetch: true,
             shards: 0,
             backend: None,
+            accum: 1,
             checkpoint: CkptCfg::default(),
             faults: FaultsCfg::default(),
             trace_out: None,
@@ -263,11 +272,24 @@ impl RunCfg {
         }
     }
 
-    /// Reject contradictory backend/shards combinations.  Called by the
-    /// JSON parser *and* by `Trainer::new`, so launcher files and
+    /// Reject contradictory backend/shards/accum combinations.  Called
+    /// by the JSON parser *and* by `Trainer::new`, so launcher files and
     /// programmatic configs fail with the same clean message instead of
     /// one knob silently superseding the other.
     pub fn validate_backend(&self) -> Result<()> {
+        if self.accum == 0 {
+            return Err(anyhow!(
+                "accum must be >= 1 (micro-batches per training step)"
+            ));
+        }
+        if self.accum > 1 && self.resolved_backend() != BackendChoice::Sharded {
+            return Err(anyhow!(
+                "accum = {} requires the sharded backend (gradient \
+                 accumulation is a sharded-training knob; set backend \
+                 \"sharded\" + `shards`, or drop `accum`)",
+                self.accum
+            ));
+        }
         match self.backend {
             Some(BackendChoice::Sharded) if self.shards == 0 => Err(anyhow!(
                 "backend \"sharded\" needs shards >= 1 (set the `shards` knob)"
@@ -368,6 +390,7 @@ impl RunCfg {
                     None => Json::Null,
                 },
             ),
+            ("accum", Json::num(self.accum as f64)),
             (
                 "checkpoint",
                 Json::obj(vec![
@@ -449,7 +472,7 @@ impl RunCfg {
 
     /// JSON of exactly the fields the bitwise-resume contract depends
     /// on.  Execution-layout knobs (`backend` / `resident` / `prefetch`
-    /// / `shards`) are deliberately **excluded**: the backends are
+    /// / `shards` / `accum`) are deliberately **excluded**: the backends are
     /// bitwise interchangeable (tests/backend_matrix.rs,
     /// tests/{resident,shard}_equivalence.rs), so a checkpoint written
     /// by a resident run may legally resume sharded and vice versa.  Paths and checkpoint cadence are excluded too —
@@ -517,8 +540,8 @@ impl RunCfg {
             &[
                 "family", "method", "iters", "seed", "lr", "data", "smd", "sd",
                 "eval_every", "swa", "alpha", "beta", "resident", "prefetch",
-                "shards", "backend", "checkpoint", "faults", "trace_out",
-                "energy_budget_j", "catalog", "artifacts_dir",
+                "shards", "backend", "accum", "checkpoint", "faults",
+                "trace_out", "energy_budget_j", "catalog", "artifacts_dir",
             ],
             "run-config",
         )?;
@@ -599,6 +622,12 @@ impl RunCfg {
             Some(b) => Some(BackendChoice::parse(b.as_str().ok_or_else(|| {
                 anyhow!("`backend` must be a string (host | resident | sharded | auto)")
             })?)?),
+        };
+        cfg.accum = match v.get("accum") {
+            None | Some(Json::Null) => 1,
+            Some(a) => a
+                .as_usize()
+                .ok_or_else(|| anyhow!("`accum` must be a non-negative integer"))?,
         };
         cfg.validate_backend()?;
         cfg.energy_budget_j = match v.get("energy_budget_j") {
@@ -717,6 +746,7 @@ mod tests {
         cfg.resident = false;
         cfg.prefetch = false;
         cfg.shards = 2;
+        cfg.accum = 2;
         cfg.checkpoint = CkptCfg {
             every: 25,
             dir: Some(PathBuf::from("ckpts/run1")),
@@ -758,6 +788,7 @@ mod tests {
         assert_eq!(back.lr, cfg.lr);
         assert!(!back.resident && !back.prefetch);
         assert_eq!(back.shards, 2);
+        assert_eq!(back.accum, 2);
         assert_eq!(back.checkpoint, cfg.checkpoint);
         assert_eq!(back.faults, cfg.faults);
         assert_eq!(back.trace_out, cfg.trace_out);
@@ -835,6 +866,7 @@ mod tests {
         b.prefetch = false;
         b.shards = 3;
         b.backend = Some(BackendChoice::Sharded);
+        b.accum = 4;
         b.artifacts_dir = PathBuf::from("elsewhere");
         b.checkpoint.every = 7;
         b.checkpoint.dir = Some(PathBuf::from("x"));
@@ -910,6 +942,46 @@ mod tests {
         m.insert("backend".into(), Json::str("warp"));
         let err = format!("{:#}", RunCfg::from_json(&Json::Obj(m)).unwrap_err());
         assert!(err.contains("warp"));
+    }
+
+    #[test]
+    fn accum_knob_validates_and_roundtrips() {
+        // Valid: sharded + accum > 1, round-trips through JSON.
+        let mut cfg = RunCfg::quick("f", "sgd32", 5);
+        cfg.backend = Some(BackendChoice::Sharded);
+        cfg.shards = 4;
+        cfg.accum = 4;
+        cfg.validate_backend().unwrap();
+        let back = RunCfg::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.accum, 4);
+
+        // accum = 0 is rejected, programmatically and via JSON.
+        let mut bad = cfg.clone();
+        bad.accum = 0;
+        let err = format!("{:#}", bad.validate_backend().unwrap_err());
+        assert!(err.contains(">= 1"), "{err}");
+        assert!(RunCfg::from_json(&bad.to_json()).is_err());
+
+        // accum > 1 without the sharded backend is rejected...
+        let mut bad = RunCfg::quick("f", "sgd32", 5);
+        bad.accum = 2;
+        let err = format!("{:#}", bad.validate_backend().unwrap_err());
+        assert!(err.contains("sharded"), "{err}");
+        assert!(RunCfg::from_json(&bad.to_json()).is_err());
+        // ...including "auto" (the planner may pick a single-executor
+        // layout, which would silently drop the knob).
+        let mut bad = RunCfg::quick("f", "sgd32", 5);
+        bad.backend = Some(BackendChoice::Auto);
+        bad.accum = 2;
+        assert!(bad.validate_backend().is_err());
+
+        // Absent knob defaults to 1 (single micro-batch).
+        assert_eq!(RunCfg::quick("f", "sgd32", 5).accum, 1);
+        // The legacy shards-only mapping accepts accum too.
+        let mut legacy = RunCfg::quick("f", "sgd32", 5);
+        legacy.shards = 2;
+        legacy.accum = 3;
+        legacy.validate_backend().unwrap();
     }
 
     #[test]

@@ -150,6 +150,15 @@ pub fn plan_run(inp: &PlanInputs, catalog: &mut Catalog) -> Result<Plan> {
         }
         let entry = catalog.get(&key).expect("known or just probed");
         let Some(step) = entry.step_mean_ns() else { continue };
+        // Overlapped reduce: the measured step wall already includes the
+        // host reduce serial after shard compute (overlap-off probes, or
+        // pre-pipeline catalogs).  With the reducer pipelined the step
+        // costs max(compute, reduce), not their sum — credit back the
+        // hidden leg.  Entries without reduce data are left untouched.
+        let step = match entry.reduce_mean_ns() {
+            Some(reduce) if reduce < step => (step - reduce).max(reduce),
+            _ => step,
+        };
         let aug = entry
             .augment_mean_ns()
             .or_else(|| augment_any_layout(catalog, inp.cfg, batch))
@@ -287,12 +296,15 @@ fn probe_candidate(
     shards: usize,
     needs_mask: bool,
 ) -> Result<Observation> {
+    // Probes always run accum = 1: accum is bitwise inert and the
+    // catalog keys layouts by (backend, shards, batch) only.
     let mut backend = prepare_backend(
         inp.engine,
         inp.program,
         &inp.cfg.manifest_path(),
         choice,
         shards,
+        1,
         inp.init.clone(),
     )?;
     let mut sampler = Sampler::new(

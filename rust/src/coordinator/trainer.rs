@@ -504,6 +504,7 @@ impl<'e> Trainer<'e> {
             &self.cfg.manifest_path(),
             choice,
             run_shards,
+            self.cfg.accum,
             init_state,
         )?;
         if let Some(p) = &self.faults {
@@ -935,6 +936,9 @@ impl<'e> Trainer<'e> {
             }
             if let Some(h) = self.obs.phase_histogram(crate::obs::PHASE_AUGMENT) {
                 run_obs.augment_ns = h;
+            }
+            if let Some(h) = self.obs.phase_histogram(crate::obs::PHASE_SHARD_REDUCE) {
+                run_obs.reduce_ns = h;
             }
             if run_obs.step_ns.count() > 0 {
                 let mut catalog = Catalog::load_or_empty(path)?;

@@ -8,9 +8,15 @@
 //! more engines.  `single_device_sps` records the plain resident
 //! `step_device` loop as the non-sharded baseline — the sharded path
 //! pays for its determinism contract (per-sample gradient emission +
-//! fixed-order host reduction), and that tax is only worth paying when
-//! the per-shard compute dominates it, which is exactly what the
-//! efficiency column makes visible.
+//! fixed-shape host reduction), and the whole point of the pipelined
+//! reducer is to hide that tax behind shard compute.  The sweep
+//! therefore runs every shard count twice — reducer overlap off
+//! (inline fold, the pre-pipeline cost) and on (the default) — and each
+//! row records `reduce_ms`, the measured per-step host-reduce wall, so
+//! the report shows both how big the tax is and how much of it the
+//! overlap recovers.  Efficiency is relative to each overlap group's
+//! own first row (overlap changes the cost model, so cross-group
+//! efficiency would compare different machines).
 
 use std::path::Path;
 use std::time::Instant;
@@ -18,6 +24,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::data::{synthetic, AugmentCfg, Sampler};
+use crate::obs::{self, Obs};
 use crate::runtime::{
     BackendKind, Engine, ModelState, ShardedTrainer, StepHyper, TrainProgram,
 };
@@ -32,6 +39,9 @@ pub struct ShardBenchCfg {
     pub warmup_steps: usize,
     /// Timed steps per shard count.
     pub steps: usize,
+    /// Micro-batches per step (gradient accumulation; bitwise inert, so
+    /// the bench defaults to 2 to exercise the pipelined path).
+    pub accum: usize,
     pub seed: u64,
     /// Provenance string recorded in the report (producer + profile).
     pub source: String,
@@ -43,6 +53,7 @@ impl Default for ShardBenchCfg {
             shard_counts: vec![1, 2, 4],
             warmup_steps: 3,
             steps: 40,
+            accum: 2,
             seed: 0,
             source: "shard_bench".into(),
         }
@@ -77,41 +88,60 @@ pub fn run_shard_bench(
     let single_sps = steps as f64 / t0.elapsed().as_secs_f64().max(1e-9);
     println!("shard_bench: single-device baseline  {single_sps:>8.1} steps/s");
 
+    let accum = cfg.accum.max(1);
     let mut rows = Vec::new();
-    let mut first: Option<(usize, f64)> = None;
-    for &s in &cfg.shard_counts {
-        let s = s.max(1);
-        let mut st = ShardedTrainer::new(
-            engine,
-            manifest_path,
-            s,
-            ModelState::init(&prog.manifest, cfg.seed),
-        )?;
-        for _ in 0..cfg.warmup_steps {
-            st.step(&x, &y, hp)?;
+    // Overlap-off first so the report reads "tax, then recovery".
+    for overlap in [false, true] {
+        let mut first: Option<(usize, f64)> = None;
+        for &s in &cfg.shard_counts {
+            let s = s.max(1);
+            let mut st = ShardedTrainer::new(
+                engine,
+                manifest_path,
+                s,
+                ModelState::init(&prog.manifest, cfg.seed),
+            )?;
+            st.set_accum(accum);
+            st.set_overlap(overlap);
+            for _ in 0..cfg.warmup_steps {
+                st.step(&x, &y, hp)?;
+            }
+            // Fresh hub after warmup: reduce_ms covers timed steps only.
+            let row_obs = Obs::new(false);
+            st.set_obs(row_obs.clone());
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                st.step(&x, &y, hp)?;
+            }
+            let sps = steps as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+            // Host-reduce wall per step (all micro-batch folds), whether
+            // it ran inline (overlap off) or on the reducer thread.
+            let reduce_ms = row_obs
+                .phase_histogram(obs::PHASE_SHARD_REDUCE)
+                .map(|h| h.total() as f64 / steps as f64 / 1e6)
+                .unwrap_or(0.0);
+            let (s0, sps0) = *first.get_or_insert((s, sps));
+            let speedup = sps / sps0;
+            // Strong-scaling efficiency vs this overlap group's first
+            // row: speedup divided by the shard-count growth; 1.0 =
+            // perfect linear scaling.
+            let efficiency = speedup * s0 as f64 / s as f64;
+            println!(
+                "shard_bench: {s} shard(s) overlap={overlap:<5}  {sps:>8.1} steps/s  reduce {reduce_ms:>7.3} ms/step  speedup {speedup:.2}x  efficiency {efficiency:.2}"
+            );
+            rows.push(Json::obj(vec![
+                ("shards", Json::num(s as f64)),
+                // Execution backend per row, so trajectories stay
+                // attributable after the `cfg.backend` knob.
+                ("exec_backend", Json::str("sharded")),
+                ("overlap", Json::Bool(overlap)),
+                ("accum", Json::num(accum as f64)),
+                ("steps_per_sec", Json::num(sps)),
+                ("reduce_ms", Json::num(reduce_ms)),
+                ("speedup_vs_first", Json::num(speedup)),
+                ("efficiency", Json::num(efficiency)),
+            ]));
         }
-        let t0 = Instant::now();
-        for _ in 0..steps {
-            st.step(&x, &y, hp)?;
-        }
-        let sps = steps as f64 / t0.elapsed().as_secs_f64().max(1e-9);
-        let (s0, sps0) = *first.get_or_insert((s, sps));
-        let speedup = sps / sps0;
-        // Strong-scaling efficiency vs the first row: speedup divided
-        // by the shard-count growth; 1.0 = perfect linear scaling.
-        let efficiency = speedup * s0 as f64 / s as f64;
-        println!(
-            "shard_bench: {s} shard(s)  {sps:>8.1} steps/s  speedup {speedup:.2}x  efficiency {efficiency:.2}"
-        );
-        rows.push(Json::obj(vec![
-            ("shards", Json::num(s as f64)),
-            // Execution backend per row, so trajectories stay
-            // attributable after the `cfg.backend` knob.
-            ("exec_backend", Json::str("sharded")),
-            ("steps_per_sec", Json::num(sps)),
-            ("speedup_vs_first", Json::num(speedup)),
-            ("efficiency", Json::num(efficiency)),
-        ]));
     }
 
     Ok(Json::obj(vec![

@@ -60,6 +60,9 @@ COMMANDS:
                                 the obs_catalog/v1 cost catalog)
     --shards <n>                data-parallel shard count    [0]
                                 (not combinable with --backend auto)
+    --accum <n>                 micro-batches per step       [1]
+                                (gradient accumulation; sharded backend
+                                only, bitwise identical for any value)
     --catalog <path>            cost catalog to plan from / recalibrate
                                 [OBS_CATALOG.json under --backend auto]
     --energy-budget-j <f>       planner hint: prefer the fastest plan
@@ -98,7 +101,8 @@ COMMANDS:
                                 part of the resume fingerprint)
     --backend <b> --shards <n>  resume under a different execution
                                 backend than the one that checkpointed
-                                (backends are bitwise interchangeable)
+                                (backends are bitwise interchangeable;
+                                --accum <n> may change too)
     --trace-out <path>          write an obs_trace/v1 JSONL run trace
     --out <path>                write run-metrics JSON
   exp <id>                      reproduce a paper table/figure
@@ -108,8 +112,10 @@ COMMANDS:
   shard-bench                   data-parallel sharded-training scaling bench
     --family <fam>              artifact family (reference fixture if absent)
     --shards <a,b,..>           shard counts to sweep  [1,2,4]
+                                (each swept with reducer overlap off+on)
     --steps <n>                 timed steps per count  [60]
     --warmup <n>                warmup steps           [3]
+    --accum <n>                 micro-batches per step [2]
     --seed <n>                  rng seed               [0]
     --out <path>                report path [BENCH_shard.json]
   serve                         micro-batching inference service bench
@@ -395,6 +401,7 @@ fn main() -> Result<()> {
                 shard_counts: args.usize_list_or("shards", &[1, 2, 4])?,
                 warmup_steps: args.usize_or("warmup", 3)?,
                 steps: args.usize_or("steps", 60)?,
+                accum: args.usize_or("accum", 2)?,
                 seed: args.u64_or("seed", 0)?,
                 source: if cfg!(debug_assertions) {
                     "e2train shard-bench (debug profile)"
@@ -533,9 +540,9 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// Apply `--backend` / `--shards` overrides to a run config from any
-/// source — quick flags, a `--config` launcher, or a checkpoint's
-/// embedded config — so the flags are never silently ignored.  A
+/// Apply `--backend` / `--shards` / `--accum` overrides to a run config
+/// from any source — quick flags, a `--config` launcher, or a
+/// checkpoint's embedded config — so the flags are never silently ignored.  A
 /// single-executor `--backend` clears an inherited shard count unless
 /// `--shards` is pinned explicitly; the combination is then validated
 /// like any other config.
@@ -553,6 +560,9 @@ fn apply_backend_flags(cfg: &mut RunCfg, args: &Args) -> Result<()> {
     }
     if let Some(s) = shards {
         cfg.shards = s;
+    }
+    if args.get("accum").is_some() {
+        cfg.accum = args.usize_or("accum", 1)?;
     }
     cfg.validate_backend()
 }

@@ -77,6 +77,11 @@ pub struct CatalogEntry {
     /// `augment` span durations (ns) — batch assembly cost, the other
     /// leg of the prefetch-overlap pipeline.
     pub augment_ns: Histogram,
+    /// `shard-reduce` span durations (ns) — the host combine cost the
+    /// sharded backend's reducer pipeline overlaps with shard compute.
+    /// Empty for single-executor and serve entries, and in catalogs
+    /// written before this field existed (parsed leniently).
+    pub reduce_ns: Histogram,
     /// Total joules charged across folded-in runs …
     pub joules: f64,
     /// … over this many executed steps (J/step = joules / joule_steps).
@@ -91,6 +96,7 @@ impl CatalogEntry {
             probes: 0,
             step_ns: Histogram::new(),
             augment_ns: Histogram::new(),
+            reduce_ns: Histogram::new(),
             joules: 0.0,
             joule_steps: 0,
         }
@@ -106,6 +112,13 @@ impl CatalogEntry {
         (self.augment_ns.count() > 0).then(|| self.augment_ns.mean())
     }
 
+    /// Mean shard-reduce nanoseconds (`None` until a sharded run or
+    /// trace measured one — the planner then credits the reduce as
+    /// overlapped with shard compute instead of serial after it).
+    pub fn reduce_mean_ns(&self) -> Option<f64> {
+        (self.reduce_ns.count() > 0).then(|| self.reduce_ns.mean())
+    }
+
     /// Joules per executed step (`None` until energy was charged — the
     /// analytic energy model is layout-invariant, so callers may fall
     /// back to a sibling entry that differs only in backend/shards).
@@ -118,6 +131,7 @@ impl CatalogEntry {
         self.probes += other.probes;
         self.step_ns.merge(&other.step_ns);
         self.augment_ns.merge(&other.augment_ns);
+        self.reduce_ns.merge(&other.reduce_ns);
         self.joules += other.joules;
         self.joule_steps += other.joule_steps;
     }
@@ -180,6 +194,7 @@ impl CatalogEntry {
             ("probes", Json::num(self.probes as f64)),
             ("step_ns", Self::hist_json(&self.step_ns)),
             ("augment_ns", Self::hist_json(&self.augment_ns)),
+            ("reduce_ns", Self::hist_json(&self.reduce_ns)),
             ("joules", Json::num(self.joules)),
             ("joule_steps", Json::num(self.joule_steps as f64)),
         ])
@@ -216,6 +231,14 @@ impl CatalogEntry {
                 .with_context(|| format!("entry {id}"))?,
             augment_ns: Self::hist_from_json(v.at(&["augment_ns"]), "augment_ns")
                 .with_context(|| format!("entry {id}"))?,
+            // Lenient: absent in pre-reduce catalogs ⇒ empty histogram
+            // (still `obs_catalog/v1` — adding a measurement stream is
+            // not a schema break; present-but-corrupt is still fatal).
+            reduce_ns: match v.at(&["reduce_ns"]) {
+                Json::Null => Histogram::new(),
+                rv => Self::hist_from_json(rv, "reduce_ns")
+                    .with_context(|| format!("entry {id}"))?,
+            },
             joules: req_num("joules")?,
             joule_steps: req_num("joule_steps")? as u64,
         })
@@ -230,6 +253,8 @@ pub struct Observation {
     pub step_ns: Histogram,
     /// `augment` durations, ns (empty for serve entries).
     pub augment_ns: Histogram,
+    /// `shard-reduce` durations, ns (empty off the sharded backend).
+    pub reduce_ns: Histogram,
     pub joules: f64,
     pub joule_steps: u64,
     /// True for short calibration probes.
@@ -291,6 +316,7 @@ impl Catalog {
         }
         e.step_ns.merge(&obs.step_ns);
         e.augment_ns.merge(&obs.augment_ns);
+        e.reduce_ns.merge(&obs.reduce_ns);
         e.joules += obs.joules;
         e.joule_steps += obs.joule_steps;
     }
@@ -341,6 +367,7 @@ impl Catalog {
                             obs.step_ns.observe(ns)
                         }
                         Some(super::PHASE_AUGMENT) => obs.augment_ns.observe(ns),
+                        Some(super::PHASE_SHARD_REDUCE) => obs.reduce_ns.observe(ns),
                         _ => {}
                     }
                 }

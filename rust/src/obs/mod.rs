@@ -5,12 +5,13 @@
 //! Every layer of the stack answers "where did this run's wall-time
 //! go?" through one [`Obs`] handle: the trainer times `augment` /
 //! `prefetch-stall` / `step-exec`, the sharded backend times per-shard
-//! execution plus the `shard-reduce` / `optim-apply` host phases, the
-//! checkpoint registry times `checkpoint-encode` / `registry-publish`,
-//! and the serve pipeline times `serve-batch-assembly` / `serve-infer`.
+//! execution plus the `shard-reduce` / `reduce-tree` / `optim-apply` /
+//! `pipeline-stall` host phases, the checkpoint registry times
+//! `checkpoint-encode` / `registry-publish`, and the serve pipeline
+//! times `serve-batch-assembly` / `serve-infer`.
 //! Spans record under the *recording thread's* label (worker threads
 //! are already named — `e2train-prefetch`, `e2train-ckpt-writer`,
-//! `e2train-serve-batcher` — and shard legs label themselves
+//! `e2train-serve-batcher`, `e2train-reducer` — and shard legs label themselves
 //! `shard-{i}`), and per-thread aggregates merge into per-phase
 //! summaries by sorted `BTreeMap` iteration, so the summary is
 //! deterministic no matter how threads interleaved.
@@ -71,6 +72,12 @@ pub const PHASE_STEP_EXEC: &str = "step-exec";
 pub const PHASE_SHARD_EXEC: &str = "shard-exec";
 /// Fixed-order host all-reduce of per-shard outputs.
 pub const PHASE_SHARD_REDUCE: &str = "shard-reduce";
+/// The fixed-shape tree fold of gradient contributions inside one
+/// shard-reduce job (`runtime::reduce::fold_tree`).
+pub const PHASE_REDUCE_TREE: &str = "reduce-tree";
+/// Main-thread wait on the reduce pipeline: blocking a micro-batch
+/// hand-off on the full 2-slot ring, plus the end-of-step commit drain.
+pub const PHASE_PIPELINE_STALL: &str = "pipeline-stall";
 /// `optim::update::apply_update` + master write-back + rebroadcast.
 pub const PHASE_OPTIM_APPLY: &str = "optim-apply";
 /// Streaming `ckpt/v1` encode to the registry temp file.

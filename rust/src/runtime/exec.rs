@@ -125,12 +125,16 @@ pub trait StepBackend {
 /// Build the backend `choice` selects around an initial host state.
 /// This is the only place the trainer's configuration meets concrete
 /// backend types.
+/// `accum` is the sharded backend's gradient-accumulation factor
+/// (micro-batches per logical step, >= 1; bitwise identical to 1 for
+/// any value).  Single-executor backends ignore it, like `shards`.
 pub fn prepare_backend<'p>(
     engine: &Engine,
     program: &'p TrainProgram,
     manifest_path: &Path,
     choice: BackendChoice,
     shards: usize,
+    accum: usize,
     init: ModelState,
 ) -> Result<Box<dyn StepBackend + 'p>> {
     Ok(match choice {
@@ -141,6 +145,7 @@ pub fn prepare_backend<'p>(
             program,
             manifest_path,
             shards,
+            accum,
             init,
         )?),
         // The planner (`coordinator::planner`) replaces Auto with a
@@ -286,12 +291,12 @@ impl<'p> ShardedBackend<'p> {
         program: &'p TrainProgram,
         manifest_path: &Path,
         shards: usize,
+        accum: usize,
         init: ModelState,
     ) -> Result<Self> {
-        Ok(Self {
-            program,
-            inner: ShardedTrainer::new(engine, manifest_path, shards, init)?,
-        })
+        let mut inner = ShardedTrainer::new(engine, manifest_path, shards, init)?;
+        inner.set_accum(accum);
+        Ok(Self { program, inner })
     }
 }
 
@@ -376,6 +381,7 @@ mod tests {
                 manifest,
                 BackendChoice::Host,
                 0,
+                1,
                 init.clone(),
             )
             .unwrap(),
@@ -385,14 +391,18 @@ mod tests {
                 manifest,
                 BackendChoice::Resident,
                 0,
+                1,
                 init.clone(),
             )
             .unwrap(),
+            // Pipelined by default, with gradient accumulation on — the
+            // bitwise contract must hold with the new machinery engaged.
             prepare_backend(
                 engine,
                 program,
                 manifest,
                 BackendChoice::Sharded,
+                2,
                 2,
                 init.clone(),
             )

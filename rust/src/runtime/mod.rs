@@ -15,9 +15,14 @@
 //! * [`exec`] — the execution layer: [`exec::StepBackend`] abstracts
 //!   *where* a step runs (host / resident / sharded) behind one trait
 //!   the trainer's loop is written against; see ARCHITECTURE.md.
+//! * [`reduce`] — the fixed-shape parallel reduction tree: bisects the
+//!   gradient *element* axis across host threads while every element
+//!   still accumulates in global sample order, so the tree is bitwise
+//!   identical to the sequential fold by construction.
 //! * [`shard`] — data-parallel sharded training over an engine pool with
 //!   a deterministic (fixed-order, bitwise-reproducible) host-side
-//!   all-reduce of per-sample gradient contributions.
+//!   all-reduce of per-sample gradient contributions, pipelined across
+//!   micro-batches onto a dedicated reducer thread.
 //! * [`reference`] — the pure-rust reference backend + fixture
 //!   generator; keeps the whole stack executable without a PJRT runtime.
 
@@ -27,6 +32,7 @@ pub mod exec;
 pub mod manifest;
 pub mod pool;
 pub mod program;
+pub mod reduce;
 pub mod reference;
 pub mod shard;
 pub mod tensor;
@@ -41,6 +47,7 @@ pub use pool::EnginePool;
 pub use program::{
     EvalMetrics, EvalOutput, ModelState, StepHyper, StepMetrics, TrainProgram,
 };
+pub use reduce::{fold_sequential, fold_tree, tree_depth, MAX_TREE_DEPTH, REDUCE_GRAIN};
 pub use shard::ShardedTrainer;
 pub use reference::{
     row_argmax, row_rank, row_softmax_loss, write_reference_family, RefFamilySpec,

@@ -1,0 +1,180 @@
+//! Fixed-shape parallel reduction tree for per-sample gradient
+//! contributions (the parallel half of killing the "determinism tax",
+//! see PERF.md).
+//!
+//! ## Why the tree splits the *element* axis, not the sample axis
+//!
+//! The bitwise contract (`tests/backend_matrix.rs`) pins the sharded
+//! backend to the single-device step: every element of every gradient
+//! must see *exactly the same additions in exactly the same order* as
+//! the reference `step_device` reduce.  Float addition is not
+//! associative, so a tree over contiguous sample-range partial sums —
+//! `(s0+s1)+(s2+s3)` instead of `((s0+s1)+s2)+s3` — would produce
+//! different bits and break the frozen matrix.
+//!
+//! The axis that *is* free is the element (column) axis: additions to
+//! distinct gradient elements are independent FP operations with no
+//! ordering constraint between them.  So the tree here bisects the
+//! element range into a static binary tree of disjoint column slices;
+//! each leaf replays the full per-sample sequence (shard-major,
+//! row-minor — global sample order, because shard ranges are contiguous
+//! ascending) over its own columns.  Every element still accumulates in
+//! ascending global sample order, so the result is bitwise identical to
+//! the sequential fold *by construction*, for any thread scheduling.
+//!
+//! ## Fixed shape
+//!
+//! The tree shape is a pure function of the workload — `tree_depth` of
+//! the element count, never of timing, thread availability, or load.
+//! Two runs of the same workload always build the same tree; the tree
+//! being bitwise-equal to the sequential fold makes even *that* a
+//! non-observable implementation detail (pinned by a proptest in
+//! `tests/proptests.rs`).
+
+/// Minimum element count a leaf is worth a thread for.  Below this the
+/// spawn/join overhead exceeds the fold itself.
+pub const REDUCE_GRAIN: usize = 4096;
+
+/// Depth cap: at most 2^MAX_TREE_DEPTH = 8 leaves, matching the small
+/// host-core budget the sharded fan-out already assumes.
+pub const MAX_TREE_DEPTH: u32 = 3;
+
+/// Tree depth for `elems` gradient elements — a pure function of the
+/// workload (halve until a leaf fits [`REDUCE_GRAIN`] or the depth cap
+/// is hit), never of timing.
+pub fn tree_depth(elems: usize) -> u32 {
+    let mut depth = 0;
+    let mut len = elems;
+    while depth < MAX_TREE_DEPTH && len > REDUCE_GRAIN {
+        len -= len / 2; // the larger half after a split_at(len / 2)
+        depth += 1;
+    }
+    depth
+}
+
+/// The reference fold: for each shard view (a concatenation of
+/// per-sample rows, each `acc.len()` wide), add every row into `acc`
+/// element-wise, shard-major row-minor.  This is the original
+/// sequential fixed-order merge from `shard.rs` and the oracle the
+/// tree is pinned against.
+///
+/// Each view's length must be a multiple of `acc.len()` (callers
+/// validate row shapes before handing views over).
+pub fn fold_sequential(acc: &mut [f32], shards: &[&[f32]]) {
+    fold_columns(acc, 0, acc.len().max(1), shards);
+}
+
+/// The fixed-shape tree fold: bitwise identical to [`fold_sequential`]
+/// (see module docs), fanned across host threads over disjoint column
+/// ranges.  Depth 0 (small `acc` or empty input) folds inline without
+/// spawning.
+pub fn fold_tree(acc: &mut [f32], shards: &[&[f32]]) {
+    let total = acc.len();
+    if total == 0 || shards.is_empty() {
+        return;
+    }
+    debug_assert!(shards.iter().all(|v| v.len() % total == 0));
+    bisect(acc, 0, total, shards, tree_depth(total));
+}
+
+/// Recursive bisection: split the accumulator at its midpoint, spawn
+/// the left half on a scoped thread, fold the right half inline.  The
+/// two halves touch disjoint columns, so there is no FP interaction —
+/// only the per-leaf [`fold_columns`] order matters, and that is the
+/// sequential order.
+fn bisect(acc: &mut [f32], off: usize, total: usize, shards: &[&[f32]], depth: u32) {
+    if depth == 0 || acc.len() <= 1 {
+        fold_columns(acc, off, total, shards);
+        return;
+    }
+    let mid = acc.len() / 2;
+    let (left, right) = acc.split_at_mut(mid);
+    std::thread::scope(|s| {
+        s.spawn(|| bisect(left, off, total, shards, depth - 1));
+        bisect(right, off + mid, total, shards, depth - 1);
+    });
+}
+
+/// Leaf fold over one column slice: for every shard view, for every
+/// per-sample row (ascending — global sample order), add that row's
+/// `[off, off + acc.len())` columns into `acc`.
+fn fold_columns(acc: &mut [f32], off: usize, total: usize, shards: &[&[f32]]) {
+    if acc.is_empty() {
+        return;
+    }
+    for v in shards {
+        for row in v.chunks_exact(total) {
+            for (a, g) in acc.iter_mut().zip(&row[off..off + acc.len()]) {
+                *a += *g;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_rows(rng: &mut Rng, rows: usize, elems: usize) -> Vec<f32> {
+        (0..rows * elems)
+            .map(|_| {
+                // Mixed magnitudes so reordered additions would actually
+                // change bits (catastrophic-cancellation bait).
+                let scale = 10f32.powi(rng.range_usize(0, 8) as i32 - 4);
+                rng.range_f32(-1.0, 1.0) * scale
+            })
+            .collect()
+    }
+
+    #[test]
+    fn depth_is_a_pure_function_of_elems() {
+        assert_eq!(tree_depth(0), 0);
+        assert_eq!(tree_depth(1), 0);
+        assert_eq!(tree_depth(REDUCE_GRAIN), 0);
+        assert_eq!(tree_depth(REDUCE_GRAIN + 1), 1);
+        assert_eq!(tree_depth(4 * REDUCE_GRAIN), 2);
+        // Huge inputs cap at MAX_TREE_DEPTH (8 leaves).
+        assert_eq!(tree_depth(usize::MAX / 2), MAX_TREE_DEPTH);
+        for n in [0, 7, 4096, 40960, 1 << 22] {
+            assert_eq!(tree_depth(n), tree_depth(n), "must be deterministic");
+        }
+    }
+
+    #[test]
+    fn tree_is_bitwise_identical_to_sequential() {
+        let mut rng = Rng::seed_from_u64(0xE27A_0010);
+        // Multi-leaf element count with a remainder, shards with uneven
+        // row counts (including an empty one).
+        for elems in [1usize, 33, REDUCE_GRAIN, 3 * REDUCE_GRAIN + 17] {
+            let views: Vec<Vec<f32>> = [2usize, 0, 3, 1]
+                .iter()
+                .map(|&rows| random_rows(&mut rng, rows, elems))
+                .collect();
+            let refs: Vec<&[f32]> = views.iter().map(|v| v.as_slice()).collect();
+            // Non-zero starting accumulator: micro-batch accumulation
+            // reuses the same acc across folds.
+            let base: Vec<f32> = (0..elems).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+            let mut seq = base.clone();
+            fold_sequential(&mut seq, &refs);
+            let mut tree = base.clone();
+            fold_tree(&mut tree, &refs);
+            for (i, (a, b)) in seq.iter().zip(&tree).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "elems={elems} idx={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_noops() {
+        let mut empty: Vec<f32> = vec![];
+        fold_tree(&mut empty, &[&[1.0, 2.0]]);
+        fold_sequential(&mut empty, &[]);
+        let mut acc = vec![1.5f32, -2.5];
+        fold_tree(&mut acc, &[]);
+        assert_eq!(acc, vec![1.5, -2.5]);
+        let no_rows: &[f32] = &[];
+        fold_tree(&mut acc, &[no_rows]);
+        assert_eq!(acc, vec![1.5, -2.5]);
+    }
+}

@@ -37,14 +37,55 @@
 //! by `tests/shard_equivalence.rs` to S ∈ {1, 2, 3} and by
 //! `tests/backend_matrix.rs` to the full backend matrix.
 //!
+//! ## Pipelined micro-batch reduce (killing the determinism tax)
+//!
+//! The host reduction used to run inline after the fan-out joined —
+//! an O(batch × params) sequential tail on every step (PERF.md
+//! "determinism tax").  It is now overlapped and parallelized without
+//! touching the contract:
+//!
+//! * **Micro-batch pipelining** — `set_accum(A)` splits each logical
+//!   batch into A contiguous micro-batches.  Shard outputs for
+//!   micro-batch *k* are handed to a dedicated **reducer thread**
+//!   (2-slot ring: one job queued, one being folded) while the shards
+//!   run micro-batch *k+1*'s forward/grad.  Weights are constant for
+//!   the whole logical step (the one `apply_update` happens after the
+//!   pipeline drains), so overlap cannot observe a half-updated
+//!   master.  Overlap across *logical* steps is deliberately excluded:
+//!   batch k+1's forward depends on batch k's update, so cross-step
+//!   overlap would compute on stale weights and break bitwise
+//!   equality.  The pipeline fully drains inside [`ShardedTrainer::step`]
+//!   (commit before apply), so every `StepBackend` boundary —
+//!   `sync_master`, `rebroadcast`, `probe_step`,
+//!   `export_for_checkpoint` — trivially sees no in-flight state.
+//! * **Fixed-shape reduction tree** — each job is folded with
+//!   [`super::reduce::fold_tree`]: a static binary tree over the
+//!   gradient *element* axis (shape a pure function of the element
+//!   count, never of timing).  Every element still accumulates its
+//!   per-sample terms in ascending global sample order, so the tree is
+//!   bitwise identical to the sequential fold by construction — see
+//!   `runtime::reduce` for why the sample axis cannot be treed.
+//! * **Gradient accumulation** — because micro-batches are reduced in
+//!   send order into one accumulator and per-sample terms are already
+//!   scaled by the *global* batch size, `accum` is a pure layout knob:
+//!   any A produces bitwise the same step as A = 1, and
+//!   [`crate::optim::update::apply_update`] runs exactly once per
+//!   logical step.
+//!
+//! `set_overlap(false)` folds jobs inline on the caller thread (same
+//! tree, no reducer thread) — the bench's overlap on/off comparison.
+//!
 //! Real-PJRT note: this path requires the reference backend's grad
 //! programs.  On real devices the same structure maps to on-device
 //! collectives (all-reduce of gradient buffers); that is the seeded
 //! follow-up in ROADMAP.md — the shard/replica/rebroadcast substrate
 //! here is what it will reuse.
 
+use std::ops::Range;
 use std::path::{Path, PathBuf};
+use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -59,6 +100,7 @@ use super::engine::{BackendKind, Engine, Program};
 use super::manifest::Manifest;
 use super::pool::EnginePool;
 use super::program::{ModelState, StepHyper, StepMetrics};
+use super::reduce::fold_tree;
 use super::tensor::HostTensor;
 
 /// One non-gate trainable param: master-state indices of the param and
@@ -79,6 +121,171 @@ struct Shard {
     engine: Engine,
     grad: Arc<Program>,
     replica: DeviceState,
+}
+
+/// The reduce shape of one logical step, handed to the reducer thread
+/// at `Begin`: per-data-param element counts plus the hidden width when
+/// the method tracks a running mean.  A pure function of the workload —
+/// the tree built from it never depends on timing.
+#[derive(Clone)]
+struct ReducePlan {
+    elems: Vec<usize>,
+    h: Option<usize>,
+}
+
+/// The running reduction state of one logical step: gradient
+/// accumulators (one per data param), sequential metric sums, and the
+/// hidden-activation column sums.  Folding is defined once here and
+/// shared verbatim by the reducer thread (overlap on) and the inline
+/// path (overlap off), so both produce identical bits and identical
+/// error messages.
+struct StepAccum {
+    grads: Vec<Vec<f32>>,
+    loss_sum: f32,
+    correct_sum: f32,
+    col_sums: Option<Vec<f32>>,
+}
+
+impl StepAccum {
+    fn new(plan: &ReducePlan) -> Self {
+        StepAccum {
+            grads: plan.elems.iter().map(|&e| vec![0f32; e]).collect(),
+            loss_sum: 0.0,
+            correct_sum: 0.0,
+            col_sums: plan.h.map(|h| vec![0f32; h]),
+        }
+    }
+
+    /// Fold one micro-batch's shard outputs in.  Per gradient element
+    /// the additions happen in ascending global sample order (jobs
+    /// arrive in micro-batch order, shard slices are contiguous and
+    /// ordered, and [`fold_tree`] preserves per-element order), so any
+    /// sequence of folds is bitwise identical to one sequential pass
+    /// over the whole batch.
+    fn fold(&mut self, outs: &[Vec<HostTensor>], obs: &Obs) -> Result<()> {
+        let pp = self.grads.len();
+        for out in outs {
+            if out.len() != pp + 3 {
+                bail!(
+                    "grad program returned {} outputs, expected {} (per-param \
+                     grads + hact + loss + correct)",
+                    out.len(),
+                    pp + 3
+                );
+            }
+        }
+
+        let t_reduce = Instant::now();
+        // ---- fixed-shape tree reduce of gradient contributions -------
+        let t_tree = Instant::now();
+        for (pi, acc) in self.grads.iter_mut().enumerate() {
+            let mut views: Vec<&[f32]> = Vec::with_capacity(outs.len());
+            for out in outs {
+                let v = out[pi].as_f32()?;
+                let rows = out[pi].shape.first().copied().unwrap_or(0);
+                if v.len() != rows * acc.len() {
+                    bail!("shard grad output {pi} has the wrong size");
+                }
+                views.push(v);
+            }
+            fold_tree(acc, &views);
+        }
+        obs.record(obs::PHASE_REDUCE_TREE, t_tree.elapsed());
+        // ---- metric reduction (same order; integer-valued `correct`
+        // sums are exact, `loss` keeps the sequential order) -----------
+        for out in outs {
+            for &v in out[pp + 1].as_f32()? {
+                self.loss_sum += v;
+            }
+            for &v in out[pp + 2].as_f32()? {
+                self.correct_sum += v;
+            }
+        }
+        // ---- hidden-activation column sums, global row order ---------
+        // (the run_mean EMA's numerator; per column, additions happen in
+        // ascending global sample order — shard slices are contiguous
+        // and ordered, so this is the train step's own accumulation.)
+        if let Some(cs) = &mut self.col_sums {
+            let h = cs.len();
+            let mut views: Vec<&[f32]> = Vec::with_capacity(outs.len());
+            for out in outs {
+                let ha = out[pp].as_f32()?;
+                let rows = out[pp].shape.first().copied().unwrap_or(0);
+                if ha.len() != rows * h {
+                    bail!("shard hact output has the wrong size");
+                }
+                views.push(ha);
+            }
+            fold_tree(cs, &views);
+        }
+        obs.record(obs::PHASE_SHARD_REDUCE, t_reduce.elapsed());
+        Ok(())
+    }
+}
+
+/// Reducer-thread protocol.  `Begin` resets the thread for a new
+/// logical step (also discarding any state a failed previous step left
+/// behind); `Job` carries one micro-batch's shard outputs; `Commit`
+/// drains the pipeline and returns the finished accumulator (or the
+/// first fold error) through the reply channel.
+enum Msg {
+    Begin(ReducePlan),
+    Job(Vec<Vec<HostTensor>>),
+    Commit(mpsc::Sender<Result<StepAccum>>),
+}
+
+/// Handle to the dedicated reducer thread.  Dropping it closes the
+/// channel (the thread exits at the next `recv`) and joins.
+struct Reducer {
+    tx: Option<SyncSender<Msg>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for Reducer {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The reducer thread's main loop.  A fold error is parked and
+/// surfaced at `Commit` — later queued jobs are skipped, never folded
+/// into a poisoned accumulator.
+fn reducer_main(rx: Receiver<Msg>, obs: Obs) {
+    let mut accum: Option<StepAccum> = None;
+    let mut pending_err: Option<anyhow::Error> = None;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Begin(plan) => {
+                pending_err = None;
+                accum = Some(StepAccum::new(&plan));
+            }
+            Msg::Job(outs) => {
+                if pending_err.is_some() {
+                    continue;
+                }
+                match &mut accum {
+                    Some(acc) => {
+                        if let Err(e) = acc.fold(&outs, &obs) {
+                            pending_err = Some(e);
+                        }
+                    }
+                    None => pending_err = Some(anyhow!("reduce job before begin")),
+                }
+            }
+            Msg::Commit(reply) => {
+                let res = match pending_err.take() {
+                    Some(e) => Err(e),
+                    None => accum
+                        .take()
+                        .ok_or_else(|| anyhow!("reduce commit before begin")),
+                };
+                let _ = reply.send(res);
+            }
+        }
+    }
 }
 
 /// Data-parallel sharded training step over an engine pool.
@@ -120,6 +327,14 @@ pub struct ShardedTrainer {
     obs: Obs,
     /// In-place shard recoveries performed so far (telemetry/tests).
     recoveries: u64,
+    /// Micro-batches per logical step (gradient accumulation); a pure
+    /// layout knob — any value is bitwise identical to 1.
+    accum: usize,
+    /// Pipeline micro-batch reduces onto the reducer thread (default).
+    /// Off folds inline on the caller thread — same tree, same bits.
+    overlap: bool,
+    /// Lazily-spawned dedicated reducer thread (overlap on only).
+    reducer: Option<Reducer>,
 }
 
 /// In-step failure budget: a step tolerates this many shard/fork
@@ -226,6 +441,9 @@ impl ShardedTrainer {
             faults: None,
             obs: Obs::off(),
             recoveries: 0,
+            accum: 1,
+            overlap: true,
+            reducer: None,
         })
     }
 
@@ -236,9 +454,38 @@ impl ShardedTrainer {
     }
 
     /// Attach an observability handle (forwarded by
-    /// [`super::exec::ShardedBackend::set_obs`]).
+    /// [`super::exec::ShardedBackend::set_obs`]).  Any running reducer
+    /// thread is dropped so the next step respawns it with the new
+    /// handle.
     pub fn set_obs(&mut self, obs: Obs) {
         self.obs = obs;
+        self.reducer = None;
+    }
+
+    /// Micro-batches per logical step (gradient accumulation, clamped
+    /// to >= 1).  Bitwise identical to 1 for any value — pinned by
+    /// `tests/reduce_matrix.rs` and a proptest — so this is purely a
+    /// memory/pipelining layout knob.
+    pub fn set_accum(&mut self, accum: usize) {
+        self.accum = accum.max(1);
+    }
+
+    pub fn accum(&self) -> usize {
+        self.accum
+    }
+
+    /// Toggle the reducer-thread pipeline (on by default).  Off reduces
+    /// inline after each fan-out — the overlap-off baseline the shard
+    /// bench compares against.
+    pub fn set_overlap(&mut self, on: bool) {
+        self.overlap = on;
+        if !on {
+            self.reducer = None;
+        }
+    }
+
+    pub fn overlap(&self) -> bool {
+        self.overlap
     }
 
     /// In-place shard recoveries performed so far.
@@ -277,16 +524,22 @@ impl ShardedTrainer {
         self.master
     }
 
-    /// One data-parallel optimizer step: slice, fan out, reduce in
-    /// fixed order, apply, rebroadcast.
+    /// One data-parallel optimizer step: split the batch into `accum`
+    /// micro-batches, fan each out over the shards, pipeline the
+    /// fixed-order reduce onto the reducer thread (overlap on) or fold
+    /// inline (overlap off), then apply the one optimizer update and
+    /// rebroadcast.  The pipeline fully drains before the apply, so
+    /// callers never observe in-flight state.
     ///
     /// A shard that fails mid-fan-out is recovered **in place**: its
     /// engine is re-forked from the construction-time base, the grad
     /// program reloaded, and the replica rebuilt from the host master —
-    /// then the whole fan-out retries.  This is bitwise invisible
-    /// because every failure happens *before* [`Self::reduce_and_apply`]
-    /// mutates the master, and a rebuilt replica carries exactly the
-    /// master tensors a rebroadcast would have pushed.
+    /// then the failed micro-batch retries.  This is bitwise invisible
+    /// because a failed fan-out's outputs are never sent to the reducer
+    /// (no stale slot to invalidate), earlier micro-batches already
+    /// queued stay valid (the master is constant until [`Self::apply`]),
+    /// and a rebuilt replica carries exactly the master tensors a
+    /// rebroadcast would have pushed.
     pub fn step(
         &mut self,
         x: &HostTensor,
@@ -297,36 +550,104 @@ impl ShardedTrainer {
         if b == 0 {
             bail!("empty batch");
         }
-        let ranges = shard_ranges(b, self.shards.len());
         let n_scalar = HostTensor::scalar_f32(b as f32);
-        let slices = ranges
-            .iter()
-            .map(|r| slice_batch(x, y, r.clone()))
-            .collect::<Result<Vec<_>>>()?;
-
+        let plan = ReducePlan {
+            elems: self.data_params.iter().map(|p| p.elems).collect(),
+            h: self
+                .run_mean_idx
+                .map(|ri| self.master.values[ri].elem_count()),
+        };
+        // Contiguous ascending micro-batches: concatenating their shard
+        // slices in send order replays the whole batch in global sample
+        // order, so any accum value folds bitwise like accum = 1.
+        let micro = shard_ranges(b, self.accum);
         let mut failures = 0u32;
+
+        let acc = if self.overlap {
+            let tx = self.ensure_reducer()?;
+            let dead = || anyhow!("reducer thread died");
+            tx.send(Msg::Begin(plan)).map_err(|_| dead())?;
+            for r in &micro {
+                let outs =
+                    self.run_micro_batch(x, y, r.clone(), &n_scalar, &mut failures)?;
+                // Backpressure: blocks only while the 2-slot ring is
+                // full, i.e. the reducer is still folding micro-batch
+                // k-1 — the stall the overlap is supposed to hide.
+                let t0 = Instant::now();
+                tx.send(Msg::Job(outs)).map_err(|_| dead())?;
+                self.obs.record(obs::PHASE_PIPELINE_STALL, t0.elapsed());
+            }
+            // Drain: the apply below must see the finished accumulator.
+            let (rtx, rrx) = mpsc::channel();
+            let t0 = Instant::now();
+            tx.send(Msg::Commit(rtx)).map_err(|_| dead())?;
+            let acc = rrx.recv().map_err(|_| dead())??;
+            self.obs.record(obs::PHASE_PIPELINE_STALL, t0.elapsed());
+            acc
+        } else {
+            let mut acc = StepAccum::new(&plan);
+            for r in &micro {
+                let outs =
+                    self.run_micro_batch(x, y, r.clone(), &n_scalar, &mut failures)?;
+                acc.fold(&outs, &self.obs)?;
+            }
+            acc
+        };
+        self.apply(b, acc, hp)
+    }
+
+    /// Spawn (once) the dedicated reducer thread and hand back a cloned
+    /// sender into its 2-slot ring.
+    fn ensure_reducer(&mut self) -> Result<SyncSender<Msg>> {
+        if self.reducer.is_none() {
+            let (tx, rx) = mpsc::sync_channel::<Msg>(1);
+            let obs = self.obs.clone();
+            let handle = std::thread::Builder::new()
+                .name("e2train-reducer".into())
+                .spawn(move || reducer_main(rx, obs))
+                .context("spawning the reducer thread")?;
+            self.reducer = Some(Reducer { tx: Some(tx), handle: Some(handle) });
+        }
+        Ok(self.reducer.as_ref().unwrap().tx.as_ref().unwrap().clone())
+    }
+
+    /// Slice one micro-batch's rows across the shards and fan out,
+    /// recovering failed shards in place within the step's shared
+    /// failure budget.
+    fn run_micro_batch(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        range: Range<usize>,
+        n_scalar: &HostTensor,
+        failures: &mut u32,
+    ) -> Result<Vec<Vec<HostTensor>>> {
+        let slices = shard_ranges(range.len(), self.shards.len())
+            .into_iter()
+            .map(|r| slice_batch(x, y, range.start + r.start..range.start + r.end))
+            .collect::<Result<Vec<_>>>()?;
         loop {
-            let (i, e) = match self.fan_out(&slices, &n_scalar) {
-                Ok(outs) => return self.reduce_and_apply(b, &outs, hp),
+            let (i, e) = match self.fan_out(&slices, n_scalar) {
+                Ok(outs) => return Ok(outs),
                 Err(at) => at,
             };
-            failures += 1;
-            if failures > MAX_STEP_FAILURES {
+            *failures += 1;
+            if *failures > MAX_STEP_FAILURES {
                 return Err(e.context(format!(
                     "shard {i} still failing after {} in-place recoveries",
-                    failures - 1
+                    *failures - 1
                 )));
             }
             eprintln!(
                 "[shard] shard {i} failed ({e:#}); re-forking its engine and \
-                 retrying the step"
+                 retrying the micro-batch"
             );
             loop {
                 match self.recover_shard(i) {
                     Ok(()) => break,
                     Err(re) => {
-                        failures += 1;
-                        if failures > MAX_STEP_FAILURES {
+                        *failures += 1;
+                        if *failures > MAX_STEP_FAILURES {
                             return Err(re.context(format!(
                                 "recovering shard {i} after a fan-out failure"
                             )));
@@ -452,86 +773,11 @@ impl ShardedTrainer {
         Ok(dt)
     }
 
-    /// Combine shard outputs with the **fixed-order all-reduce**
-    /// (global sample order) and hand the reduced gradients to the one
-    /// shared [`apply_update`] — no update math lives here.
-    fn reduce_and_apply(
-        &mut self,
-        b: usize,
-        outs: &[Vec<HostTensor>],
-        hp: StepHyper,
-    ) -> Result<StepMetrics> {
-        let pp = self.data_params.len();
-        for out in outs {
-            if out.len() != pp + 3 {
-                bail!(
-                    "grad program returned {} outputs, expected {} (per-param \
-                     grads + hact + loss + correct)",
-                    out.len(),
-                    pp + 3
-                );
-            }
-        }
-
-        let t_reduce = Instant::now();
-        // ---- fixed-order all-reduce of gradient contributions --------
-        let mut grads: Vec<Vec<f32>> = self
-            .data_params
-            .iter()
-            .map(|p| vec![0f32; p.elems])
-            .collect();
-        for out in outs {
-            for (pi, acc) in grads.iter_mut().enumerate() {
-                let v = out[pi].as_f32()?;
-                let rows = out[pi].shape.first().copied().unwrap_or(0);
-                if v.len() != rows * acc.len() {
-                    bail!("shard grad output {pi} has the wrong size");
-                }
-                for row in v.chunks_exact(acc.len()) {
-                    for (a, g) in acc.iter_mut().zip(row) {
-                        *a += *g;
-                    }
-                }
-            }
-        }
-        // ---- metric reduction (same order; integer-valued `correct`
-        // sums are exact, `loss` keeps the sequential order) -----------
-        let mut loss_sum = 0f32;
-        let mut correct_sum = 0f32;
-        for out in outs {
-            for &v in out[pp + 1].as_f32()? {
-                loss_sum += v;
-            }
-            for &v in out[pp + 2].as_f32()? {
-                correct_sum += v;
-            }
-        }
-        // ---- hidden-activation column sums, global row order ---------
-        // (the run_mean EMA's numerator; per column, additions happen in
-        // ascending global sample order — shard slices are contiguous
-        // and ordered, so this is the train step's own accumulation.)
-        let col_sums = match self.run_mean_idx {
-            Some(ri) => {
-                let h = self.master.values[ri].elem_count();
-                let mut cs = vec![0f32; h];
-                for out in outs {
-                    let ha = out[pp].as_f32()?;
-                    let rows = out[pp].shape.first().copied().unwrap_or(0);
-                    if ha.len() != rows * h {
-                        bail!("shard hact output has the wrong size");
-                    }
-                    for row in ha.chunks_exact(h) {
-                        for (c, v) in cs.iter_mut().zip(row) {
-                            *c += *v;
-                        }
-                    }
-                }
-                Some(cs)
-            }
-            None => None,
-        };
-        self.obs.record(obs::PHASE_SHARD_REDUCE, t_reduce.elapsed());
-
+    /// Hand one drained [`StepAccum`] (the fixed-order all-reduce of
+    /// every micro-batch, global sample order) to the one shared
+    /// [`apply_update`] — no update math lives here.
+    fn apply(&mut self, b: usize, acc: StepAccum, hp: StepHyper) -> Result<StepMetrics> {
+        let StepAccum { grads, loss_sum, correct_sum, col_sums } = acc;
         let t_apply = Instant::now();
         // ---- the one shared optimizer update -------------------------
         let ucfg = UpdateCfg {
@@ -830,6 +1076,131 @@ mod tests {
         let err = t.step(&x, &y, StepHyper::lr(0.05)).unwrap_err();
         assert!(fault::is_injected(&err), "untyped failure: {err:#}");
         assert!(format!("{err:#}").contains("in-place recoveries"));
+    }
+
+    /// Gradient accumulation is a pure layout knob: any accum value
+    /// (including accum > batch) stays bitwise identical to the
+    /// single-device step, metrics and state.
+    #[test]
+    fn accum_is_bitwise_identical_to_single_pass() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        for method in ["sgd32", "e2train"] {
+            let manifest = fam.join(format!("{method}.json"));
+            let prog = TrainProgram::load(&engine, &manifest).unwrap();
+            let data = synthetic::generate(10, 64, 8, 1);
+            let hp = StepHyper { lr: 0.03, alpha: 1.5, beta: 0.05 };
+            let init = ModelState::init(&prog.manifest, 9);
+            for accum in [2usize, 3, 16] {
+                let mut sampler =
+                    Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 5);
+                let mut dev = prog.upload_state(init.clone()).unwrap();
+                let mut sharded =
+                    ShardedTrainer::new(&engine, &manifest, 2, init.clone())
+                        .unwrap();
+                sharded.set_accum(accum);
+                assert_eq!(sharded.accum(), accum);
+                for step in 0..4 {
+                    let (x, y) = sampler.next_batch(&data);
+                    let a = prog.step_device(&mut dev, &x, &y, hp, None).unwrap();
+                    let b = sharded.step(&x, &y, hp).unwrap();
+                    assert_eq!(a.loss, b.loss, "{method} A={accum} step {step}");
+                    assert_eq!(a.correct, b.correct, "{method} A={accum}");
+                    assert_eq!(a.gate_fracs, b.gate_fracs, "{method} A={accum}");
+                    assert_eq!(a.psg_frac, b.psg_frac, "{method} A={accum}");
+                }
+                let single = dev.into_host().unwrap();
+                single.assert_bitwise_eq(sharded.state());
+            }
+        }
+    }
+
+    /// The reducer-thread pipeline is bitwise invisible: overlap off
+    /// (inline fold) and overlap on (default) agree step by step.
+    #[test]
+    fn overlap_off_matches_overlap_on_bitwise() {
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let manifest = fam.join("e2train.json");
+        let prog = TrainProgram::load(&engine, &manifest).unwrap();
+        let data = synthetic::generate(10, 64, 8, 3);
+        let hp = StepHyper { lr: 0.03, alpha: 1.5, beta: 0.05 };
+        let init = ModelState::init(&prog.manifest, 4);
+
+        let mut piped =
+            ShardedTrainer::new(&engine, &manifest, 3, init.clone()).unwrap();
+        let mut inline = ShardedTrainer::new(&engine, &manifest, 3, init).unwrap();
+        assert!(piped.overlap(), "pipelining must be the default");
+        inline.set_overlap(false);
+        piped.set_accum(2);
+        inline.set_accum(2);
+
+        let mut sampler = Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 5);
+        let mut sampler2 = Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 5);
+        for step in 0..4 {
+            let (x, y) = sampler.next_batch(&data);
+            let (x2, y2) = sampler2.next_batch(&data);
+            let a = piped.step(&x, &y, hp).unwrap();
+            let b = inline.step(&x2, &y2, hp).unwrap();
+            assert_eq!(a.loss, b.loss, "step {step}");
+            assert_eq!(a.correct, b.correct, "step {step}");
+        }
+        piped.state().assert_bitwise_eq(inline.state());
+    }
+
+    /// A shard death mid-pipeline (accum > 1, overlap on) recovers in
+    /// place bitwise: the failed micro-batch's outputs never reach the
+    /// reducer, earlier queued micro-batches stay valid, and only the
+    /// failed micro-batch retries.
+    #[test]
+    fn shard_failure_mid_pipeline_recovers_bitwise() {
+        use crate::util::fault::{FaultPlan, FaultSiteCfg, FaultsCfg};
+
+        let tmp = TempDir::new().unwrap();
+        let fam = write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let manifest = fam.join("e2train.json");
+        let prog = TrainProgram::load(&engine, &manifest).unwrap();
+        let data = synthetic::generate(10, 64, 8, 4);
+        let hp = StepHyper { lr: 0.03, alpha: 1.5, beta: 0.05 };
+        let init = ModelState::init(&prog.manifest, 9);
+
+        let plan = FaultPlan::from_cfg(
+            &FaultsCfg {
+                sites: vec![FaultSiteCfg {
+                    site: fault::SITE_SHARD_ENGINE.into(),
+                    at: 3,
+                    times: 1,
+                    after_bytes: None,
+                }],
+                ..Default::default()
+            },
+            9,
+        )
+        .unwrap();
+
+        let mut plain =
+            ShardedTrainer::new(&engine, &manifest, 2, init.clone()).unwrap();
+        let mut faulted = ShardedTrainer::new(&engine, &manifest, 2, init).unwrap();
+        plain.set_accum(2);
+        faulted.set_accum(2);
+        faulted.set_faults(plan.clone());
+
+        let mut sampler = Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 5);
+        let mut sampler2 = Sampler::new(data.n, prog.batch(), AugmentCfg::default(), 5);
+        for step in 0..5 {
+            let (x, y) = sampler.next_batch(&data);
+            let (x2, y2) = sampler2.next_batch(&data);
+            let a = plain.step(&x, &y, hp).unwrap();
+            let b = faulted.step(&x2, &y2, hp).unwrap();
+            assert_eq!(a.loss, b.loss, "step {step}");
+            assert_eq!(a.correct, b.correct, "step {step}");
+        }
+        plain.state().assert_bitwise_eq(faulted.state());
+        assert_eq!(plan.fired(fault::SITE_SHARD_ENGINE), 1, "fault never fired");
+        assert_eq!(faulted.recoveries(), 1);
     }
 
     /// A manifest without a grad program (every PJRT family today) must

@@ -67,6 +67,7 @@ fn every_shipped_launcher_parses_and_validates() {
 #[test]
 fn launcher_set_covers_shards_checkpoint_and_backend_knobs() {
     let mut has_shards = false;
+    let mut has_accum = false;
     let mut has_checkpoint = false;
     let mut has_faults = false;
     let mut has_replicate = false;
@@ -74,6 +75,7 @@ fn launcher_set_covers_shards_checkpoint_and_backend_knobs() {
     for p in launcher_paths() {
         let cfg = RunCfg::load(&p).unwrap();
         has_shards |= cfg.shards > 0;
+        has_accum |= cfg.accum > 1;
         has_checkpoint |= cfg.checkpoint.every > 0;
         // replication only makes sense over a publishing registry (the
         // parser enforces it; assert here so the shipped file stays an
@@ -101,6 +103,7 @@ fn launcher_set_covers_shards_checkpoint_and_backend_knobs() {
         }
     }
     assert!(has_shards, "no launcher exercises `shards`");
+    assert!(has_accum, "no launcher exercises `accum` (micro-batch accumulation)");
     assert!(has_checkpoint, "no launcher exercises `checkpoint.every`");
     assert!(has_faults, "no launcher arms `faults` (supervised recovery)");
     // Both an explicit single-executor spelling and the sharded one.
@@ -192,6 +195,51 @@ fn backend_knob_is_strictly_validated() {
     let mut top = base.as_obj().unwrap().clone();
     top.insert("backend".into(), Json::num(2.0));
     assert!(RunCfg::from_json(&Json::Obj(top)).is_err());
+}
+
+/// The pipelined launcher: `accum` is a sharded-training layout knob,
+/// so zero and single-executor combinations are contradictions the
+/// parser must name, not defaults it falls back to.
+#[test]
+fn accum_knob_is_strictly_validated() {
+    let path = configs_dir().join("pipelined-4x.json");
+    let base = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let cfg = RunCfg::load(&path).unwrap();
+    assert_eq!(cfg.backend, Some(BackendChoice::Sharded));
+    assert_eq!(cfg.shards, 4);
+    assert_eq!(cfg.accum, 4, "launcher pins the accumulation depth");
+
+    // accum 0 means "run no micro-batches": rejected outright.
+    let mut top = base.as_obj().unwrap().clone();
+    top.insert("accum".into(), Json::num(0.0));
+    let err = format!("{:#}", RunCfg::from_json(&Json::Obj(top)).unwrap_err());
+    assert!(err.contains("accum"), "unexpected error: {err}");
+
+    // accumulation without sharded execution is a dead knob.
+    for single in ["host", "resident"] {
+        let mut top = base.as_obj().unwrap().clone();
+        top.insert("backend".into(), Json::str(single));
+        top.remove("shards");
+        let err = format!("{:#}", RunCfg::from_json(&Json::Obj(top)).unwrap_err());
+        assert!(
+            err.contains("accum") && err.contains("sharded"),
+            "unexpected error: {err}"
+        );
+    }
+
+    // `auto` hands the layout to the planner, which always probes at
+    // accum 1 — an explicit accum is rejected like explicit shards.
+    let mut top = base.as_obj().unwrap().clone();
+    top.insert("backend".into(), Json::str("auto"));
+    top.remove("shards");
+    let err = format!("{:#}", RunCfg::from_json(&Json::Obj(top)).unwrap_err());
+    assert!(err.contains("accum"), "unexpected error: {err}");
+
+    // absent knob defaults to 1 micro-batch (the non-accumulating step).
+    let mut top = base.as_obj().unwrap().clone();
+    top.remove("accum");
+    let cfg = RunCfg::from_json(&Json::Obj(top)).unwrap();
+    assert_eq!(cfg.accum, 1);
 }
 
 #[test]

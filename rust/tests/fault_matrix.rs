@@ -110,19 +110,26 @@ struct Layout {
     resident: bool,
     prefetch: bool,
     shards: usize,
+    accum: usize,
 }
 
+/// `sharded2-accum2` pins shard death *mid-pipeline*: with two
+/// micro-batches per step the failing fan-out sits between reducer
+/// jobs, so recovery must retry only the failed micro-batch and never
+/// hand the reducer a stale buffer.
 const LAYOUTS: &[Layout] = &[
-    Layout { name: "host", resident: false, prefetch: false, shards: 0 },
-    Layout { name: "resident", resident: true, prefetch: true, shards: 0 },
-    Layout { name: "sharded2", resident: true, prefetch: true, shards: 2 },
-    Layout { name: "sharded3", resident: true, prefetch: true, shards: 3 },
+    Layout { name: "host", resident: false, prefetch: false, shards: 0, accum: 1 },
+    Layout { name: "resident", resident: true, prefetch: true, shards: 0, accum: 1 },
+    Layout { name: "sharded2", resident: true, prefetch: true, shards: 2, accum: 1 },
+    Layout { name: "sharded3", resident: true, prefetch: true, shards: 3, accum: 1 },
+    Layout { name: "sharded2-accum2", resident: true, prefetch: true, shards: 2, accum: 2 },
 ];
 
 fn shaped(mut cfg: RunCfg, l: &Layout) -> RunCfg {
     cfg.resident = l.resident;
     cfg.prefetch = l.prefetch;
     cfg.shards = l.shards;
+    cfg.accum = l.accum;
     cfg
 }
 

@@ -171,10 +171,16 @@ fn tracing_is_bitwise_inert_on_every_layout() {
         if layout.shards > 0 {
             // optim-apply is recorded by the sharded backend's host-side
             // gradient application; host/resident fold it into step-exec.
+            // reduce-tree and pipeline-stall come from the pipelined
+            // reducer, which is the sharded default (overlap on) — the
+            // stall span records with a 1 ns floor so it is live even
+            // when the reducer never blocks the step loop.
             want.extend([
                 obs::PHASE_SHARD_EXEC,
                 obs::PHASE_SHARD_REDUCE,
+                obs::PHASE_REDUCE_TREE,
                 obs::PHASE_OPTIM_APPLY,
+                obs::PHASE_PIPELINE_STALL,
             ]);
         }
         for phase in want {

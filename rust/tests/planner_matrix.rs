@@ -160,11 +160,12 @@ fn catalog_json_matches_the_golden_shape() {
             id,
             &[
                 "family", "method", "backend", "shards", "batch", "runs", "probes",
-                "step_ns", "augment_ns", "joules", "joule_steps",
+                "step_ns", "augment_ns", "reduce_ns", "joules", "joule_steps",
             ],
         );
         assert_fields(e.at(&["step_ns"]), "step_ns", &["buckets", "total", "max"]);
         assert_fields(e.at(&["augment_ns"]), "augment_ns", &["buckets", "total", "max"]);
+        assert_fields(e.at(&["reduce_ns"]), "reduce_ns", &["buckets", "total", "max"]);
     }
 
     let host = &entries["refmlp-tiny/sgd32/host/s0/b8"];
@@ -193,6 +194,33 @@ fn catalog_json_matches_the_golden_shape() {
     let text = j.to_string();
     let back = Catalog::from_json(&parse(&text).unwrap()).unwrap();
     assert_eq!(back.to_json().to_string(), text);
+}
+
+/// Catalogs written before the `reduce_ns` stream existed (still
+/// `obs_catalog/v1`) parse leniently: the missing histogram comes back
+/// empty instead of failing the load, and re-serializing emits it.
+#[test]
+fn pre_reduce_catalog_parses_with_an_empty_reduce_histogram() {
+    let mut cat = Catalog::new();
+    cat.observe(key("sgd32", "host", 0), &measured(200, 40, 0.8, 4));
+    let mut j = cat.to_json();
+    let Json::Obj(top) = &mut j else { panic!("catalog json not an object") };
+    let Some(Json::Obj(entries)) = top.get_mut("entries") else {
+        panic!("entries not an object")
+    };
+    for e in entries.values_mut() {
+        let Json::Obj(m) = e else { panic!("entry not an object") };
+        m.remove("reduce_ns");
+    }
+    let back = Catalog::from_json(&j).unwrap();
+    let e = back.get(&key("sgd32", "host", 0)).unwrap();
+    assert_eq!(e.reduce_ns.count(), 0, "missing stream reads as empty");
+    assert!(e.reduce_mean_ns().is_none());
+    let rej = back.to_json();
+    assert!(
+        rej.at(&["entries", "refmlp-tiny/sgd32/host/s0/b8", "reduce_ns"]).as_obj().is_some(),
+        "re-serialization emits the field"
+    );
 }
 
 /// First `auto` run ever: nothing measured, so the planner probes every

@@ -6,6 +6,7 @@ use e2train::coordinator::{SdScheduler, SmdScheduler};
 use e2train::data::{synthetic, AugmentCfg, Sampler};
 use e2train::energy::{EnergyBreakdown, EnergyLedger, OpEnergies};
 use e2train::optim::LrSchedule;
+use e2train::runtime::{fold_sequential, fold_tree, REDUCE_GRAIN};
 use e2train::util::json::{parse, Json};
 use e2train::util::prop;
 
@@ -289,6 +290,53 @@ fn prop_sampler_state_roundtrip_continues_bitwise() {
             let bb: Vec<u32> =
                 xb.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
             assert_eq!(ba, bb, "drift at batch {i}");
+        }
+    });
+}
+
+/// The pipelined reducer's fixed-shape tree fold is bitwise identical
+/// to the sequential shard-major fold for *any* workload shape: random
+/// element counts on both sides of the tree-splitting grain, random
+/// shard counts with uneven (and empty — shards > batch) per-shard row
+/// counts, mixed magnitudes, and gradient accumulation layered as
+/// several micro-batch folds into the same accumulator.
+#[test]
+fn prop_tree_reduce_bitwise_matches_sequential_fold() {
+    prop::check(120, |rng| {
+        // Mostly small (cheap) shapes; one case in four crosses the
+        // grain so the tree actually splits.
+        let elems = if rng.bool(0.25) {
+            rng.range_usize(REDUCE_GRAIN, 2 * REDUCE_GRAIN + 33)
+        } else {
+            rng.range_usize(1, 128)
+        };
+        let micro = rng.range_usize(1, 4);
+        let shards = rng.range_usize(1, 5);
+        let mut acc_tree = vec![0.0f32; elems];
+        let mut acc_seq = vec![0.0f32; elems];
+        for _ in 0..micro {
+            let buffers: Vec<Vec<f32>> = (0..shards)
+                .map(|_| {
+                    // 0 rows = a shard that held no samples this micro
+                    let rows = rng.range_usize(0, 3);
+                    (0..rows * elems)
+                        .map(|_| {
+                            let mag = 10f32.powi(rng.range_usize(0, 8) as i32 - 4);
+                            rng.range_f32(-1.0, 1.0) * mag
+                        })
+                        .collect()
+                })
+                .collect();
+            let views: Vec<&[f32]> = buffers.iter().map(|v| v.as_slice()).collect();
+            fold_tree(&mut acc_tree, &views);
+            fold_sequential(&mut acc_seq, &views);
+        }
+        for (i, (a, b)) in acc_tree.iter().zip(&acc_seq).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "tree/sequential bit drift at elem {i} (elems={elems} shards={shards})"
+            );
         }
     });
 }

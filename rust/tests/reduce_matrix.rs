@@ -1,0 +1,193 @@
+//! The pipelined-reduce contract, pinned end-to-end through `Trainer`:
+//! the sharded backend's overlapped reducer thread and micro-batch
+//! gradient accumulation are **bitwise invisible**.  Every
+//! (shards ∈ {1, 2, 3}) × (accum ∈ {1, 2}) cell — all running the
+//! default pipelined reduce — produces exactly the single-device
+//! resident outcome, and a run checkpointed under one accumulation
+//! depth resumes under another without a bit of drift.
+//!
+//! This is the `reduce-matrix` CI gate.  It complements
+//! `tests/backend_matrix.rs` (which pins the backend seam at accum 1
+//! and must keep passing unchanged) by sweeping the knobs the pipeline
+//! added: the element-axis reduction tree is exercised by every cell,
+//! and accum > 1 drives multiple reducer jobs per logical step.
+
+use std::path::Path;
+
+use e2train::checkpoint::{CheckpointRegistry, RetentionCfg};
+use e2train::config::{BackendChoice, CkptCfg, DataCfg, RunCfg};
+use e2train::coordinator::{RunOutcome, Trainer};
+use e2train::runtime::{write_reference_family, Engine, RefFamilySpec};
+use e2train::util::tmp::TempDir;
+
+const FAM: &str = "refmlp-tiny";
+
+/// Sharded matrix cells: (shard count, micro-batches per step).
+/// accum 2 with shards 3 over batch 8 leaves micro-batches of 4 split
+/// 2/1/1 — deliberately non-divisible on both axes.
+const CELLS: &[(usize, usize)] =
+    &[(1, 1), (1, 2), (2, 1), (2, 2), (3, 1), (3, 2)];
+
+fn ref_cfg(artifacts: &Path, method: &str, iters: u64) -> RunCfg {
+    let mut cfg = RunCfg::quick(FAM, method, iters);
+    cfg.artifacts_dir = artifacts.to_path_buf();
+    cfg.data = DataCfg::Synthetic { classes: 10, n_train: 128, n_test: 40, seed: 0 };
+    cfg.eval_every = 8;
+    cfg
+}
+
+fn sharded_cfg(mut cfg: RunCfg, shards: usize, accum: usize) -> RunCfg {
+    cfg.backend = Some(BackendChoice::Sharded);
+    cfg.shards = shards;
+    cfg.accum = accum;
+    cfg
+}
+
+fn with_ckpt(mut cfg: RunCfg, dir: &Path, every: u64) -> RunCfg {
+    cfg.checkpoint = CkptCfg {
+        every,
+        dir: Some(dir.to_path_buf()),
+        keep_last: 16,
+        keep_every: 0,
+        ..CkptCfg::default()
+    };
+    cfg
+}
+
+/// Full bitwise comparison of two run outcomes (everything except wall
+/// time, the machine-dependent prefetch depth, and the backend
+/// attribution itself).
+fn assert_outcomes_identical(a: &RunOutcome, b: &RunOutcome, ctx: &str) {
+    assert_eq!(a.metrics.final_test_acc, b.metrics.final_test_acc, "{ctx}: acc");
+    assert_eq!(
+        a.metrics.final_test_acc_top5, b.metrics.final_test_acc_top5,
+        "{ctx}: top5"
+    );
+    assert_eq!(a.metrics.final_loss, b.metrics.final_loss, "{ctx}: loss");
+    assert_eq!(a.metrics.total_joules, b.metrics.total_joules, "{ctx}: joules");
+    assert_eq!(a.metrics.executed_macs, b.metrics.executed_macs, "{ctx}: macs");
+    assert_eq!(a.metrics.steps_run, b.metrics.steps_run, "{ctx}: steps");
+    assert_eq!(
+        a.metrics.steps_skipped, b.metrics.steps_skipped,
+        "{ctx}: skipped"
+    );
+    assert_eq!(
+        a.metrics.mean_gate_fracs, b.metrics.mean_gate_fracs,
+        "{ctx}: gate means"
+    );
+    assert_eq!(
+        a.metrics.mean_psg_frac, b.metrics.mean_psg_frac,
+        "{ctx}: psg telemetry"
+    );
+    assert_eq!(a.metrics.trace.len(), b.metrics.trace.len(), "{ctx}: trace len");
+    for (x, y) in a.metrics.trace.iter().zip(b.metrics.trace.iter()) {
+        assert_eq!(x.iter, y.iter, "{ctx}: trace iter");
+        assert_eq!(x.loss, y.loss, "{ctx}: trace loss @{}", x.iter);
+        assert_eq!(x.train_acc, y.train_acc, "{ctx}: trace acc @{}", x.iter);
+        assert_eq!(x.joules, y.joules, "{ctx}: trace joules @{}", x.iter);
+        assert_eq!(x.test_acc, y.test_acc, "{ctx}: trace eval @{}", x.iter);
+    }
+    assert_eq!(
+        a.ledger.steps_charged, b.ledger.steps_charged,
+        "{ctx}: ledger steps"
+    );
+    assert_eq!(a.ledger.macs, b.ledger.macs, "{ctx}: ledger macs");
+    assert_eq!(a.ledger.trace, b.ledger.trace, "{ctx}: ledger rows");
+    a.state.assert_bitwise_eq(&b.state);
+}
+
+/// Every (shards, accum) cell through the pipelined reducer equals the
+/// single-device resident run — sgd32 (plain SGD) and e2train (SMD
+/// drops + SWA + learned gates + PSG telemetry).
+#[test]
+fn pipelined_cells_match_the_resident_run_bitwise() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    for method in ["sgd32", "e2train"] {
+        let mut reference_cfg = ref_cfg(tmp.path(), method, 24);
+        reference_cfg.backend = Some(BackendChoice::Resident);
+        let reference =
+            Trainer::new(&engine, reference_cfg).unwrap().run(None).unwrap();
+
+        for &(shards, accum) in CELLS {
+            let cfg = sharded_cfg(ref_cfg(tmp.path(), method, 24), shards, accum);
+            let out = Trainer::new(&engine, cfg).unwrap().run(None).unwrap();
+            assert_eq!(out.metrics.backend, "sharded", "{method} S={shards}");
+            assert_eq!(out.metrics.shards, shards, "{method} A={accum}");
+            assert_outcomes_identical(
+                &reference,
+                &out,
+                &format!("{method} S={shards} A={accum} vs resident"),
+            );
+        }
+        // e2train runs must actually exercise the telemetry compared
+        // above, or the psg/gate assertions are vacuous.
+        if method == "e2train" {
+            assert!(reference.metrics.mean_psg_frac.is_some(), "no PSG telemetry");
+            assert!(
+                !reference.metrics.mean_gate_fracs.is_empty(),
+                "no gate telemetry"
+            );
+            assert!(reference.metrics.steps_skipped > 0, "SMD never dropped");
+        }
+    }
+}
+
+/// Interrupt + resume across accumulation depths: `accum` is outside
+/// the determinism fingerprint, so a checkpoint written at one depth
+/// restores at any other (and on a non-accumulating backend), bitwise
+/// equal to the run that never stopped.
+#[test]
+fn interrupt_and_resume_across_accum_depths_is_bitwise() {
+    let tmp = TempDir::new().unwrap();
+    write_reference_family(tmp.path(), &RefFamilySpec::tiny()).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    // (checkpoint under (shards, accum), resume under (shards, accum));
+    // shards 0 = the resident backend, accum forced to 1.
+    let pairs: &[((usize, usize), (usize, usize))] = &[
+        ((2, 2), (0, 1)), // pipelined+accumulated -> single device
+        ((0, 1), (3, 2)), // single device -> pipelined+accumulated
+        ((2, 1), (2, 2)), // same layout, deeper accumulation
+    ];
+    for &((from_s, from_a), (to_s, to_a)) in pairs {
+        let shape = |cfg: RunCfg, s: usize, a: usize| {
+            if s == 0 {
+                let mut cfg = cfg;
+                cfg.backend = Some(BackendChoice::Resident);
+                cfg
+            } else {
+                sharded_cfg(cfg, s, a)
+            }
+        };
+        let reg = TempDir::new().unwrap();
+        let full_cfg = shape(
+            with_ckpt(ref_cfg(tmp.path(), "e2train", 18), reg.path(), 6),
+            from_s,
+            from_a,
+        );
+        let full = Trainer::new(&engine, full_cfg).unwrap().run(None).unwrap();
+
+        let registry = CheckpointRegistry::new(reg.path(), RetentionCfg::default());
+        let entries = registry.entries().unwrap();
+        assert!(entries.len() >= 3, "expected several boundaries");
+        for entry in &entries {
+            let ckpt = registry.load(entry).unwrap();
+            let resume_cfg = shape(ref_cfg(tmp.path(), "e2train", 18), to_s, to_a);
+            let out = Trainer::new(&engine, resume_cfg)
+                .unwrap()
+                .resume(ckpt)
+                .unwrap();
+            assert_outcomes_identical(
+                &full,
+                &out,
+                &format!(
+                    "S{from_s}/A{from_a} ckpt @iter {} -> S{to_s}/A{to_a} resume",
+                    entry.iter
+                ),
+            );
+        }
+    }
+}

@@ -25,21 +25,32 @@ fn shard_smoke_records_bench_shard_json() {
         shard_counts: vec![1, 2],
         warmup_steps: 1,
         steps: 8,
+        accum: 2,
         seed: 0,
         source: "cargo-test smoke (debug profile)".into(),
     };
     let report = run_shard_bench(&engine, &fam.join("sgd32.json"), &cfg).unwrap();
 
-    // Schema + per-row sanity: steps/sec for shards {1, 2} with scaling
-    // efficiency recorded.
+    // Schema + per-row sanity: shards {1, 2} × reducer overlap
+    // {off, on}, each with scaling efficiency and the measured
+    // per-step host-reduce wall.  Debug timings are too noisy to
+    // assert overlap-on beats overlap-off here — the release bench is
+    // where that comparison is read.
     assert_eq!(report.at(&["schema"]).as_str(), Some("bench_shard/v1"));
     assert!(report.at(&["single_device_sps"]).as_f64().unwrap() > 0.0);
     let rows = report.at(&["rows"]).as_arr().expect("rows array");
-    assert_eq!(rows.len(), 2);
-    assert_eq!(rows[0].at(&["shards"]).as_f64(), Some(1.0));
-    assert_eq!(rows[1].at(&["shards"]).as_f64(), Some(2.0));
+    assert_eq!(rows.len(), 4, "shards {{1,2}} x overlap {{off,on}}");
+    for (i, (want_shards, want_overlap)) in
+        [(1.0, false), (2.0, false), (1.0, true), (2.0, true)].iter().enumerate()
+    {
+        assert_eq!(rows[i].at(&["shards"]).as_f64(), Some(*want_shards));
+        assert_eq!(rows[i].at(&["overlap"]).as_bool(), Some(*want_overlap));
+    }
     for row in rows {
         assert!(row.at(&["steps_per_sec"]).as_f64().unwrap() > 0.0);
+        assert_eq!(row.at(&["accum"]).as_f64(), Some(2.0));
+        let reduce_ms = row.at(&["reduce_ms"]).as_f64().expect("reduce_ms field");
+        assert!(reduce_ms.is_finite() && reduce_ms >= 0.0);
         let eff = row.at(&["efficiency"]).as_f64().unwrap();
         assert!(eff.is_finite() && eff > 0.0);
     }
